@@ -1,0 +1,52 @@
+//! nccl-tests-style bandwidth sweep (the paper's measurement methodology,
+//! §5.2): algorithm bandwidth for AllReduce and AllGather across message
+//! sizes and GPU counts, FlexLink vs the NCCL baseline, with the
+//! PCIe-only column of Table 2.
+//!
+//! Run: `cargo run --release --example nccl_tests`
+
+use flexlink::balancer::{initial_tune, Shares};
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::links::calib::Calibration;
+use flexlink::links::PathId;
+use flexlink::topology::Topology;
+
+fn main() -> flexlink::Result<()> {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    println!(
+        "# flexlink-tests (nccl-tests style) on {} — algorithm bandwidth, GB/s",
+        topo.spec.name
+    );
+    for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+        for n in [2usize, 4, 8] {
+            println!("\n## {op} x{n}");
+            println!(
+                "{:>10} {:>10} {:>12} {:>12} {:>8}   shares",
+                "size", "nccl", "flex(pcie)", "flex(p+r)", "impr"
+            );
+            for mib in [8u64, 16, 32, 64, 128, 256, 512] {
+                let msg = mib << 20;
+                let mc = MultipathCollective::new(&topo, Calibration::h800(), op, n);
+                let base = mc.run(msg, &Shares::nvlink_only())?.algbw_gbps();
+                let pcie = initial_tune(&mc, msg, &cfg, &[PathId::Pcie])?;
+                let bw_p = mc.run(msg, &pcie.shares)?.algbw_gbps();
+                let full = initial_tune(&mc, msg, &cfg, &[PathId::Pcie, PathId::Rdma])?;
+                let bw_f = mc.run(msg, &full.shares)?.algbw_gbps();
+                println!(
+                    "{:>8}MB {:>10.1} {:>12.1} {:>12.1} {:>7.1}%   {}",
+                    mib,
+                    base,
+                    bw_p,
+                    bw_f,
+                    (bw_f / base - 1.0) * 100.0,
+                    full.shares
+                );
+            }
+        }
+    }
+    Ok(())
+}

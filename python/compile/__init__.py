@@ -1,0 +1,3 @@
+"""FlexLink build-time compile path: L2 JAX model + L1 Pallas kernels,
+AOT-lowered to HLO text for the Rust PJRT runtime. Never imported at
+request time."""

@@ -1,0 +1,86 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text → artifacts/.
+
+Python runs once, here; the Rust coordinator loads the emitted HLO text
+via the PJRT CPU client and Python never appears on the request path.
+
+The interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models tiny,gpt10m]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True: the Rust
+    side unwraps with Literal::to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: M.ModelConfig, out_dir: str) -> None:
+    n_params, _ = M.flat_spec(cfg)
+    p = jax.ShapeDtypeStruct((n_params,), jnp.float32)
+    vec1 = jax.ShapeDtypeStruct((1,), jnp.float32)
+    toks = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32)
+
+    entries = {
+        "init": (M.make_init(cfg), (vec1,)),
+        "train_step": (M.make_train_step(cfg), (p, toks, toks)),
+        "adam_step": (M.adam_step, (p, p, p, p, vec1, vec1)),
+    }
+    for name, (fn, args) in entries.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{cfg.name}_{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB, P={n_params})")
+
+
+def lower_reduce_kernel(out_dir: str, elems: int = 1 << 20) -> None:
+    """Standalone L1 reduce-combine artifact for the Rust kernel-offload
+    reduction mode (one staging chunk = 4 MiB of f32)."""
+    v = jax.ShapeDtypeStruct((elems,), jnp.float32)
+    lowered = jax.jit(M.make_reduce_chunk()).lower(v, v)
+    path = os.path.join(out_dir, "reduce_chunk.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  wrote {path}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,gpt10m",
+        help="comma-separated ModelConfig names (gpt100m available but slow)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in [m for m in args.models.split(",") if m]:
+        cfg = M.CONFIGS[name]
+        print(f"lowering {name} (d={cfg.d_model} L={cfg.n_layers} V={cfg.vocab})")
+        lower_model(cfg, args.out_dir)
+    lower_reduce_kernel(args.out_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from . import attention, reduce, ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: blocked causal self-attention for the L2 model.
+
+A FlashAttention-style kernel reshaped for TPU (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging K/V through
+shared memory, the grid is (batch·heads, q-blocks) with ``BlockSpec``
+streaming one q tile into VMEM while K/V for the (small) sequence stay
+VMEM-resident; the q·kᵀ and p·v contractions are MXU-shaped matmuls.
+Causal masking happens in-register per tile. For the sequence lengths the
+repro trains (≤256) the whole K/V tile fits VMEM, so no online-softmax
+accumulator is needed — the tile softmax is exact.
+
+Differentiability: ``pallas_call`` has no general autodiff, so the kernel
+carries a ``jax.custom_vjp`` whose backward pass is the VJP of the
+numerically-identical reference (ref.py) — the Pallas kernel stays on the
+forward path of the lowered train-step HLO.
+
+Interpret mode only (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# q tile of 128 rows is MXU-friendly (128×128 systolic array) and keeps
+# q, k, v, scores tiles ≈ (128·d + 2·T·d + 128·T) f32 well inside VMEM
+# for d ≤ 128, T ≤ 512.
+Q_BLOCK = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, q_block):
+    """One (batch·head, q-tile): causal softmax(q·kᵀ)·v."""
+    qi = pl.program_id(1)
+    q = q_ref[0]  # [q_block, d] (leading batch·head block dim is 1)
+    k = k_ref[0]  # [T, d]
+    v = v_ref[0]  # [T, d]
+    scores = jnp.dot(q, k.T) * scale  # MXU matmul → [q_block, T]
+    t = k.shape[0]
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], t), 0)
+    k_pos = jax.lax.broadcasted_iota(jnp.int32, (q.shape[0], t), 1)
+    scores = jnp.where(k_pos <= q_pos, scores, -1e30)
+    # Exact tile softmax (numerically stabilized).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, :, :] = jnp.dot(p, v)  # MXU matmul → [q_block, d]
+
+
+def _attention_fwd_pallas(q, k, v):
+    """q,k,v: [B, H, T, D] → [B, H, T, D] causal attention via Pallas."""
+    b, h, t, d = q.shape
+    scale = 1.0 / (d**0.5)
+    qb = min(Q_BLOCK, t)
+    bh = b * h
+    qf = q.reshape(bh, t, d)
+    kf = k.reshape(bh, t, d)
+    vf = v.reshape(bh, t, d)
+    out = pl.pallas_call(
+        partial(_attn_kernel, scale=scale, q_block=qb),
+        grid=(bh, pl.cdiv(t, qb)),
+        in_specs=[
+            pl.BlockSpec((1, qb, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal self-attention; Pallas forward, reference-VJP backward."""
+    return _attention_fwd_pallas(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return _attention_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.attention_ref, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def vmem_footprint_bytes(t: int, d: int, q_block: int = Q_BLOCK, dtype_bytes: int = 4) -> int:
+    """Analytic per-step VMEM estimate (DESIGN.md §Perf): q/o tiles,
+    VMEM-resident K/V, and the scores tile, double-buffered on q."""
+    qb = min(q_block, t)
+    tiles = 2 * qb * d + 2 * t * d + qb * t
+    return 2 * tiles * dtype_bytes

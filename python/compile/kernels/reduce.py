@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: the ReduceScatter chunk combine.
+
+The hot inner operation of ring AllReduce is ``acc += chunk`` over
+staging-buffer-sized blocks — the piece the paper's future work wants to
+deepen the pipeline around ("increasing the pipeline depth for the
+ReduceScatter part to reduce potential bubbles caused by reduce sum
+computation", §6). This kernel is lowered standalone to
+``artifacts/reduce_chunk.hlo.txt`` (loaded by the Rust runtime's
+kernel-offload reduction mode) and is also reused by the L2 model's
+gradient accumulation.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on CUDA this would
+be a grid-stride elementwise kernel; on TPU we tile for VMEM instead —
+``BlockSpec((BLOCK,), lambda i: (i,))`` expresses the HBM→VMEM streaming
+schedule, with the block sized so two operand tiles plus the output tile
+double-buffer comfortably inside ~16 MB VMEM.
+
+Pallas runs with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; numerics are identical (pytest checks vs ref.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64K f32 elements = 256 KiB per operand tile: 3 tiles (acc, chunk, out)
+# double-buffered is 1.5 MiB of VMEM-equivalent — far under the ~16 MiB
+# budget, leaving headroom for the surrounding model's tiles.
+BLOCK_ELEMS = 64 * 1024
+
+
+def _combine_kernel(acc_ref, chunk_ref, out_ref):
+    """One VMEM tile: out = acc + chunk (vectorized add on the VPU)."""
+    out_ref[...] = acc_ref[...] + chunk_ref[...]
+
+
+def _pallas_combine(acc, chunk, block: int):
+    assert acc.shape == chunk.shape and acc.ndim == 1
+    n = acc.shape[0]
+    block = min(block, n) if n > 0 else 1
+    grid = (pl.cdiv(n, block),)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), acc.dtype),
+        interpret=True,
+    )(acc, chunk)
+
+
+# pallas_call has no general autodiff; the combine is linear, so its VJP
+# is the identity on both cotangents.
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _combine(acc, chunk, block):
+    return _pallas_combine(acc, chunk, block)
+
+
+def _combine_fwd(acc, chunk, block):
+    return _pallas_combine(acc, chunk, block), None
+
+
+def _combine_bwd(block, _res, g):
+    return (g, g)
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def reduce_combine(acc, chunk, block: int = BLOCK_ELEMS):
+    """Elementwise sum of two equal-length vectors via a blocked Pallas
+    grid. Lengths need not divide the block: Pallas pads the trailing
+    block (the padded lanes are sliced away by the out_shape).
+    """
+    return _combine(acc, chunk, block)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def reduce_tree(chunks, block: int = BLOCK_ELEMS):
+    """Combine a stack of R chunks [R, N] into their sum [N] by folding
+    through the blocked kernel — the local pre-reduction a rank performs
+    before forwarding (keeps partial sums in the same dtype/rounding as
+    the pairwise path, so multi-chunk reductions stay associative with
+    the Rust executor's order).
+    """
+    assert chunks.ndim == 2
+
+    def body(acc, chunk):
+        return reduce_combine(acc, chunk, block=block), None
+
+    acc, _ = jax.lax.scan(body, chunks[0], chunks[1:])
+    return acc
+
+
+def vmem_footprint_bytes(block: int = BLOCK_ELEMS, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM estimate for DESIGN.md §Perf: three resident tiles,
+    double-buffered (Pallas pipelines the next grid step's loads)."""
+    return 2 * 3 * block * dtype_bytes

@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel has a straight-line jnp twin here; pytest asserts
+``assert_allclose(kernel, ref)`` over hypothesis-driven shape/dtype/value
+sweeps — the core L1 correctness signal of the build.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def reduce_combine_ref(acc, chunk):
+    """Oracle for kernels.reduce.reduce_combine."""
+    return acc + chunk
+
+
+def reduce_tree_ref(chunks):
+    """Oracle for kernels.reduce.reduce_tree ([R, N] → [N]).
+
+    Folds in the same left-to-right order as the kernel's scan so float
+    rounding matches bit-for-bit in f32.
+    """
+    acc = chunks[0]
+    for i in range(1, chunks.shape[0]):
+        acc = acc + chunks[i]
+    return acc
+
+
+def attention_ref(q, k, v):
+    """Oracle for kernels.attention.attention (causal, [B,H,T,D])."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,183 @@
+"""L2: the JAX transformer trained by the Rust data-parallel trainer.
+
+A pre-norm GPT decoder in pure jax (no flax), with the L1 Pallas
+attention kernel on the forward path. Parameters cross the Rust boundary
+as a single flat f32 vector (`ravel_pytree`) — the gradient-bucket layout
+every DP framework uses, and exactly what FlexLink's AllReduce moves.
+
+Lowered entry points (see aot.py):
+  * ``init(seed)``                      → (params_flat,)
+  * ``train_step(params, toks, tgts)``  → (loss[1], grads_flat)
+  * ``adam_step(p, g, m, v, t, lr)``    → (p', m', v')
+  * ``reduce_chunk(acc, chunk)``        → (acc + chunk,)   [L1 kernel]
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.attention import attention
+from .kernels.reduce import reduce_combine
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    # Unit-test scale: lowers + runs in seconds.
+    "tiny": ModelConfig("tiny", vocab=64, d_model=32, n_layers=2, n_heads=2, seq_len=32, batch=4),
+    # The end-to-end example's model (~10M params — the largest that
+    # trains a few hundred steps on this 1-core sandbox; see
+    # EXPERIMENTS.md §Scale).
+    "gpt10m": ModelConfig("gpt10m", vocab=4096, d_model=320, n_layers=6, n_heads=8, seq_len=128, batch=4),
+    # The paper-scale config (~124M params): lowers and loads identically,
+    # compute-bound on this box.
+    "gpt100m": ModelConfig("gpt100m", vocab=32768, d_model=768, n_layers=12, n_heads=12, seq_len=256, batch=2),
+}
+
+
+def init_params(cfg: ModelConfig, key):
+    """GPT-2-style init; returns the parameter pytree."""
+    k_emb, k_pos, k_blocks, k_out = jax.random.split(key, 4)
+    d, scale = cfg.d_model, 0.02
+    params = {
+        "tok_emb": jax.random.normal(k_emb, (cfg.vocab, d)) * scale,
+        "pos_emb": jax.random.normal(k_pos, (cfg.seq_len, d)) * scale,
+        "blocks": [],
+        "ln_f": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "head": jax.random.normal(k_out, (d, cfg.vocab)) * scale,
+    }
+    keys = jax.random.split(k_blocks, cfg.n_layers)
+    resid_scale = scale / (2.0 * cfg.n_layers) ** 0.5
+    for kb in keys:
+        k1, k2, k3, k4 = jax.random.split(kb, 4)
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "qkv": jax.random.normal(k1, (d, 3 * d)) * scale,
+                "proj": jax.random.normal(k2, (d, d)) * resid_scale,
+                "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+                "fc": jax.random.normal(k3, (d, 4 * d)) * scale,
+                "fc_b": jnp.zeros((4 * d,)),
+                "out": jax.random.normal(k4, (4 * d, d)) * resid_scale,
+                "out_b": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _block(cfg: ModelConfig, p, x):
+    """Pre-norm transformer block; attention is the L1 Pallas kernel."""
+    b, t, d = x.shape
+    h = _layer_norm(x, p["ln1"]["g"], p["ln1"]["b"])
+    qkv = h @ p["qkv"]  # [b, t, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (b, t, cfg.n_heads, cfg.head_dim)
+    q = q.reshape(shape).transpose(0, 2, 1, 3)
+    k = k.reshape(shape).transpose(0, 2, 1, 3)
+    v = v.reshape(shape).transpose(0, 2, 1, 3)
+    o = attention(q, k, v)  # L1 Pallas kernel
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + o @ p["proj"]
+    h = _layer_norm(x, p["ln2"]["g"], p["ln2"]["b"])
+    h = jax.nn.gelu(h @ p["fc"] + p["fc_b"])
+    return x + h @ p["out"] + p["out_b"]
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens [B, T] int32 → logits [B, T, vocab]."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, : tokens.shape[1]]
+    for p in params["blocks"]:
+        x = _block(cfg, p, x)
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["head"]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector entry points (what aot.py lowers; all f32 at the boundary).
+# ---------------------------------------------------------------------------
+
+
+def flat_spec(cfg: ModelConfig):
+    """(n_params, unravel) for this config. Concretely instantiates one
+    parameter set (build-time only) so the unravel closure is usable both
+    under tracing and eagerly."""
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    flat, unravel = ravel_pytree(params)
+    return int(flat.shape[0]), unravel
+
+
+def make_init(cfg: ModelConfig):
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0].astype(jnp.int32))
+        flat, _ = ravel_pytree(init_params(cfg, key))
+        return (flat.astype(jnp.float32),)
+
+    return init
+
+
+def make_train_step(cfg: ModelConfig):
+    _, unravel = flat_spec(cfg)
+
+    def train_step(params_flat, tokens_f, targets_f):
+        params = unravel(params_flat)
+        tokens = tokens_f.astype(jnp.int32)
+        targets = targets_f.astype(jnp.int32)
+        loss, grads = jax.value_and_grad(partial(loss_fn, cfg))(params, tokens, targets)
+        gflat, _ = ravel_pytree(grads)
+        return (loss.reshape(1), gflat.astype(jnp.float32))
+
+    return train_step
+
+
+def adam_step(params, grads, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Flat Adam, bit-matching the Rust fallback (trainer/optimizer.rs).
+
+    The gradient accumulation `m` update routes through the L1 reduce
+    kernel (a linear combine), keeping the Pallas path in this artifact
+    too.
+    """
+    t = t[0]
+    lr = lr[0]
+    m_new = reduce_combine(beta1 * m, (1.0 - beta1) * grads)
+    v_new = beta2 * v + (1.0 - beta2) * grads * grads
+    mhat = m_new / (1.0 - beta1**t)
+    vhat = v_new / (1.0 - beta2**t)
+    return (params - lr * mhat / (jnp.sqrt(vhat) + eps), m_new, v_new)
+
+
+def make_reduce_chunk():
+    def reduce_chunk(acc, chunk):
+        return (reduce_combine(acc, chunk),)
+
+    return reduce_chunk

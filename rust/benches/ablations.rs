@@ -1,0 +1,123 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!  1. two-stage balancer vs static naive splits vs stage-1-only
+//!  2. buffer (chunk) size sweep — why the paper picks 4 MB buffers
+//!  3. damping (step-halving) on vs off — oscillation control
+//!  4. ring vs the §6 tree-AllReduce idea at 8 GPUs (latency floors)
+//!  5. NUMA-aware vs NUMA-blind staging placement
+
+use flexlink::balancer::{initial_tune, Shares};
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::links::calib::Calibration;
+use flexlink::links::PathId;
+use flexlink::topology::{numa, Topology};
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    let msg = 256u64 << 20;
+
+    // --- 1. balancer strategy ablation (AG, 8 GPUs, 256 MB) ---
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, 8);
+    let nccl = mc.run(msg, &Shares::nvlink_only()).unwrap().algbw_gbps();
+    let naive = mc
+        .run(
+            msg,
+            &Shares::from_pcts(&[
+                (PathId::Nvlink, 34.0),
+                (PathId::Pcie, 33.0),
+                (PathId::Rdma, 33.0),
+            ]),
+        )
+        .unwrap()
+        .algbw_gbps();
+    let tuned = initial_tune(&mc, msg, &cfg, &[PathId::Pcie, PathId::Rdma]).unwrap();
+    let two_stage = mc.run(msg, &tuned.shares).unwrap().algbw_gbps();
+    println!("ablation balancer: nccl={nccl:.1} GB/s | naive-equal={naive:.1} GB/s | two-stage={two_stage:.1} GB/s");
+    println!(
+        "ablation balancer: naive split is {:.0}% WORSE than NCCL; two-stage is {:.0}% better (the paper's strawman, §1)",
+        (1.0 - naive / nccl) * 100.0,
+        (two_stage / nccl - 1.0) * 100.0
+    );
+
+    // --- 2. chunk size sweep ---
+    println!("\nablation chunk-size (AG x8 256MB, tuned shares fixed):");
+    for chunk_mib in [0.25f64, 0.5, 1.0, 2.0, 4.0, 16.0] {
+        let mut calib = Calibration::h800();
+        calib.chunk_bytes = (chunk_mib * (1 << 20) as f64) as u64;
+        let mc = MultipathCollective::new(&topo, calib, CollectiveKind::AllGather, 8);
+        let bw = mc.run(msg, &tuned.shares).unwrap().algbw_gbps();
+        println!("  chunk={chunk_mib:>5.2}MiB  algbw={bw:.1} GB/s");
+    }
+
+    // --- 3. damping ablation ---
+    let mut no_damp = cfg.clone();
+    no_damp.initial_step_pct = 8.0; // aggressive step, no effective damping room
+    let with_damp = initial_tune(&mc_for(&topo, CollectiveKind::AllGather, 8), msg, &cfg, &[PathId::Pcie, PathId::Rdma]).unwrap();
+    let aggressive = initial_tune(&mc_for(&topo, CollectiveKind::AllGather, 8), msg, &no_damp, &[PathId::Pcie, PathId::Rdma]).unwrap();
+    println!(
+        "\nablation damping: default-step iters={} (converged={}), aggressive-step iters={} (converged={})",
+        with_damp.iterations, with_damp.converged, aggressive.iterations, aggressive.converged
+    );
+    let bw_damp = mc.run(msg, &with_damp.shares).unwrap().algbw_gbps();
+    let bw_aggr = mc.run(msg, &aggressive.shares).unwrap().algbw_gbps();
+    println!("ablation damping: default {bw_damp:.1} GB/s vs aggressive {bw_aggr:.1} GB/s");
+
+    // --- 4. AllReduce step-count structure (ring 2(N-1) vs RS+AG halves) ---
+    println!("\nablation AR structure (x8 256MB, NVLink-only):");
+    for (label, kind, factor) in [
+        ("ring allreduce (2(N-1) steps)", CollectiveKind::AllReduce, 1.0),
+        ("reduce-scatter half", CollectiveKind::ReduceScatter, 1.0),
+        ("allgather half", CollectiveKind::AllGather, 1.0 / 8.0),
+    ] {
+        let mc = MultipathCollective::new(&topo, Calibration::h800(), kind, 8);
+        let m = ((msg as f64) * factor) as u64 / 4 * 4;
+        let t = mc.run(m, &Shares::nvlink_only()).unwrap().total();
+        println!("  {label:<32} {t}");
+    }
+
+    // --- 5. NUMA placement ablation ---
+    let mut blind = Topology::build(&Preset::H800.spec());
+    blind.numa_of = numa::assign_blind(8);
+    let shares = Shares::from_pcts(&[(PathId::Nvlink, 80.0), (PathId::Pcie, 20.0)]);
+    let aware_t = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, 8)
+        .run(msg, &shares)
+        .unwrap()
+        .total();
+    let blind_t = MultipathCollective::new(&blind, Calibration::h800(), CollectiveKind::AllGather, 8)
+        .run(msg, &shares)
+        .unwrap()
+        .total();
+    println!(
+        "\nablation NUMA: aware={aware_t} blind={blind_t} (blind funnels all staging through one socket's memory)"
+    );
+
+    // --- 6. ring vs tree AllReduce crossover (§6 future work) ---
+    println!("\nablation ring-vs-tree AllReduce x8 (NVLink-only):");
+    use flexlink::collectives::tree;
+    for kib in [64u64, 256, 1024, 4096, 16384, 65536, 262144] {
+        let m = kib << 10;
+        let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllReduce, 8);
+        let ring_t = mc.run(m, &Shares::nvlink_only()).unwrap().total();
+        let model = Calibration::h800().nvlink_model(
+            CollectiveKind::AllReduce,
+            8,
+            topo.spec.nvlink_unidir_bps(),
+        );
+        let tree_t = tree::simulate_tree(&topo, model, PathId::Nvlink, 8, m, 500e9)
+            .unwrap()
+            .total;
+        let winner = if tree_t < ring_t { "tree" } else { "ring" };
+        println!("  msg={kib:>7}KiB  ring={ring_t}  tree={tree_t}  winner={winner}");
+    }
+}
+
+fn mc_for(
+    topo: &Topology,
+    kind: CollectiveKind,
+    n: usize,
+) -> MultipathCollective<'_> {
+    MultipathCollective::new(topo, Calibration::h800(), kind, n)
+}

@@ -1,0 +1,31 @@
+//! Bench: Figure 2 — the 256 MB improvement bar chart.
+
+use flexlink::bench_harness::{fig2, render_fig2};
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::topology::Topology;
+use flexlink::util::bench::bench;
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    let rows = fig2(&topo, &cfg).unwrap();
+    print!("{}", render_fig2(&rows));
+    for r in &rows {
+        println!(
+            "fig2 {} x{}: nccl={:.1} flexlink={:.1} improvement={:.1}% (paper: AR≤26%, AG≤27%)",
+            r.op, r.n_gpus, r.nccl_gbps, r.full_gbps, r.full_impr_pct
+        );
+    }
+    let b = bench("fig2_row(allgather,8)", 1, 5, || {
+        flexlink::bench_harness::table2_cell(
+            &topo,
+            &cfg,
+            flexlink::collectives::CollectiveKind::AllGather,
+            8,
+            256,
+        )
+        .unwrap()
+    });
+    println!("{}", b.line());
+}

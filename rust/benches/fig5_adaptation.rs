@@ -1,0 +1,38 @@
+//! Bench: Figure 5 — stage-2 runtime adaptation trace, plus the per-call
+//! overhead of the Evaluator/LoadBalancer pair (which must be ~free).
+
+use flexlink::balancer::{RuntimeBalancer, Shares};
+use flexlink::bench_harness::{fig5_trace, render_fig5};
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::links::PathId;
+use flexlink::sim::SimTime;
+use flexlink::topology::Topology;
+use flexlink::util::bench::bench;
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    let trace = fig5_trace(&topo, &cfg, CollectiveKind::AllGather, 8, 256, 32, 60).unwrap();
+    print!("{}", render_fig5(&trace));
+
+    // Stage-2 observe() is on the collective hot path: time it.
+    let mut rb = RuntimeBalancer::new(
+        cfg,
+        Shares::from_pcts(&[
+            (PathId::Nvlink, 82.0),
+            (PathId::Pcie, 11.0),
+            (PathId::Rdma, 7.0),
+        ]),
+    );
+    let times = vec![
+        (PathId::Nvlink, SimTime::from_micros(900)),
+        (PathId::Pcie, SimTime::from_micros(950)),
+        (PathId::Rdma, SimTime::from_micros(930)),
+    ];
+    let r = bench("runtime_balancer_observe", 100, 10_000, || {
+        rb.observe(times.clone())
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,75 @@
+//! Hot-path micro-benchmarks (→ EXPERIMENTS.md §Perf):
+//!  - DES event throughput on a full 8-GPU multi-path collective
+//!  - functional staged-channel copy bandwidth (the memcpy floor)
+//!  - functional multi-path AllReduce end to end
+//!  - share quantization (per-call planning cost)
+
+use flexlink::balancer::Shares;
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::{exec, CollectiveKind};
+use flexlink::config::presets::Preset;
+use flexlink::links::calib::Calibration;
+use flexlink::links::PathId;
+use flexlink::memory::{MemoryLedger, StagingChannel};
+use flexlink::topology::Topology;
+use flexlink::transport::{f32_as_bytes, Fabric};
+use flexlink::util::bench::{bench, sink};
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let shares = Shares::from_pcts(&[
+        (PathId::Nvlink, 81.0),
+        (PathId::Pcie, 12.0),
+        (PathId::Rdma, 7.0),
+    ]);
+
+    // DES: one fully-simulated 8-GPU 3-path AllGather at 256 MB.
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, 8);
+    let rep = mc.run(256 << 20, &shares).unwrap();
+    println!(
+        "des tasks={} events={} (8-GPU 3-path allgather @256MB)",
+        rep.outcome.tasks, rep.outcome.events
+    );
+    let r = bench("des_allgather8_256mb", 2, 10, || {
+        mc.run(256 << 20, &shares).unwrap()
+    });
+    let evps = rep.outcome.events as f64 / (r.mean_ns / 1e9);
+    println!("{}  ({evps:.0} events/s)", r.line());
+
+    let r = bench("des_allreduce8_256mb", 2, 10, || {
+        MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllReduce, 8)
+            .run(256 << 20, &shares)
+            .unwrap()
+    });
+    println!("{}", r.line());
+
+    // Staged channel: raw protocol-guarded copy throughput.
+    let ledger = MemoryLedger::new();
+    let ch = StagingChannel::new(4 << 20, &ledger);
+    let payload = vec![1.234f32; (4 << 20) / 4];
+    let mut out = vec![0u8; 4 << 20];
+    let r = bench("staged_channel_4mib_roundtrip", 5, 50, || {
+        ch.send_next(f32_as_bytes(&payload));
+        ch.recv_next(&mut out);
+    });
+    let gbps = (2.0 * (4u64 << 20) as f64) / (r.mean_ns / 1e9) / 1e9;
+    println!("{}  ({gbps:.2} GB/s through host staging)", r.line());
+
+    // Functional end-to-end: 8-rank 3-path AllReduce, 8 MiB.
+    let elems = (8 << 20) / 4;
+    let ext = shares.to_extents((elems * 4) as u64, 4);
+    let fabric = Fabric::new(8, 4 << 20, MemoryLedger::new());
+    let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; elems]).collect();
+    let r = bench("functional_allreduce8_8mib", 1, 10, || {
+        exec::all_reduce_f32(&fabric, &ext, &mut bufs).unwrap();
+    });
+    let wire = CollectiveKind::AllReduce.wire_bytes_per_gpu((elems * 4) as u64, 8) * 8;
+    let gbps = wire as f64 / (r.mean_ns / 1e9) / 1e9;
+    println!("{}  ({gbps:.2} GB/s aggregate functional)", r.line());
+
+    // Planning cost per collective call.
+    let r = bench("shares_to_extents", 100, 100_000, || {
+        sink(shares.to_extents(256 << 20, 4))
+    });
+    println!("{}", r.line());
+}

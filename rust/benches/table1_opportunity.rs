@@ -1,0 +1,26 @@
+//! Bench: Table 1 — idle-bandwidth opportunity across architectures,
+//! plus topology-build cost per preset.
+
+use flexlink::bench_harness::{render_table1, table1};
+use flexlink::config::presets::Preset;
+use flexlink::topology::Topology;
+use flexlink::util::bench::bench;
+
+fn main() {
+    let rows = table1();
+    print!("{}", render_table1(&rows));
+    let paper = [32.0, 14.0, 16.0, 22.0, 33.0];
+    for (r, p) in rows.iter().zip(paper) {
+        println!(
+            "table1 {}: measured {:.1}% vs paper {:.0}%",
+            r.server, r.idle_opportunity_pct, p
+        );
+    }
+    for preset in Preset::TABLE1 {
+        let spec = preset.spec();
+        let r = bench(&format!("topology_build({preset})"), 10, 200, || {
+            Topology::build(&spec)
+        });
+        println!("{}", r.line());
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 2's AllGather rows and time the harness cell.
+
+use flexlink::bench_harness::{render_table2, table2_cell, table2_grid};
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::topology::Topology;
+use flexlink::util::bench::bench;
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    let rows: Vec<_> = table2_grid()
+        .into_iter()
+        .filter(|(op, _, _)| *op == CollectiveKind::AllGather)
+        .map(|(op, n, mib)| table2_cell(&topo, &cfg, op, n, mib).unwrap())
+        .collect();
+    print!("{}", render_table2(&rows));
+    let r = bench("table2_cell(allgather,8,256MB)", 1, 5, || {
+        table2_cell(&topo, &cfg, CollectiveKind::AllGather, 8, 256).unwrap()
+    });
+    println!("{}", r.line());
+}

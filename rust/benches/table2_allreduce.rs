@@ -1,0 +1,25 @@
+//! Bench: regenerate Table 2's AllReduce rows (NCCL vs FlexLink PCIe-only
+//! vs PCIe+RDMA) and time the end-to-end harness cell.
+
+use flexlink::bench_harness::{render_table2, table2_cell, table2_grid};
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::BalancerConfig;
+use flexlink::topology::Topology;
+use flexlink::util::bench::bench;
+
+fn main() {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    let rows: Vec<_> = table2_grid()
+        .into_iter()
+        .filter(|(op, _, _)| *op == CollectiveKind::AllReduce)
+        .map(|(op, n, mib)| table2_cell(&topo, &cfg, op, n, mib).unwrap())
+        .collect();
+    print!("{}", render_table2(&rows));
+    // Hot-path timing: one fully-tuned Table 2 cell (tune + 3 measurements).
+    let r = bench("table2_cell(allreduce,8,256MB)", 1, 5, || {
+        table2_cell(&topo, &cfg, CollectiveKind::AllReduce, 8, 256).unwrap()
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,183 @@
+//! The runtime *Evaluator* (§3.2.2): passively monitors path completion
+//! times over a sliding window of recent collective calls and surfaces
+//! persistent trends — never single-call spikes — to the Load Balancer.
+
+use crate::links::PathId;
+use crate::sim::SimTime;
+use std::collections::VecDeque;
+
+/// A persistent slowest/fastest gap detected over a full window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Trend {
+    pub slowest: PathId,
+    pub fastest: PathId,
+    /// Relative gap between windowed mean completion times.
+    pub gap: f64,
+}
+
+/// Sliding-window monitor of per-path completion times.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    window: usize,
+    samples: VecDeque<Vec<(PathId, SimTime)>>,
+}
+
+impl Evaluator {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        Evaluator {
+            window,
+            samples: VecDeque::with_capacity(window),
+        }
+    }
+
+    /// Record one collective call's per-path completion times.
+    pub fn observe(&mut self, times: Vec<(PathId, SimTime)>) {
+        if self.samples.len() == self.window {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(times);
+    }
+
+    /// Drop all samples (after the Load Balancer acts, so the next window
+    /// reflects the *new* distribution only).
+    pub fn reset(&mut self) {
+        self.samples.clear();
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.samples.len() == self.window
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Windowed mean completion per path (only paths present in *every*
+    /// sample — a path activated/deactivated mid-window is skipped).
+    pub fn mean_times(&self) -> Vec<(PathId, f64)> {
+        let mut acc: Vec<(PathId, f64, usize)> = Vec::new();
+        for sample in &self.samples {
+            for (p, t) in sample {
+                match acc.iter_mut().find(|(q, _, _)| q == p) {
+                    Some((_, sum, cnt)) => {
+                        *sum += t.as_secs_f64();
+                        *cnt += 1;
+                    }
+                    None => acc.push((*p, t.as_secs_f64(), 1)),
+                }
+            }
+        }
+        let n = self.samples.len();
+        acc.into_iter()
+            .filter(|(_, _, cnt)| *cnt == n)
+            .map(|(p, sum, cnt)| (p, sum / cnt as f64))
+            .collect()
+    }
+
+    /// The persistent trend, if the window is full and ≥2 paths are
+    /// consistently present.
+    pub fn trend(&self) -> Option<Trend> {
+        if !self.is_full() {
+            return None;
+        }
+        let means = self.mean_times();
+        if means.len() < 2 {
+            return None;
+        }
+        let (slowest, t_slow) = means
+            .iter()
+            .copied()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        let (fastest, t_fast) = means
+            .iter()
+            .copied()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+        if t_fast <= 0.0 {
+            return None;
+        }
+        Some(Trend {
+            slowest,
+            fastest,
+            gap: (t_slow - t_fast) / t_fast,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(nv_us: u64, pcie_us: u64) -> Vec<(PathId, SimTime)> {
+        vec![
+            (PathId::Nvlink, SimTime::from_micros(nv_us)),
+            (PathId::Pcie, SimTime::from_micros(pcie_us)),
+        ]
+    }
+
+    #[test]
+    fn no_trend_until_window_full() {
+        let mut e = Evaluator::new(3);
+        e.observe(sample(100, 200));
+        e.observe(sample(100, 200));
+        assert!(e.trend().is_none());
+        e.observe(sample(100, 200));
+        let t = e.trend().unwrap();
+        assert_eq!(t.slowest, PathId::Pcie);
+        assert_eq!(t.fastest, PathId::Nvlink);
+        assert!((t.gap - 1.0).abs() < 1e-9);
+    }
+
+    /// A single spike must not flip a stable window — the §3.2.2
+    /// "avoids reacting to transient spikes" property.
+    #[test]
+    fn transient_spike_damped_by_window_mean() {
+        let mut e = Evaluator::new(10);
+        for _ in 0..9 {
+            e.observe(sample(100, 105));
+        }
+        e.observe(sample(100, 1000)); // spike
+        let t = e.trend().unwrap();
+        // Mean PCIe = (9·105 + 1000)/10 = 194.5 → gap ≈ 0.945, but if the
+        // balancer thresholds at, say, 2.0 it ignores it; the key check:
+        // the mean damps the 10× spike to <1× gap.
+        assert!(t.gap < 1.0);
+    }
+
+    #[test]
+    fn window_slides() {
+        let mut e = Evaluator::new(2);
+        e.observe(sample(100, 400));
+        e.observe(sample(100, 400));
+        assert!(e.trend().unwrap().gap > 2.9);
+        e.observe(sample(100, 100));
+        e.observe(sample(100, 100));
+        assert!(e.trend().unwrap().gap < 1e-9);
+    }
+
+    #[test]
+    fn paths_missing_from_some_samples_excluded() {
+        let mut e = Evaluator::new(2);
+        e.observe(vec![(PathId::Nvlink, SimTime::from_micros(100))]);
+        e.observe(sample(100, 300));
+        // PCIe present in only 1 of 2 samples → excluded → single path →
+        // no trend.
+        assert!(e.trend().is_none());
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut e = Evaluator::new(1);
+        e.observe(sample(1, 2));
+        assert!(e.is_full());
+        e.reset();
+        assert!(e.is_empty());
+        assert!(e.trend().is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! The two-stage adaptive load balancing strategy (§3.2).
+//!
+//! "The approach is to be conservative initially and adaptive at runtime":
+//!
+//! * **Stage 1** ([`initial`]) — Algorithm 1: a one-time profiling phase
+//!   that iteratively equalizes per-path completion times, with
+//!   NVLink-centric share movement, step-halving damping on bottleneck
+//!   shifts, and path deactivation when a share hits zero.
+//! * **Stage 2** ([`runtime`]) — an [`evaluator::Evaluator`] passively
+//!   windows recent per-path timings; a periodic Load Balancer moves a
+//!   small fixed share from the persistent slowest path to the fastest,
+//!   prioritizing NVLink, without reacting to transient spikes.
+
+pub mod evaluator;
+pub mod initial;
+pub mod runtime;
+pub mod shares;
+
+pub use evaluator::Evaluator;
+pub use initial::{initial_tune, TuneIteration, TuneResult};
+pub use runtime::{Adjustment, RuntimeBalancer};
+pub use shares::Shares;

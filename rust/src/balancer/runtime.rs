@@ -1,0 +1,211 @@
+//! Stage 2 — Runtime Fine-Grained Adjustment (§3.2.2).
+//!
+//! "The Load Balancer is invoked only periodically. [The] Evaluator
+//! analyzes timings from a recent window (e.g., the last 10 collective
+//! calls) ... If the timing gap between the slowest and fastest paths
+//! exceeds a threshold, a small, fixed-size share is transferred from the
+//! slowest path to the fastest, prioritizing NVLink. ... This gradual
+//! approach avoids reacting to transient spikes."
+
+use super::evaluator::Evaluator;
+use super::shares::Shares;
+use crate::config::BalancerConfig;
+use crate::links::PathId;
+use crate::sim::SimTime;
+
+/// One stage-2 share movement, for Figure-5-style traces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Adjustment {
+    /// Index of the collective call that triggered it.
+    pub at_call: u64,
+    pub from: PathId,
+    pub to: PathId,
+    pub moved_pct: f64,
+    pub observed_gap: f64,
+}
+
+/// The runtime Load Balancer: owns the live share distribution and its
+/// Evaluator; to be fed per-collective path timings.
+#[derive(Debug, Clone)]
+pub struct RuntimeBalancer {
+    cfg: BalancerConfig,
+    shares: Shares,
+    evaluator: Evaluator,
+    calls: u64,
+    adjustments: Vec<Adjustment>,
+}
+
+impl RuntimeBalancer {
+    pub fn new(cfg: BalancerConfig, initial_shares: Shares) -> Self {
+        let evaluator = Evaluator::new(cfg.window);
+        RuntimeBalancer {
+            cfg,
+            shares: initial_shares,
+            evaluator,
+            calls: 0,
+            adjustments: Vec::new(),
+        }
+    }
+
+    pub fn shares(&self) -> &Shares {
+        &self.shares
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    pub fn adjustments(&self) -> &[Adjustment] {
+        &self.adjustments
+    }
+
+    /// Feed one collective call's per-path completion times. Returns the
+    /// adjustment if the (periodically invoked) Load Balancer acted.
+    pub fn observe(&mut self, times: Vec<(PathId, SimTime)>) -> Option<Adjustment> {
+        self.calls += 1;
+        self.evaluator.observe(times);
+        // Periodic invocation: only when a full window has accumulated
+        // since the last action (minimizes inter-process coordination).
+        let trend = self.evaluator.trend()?;
+        if trend.gap <= self.cfg.runtime_threshold {
+            return None;
+        }
+        // Prioritize NVLink as the beneficiary unless it is the bottleneck.
+        let to = if trend.slowest != PathId::Nvlink && self.shares.is_active(PathId::Nvlink) {
+            PathId::Nvlink
+        } else {
+            trend.fastest
+        };
+        let from = trend.slowest;
+        if from == to {
+            return None;
+        }
+        let moved = self
+            .shares
+            .transfer(from, to, self.cfg.runtime_step_pct, self.cfg.min_share_pct);
+        if moved == 0.0 {
+            return None;
+        }
+        let adj = Adjustment {
+            at_call: self.calls,
+            from,
+            to,
+            moved_pct: moved,
+            observed_gap: trend.gap,
+        };
+        self.adjustments.push(adj);
+        // Start a fresh window under the new distribution.
+        self.evaluator.reset();
+        Some(adj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BalancerConfig {
+        BalancerConfig {
+            window: 4,
+            runtime_threshold: 0.15,
+            runtime_step_pct: 1.0,
+            ..BalancerConfig::default()
+        }
+    }
+
+    fn times(nv_us: u64, pcie_us: u64) -> Vec<(PathId, SimTime)> {
+        vec![
+            (PathId::Nvlink, SimTime::from_micros(nv_us)),
+            (PathId::Pcie, SimTime::from_micros(pcie_us)),
+        ]
+    }
+
+    fn shares_84_16() -> Shares {
+        Shares::from_pcts(&[(PathId::Nvlink, 84.0), (PathId::Pcie, 16.0)])
+    }
+
+    #[test]
+    fn adjusts_only_after_full_window() {
+        let mut rb = RuntimeBalancer::new(cfg(), shares_84_16());
+        for _ in 0..3 {
+            assert!(rb.observe(times(100, 200)).is_none());
+        }
+        let adj = rb.observe(times(100, 200)).expect("window full, gap 100%");
+        assert_eq!(adj.from, PathId::Pcie);
+        assert_eq!(adj.to, PathId::Nvlink);
+        assert!((adj.moved_pct - 1.0).abs() < 1e-9);
+        assert!((rb.shares().get(PathId::Pcie) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn below_threshold_no_action() {
+        let mut rb = RuntimeBalancer::new(cfg(), shares_84_16());
+        for _ in 0..20 {
+            assert!(rb.observe(times(100, 110)).is_none());
+        }
+        assert!(rb.adjustments().is_empty());
+    }
+
+    #[test]
+    fn nvlink_bottleneck_offloads_to_fastest() {
+        let mut rb = RuntimeBalancer::new(cfg(), shares_84_16());
+        for _ in 0..3 {
+            rb.observe(times(300, 100));
+        }
+        let adj = rb.observe(times(300, 100)).unwrap();
+        assert_eq!(adj.from, PathId::Nvlink);
+        assert_eq!(adj.to, PathId::Pcie);
+    }
+
+    #[test]
+    fn window_resets_after_adjustment() {
+        let mut rb = RuntimeBalancer::new(cfg(), shares_84_16());
+        for _ in 0..4 {
+            rb.observe(times(100, 200));
+        }
+        assert_eq!(rb.adjustments().len(), 1);
+        // The next 3 calls rebuild the window; no immediate re-fire.
+        for _ in 0..3 {
+            assert!(rb.observe(times(100, 200)).is_none());
+        }
+        assert!(rb.observe(times(100, 200)).is_some());
+    }
+
+    #[test]
+    fn transient_spike_ignored() {
+        // A 1.5× single-call spike (gap 0.5 ≫ threshold 0.15) lands in a
+        // window of otherwise-balanced samples: the windowed mean damps
+        // it to gap ≈ 0.08 < 0.15 and the balancer must not fire — the
+        // §3.2.2 "avoids reacting to transient spikes" property.
+        let mut rb = RuntimeBalancer::new(BalancerConfig::default(), shares_84_16());
+        for _ in 0..9 {
+            assert!(rb.observe(times(100, 104)).is_none());
+        }
+        assert!(rb.observe(times(100, 150)).is_none(), "spike fired");
+        assert!(rb.adjustments().is_empty());
+        // The same gap *sustained* over a full window does fire.
+        for _ in 0..10 {
+            rb.observe(times(100, 150));
+        }
+        assert!(!rb.adjustments().is_empty());
+    }
+
+    #[test]
+    fn drained_path_deactivates_and_balancer_idles() {
+        let mut rb = RuntimeBalancer::new(
+            cfg(),
+            Shares::from_pcts(&[(PathId::Nvlink, 98.5), (PathId::Pcie, 1.5)]),
+        );
+        for _ in 0..4 {
+            rb.observe(times(100, 500));
+        }
+        // 1.5 - 1.0 = 0.5 ≤ min_share → full deactivation.
+        assert!(!rb.shares().is_active(PathId::Pcie));
+        // Only NVLink left → single-path samples → no further trends.
+        for _ in 0..10 {
+            assert!(rb
+                .observe(vec![(PathId::Nvlink, SimTime::from_micros(100))])
+                .is_none());
+        }
+    }
+}

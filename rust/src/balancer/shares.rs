@@ -1,0 +1,214 @@
+//! Share distributions: what fraction of each message every path carries.
+//!
+//! Shares are kept in percentage points (the paper's Table 2 reports
+//! "PCIe + RDMA Load (%)"), manipulated by Algorithm 1 and the runtime
+//! Load Balancer, and quantized to element-aligned byte extents when a
+//! message is actually split.
+
+use crate::links::PathId;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A traffic distribution over active paths, in percentage points.
+/// Invariant: entries are ≥ 0 and sum to 100 (within fp tolerance);
+/// inactive paths are absent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shares {
+    map: BTreeMap<PathId, f64>,
+}
+
+impl Shares {
+    /// Everything on NVLink (the NCCL baseline distribution).
+    pub fn nvlink_only() -> Self {
+        let mut map = BTreeMap::new();
+        map.insert(PathId::Nvlink, 100.0);
+        Shares { map }
+    }
+
+    /// The Algorithm-1 initialization heuristic: "NVLink gets dominant
+    /// share", remainder split evenly over the auxiliary paths.
+    pub fn initial(nvlink_pct: f64, aux: &[PathId]) -> Self {
+        assert!((0.0..=100.0).contains(&nvlink_pct));
+        let mut map = BTreeMap::new();
+        if aux.is_empty() {
+            map.insert(PathId::Nvlink, 100.0);
+        } else {
+            map.insert(PathId::Nvlink, nvlink_pct);
+            let rest = (100.0 - nvlink_pct) / aux.len() as f64;
+            for p in aux {
+                assert_ne!(*p, PathId::Nvlink, "aux paths exclude NVLink");
+                map.insert(*p, rest);
+            }
+        }
+        Shares { map }
+    }
+
+    /// Build from explicit (path, pct) pairs; normalizes to 100.
+    pub fn from_pcts(pairs: &[(PathId, f64)]) -> Self {
+        let total: f64 = pairs.iter().map(|(_, v)| *v).sum();
+        assert!(total > 0.0, "shares must be positive");
+        let map = pairs
+            .iter()
+            .filter(|(_, v)| *v > 0.0)
+            .map(|(p, v)| (*p, v / total * 100.0))
+            .collect();
+        Shares { map }
+    }
+
+    pub fn get(&self, p: PathId) -> f64 {
+        self.map.get(&p).copied().unwrap_or(0.0)
+    }
+
+    pub fn is_active(&self, p: PathId) -> bool {
+        self.map.contains_key(&p)
+    }
+
+    pub fn active_paths(&self) -> Vec<PathId> {
+        self.map.keys().copied().collect()
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Move up to `pct` points from `from` to `to`; deactivates `from` if
+    /// it reaches ≤ `min_share` (Algorithm 1 line 31: "Deactivate path").
+    /// Returns the amount actually moved.
+    pub fn transfer(&mut self, from: PathId, to: PathId, pct: f64, min_share: f64) -> f64 {
+        assert!(pct >= 0.0);
+        let avail = self.get(from);
+        if avail == 0.0 || from == to {
+            return 0.0;
+        }
+        let moved = pct.min(avail);
+        let left = avail - moved;
+        if left <= min_share {
+            // Fold the residual into the target and deactivate.
+            self.map.remove(&from);
+            *self.map.entry(to).or_insert(0.0) += moved + left;
+            moved + left
+        } else {
+            self.map.insert(from, left);
+            *self.map.entry(to).or_insert(0.0) += moved;
+            moved
+        }
+    }
+
+    /// Deactivate `p`, folding its share into `into`.
+    pub fn deactivate(&mut self, p: PathId, into: PathId) {
+        if let Some(v) = self.map.remove(&p) {
+            *self.map.entry(into).or_insert(0.0) += v;
+        }
+    }
+
+    /// Sum of all shares (≈100; exposed for invariant checks).
+    pub fn total(&self) -> f64 {
+        self.map.values().sum()
+    }
+
+    /// Quantize to byte extents over a `msg`-byte message: extents are
+    /// `align`-aligned (element size), contiguous, cover the message
+    /// exactly, ordered NVLink → PCIe → RDMA. Zero-byte paths are dropped.
+    pub fn to_extents(&self, msg: u64, align: u64) -> Vec<(PathId, u64, u64)> {
+        assert!(align > 0 && msg % align == 0, "message not element-aligned");
+        let paths = self.active_paths();
+        let mut out = Vec::with_capacity(paths.len());
+        let mut off = 0u64;
+        for (i, p) in paths.iter().enumerate() {
+            let len = if i == paths.len() - 1 {
+                msg - off
+            } else {
+                let raw = (self.get(*p) / 100.0 * msg as f64).round() as u64;
+                (raw / align * align).min(msg - off)
+            };
+            if len > 0 {
+                out.push((*p, off, len));
+                off += len;
+            }
+        }
+        debug_assert_eq!(off, msg);
+        out
+    }
+}
+
+impl fmt::Display for Shares {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (p, v) in &self.map {
+            if !first {
+                write!(f, " ")?;
+            }
+            write!(f, "{p}={v:.1}%")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_heuristic() {
+        let s = Shares::initial(84.0, &[PathId::Pcie, PathId::Rdma]);
+        assert!((s.get(PathId::Nvlink) - 84.0).abs() < 1e-9);
+        assert!((s.get(PathId::Pcie) - 8.0).abs() < 1e-9);
+        assert!((s.get(PathId::Rdma) - 8.0).abs() < 1e-9);
+        assert!((s.total() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_moves_and_caps() {
+        let mut s = Shares::initial(80.0, &[PathId::Pcie]);
+        let moved = s.transfer(PathId::Pcie, PathId::Nvlink, 5.0, 0.5);
+        assert_eq!(moved, 5.0);
+        assert!((s.get(PathId::Pcie) - 15.0).abs() < 1e-9);
+        assert!((s.get(PathId::Nvlink) - 85.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_deactivates_at_min_share() {
+        let mut s = Shares::from_pcts(&[(PathId::Nvlink, 98.0), (PathId::Pcie, 2.0)]);
+        let moved = s.transfer(PathId::Pcie, PathId::Nvlink, 1.8, 0.5);
+        // 0.2 residual ≤ 0.5 → whole 2.0 folds over, path deactivated.
+        assert!((moved - 2.0).abs() < 1e-9);
+        assert!(!s.is_active(PathId::Pcie));
+        assert!((s.get(PathId::Nvlink) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extents_cover_message_aligned() {
+        let s = Shares::from_pcts(&[
+            (PathId::Nvlink, 81.0),
+            (PathId::Pcie, 12.0),
+            (PathId::Rdma, 7.0),
+        ]);
+        let msg = 256u64 << 20;
+        let ext = s.to_extents(msg, 4);
+        assert_eq!(ext.iter().map(|e| e.2).sum::<u64>(), msg);
+        for (_, off, len) in &ext {
+            assert_eq!(off % 4, 0);
+            let _ = len;
+        }
+        // Ordered and contiguous.
+        for w in ext.windows(2) {
+            assert_eq!(w[0].1 + w[0].2, w[1].1);
+        }
+        // Proportions approximately respected.
+        assert!((ext[0].2 as f64 / msg as f64 - 0.81).abs() < 0.01);
+    }
+
+    #[test]
+    fn extents_nvlink_only() {
+        let s = Shares::nvlink_only();
+        let ext = s.to_extents(1024, 4);
+        assert_eq!(ext, vec![(PathId::Nvlink, 0, 1024)]);
+    }
+
+    #[test]
+    fn from_pcts_normalizes() {
+        let s = Shares::from_pcts(&[(PathId::Nvlink, 2.0), (PathId::Pcie, 2.0)]);
+        assert!((s.get(PathId::Nvlink) - 50.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,64 @@
+//! The NCCL baseline (§5.2): NVLink-only ring collectives.
+//!
+//! NCCL's "winner-takes-all" transport choice — all traffic on NVLink —
+//! is FlexLink's comparison point everywhere in the paper. Here it is the
+//! same DES with a 100%-NVLink share distribution and the per-(op, N)
+//! calibrated protocol model; Table 2's NCCL column is the calibration
+//! target (see `links::calib`).
+
+use crate::balancer::shares::Shares;
+use crate::collectives::multipath::{MultipathCollective, RunReport};
+use crate::collectives::CollectiveKind;
+use crate::links::calib::Calibration;
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// NVLink-only reference implementation of a collective.
+pub struct NcclBaseline<'t> {
+    mc: MultipathCollective<'t>,
+}
+
+impl<'t> NcclBaseline<'t> {
+    pub fn new(topo: &'t Topology, calib: Calibration, kind: CollectiveKind, n: usize) -> Self {
+        NcclBaseline {
+            mc: MultipathCollective::new(topo, calib, kind, n),
+        }
+    }
+
+    /// Time one collective of `msg_bytes`.
+    pub fn run(&self, msg_bytes: u64) -> Result<RunReport> {
+        self.mc.run(msg_bytes, &Shares::nvlink_only())
+    }
+
+    /// Algorithm bandwidth (GB/s), the nccl-tests metric.
+    pub fn algbw_gbps(&self, msg_bytes: u64) -> Result<f64> {
+        Ok(self.run(msg_bytes)?.algbw_gbps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    /// Spot-check the full paper NCCL column in one place (per-op tests
+    /// live in the collective modules; this guards the baseline wrapper).
+    #[test]
+    fn baseline_matches_table2_nccl_column() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let cases = [
+            (CollectiveKind::AllReduce, 2, 64u64, 128.0),
+            (CollectiveKind::AllReduce, 4, 128, 94.0),
+            (CollectiveKind::AllGather, 2, 64, 117.0),
+            (CollectiveKind::AllGather, 8, 256, 21.0),
+        ];
+        for (kind, n, mib, paper) in cases {
+            let b = NcclBaseline::new(&topo, Calibration::h800(), kind, n);
+            let got = b.algbw_gbps(mib << 20).unwrap();
+            assert!(
+                (got - paper).abs() / paper < 0.10,
+                "{kind} n={n} {mib}MB: {got:.1} vs paper {paper}"
+            );
+        }
+    }
+}

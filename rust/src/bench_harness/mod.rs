@@ -1,0 +1,361 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//!
+//! Each function returns structured rows *and* can render the
+//! paper-shaped artifact; the `flexlink repro <id>` CLI and the criterion
+//! benches both call in here. Paper-vs-measured comparisons are recorded
+//! in EXPERIMENTS.md.
+
+use crate::balancer::{initial_tune, RuntimeBalancer, Shares};
+use crate::collectives::multipath::MultipathCollective;
+use crate::collectives::CollectiveKind;
+use crate::config::presets::Preset;
+use crate::config::BalancerConfig;
+use crate::links::calib::Calibration;
+use crate::links::PathId;
+use crate::metrics::improvement_pct;
+use crate::report::{bar_chart, Table};
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// One Table 2 row (both FlexLink variants vs the NCCL baseline).
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub op: CollectiveKind,
+    pub n_gpus: usize,
+    pub msg_mib: u64,
+    pub nccl_gbps: f64,
+    pub pcie_only_gbps: f64,
+    pub pcie_only_impr_pct: f64,
+    pub pcie_only_load_pct: f64,
+    pub full_gbps: f64,
+    pub full_impr_pct: f64,
+    pub full_pcie_load_pct: f64,
+    pub full_rdma_load_pct: f64,
+}
+
+/// The exact (op, n, MiB) grid of the paper's Table 2.
+pub fn table2_grid() -> Vec<(CollectiveKind, usize, u64)> {
+    let mut grid = Vec::new();
+    for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+        for n in [2usize, 4, 8] {
+            let sizes: &[u64] = if op == CollectiveKind::AllReduce && n == 8 {
+                &[256] // the paper reports only 256 MB for 8-GPU AR
+            } else {
+                &[32, 64, 128, 256]
+            };
+            for &mib in sizes {
+                grid.push((op, n, mib));
+            }
+        }
+    }
+    grid
+}
+
+/// Tune + measure one Table 2 cell.
+pub fn table2_cell(
+    topo: &Topology,
+    cfg: &BalancerConfig,
+    op: CollectiveKind,
+    n: usize,
+    mib: u64,
+) -> Result<Table2Row> {
+    let msg = mib << 20;
+    let mc = MultipathCollective::new(topo, Calibration::h800(), op, n);
+    let nccl = mc.run(msg, &Shares::nvlink_only())?;
+
+    let pcie_only = initial_tune(&mc, msg, cfg, &[PathId::Pcie])?;
+    let pcie_rep = mc.run(msg, &pcie_only.shares)?;
+
+    let full = initial_tune(&mc, msg, cfg, &[PathId::Pcie, PathId::Rdma])?;
+    let full_rep = mc.run(msg, &full.shares)?;
+
+    Ok(Table2Row {
+        op,
+        n_gpus: n,
+        msg_mib: mib,
+        nccl_gbps: nccl.algbw_gbps(),
+        pcie_only_gbps: pcie_rep.algbw_gbps(),
+        pcie_only_impr_pct: improvement_pct(nccl.algbw_gbps(), pcie_rep.algbw_gbps()),
+        pcie_only_load_pct: pcie_only.shares.get(PathId::Pcie),
+        full_gbps: full_rep.algbw_gbps(),
+        full_impr_pct: improvement_pct(nccl.algbw_gbps(), full_rep.algbw_gbps()),
+        full_pcie_load_pct: full.shares.get(PathId::Pcie),
+        full_rdma_load_pct: full.shares.get(PathId::Rdma),
+    })
+}
+
+/// Regenerate the full Table 2.
+pub fn table2(topo: &Topology, cfg: &BalancerConfig) -> Result<Vec<Table2Row>> {
+    table2_grid()
+        .into_iter()
+        .map(|(op, n, mib)| table2_cell(topo, cfg, op, n, mib))
+        .collect()
+}
+
+pub fn render_table2(rows: &[Table2Row]) -> String {
+    let mut t = Table::new(
+        "Table 2: algorithm bandwidth (GB/s) and load distribution",
+        &[
+            "Operator", "#GPUs", "Msg", "NCCL", "PCIe-Only", "Impr", "PCIe%",
+            "PCIe+RDMA", "Impr", "Load(P+R)",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.op.to_string(),
+            r.n_gpus.to_string(),
+            format!("{}MB", r.msg_mib),
+            format!("{:.0}", r.nccl_gbps),
+            format!("{:.0}", r.pcie_only_gbps),
+            format!("{:.0}%", r.pcie_only_impr_pct),
+            format!("{:.0}%", r.pcie_only_load_pct),
+            format!("{:.0}", r.full_gbps),
+            format!("{:.0}%", r.full_impr_pct),
+            format!("{:.0} + {:.0}", r.full_pcie_load_pct, r.full_rdma_load_pct),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 2: the 256 MB bandwidth-improvement bars.
+pub fn fig2(topo: &Topology, cfg: &BalancerConfig) -> Result<Vec<Table2Row>> {
+    let mut rows = Vec::new();
+    for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+        for n in [2usize, 4, 8] {
+            rows.push(table2_cell(topo, cfg, op, n, 256)?);
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render_fig2(rows: &[Table2Row]) -> String {
+    let bars: Vec<(String, f64)> = rows
+        .iter()
+        .map(|r| {
+            (
+                format!("{} x{}", r.op, r.n_gpus),
+                r.full_impr_pct.max(0.0),
+            )
+        })
+        .collect();
+    bar_chart(
+        "Figure 2: FlexLink improvement over NCCL @ 256MB (%)",
+        &bars,
+        40,
+    )
+}
+
+/// Table 1: idle-bandwidth opportunity across architectures.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub server: String,
+    pub nvlink_gbps: f64,
+    pub pcie_gbps: f64,
+    pub nic_gbit: f64,
+    pub contention: bool,
+    pub idle_opportunity_pct: f64,
+}
+
+pub fn table1() -> Vec<Table1Row> {
+    Preset::TABLE1
+        .iter()
+        .map(|p| {
+            let s = p.spec();
+            Table1Row {
+                server: s.name.clone(),
+                nvlink_gbps: s.nvlink_gbps_bidir,
+                pcie_gbps: s.pcie_gbps_bidir,
+                nic_gbit: s.nic_gbit_bidir,
+                contention: s.path_contention,
+                idle_opportunity_pct: s.idle_bw_opportunity() * 100.0,
+            }
+        })
+        .collect()
+}
+
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut t = Table::new(
+        "Table 1: idle bandwidth opportunity across GPU architectures",
+        &["GPU Server", "NVLink", "PCIe/C2C", "NIC Gb/s", "Contention", "Idle BW Opp."],
+    );
+    for r in rows {
+        t.row(vec![
+            r.server.clone(),
+            format!("{:.0}", r.nvlink_gbps),
+            format!("{:.0}", r.pcie_gbps),
+            format!("{:.0}", r.nic_gbit),
+            if r.contention { "Yes" } else { "No" }.into(),
+            format!("{:.0}%", r.idle_opportunity_pct),
+        ]);
+    }
+    t.render()
+}
+
+/// Figure 5: the stage-2 runtime adaptation trace. Tune at `tune_mib`,
+/// then stream `calls` collectives at `run_mib`; the Load Balancer should
+/// walk the shares toward the new optimum.
+#[derive(Debug, Clone)]
+pub struct Fig5Point {
+    pub call: u64,
+    pub nvlink_pct: f64,
+    pub pcie_pct: f64,
+    pub rdma_pct: f64,
+    pub total_ms: f64,
+    pub adjusted: bool,
+}
+
+pub fn fig5_trace(
+    topo: &Topology,
+    cfg: &BalancerConfig,
+    op: CollectiveKind,
+    n: usize,
+    tune_mib: u64,
+    run_mib: u64,
+    calls: u64,
+) -> Result<Vec<Fig5Point>> {
+    let mc = MultipathCollective::new(topo, Calibration::h800(), op, n);
+    let tuned = initial_tune(&mc, tune_mib << 20, cfg, &[PathId::Pcie, PathId::Rdma])?;
+    let mut rb = RuntimeBalancer::new(cfg.clone(), tuned.shares);
+    let mut out = Vec::with_capacity(calls as usize);
+    for call in 1..=calls {
+        let shares = rb.shares().clone();
+        let rep = mc.run(run_mib << 20, &shares)?;
+        let adj = rb.observe(rep.path_times());
+        out.push(Fig5Point {
+            call,
+            nvlink_pct: shares.get(PathId::Nvlink),
+            pcie_pct: shares.get(PathId::Pcie),
+            rdma_pct: shares.get(PathId::Rdma),
+            total_ms: rep.total().as_secs_f64() * 1e3,
+            adjusted: adj.is_some(),
+        });
+    }
+    Ok(out)
+}
+
+pub fn render_fig5(points: &[Fig5Point]) -> String {
+    let mut t = Table::new(
+        "Figure 5: runtime load adjustment trace",
+        &["call", "nvlink%", "pcie%", "rdma%", "time(ms)", "adjusted"],
+    );
+    for p in points {
+        t.row(vec![
+            p.call.to_string(),
+            format!("{:.1}", p.nvlink_pct),
+            format!("{:.1}", p.pcie_pct),
+            format!("{:.1}", p.rdma_pct),
+            format!("{:.3}", p.total_ms),
+            if p.adjusted { "*" } else { "" }.into(),
+        ]);
+    }
+    t.render()
+}
+
+/// §5.4 overhead report for a live communicator.
+#[derive(Debug, Clone)]
+pub struct OverheadReport {
+    pub pinned_bytes: u64,
+    pub peak_pinned_bytes: u64,
+    pub host_copies: u64,
+    pub host_bytes_copied: u64,
+    pub profiling_time_s: f64,
+}
+
+pub fn overhead(comm: &crate::comm::Communicator) -> OverheadReport {
+    let l = comm.ledger();
+    OverheadReport {
+        pinned_bytes: l.pinned_bytes(),
+        peak_pinned_bytes: l.peak_pinned_bytes(),
+        host_copies: l.host_copies(),
+        host_bytes_copied: l.host_bytes_copied(),
+        profiling_time_s: comm.profiling_time.as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::build(&Preset::H800.spec())
+    }
+
+    #[test]
+    fn grid_matches_paper_row_count() {
+        // AR: 2,4 → 4 sizes each; 8 → 1. AG: 3 n's × 4 sizes. Total 21.
+        assert_eq!(table2_grid().len(), 21);
+    }
+
+    /// The paper's headline: up to ~26% (AR) and ~27% (AG) improvement at
+    /// 256 MB, and the 8-GPU AR case collapsing to ~1–2%.
+    #[test]
+    fn headline_cells_have_paper_shape() {
+        let topo = topo();
+        let cfg = BalancerConfig::default();
+        let ar2 = table2_cell(&topo, &cfg, CollectiveKind::AllReduce, 2, 256).unwrap();
+        assert!(
+            ar2.full_impr_pct > 12.0,
+            "AR2 256MB improvement {:.1}% (paper: 26%)",
+            ar2.full_impr_pct
+        );
+        let ag8 = table2_cell(&topo, &cfg, CollectiveKind::AllGather, 8, 256).unwrap();
+        assert!(
+            ag8.full_impr_pct > 14.0,
+            "AG8 256MB improvement {:.1}% (paper: 24%)",
+            ag8.full_impr_pct
+        );
+        let ar8 = table2_cell(&topo, &cfg, CollectiveKind::AllReduce, 8, 256).unwrap();
+        assert!(
+            ar8.full_impr_pct < 8.0,
+            "AR8 256MB should nearly vanish (paper: 2%), got {:.1}%",
+            ar8.full_impr_pct
+        );
+        // FlexLink must never lose to NCCL.
+        for r in [&ar2, &ag8, &ar8] {
+            assert!(r.full_impr_pct > -1.0 && r.pcie_only_impr_pct > -1.0);
+        }
+    }
+
+    #[test]
+    fn table1_matches_paper_column() {
+        let rows = table1();
+        let expect = [32.0, 14.0, 16.0, 22.0, 33.0];
+        for (r, e) in rows.iter().zip(expect) {
+            assert!(
+                (r.idle_opportunity_pct - e).abs() < 0.75,
+                "{}: {:.1}% vs paper {e}%",
+                r.server,
+                r.idle_opportunity_pct
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_adapts_when_message_shrinks() {
+        let topo = topo();
+        let cfg = BalancerConfig::default();
+        // Tune at 256MB, then run 8-GPU AR at 32MB: the tuned aux shares
+        // are too aggressive for the smaller message (latency-dominated),
+        // so stage 2 should walk shares back toward NVLink.
+        let trace = fig5_trace(
+            &topo,
+            &cfg,
+            CollectiveKind::AllGather,
+            8,
+            256,
+            32,
+            60,
+        )
+        .unwrap();
+        let first = &trace[0];
+        let last = trace.last().unwrap();
+        assert!(
+            last.nvlink_pct >= first.nvlink_pct,
+            "nvlink share should not shrink: {} → {}",
+            first.nvlink_pct,
+            last.nvlink_pct
+        );
+        // And time should not get worse.
+        assert!(last.total_ms <= first.total_ms * 1.02);
+    }
+}

@@ -1,0 +1,640 @@
+//! Functional (real-data) execution of multi-path collectives.
+//!
+//! One thread per (path, rank) runs the identical ring schedule the
+//! timing face simulates, moving real f32 data through the
+//! [`crate::transport::Fabric`]'s counter-semaphore staging channels.
+//! Because AllReduce is elementwise and AllGather is a permutation of
+//! disjoint extents, splitting the message across paths cannot change the
+//! result — FlexLink's "lossless, without accuracy concern" claim — and
+//! the tests here check bit-exactness against straight-line references
+//! under many share splits.
+
+use super::ring;
+use crate::links::PathId;
+use crate::transport::{f32_as_bytes, f32_as_bytes_mut, Fabric};
+use anyhow::Result;
+
+/// Byte extents per path over the message, as produced by
+/// [`crate::balancer::shares::Shares::to_extents`] (4-byte aligned).
+pub type PathExtents = Vec<(PathId, u64, u64)>;
+
+/// Raw pointer handoff for disjoint-region writes from sibling threads.
+#[derive(Clone, Copy)]
+struct RawSlice(*mut f32, usize);
+// SAFETY: every thread receives the same base pointer but writes disjoint
+// (path-extent × block) regions — see the region math in each executor.
+unsafe impl Send for RawSlice {}
+impl RawSlice {
+    /// # Safety
+    /// Caller must guarantee `[off, off+len)` is in-bounds and not
+    /// concurrently aliased by another thread.
+    unsafe fn region(&self, off: usize, len: usize) -> &'static mut [f32] {
+        debug_assert!(off + len <= self.1);
+        std::slice::from_raw_parts_mut(self.0.add(off), len)
+    }
+
+    /// Shared view into *another* raw slice (scratch buffers). `self` is
+    /// only used as a namespace to keep the unsafe surface in one impl.
+    /// # Safety
+    /// As [`Self::region`], against `src`'s bounds.
+    unsafe fn carve(&self, src: RawSlice, off: usize, len: usize) -> &'static [f32] {
+        debug_assert!(off + len <= src.1);
+        std::slice::from_raw_parts(src.0.add(off), len)
+    }
+
+    /// Mutable view into another raw slice.
+    /// # Safety
+    /// As [`Self::carve`], plus exclusivity of the region.
+    unsafe fn carve_mut(&self, src: RawSlice, off: usize, len: usize) -> &'static mut [f32] {
+        debug_assert!(off + len <= src.1);
+        std::slice::from_raw_parts_mut(src.0.add(off), len)
+    }
+}
+
+fn elem_extents(extents: &PathExtents) -> Vec<(PathId, usize, usize)> {
+    extents
+        .iter()
+        .map(|(p, off, len)| {
+            debug_assert!(off % 4 == 0 && len % 4 == 0, "extent not f32-aligned");
+            (*p, (*off / 4) as usize, (*len / 4) as usize)
+        })
+        .collect()
+}
+
+/// Interleaved chunked send/recv of one ring step: sends `send_from` to
+/// the `send` channel while draining the peer's block into `recv_into`
+/// (reduce-combining when `reduce`). Chunk pairs interleave to keep the
+/// double-buffered slots from deadlocking.
+fn step_exchange(
+    send: &crate::memory::StagingChannel,
+    recv: &crate::memory::StagingChannel,
+    send_from: &[f32],
+    recv_into: &mut [f32],
+    chunk_elems: usize,
+    reduce: bool,
+) {
+    let step = chunk_elems.max(1);
+    let n_send = send_from.len().div_ceil(step);
+    let n_recv = recv_into.len().div_ceil(step);
+    let mut s_iter = send_from.chunks(step);
+    let mut r_chunks = recv_into.chunks_mut(step);
+    for c in 0..n_send.max(n_recv) {
+        if c < n_send {
+            let chunk = s_iter.next().unwrap();
+            send.send_next(f32_as_bytes(chunk));
+        }
+        if c < n_recv {
+            let chunk = r_chunks.next().unwrap();
+            if reduce {
+                recv.recv_next_reduce_f32(chunk);
+            } else {
+                recv.recv_next(f32_as_bytes_mut(chunk));
+            }
+        }
+    }
+}
+
+/// In-place multi-path ring AllReduce (sum) over one buffer per rank.
+/// All buffers must have equal length; `extents` must cover
+/// `len*4` bytes.
+pub fn all_reduce_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    bufs: &mut [Vec<f32>],
+) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(bufs.len() == n, "need one buffer per rank");
+    let len = bufs[0].len();
+    anyhow::ensure!(
+        bufs.iter().all(|b| b.len() == len),
+        "rank buffers must be equal length"
+    );
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(covered == (len * 4) as u64, "extents must cover the message");
+    let eext = elem_extents(extents);
+    let chunk_elems = fabric.chunk_bytes() / 4;
+
+    // Hand each rank's buffer out as per-path segments.
+    let mut segs: Vec<Vec<&mut [f32]>> = Vec::with_capacity(n);
+    for buf in bufs.iter_mut() {
+        let mut rest: &mut [f32] = buf;
+        let mut per_path = Vec::with_capacity(eext.len());
+        for (_, _, elen) in &eext {
+            let (seg, tail) = rest.split_at_mut(*elen);
+            per_path.push(seg);
+            rest = tail;
+        }
+        segs.push(per_path);
+    }
+
+    std::thread::scope(|scope| {
+        for (r, per_path) in segs.into_iter().enumerate() {
+            for ((path, _, _), seg) in eext.iter().copied().zip(per_path) {
+                if seg.is_empty() {
+                    continue;
+                }
+                let send = fabric.channel(path, r, ring::next(r, n));
+                let recv = fabric.channel(path, ring::prev(r, n), r);
+                scope.spawn(move || {
+                    ring_allreduce_rank(seg, r, n, &send, &recv, chunk_elems);
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+/// One rank's thread of the ring AllReduce over its path segment.
+fn ring_allreduce_rank(
+    x: &mut [f32],
+    r: usize,
+    n: usize,
+    send: &crate::memory::StagingChannel,
+    recv: &crate::memory::StagingChannel,
+    chunk_elems: usize,
+) {
+    let blocks = ring::split_extents(x.len() as u64, n, 1);
+    let range = |b: usize| blocks[b].0 as usize..(blocks[b].0 + blocks[b].1) as usize;
+
+    // Phase 1: ReduceScatter — receive + combine.
+    for s in 0..n - 1 {
+        let sb = ring::rs_send_block(r, s, n);
+        let rb = ring::rs_send_block(ring::prev(r, n), s, n);
+        let (snd, rcv) = disjoint_regions(x, range(sb), range(rb));
+        step_exchange(send, recv, snd, rcv, chunk_elems, true);
+    }
+    // Phase 2: AllGather of reduced blocks — receive = overwrite.
+    for s in 0..n - 1 {
+        let sb = ring::ar_ag_send_block(r, s, n);
+        let rb = ring::ar_ag_send_block(ring::prev(r, n), s, n);
+        let (snd, rcv) = disjoint_regions(x, range(sb), range(rb));
+        step_exchange(send, recv, snd, rcv, chunk_elems, false);
+    }
+}
+
+/// Borrow two disjoint block ranges of `x`, one shared one mutable.
+fn disjoint_regions(
+    x: &mut [f32],
+    send: std::ops::Range<usize>,
+    recv: std::ops::Range<usize>,
+) -> (&[f32], &mut [f32]) {
+    assert!(send.end <= recv.start || recv.end <= send.start, "ring blocks alias");
+    // SAFETY: asserted disjoint; lifetimes tied to x's borrow.
+    unsafe {
+        let base = x.as_mut_ptr();
+        let snd = std::slice::from_raw_parts(base.add(send.start), send.len());
+        let rcv = std::slice::from_raw_parts_mut(base.add(recv.start), recv.len());
+        (snd, rcv)
+    }
+}
+
+/// Multi-path ring AllGather: `inputs[r]` (equal lengths L) →
+/// `outputs[r]` of length n·L laid out as concatenated rank blocks.
+/// `extents` are over the per-rank contribution (L·4 bytes).
+pub fn all_gather_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(inputs.len() == n && outputs.len() == n);
+    let l = inputs[0].len();
+    anyhow::ensure!(inputs.iter().all(|b| b.len() == l));
+    for o in outputs.iter_mut() {
+        o.resize(n * l, 0.0);
+    }
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(covered == (l * 4) as u64, "extents must cover the contribution");
+    let eext = elem_extents(extents);
+    let chunk_elems = fabric.chunk_bytes() / 4;
+
+    let out_ptrs: Vec<RawSlice> = outputs
+        .iter_mut()
+        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .collect();
+
+    std::thread::scope(|scope| {
+        for r in 0..n {
+            for (path, eoff, elen) in eext.iter().copied() {
+                if elen == 0 {
+                    continue;
+                }
+                let send = fabric.channel(path, r, ring::next(r, n));
+                let recv = fabric.channel(path, ring::prev(r, n), r);
+                let out = out_ptrs[r];
+                let input = &inputs[r];
+                scope.spawn(move || {
+                    // Own block first. SAFETY: regions (block b, extent
+                    // [eoff,eoff+elen)) are disjoint across the (path,
+                    // rank) threads sharing this output pointer.
+                    let own = unsafe { out.region(r * l + eoff, elen) };
+                    own.copy_from_slice(&input[eoff..eoff + elen]);
+                    for s in 0..n - 1 {
+                        let sb = ring::ag_send_block(r, s, n);
+                        let rb = ring::ag_send_block(ring::prev(r, n), s, n);
+                        let snd = unsafe { out.region(sb * l + eoff, elen) };
+                        let rcv = unsafe { out.region(rb * l + eoff, elen) };
+                        step_exchange(&send, &recv, snd, rcv, chunk_elems, false);
+                    }
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Multi-path pipelined Broadcast from rank 0, in place.
+pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32>]) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(bufs.len() == n);
+    let len = bufs[0].len();
+    anyhow::ensure!(bufs.iter().all(|b| b.len() == len));
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(covered == (len * 4) as u64);
+    let eext = elem_extents(extents);
+    let chunk_elems = (fabric.chunk_bytes() / 4).max(1);
+
+    let mut segs: Vec<Vec<&mut [f32]>> = Vec::with_capacity(n);
+    for buf in bufs.iter_mut() {
+        let mut rest: &mut [f32] = buf;
+        let mut per_path = Vec::with_capacity(eext.len());
+        for (_, _, elen) in &eext {
+            let (seg, tail) = rest.split_at_mut(*elen);
+            per_path.push(seg);
+            rest = tail;
+        }
+        segs.push(per_path);
+    }
+
+    std::thread::scope(|scope| {
+        for (r, per_path) in segs.into_iter().enumerate() {
+            for ((path, _, _), seg) in eext.iter().copied().zip(per_path) {
+                if seg.is_empty() {
+                    continue;
+                }
+                let send = (r + 1 < n).then(|| fabric.channel(path, r, r + 1));
+                let recv = (r > 0).then(|| fabric.channel(path, r - 1, r));
+                scope.spawn(move || {
+                    for chunk in seg.chunks_mut(chunk_elems) {
+                        if let Some(rc) = &recv {
+                            rc.recv_next(f32_as_bytes_mut(chunk));
+                        }
+                        if let Some(sc) = &send {
+                            sc.send_next(f32_as_bytes(chunk));
+                        }
+                    }
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+
+/// Per-block path slicing for operators whose unit is the *block* (one
+/// rank's share) rather than the whole vector: within every block, each
+/// path carries the same proportional extent, so ring blocks stay
+/// aligned across paths. Returns, for `path`, its (offset, len) in
+/// elements within a block of `block_elems`.
+fn block_slice(
+    extents: &PathExtents,
+    path: PathId,
+    block_elems: usize,
+) -> (usize, usize) {
+    // Rebuild a Shares-like proportional split from the global extents.
+    let total: u64 = extents.iter().map(|e| e.2).sum();
+    let mut off = 0usize;
+    for (i, (p, _, len)) in extents.iter().enumerate() {
+        let frac = *len as f64 / total as f64;
+        let mut elen = (frac * block_elems as f64).round() as usize;
+        if i == extents.len() - 1 {
+            elen = block_elems - off;
+        } else {
+            elen = elen.min(block_elems - off);
+        }
+        if *p == path {
+            return (off, elen);
+        }
+        off += elen;
+    }
+    (0, 0)
+}
+
+/// Multi-path ring ReduceScatter: `inputs[r]` (length L = n·B) →
+/// `outputs[r]` = the fully-reduced block `r` (length B). Blocks are
+/// `L/n` (L must divide evenly, the NCCL precondition).
+pub fn reduce_scatter_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(inputs.len() == n && outputs.len() == n);
+    let l = inputs[0].len();
+    anyhow::ensure!(l % n == 0, "message must divide into n equal blocks");
+    let b = l / n;
+    anyhow::ensure!(inputs.iter().all(|x| x.len() == l));
+    for o in outputs.iter_mut() {
+        o.resize(b, 0.0);
+    }
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(covered == (l * 4) as u64, "extents must cover the message");
+    let chunk_elems = fabric.chunk_bytes() / 4;
+    let paths: Vec<PathId> = extents.iter().map(|e| e.0).collect();
+
+    // Scratch working copies (the ring mutates in place).
+    let mut scratch: Vec<Vec<f32>> = inputs.to_vec();
+    let scratch_ptrs: Vec<RawSlice> = scratch
+        .iter_mut()
+        .map(|x| RawSlice(x.as_mut_ptr(), x.len()))
+        .collect();
+    let out_ptrs: Vec<RawSlice> = outputs
+        .iter_mut()
+        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .collect();
+
+    std::thread::scope(|scope| {
+        for r in 0..n {
+            for &path in &paths {
+                let (poff, plen) = block_slice(extents, path, b);
+                if plen == 0 {
+                    continue;
+                }
+                let send = fabric.channel(path, r, ring::next(r, n));
+                let recv = fabric.channel(path, ring::prev(r, n), r);
+                let sp = scratch_ptrs[r];
+                let op = out_ptrs[r];
+                scope.spawn(move || {
+                    // SAFETY: (path, rank) threads touch disjoint
+                    // (block-slice × rank) regions of the shared scratch
+                    // and output buffers.
+                    for s in 0..n - 1 {
+                        let sb = ring::rs_std_send_block(r, s, n);
+                        let rb = ring::rs_std_send_block(ring::prev(r, n), s, n);
+                        let snd =
+                            unsafe { op.carve(sp, sb * b + poff, plen) };
+                        let rcv =
+                            unsafe { op.carve_mut(sp, rb * b + poff, plen) };
+                        step_exchange(&send, &recv, snd, rcv, chunk_elems, true);
+                    }
+                    // Shifted schedule: rank r now owns block r (NCCL).
+                    let src = unsafe { op.carve(sp, r * b + poff, plen) };
+                    let dst = unsafe { op.region(poff, plen) };
+                    dst.copy_from_slice(src);
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Multi-path direct-exchange AllToAll: `inputs[r]` (length L = n·B) →
+/// `outputs[r]` where output block `s` = input block `r` of rank `s`.
+pub fn all_to_all_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(inputs.len() == n && outputs.len() == n);
+    let l = inputs[0].len();
+    anyhow::ensure!(l % n == 0, "message must divide into n equal blocks");
+    let b = l / n;
+    anyhow::ensure!(inputs.iter().all(|x| x.len() == l));
+    for o in outputs.iter_mut() {
+        o.resize(l, 0.0);
+    }
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(covered == (l * 4) as u64);
+    let chunk_elems = fabric.chunk_bytes() / 4;
+    let paths: Vec<PathId> = extents.iter().map(|e| e.0).collect();
+    let out_ptrs: Vec<RawSlice> = outputs
+        .iter_mut()
+        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .collect();
+
+    std::thread::scope(|scope| {
+        for r in 0..n {
+            for &path in &paths {
+                let (poff, plen) = block_slice(extents, path, b);
+                if plen == 0 {
+                    continue;
+                }
+                let input = &inputs[r];
+                let out = out_ptrs[r];
+                let fabric_ref = fabric;
+                scope.spawn(move || {
+                    // Own block: straight copy.
+                    let own = unsafe { out.region(r * b + poff, plen) };
+                    own.copy_from_slice(&input[r * b + poff..r * b + poff + plen]);
+                    for offset in 1..n {
+                        let dst = (r + offset) % n;
+                        let src = (r + n - offset) % n;
+                        let send = fabric_ref.channel(path, r, dst);
+                        let recv = fabric_ref.channel(path, src, r);
+                        let snd = &input[dst * b + poff..dst * b + poff + plen];
+                        let rcv = unsafe { out.region(src * b + poff, plen) };
+                        step_exchange(&send, &recv, snd, rcv, chunk_elems, false);
+                    }
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::shares::Shares;
+    use crate::memory::MemoryLedger;
+    use crate::util::rng::Rng;
+
+    fn fabric(n: usize) -> Fabric {
+        // Small chunks so multi-chunk pipelining is exercised.
+        Fabric::new(n, 64, MemoryLedger::new())
+    }
+
+    fn rand_bufs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|_| (0..len).map(|_| rng.range_f32(-8.0, 8.0)).collect())
+            .collect()
+    }
+
+    fn splits() -> Vec<Shares> {
+        vec![
+            Shares::nvlink_only(),
+            Shares::from_pcts(&[(PathId::Nvlink, 84.0), (PathId::Pcie, 16.0)]),
+            Shares::from_pcts(&[
+                (PathId::Nvlink, 81.0),
+                (PathId::Pcie, 12.0),
+                (PathId::Rdma, 7.0),
+            ]),
+            Shares::from_pcts(&[
+                (PathId::Nvlink, 34.0),
+                (PathId::Pcie, 33.0),
+                (PathId::Rdma, 33.0),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn allreduce_lossless_under_any_split() {
+        for n in [2usize, 4, 8] {
+            let len = 503; // prime: exercises ragged blocks and chunks
+            let orig = rand_bufs(n, len, 42 + n as u64);
+            let expect: Vec<f32> = (0..len)
+                .map(|i| orig.iter().map(|b| b[i]).sum::<f32>())
+                .collect();
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((len * 4) as u64, 4);
+                let mut bufs = orig.clone();
+                all_reduce_f32(&f, &ext, &mut bufs).unwrap();
+                for (r, b) in bufs.iter().enumerate() {
+                    // Ring AR adds in a fixed order per element; compare
+                    // against *some* summation order with tight tolerance,
+                    // and require bit-identical results across ranks —
+                    // the stronger reproducibility property.
+                    for i in 0..len {
+                        assert!(
+                            (b[i] - expect[i]).abs() <= 1e-4 * expect[i].abs().max(1.0),
+                            "rank {r} elem {i} under {shares}: {} vs {}",
+                            b[i],
+                            expect[i]
+                        );
+                    }
+                    assert_eq!(b, &bufs[0], "ranks disagree under {shares}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_lossless_under_any_split() {
+        for n in [2usize, 4, 8] {
+            let len = 257;
+            let inputs = rand_bufs(n, len, 7 + n as u64);
+            let mut expect = Vec::new();
+            for b in &inputs {
+                expect.extend_from_slice(b);
+            }
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((len * 4) as u64, 4);
+                let mut outputs = vec![Vec::new(); n];
+                all_gather_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                for (r, o) in outputs.iter().enumerate() {
+                    assert_eq!(o, &expect, "rank {r} output wrong under {shares}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_lossless() {
+        for n in [2usize, 4, 8] {
+            let len = 130;
+            let root: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((len * 4) as u64, 4);
+                let mut bufs = vec![vec![0f32; len]; n];
+                bufs[0].copy_from_slice(&root);
+                broadcast_f32(&f, &ext, &mut bufs).unwrap();
+                for b in &bufs {
+                    assert_eq!(b, &root);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_repeated_calls_reuse_channels() {
+        // Back-to-back collectives over the same fabric must stay correct
+        // (the monotonic counters' whole purpose — §3.1).
+        let n = 4;
+        let len = 96;
+        let f = fabric(n);
+        let shares = Shares::from_pcts(&[(PathId::Nvlink, 70.0), (PathId::Pcie, 30.0)]);
+        let ext = shares.to_extents((len * 4) as u64, 4);
+        for iter in 0..5 {
+            let orig = rand_bufs(n, len, 100 + iter);
+            let expect: Vec<f32> = (0..len)
+                .map(|i| orig.iter().map(|b| b[i]).sum::<f32>())
+                .collect();
+            let mut bufs = orig.clone();
+            all_reduce_f32(&f, &ext, &mut bufs).unwrap();
+            for b in &bufs {
+                for i in 0..len {
+                    assert!((b[i] - expect[i]).abs() <= 1e-4 * expect[i].abs().max(1.0));
+                }
+            }
+        }
+        let chans = f.channel_count();
+        assert!(chans <= 2 * n * 2, "channels not reused: {chans}");
+    }
+
+    #[test]
+    fn reduce_scatter_lossless_under_any_split() {
+        for n in [2usize, 4, 8] {
+            let b = 96; // block elems
+            let l = n * b;
+            let inputs = rand_bufs(n, l, 21 + n as u64);
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((l * 4) as u64, 4);
+                let mut outputs = vec![Vec::new(); n];
+                reduce_scatter_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                for (r, o) in outputs.iter().enumerate() {
+                    assert_eq!(o.len(), b);
+                    for i in 0..b {
+                        let want: f32 = inputs.iter().map(|x| x[r * b + i]).sum();
+                        assert!(
+                            (o[i] - want).abs() <= 1e-4 * want.abs().max(1.0),
+                            "n={n} rank {r} elem {i} under {shares}: {} vs {}",
+                            o[i],
+                            want
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_is_block_transpose() {
+        for n in [2usize, 4, 8] {
+            let b = 64;
+            let l = n * b;
+            let inputs = rand_bufs(n, l, 77 + n as u64);
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((l * 4) as u64, 4);
+                let mut outputs = vec![Vec::new(); n];
+                all_to_all_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                for r in 0..n {
+                    for src in 0..n {
+                        assert_eq!(
+                            &outputs[r][src * b..(src + 1) * b],
+                            &inputs[src][r * b..(r + 1) * b],
+                            "n={n} out[{r}] block {src} under {shares}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let f = fabric(2);
+        let ext = Shares::nvlink_only().to_extents(16, 4);
+        let mut bufs = vec![vec![0f32; 4], vec![0f32; 5]];
+        assert!(all_reduce_f32(&f, &ext, &mut bufs).is_err());
+    }
+}

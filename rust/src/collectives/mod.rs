@@ -1,0 +1,135 @@
+//! Collective operations over multiple heterogeneous paths.
+//!
+//! Each collective has two faces kept in lockstep:
+//!
+//! * a **timing** face — [`schedule`] compiles the ring schedule of every
+//!   active path into one [`crate::sim::TaskGraph`] (so cross-path
+//!   contention is modelled) and runs it on the DES, yielding per-path
+//!   completion times for the balancer and the reported bandwidth;
+//! * a **functional** face — [`exec`] runs the same ring schedule with
+//!   real threads moving real bytes through [`crate::memory`] staging
+//!   channels under the §3.1 counter-semaphore protocol, making the
+//!   paper's "lossless" claim bit-checkable.
+//!
+//! Supported operators: AllReduce and AllGather (the paper's evaluation,
+//! §5.1) plus ReduceScatter, Broadcast and AllToAll (its §6 future work).
+
+pub mod allgather;
+pub mod allreduce;
+pub mod alltoall;
+pub mod broadcast;
+pub mod exec;
+pub mod multipath;
+pub mod reduce_scatter;
+pub mod ring;
+pub mod schedule;
+pub mod tree;
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Which collective operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Broadcast,
+    AllToAll,
+}
+
+impl CollectiveKind {
+    /// Sequential ring steps — the latency amplification factor of §5.3
+    /// ("A Ring AllReduce requires 2(N−1) sequential steps, which is
+    /// double the N−1 steps of AllGather").
+    pub fn ring_steps(self, n: usize) -> usize {
+        match self {
+            CollectiveKind::AllReduce => 2 * (n - 1),
+            CollectiveKind::AllGather
+            | CollectiveKind::ReduceScatter
+            | CollectiveKind::Broadcast => n - 1,
+            CollectiveKind::AllToAll => n - 1,
+        }
+    }
+
+    /// Bytes each GPU puts on the wire for a message of `msg` bytes
+    /// (paper convention: for AllGather/AllToAll `msg` is the per-rank
+    /// contribution; for AllReduce it is the full vector length).
+    pub fn wire_bytes_per_gpu(self, msg: u64, n: usize) -> u64 {
+        let n64 = n as u64;
+        match self {
+            // RS: (n-1) chunks of msg/n, then AG: (n-1) chunks of msg/n.
+            CollectiveKind::AllReduce => 2 * (n64 - 1) * (msg / n64),
+            // Forward every block except your own once.
+            CollectiveKind::AllGather => (n64 - 1) * msg,
+            CollectiveKind::ReduceScatter => (n64 - 1) * (msg / n64),
+            CollectiveKind::Broadcast => msg,
+            // Send a distinct msg/n block to each peer (ring-routed).
+            CollectiveKind::AllToAll => (n64 - 1) * (msg / n64),
+        }
+    }
+
+    /// Paper metric: algorithm bandwidth = message size / completion time
+    /// (the nccl-tests convention the paper reports, §5.2).
+    pub fn algbw_gbps(self, msg_bytes: u64, seconds: f64) -> f64 {
+        debug_assert!(seconds > 0.0);
+        msg_bytes as f64 / seconds / 1e9
+    }
+}
+
+impl FromStr for CollectiveKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "allreduce" | "all_reduce" => CollectiveKind::AllReduce,
+            "allgather" | "all_gather" => CollectiveKind::AllGather,
+            "reduce_scatter" | "reducescatter" => CollectiveKind::ReduceScatter,
+            "broadcast" | "bcast" => CollectiveKind::Broadcast,
+            "alltoall" | "all_to_all" => CollectiveKind::AllToAll,
+            other => anyhow::bail!("unknown collective '{other}'"),
+        })
+    }
+}
+
+impl fmt::Display for CollectiveKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            CollectiveKind::AllReduce => "allreduce",
+            CollectiveKind::AllGather => "allgather",
+            CollectiveKind::ReduceScatter => "reduce_scatter",
+            CollectiveKind::Broadcast => "broadcast",
+            CollectiveKind::AllToAll => "alltoall",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_counts_match_paper() {
+        assert_eq!(CollectiveKind::AllReduce.ring_steps(8), 14);
+        assert_eq!(CollectiveKind::AllGather.ring_steps(8), 7);
+        assert_eq!(CollectiveKind::AllReduce.ring_steps(2), 2);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        // AR on 8 GPUs: 2·7·(S/8) = 1.75·S per GPU.
+        assert_eq!(
+            CollectiveKind::AllReduce.wire_bytes_per_gpu(800, 8),
+            2 * 7 * 100
+        );
+        // AG on 4 GPUs: 3·S.
+        assert_eq!(CollectiveKind::AllGather.wire_bytes_per_gpu(100, 4), 300);
+    }
+
+    #[test]
+    fn algbw_definition() {
+        // 256 MB in 2 ms → 128 GB/s, independent of operator.
+        let bw = CollectiveKind::AllReduce.algbw_gbps(256 * (1 << 20), 256.0 * (1 << 20) as f64 / 128e9);
+        assert!((bw - 128.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,176 @@
+//! High-level multi-path collective runner: shares → spec → DES outcome.
+//!
+//! This is the piece the balancer iterates against ("MeasurePathTimings"
+//! in Algorithm 1) and the Communicator uses to time production calls.
+
+use super::schedule::{simulate, MultipathSpec, PathAssignment, SimOutcome};
+use super::CollectiveKind;
+use crate::balancer::shares::Shares;
+use crate::links::calib::Calibration;
+use crate::links::{PathId, PathModel};
+use crate::sim::SimTime;
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// A bound (topology, calibration, operator, rank-count) context that can
+/// time any message size under any share distribution.
+pub struct MultipathCollective<'t> {
+    pub topo: &'t Topology,
+    pub calib: Calibration,
+    pub kind: CollectiveKind,
+    pub n: usize,
+}
+
+/// One timed invocation.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub outcome: SimOutcome,
+    pub msg_bytes: u64,
+    pub kind: CollectiveKind,
+}
+
+impl RunReport {
+    /// Paper metric (§5.2): algorithm bandwidth in GB/s.
+    pub fn algbw_gbps(&self) -> f64 {
+        self.kind
+            .algbw_gbps(self.msg_bytes, self.outcome.total.as_secs_f64())
+    }
+
+    pub fn total(&self) -> SimTime {
+        self.outcome.total
+    }
+
+    /// (path, completion) for each active path, for the Evaluator.
+    pub fn path_times(&self) -> Vec<(PathId, SimTime)> {
+        self.outcome
+            .per_path
+            .iter()
+            .filter(|p| p.bytes > 0)
+            .map(|p| (p.path, p.time))
+            .collect()
+    }
+}
+
+impl<'t> MultipathCollective<'t> {
+    pub fn new(topo: &'t Topology, calib: Calibration, kind: CollectiveKind, n: usize) -> Self {
+        MultipathCollective {
+            topo,
+            calib,
+            kind,
+            n,
+        }
+    }
+
+    /// Path model (calibrated) for this operator/rank-count.
+    pub fn model(&self, path: PathId) -> PathModel {
+        match path {
+            PathId::Nvlink => {
+                self.calib
+                    .nvlink_model(self.kind, self.n, self.topo.spec.nvlink_unidir_bps())
+            }
+            PathId::Pcie => self.calib.pcie_model(self.topo.spec.pcie_unidir_bps(), self.n),
+            PathId::Rdma => self.calib.rdma_model(self.topo.spec.nic_unidir_bps(), self.n),
+        }
+    }
+
+    /// Compile + simulate one collective of `msg_bytes` under `shares`.
+    pub fn run(&self, msg_bytes: u64, shares: &Shares) -> Result<RunReport> {
+        let extents = shares.to_extents(msg_bytes, 4);
+        let paths = extents
+            .iter()
+            .map(|(p, _, len)| PathAssignment {
+                path: *p,
+                bytes: *len,
+                model: self.model(*p),
+            })
+            .collect();
+        let spec = MultipathSpec {
+            kind: self.kind,
+            n: self.n,
+            msg_bytes,
+            paths,
+        };
+        let outcome = simulate(self.topo, &spec, self.calib.reduce_bps)?;
+        Ok(RunReport {
+            outcome,
+            msg_bytes,
+            kind: self.kind,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    fn ctx(topo: &Topology, kind: CollectiveKind, n: usize) -> MultipathCollective<'_> {
+        MultipathCollective::new(topo, Calibration::h800(), kind, n)
+    }
+
+    /// The paper's central claim in miniature: offloading a moderate share
+    /// to PCIe+RDMA beats NVLink-only for 8-GPU AllGather at 256 MB.
+    #[test]
+    fn aux_offload_beats_nvlink_only_for_allgather8() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let c = ctx(&topo, CollectiveKind::AllGather, 8);
+        let msg = 256u64 << 20;
+        let base = c.run(msg, &Shares::nvlink_only()).unwrap();
+        let offl = c
+            .run(
+                msg,
+                &Shares::from_pcts(&[
+                    (PathId::Nvlink, 83.0),
+                    (PathId::Pcie, 10.0),
+                    (PathId::Rdma, 7.0),
+                ]),
+            )
+            .unwrap();
+        let gain = base.total().as_secs_f64() / offl.total().as_secs_f64() - 1.0;
+        assert!(
+            gain > 0.10,
+            "expected >10% gain from offload, got {:.1}%",
+            gain * 100.0
+        );
+    }
+
+    /// Over-offloading must *hurt*: the slow path becomes the bottleneck
+    /// (the strawman the paper warns about in §1).
+    #[test]
+    fn over_offloading_throttles() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let c = ctx(&topo, CollectiveKind::AllGather, 8);
+        let msg = 256u64 << 20;
+        let sane = c
+            .run(
+                msg,
+                &Shares::from_pcts(&[(PathId::Nvlink, 85.0), (PathId::Pcie, 15.0)]),
+            )
+            .unwrap();
+        let greedy = c
+            .run(
+                msg,
+                &Shares::from_pcts(&[(PathId::Nvlink, 50.0), (PathId::Pcie, 50.0)]),
+            )
+            .unwrap();
+        assert!(greedy.total() > sane.total());
+    }
+
+    /// Per-path completion times are what the balancer equalizes: under a
+    /// deliberately skewed split the PCIe path must finish far later.
+    #[test]
+    fn skewed_split_shows_imbalance() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let c = ctx(&topo, CollectiveKind::AllGather, 4);
+        let msg = 128u64 << 20;
+        let rep = c
+            .run(
+                msg,
+                &Shares::from_pcts(&[(PathId::Nvlink, 50.0), (PathId::Pcie, 50.0)]),
+            )
+            .unwrap();
+        let t_nv = rep.outcome.time_of(PathId::Nvlink).unwrap();
+        let t_pc = rep.outcome.time_of(PathId::Pcie).unwrap();
+        assert!(t_pc.as_secs_f64() > 2.0 * t_nv.as_secs_f64());
+    }
+}

@@ -1,0 +1,71 @@
+//! Ring ReduceScatter — timing-graph construction (§6 extension: the
+//! paper plans "increasing the pipeline depth for the ReduceScatter part"
+//! — this standalone operator is also the unit the L1 Pallas combine
+//! kernel accelerates).
+
+use super::ring;
+use super::schedule::GraphBuilder;
+use crate::links::PathId;
+use crate::sim::TaskId;
+
+/// Append ReduceScatter tasks for a `msg`-byte vector on `path`.
+pub fn build_tasks(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
+    let n = b.n;
+    let block = msg.div_ceil(n as u64);
+    let mut prev_arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for s in 0..n - 1 {
+        let mut arrivals: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let deps: Vec<Vec<TaskId>> = if s == 0 {
+                Vec::new()
+            } else {
+                prev_arrivals[ring::prev(r, n)]
+                    .iter()
+                    .map(|t| vec![*t])
+                    .collect()
+            };
+            let a = b.send_block(path, r, ring::next(r, n), block, &deps, true, true, tag);
+            arrivals.push(a);
+        }
+        prev_arrivals = arrivals;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::collectives::schedule::{simulate, MultipathSpec, PathAssignment};
+    use crate::collectives::CollectiveKind;
+    use crate::config::presets::Preset;
+    use crate::links::calib::Calibration;
+    use crate::links::PathId;
+    use crate::topology::Topology;
+
+    /// ReduceScatter is the first half of AllReduce: its completion must
+    /// be roughly half an AllReduce of the same size.
+    #[test]
+    fn is_half_an_allreduce() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let calib = Calibration::h800();
+        let s = 256u64 << 20;
+        let mut t = Vec::new();
+        for kind in [CollectiveKind::ReduceScatter, CollectiveKind::AllReduce] {
+            let model = calib.nvlink_model(kind, 8, topo.spec.nvlink_unidir_bps());
+            let spec = MultipathSpec {
+                kind,
+                n: 8,
+                msg_bytes: s,
+                paths: vec![PathAssignment {
+                    path: PathId::Nvlink,
+                    bytes: s,
+                    model,
+                }],
+            };
+            t.push(simulate(&topo, &spec, 60e9).unwrap().total.as_secs_f64());
+        }
+        let ratio = t[0] / t[1];
+        assert!(
+            (0.4..0.6).contains(&ratio),
+            "RS/AR time ratio {ratio:.2} outside [0.4, 0.6]"
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Ring-schedule arithmetic shared by the timing and functional faces.
+//!
+//! The Communicator "defines the topology for intra-node data exchange,
+//! adopting a classic yet efficient ring-based model" (§3.1). All
+//! collectives here use the canonical NCCL ring numbering: rank `r` sends
+//! to `(r+1) % n` and receives from `(r-1+n) % n`.
+
+/// Next rank on the ring.
+pub fn next(r: usize, n: usize) -> usize {
+    (r + 1) % n
+}
+
+/// Previous rank on the ring.
+pub fn prev(r: usize, n: usize) -> usize {
+    (r + n - 1) % n
+}
+
+/// AllGather: the block index rank `r` *sends* at step `s` (0-based).
+/// Step 0 sends your own block; afterwards you forward what you received.
+pub fn ag_send_block(r: usize, s: usize, n: usize) -> usize {
+    (r + n - s) % n
+}
+
+/// ReduceScatter phase of ring AllReduce: block rank `r` sends at step
+/// `s`. After the n−1 steps, rank `r` owns the fully-reduced block
+/// `rs_owned_block(r, n)`.
+pub fn rs_send_block(r: usize, s: usize, n: usize) -> usize {
+    (r + n - s) % n
+}
+
+/// The block rank `r` holds fully reduced after the RS phase.
+pub fn rs_owned_block(r: usize, n: usize) -> usize {
+    (r + 1) % n
+}
+
+/// Standalone ReduceScatter (NCCL convention: rank `r` outputs block
+/// `r`): the schedule above shifted by one so the *last* block to land
+/// at `r` is block `r` itself.
+pub fn rs_std_send_block(r: usize, s: usize, n: usize) -> usize {
+    (r + n - s - 1) % n
+}
+
+/// AllGather phase of ring AllReduce: block rank `r` sends at step `s`
+/// (it starts by sending the block it just finished reducing).
+pub fn ar_ag_send_block(r: usize, s: usize, n: usize) -> usize {
+    (r + 1 + n - s) % n
+}
+
+/// Split `total` into `parts` near-equal contiguous extents, earlier parts
+/// larger by at most one `unit`. Extents are multiples of `unit` except
+/// possibly the last. Returns (offset, len) pairs covering `total`.
+pub fn split_extents(total: u64, parts: usize, unit: u64) -> Vec<(u64, u64)> {
+    assert!(parts > 0);
+    assert!(unit > 0);
+    let units = total / unit;
+    let rem = total % unit;
+    let base = units / parts as u64;
+    let extra = units % parts as u64;
+    let mut out = Vec::with_capacity(parts);
+    let mut off = 0u64;
+    for p in 0..parts as u64 {
+        let mut len = (base + u64::from(p < extra)) * unit;
+        if p == parts as u64 - 1 {
+            len += rem;
+        }
+        out.push((off, len));
+        off += len;
+    }
+    debug_assert_eq!(off, total);
+    out
+}
+
+/// Chunk a block into staging-buffer-sized pieces; returns byte lengths.
+pub fn chunk_sizes(block: u64, chunk: u64) -> Vec<u64> {
+    assert!(chunk > 0);
+    if block == 0 {
+        return vec![0];
+    }
+    let mut v = Vec::with_capacity(block.div_ceil(chunk) as usize);
+    let mut left = block;
+    while left > 0 {
+        let c = left.min(chunk);
+        v.push(c);
+        left -= c;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbours() {
+        assert_eq!(next(7, 8), 0);
+        assert_eq!(prev(0, 8), 7);
+    }
+
+    /// In ring AG, what `r` sends at step `s` must be what `prev(r)` sent
+    /// at step `s-1` (you forward what you just received).
+    #[test]
+    fn ag_forwarding_invariant() {
+        for n in [2usize, 4, 8] {
+            for r in 0..n {
+                for s in 1..n - 1 {
+                    assert_eq!(ag_send_block(r, s, n), ag_send_block(prev(r, n), s - 1, n));
+                }
+            }
+        }
+    }
+
+    /// After n−1 RS steps every block has visited every rank exactly once
+    /// and rank r ends owning block (r+1)%n fully reduced.
+    #[test]
+    fn rs_ownership() {
+        let n = 8;
+        for r in 0..n {
+            // The block r receives at the last step is the one it owns.
+            let received_last = rs_send_block(prev(r, n), n - 2, n);
+            assert_eq!(received_last, rs_owned_block(r, n));
+        }
+    }
+
+    #[test]
+    fn rs_std_ends_owning_own_block() {
+        for n in [2usize, 4, 8] {
+            for r in 0..n {
+                // Forwarding invariant + final ownership.
+                for s in 1..n - 1 {
+                    assert_eq!(
+                        rs_std_send_block(r, s, n),
+                        rs_std_send_block(prev(r, n), s - 1, n)
+                    );
+                }
+                assert_eq!(rs_std_send_block(prev(r, n), n - 2, n), r);
+            }
+        }
+    }
+
+    #[test]
+    fn ar_ag_starts_with_owned_block() {
+        let n = 8;
+        for r in 0..n {
+            assert_eq!(ar_ag_send_block(r, 0, n), rs_owned_block(r, n));
+        }
+    }
+
+    #[test]
+    fn split_extents_cover_and_align() {
+        let ext = split_extents(100, 3, 8);
+        assert_eq!(ext.iter().map(|e| e.1).sum::<u64>(), 100);
+        assert_eq!(ext[0].0, 0);
+        for w in ext.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0);
+            assert_eq!(w[0].1 % 8, 0, "non-final extents must be unit-aligned");
+        }
+    }
+
+    #[test]
+    fn split_extents_zero_parts_edge() {
+        let ext = split_extents(0, 3, 4);
+        assert_eq!(ext.iter().map(|e| e.1).sum::<u64>(), 0);
+        assert_eq!(ext.len(), 3);
+    }
+
+    #[test]
+    fn chunking() {
+        assert_eq!(chunk_sizes(10, 4), vec![4, 4, 2]);
+        assert_eq!(chunk_sizes(8, 4), vec![4, 4]);
+        assert_eq!(chunk_sizes(3, 4), vec![3]);
+        assert_eq!(chunk_sizes(0, 4), vec![0]);
+    }
+}

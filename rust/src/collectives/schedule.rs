@@ -1,0 +1,470 @@
+//! Timing-graph compilation for multi-path collectives.
+//!
+//! [`GraphBuilder`] clones the node's raw resource pool and adds, per
+//! (path, GPU, direction), a *protocol resource* whose capacity is the
+//! path's calibrated effective rate. Chunk flows route through both their
+//! protocol resource and the raw physical links, so
+//!
+//! * a path never exceeds its single-stream protocol efficiency (§2.2.3 —
+//!   and extra parallel streams on one path gain nothing, reproducing the
+//!   CUDA-driver serialization observation), and
+//! * different paths still contend for the *shared physical lane*
+//!   (GPU→NIC and GPU→host both crossing `pcie.up[g]`, §2.2.2).
+//!
+//! [`simulate`] executes one multi-path collective and reports per-path
+//! completion times — the observable the two-stage balancer consumes.
+
+use super::ring::chunk_sizes;
+use super::CollectiveKind;
+use crate::links::{PathId, PathModel};
+use crate::sim::{Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind};
+use crate::topology::Topology;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Traffic assigned to one path by the balancer.
+#[derive(Debug, Clone, Copy)]
+pub struct PathAssignment {
+    pub path: PathId,
+    pub bytes: u64,
+    pub model: PathModel,
+}
+
+/// One multi-path collective invocation.
+#[derive(Debug, Clone)]
+pub struct MultipathSpec {
+    pub kind: CollectiveKind,
+    pub n: usize,
+    /// Total message bytes (paper convention per operator).
+    pub msg_bytes: u64,
+    /// Active paths; `bytes` must sum to `msg_bytes`.
+    pub paths: Vec<PathAssignment>,
+}
+
+impl MultipathSpec {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n >= 2, "collective needs ≥2 ranks");
+        anyhow::ensure!(!self.paths.is_empty(), "no active paths");
+        let sum: u64 = self.paths.iter().map(|p| p.bytes).sum();
+        anyhow::ensure!(
+            sum == self.msg_bytes,
+            "path bytes {} != message bytes {}",
+            sum,
+            self.msg_bytes
+        );
+        Ok(())
+    }
+}
+
+/// Completion of one path within a collective.
+#[derive(Debug, Clone, Copy)]
+pub struct PathTiming {
+    pub path: PathId,
+    pub bytes: u64,
+    pub time: SimTime,
+}
+
+/// DES outcome of one collective.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Slowest path = collective completion.
+    pub total: SimTime,
+    pub per_path: Vec<PathTiming>,
+    pub events: u64,
+    pub tasks: usize,
+}
+
+impl SimOutcome {
+    pub fn time_of(&self, path: PathId) -> Option<SimTime> {
+        self.per_path.iter().find(|p| p.path == path).map(|p| p.time)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum Dir {
+    Up,
+    Down,
+}
+
+/// Builds the combined task graph for one collective invocation.
+pub struct GraphBuilder<'t> {
+    pub topo: &'t Topology,
+    pub pool: ResourcePool,
+    pub graph: TaskGraph,
+    pub n: usize,
+    models: HashMap<PathId, PathModel>,
+    proto: HashMap<(PathId, usize, Dir), ResourceId>,
+    reduce_bps: f64,
+}
+
+impl<'t> GraphBuilder<'t> {
+    pub fn new(
+        topo: &'t Topology,
+        n: usize,
+        models: &[(PathId, PathModel)],
+        reduce_bps: f64,
+    ) -> Self {
+        assert!(n >= 2 && n <= topo.n_gpus());
+        let mut pool = topo.pool.clone();
+        let mut proto = HashMap::new();
+        for (path, model) in models {
+            for g in 0..n {
+                proto.insert(
+                    (*path, g, Dir::Up),
+                    pool.add(format!("proto.{path}.up.gpu{g}"), model.rate_cap),
+                );
+                if *path == PathId::Pcie {
+                    // Staged path caps its ingress leg independently.
+                    proto.insert(
+                        (*path, g, Dir::Down),
+                        pool.add(format!("proto.{path}.down.gpu{g}"), model.rate_cap),
+                    );
+                }
+            }
+        }
+        GraphBuilder {
+            topo,
+            pool,
+            graph: TaskGraph::new(),
+            n,
+            models: models.iter().copied().collect(),
+            proto,
+            reduce_bps,
+        }
+    }
+
+    pub fn model(&self, path: PathId) -> PathModel {
+        self.models[&path]
+    }
+
+    fn proto_res(&self, path: PathId, gpu: usize, dir: Dir) -> ResourceId {
+        self.proto[&(path, gpu, dir)]
+    }
+
+    /// Chunk lengths for one ring-step block on `path`.
+    pub fn chunks_for(&self, path: PathId, block: u64) -> Vec<u64> {
+        chunk_sizes(block, self.models[&path].chunk_bytes)
+    }
+
+    /// Emit the tasks that move one ring-step block `src → dst` on `path`.
+    ///
+    /// `deps_per_chunk`: per-chunk "data available at src" dependencies
+    /// (from the previous ring step); empty slice when the data is locally
+    /// resident. `charge_step_latency` attaches the path's per-step α to
+    /// the first chunk. `reduce_after` appends the staged-path reduction
+    /// cost (ReduceScatter consumer combining out of the staging buffer).
+    ///
+    /// Returns the per-chunk "data available at dst" task ids.
+    pub fn send_block(
+        &mut self,
+        path: PathId,
+        src: usize,
+        dst: usize,
+        block: u64,
+        deps_per_chunk: &[Vec<TaskId>],
+        charge_step_latency: bool,
+        reduce_after: bool,
+        tag: u32,
+    ) -> Vec<TaskId> {
+        let model = self.models[&path];
+        let sizes = self.chunks_for(path, block);
+        debug_assert!(deps_per_chunk.is_empty() || deps_per_chunk.len() == sizes.len());
+        let mut arrivals = Vec::with_capacity(sizes.len());
+        // Slot-reuse gating for the double-buffered staged path.
+        let mut h2d_ids: Vec<TaskId> = Vec::new();
+
+        // Per-step protocol latency gates *every* chunk of the step (the
+        // launch/doorbell happens before any byte moves); it fires once
+        // the step's first data is available at the sender. RS-phase
+        // steps additionally pay the staged read-modify-write combine
+        // coordination cost (see links::calib).
+        let step_lat = if reduce_after {
+            model.step_latency + model.reduce_step_latency
+        } else {
+            model.step_latency
+        };
+        let gate: Option<TaskId> = if charge_step_latency && step_lat > SimTime::ZERO {
+            let gate_deps = deps_per_chunk.first().cloned().unwrap_or_default();
+            Some(self.graph.add_tagged(
+                TaskKind::Delay { duration: step_lat },
+                gate_deps,
+                tag,
+            ))
+        } else {
+            None
+        };
+
+        // FIFO egress: chunk c may not start before chunk c-1 left the
+        // sender (real rings stream chunks in order; without this, fair
+        // sharing would let all chunks finish simultaneously and the
+        // cross-step pipeline could never fill).
+        let mut prev_egress: Option<TaskId> = None;
+
+        for (c, &bytes) in sizes.iter().enumerate() {
+            let latency = SimTime::ZERO;
+            let mut deps: Vec<TaskId> = deps_per_chunk.get(c).cloned().unwrap_or_default();
+            if let Some(g) = gate {
+                deps.push(g);
+            }
+            if let Some(pe) = prev_egress {
+                deps.push(pe);
+            }
+
+            let arrival = match path {
+                PathId::Nvlink => {
+                    let route = vec![
+                        self.proto_res(path, src, Dir::Up),
+                        self.topo.nvlink_up[src],
+                        self.topo.nvlink_down[dst],
+                    ];
+                    let t = self.graph.add_tagged(
+                        TaskKind::Transfer {
+                            bytes,
+                            route,
+                            weight: 1.0,
+                            latency,
+                            rate_cap: f64::INFINITY,
+                        },
+                        deps,
+                        tag,
+                    );
+                    prev_egress = Some(t);
+                    t
+                }
+                PathId::Pcie => {
+                    // Producer-D2H into the pinned buffer on src's NUMA
+                    // node, then H2CD out of it — double-buffered: chunk c
+                    // may not stage until chunk c-2 has drained (§3.1).
+                    if c >= 2 {
+                        deps.push(h2d_ids[c - 2]);
+                    }
+                    let mut d2h_route = vec![self.proto_res(path, src, Dir::Up)];
+                    d2h_route.extend(self.topo.pcie_d2h_route(src));
+                    let d2h = self.graph.add_tagged(
+                        TaskKind::Transfer {
+                            bytes,
+                            route: d2h_route,
+                            weight: 1.0,
+                            latency,
+                            rate_cap: f64::INFINITY,
+                        },
+                        deps,
+                        tag,
+                    );
+                    prev_egress = Some(d2h);
+                    let mut h2d_route = vec![self.proto_res(path, dst, Dir::Down)];
+                    h2d_route.extend(self.topo.pcie_h2d_route(src, dst));
+                    let h2d = self.graph.add_tagged(
+                        TaskKind::Transfer {
+                            bytes,
+                            route: h2d_route,
+                            weight: 1.0,
+                            latency: SimTime::ZERO,
+                            rate_cap: f64::INFINITY,
+                        },
+                        vec![d2h],
+                        tag,
+                    );
+                    h2d_ids.push(h2d);
+                    if reduce_after && bytes > 0 {
+                        // Consumer combines the staged chunk into its
+                        // accumulator at host-read speed.
+                        self.graph.add_tagged(
+                            TaskKind::Delay {
+                                duration: SimTime::for_transfer(bytes, self.reduce_bps),
+                            },
+                            vec![h2d],
+                            tag,
+                        )
+                    } else {
+                        h2d
+                    }
+                }
+                PathId::Rdma => {
+                    let mut route = vec![self.proto_res(path, src, Dir::Up)];
+                    route.extend(self.topo.rdma_route(src, dst));
+                    let t = self.graph.add_tagged(
+                        TaskKind::Transfer {
+                            bytes,
+                            route,
+                            weight: 1.0,
+                            latency,
+                            rate_cap: f64::INFINITY,
+                        },
+                        deps,
+                        tag,
+                    );
+                    prev_egress = Some(t);
+                    t
+                }
+            };
+            arrivals.push(arrival);
+        }
+        arrivals
+    }
+}
+
+/// Execute one multi-path collective on the DES; returns per-path times.
+pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Result<SimOutcome> {
+    spec.validate()?;
+    let models: Vec<(PathId, PathModel)> =
+        spec.paths.iter().map(|p| (p.path, p.model)).collect();
+    let mut b = GraphBuilder::new(topo, spec.n, &models, reduce_bps);
+    for pa in &spec.paths {
+        if pa.bytes == 0 {
+            continue;
+        }
+        let tag = pa.path.tag();
+        match spec.kind {
+            CollectiveKind::AllGather => {
+                super::allgather::build_tasks(&mut b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::AllReduce => {
+                super::allreduce::build_tasks(&mut b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::ReduceScatter => {
+                super::reduce_scatter::build_tasks(&mut b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::Broadcast => {
+                super::broadcast::build_tasks(&mut b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::AllToAll => {
+                super::alltoall::build_tasks(&mut b, pa.path, pa.bytes, tag)
+            }
+        }
+    }
+    let tasks = b.graph.len();
+    let sched = Engine::new(&b.pool).run(&b.graph)?;
+    let per_path = spec
+        .paths
+        .iter()
+        .map(|pa| PathTiming {
+            path: pa.path,
+            bytes: pa.bytes,
+            time: sched
+                .tag_finish(&b.graph, pa.path.tag())
+                .unwrap_or(SimTime::ZERO),
+        })
+        .collect::<Vec<_>>();
+    Ok(SimOutcome {
+        total: sched.makespan,
+        per_path,
+        events: sched.events,
+        tasks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+    use crate::links::calib::Calibration;
+
+    fn h800() -> Topology {
+        Topology::build(&Preset::H800.spec())
+    }
+
+    fn nv_model(kind: CollectiveKind, n: usize, topo: &Topology) -> PathModel {
+        Calibration::h800().nvlink_model(kind, n, topo.spec.nvlink_unidir_bps())
+    }
+
+    #[test]
+    fn allgather_nvlink_only_matches_alpha_beta_model() {
+        // 8-GPU AG, 256 MB per rank, NVLink only: the DES should land on
+        // t ≈ 7α + 7S/B_eff — the α-β fit the calibration encodes.
+        let topo = h800();
+        let kind = CollectiveKind::AllGather;
+        let model = nv_model(kind, 8, &topo);
+        let s = 256u64 << 20;
+        let spec = MultipathSpec {
+            kind,
+            n: 8,
+            msg_bytes: s,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: s,
+                model,
+            }],
+        };
+        let out = simulate(&topo, &spec, 60e9).unwrap();
+        let expect = 7.0 * 12e-6 + 7.0 * s as f64 / 148e9;
+        let got = out.total.as_secs_f64();
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "got {got:.6}, expect {expect:.6}"
+        );
+        // Paper reports 21 GB/s algbw for this configuration.
+        let algbw = kind.algbw_gbps(s, got);
+        assert!((algbw - 21.0).abs() < 1.5, "algbw {algbw:.1} vs paper 21");
+    }
+
+    #[test]
+    fn allreduce_nvlink_only_matches_paper_baseline() {
+        // AR 2 GPUs 256 MB → paper NCCL column says 139 GB/s.
+        let topo = h800();
+        let kind = CollectiveKind::AllReduce;
+        let model = nv_model(kind, 2, &topo);
+        let s = 256u64 << 20;
+        let spec = MultipathSpec {
+            kind,
+            n: 2,
+            msg_bytes: s,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: s,
+                model,
+            }],
+        };
+        let out = simulate(&topo, &spec, 60e9).unwrap();
+        let algbw = kind.algbw_gbps(s, out.total.as_secs_f64());
+        assert!((algbw - 139.0).abs() < 8.0, "algbw {algbw:.1} vs paper 139");
+    }
+
+    #[test]
+    fn multipath_paths_report_separate_times() {
+        let topo = h800();
+        let kind = CollectiveKind::AllGather;
+        let calib = Calibration::h800();
+        let s = 64u64 << 20;
+        let nv = nv_model(kind, 4, &topo);
+        let pcie = calib.pcie_model(topo.spec.pcie_unidir_bps(), 4);
+        let spec = MultipathSpec {
+            kind,
+            n: 4,
+            msg_bytes: s,
+            paths: vec![
+                PathAssignment {
+                    path: PathId::Nvlink,
+                    bytes: s * 9 / 10,
+                    model: nv,
+                },
+                PathAssignment {
+                    path: PathId::Pcie,
+                    bytes: s - s * 9 / 10,
+                    model: pcie,
+                },
+            ],
+        };
+        let out = simulate(&topo, &spec, 60e9).unwrap();
+        let t_nv = out.time_of(PathId::Nvlink).unwrap();
+        let t_pcie = out.time_of(PathId::Pcie).unwrap();
+        assert!(t_nv > SimTime::ZERO && t_pcie > SimTime::ZERO);
+        assert_eq!(out.total, t_nv.max(t_pcie));
+    }
+
+    #[test]
+    fn mismatched_bytes_rejected() {
+        let topo = h800();
+        let spec = MultipathSpec {
+            kind: CollectiveKind::AllGather,
+            n: 4,
+            msg_bytes: 100,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: 60,
+                model: nv_model(CollectiveKind::AllGather, 4, &topo),
+            }],
+        };
+        assert!(simulate(&topo, &spec, 60e9).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Tree AllReduce — the paper's §6 alternative for the 8-GPU latency
+//! problem: "we will explore alternatives like tree-based algorithms".
+//!
+//! Binomial tree, rooted at rank 0: a reduce sweep up (log₂N stages, each
+//! half of the remaining ranks sends its full vector to its partner, who
+//! combines) followed by a broadcast sweep down. Versus the ring's
+//! 2(N−1) sequential steps this pays only 2·log₂N step latencies — but
+//! each non-leaf link carries the *whole* message, so the bandwidth term
+//! is ≈2·S/B instead of ring's 2·S·(N−1)/(N·B): tree wins small
+//! (latency-bound) messages, ring wins large ones. The ablation bench
+//! sweeps the crossover.
+
+use super::ring::chunk_sizes;
+use super::schedule::{GraphBuilder, SimOutcome};
+use crate::links::{PathId, PathModel};
+use crate::sim::{Engine, SimTime, TaskId};
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// Append tree-AllReduce tasks for a `msg`-byte vector on `path`.
+/// Requires power-of-two rank counts (the paper's 2/4/8).
+pub fn build_tasks(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
+    let n = b.n;
+    assert!(n.is_power_of_two(), "tree schedule needs power-of-two ranks");
+    let stages = n.trailing_zeros() as usize;
+
+    // arrivals[r]: per-chunk task ids for the data most recently landed
+    // (and reduced) at rank r.
+    let mut arrivals: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+
+    // ---- Reduce sweep (leaves → root 0) ----
+    for s in 0..stages {
+        let span = 1usize << s; // senders are at odd multiples of span
+        for r in (0..n).step_by(2 * span) {
+            let sender = r + span;
+            // Sender forwards its (already locally-reduced) vector.
+            let deps: Vec<Vec<TaskId>> = arrivals[sender].iter().map(|t| vec![*t]).collect();
+            let a = b.send_block(path, sender, r, msg, &deps, true, true, tag);
+            // Receiver must also have finished ITS previous-stage reduce
+            // before the combined result is final — join chunk-wise.
+            let merged: Vec<TaskId> = if arrivals[r].is_empty() {
+                a
+            } else {
+                a.iter()
+                    .zip(arrivals[r].iter())
+                    .map(|(x, y)| b.graph.barrier(vec![*x, *y]))
+                    .collect()
+            };
+            arrivals[r] = merged;
+        }
+    }
+
+    // ---- Broadcast sweep (root 0 → leaves), reverse stage order ----
+    for s in (0..stages).rev() {
+        let span = 1usize << s;
+        for r in (0..n).step_by(2 * span) {
+            let receiver = r + span;
+            let deps: Vec<Vec<TaskId>> = arrivals[r].iter().map(|t| vec![*t]).collect();
+            let a = b.send_block(path, r, receiver, msg, &deps, true, false, tag);
+            arrivals[receiver] = a;
+        }
+    }
+}
+
+/// Simulate a single-path tree AllReduce (the ablation's entry point).
+pub fn simulate_tree(
+    topo: &Topology,
+    model: PathModel,
+    path: PathId,
+    n: usize,
+    msg: u64,
+    reduce_bps: f64,
+) -> Result<SimOutcome> {
+    let mut b = GraphBuilder::new(topo, n, &[(path, model)], reduce_bps);
+    build_tasks(&mut b, path, msg, path.tag());
+    let tasks = b.graph.len();
+    let sched = Engine::new(&b.pool).run(&b.graph)?;
+    Ok(SimOutcome {
+        total: sched.makespan,
+        per_path: vec![crate::collectives::schedule::PathTiming {
+            path,
+            bytes: msg,
+            time: sched.makespan,
+        }],
+        events: sched.events,
+        tasks,
+    })
+}
+
+/// Latency floor of the tree schedule (for quick analytical checks).
+pub fn latency_floor(n: usize, model: &PathModel, msg: u64) -> SimTime {
+    let stages = n.trailing_zeros() as u64;
+    let per_stage = model.step_latency + SimTime::for_transfer(msg, model.rate_cap);
+    let chunks = chunk_sizes(msg, model.chunk_bytes).len();
+    let _ = chunks;
+    SimTime::from_nanos(2 * stages * per_stage.as_nanos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::Shares;
+    use crate::collectives::multipath::MultipathCollective;
+    use crate::collectives::CollectiveKind;
+    use crate::config::presets::Preset;
+    use crate::links::calib::Calibration;
+
+    fn setup() -> (Topology, Calibration) {
+        (Topology::build(&Preset::H800.spec()), Calibration::h800())
+    }
+
+    fn ring_ar_time(topo: &Topology, calib: &Calibration, n: usize, msg: u64) -> f64 {
+        MultipathCollective::new(topo, calib.clone(), CollectiveKind::AllReduce, n)
+            .run(msg, &Shares::nvlink_only())
+            .unwrap()
+            .total()
+            .as_secs_f64()
+    }
+
+    fn tree_ar_time(topo: &Topology, calib: &Calibration, n: usize, msg: u64) -> f64 {
+        let model = calib.nvlink_model(CollectiveKind::AllReduce, n, topo.spec.nvlink_unidir_bps());
+        simulate_tree(topo, model, PathId::Nvlink, n, msg, calib.reduce_bps)
+            .unwrap()
+            .total
+            .as_secs_f64()
+    }
+
+    /// §6's motivation: at 8 GPUs and small messages, tree (2·log₂8 = 6
+    /// latency hops) beats ring (14 steps).
+    #[test]
+    fn tree_wins_latency_bound_regime() {
+        let (topo, calib) = setup();
+        let msg = 256 << 10; // 256 KB
+        let ring = ring_ar_time(&topo, &calib, 8, msg);
+        let tree = tree_ar_time(&topo, &calib, 8, msg);
+        assert!(
+            tree < ring,
+            "tree {tree:.6}s should beat ring {ring:.6}s at 256KB"
+        );
+    }
+
+    /// And the flip side: at 256 MB ring's bandwidth optimality wins.
+    #[test]
+    fn ring_wins_bandwidth_bound_regime() {
+        let (topo, calib) = setup();
+        let msg = 256 << 20;
+        let ring = ring_ar_time(&topo, &calib, 8, msg);
+        let tree = tree_ar_time(&topo, &calib, 8, msg);
+        assert!(
+            ring < tree,
+            "ring {ring:.6}s should beat tree {tree:.6}s at 256MB"
+        );
+    }
+
+    /// Tree schedules only exist for power-of-two rank counts.
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn non_pow2_rejected() {
+        let (topo, calib) = setup();
+        let model =
+            calib.nvlink_model(CollectiveKind::AllReduce, 8, topo.spec.nvlink_unidir_bps());
+        let mut b = GraphBuilder::new(&topo, 6, &[(PathId::Nvlink, model)], calib.reduce_bps);
+        build_tasks(&mut b, PathId::Nvlink, 1 << 20, 1);
+    }
+
+    /// 2-rank tree degenerates to one exchange + one return — both
+    /// schedules must then be within a small factor.
+    #[test]
+    fn two_rank_degenerate_case() {
+        let (topo, calib) = setup();
+        let msg = 32 << 20;
+        let ring = ring_ar_time(&topo, &calib, 2, msg);
+        let tree = tree_ar_time(&topo, &calib, 2, msg);
+        let ratio = tree / ring;
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "2-rank tree/ring ratio {ratio:.2} out of range"
+        );
+    }
+}

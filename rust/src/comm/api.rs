@@ -1,0 +1,113 @@
+//! Drop-in NCCL-style API surface.
+//!
+//! The paper ships FlexLink "as a lossless, drop-in replacement compatible
+//! with the NCCL API". This module mirrors the NCCL entry-point shapes —
+//! `ncclCommInitAll`, `ncclAllReduce(sendbuff, recvbuff, count, datatype,
+//! op, comm, stream)` — against the simulated node, so code written for
+//! NCCL maps one-to-one. (Streams collapse to synchronous calls here: the
+//! simulated device has no async queues.)
+
+use super::{CollectiveReport, CommConfig, Communicator};
+use crate::config::presets::Preset;
+use anyhow::Result;
+
+/// Mirror of `ncclDataType_t` (the subset the functional layer carries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataType {
+    /// `ncclFloat32`
+    F32,
+}
+
+impl DataType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DataType::F32 => 4,
+        }
+    }
+}
+
+/// Mirror of `ncclRedOp_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RedOp {
+    /// `ncclSum`
+    Sum,
+}
+
+/// Mirror of `ncclResult_t` communicator handle lifecycle:
+/// `flexlink_comm_init_all` ↔ `ncclCommInitAll`.
+pub fn flexlink_comm_init_all(preset: Preset, n_devices: usize) -> Result<Communicator> {
+    Communicator::init(CommConfig::new(preset, n_devices))
+}
+
+/// `ncclAllReduce(sendbuff==recvbuff, count, ncclFloat32, ncclSum, comm)`.
+///
+/// NCCL's in-place convention (sendbuff == recvbuff) is the only mode the
+/// simulated device exposes; `bufs` holds every rank's buffer (the
+/// single-process multi-device usage of `ncclCommInitAll`).
+pub fn flexlink_all_reduce(
+    comm: &mut Communicator,
+    bufs: &mut [Vec<f32>],
+    count: usize,
+    datatype: DataType,
+    op: RedOp,
+) -> Result<CollectiveReport> {
+    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
+    anyhow::ensure!(op == RedOp::Sum, "only ncclSum is wired");
+    for b in bufs.iter() {
+        anyhow::ensure!(b.len() == count, "count mismatch with buffer length");
+    }
+    comm.all_reduce_f32(bufs)
+}
+
+/// `ncclAllGather(sendbuff, recvbuff, sendcount, ncclFloat32, comm)`.
+pub fn flexlink_all_gather(
+    comm: &mut Communicator,
+    sendbufs: &[Vec<f32>],
+    recvbufs: &mut [Vec<f32>],
+    sendcount: usize,
+    datatype: DataType,
+) -> Result<CollectiveReport> {
+    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
+    for b in sendbufs.iter() {
+        anyhow::ensure!(b.len() == sendcount, "sendcount mismatch");
+    }
+    comm.all_gather_f32(sendbufs, recvbufs)
+}
+
+/// `ncclBroadcast(buff, count, ncclFloat32, root=0, comm)`.
+pub fn flexlink_broadcast(
+    comm: &mut Communicator,
+    bufs: &mut [Vec<f32>],
+    count: usize,
+    datatype: DataType,
+) -> Result<CollectiveReport> {
+    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
+    for b in bufs.iter() {
+        anyhow::ensure!(b.len() == count, "count mismatch");
+    }
+    comm.broadcast_f32(bufs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nccl_shaped_calls_work() {
+        let mut comm = flexlink_comm_init_all(Preset::H800, 2).unwrap();
+        let mut bufs = vec![vec![1.5f32; 256]; 2];
+        let rep =
+            flexlink_all_reduce(&mut comm, &mut bufs, 256, DataType::F32, RedOp::Sum).unwrap();
+        assert!(bufs[0].iter().all(|&v| v == 3.0));
+        assert!(rep.algbw_gbps() > 0.0);
+    }
+
+    #[test]
+    fn count_mismatch_rejected() {
+        let mut comm = flexlink_comm_init_all(Preset::H800, 2).unwrap();
+        let mut bufs = vec![vec![0f32; 100]; 2];
+        assert!(
+            flexlink_all_reduce(&mut comm, &mut bufs, 128, DataType::F32, RedOp::Sum).is_err()
+        );
+    }
+}

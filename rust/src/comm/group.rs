@@ -1,0 +1,121 @@
+//! Communicator groups — the `ncclCommSplit` analog that the paper's
+//! Figure-4 deployment (TP2 × DP4 inside one node) needs: sub-rings over
+//! subsets of the node's GPUs, each with its own tuned shares.
+
+use super::{CollectiveReport, CommConfig, Communicator};
+use crate::collectives::CollectiveKind;
+use anyhow::Result;
+
+/// A set of disjoint sub-communicators over one node, e.g. TP pairs
+/// {0,1},{2,3},{4,5},{6,7} plus a DP group across pair leaders.
+pub struct CommGroup {
+    /// Global GPU ids of this group's members, ring-ordered.
+    pub members: Vec<usize>,
+    comm: Communicator,
+}
+
+impl CommGroup {
+    /// Build a group over `members` (must be ≥2, power-of-two, within the
+    /// node). The sub-communicator sees a contracted topology with the
+    /// same per-GPU link complement — on an NVSwitch node any subset
+    /// forms a full-bandwidth sub-ring, which is why this contraction is
+    /// sound.
+    pub fn new(cfg: &CommConfig, members: Vec<usize>) -> Result<Self> {
+        let spec = cfg.run.node_spec();
+        anyhow::ensure!(members.len() >= 2, "group needs ≥2 members");
+        anyhow::ensure!(
+            members.iter().all(|&m| m < spec.n_gpus),
+            "member outside node"
+        );
+        let mut uniq = members.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        anyhow::ensure!(uniq.len() == members.len(), "duplicate members");
+        let mut sub = cfg.clone();
+        sub.run.n_gpus = members.len();
+        let comm = Communicator::init(sub)?;
+        Ok(CommGroup { members, comm })
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Local rank of a global GPU id, if it belongs to this group.
+    pub fn local_rank(&self, global: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == global)
+    }
+
+    /// AllReduce within the group (buffers indexed by *local* rank).
+    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
+        self.comm.all_reduce_f32(bufs)
+    }
+
+    pub fn all_gather_f32(
+        &mut self,
+        inputs: &[Vec<f32>],
+        outputs: &mut [Vec<f32>],
+    ) -> Result<CollectiveReport> {
+        self.comm.all_gather_f32(inputs, outputs)
+    }
+
+    pub fn time_collective(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+    ) -> Result<CollectiveReport> {
+        self.comm.time_collective(kind, msg_bytes)
+    }
+}
+
+/// Split a node into equal consecutive groups of `group_size` — the
+/// intra-node TP layout of Figure 4 (TP2 ⇒ 4 groups on an 8-GPU node).
+pub fn split_equal(cfg: &CommConfig, group_size: usize) -> Result<Vec<CommGroup>> {
+    let n = cfg.run.node_spec().n_gpus;
+    anyhow::ensure!(group_size >= 2 && n % group_size == 0, "bad group size");
+    (0..n / group_size)
+        .map(|g| {
+            let members = (g * group_size..(g + 1) * group_size).collect();
+            CommGroup::new(cfg, members)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    fn cfg() -> CommConfig {
+        let mut c = CommConfig::new(Preset::H800, 8);
+        c.tune_msg_bytes = 8 << 20;
+        c
+    }
+
+    #[test]
+    fn tp2_split_of_8() {
+        let groups = split_equal(&cfg(), 2).unwrap();
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups[0].members, vec![0, 1]);
+        assert_eq!(groups[3].members, vec![6, 7]);
+        assert_eq!(groups[2].local_rank(5), Some(1));
+        assert_eq!(groups[2].local_rank(0), None);
+    }
+
+    #[test]
+    fn group_allreduce_is_scoped() {
+        let mut groups = split_equal(&cfg(), 2).unwrap();
+        let mut bufs = vec![vec![3.0f32; 256], vec![4.0f32; 256]];
+        let rep = groups[1].all_reduce_f32(&mut bufs).unwrap();
+        assert!(bufs.iter().all(|b| b.iter().all(|&v| v == 7.0)));
+        assert_eq!(rep.kind, CollectiveKind::AllReduce);
+    }
+
+    #[test]
+    fn invalid_groups_rejected() {
+        assert!(CommGroup::new(&cfg(), vec![0]).is_err());
+        assert!(CommGroup::new(&cfg(), vec![0, 9]).is_err());
+        assert!(CommGroup::new(&cfg(), vec![0, 0]).is_err());
+        assert!(split_equal(&cfg(), 3).is_err());
+    }
+}

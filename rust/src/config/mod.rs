@@ -1,0 +1,250 @@
+//! Configuration system: node hardware specs (Table 1 presets), balancer
+//! parameters, and TOML-loadable run configuration for the CLI/launcher.
+
+pub mod presets;
+
+use crate::links::calib::Calibration;
+use anyhow::{Context, Result};
+use crate::util::kv::KvDoc;
+use presets::{NodeSpec, Preset};
+use std::path::Path;
+
+/// Tunables of the two-stage load balancer (§3.2). Defaults follow the
+/// paper's Algorithm 1 and §3.2.2 narrative.
+#[derive(Debug, Clone)]
+pub struct BalancerConfig {
+    /// Initial share moved per Algorithm-1 iteration, in percentage points
+    /// of the total message ("INITIAL_ADJUSTMENT_STEP").
+    pub initial_step_pct: f64,
+    /// "CONVERGENCE_THRESHOLD": relative slowest/fastest timing imbalance
+    /// below which an iteration counts as stable.
+    pub convergence_threshold: f64,
+    /// "STABILITY_REQUIRED": consecutive stable iterations to terminate.
+    pub stability_required: u32,
+    /// Hard cap on Algorithm-1 iterations (the paper loops to 100).
+    pub max_iterations: u32,
+    /// Stage 2: number of recent collective calls the Evaluator averages
+    /// over before the Load Balancer may act (paper: "e.g., the last 10").
+    pub window: usize,
+    /// Stage 2: relative slowest/fastest gap that triggers an adjustment.
+    pub runtime_threshold: f64,
+    /// Stage 2: fixed share step moved per adjustment, percentage points.
+    pub runtime_step_pct: f64,
+    /// Shares at/below this are treated as zero → path deactivated.
+    pub min_share_pct: f64,
+    /// Initial heuristic share given to NVLink ("NVLink gets dominant
+    /// share"); the remainder splits evenly over the auxiliary paths.
+    pub nvlink_initial_share_pct: f64,
+}
+
+impl Default for BalancerConfig {
+    fn default() -> Self {
+        BalancerConfig {
+            initial_step_pct: 2.0,
+            convergence_threshold: 0.10,
+            stability_required: 3,
+            max_iterations: 100,
+            window: 10,
+            runtime_threshold: 0.15,
+            runtime_step_pct: 1.0,
+            min_share_pct: 0.5,
+            nvlink_initial_share_pct: 84.0,
+        }
+    }
+}
+
+/// Full run configuration (TOML-loadable).
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Hardware preset name (h800, h100, a800, gb200, gb300) or "custom".
+    pub preset: Preset,
+    /// GPUs participating in the collective (≤ node GPU count).
+    pub n_gpus: usize,
+    pub balancer: BalancerConfig,
+    /// Override the node spec entirely (when preset == Custom).
+    pub node: Option<NodeSpec>,
+    /// Disable the RDMA path (paper's "FlexLink (PCIe-Only)" column).
+    pub disable_rdma: bool,
+    /// Disable the PCIe path (NVLink-only degenerates to the baseline).
+    pub disable_pcie: bool,
+    /// RNG seed for workload generators.
+    pub seed: u64,
+}
+
+fn default_seed() -> u64 {
+    0xF1EC5
+}
+
+impl RunConfig {
+    pub fn new(preset: Preset, n_gpus: usize) -> Self {
+        RunConfig {
+            preset,
+            n_gpus,
+            balancer: BalancerConfig::default(),
+            node: None,
+            disable_rdma: false,
+            disable_pcie: false,
+            seed: default_seed(),
+        }
+    }
+
+    /// Resolve the hardware spec (preset or custom override).
+    pub fn node_spec(&self) -> NodeSpec {
+        match (&self.node, self.preset) {
+            (Some(spec), _) => spec.clone(),
+            (None, p) => p.spec(),
+        }
+    }
+
+    /// Calibration set for this node. Only H800 has a measured fit; other
+    /// presets reuse its protocol constants against their own raw
+    /// bandwidths (documented model extrapolation).
+    pub fn calibration(&self) -> Calibration {
+        Calibration::h800()
+    }
+
+    /// Load from a flat-TOML file (see [`crate::util::kv`] for the
+    /// supported subset). Unknown keys are rejected to catch typos.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let cfg = Self::from_toml_str(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = KvDoc::parse(text)?;
+        const KNOWN: &[&str] = &[
+            "preset", "n_gpus", "disable_rdma", "disable_pcie", "seed",
+            "balancer.initial_step_pct", "balancer.convergence_threshold",
+            "balancer.stability_required", "balancer.max_iterations",
+            "balancer.window", "balancer.runtime_threshold",
+            "balancer.runtime_step_pct", "balancer.min_share_pct",
+            "balancer.nvlink_initial_share_pct",
+        ];
+        for k in doc.keys() {
+            anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key '{k}'");
+        }
+        let preset: Preset = doc.str_or("preset", "h800").parse()?;
+        let d = BalancerConfig::default();
+        let balancer = BalancerConfig {
+            initial_step_pct: doc.f64_or("balancer.initial_step_pct", d.initial_step_pct),
+            convergence_threshold: doc
+                .f64_or("balancer.convergence_threshold", d.convergence_threshold),
+            stability_required: doc.usize_or(
+                "balancer.stability_required",
+                d.stability_required as usize,
+            ) as u32,
+            max_iterations: doc.usize_or("balancer.max_iterations", d.max_iterations as usize)
+                as u32,
+            window: doc.usize_or("balancer.window", d.window),
+            runtime_threshold: doc.f64_or("balancer.runtime_threshold", d.runtime_threshold),
+            runtime_step_pct: doc.f64_or("balancer.runtime_step_pct", d.runtime_step_pct),
+            min_share_pct: doc.f64_or("balancer.min_share_pct", d.min_share_pct),
+            nvlink_initial_share_pct: doc
+                .f64_or("balancer.nvlink_initial_share_pct", d.nvlink_initial_share_pct),
+        };
+        Ok(RunConfig {
+            preset,
+            n_gpus: doc.usize_or("n_gpus", preset.spec().n_gpus),
+            balancer,
+            node: None,
+            disable_rdma: doc.bool_or("disable_rdma", false),
+            disable_pcie: doc.bool_or("disable_pcie", false),
+            seed: doc.u64_or("seed", default_seed()),
+        })
+    }
+
+    pub fn to_toml(&self) -> Result<String> {
+        use crate::util::kv::Value;
+        let mut doc = KvDoc::default();
+        doc.set("preset", Value::Str(self.preset.to_string()));
+        doc.set("n_gpus", Value::Int(self.n_gpus as i64));
+        doc.set("disable_rdma", Value::Bool(self.disable_rdma));
+        doc.set("disable_pcie", Value::Bool(self.disable_pcie));
+        doc.set("seed", Value::Int(self.seed as i64));
+        let b = &self.balancer;
+        doc.set("balancer.initial_step_pct", Value::Float(b.initial_step_pct));
+        doc.set(
+            "balancer.convergence_threshold",
+            Value::Float(b.convergence_threshold),
+        );
+        doc.set(
+            "balancer.stability_required",
+            Value::Int(b.stability_required as i64),
+        );
+        doc.set("balancer.max_iterations", Value::Int(b.max_iterations as i64));
+        doc.set("balancer.window", Value::Int(b.window as i64));
+        doc.set("balancer.runtime_threshold", Value::Float(b.runtime_threshold));
+        doc.set("balancer.runtime_step_pct", Value::Float(b.runtime_step_pct));
+        doc.set("balancer.min_share_pct", Value::Float(b.min_share_pct));
+        doc.set(
+            "balancer.nvlink_initial_share_pct",
+            Value::Float(b.nvlink_initial_share_pct),
+        );
+        Ok(doc.render())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let spec = self.node_spec();
+        anyhow::ensure!(self.n_gpus >= 2, "need at least 2 GPUs, got {}", self.n_gpus);
+        anyhow::ensure!(
+            self.n_gpus <= spec.n_gpus,
+            "n_gpus {} exceeds node GPU count {}",
+            self.n_gpus,
+            spec.n_gpus
+        );
+        anyhow::ensure!(
+            self.n_gpus.is_power_of_two(),
+            "ring schedules here require power-of-two GPU counts (paper uses 2/4/8)"
+        );
+        let b = &self.balancer;
+        anyhow::ensure!(b.initial_step_pct > 0.0, "initial_step_pct must be > 0");
+        anyhow::ensure!(b.window > 0, "evaluator window must be > 0");
+        anyhow::ensure!(
+            (0.0..=100.0).contains(&b.nvlink_initial_share_pct),
+            "nvlink_initial_share_pct out of range"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::new(Preset::H800, 8).validate().unwrap();
+        RunConfig::new(Preset::H800, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn too_many_gpus_rejected() {
+        assert!(RunConfig::new(Preset::H800, 16).validate().is_err());
+    }
+
+    #[test]
+    fn non_pow2_rejected() {
+        assert!(RunConfig::new(Preset::H800, 6).validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut cfg = RunConfig::new(Preset::Gb200, 4);
+        cfg.balancer.window = 17;
+        cfg.disable_rdma = true;
+        let text = cfg.to_toml().unwrap();
+        let back = RunConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.n_gpus, 4);
+        assert_eq!(back.preset, Preset::Gb200);
+        assert_eq!(back.balancer.window, 17);
+        assert!(back.disable_rdma);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_toml_str("prest = \"h800\"").is_err());
+    }
+}

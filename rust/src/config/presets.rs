@@ -1,0 +1,228 @@
+//! Hardware presets — the rows of the paper's Table 1.
+//!
+//! All bandwidth figures below are **bidirectional** as in the paper; the
+//! topology builder halves them into per-direction resource capacities.
+//! "Path contention" marks platforms where GPU→NIC and GPU→CPU traffic
+//! share the GPU's own PCIe/C2C lane (§2.2.2); GB300 decouples them.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Named hardware platform (Table 1 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Preset {
+    H800,
+    H100,
+    A800,
+    Gb200,
+    Gb300,
+    /// Caller supplies a [`NodeSpec`] via `RunConfig::node`.
+    Custom,
+}
+
+impl FromStr for Preset {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "h800" => Preset::H800,
+            "h100" => Preset::H100,
+            "a800" => Preset::A800,
+            "gb200" => Preset::Gb200,
+            "gb300" => Preset::Gb300,
+            "custom" => Preset::Custom,
+            other => anyhow::bail!("unknown preset '{other}' (h800|h100|a800|gb200|gb300|custom)"),
+        })
+    }
+}
+
+impl fmt::Display for Preset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Preset::H800 => "h800",
+            Preset::H100 => "h100",
+            Preset::A800 => "a800",
+            Preset::Gb200 => "gb200",
+            Preset::Gb300 => "gb300",
+            Preset::Custom => "custom",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// One server's interconnect complement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    pub n_gpus: usize,
+    /// NVLink bandwidth per GPU, GB/s **bidirectional** (Table 1 col 2).
+    pub nvlink_gbps_bidir: f64,
+    /// PCIe/C2C bandwidth per GPU, GB/s bidirectional (col 3).
+    pub pcie_gbps_bidir: f64,
+    /// RDMA NIC bandwidth per node, Gb/s bidirectional (Table 1 col 4 —
+    /// used only for the Table 1 idle-opportunity arithmetic).
+    pub nic_gbit_bidir: f64,
+    /// Per-GPU NIC bandwidth, GB/s bidirectional, as deployed (§5.1: each
+    /// H800 GPU pairs with a dedicated ConnectX-6 "50 GB/s" NIC). The
+    /// paper's Table 1 node aggregate and §5.1 per-GPU figure disagree;
+    /// the transport uses this per-GPU figure.
+    pub nic_per_gpu_gbps_bidir: f64,
+    /// Whether GPU→NIC and GPU→CPU traffic contend on the same lane.
+    pub path_contention: bool,
+    /// Host memory bandwidth available for staging, GB/s (aggregate).
+    pub host_mem_gbps: f64,
+    /// NUMA nodes; GPUs are split evenly across them.
+    pub numa_nodes: usize,
+}
+
+impl NodeSpec {
+    /// Unidirectional NVLink bytes/s per GPU.
+    pub fn nvlink_unidir_bps(&self) -> f64 {
+        self.nvlink_gbps_bidir / 2.0 * 1e9
+    }
+
+    /// Unidirectional PCIe bytes/s per GPU (one direction of the x16 lane).
+    pub fn pcie_unidir_bps(&self) -> f64 {
+        self.pcie_gbps_bidir / 2.0 * 1e9
+    }
+
+    /// Unidirectional NIC bytes/s per GPU (from the §5.1 per-GPU figure).
+    pub fn nic_unidir_bps(&self) -> f64 {
+        self.nic_per_gpu_gbps_bidir / 2.0 * 1e9
+    }
+
+    /// Table 1's "Idle BW Opportunity": idle bandwidth relative to NVLink.
+    /// With path contention the idle bandwidth is just the PCIe/C2C link;
+    /// without, PCIe/C2C + NIC.
+    pub fn idle_bw_opportunity(&self) -> f64 {
+        let nic_gbps = self.nic_gbit_bidir / 8.0;
+        let idle = if self.path_contention {
+            self.pcie_gbps_bidir
+        } else {
+            self.pcie_gbps_bidir + nic_gbps
+        };
+        idle / self.nvlink_gbps_bidir
+    }
+}
+
+impl Preset {
+    pub fn spec(self) -> NodeSpec {
+        match self {
+            Preset::H800 => NodeSpec {
+                name: "H800".into(),
+                n_gpus: 8,
+                nvlink_gbps_bidir: 400.0,
+                pcie_gbps_bidir: 128.0,
+                nic_gbit_bidir: 800.0,
+                nic_per_gpu_gbps_bidir: 50.0,
+                path_contention: true,
+                host_mem_gbps: 400.0,
+                numa_nodes: 2,
+            },
+            Preset::H100 => NodeSpec {
+                name: "H100".into(),
+                n_gpus: 8,
+                nvlink_gbps_bidir: 900.0,
+                pcie_gbps_bidir: 128.0,
+                nic_gbit_bidir: 800.0,
+                nic_per_gpu_gbps_bidir: 50.0,
+                path_contention: true,
+                host_mem_gbps: 400.0,
+                numa_nodes: 2,
+            },
+            Preset::A800 => NodeSpec {
+                name: "A800".into(),
+                n_gpus: 8,
+                nvlink_gbps_bidir: 400.0,
+                pcie_gbps_bidir: 64.0,
+                nic_gbit_bidir: 400.0,
+                nic_per_gpu_gbps_bidir: 25.0,
+                path_contention: true,
+                host_mem_gbps: 300.0,
+                numa_nodes: 2,
+            },
+            Preset::Gb200 => NodeSpec {
+                name: "GB200".into(),
+                n_gpus: 4,
+                nvlink_gbps_bidir: 1800.0,
+                pcie_gbps_bidir: 400.0,
+                nic_gbit_bidir: 1600.0,
+                nic_per_gpu_gbps_bidir: 50.0,
+                path_contention: true,
+                host_mem_gbps: 1000.0,
+                numa_nodes: 2,
+            },
+            Preset::Gb300 => NodeSpec {
+                name: "GB300".into(),
+                n_gpus: 4,
+                nvlink_gbps_bidir: 1800.0,
+                pcie_gbps_bidir: 400.0,
+                nic_gbit_bidir: 1600.0,
+                nic_per_gpu_gbps_bidir: 50.0,
+                path_contention: false,
+                host_mem_gbps: 1000.0,
+                numa_nodes: 2,
+            },
+            Preset::Custom => NodeSpec {
+                name: "custom".into(),
+                n_gpus: 8,
+                nvlink_gbps_bidir: 400.0,
+                pcie_gbps_bidir: 128.0,
+                nic_gbit_bidir: 800.0,
+                nic_per_gpu_gbps_bidir: 50.0,
+                path_contention: true,
+                host_mem_gbps: 400.0,
+                numa_nodes: 2,
+            },
+        }
+    }
+
+    /// The five measured Table 1 rows (excludes Custom).
+    pub const TABLE1: [Preset; 5] = [
+        Preset::H800,
+        Preset::H100,
+        Preset::A800,
+        Preset::Gb200,
+        Preset::Gb300,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1's "Idle BW Opportunity" column, exactly as printed.
+    #[test]
+    fn table1_idle_bw_opportunity() {
+        let rows = [
+            (Preset::H800, 0.32),
+            (Preset::H100, 0.14),
+            (Preset::A800, 0.16),
+            (Preset::Gb200, 0.22),
+            (Preset::Gb300, 0.33),
+        ];
+        for (p, expect) in rows {
+            let got = p.spec().idle_bw_opportunity();
+            assert!(
+                (got - expect).abs() < 0.005,
+                "{p}: got {got:.3}, paper says {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn unidirectional_conversions() {
+        let h800 = Preset::H800.spec();
+        assert!((h800.nvlink_unidir_bps() - 200e9).abs() < 1.0);
+        assert!((h800.pcie_unidir_bps() - 64e9).abs() < 1.0);
+        // §5.1: 50 GB/s bidir ConnectX-6 per GPU → 25 GB/s unidir.
+        assert!((h800.nic_unidir_bps() - 25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for p in Preset::TABLE1 {
+            assert_eq!(p.to_string().parse::<Preset>().unwrap(), p);
+        }
+        assert!("h900".parse::<Preset>().is_err());
+    }
+}

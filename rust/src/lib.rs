@@ -1,0 +1,71 @@
+//! # FlexLink — heterogeneous intra-node link aggregation for collectives
+//!
+//! Reproduction of *"FlexLink: Boosting your NVLink Bandwidth by 27% without
+//! accuracy concern"* (Shen, Zhang, Zhao — Ant Group, 2025).
+//!
+//! FlexLink aggregates the heterogeneous links of a GPU server — NVLink,
+//! PCIe (via staged host memory) and RDMA NICs — into a single fabric and
+//! partitions every collective's traffic across them with a two-stage
+//! adaptive load balancer, so the slow paths add bandwidth without ever
+//! throttling NVLink.
+//!
+//! The paper's testbed (8×H800, NVSwitch, ConnectX-6 NICs) is replaced here
+//! by a calibrated hardware substrate (see `DESIGN.md`, substitution
+//! ledger): a discrete-event flow simulator ([`sim`]) over an explicit
+//! hardware [`topology`] with per-link models ([`links`]), while the
+//! *functional* layer moves real bytes between rank buffers through staged
+//! host memory ([`memory`], [`transport`]) guarded by the paper's
+//! monotonic-counter semaphore protocol ([`sync`]) — so the "lossless"
+//! claim is bit-checkable while timings drive the balancer exactly as on
+//! real hardware.
+//!
+//! ## Layer map (three-layer Rust + JAX + Pallas stack)
+//!
+//! * **L3 (this crate)** — the paper's contribution: [`comm::Communicator`]
+//!   (NCCL-compatible API), multi-path [`collectives`], the two-stage
+//!   [`balancer`], the NCCL [`baseline`], plus every substrate.
+//! * **L2 (python/compile/model.py)** — JAX transformer fwd/bwd, AOT-lowered
+//!   to HLO text, executed from Rust via [`runtime`] (PJRT CPU).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (ReduceScatter
+//!   combine, attention) lowered inside the L2 module.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use flexlink::comm::{Communicator, CommConfig};
+//! use flexlink::config::presets::Preset;
+//!
+//! let cfg = CommConfig::new(Preset::H800, 8);
+//! let mut comm = Communicator::init(cfg).unwrap();
+//! let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 1 << 20]).collect();
+//! let report = comm.all_reduce_f32(&mut bufs).unwrap();
+//! println!("algbw = {:.1} GB/s", report.algbw_gbps());
+//! ```
+
+pub mod balancer;
+pub mod baseline;
+pub mod bench_harness;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod links;
+pub mod memory;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sync;
+pub mod topology;
+pub mod trainer;
+pub mod transport;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Bytes per mebibyte, used throughout the bench harness.
+pub const MIB: u64 = 1 << 20;
+
+/// Gigabytes (1e9 bytes) per second → bytes per simulated second.
+pub const GB: f64 = 1e9;

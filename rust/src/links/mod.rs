@@ -1,0 +1,118 @@
+//! Link/path taxonomy and calibrated per-path protocol models.
+//!
+//! FlexLink schedules over three *paths* ([`PathId`]): the NVLink fabric,
+//! the host-staged PCIe path, and the RDMA-NIC path. Each path has a
+//! [`PathModel`] — per-ring-step activation latency, a protocol-efficiency
+//! rate cap, and (for staged paths) staging behaviour. The NVLink model is
+//! calibrated per (operator, #GPUs) against the paper's measured NCCL
+//! column of Table 2 (see [`calib`] and EXPERIMENTS.md §Calibration); the
+//! PCIe/RDMA models are calibrated once from §2.2.3/§5's described
+//! behaviour. FlexLink's improvements are *not* calibrated — they emerge.
+
+pub mod calib;
+
+use crate::sim::SimTime;
+use std::fmt;
+
+/// One of the three aggregatable communication paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PathId {
+    /// Direct GPU↔GPU over the NVLink/NVSwitch fabric (NCCL's only path).
+    Nvlink,
+    /// GPU→host-pinned-buffer→GPU over the PCIe bus (double-buffered
+    /// staging pipeline, §3.1).
+    Pcie,
+    /// GPU→NIC→GPU via NVSHMEM-style put through the RDMA NIC (§2.2.3).
+    Rdma,
+}
+
+impl PathId {
+    pub const ALL: [PathId; 3] = [PathId::Nvlink, PathId::Pcie, PathId::Rdma];
+
+    /// Stable metrics tag for task-graph attribution.
+    pub fn tag(self) -> u32 {
+        match self {
+            PathId::Nvlink => 1,
+            PathId::Pcie => 2,
+            PathId::Rdma => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Option<PathId> {
+        match tag {
+            1 => Some(PathId::Nvlink),
+            2 => Some(PathId::Pcie),
+            3 => Some(PathId::Rdma),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for PathId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PathId::Nvlink => write!(f, "nvlink"),
+            PathId::Pcie => write!(f, "pcie"),
+            PathId::Rdma => write!(f, "rdma"),
+        }
+    }
+}
+
+/// Protocol model of one path, consumed by the collective builders.
+#[derive(Debug, Clone, Copy)]
+pub struct PathModel {
+    /// Activation latency charged once per ring step (kernel launch,
+    /// staging setup, counter-semaphore round trip, NIC doorbell...).
+    pub step_latency: SimTime,
+    /// Extra per-step latency on ReduceScatter-phase steps: the consumer
+    /// must read the staged chunk back and combine before forwarding —
+    /// a read-modify-write whose coordination cost grows with ring size.
+    pub reduce_step_latency: SimTime,
+    /// Per-flow effective-rate ceiling, bytes/s: what a single pipelined
+    /// stream achieves on this path (§2.2.3: a single PCIe ring cannot
+    /// saturate the physical link; extra parallel rings serialize in the
+    /// driver, so the cap is per *path*, not per flow count).
+    pub rate_cap: f64,
+    /// Chunk (staging-buffer) size for pipelining; the paper selects 4 MB.
+    pub chunk_bytes: u64,
+}
+
+impl PathModel {
+    /// Lower bound on one ring-step's duration for `bytes` on this path.
+    pub fn step_floor(&self, bytes: u64) -> SimTime {
+        self.step_latency + SimTime::for_transfer(bytes, self.rate_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        for p in PathId::ALL {
+            assert_eq!(PathId::from_tag(p.tag()), Some(p));
+        }
+        assert_eq!(PathId::from_tag(0), None);
+        assert_eq!(PathId::from_tag(9), None);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(PathId::Nvlink.to_string(), "nvlink");
+        assert_eq!(PathId::Pcie.to_string(), "pcie");
+        assert_eq!(PathId::Rdma.to_string(), "rdma");
+    }
+
+    #[test]
+    fn step_floor_adds_latency_and_wire_time() {
+        let m = PathModel {
+            step_latency: SimTime::from_micros(50),
+            reduce_step_latency: SimTime::ZERO,
+            rate_cap: 25e9,
+            chunk_bytes: 4 << 20,
+        };
+        let f = m.step_floor(25_000_000); // 1ms of wire time
+        assert!((f.as_micros_f64() - 1050.0).abs() < 1.0);
+    }
+}

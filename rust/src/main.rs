@@ -1,0 +1,374 @@
+//! `flexlink` — CLI launcher for the FlexLink reproduction.
+//!
+//! Subcommands:
+//! * `bench`  — nccl-tests-style bandwidth sweep (FlexLink vs NCCL)
+//! * `tune`   — run Algorithm 1 and print the share trajectory
+//! * `train`  — data-parallel training with FlexLink gradient AllReduce
+//! * `repro`  — regenerate a specific paper table/figure
+//! * `topo`   — print the hardware topology / Table 1 presets
+
+use flexlink::balancer::{initial_tune, Shares};
+use flexlink::bench_harness as bh;
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::CollectiveKind;
+use flexlink::comm::CommConfig;
+use flexlink::config::presets::Preset;
+use flexlink::config::{BalancerConfig, RunConfig};
+use flexlink::links::calib::Calibration;
+use flexlink::links::PathId;
+use flexlink::metrics::Csv;
+use flexlink::topology::Topology;
+use flexlink::trainer::{Trainer, TrainerConfig};
+use flexlink::util::args::Args;
+use flexlink::Result;
+
+const USAGE: &str = "\
+flexlink — heterogeneous intra-node link aggregation (paper reproduction)
+
+USAGE: flexlink <COMMAND> [OPTIONS]
+
+COMMANDS:
+  bench   --op <kind> --gpus <n> --preset <p> --sizes 32,64,128,256 [--no-rdma]
+          nccl-tests-style bandwidth sweep, FlexLink vs NCCL
+  tune    --op <kind> --gpus <n> --preset <p> --mib <size>
+          run Algorithm 1 and print the tuning trajectory
+  train   --model tiny|gpt10m|gpt100m --gpus <n> --steps <k>
+          [--artifacts <dir>] [--csv <path>]
+          data-parallel training with FlexLink gradient AllReduce
+  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead> [--csv <path>]
+          regenerate a paper table/figure
+  topo    --preset <p>
+          print topology details and Table 1 numbers
+
+Collective kinds: allreduce, allgather, reduce_scatter, broadcast, alltoall
+Presets: h800 (paper testbed), h100, a800, gb200, gb300
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["no-rdma", "help"])?;
+    if args.has("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let preset: Preset = args.parse_or("preset", Preset::H800)?;
+    match args.subcommand.as_deref() {
+        Some("bench") => {
+            let op: CollectiveKind = args.parse_or("op", CollectiveKind::AllGather)?;
+            let gpus = args.usize_or("gpus", 8)?;
+            let sizes = args.u64_list_or("sizes", &[32, 64, 128, 256])?;
+            bench(preset, op, gpus, &sizes, args.has("no-rdma"))
+        }
+        Some("tune") => {
+            let op: CollectiveKind = args.parse_or("op", CollectiveKind::AllGather)?;
+            tune(preset, op, args.usize_or("gpus", 8)?, args.u64_or("mib", 256)?)
+        }
+        Some("train") => train(
+            preset,
+            args.usize_or("gpus", 4)?,
+            &args.str_or("model", "tiny"),
+            args.usize_or("steps", 20)?,
+            &args.str_or("artifacts", "artifacts"),
+            args.flag("csv"),
+        ),
+        Some("repro") => {
+            let what = args
+                .positionals
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("table2");
+            repro(what, args.flag("csv"))
+        }
+        Some("topo") => {
+            let spec = preset.spec();
+            let topo = Topology::build(&spec);
+            println!("{}: {} GPUs", spec.name, spec.n_gpus);
+            println!(
+                "  NVLink {:.0} GB/s bidir | PCIe {:.0} GB/s bidir | NIC {:.0} GB/s/GPU bidir",
+                spec.nvlink_gbps_bidir, spec.pcie_gbps_bidir, spec.nic_per_gpu_gbps_bidir
+            );
+            println!(
+                "  path contention: {} | idle-BW opportunity: {:.0}%",
+                spec.path_contention,
+                spec.idle_bw_opportunity() * 100.0
+            );
+            println!("  resources: {}", topo.pool.len());
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn bench(preset: Preset, op: CollectiveKind, gpus: usize, sizes: &[u64], no_rdma: bool) -> Result<()> {
+    RunConfig::new(preset, gpus).validate()?;
+    let topo = Topology::build(&preset.spec());
+    let cfg = BalancerConfig::default();
+    let aux: Vec<PathId> = if no_rdma {
+        vec![PathId::Pcie]
+    } else {
+        vec![PathId::Pcie, PathId::Rdma]
+    };
+    println!("# op={op} gpus={gpus} preset={preset} aux={aux:?}");
+    println!("{:>8} {:>12} {:>12} {:>8}  shares", "size", "nccl GB/s", "flex GB/s", "impr");
+    for &mib in sizes {
+        let msg = mib << 20;
+        let mc = MultipathCollective::new(&topo, Calibration::h800(), op, gpus);
+        let base = mc.run(msg, &Shares::nvlink_only())?;
+        let tuned = initial_tune(&mc, msg, &cfg, &aux)?;
+        let flex = mc.run(msg, &tuned.shares)?;
+        println!(
+            "{:>6}MB {:>12.1} {:>12.1} {:>7.1}%  {}",
+            mib,
+            base.algbw_gbps(),
+            flex.algbw_gbps(),
+            (flex.algbw_gbps() / base.algbw_gbps() - 1.0) * 100.0,
+            tuned.shares
+        );
+    }
+    Ok(())
+}
+
+fn tune(preset: Preset, op: CollectiveKind, gpus: usize, mib: u64) -> Result<()> {
+    let topo = Topology::build(&preset.spec());
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), op, gpus);
+    let r = initial_tune(
+        &mc,
+        mib << 20,
+        &BalancerConfig::default(),
+        &[PathId::Pcie, PathId::Rdma],
+    )?;
+    println!(
+        "# Algorithm 1 on {op} x{gpus} @ {mib}MB — {} iterations, converged={}, simulated profiling {:.3}s",
+        r.iterations,
+        r.converged,
+        r.profiling_time.as_secs_f64()
+    );
+    for it in &r.history {
+        let times = it
+            .times
+            .iter()
+            .map(|(p, t)| format!("{p}={t}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let moved = it
+            .moved
+            .map(|(f, t, a)| format!("{f}→{t} {a:.1}pt"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "iter {:>3}  imb={:>6.2}  step={:>4.1}  move={:<16}  [{}]  {}",
+            it.iter, it.imbalance, it.step, moved, it.shares, times
+        );
+    }
+    println!("final: {}", r.shares);
+    Ok(())
+}
+
+fn train(
+    preset: Preset,
+    gpus: usize,
+    model: &str,
+    steps: usize,
+    artifacts: &str,
+    csv_path: Option<&str>,
+) -> Result<()> {
+    let mut cfg = TrainerConfig::tiny(CommConfig::new(preset, gpus));
+    cfg.model = model.to_string();
+    cfg.artifact_dir = artifacts.into();
+    cfg.steps = steps;
+    if model == "gpt10m" {
+        cfg.batch = 4;
+        cfg.seq = 128;
+        cfg.vocab = 4096;
+    } else if model == "gpt100m" {
+        cfg.batch = 2;
+        cfg.seq = 256;
+        cfg.vocab = 32768;
+    }
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "# model={model} params={} gpus={gpus} steps={steps}",
+        trainer.n_params()
+    );
+    let mut csv = Csv::new(&["step", "loss", "comm_ms", "baseline_comm_ms", "algbw_gbps"]);
+    let records = trainer.train()?;
+    for r in &records {
+        println!(
+            "step {:>4}  loss {:>8.4}  comm {:>9}  (nccl {:>9})  algbw {:>6.1} GB/s",
+            r.step, r.loss, r.comm_time, r.baseline_comm_time, r.algbw_gbps
+        );
+        csv.row(&[
+            r.step.to_string(),
+            format!("{:.5}", r.loss),
+            format!("{:.4}", r.comm_time.as_secs_f64() * 1e3),
+            format!("{:.4}", r.baseline_comm_time.as_secs_f64() * 1e3),
+            format!("{:.2}", r.algbw_gbps),
+        ]);
+    }
+    let first = &records[0];
+    let last = records.last().unwrap();
+    let comm: f64 = records.iter().map(|r| r.comm_time.as_secs_f64()).sum();
+    let base: f64 = records
+        .iter()
+        .map(|r| r.baseline_comm_time.as_secs_f64())
+        .sum();
+    println!(
+        "# loss {:.4} → {:.4} | total comm {:.3}s vs NCCL {:.3}s ({:+.1}%)",
+        first.loss,
+        last.loss,
+        comm,
+        base,
+        (comm / base - 1.0) * 100.0
+    );
+    if let Some(p) = csv_path {
+        csv.write_file(p)?;
+        println!("# wrote {p}");
+    }
+    Ok(())
+}
+
+fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
+    let topo = Topology::build(&Preset::H800.spec());
+    let cfg = BalancerConfig::default();
+    match what {
+        "table1" => {
+            let rows = bh::table1();
+            print!("{}", bh::render_table1(&rows));
+            if let Some(p) = csv_path {
+                let mut csv =
+                    Csv::new(&["server", "nvlink", "pcie", "nic", "contention", "idle_pct"]);
+                for r in &rows {
+                    csv.row(&[
+                        r.server.clone(),
+                        r.nvlink_gbps.to_string(),
+                        r.pcie_gbps.to_string(),
+                        r.nic_gbit.to_string(),
+                        r.contention.to_string(),
+                        format!("{:.1}", r.idle_opportunity_pct),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
+        "table2" => {
+            let rows = bh::table2(&topo, &cfg)?;
+            print!("{}", bh::render_table2(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "op",
+                    "gpus",
+                    "mib",
+                    "nccl",
+                    "pcie_only",
+                    "pcie_only_impr",
+                    "pcie_only_load",
+                    "full",
+                    "full_impr",
+                    "pcie_load",
+                    "rdma_load",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.op.to_string(),
+                        r.n_gpus.to_string(),
+                        r.msg_mib.to_string(),
+                        format!("{:.1}", r.nccl_gbps),
+                        format!("{:.1}", r.pcie_only_gbps),
+                        format!("{:.1}", r.pcie_only_impr_pct),
+                        format!("{:.1}", r.pcie_only_load_pct),
+                        format!("{:.1}", r.full_gbps),
+                        format!("{:.1}", r.full_impr_pct),
+                        format!("{:.1}", r.full_pcie_load_pct),
+                        format!("{:.1}", r.full_rdma_load_pct),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
+        "fig2" => {
+            let rows = bh::fig2(&topo, &cfg)?;
+            print!("{}", bh::render_fig2(&rows));
+        }
+        "fig5" => {
+            let trace = bh::fig5_trace(&topo, &cfg, CollectiveKind::AllGather, 8, 256, 32, 60)?;
+            print!("{}", bh::render_fig5(&trace));
+        }
+        "fig3" | "fig4" => {
+            use flexlink::workloads::moe;
+            let flow = if what == "fig3" {
+                moe::MoeWorkflow::training_fig3()
+            } else {
+                moe::MoeWorkflow::inference_fig4()
+            };
+            let nccl = moe::utilization(&topo, &flow, |_, _| Shares::nvlink_only())?;
+            println!("== {} under NCCL (link idleness) ==", flow.name);
+            for p in &nccl {
+                println!(
+                    "  {:<28} {:>8.3}s  nvlink={:>3.0}% pcie={:>3.0}% rdma={:>3.0}%",
+                    p.phase,
+                    p.seconds,
+                    p.nvlink_share * 100.0,
+                    p.pcie_share * 100.0,
+                    p.rdma_share * 100.0
+                );
+            }
+            let flex = moe::utilization(&topo, &flow, |kind, n| {
+                let mc = MultipathCollective::new(&topo, Calibration::h800(), kind, n);
+                initial_tune(&mc, 128 << 20, &cfg, &[PathId::Pcie, PathId::Rdma])
+                    .map(|t| t.shares)
+                    .unwrap_or_else(|_| Shares::nvlink_only())
+            })?;
+            println!("== {} under FlexLink ==", flow.name);
+            for p in &flex {
+                println!(
+                    "  {:<28} {:>8.3}s  nvlink={:>3.0}% pcie={:>3.0}% rdma={:>3.0}%",
+                    p.phase,
+                    p.seconds,
+                    p.nvlink_share * 100.0,
+                    p.pcie_share * 100.0,
+                    p.rdma_share * 100.0
+                );
+            }
+        }
+        "motivation" => {
+            use flexlink::workloads::analysis;
+            let b = analysis::prefill_breakdown(&topo, &analysis::PrefillSpec::paper_32b_64k())?;
+            println!("== §2.2: 32B model, 64K-sequence prefill on 8×H800 ==");
+            println!("  compute: {:.2}s", b.compute_s);
+            println!(
+                "  comm:    {:.2}s ({} AllReduce of {} MB)",
+                b.comm_s,
+                b.allreduces,
+                b.allreduce_bytes_per_layer >> 20
+            );
+            println!(
+                "  comm fraction: {:.0}%  (paper reports 36%)",
+                b.comm_fraction * 100.0
+            );
+        }
+        "overhead" => {
+            use flexlink::comm::Communicator;
+            let mut comm = Communicator::init(CommConfig::new(Preset::H800, 8))?;
+            let mut bufs = vec![vec![1.0f32; 1 << 20]; 8];
+            comm.all_reduce_f32(&mut bufs)?;
+            let o = bh::overhead(&comm);
+            println!("== §5.4 overhead analysis ==");
+            println!(
+                "  pinned host memory: {} KiB (peak {} KiB)",
+                o.pinned_bytes >> 10,
+                o.peak_pinned_bytes >> 10
+            );
+            println!(
+                "  host copies: {} ({} MiB moved)",
+                o.host_copies,
+                o.host_bytes_copied >> 20
+            );
+            println!("  one-time profiling (simulated): {:.2}s", o.profiling_time_s);
+        }
+        other => anyhow::bail!(
+            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead)"
+        ),
+    }
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Measurement plumbing: bandwidth statistics, link-utilization readouts,
+//! CSV emission for the bench harness, and Chrome-trace export ([`trace`]).
+
+pub mod trace;
+
+use crate::collectives::schedule::SimOutcome;
+use crate::collectives::CollectiveKind;
+use crate::links::PathId;
+use std::fmt::Write as _;
+
+/// Streaming summary statistics over f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+        sorted[idx]
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self
+            .samples
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Per-path effective utilization of one collective run: bytes the path
+/// carried divided by (completion time × the path's calibrated ceiling).
+/// Drives the Figure-3/4 style "link idleness" readouts.
+#[derive(Debug, Clone)]
+pub struct PathUtilization {
+    pub path: String,
+    pub bytes: u64,
+    pub seconds: f64,
+    pub effective_gbps: f64,
+}
+
+pub fn path_utilization(outcome: &SimOutcome, kind: CollectiveKind, n: usize) -> Vec<PathUtilization> {
+    outcome
+        .per_path
+        .iter()
+        .map(|p| {
+            let secs = p.time.as_secs_f64().max(1e-12);
+            let wire = kind.wire_bytes_per_gpu(p.bytes, n);
+            PathUtilization {
+                path: p.path.to_string(),
+                bytes: p.bytes,
+                seconds: secs,
+                effective_gbps: wire as f64 / secs / 1e9,
+            }
+        })
+        .collect()
+}
+
+/// Minimal CSV builder (header + rows), for EXPERIMENTS.md artifacts.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "CSV row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.join(","));
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+/// Convenience: percentage improvement of `new` over `base`.
+pub fn improvement_pct(base: f64, new: f64) -> f64 {
+    (new / base - 1.0) * 100.0
+}
+
+/// Pretty path label set for tables.
+pub fn path_label(p: PathId) -> &'static str {
+    match p {
+        PathId::Nvlink => "NVLink",
+        PathId::Pcie => "PCIe",
+        PathId::Rdma => "RDMA",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = Stats::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.percentile(0.5), 2.0);
+        assert_eq!(s.percentile(1.0), 4.0);
+        assert!((s.stddev() - 1.2909944).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        let text = c.to_string();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into()]);
+    }
+
+    #[test]
+    fn improvement_math() {
+        assert!((improvement_pct(100.0, 127.0) - 27.0).abs() < 1e-9);
+        assert!((improvement_pct(139.0, 139.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,109 @@
+//! Chrome-trace (about://tracing / Perfetto) export of a simulated
+//! collective schedule — every transfer/delay becomes a duration event on
+//! a per-path track, which makes pipeline bubbles and path imbalance
+//! visually obvious (the debugging tool the DESIGN.md §Perf loop used).
+
+use crate::links::PathId;
+use crate::sim::{Schedule, SimTime, TaskGraph};
+use std::fmt::Write as _;
+
+/// Render a `trace_event`-format JSON document for `schedule`.
+///
+/// Tracks: pid = path (nvlink/pcie/rdma/untagged), tid = greedy lane
+/// assignment so overlapping tasks stack instead of hiding each other.
+pub fn chrome_trace(graph: &TaskGraph, schedule: &Schedule) -> String {
+    #[derive(Clone)]
+    struct Ev {
+        tag: u32,
+        start: SimTime,
+        finish: SimTime,
+        idx: usize,
+    }
+    let mut evs: Vec<Ev> = (0..graph.len())
+        .map(|i| Ev {
+            tag: graph.tag_of(crate::sim::TaskId(i as u32)),
+            start: schedule.timings[i].start,
+            finish: schedule.timings[i].finish,
+            idx: i,
+        })
+        .filter(|e| e.finish > e.start) // zero-width events add noise
+        .collect();
+    evs.sort_by_key(|e| (e.tag, e.start, e.finish));
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    let mut first = true;
+    // Greedy lane assignment per tag.
+    let mut lanes: Vec<(u32, Vec<SimTime>)> = Vec::new();
+    for e in &evs {
+        let lane_set = match lanes.iter_mut().find(|(t, _)| *t == e.tag) {
+            Some((_, v)) => v,
+            None => {
+                lanes.push((e.tag, Vec::new()));
+                &mut lanes.last_mut().unwrap().1
+            }
+        };
+        let lane = match lane_set.iter_mut().enumerate().find(|(_, end)| **end <= e.start) {
+            Some((i, end)) => {
+                *end = e.finish;
+                i
+            }
+            None => {
+                lane_set.push(e.finish);
+                lane_set.len() - 1
+            }
+        };
+        let pname = PathId::from_tag(e.tag)
+            .map(|p| p.to_string())
+            .unwrap_or_else(|| format!("tag{}", e.tag));
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"t{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{},\"tid\":{}}}",
+            e.idx,
+            pname,
+            e.start.as_micros_f64(),
+            (e.finish - e.start).as_micros_f64(),
+            e.tag,
+            lane
+        );
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, ResourcePool, SimTime, TaskGraph};
+
+    #[test]
+    fn emits_valid_shape() {
+        let mut pool = ResourcePool::new();
+        let r = pool.add("link", 1000.0);
+        let mut g = TaskGraph::new();
+        let a = g.transfer(500, vec![r], SimTime::ZERO, vec![]);
+        let b = g.transfer(500, vec![r], SimTime::ZERO, vec![a]);
+        let _ = g.delay(SimTime::from_micros(10), vec![b]);
+        let sched = Engine::new(&pool).run(&g).unwrap();
+        let json = chrome_trace(&g, &sched);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.trim_end().ends_with("]}"));
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 3);
+        // Sequential tasks share lane 0 of their tag.
+        assert!(json.contains("\"tid\":0"));
+    }
+
+    #[test]
+    fn zero_width_events_skipped() {
+        let mut pool = ResourcePool::new();
+        let _ = pool.add("link", 1000.0);
+        let mut g = TaskGraph::new();
+        g.barrier(vec![]);
+        let sched = Engine::new(&pool).run(&g).unwrap();
+        let json = chrome_trace(&g, &sched);
+        assert_eq!(json.matches("\"ph\":\"X\"").count(), 0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Paper-style table/figure rendering for the repro harness.
+
+use std::fmt::Write as _;
+
+/// Fixed-width ASCII table matching the paper's row structure.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(s, " {:<w$} |", cells[i], w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.header);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+}
+
+/// Simple horizontal ASCII bar chart (Figure 2-style).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], max_width: usize) -> String {
+    let peak = rows.iter().map(|r| r.1).fold(0.0f64, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    for (label, v) in rows {
+        let w = ((v / peak) * max_width as f64).round() as usize;
+        let _ = writeln!(out, "{label:<label_w$} | {:<max_width$} {v:.1}", "#".repeat(w));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["op", "bw"]);
+        t.row(vec!["allgather".into(), "27".into()]);
+        t.row(vec!["ar".into(), "126.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("| allgather | 27    |"));
+    }
+
+    #[test]
+    fn bars_scale_to_peak() {
+        let s = bar_chart(
+            "B",
+            &[("a".into(), 10.0), ("b".into(), 5.0)],
+            10,
+        );
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Flat-parameter packing: the trainer's bridge between named model
+//! parameters (per-tensor HostTensors) and the single flat f32 vector the
+//! FlexLink gradient AllReduce operates on — the layout trick every
+//! data-parallel framework (Megatron, DDP) uses to turn many small
+//! gradients into one large, bandwidth-bound collective.
+
+use super::HostTensor;
+
+/// Shape table of a packed parameter set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackLayout {
+    dims: Vec<Vec<i64>>,
+    offsets: Vec<usize>,
+    total: usize,
+}
+
+impl PackLayout {
+    pub fn of(tensors: &[HostTensor]) -> Self {
+        let mut offsets = Vec::with_capacity(tensors.len());
+        let mut total = 0usize;
+        let mut dims = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            offsets.push(total);
+            total += t.data.len();
+            dims.push(t.dims.clone());
+        }
+        PackLayout {
+            dims,
+            offsets,
+            total,
+        }
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.total
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.dims.len()
+    }
+}
+
+/// Pack tensors into one flat vector (gradient-bucket layout).
+pub fn pack(tensors: &[HostTensor]) -> (Vec<f32>, PackLayout) {
+    let layout = PackLayout::of(tensors);
+    let mut flat = Vec::with_capacity(layout.total);
+    for t in tensors {
+        flat.extend_from_slice(&t.data);
+    }
+    (flat, layout)
+}
+
+/// Unpack a flat vector back into tensors under `layout`.
+pub fn unpack(flat: &[f32], layout: &PackLayout) -> Vec<HostTensor> {
+    assert_eq!(flat.len(), layout.total, "flat buffer length mismatch");
+    layout
+        .dims
+        .iter()
+        .zip(&layout.offsets)
+        .map(|(dims, off)| {
+            let len: i64 = dims.iter().product();
+            HostTensor::new(flat[*off..*off + len as usize].to_vec(), dims.clone())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = HostTensor::new(vec![1.0, 2.0], vec![2]);
+        let b = HostTensor::new(vec![3.0, 4.0, 5.0, 6.0], vec![2, 2]);
+        let (flat, layout) = pack(&[a.clone(), b.clone()]);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(layout.total_elems(), 6);
+        let back = unpack(&flat, &layout);
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn unpack_length_checked() {
+        let a = HostTensor::new(vec![1.0], vec![1]);
+        let (_, layout) = pack(&[a]);
+        unpack(&[1.0, 2.0], &layout);
+    }
+}

@@ -1,0 +1,127 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Python runs **once** at build time (`make artifacts`): L2
+//! (`python/compile/model.py`, JAX) + L1 (Pallas kernels) lower to HLO
+//! *text* in `artifacts/` (text, not serialized proto — jax ≥ 0.5 emits
+//! 64-bit instruction ids the bundled xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids). This module loads those artifacts on a
+//! PJRT CPU client and executes them from the Rust hot path — Python is
+//! never on the request path.
+
+pub mod buffers;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT client owning compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One loaded + compiled HLO module.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// A typed f32 host tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        let expect: i64 = dims.iter().product();
+        assert_eq!(expect as usize, data.len(), "dims/data mismatch");
+        HostTensor { data, dims }
+    }
+
+    pub fn scalar_batch(data: Vec<f32>) -> Self {
+        let d = data.len() as i64;
+        HostTensor::new(data, vec![d])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.dims)?)
+    }
+}
+
+impl XlaRuntime {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LoadedModule {
+    /// Execute with f32 host tensors; returns the flattened tuple of f32
+    /// outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>()?;
+                Ok(HostTensor { data, dims })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.dims, vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims/data mismatch")]
+    fn host_tensor_rejects_bad_dims() {
+        HostTensor::new(vec![1.0; 3], vec![2, 2]);
+    }
+
+    // PJRT-touching tests live in rust/tests/integration_runtime.rs so
+    // `cargo test --lib` stays artifact-free.
+}

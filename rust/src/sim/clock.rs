@@ -1,0 +1,158 @@
+//! Virtual time. All simulator timestamps are [`SimTime`] — nanoseconds on
+//! a `u64`, which gives ~584 years of range and exact ordering (no float
+//! drift in the event queue).
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in (or span of) virtual time, in nanoseconds.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default,
+)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// Largest representable time; used as "never".
+    pub const NEVER: SimTime = SimTime(u64::MAX);
+
+    /// Construct from seconds (fractional ok).
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0 && s.is_finite(), "negative/NaN sim time: {s}");
+        SimTime((s * 1e9).round() as u64)
+    }
+
+    /// Construct from microseconds.
+    pub fn from_micros(us: u64) -> Self {
+        SimTime(us * 1_000)
+    }
+
+    /// Construct from nanoseconds.
+    pub fn from_nanos(ns: u64) -> Self {
+        SimTime(ns)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn as_micros_f64(self) -> f64 {
+        self.0 as f64 / 1e3
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating subtraction — spans never go negative.
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    /// The time needed to move `bytes` at `rate` bytes/sec.
+    pub fn for_transfer(bytes: u64, rate_bps: f64) -> Self {
+        debug_assert!(rate_bps > 0.0, "zero/negative transfer rate");
+        SimTime::from_secs_f64(bytes as f64 / rate_bps)
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        if self >= other {
+            self
+        } else {
+            other
+        }
+    }
+
+    pub fn min(self, other: SimTime) -> SimTime {
+        if self <= other {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 = self.0.saturating_add(rhs.0);
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(self.0 >= rhs.0, "SimTime underflow");
+        SimTime(self.0 - rhs.0)
+    }
+}
+
+impl Sum for SimTime {
+    fn sum<I: Iterator<Item = SimTime>>(iter: I) -> SimTime {
+        iter.fold(SimTime::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let us = self.as_micros_f64();
+        if us < 1_000.0 {
+            write!(f, "{us:.2}us")
+        } else if us < 1_000_000.0 {
+            write!(f, "{:.3}ms", us / 1e3)
+        } else {
+            write!(f, "{:.4}s", us / 1e6)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        let t = SimTime::from_secs_f64(1.5);
+        assert_eq!(t.0, 1_500_000_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_time() {
+        // 1 GiB at 1e9 B/s ≈ 1.0737s
+        let t = SimTime::for_transfer(1 << 30, 1e9);
+        assert!((t.as_secs_f64() - 1.073741824).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_and_arith() {
+        let a = SimTime::from_micros(10);
+        let b = SimTime::from_micros(25);
+        assert!(a < b);
+        assert_eq!((b - a).as_micros_f64(), 15.0);
+        assert_eq!(b.saturating_sub(a), SimTime::from_micros(15));
+        assert_eq!(a.saturating_sub(b), SimTime::ZERO);
+        assert_eq!(a.max(b), b);
+        assert_eq!(a.min(b), a);
+    }
+
+    #[test]
+    fn display_units() {
+        assert_eq!(format!("{}", SimTime::from_micros(12)), "12.00us");
+        assert_eq!(format!("{}", SimTime::from_micros(12_500)), "12.500ms");
+        assert_eq!(format!("{}", SimTime::from_secs_f64(2.25)), "2.2500s");
+    }
+
+    #[test]
+    fn sum_spans() {
+        let total: SimTime = (1..=4u64).map(SimTime::from_micros).sum();
+        assert_eq!(total, SimTime::from_micros(10));
+    }
+}

@@ -1,0 +1,507 @@
+//! Task-graph executor over the fair-share flow simulator.
+//!
+//! A collective schedule compiles to a DAG of tasks:
+//! * [`TaskKind::Transfer`] — move `bytes` over a `route` of link
+//!   resources after a fixed activation `latency` (protocol/SW overhead:
+//!   kernel launch, staging setup, NIC doorbell, semaphore round-trip);
+//! * [`TaskKind::Delay`] — pure virtual-time cost (reduction compute,
+//!   pipeline drain);
+//! * [`TaskKind::Barrier`] — zero-cost join node.
+//!
+//! The engine executes the DAG in virtual time: a task starts when all its
+//! dependencies finish; concurrent transfers share link capacity max–min
+//! fairly. The result is a [`Schedule`] with per-task start/finish times
+//! and the makespan — the number every balancer decision is based on.
+
+use super::clock::SimTime;
+use super::fairshare::{FlowId, FlowSim};
+use super::resource::{ResourceId, ResourcePool};
+use anyhow::{bail, Result};
+use std::collections::{BinaryHeap, HashMap};
+
+/// Index of a task inside a [`TaskGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+/// What a task does when it runs.
+#[derive(Debug, Clone)]
+pub enum TaskKind {
+    /// A timed data movement across shared link resources.
+    Transfer {
+        bytes: u64,
+        route: Vec<ResourceId>,
+        /// Fair-share weight (e.g. #NCCL channels aggregated).
+        weight: f64,
+        /// Fixed activation latency before bytes start moving.
+        latency: SimTime,
+        /// Per-flow rate ceiling (protocol efficiency), bytes/s.
+        rate_cap: f64,
+    },
+    /// Fixed-duration work (reduction compute, drain bubbles).
+    Delay { duration: SimTime },
+    /// Join node; finishes the instant it starts.
+    Barrier,
+}
+
+#[derive(Debug, Clone)]
+struct TaskSpec {
+    kind: TaskKind,
+    deps: Vec<TaskId>,
+    /// Tag used by metrics to attribute time to a path ("nvlink", "pcie",
+    /// "rdma") or phase; free-form.
+    tag: u32,
+}
+
+/// Builder + storage for the collective's task DAG.
+#[derive(Debug, Clone, Default)]
+pub struct TaskGraph {
+    tasks: Vec<TaskSpec>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn add(&mut self, kind: TaskKind, deps: Vec<TaskId>) -> TaskId {
+        self.add_tagged(kind, deps, 0)
+    }
+
+    /// Add a task carrying a metrics tag (see [`Schedule::tagged_spans`]).
+    pub fn add_tagged(&mut self, kind: TaskKind, deps: Vec<TaskId>, tag: u32) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        for d in &deps {
+            assert!(d.0 < id.0, "deps must reference earlier tasks (got {d:?} for {id:?})");
+        }
+        self.tasks.push(TaskSpec { kind, deps, tag });
+        id
+    }
+
+    /// Convenience: transfer with weight 1.
+    pub fn transfer(
+        &mut self,
+        bytes: u64,
+        route: Vec<ResourceId>,
+        latency: SimTime,
+        deps: Vec<TaskId>,
+    ) -> TaskId {
+        self.add(
+            TaskKind::Transfer {
+                bytes,
+                route,
+                weight: 1.0,
+                latency,
+                rate_cap: f64::INFINITY,
+            },
+            deps,
+        )
+    }
+
+    pub fn delay(&mut self, duration: SimTime, deps: Vec<TaskId>) -> TaskId {
+        self.add(TaskKind::Delay { duration }, deps)
+    }
+
+    pub fn barrier(&mut self, deps: Vec<TaskId>) -> TaskId {
+        self.add(TaskKind::Barrier, deps)
+    }
+
+    pub fn tag_of(&self, id: TaskId) -> u32 {
+        self.tasks[id.0 as usize].tag
+    }
+}
+
+/// Per-task execution record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskTiming {
+    pub start: SimTime,
+    pub finish: SimTime,
+}
+
+/// Result of executing a [`TaskGraph`].
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub timings: Vec<TaskTiming>,
+    pub makespan: SimTime,
+    /// Number of discrete events processed (profiling counter).
+    pub events: u64,
+}
+
+impl Schedule {
+    pub fn finish_of(&self, id: TaskId) -> SimTime {
+        self.timings[id.0 as usize].finish
+    }
+
+    /// Latest finish among tasks whose tag matches — e.g. the completion
+    /// time of one path of a multi-path collective.
+    pub fn tag_finish(&self, graph: &TaskGraph, tag: u32) -> Option<SimTime> {
+        (0..self.timings.len())
+            .filter(|i| graph.tasks[*i].tag == tag)
+            .map(|i| self.timings[i].finish)
+            .max()
+    }
+
+    /// Total busy span (first start → last finish) among tasks with `tag`.
+    pub fn tagged_spans(&self, graph: &TaskGraph, tag: u32) -> Option<(SimTime, SimTime)> {
+        let mut first = SimTime::NEVER;
+        let mut last = SimTime::ZERO;
+        let mut any = false;
+        for (i, t) in graph.tasks.iter().enumerate() {
+            if t.tag == tag {
+                any = true;
+                first = first.min(self.timings[i].start);
+                last = last.max(self.timings[i].finish);
+            }
+        }
+        any.then_some((first, last))
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+enum Event {
+    /// Transfer latency elapsed; inject its flow.
+    Activate(TaskId),
+    /// Delay/Barrier done.
+    Finish(TaskId),
+}
+
+/// Heap entry ordered by time then insertion order (deterministic).
+#[derive(Debug, PartialEq, Eq)]
+struct HeapEv {
+    at: SimTime,
+    seq: u64,
+    ev: Event,
+}
+
+impl Ord for HeapEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse for min-heap.
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for HeapEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Executes task graphs against a resource pool.
+pub struct Engine<'a> {
+    pool: &'a ResourcePool,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(pool: &'a ResourcePool) -> Self {
+        Self { pool }
+    }
+
+    /// Run `graph` to completion; error on cycles or starved flows.
+    pub fn run(&self, graph: &TaskGraph) -> Result<Schedule> {
+        let n = graph.tasks.len();
+        let mut timings = vec![
+            TaskTiming {
+                start: SimTime::NEVER,
+                finish: SimTime::NEVER,
+            };
+            n
+        ];
+        // Dependents adjacency + pending-dep counts.
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        let mut pending: Vec<u32> = vec![0; n];
+        for (i, t) in graph.tasks.iter().enumerate() {
+            pending[i] = t.deps.len() as u32;
+            for d in &t.deps {
+                dependents[d.0 as usize].push(TaskId(i as u32));
+            }
+        }
+
+        let mut heap: BinaryHeap<HeapEv> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        let mut push = |heap: &mut BinaryHeap<HeapEv>, at: SimTime, ev: Event| {
+            heap.push(HeapEv { at, seq, ev });
+            seq += 1;
+        };
+
+        let mut flows = FlowSim::new();
+        let mut flow_task: HashMap<FlowId, TaskId> = HashMap::new();
+        let mut done: usize = 0;
+        let mut events: u64 = 0;
+        let mut now = SimTime::ZERO;
+        // Hoisted scratch (hot loop runs tens of thousands of times).
+        let mut finished: Vec<TaskId> = Vec::new();
+        let mut done_flows: Vec<FlowId> = Vec::new();
+
+        // Start a task: record start, emit its lifecycle event.
+        // (Closure-free to appease the borrow checker.)
+        macro_rules! start_task {
+            ($tid:expr, $t:expr) => {{
+                let tid: TaskId = $tid;
+                let t: SimTime = $t;
+                timings[tid.0 as usize].start = t;
+                match &graph.tasks[tid.0 as usize].kind {
+                    TaskKind::Transfer { latency, .. } => {
+                        push(&mut heap, t + *latency, Event::Activate(tid));
+                    }
+                    TaskKind::Delay { duration } => {
+                        push(&mut heap, t + *duration, Event::Finish(tid));
+                    }
+                    TaskKind::Barrier => {
+                        push(&mut heap, t, Event::Finish(tid));
+                    }
+                }
+            }};
+        }
+
+        // Seed roots.
+        for i in 0..n {
+            if pending[i] == 0 {
+                start_task!(TaskId(i as u32), SimTime::ZERO);
+            }
+        }
+
+        while done < n {
+            flows.recompute(self.pool);
+            let t_flow = flows.next_completion(now);
+            let t_evt = heap.peek().map(|e| e.at);
+            let next = match (t_flow.map(|f| f.1), t_evt) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => bail!(
+                    "engine stuck: {done}/{n} tasks done, no pending events \
+                     (dependency cycle or orphaned task)"
+                ),
+            };
+            if next == SimTime::NEVER {
+                bail!("engine stuck: flows starved with zero rate and no events");
+            }
+            flows.advance_by(next.saturating_sub(now));
+            now = next;
+
+            finished.clear();
+
+            // Drain all heap events at `now`.
+            while heap.peek().map(|e| e.at == now).unwrap_or(false) {
+                let HeapEv { ev, .. } = heap.pop().unwrap();
+                events += 1;
+                match ev {
+                    Event::Activate(tid) => {
+                        if let TaskKind::Transfer {
+                            bytes,
+                            route,
+                            weight,
+                            rate_cap,
+                            ..
+                        } = &graph.tasks[tid.0 as usize].kind
+                        {
+                            let fid = flows.add_capped(route.clone(), *bytes, *weight, *rate_cap);
+                            flow_task.insert(fid, tid);
+                        }
+                    }
+                    Event::Finish(tid) => finished.push(tid),
+                }
+            }
+
+            // Collect all flow completions at `now` in one pass (removing
+            // a flow only raises survivors' rates, so no *new* completion
+            // can appear at the same instant).
+            flows.recompute(self.pool);
+            flows.completions_at(now, &mut done_flows);
+            for i in 0..done_flows.len() {
+                let fid = done_flows[i];
+                flows.remove(fid);
+                let tid = flow_task.remove(&fid).expect("unknown flow");
+                events += 1;
+                finished.push(tid);
+            }
+
+            // Retire finished tasks and release dependents.
+            for &tid in finished.iter() {
+                debug_assert_eq!(
+                    timings[tid.0 as usize].finish,
+                    SimTime::NEVER,
+                    "task finished twice"
+                );
+                timings[tid.0 as usize].finish = now;
+                done += 1;
+                for dep in &dependents[tid.0 as usize] {
+                    pending[dep.0 as usize] -= 1;
+                    if pending[dep.0 as usize] == 0 {
+                        start_task!(*dep, now);
+                    }
+                }
+            }
+        }
+
+        let makespan = timings.iter().map(|t| t.finish).max().unwrap_or(SimTime::ZERO);
+        Ok(Schedule {
+            timings,
+            makespan,
+            events,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> (ResourcePool, ResourceId, ResourceId) {
+        let mut p = ResourcePool::new();
+        let a = p.add("a", 100.0);
+        let b = p.add("b", 100.0);
+        (p, a, b)
+    }
+
+    #[test]
+    fn single_transfer() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(1000, vec![a], SimTime::from_micros(5), vec![]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        // 5us latency + 10s at 100 B/s.
+        assert!((s.makespan.as_secs_f64() - 10.000005).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chain_is_sequential() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let t1 = g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        let t2 = g.transfer(1000, vec![a], SimTime::ZERO, vec![t1]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert!((s.finish_of(t2).as_secs_f64() - 20.0).abs() < 1e-6);
+        assert_eq!(s.timings[t2.0 as usize].start, s.finish_of(t1));
+    }
+
+    #[test]
+    fn parallel_transfers_share_link() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        // Two equal flows share 100 B/s → both take 20s.
+        assert!((s.makespan.as_secs_f64() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parallel_transfers_disjoint_links_overlap() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        g.transfer(1000, vec![b], SimTime::ZERO, vec![]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert!((s.makespan.as_secs_f64() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn early_finisher_speeds_up_survivor() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let short = g.transfer(500, vec![a], SimTime::ZERO, vec![]);
+        let long = g.transfer(1500, vec![a], SimTime::ZERO, vec![]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        // Shared at 50 B/s until t=10 (short done; long has 1000 left),
+        // then the survivor gets the full 100 B/s → done at t=20. Without
+        // rate recomputation on completion it would finish at t=30.
+        assert!((s.finish_of(short).as_secs_f64() - 10.0).abs() < 1e-6);
+        assert!((s.finish_of(long).as_secs_f64() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn delay_and_barrier() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let d = g.delay(SimTime::from_secs_f64(3.0), vec![]);
+        let t = g.transfer(100, vec![a], SimTime::ZERO, vec![d]);
+        let bar = g.barrier(vec![d, t]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert!((s.finish_of(bar).as_secs_f64() - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn diamond_dependencies() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        let root = g.barrier(vec![]);
+        let l = g.transfer(1000, vec![a], SimTime::ZERO, vec![root]);
+        let r = g.transfer(2000, vec![b], SimTime::ZERO, vec![root]);
+        let join = g.barrier(vec![l, r]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert!((s.finish_of(join).as_secs_f64() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tags_report_path_finish() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        g.add_tagged(
+            TaskKind::Transfer {
+                bytes: 1000,
+                route: vec![a],
+                weight: 1.0,
+                latency: SimTime::ZERO,
+                rate_cap: f64::INFINITY,
+            },
+            vec![],
+            1,
+        );
+        g.add_tagged(
+            TaskKind::Transfer {
+                bytes: 500,
+                route: vec![b],
+                weight: 1.0,
+                latency: SimTime::ZERO,
+                rate_cap: f64::INFINITY,
+            },
+            vec![],
+            2,
+        );
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert!((s.tag_finish(&g, 1).unwrap().as_secs_f64() - 10.0).abs() < 1e-6);
+        assert!((s.tag_finish(&g, 2).unwrap().as_secs_f64() - 5.0).abs() < 1e-6);
+        assert!(s.tag_finish(&g, 3).is_none());
+    }
+
+    #[test]
+    fn zero_byte_transfer_costs_only_latency() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(0, vec![a], SimTime::from_micros(42), vec![]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert_eq!(s.makespan, SimTime::from_micros(42));
+    }
+
+    #[test]
+    fn empty_graph() {
+        let (p, _, _) = pool();
+        let s = Engine::new(&p).run(&TaskGraph::new()).unwrap();
+        assert_eq!(s.makespan, SimTime::ZERO);
+    }
+
+    #[test]
+    fn deterministic_event_counts() {
+        let (p, a, b) = pool();
+        let mk = || {
+            let mut g = TaskGraph::new();
+            for i in 0..16u64 {
+                let route = if i % 2 == 0 { vec![a] } else { vec![b] };
+                g.transfer(100 + i * 10, route, SimTime::from_micros(i), vec![]);
+            }
+            g
+        };
+        let s1 = Engine::new(&p).run(&mk()).unwrap();
+        let s2 = Engine::new(&p).run(&mk()).unwrap();
+        assert_eq!(s1.makespan, s2.makespan);
+        assert_eq!(s1.events, s2.events);
+    }
+}

@@ -1,0 +1,400 @@
+//! Max–min fair bandwidth sharing among concurrent flows.
+//!
+//! Fluid flow model: each active flow has a route (a set of
+//! [`ResourceId`]s) and a weight; at any instant the rate vector is the
+//! weighted max–min fair allocation computed by progressive filling. The
+//! engine advances virtual time between rate-changing events (flow
+//! arrival/completion), integrating `remaining -= rate * dt`.
+//!
+//! This is how the paper's path contention materializes: a host-staged
+//! PCIe flow and an RDMA flow from the same GPU both route through that
+//! GPU's `pcie.up` resource and split its 64 GB/s between them, while the
+//! NVLink flow is untouched.
+
+use super::clock::SimTime;
+use super::resource::{ResourceId, ResourcePool};
+
+/// Handle of an active flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FlowId(pub u64);
+
+#[derive(Debug, Clone)]
+struct FlowState {
+    route: Vec<ResourceId>,
+    weight: f64,
+    remaining_bytes: f64,
+    /// Hard per-flow rate ceiling (protocol efficiency: a single NCCL
+    /// ring/channel set cannot saturate raw link bandwidth).
+    rate_cap: f64,
+    /// Current max–min rate in bytes/s (valid when `!dirty`).
+    rate: f64,
+}
+
+/// The set of currently-active flows plus their fair-share rates.
+///
+/// Storage is a slab indexed by `FlowId` (ids are never reused), with a
+/// dense list of active ids kept sorted by construction — the perf-pass
+/// replacement for the original HashMap (EXPERIMENTS.md §Perf: the
+/// per-event recompute dominated the DES).
+#[derive(Debug, Default)]
+pub struct FlowSim {
+    slab: Vec<Option<FlowState>>,
+    /// Active flow ids, ascending (push-only + retain keeps order).
+    active: Vec<u64>,
+    dirty: bool,
+    /// Scratch reused across recomputes to avoid hot-loop allocation.
+    scratch_used: Vec<f64>,
+    scratch_weight: Vec<f64>,
+    scratch_frozen: Vec<bool>,
+}
+
+impl FlowSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn active_flows(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Add a flow of `bytes` over `route`. `weight` scales its share of
+    /// every contended resource (NCCL-style multi-channel paths get
+    /// weight = #channels). Routes must be non-empty — pure latency is the
+    /// engine's job, not a flow.
+    pub fn add(&mut self, route: Vec<ResourceId>, bytes: u64, weight: f64) -> FlowId {
+        self.add_capped(route, bytes, weight, f64::INFINITY)
+    }
+
+    /// [`Self::add`] with a hard per-flow rate ceiling in bytes/s.
+    pub fn add_capped(
+        &mut self,
+        route: Vec<ResourceId>,
+        bytes: u64,
+        weight: f64,
+        rate_cap: f64,
+    ) -> FlowId {
+        assert!(!route.is_empty(), "flow route must name at least one resource");
+        assert!(weight > 0.0 && weight.is_finite());
+        assert!(rate_cap > 0.0);
+        let id = FlowId(self.slab.len() as u64);
+        self.slab.push(Some(FlowState {
+            route,
+            weight,
+            remaining_bytes: bytes as f64,
+            rate_cap,
+            rate: 0.0,
+        }));
+        self.active.push(id.0);
+        self.dirty = true;
+        id
+    }
+
+    /// Remove a flow (normally on completion). Returns true if it existed.
+    pub fn remove(&mut self, id: FlowId) -> bool {
+        let idx = id.0 as usize;
+        let existed = self
+            .slab
+            .get_mut(idx)
+            .map(|slot| slot.take().is_some())
+            .unwrap_or(false);
+        if existed {
+            self.active.retain(|&a| a != id.0);
+            self.dirty = true;
+        }
+        existed
+    }
+
+    fn get(&self, id: FlowId) -> Option<&FlowState> {
+        self.slab.get(id.0 as usize).and_then(|s| s.as_ref())
+    }
+
+    pub fn remaining_bytes(&self, id: FlowId) -> Option<f64> {
+        self.get(id).map(|f| f.remaining_bytes)
+    }
+
+    /// Current rate of a flow in bytes/s (after [`Self::recompute`]).
+    pub fn rate(&self, id: FlowId) -> Option<f64> {
+        debug_assert!(!self.dirty, "rates read before recompute");
+        self.get(id).map(|f| f.rate)
+    }
+
+    /// Recompute the weighted max–min fair rate allocation by progressive
+    /// filling. O(stages × (flows + resources)); stages ≤ #flows.
+    pub fn recompute(&mut self, pool: &ResourcePool) {
+        if !self.dirty {
+            return;
+        }
+        let n_res = pool.len();
+        self.scratch_used.clear();
+        self.scratch_used.resize(n_res, 0.0);
+        self.scratch_weight.clear();
+        self.scratch_weight.resize(n_res, 0.0);
+        self.scratch_frozen.clear();
+        self.scratch_frozen.resize(self.active.len(), false);
+
+        for &id in &self.active {
+            let f = self.slab[id as usize].as_ref().unwrap();
+            for r in &f.route {
+                self.scratch_weight[r.0 as usize] += f.weight;
+            }
+        }
+
+        let mut remaining = self.active.len();
+        while remaining > 0 {
+            // λ_next: the common per-weight level at which the first
+            // still-unsaturated resource fills up.
+            let mut lambda = f64::INFINITY;
+            for (rid, res) in pool.iter() {
+                let w = self.scratch_weight[rid.0 as usize];
+                if w > 1e-12 {
+                    let cap_left = (res.capacity_bps - self.scratch_used[rid.0 as usize]).max(0.0);
+                    lambda = lambda.min(cap_left / w);
+                }
+            }
+            // Per-flow rate caps also bound the common level.
+            for (k, &id) in self.active.iter().enumerate() {
+                if !self.scratch_frozen[k] {
+                    let f = self.slab[id as usize].as_ref().unwrap();
+                    lambda = lambda.min(f.rate_cap / f.weight);
+                }
+            }
+            if !lambda.is_finite() {
+                break;
+            }
+            // Freeze every unfrozen flow that crosses a resource now at
+            // capacity under level λ, or that hit its own cap.
+            let mut froze_any = false;
+            for k in 0..self.active.len() {
+                if self.scratch_frozen[k] {
+                    continue;
+                }
+                let id = self.active[k] as usize;
+                let f = self.slab[id].as_ref().unwrap();
+                let capped = f.weight * lambda >= f.rate_cap - 1e-9 * f.rate_cap.min(1e18);
+                let bottlenecked = capped
+                    || f.route.iter().any(|r| {
+                        let i = r.0 as usize;
+                        let cap_left = (pool.capacity(*r) - self.scratch_used[i]).max(0.0);
+                        self.scratch_weight[i] * lambda >= cap_left - 1e-9 * pool.capacity(*r)
+                    });
+                if bottlenecked {
+                    let rate = (f.weight * lambda).min(f.rate_cap);
+                    let weight = f.weight;
+                    // Split borrows: route stays in the slab entry while
+                    // the scratch tables update (no clone on the hot path).
+                    {
+                        let f = self.slab[id].as_ref().unwrap();
+                        for r in &f.route {
+                            let i = r.0 as usize;
+                            self.scratch_used[i] += rate;
+                            self.scratch_weight[i] -= weight;
+                        }
+                    }
+                    self.slab[id].as_mut().unwrap().rate = rate;
+                    self.scratch_frozen[k] = true;
+                    remaining -= 1;
+                    froze_any = true;
+                }
+            }
+            if !froze_any {
+                // Numerical corner: freeze everything at λ to terminate.
+                for k in 0..self.active.len() {
+                    if !self.scratch_frozen[k] {
+                        let id = self.active[k] as usize;
+                        let f = self.slab[id].as_mut().unwrap();
+                        f.rate = (f.weight * lambda).min(f.rate_cap);
+                        self.scratch_frozen[k] = true;
+                        remaining -= 1;
+                    }
+                }
+            }
+        }
+        self.dirty = false;
+    }
+
+    /// Earliest completion among active flows, as (flow, absolute time).
+    /// Requires rates to be current.
+    pub fn next_completion(&self, now: SimTime) -> Option<(FlowId, SimTime)> {
+        debug_assert!(!self.dirty, "next_completion before recompute");
+        self.active
+            .iter()
+            .map(|&id| {
+                let f = self.slab[id as usize].as_ref().unwrap();
+                let dt = if f.remaining_bytes <= 0.0 {
+                    SimTime::ZERO
+                } else if f.rate <= 0.0 {
+                    SimTime::NEVER
+                } else {
+                    SimTime::from_secs_f64(f.remaining_bytes / f.rate)
+                };
+                (FlowId(id), now + dt)
+            })
+            .min_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)))
+    }
+
+    /// All flows completing exactly at `now` (batched drain for the
+    /// engine — avoids a recompute per completion).
+    pub fn completions_at(&self, now: SimTime, out: &mut Vec<FlowId>) {
+        debug_assert!(!self.dirty, "completions_at before recompute");
+        out.clear();
+        for &id in &self.active {
+            let f = self.slab[id as usize].as_ref().unwrap();
+            let t = if f.remaining_bytes <= 0.0 {
+                now
+            } else if f.rate <= 0.0 {
+                SimTime::NEVER
+            } else {
+                now + SimTime::from_secs_f64(f.remaining_bytes / f.rate)
+            };
+            if t == now {
+                out.push(FlowId(id));
+            }
+        }
+    }
+
+    /// Integrate all flows forward by `dt` at their current rates.
+    pub fn advance_by(&mut self, dt: SimTime) {
+        debug_assert!(!self.dirty, "advance_by before recompute");
+        let secs = dt.as_secs_f64();
+        if secs == 0.0 {
+            return;
+        }
+        for &id in &self.active {
+            let f = self.slab[id as usize].as_mut().unwrap();
+            f.remaining_bytes = (f.remaining_bytes - f.rate * secs).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool1(cap: f64) -> (ResourcePool, ResourceId) {
+        let mut p = ResourcePool::new();
+        let r = p.add("link", cap);
+        (p, r)
+    }
+
+    #[test]
+    fn single_flow_full_capacity() {
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let f = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(f).unwrap() - 100.0).abs() < 1e-9);
+        let (id, t) = sim.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(id, f);
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_flows_split_evenly() {
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![r], 1000, 1.0);
+        let b = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(a).unwrap() - 50.0).abs() < 1e-9);
+        assert!((sim.rate(b).unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_split() {
+        let (pool, r) = pool1(90.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![r], 1000, 2.0);
+        let b = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(a).unwrap() - 60.0).abs() < 1e-9);
+        assert!((sim.rate(b).unwrap() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_min_bottleneck_redistribution() {
+        // Flow A crosses both links; flow B only the narrow one. B is
+        // capped at 10/2=5? No: max-min gives B the narrow link's fair
+        // share, and A picks up the slack on the wide link.
+        let mut pool = ResourcePool::new();
+        let wide = pool.add("wide", 100.0);
+        let narrow = pool.add("narrow", 10.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![wide, narrow], 1000, 1.0);
+        let b = sim.add(vec![wide], 1000, 1.0);
+        sim.recompute(&pool);
+        // A bottlenecked on narrow at 5? progressive filling: λ grows to 5
+        // (narrow fills: 2 flows? only A is on narrow). narrow: w=1 → λ≤10.
+        // wide: w=2 → λ≤50. So λ=10 freezes A at 10; B continues to 90.
+        assert!((sim.rate(a).unwrap() - 10.0).abs() < 1e-9);
+        assert!((sim.rate(b).unwrap() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_on_shared_pcie_lane() {
+        // The paper's §2.2.2 scenario: host-staged PCIe traffic and RDMA
+        // traffic share the GPU's own x16 lane (64 GB/s); the NIC adds a
+        // 12.5 GB/s constraint on the RDMA flow only.
+        let mut pool = ResourcePool::new();
+        let lane = pool.add("pcie.up.gpu0", 64e9);
+        let nic = pool.add("nic.gpu0", 12.5e9);
+        let mut sim = FlowSim::new();
+        let staged = sim.add(vec![lane], 1 << 30, 1.0);
+        let rdma = sim.add(vec![lane, nic], 1 << 30, 1.0);
+        sim.recompute(&pool);
+        // RDMA frozen at NIC rate 12.5; staged gets the rest of the lane.
+        assert!((sim.rate(rdma).unwrap() - 12.5e9).abs() < 1e-3);
+        assert!((sim.rate(staged).unwrap() - 51.5e9).abs() < 1e-3);
+    }
+
+    #[test]
+    fn advance_and_complete() {
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![r], 500, 1.0);
+        let b = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        let (first, t) = sim.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(first, a);
+        assert!((t.as_secs_f64() - 10.0).abs() < 1e-6);
+        sim.advance_by(t);
+        assert!(sim.remaining_bytes(a).unwrap() < 1e-6);
+        sim.remove(a);
+        sim.recompute(&pool);
+        // b now gets the whole link: 500 bytes left at 100 B/s.
+        assert!((sim.remaining_bytes(b).unwrap() - 500.0).abs() < 1e-6);
+        assert!((sim.rate(b).unwrap() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_cap_limits_flow_and_frees_capacity() {
+        // A capped flow cannot use its whole fair share; the uncapped
+        // competitor absorbs the slack (models NCCL protocol efficiency).
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let capped = sim.add_capped(vec![r], 1000, 1.0, 20.0);
+        let free = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(capped).unwrap() - 20.0).abs() < 1e-9);
+        assert!((sim.rate(free).unwrap() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_cap_alone_on_link() {
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let f = sim.add_capped(vec![r], 1000, 1.0, 30.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(f).unwrap() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_byte_flow_completes_now() {
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let f = sim.add(vec![r], 0, 1.0);
+        sim.recompute(&pool);
+        let (id, t) = sim.next_completion(SimTime::from_micros(7)).unwrap();
+        assert_eq!(id, f);
+        assert_eq!(t, SimTime::from_micros(7));
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event flow simulator — the hardware-timing substrate.
+//!
+//! The paper evaluates FlexLink on a real 8×H800 server; here the timing
+//! side of that testbed is a flow-level discrete-event simulator. Every
+//! data transfer is a *flow* over a route of shared [`resource`] capacities
+//! (links); concurrent flows share capacity max–min fairly
+//! ([`fairshare`]); a transfer task graph with dependencies is executed by
+//! the [`engine`], which returns per-task start/finish virtual times.
+//!
+//! The two-stage balancer only ever observes per-path completion times, so
+//! driving it from virtual time reproduces its behaviour exactly (see
+//! DESIGN.md, substitution ledger).
+
+pub mod clock;
+pub mod engine;
+pub mod fairshare;
+pub mod resource;
+
+pub use clock::SimTime;
+pub use engine::{Engine, Schedule, TaskGraph, TaskId, TaskKind, TaskTiming};
+pub use fairshare::FlowSim;
+pub use resource::{ResourceId, ResourcePool};

@@ -1,0 +1,125 @@
+//! Shared capacity resources (links, buses, memory channels).
+//!
+//! Every physical link in the topology becomes one *directed* resource with
+//! a capacity in bytes/sec. Flows traversing a route of resources share
+//! each resource max–min fairly with every other flow on it — this is the
+//! standard fluid approximation used by flow-level network simulators, and
+//! it is what makes path contention (§2.2.2 of the paper: GPU→NIC and
+//! GPU→host traffic squeezing through the same PCIe x16 lane) emerge
+//! naturally rather than being hard-coded.
+
+use std::fmt;
+
+/// Index of a resource inside a [`ResourcePool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ResourceId(pub u32);
+
+impl fmt::Display for ResourceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}", self.0)
+    }
+}
+
+/// A named, fixed-capacity shared resource.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    /// Human-readable name, e.g. `nvlink.up.gpu3`.
+    pub name: String,
+    /// Capacity in bytes per (virtual) second.
+    pub capacity_bps: f64,
+}
+
+/// The set of all resources in one simulated node.
+#[derive(Debug, Clone, Default)]
+pub struct ResourcePool {
+    resources: Vec<Resource>,
+}
+
+impl ResourcePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a resource; returns its id.
+    pub fn add(&mut self, name: impl Into<String>, capacity_bps: f64) -> ResourceId {
+        assert!(
+            capacity_bps > 0.0 && capacity_bps.is_finite(),
+            "resource capacity must be positive/finite"
+        );
+        let id = ResourceId(self.resources.len() as u32);
+        self.resources.push(Resource {
+            name: name.into(),
+            capacity_bps,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.resources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resources.is_empty()
+    }
+
+    pub fn get(&self, id: ResourceId) -> &Resource {
+        &self.resources[id.0 as usize]
+    }
+
+    pub fn capacity(&self, id: ResourceId) -> f64 {
+        self.resources[id.0 as usize].capacity_bps
+    }
+
+    /// Look a resource up by name (slow; intended for tests/reporting).
+    pub fn find(&self, name: &str) -> Option<ResourceId> {
+        self.resources
+            .iter()
+            .position(|r| r.name == name)
+            .map(|i| ResourceId(i as u32))
+    }
+
+    /// Scale one resource's capacity (used by failure injection and the
+    /// calibration sweeps).
+    pub fn scale_capacity(&mut self, id: ResourceId, factor: f64) {
+        assert!(factor > 0.0 && factor.is_finite());
+        self.resources[id.0 as usize].capacity_bps *= factor;
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (ResourceId, &Resource)> {
+        self.resources
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (ResourceId(i as u32), r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_lookup() {
+        let mut pool = ResourcePool::new();
+        let a = pool.add("nvlink.up.gpu0", 200e9);
+        let b = pool.add("pcie.up.gpu0", 64e9);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.capacity(a), 200e9);
+        assert_eq!(pool.get(b).name, "pcie.up.gpu0");
+        assert_eq!(pool.find("pcie.up.gpu0"), Some(b));
+        assert_eq!(pool.find("missing"), None);
+    }
+
+    #[test]
+    fn scale() {
+        let mut pool = ResourcePool::new();
+        let a = pool.add("x", 100.0);
+        pool.scale_capacity(a, 0.5);
+        assert_eq!(pool.capacity(a), 50.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        ResourcePool::new().add("bad", 0.0);
+    }
+}

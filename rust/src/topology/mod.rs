@@ -1,0 +1,192 @@
+//! Hardware topology: the explicit resource graph of one GPU server.
+//!
+//! Builds, from a [`NodeSpec`], the directed bandwidth resources each
+//! transport routes over:
+//!
+//! ```text
+//!   GPU g ──nvlink.up[g]──▶ NVSwitch ──nvlink.down[g']──▶ GPU g'
+//!   GPU g ──pcie.up[g]──▶ PCIe switch ──▶ host DRAM (hostmem[numa])
+//!                         └──▶ NIC g (nic.up[g]) ─▶ fabric ─▶ nic.down[g']
+//! ```
+//!
+//! On current platforms GPU→host and GPU→NIC traffic *both* traverse
+//! `pcie.up[g]` (path contention, §2.2.2); on GB300-class nodes
+//! (`path_contention = false`) the NIC hangs off its own lane, so RDMA
+//! routes skip the shared PCIe resource.
+
+pub mod numa;
+
+use crate::config::presets::NodeSpec;
+use crate::sim::{ResourceId, ResourcePool};
+
+/// GPU index within the node.
+pub type GpuId = usize;
+
+/// The built resource graph (indices into `pool`).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub spec: NodeSpec,
+    pub pool: ResourcePool,
+    /// Per-GPU NVLink egress into the NVSwitch plane.
+    pub nvlink_up: Vec<ResourceId>,
+    /// Per-GPU NVLink ingress from the NVSwitch plane.
+    pub nvlink_down: Vec<ResourceId>,
+    /// Per-GPU PCIe egress (GPU → PCIe switch): shared by staged-host and
+    /// (on contended platforms) NIC traffic.
+    pub pcie_up: Vec<ResourceId>,
+    /// Per-GPU PCIe ingress (PCIe switch → GPU).
+    pub pcie_down: Vec<ResourceId>,
+    /// Per-GPU NIC egress / ingress.
+    pub nic_up: Vec<ResourceId>,
+    pub nic_down: Vec<ResourceId>,
+    /// Per-NUMA-node host memory bandwidth for staging buffers.
+    pub hostmem: Vec<ResourceId>,
+    /// NUMA node of each GPU.
+    pub numa_of: Vec<usize>,
+}
+
+impl Topology {
+    /// Build the resource graph for `spec`.
+    pub fn build(spec: &NodeSpec) -> Self {
+        let n = spec.n_gpus;
+        assert!(n >= 2, "topology needs ≥2 GPUs");
+        let mut pool = ResourcePool::new();
+        let mut nvlink_up = Vec::with_capacity(n);
+        let mut nvlink_down = Vec::with_capacity(n);
+        let mut pcie_up = Vec::with_capacity(n);
+        let mut pcie_down = Vec::with_capacity(n);
+        let mut nic_up = Vec::with_capacity(n);
+        let mut nic_down = Vec::with_capacity(n);
+
+        for g in 0..n {
+            nvlink_up.push(pool.add(format!("nvlink.up.gpu{g}"), spec.nvlink_unidir_bps()));
+            nvlink_down.push(pool.add(format!("nvlink.down.gpu{g}"), spec.nvlink_unidir_bps()));
+            pcie_up.push(pool.add(format!("pcie.up.gpu{g}"), spec.pcie_unidir_bps()));
+            pcie_down.push(pool.add(format!("pcie.down.gpu{g}"), spec.pcie_unidir_bps()));
+            nic_up.push(pool.add(format!("nic.up.gpu{g}"), spec.nic_unidir_bps()));
+            nic_down.push(pool.add(format!("nic.down.gpu{g}"), spec.nic_unidir_bps()));
+        }
+
+        let numa_of = numa::assign(n, spec.numa_nodes);
+        let hostmem = (0..spec.numa_nodes.max(1))
+            .map(|i| {
+                pool.add(
+                    format!("hostmem.numa{i}"),
+                    spec.host_mem_gbps * 1e9 / spec.numa_nodes.max(1) as f64,
+                )
+            })
+            .collect();
+
+        Topology {
+            spec: spec.clone(),
+            pool,
+            nvlink_up,
+            nvlink_down,
+            pcie_up,
+            pcie_down,
+            nic_up,
+            nic_down,
+            hostmem,
+            numa_of,
+        }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.spec.n_gpus
+    }
+
+    /// Route of an NVLink P2P transfer src → dst.
+    pub fn nvlink_route(&self, src: GpuId, dst: GpuId) -> Vec<ResourceId> {
+        debug_assert_ne!(src, dst);
+        vec![self.nvlink_up[src], self.nvlink_down[dst]]
+    }
+
+    /// Route of the device-to-host leg of a staged PCIe transfer
+    /// (producer GPU → pinned buffer on the producer's NUMA node — the
+    /// NUMA-aware allocation of §3.1).
+    pub fn pcie_d2h_route(&self, src: GpuId) -> Vec<ResourceId> {
+        vec![self.pcie_up[src], self.hostmem[self.numa_of[src]]]
+    }
+
+    /// Route of the host-to-device leg (pinned buffer → consumer GPU).
+    /// The buffer lives on the *producer's* NUMA node.
+    pub fn pcie_h2d_route(&self, src: GpuId, dst: GpuId) -> Vec<ResourceId> {
+        vec![self.hostmem[self.numa_of[src]], self.pcie_down[dst]]
+    }
+
+    /// Route of an RDMA put src → dst. On contended platforms the flow
+    /// crosses the GPU's own PCIe lane on both ends (§2.2.2); on
+    /// decoupled (GB300-class) platforms it only uses the NIC resources.
+    pub fn rdma_route(&self, src: GpuId, dst: GpuId) -> Vec<ResourceId> {
+        debug_assert_ne!(src, dst);
+        if self.spec.path_contention {
+            vec![
+                self.pcie_up[src],
+                self.nic_up[src],
+                self.nic_down[dst],
+                self.pcie_down[dst],
+            ]
+        } else {
+            vec![self.nic_up[src], self.nic_down[dst]]
+        }
+    }
+
+    /// Ring neighbour (next rank) among the first `n` GPUs.
+    pub fn ring_next(&self, g: GpuId, n: usize) -> GpuId {
+        (g + 1) % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    #[test]
+    fn builds_h800() {
+        let t = Topology::build(&Preset::H800.spec());
+        assert_eq!(t.n_gpus(), 8);
+        assert_eq!(t.nvlink_up.len(), 8);
+        assert_eq!(t.hostmem.len(), 2);
+        assert!((t.pool.capacity(t.nvlink_up[0]) - 200e9).abs() < 1.0);
+        assert!((t.pool.capacity(t.pcie_up[3]) - 64e9).abs() < 1.0);
+        assert!((t.pool.capacity(t.nic_up[7]) - 25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn contended_rdma_route_crosses_pcie_lane() {
+        let t = Topology::build(&Preset::H800.spec());
+        let r = t.rdma_route(0, 1);
+        assert!(r.contains(&t.pcie_up[0]));
+        assert!(r.contains(&t.pcie_down[1]));
+        assert!(r.contains(&t.nic_up[0]));
+    }
+
+    #[test]
+    fn gb300_rdma_route_decoupled() {
+        let t = Topology::build(&Preset::Gb300.spec());
+        let r = t.rdma_route(0, 1);
+        assert!(!r.contains(&t.pcie_up[0]));
+        assert_eq!(r, vec![t.nic_up[0], t.nic_down[1]]);
+    }
+
+    #[test]
+    fn numa_aware_staging_routes() {
+        let t = Topology::build(&Preset::H800.spec());
+        // GPU 0 is on NUMA 0, GPU 7 on NUMA 1 (even split).
+        assert_eq!(t.numa_of[0], 0);
+        assert_eq!(t.numa_of[7], 1);
+        assert!(t.pcie_d2h_route(0).contains(&t.hostmem[0]));
+        assert!(t.pcie_d2h_route(7).contains(&t.hostmem[1]));
+        // H2D reads from the producer's NUMA node.
+        assert!(t.pcie_h2d_route(7, 0).contains(&t.hostmem[1]));
+    }
+
+    #[test]
+    fn ring_next_wraps() {
+        let t = Topology::build(&Preset::H800.spec());
+        assert_eq!(t.ring_next(7, 8), 0);
+        assert_eq!(t.ring_next(3, 4), 0);
+        assert_eq!(t.ring_next(1, 4), 2);
+    }
+}

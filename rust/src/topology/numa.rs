@@ -1,0 +1,48 @@
+//! NUMA placement. §3.1: "We bind CPU processes to the physical cores on
+//! the NUMA node closest to the GPU ... and allocate the shared
+//! pinned-memory buffer in a NUMA-aware manner."
+//!
+//! On a 2-socket H800 box GPUs 0–3 sit under socket 0 and 4–7 under
+//! socket 1; we reproduce that even split, and the topology routes each
+//! GPU's staging traffic through its own socket's memory resource. The
+//! ablation bench `numa_blind` reroutes everything through socket 0 to
+//! quantify what the paper's NUMA-aware allocation buys.
+
+/// Assign `n_gpus` to `numa_nodes` sockets in contiguous even blocks.
+pub fn assign(n_gpus: usize, numa_nodes: usize) -> Vec<usize> {
+    let nodes = numa_nodes.max(1);
+    let per = n_gpus.div_ceil(nodes);
+    (0..n_gpus).map(|g| (g / per).min(nodes - 1)).collect()
+}
+
+/// The NUMA-blind placement used by the ablation: everything on node 0.
+pub fn assign_blind(n_gpus: usize) -> Vec<usize> {
+    vec![0; n_gpus]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_8_over_2() {
+        assert_eq!(assign(8, 2), vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn odd_counts() {
+        assert_eq!(assign(6, 4), vec![0, 0, 1, 1, 2, 2]);
+        assert_eq!(assign(3, 2), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn single_node() {
+        assert_eq!(assign(4, 1), vec![0, 0, 0, 0]);
+        assert_eq!(assign(4, 0), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn blind_is_all_zero() {
+        assert_eq!(assign_blind(5), vec![0; 5]);
+    }
+}

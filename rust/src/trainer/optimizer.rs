@@ -1,0 +1,107 @@
+//! Adam, twice: the AOT-lowered XLA artifact (the production path — L2
+//! owns the math, Rust owns the buffers) and a bit-equivalent Rust
+//! fallback used when artifacts are absent and by the cross-check tests.
+
+use crate::runtime::{HostTensor, LoadedModule};
+use anyhow::Result;
+
+/// Adam moments + hyperparameters (flat, matching the packed params).
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl AdamState {
+    pub fn new(n: usize, lr: f32) -> Self {
+        AdamState {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    /// In-place Rust Adam step (`t` is 1-based).
+    pub fn apply(&mut self, params: &mut [f32], grads: &[f32], t: u32) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        let b1t = 1.0 - self.beta1.powi(t as i32);
+        let b2t = 1.0 - self.beta2.powi(t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Run the AOT `adam_step` artifact: inputs (params, grads, m, v, t, lr)
+/// → outputs (params', m', v'); moments round-trip through `state`.
+pub fn adam_step_xla(
+    module: &LoadedModule,
+    params: &mut Vec<f32>,
+    grads: &[f32],
+    state: &mut AdamState,
+    t: f32,
+) -> Result<()> {
+    let inputs = [
+        HostTensor::scalar_batch(params.clone()),
+        HostTensor::scalar_batch(grads.to_vec()),
+        HostTensor::scalar_batch(state.m.clone()),
+        HostTensor::scalar_batch(state.v.clone()),
+        HostTensor::new(vec![t], vec![1]),
+        HostTensor::new(vec![state.lr], vec![1]),
+    ];
+    let mut out = module.run(&inputs)?;
+    anyhow::ensure!(out.len() == 3, "adam_step artifact must return 3 tensors");
+    state.v = std::mem::take(&mut out[2].data);
+    state.m = std::mem::take(&mut out[1].data);
+    *params = std::mem::take(&mut out[0].data);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_descends_quadratic() {
+        // Minimize f(x) = Σ (x_i - c_i)^2; Adam must approach c.
+        let c = [3.0f32, -1.5, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut st = AdamState::new(3, 0.05);
+        for t in 1..=500 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            st.apply(&mut x, &g, t);
+        }
+        for (xi, ci) in x.iter().zip(&c) {
+            assert!((xi - ci).abs() < 0.05, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        // Bias correction makes step ≈ lr·sign(g) at t=1.
+        let mut x = vec![0.0f32];
+        let mut st = AdamState::new(1, 0.01);
+        st.apply(&mut x, &[42.0], 1);
+        assert!((x[0] + 0.01).abs() < 1e-4, "x={}", x[0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let mut st = AdamState::new(2, 0.1);
+        let mut x = vec![0.0f32; 3];
+        st.apply(&mut x, &[1.0, 2.0, 3.0], 1);
+    }
+}

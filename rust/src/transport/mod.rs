@@ -1,0 +1,120 @@
+//! Functional transport fabric: the channels that actually move bytes.
+//!
+//! Every (path, producer → consumer) pair gets a double-buffered
+//! [`StagingChannel`] guarded by the §3.1 monotonic-counter protocol.
+//! NVLink P2P, staged PCIe, and NVSHMEM-put RDMA differ enormously in
+//! *timing* (the DES's job) but are functionally the same operation — a
+//! chunked copy into the consumer's memory — which is exactly why
+//! FlexLink can split one message across all three without changing the
+//! result (the "lossless" property, verified in `exec` tests).
+
+use crate::links::PathId;
+use crate::memory::{MemoryLedger, StagingChannel};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// All functional channels of one Communicator, created lazily per
+/// (path, src, dst) and reused across collective invocations — matching
+/// the paper's allocate-once pinned-buffer design (§5.4).
+pub struct Fabric {
+    n: usize,
+    chunk_bytes: usize,
+    ledger: Arc<MemoryLedger>,
+    channels: Mutex<HashMap<(PathId, usize, usize), Arc<StagingChannel>>>,
+}
+
+impl Fabric {
+    pub fn new(n: usize, chunk_bytes: usize, ledger: Arc<MemoryLedger>) -> Self {
+        assert!(n >= 2);
+        assert!(chunk_bytes >= 16, "chunk must hold at least a few elements");
+        Fabric {
+            n,
+            chunk_bytes,
+            ledger,
+            channels: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    pub fn chunk_bytes(&self) -> usize {
+        self.chunk_bytes
+    }
+
+    pub fn ledger(&self) -> &Arc<MemoryLedger> {
+        &self.ledger
+    }
+
+    /// The channel `src → dst` on `path` (created on first use).
+    pub fn channel(&self, path: PathId, src: usize, dst: usize) -> Arc<StagingChannel> {
+        assert!(src < self.n && dst < self.n && src != dst);
+        let mut map = self.channels.lock().unwrap();
+        map.entry((path, src, dst))
+            .or_insert_with(|| Arc::new(StagingChannel::new(self.chunk_bytes, &self.ledger)))
+            .clone()
+    }
+
+    /// Number of channels materialized so far (overhead reporting).
+    pub fn channel_count(&self) -> usize {
+        self.channels.lock().unwrap().len()
+    }
+}
+
+/// Reinterpret an f32 slice as bytes (little-endian wire format).
+pub fn f32_as_bytes(x: &[f32]) -> &[u8] {
+    // SAFETY: f32 and u8 have no invalid bit patterns; lifetime and
+    // length are preserved.
+    unsafe { std::slice::from_raw_parts(x.as_ptr().cast::<u8>(), x.len() * 4) }
+}
+
+/// Reinterpret a mutable f32 slice as bytes.
+pub fn f32_as_bytes_mut(x: &mut [f32]) -> &mut [u8] {
+    // SAFETY: as above; exclusive borrow carries over.
+    unsafe { std::slice::from_raw_parts_mut(x.as_mut_ptr().cast::<u8>(), x.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channels_are_cached_per_edge() {
+        let fabric = Fabric::new(4, 4096, MemoryLedger::new());
+        let a = fabric.channel(PathId::Pcie, 0, 1);
+        let b = fabric.channel(PathId::Pcie, 0, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        let _c = fabric.channel(PathId::Rdma, 0, 1);
+        let _d = fabric.channel(PathId::Pcie, 1, 2);
+        assert_eq!(fabric.channel_count(), 3);
+    }
+
+    #[test]
+    fn pinned_accounting_grows_with_channels() {
+        let ledger = MemoryLedger::new();
+        let fabric = Fabric::new(2, 1 << 20, ledger.clone());
+        let _ = fabric.channel(PathId::Pcie, 0, 1);
+        // Double-buffered: 2 slots of 1 MiB.
+        assert_eq!(ledger.pinned_bytes(), 2 << 20);
+    }
+
+    #[test]
+    fn f32_byte_views_roundtrip() {
+        let mut v = vec![1.5f32, -2.25, 3.0];
+        let bytes = f32_as_bytes(&v).to_vec();
+        let mut w = vec![0f32; 3];
+        f32_as_bytes_mut(&mut w).copy_from_slice(&bytes);
+        assert_eq!(v, w);
+        // Mutating through the byte view mutates the floats.
+        f32_as_bytes_mut(&mut v)[0..4].copy_from_slice(&10f32.to_le_bytes());
+        assert_eq!(v[0], 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_channel_rejected() {
+        let fabric = Fabric::new(2, 4096, MemoryLedger::new());
+        fabric.channel(PathId::Nvlink, 1, 1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Zero-dependency CLI argument parsing (clap substitute): subcommand +
+//! `--flag value` / `--flag` options with typed accessors.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: one subcommand, positionals, and flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+/// Sentinel stored for boolean (valueless) flags.
+const TRUE: &str = "\u{1}true";
+
+impl Args {
+    /// Parse from an iterator of raw arguments (no program name).
+    /// `bool_flags` names flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                let value = if let Some(v) = inline {
+                    v
+                } else if bool_flags.contains(&name) {
+                    TRUE.to_string()
+                } else {
+                    it.next()
+                        .with_context(|| format!("flag --{name} expects a value"))?
+                };
+                out.flags.entry(name.to_string()).or_default().push(value);
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad usize '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name}: bad u64 '{v}'")),
+        }
+    }
+
+    /// Comma-separated u64 list.
+    pub fn u64_list_or(&self, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.flag(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .with_context(|| format!("--{name}: bad entry '{x}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        let a = Args::parse(argv("bench --gpus 8 --no-rdma table2"), &["no-rdma"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert!(a.has("no-rdma"));
+        assert_eq!(a.usize_or("gpus", 0).unwrap(), 8);
+        assert_eq!(a.positionals, vec!["table2"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(argv("x --sizes=32,64"), &[]).unwrap();
+        assert_eq!(a.u64_list_or("sizes", &[]).unwrap(), vec![32, 64]);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("x --gpus"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv("x"), &[]).unwrap();
+        assert_eq!(a.usize_or("gpus", 4).unwrap(), 4);
+        assert_eq!(a.str_or("preset", "h800"), "h800");
+        assert_eq!(a.u64_list_or("sizes", &[32, 64]).unwrap(), vec![32, 64]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(argv("x --gpus eight"), &[]).unwrap();
+        assert!(a.usize_or("gpus", 0).is_err());
+    }
+}

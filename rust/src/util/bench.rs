@@ -1,0 +1,88 @@
+//! Wall-clock micro-benchmark harness (criterion substitute): warmup,
+//! repeated timed runs, mean/min/max/stddev reporting in a stable,
+//! greppable format consumed by `cargo bench` and EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// The stable output line: `bench <name> mean=… min=… max=… iters=…`.
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<44} mean={:>12.3}us min={:>12.3}us max={:>12.3}us sd={:>10.3}us iters={}",
+            self.name,
+            self.mean_ns / 1e3,
+            self.min_ns / 1e3,
+            self.max_ns / 1e3,
+            self.stddev_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` (result is returned to prevent dead-code elimination of the
+/// computed value; callers hold it in a `black_box`-ish sink).
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        sink(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(2) as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: min,
+        max_ns: max,
+        stddev_ns: var.sqrt(),
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper).
+pub fn sink<T>(v: T) -> T {
+    std::hint::black_box(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
+        assert_eq!(r.iters, 5);
+        assert!(r.line().contains("bench spin"));
+    }
+}

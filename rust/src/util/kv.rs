@@ -1,0 +1,240 @@
+//! Minimal flat-TOML parser for run configuration files.
+//!
+//! Supports the subset the launcher emits/consumes: `key = value` lines,
+//! one optional level of `[section]`, strings (quoted), integers, floats,
+//! and booleans. Comments start with `#`. This replaces the `toml` crate
+//! in the offline sandbox.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat key space: top-level keys as-is, sectioned keys as
+/// `section.key`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct KvDoc {
+    map: BTreeMap<String, Value>,
+}
+
+impl KvDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                let name = name.trim();
+                if name.is_empty() || name.contains('[') {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            map.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(KvDoc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|i| i.max(0) as u64)
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        self.map.insert(key.to_string(), v);
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Serialize back out (flat keys; sectioned keys grouped).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let mut sections: BTreeMap<&str, Vec<(&str, &Value)>> = BTreeMap::new();
+        for (k, v) in &self.map {
+            match k.split_once('.') {
+                Some((s, rest)) => sections.entry(s).or_default().push((rest, v)),
+                None => sections.entry("").or_default().push((k, v)),
+            }
+        }
+        for (sec, entries) in sections {
+            if !sec.is_empty() {
+                let _ = writeln!(out, "\n[{sec}]");
+            }
+            for (k, v) in entries {
+                let rendered = match v {
+                    Value::Str(s) => format!("\"{s}\""),
+                    Value::Int(i) => i.to_string(),
+                    Value::Float(f) => format!("{f:?}"),
+                    Value::Bool(b) => b.to_string(),
+                };
+                let _ = writeln!(out, "{k} = {rendered}");
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string {s}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sectioned() {
+        let doc = KvDoc::parse(
+            "preset = \"h800\"\nn_gpus = 8 # inline comment\n\n[balancer]\nwindow = 10\nruntime_threshold = 0.15\nenabled = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("preset", "?"), "h800");
+        assert_eq!(doc.usize_or("n_gpus", 0), 8);
+        assert_eq!(doc.usize_or("balancer.window", 0), 10);
+        assert_eq!(doc.f64_or("balancer.runtime_threshold", 0.0), 0.15);
+        assert!(doc.bool_or("balancer.enabled", false));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = KvDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = KvDoc::parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("name", ""), "a#b");
+    }
+
+    #[test]
+    fn roundtrip_via_render() {
+        let mut doc = KvDoc::default();
+        doc.set("preset", Value::Str("gb200".into()));
+        doc.set("balancer.window", Value::Int(10));
+        doc.set("balancer.step", Value::Float(8.0));
+        let text = doc.render();
+        let back = KvDoc::parse(&text).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(KvDoc::parse("not a kv line").is_err());
+        assert!(KvDoc::parse("x = \"unterminated").is_err());
+        assert!(KvDoc::parse("[bad").is_err());
+        assert!(KvDoc::parse("k = what").is_err());
+    }
+}

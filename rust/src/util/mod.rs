@@ -1,0 +1,9 @@
+//! In-tree substitutes for crates unavailable in the offline sandbox:
+//! a deterministic PRNG ([`rng`]), a minimal flat-TOML config parser
+//! ([`kv`]), a zero-dependency CLI argument helper ([`args`]), and the
+//! timing harness the benches use instead of criterion ([`bench`]).
+
+pub mod args;
+pub mod bench;
+pub mod kv;
+pub mod rng;

@@ -1,0 +1,5 @@
+//! Paper workload models: the §2.2 motivation scenarios (Figures 3/4 and
+//! the 36%-prefill-comm claim) expressed over the same DES substrate.
+
+pub mod analysis;
+pub mod moe;

@@ -1,0 +1,166 @@
+//! Figures 3 & 4: the MoE training / inference communication phases and
+//! the per-link idleness they exhibit under NCCL vs FlexLink.
+//!
+//! Figure 3 (training): per-layer AllToAll (expert dispatch/combine) and
+//! gradient AllReduce over DP — NCCL leaves PCIe/RDMA "entirely idle".
+//! Figure 4 (inference): intra-node TP2 AllReduce + DP4, inter-node EP64
+//! (the inter-node legs are out of scope — FlexLink targets intra-node).
+
+use crate::balancer::shares::Shares;
+use crate::collectives::multipath::MultipathCollective;
+use crate::collectives::CollectiveKind;
+use crate::links::calib::Calibration;
+use crate::links::PathId;
+use crate::topology::Topology;
+use anyhow::Result;
+
+/// One communication phase of the workflow.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: String,
+    pub kind: CollectiveKind,
+    pub n_gpus: usize,
+    pub msg_bytes: u64,
+    pub calls: usize,
+}
+
+/// An MoE workflow = an ordered list of comm phases.
+#[derive(Debug, Clone)]
+pub struct MoeWorkflow {
+    pub name: String,
+    pub phases: Vec<Phase>,
+}
+
+impl MoeWorkflow {
+    /// Figure 3: MoE *training* — per-layer token dispatch/combine
+    /// (AllToAll) + the DP gradient AllReduce.
+    pub fn training_fig3() -> Self {
+        MoeWorkflow {
+            name: "moe-training (Fig. 3)".into(),
+            phases: vec![
+                Phase {
+                    name: "expert dispatch (AllToAll)".into(),
+                    kind: CollectiveKind::AllToAll,
+                    n_gpus: 8,
+                    msg_bytes: 64 << 20,
+                    calls: 16,
+                },
+                Phase {
+                    name: "expert combine (AllToAll)".into(),
+                    kind: CollectiveKind::AllToAll,
+                    n_gpus: 8,
+                    msg_bytes: 64 << 20,
+                    calls: 16,
+                },
+                Phase {
+                    name: "grad AllReduce (DP)".into(),
+                    kind: CollectiveKind::AllReduce,
+                    n_gpus: 8,
+                    msg_bytes: 256 << 20,
+                    calls: 4,
+                },
+            ],
+        }
+    }
+
+    /// Figure 4: MoE *inference* — intra-node TP2 AllReduce in attention
+    /// + DP4 KV AllGather phases (EP64 is inter-node, out of scope).
+    pub fn inference_fig4() -> Self {
+        MoeWorkflow {
+            name: "moe-inference TP2/DP4 (Fig. 4)".into(),
+            phases: vec![
+                Phase {
+                    name: "attention AllReduce (TP2)".into(),
+                    kind: CollectiveKind::AllReduce,
+                    n_gpus: 2,
+                    msg_bytes: 128 << 20,
+                    calls: 32,
+                },
+                Phase {
+                    name: "KV AllGather (DP4)".into(),
+                    kind: CollectiveKind::AllGather,
+                    n_gpus: 4,
+                    msg_bytes: 64 << 20,
+                    calls: 8,
+                },
+            ],
+        }
+    }
+}
+
+/// Per-phase utilization under one backend.
+#[derive(Debug, Clone)]
+pub struct PhaseUtilization {
+    pub phase: String,
+    pub seconds: f64,
+    /// Fraction of message carried per path (0 ⇒ the link idles).
+    pub nvlink_share: f64,
+    pub pcie_share: f64,
+    pub rdma_share: f64,
+}
+
+/// Run the workflow's phases under given shares (NCCL = nvlink-only;
+/// FlexLink = tuned) and report the per-link picture the figures draw.
+pub fn utilization(
+    topo: &Topology,
+    flow: &MoeWorkflow,
+    shares_for: impl Fn(CollectiveKind, usize) -> Shares,
+) -> Result<Vec<PhaseUtilization>> {
+    let mut out = Vec::with_capacity(flow.phases.len());
+    for ph in &flow.phases {
+        let shares = shares_for(ph.kind, ph.n_gpus);
+        let mc = MultipathCollective::new(topo, Calibration::h800(), ph.kind, ph.n_gpus);
+        let rep = mc.run(ph.msg_bytes, &shares)?;
+        out.push(PhaseUtilization {
+            phase: ph.name.clone(),
+            seconds: rep.total().as_secs_f64() * ph.calls as f64,
+            nvlink_share: shares.get(PathId::Nvlink) / 100.0,
+            pcie_share: shares.get(PathId::Pcie) / 100.0,
+            rdma_share: shares.get(PathId::Rdma) / 100.0,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    /// Figure 3's point: under NCCL every phase leaves PCIe and RDMA at
+    /// exactly zero utilization while NVLink carries 100%.
+    #[test]
+    fn nccl_leaves_aux_links_idle() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let u = utilization(&topo, &MoeWorkflow::training_fig3(), |_, _| {
+            Shares::nvlink_only()
+        })
+        .unwrap();
+        for ph in &u {
+            assert_eq!(ph.pcie_share, 0.0);
+            assert_eq!(ph.rdma_share, 0.0);
+            assert_eq!(ph.nvlink_share, 1.0);
+        }
+    }
+
+    /// FlexLink-style shares light the idle links up and the workflow's
+    /// total comm time drops.
+    #[test]
+    fn flexlink_lights_up_idle_links_and_wins() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let flow = MoeWorkflow::inference_fig4();
+        let nccl = utilization(&topo, &flow, |_, _| Shares::nvlink_only()).unwrap();
+        let flex = utilization(&topo, &flow, |_, _| {
+            Shares::from_pcts(&[
+                (PathId::Nvlink, 82.0),
+                (PathId::Pcie, 12.0),
+                (PathId::Rdma, 6.0),
+            ])
+        })
+        .unwrap();
+        let t_nccl: f64 = nccl.iter().map(|p| p.seconds).sum();
+        let t_flex: f64 = flex.iter().map(|p| p.seconds).sum();
+        assert!(t_flex < t_nccl, "flexlink {t_flex:.4}s vs nccl {t_nccl:.4}s");
+        assert!(flex.iter().all(|p| p.pcie_share > 0.0));
+    }
+}

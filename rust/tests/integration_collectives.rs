@@ -1,0 +1,165 @@
+//! Cross-module integration over the collectives stack: DES timings and
+//! the functional executor agreeing on one schedule, Table-2-level
+//! behaviours, and failure handling.
+
+use flexlink::balancer::Shares;
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::{exec, CollectiveKind};
+use flexlink::config::presets::Preset;
+use flexlink::links::calib::Calibration;
+use flexlink::links::PathId;
+use flexlink::memory::MemoryLedger;
+use flexlink::topology::Topology;
+use flexlink::transport::Fabric;
+
+fn h800() -> Topology {
+    Topology::build(&Preset::H800.spec())
+}
+
+/// The headline AllGather result at every paper size: FlexLink (tuned
+/// shares) strictly beats the NCCL baseline on the DES.
+#[test]
+fn flexlink_beats_nccl_across_allgather_grid() {
+    let topo = h800();
+    let cfg = flexlink::config::BalancerConfig::default();
+    for n in [2usize, 4, 8] {
+        for mib in [32u64, 64, 128, 256] {
+            let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, n);
+            let tuned = flexlink::balancer::initial_tune(
+                &mc,
+                mib << 20,
+                &cfg,
+                &[PathId::Pcie, PathId::Rdma],
+            )
+            .unwrap();
+            let flex = mc.run(mib << 20, &tuned.shares).unwrap().total();
+            let base = mc.run(mib << 20, &Shares::nvlink_only()).unwrap().total();
+            assert!(
+                flex <= base,
+                "AG n={n} {mib}MB: flex {flex} vs nccl {base}"
+            );
+        }
+    }
+}
+
+/// Functional multi-path AllReduce at production message sizes (32 MB)
+/// across 8 ranks stays bit-identical across ranks and correct.
+#[test]
+fn functional_allreduce_32mb_8ranks() {
+    let n = 8;
+    let elems = (32 << 20) / 4usize;
+    let fabric = Fabric::new(n, 4 << 20, MemoryLedger::new());
+    let shares = Shares::from_pcts(&[
+        (PathId::Nvlink, 81.0),
+        (PathId::Pcie, 12.0),
+        (PathId::Rdma, 7.0),
+    ]);
+    let ext = shares.to_extents((elems * 4) as u64, 4);
+    let mut bufs: Vec<Vec<f32>> = (0..n)
+        .map(|r| {
+            (0..elems)
+                .map(|i| ((i * (r + 1)) % 1000) as f32 * 0.001)
+                .collect()
+        })
+        .collect();
+    // Spot expectations before the reduce.
+    let spot: Vec<usize> = vec![0, 1, elems / 2, elems - 1];
+    let expect: Vec<f32> = spot
+        .iter()
+        .map(|&i| bufs.iter().map(|b| b[i]).sum::<f32>())
+        .collect();
+    exec::all_reduce_f32(&fabric, &ext, &mut bufs).unwrap();
+    for (k, &i) in spot.iter().enumerate() {
+        assert!(
+            (bufs[0][i] - expect[k]).abs() <= 1e-3 * expect[k].abs().max(1.0),
+            "elem {i}: {} vs {}",
+            bufs[0][i],
+            expect[k]
+        );
+    }
+    for r in 1..n {
+        assert_eq!(bufs[r], bufs[0], "rank {r} differs");
+    }
+}
+
+/// GB300 (no path contention): the decoupled NIC frees PCIe lane
+/// capacity, so the same shares finish no slower than on a contended
+/// custom twin with identical links.
+#[test]
+fn gb300_decoupling_helps_or_ties() {
+    let gb300 = Topology::build(&Preset::Gb300.spec());
+    let mut contended_spec = Preset::Gb300.spec();
+    contended_spec.path_contention = true;
+    let contended = Topology::build(&contended_spec);
+    let shares = Shares::from_pcts(&[
+        (PathId::Nvlink, 70.0),
+        (PathId::Pcie, 15.0),
+        (PathId::Rdma, 15.0),
+    ]);
+    for kind in [CollectiveKind::AllGather, CollectiveKind::AllReduce] {
+        let a = MultipathCollective::new(&gb300, Calibration::h800(), kind, 4)
+            .run(256 << 20, &shares)
+            .unwrap()
+            .total();
+        let b = MultipathCollective::new(&contended, Calibration::h800(), kind, 4)
+            .run(256 << 20, &shares)
+            .unwrap()
+            .total();
+        assert!(a <= b, "{kind}: decoupled {a} slower than contended {b}");
+    }
+}
+
+/// Failure injection: degrading the PCIe lane mid-flight (halved
+/// capacity) must slow the PCIe path but never corrupt data.
+#[test]
+fn degraded_link_slows_but_stays_correct() {
+    let mut topo = h800();
+    let shares = Shares::from_pcts(&[(PathId::Nvlink, 80.0), (PathId::Pcie, 20.0)]);
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, 4);
+    let healthy = mc.run(128 << 20, &shares).unwrap();
+    let t_healthy = healthy.outcome.time_of(PathId::Pcie).unwrap();
+    drop(mc);
+    for g in 0..4 {
+        let id = topo.pcie_up[g];
+        topo.pool.scale_capacity(id, 0.25);
+    }
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), CollectiveKind::AllGather, 4);
+    let degraded = mc.run(128 << 20, &shares).unwrap();
+    let t_degraded = degraded.outcome.time_of(PathId::Pcie).unwrap();
+    assert!(t_degraded > t_healthy, "degraded lane not slower");
+
+    // Functional correctness is independent of link health.
+    let fabric = Fabric::new(4, 1 << 16, MemoryLedger::new());
+    let ext = shares.to_extents(4096, 4);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
+    let mut outputs = vec![Vec::new(); 4];
+    exec::all_gather_f32(&fabric, &ext, &inputs, &mut outputs).unwrap();
+    let mut expect = Vec::new();
+    for r in 0..4 {
+        expect.extend(vec![r as f32; 1024]);
+    }
+    for o in &outputs {
+        assert_eq!(o, &expect);
+    }
+}
+
+/// Extension operators (§6 future work) time sensibly on every path.
+#[test]
+fn extension_ops_simulate_on_all_paths() {
+    let topo = h800();
+    for kind in [
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::Broadcast,
+        CollectiveKind::AllToAll,
+    ] {
+        let mc = MultipathCollective::new(&topo, Calibration::h800(), kind, 8);
+        let shares = Shares::from_pcts(&[
+            (PathId::Nvlink, 84.0),
+            (PathId::Pcie, 10.0),
+            (PathId::Rdma, 6.0),
+        ]);
+        let rep = mc.run(64 << 20, &shares).unwrap();
+        assert!(rep.total().as_secs_f64() > 0.0, "{kind} zero time");
+        assert_eq!(rep.path_times().len(), 3, "{kind} missing path times");
+    }
+}

@@ -1,0 +1,118 @@
+//! Runtime integration: load AOT artifacts on the PJRT CPU client and
+//! execute them from Rust — the L3↔L2/L1 boundary. Requires
+//! `make artifacts` (tests are skipped politely if absent).
+
+use flexlink::runtime::{HostTensor, XlaRuntime};
+use std::path::Path;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/tiny_train_step.hlo.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn pjrt_client_comes_up() {
+    let rt = XlaRuntime::cpu().unwrap();
+    assert!(rt.device_count() >= 1);
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn reduce_chunk_kernel_matches_rust_sum() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().unwrap();
+    let module = rt.load_hlo_text("artifacts/reduce_chunk.hlo.txt").unwrap();
+    let n = 1 << 20;
+    let acc: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
+    let chunk: Vec<f32> = (0..n).map(|i| (i % 31) as f32 - 7.0).collect();
+    let out = module
+        .run(&[
+            HostTensor::scalar_batch(acc.clone()),
+            HostTensor::scalar_batch(chunk.clone()),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    // The L1 Pallas combine must be the exact same float add Rust does —
+    // bit-for-bit (the lossless kernel-offload property).
+    for i in 0..n {
+        assert_eq!(out[0].data[i], acc[i] + chunk[i], "elem {i}");
+    }
+}
+
+#[test]
+fn tiny_init_is_deterministic_per_seed() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().unwrap();
+    let init = rt.load_hlo_text("artifacts/tiny_init.hlo.txt").unwrap();
+    let p1 = init.run(&[HostTensor::new(vec![0.0], vec![1])]).unwrap();
+    let p2 = init.run(&[HostTensor::new(vec![0.0], vec![1])]).unwrap();
+    let p3 = init.run(&[HostTensor::new(vec![5.0], vec![1])]).unwrap();
+    assert_eq!(p1[0].data, p2[0].data);
+    assert_ne!(p1[0].data, p3[0].data);
+    assert_eq!(p1[0].data.len(), 30336);
+}
+
+#[test]
+fn tiny_train_step_returns_finite_loss_and_grads() {
+    require_artifacts!();
+    let rt = XlaRuntime::cpu().unwrap();
+    let init = rt.load_hlo_text("artifacts/tiny_init.hlo.txt").unwrap();
+    let step = rt.load_hlo_text("artifacts/tiny_train_step.hlo.txt").unwrap();
+    let params = init.run(&[HostTensor::new(vec![1.0], vec![1])]).unwrap();
+    let toks: Vec<f32> = (0..4 * 32).map(|i| (i % 64) as f32).collect();
+    let out = step
+        .run(&[
+            params[0].clone(),
+            HostTensor::new(toks.clone(), vec![4, 32]),
+            HostTensor::new(toks, vec![4, 32]),
+        ])
+        .unwrap();
+    let loss = out[0].data[0];
+    // Untrained on 64-token vocab: loss ≈ ln(64) ≈ 4.16.
+    assert!(loss.is_finite() && loss > 2.0 && loss < 6.0, "loss={loss}");
+    assert_eq!(out[1].data.len(), 30336);
+    assert!(out[1].data.iter().all(|g| g.is_finite()));
+    let gmax = out[1].data.iter().fold(0f32, |a, g| a.max(g.abs()));
+    assert!(gmax > 0.0, "gradients identically zero");
+}
+
+#[test]
+fn adam_artifact_matches_rust_adam() {
+    require_artifacts!();
+    use flexlink::trainer::optimizer::{adam_step_xla, AdamState};
+    let rt = XlaRuntime::cpu().unwrap();
+    let adam = rt.load_hlo_text("artifacts/tiny_adam_step.hlo.txt").unwrap();
+    let n = 30336;
+    let mut params_xla: Vec<f32> = (0..n).map(|i| ((i * 37) % 101) as f32 * 0.01).collect();
+    let grads: Vec<f32> = (0..n).map(|i| ((i * 13) % 41) as f32 * 0.1 - 2.0).collect();
+    let mut params_rust = params_xla.clone();
+    let mut st_xla = AdamState::new(n, 0.01);
+    let mut st_rust = AdamState::new(n, 0.01);
+    for t in 1..=3 {
+        adam_step_xla(&adam, &mut params_xla, &grads, &mut st_xla, t as f32).unwrap();
+        st_rust.apply(&mut params_rust, &grads, t);
+    }
+    for i in (0..n).step_by(997) {
+        assert!(
+            (params_xla[i] - params_rust[i]).abs() < 1e-5,
+            "param {i}: xla {} vs rust {}",
+            params_xla[i],
+            params_rust[i]
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = XlaRuntime::cpu().unwrap();
+    let err = rt.load_hlo_text("artifacts/nonexistent.hlo.txt");
+    assert!(err.is_err());
+}
