@@ -1,30 +1,41 @@
-//! Quickstart: initialize FlexLink, run one AllReduce and one AllGather
-//! through the NCCL-compatible API, and print what the paper promises —
+//! Quickstart: initialize FlexLink, run typed collectives through the
+//! NCCL-compatible API (out-of-place buffers, full datatype/redop
+//! matrix), batch a group launch, and print what the paper promises —
 //! bandwidth above the NCCL baseline, with byte-identical results.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use flexlink::baseline::NcclBaseline;
 use flexlink::collectives::CollectiveKind;
-use flexlink::comm::{CommConfig, Communicator};
+use flexlink::comm::api::{
+    flexlink_all_gather, flexlink_all_reduce, flexlink_comm_init_all, flexlink_group_end,
+    flexlink_group_start, DataType, DeviceBuffer, RedOp,
+};
 use flexlink::config::presets::Preset;
 use flexlink::links::calib::Calibration;
 
 fn main() -> flexlink::Result<()> {
     // 8×H800 — the paper's evaluation platform (Table 1 row 1).
-    let mut comm = Communicator::init(CommConfig::new(Preset::H800, 8))?;
+    let mut comm = flexlink_comm_init_all(Preset::H800, 8)?;
     println!(
         "FlexLink up: {} ranks, one-time profiling {:.2}s (simulated)",
         comm.n_ranks(),
         comm.profiling_time.as_secs_f64()
     );
 
-    // A 64 MB gradient AllReduce (16M f32 elements).
+    // A 64 MB gradient AllReduce (16M f32 elements), out-of-place.
     let elems = (64 << 20) / 4;
-    let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![(r + 1) as f32; elems]).collect();
+    let sends: Vec<DeviceBuffer> = (0..8)
+        .map(|r| DeviceBuffer::from_f32(&vec![(r + 1) as f32; elems]))
+        .collect();
+    let mut recvs: Vec<DeviceBuffer> = (0..8)
+        .map(|_| DeviceBuffer::zeros(DataType::F32, elems))
+        .collect();
     let expected: f32 = (1..=8).sum::<i32>() as f32;
-    let rep = comm.all_reduce_f32(&mut bufs)?;
-    assert!(bufs.iter().all(|b| b.iter().all(|&v| v == expected)));
+    let rep = flexlink_all_reduce(&mut comm, &sends, &mut recvs, elems, DataType::F32, RedOp::Sum)?;
+    assert!(recvs
+        .iter()
+        .all(|b| b.to_f32_vec().iter().all(|&v| v == expected)));
 
     let nccl = NcclBaseline::new(
         comm.topology(),
@@ -41,11 +52,16 @@ fn main() -> flexlink::Result<()> {
         rep.shares
     );
 
-    // A 256 MB-per-rank AllGather — the headline +27% configuration.
-    let elems = (256 << 20) / 4;
-    let inputs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; elems]).collect();
-    let mut outputs = vec![Vec::new(); 8];
-    let rep = comm.all_gather_f32(&inputs, &mut outputs)?;
+    // A 256 MB-per-rank bf16 AllGather — the headline +27% configuration,
+    // in mixed precision.
+    let elems = (256 << 20) / 2;
+    let inputs: Vec<DeviceBuffer> = (0..8)
+        .map(|r| DeviceBuffer::from_f32_as(DataType::BF16, &vec![r as f32; elems]))
+        .collect();
+    let mut outputs: Vec<DeviceBuffer> = (0..8)
+        .map(|_| DeviceBuffer::zeros(DataType::BF16, 0))
+        .collect();
+    let rep = flexlink_all_gather(&mut comm, &inputs, &mut outputs, elems, DataType::BF16)?;
     assert_eq!(outputs[0].len(), 8 * elems);
     let nccl = NcclBaseline::new(
         comm.topology(),
@@ -55,11 +71,35 @@ fn main() -> flexlink::Result<()> {
     )
     .algbw_gbps(rep.msg_bytes)?;
     println!(
-        "allgather 256MB: {:>6.1} GB/s (NCCL {:.1} GB/s, {:+.1}%)  shares: {}",
+        "allgather 256MB (bf16): {:>6.1} GB/s (NCCL {:.1} GB/s, {:+.1}%)  shares: {}",
         rep.algbw_gbps(),
         nccl,
         (rep.algbw_gbps() / nccl - 1.0) * 100.0,
         rep.shares
+    );
+
+    // Group semantics: batch an AllReduce + AllGather into one fused
+    // launch (ncclGroupStart/ncclGroupEnd) and compare against
+    // launching them sequentially.
+    let elems = (16 << 20) / 4;
+    flexlink_group_start(&mut comm)?;
+    let mut ar: Vec<DeviceBuffer> = (0..8)
+        .map(|_| DeviceBuffer::from_f32(&vec![1.0f32; elems]))
+        .collect();
+    comm.all_reduce_in_place(&mut ar, RedOp::Avg)?;
+    let ag_in: Vec<DeviceBuffer> = (0..8)
+        .map(|r| DeviceBuffer::from_f32(&vec![r as f32; elems]))
+        .collect();
+    let mut ag_out: Vec<DeviceBuffer> = (0..8)
+        .map(|_| DeviceBuffer::zeros(DataType::F32, 0))
+        .collect();
+    comm.all_gather(&ag_in, &mut ag_out)?;
+    let group = flexlink_group_end(&mut comm)?;
+    println!(
+        "group launch: fused {} vs sequential {} ({:.2}x)",
+        group.fused_total,
+        group.sequential_total,
+        group.speedup()
     );
 
     let o = flexlink::bench_harness::overhead(&comm);

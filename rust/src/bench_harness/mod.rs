@@ -251,6 +251,78 @@ pub fn render_fig5(points: &[Fig5Point]) -> String {
     t.render()
 }
 
+/// Fused-group vs sequential launch comparison (NCCL group semantics:
+/// `group_start` / enqueue / `group_end` → one fused DES launch).
+#[derive(Debug, Clone)]
+pub struct GroupFusionRow {
+    pub kind: CollectiveKind,
+    pub msg_mib: u64,
+    pub individual_ms: f64,
+    pub fused_finish_ms: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct GroupFusionReport {
+    pub rows: Vec<GroupFusionRow>,
+    pub sequential_ms: f64,
+    pub fused_ms: f64,
+    pub speedup: f64,
+}
+
+/// Launch `calls` at `mib` MiB each, both fused and (implicitly)
+/// sequentially, on a fresh communicator.
+pub fn group_fusion(
+    preset: Preset,
+    n: usize,
+    mib: u64,
+    calls: &[CollectiveKind],
+) -> Result<GroupFusionReport> {
+    let mut cfg = crate::comm::CommConfig::new(preset, n);
+    cfg.tune_msg_bytes = mib << 20;
+    let mut comm = crate::comm::Communicator::init(cfg)?;
+    comm.group_start()?;
+    for &kind in calls {
+        comm.time_collective(kind, mib << 20)?;
+    }
+    let rep = comm.group_end()?;
+    Ok(GroupFusionReport {
+        rows: rep
+            .calls
+            .iter()
+            .map(|c| GroupFusionRow {
+                kind: c.kind,
+                msg_mib: c.msg_bytes >> 20,
+                individual_ms: c.individual.as_secs_f64() * 1e3,
+                fused_finish_ms: c.fused_finish.as_secs_f64() * 1e3,
+            })
+            .collect(),
+        sequential_ms: rep.sequential_total.as_secs_f64() * 1e3,
+        fused_ms: rep.fused_total.as_secs_f64() * 1e3,
+        speedup: rep.speedup(),
+    })
+}
+
+pub fn render_group_fusion(r: &GroupFusionReport) -> String {
+    let mut t = Table::new(
+        "Fused group launch (group_start/group_end) vs sequential",
+        &["call", "msg", "alone(ms)", "fused finish(ms)"],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.kind.to_string(),
+            format!("{}MB", row.msg_mib),
+            format!("{:.3}", row.individual_ms),
+            format!("{:.3}", row.fused_finish_ms),
+        ]);
+    }
+    let mut s = t.render();
+    s.push_str(&format!(
+        "sequential {:.3}ms  fused {:.3}ms  speedup {:.2}x\n",
+        r.sequential_ms, r.fused_ms, r.speedup
+    ));
+    s
+}
+
 /// §5.4 overhead report for a live communicator.
 #[derive(Debug, Clone)]
 pub struct OverheadReport {
@@ -328,6 +400,23 @@ mod tests {
                 r.idle_opportunity_pct
             );
         }
+    }
+
+    #[test]
+    fn group_fusion_beats_sequential() {
+        let r = group_fusion(
+            Preset::H800,
+            4,
+            16,
+            &[CollectiveKind::AllReduce, CollectiveKind::AllGather],
+        )
+        .unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.fused_ms <= r.sequential_ms);
+        assert!(r.speedup >= 1.0);
+        let rendered = render_group_fusion(&r);
+        assert!(rendered.contains("allreduce"));
+        assert!(rendered.contains("speedup"));
     }
 
     #[test]

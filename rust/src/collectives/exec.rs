@@ -1,26 +1,34 @@
 //! Functional (real-data) execution of multi-path collectives.
 //!
 //! One thread per (path, rank) runs the identical ring schedule the
-//! timing face simulates, moving real f32 data through the
+//! timing face simulates, moving real bytes through the
 //! [`crate::transport::Fabric`]'s counter-semaphore staging channels.
-//! Because AllReduce is elementwise and AllGather is a permutation of
-//! disjoint extents, splitting the message across paths cannot change the
-//! result — FlexLink's "lossless, without accuracy concern" claim — and
-//! the tests here check bit-exactness against straight-line references
-//! under many share splits.
+//! The executors are byte-level and dtype-generic: buffers are
+//! [`DeviceBuffer`]s, extents are element-aligned byte ranges, and every
+//! reduction dispatches through the [`crate::dtype::combine`] kernel, so
+//! one code path serves the full datatype × redop matrix. Because
+//! reductions are elementwise and gathers are permutations of disjoint
+//! extents, splitting the message across paths cannot change the result
+//! — FlexLink's "lossless, without accuracy concern" claim — and the
+//! tests here check bit-exactness against straight-line references under
+//! many share splits.
+//!
+//! [`RedOp::Avg`] follows NCCL: Sum on the wire, a divide-by-ranks
+//! finalizer on the reduced output.
 
 use super::ring;
+use crate::dtype::{scale_avg, DataType, DeviceBuffer, RedOp};
 use crate::links::PathId;
-use crate::transport::{f32_as_bytes, f32_as_bytes_mut, Fabric};
+use crate::transport::Fabric;
 use anyhow::Result;
 
 /// Byte extents per path over the message, as produced by
-/// [`crate::balancer::shares::Shares::to_extents`] (4-byte aligned).
+/// [`crate::balancer::shares::Shares::to_extents`] (element-aligned).
 pub type PathExtents = Vec<(PathId, u64, u64)>;
 
 /// Raw pointer handoff for disjoint-region writes from sibling threads.
 #[derive(Clone, Copy)]
-struct RawSlice(*mut f32, usize);
+struct RawSlice(*mut u8, usize);
 // SAFETY: every thread receives the same base pointer but writes disjoint
 // (path-extent × block) regions — see the region math in each executor.
 unsafe impl Send for RawSlice {}
@@ -28,7 +36,7 @@ impl RawSlice {
     /// # Safety
     /// Caller must guarantee `[off, off+len)` is in-bounds and not
     /// concurrently aliased by another thread.
-    unsafe fn region(&self, off: usize, len: usize) -> &'static mut [f32] {
+    unsafe fn region(&self, off: usize, len: usize) -> &'static mut [u8] {
         debug_assert!(off + len <= self.1);
         std::slice::from_raw_parts_mut(self.0.add(off), len)
     }
@@ -37,7 +45,7 @@ impl RawSlice {
     /// only used as a namespace to keep the unsafe surface in one impl.
     /// # Safety
     /// As [`Self::region`], against `src`'s bounds.
-    unsafe fn carve(&self, src: RawSlice, off: usize, len: usize) -> &'static [f32] {
+    unsafe fn carve(&self, src: RawSlice, off: usize, len: usize) -> &'static [u8] {
         debug_assert!(off + len <= src.1);
         std::slice::from_raw_parts(src.0.add(off), len)
     }
@@ -45,35 +53,55 @@ impl RawSlice {
     /// Mutable view into another raw slice.
     /// # Safety
     /// As [`Self::carve`], plus exclusivity of the region.
-    unsafe fn carve_mut(&self, src: RawSlice, off: usize, len: usize) -> &'static mut [f32] {
+    unsafe fn carve_mut(&self, src: RawSlice, off: usize, len: usize) -> &'static mut [u8] {
         debug_assert!(off + len <= src.1);
         std::slice::from_raw_parts_mut(src.0.add(off), len)
     }
 }
 
-fn elem_extents(extents: &PathExtents) -> Vec<(PathId, usize, usize)> {
+/// All rank buffers must share one dtype and element count.
+fn same_shape(bufs: &[DeviceBuffer]) -> Result<(DataType, usize)> {
+    let dtype = bufs[0].dtype();
+    let len = bufs[0].len();
+    anyhow::ensure!(
+        bufs.iter().all(|b| b.dtype() == dtype && b.len() == len),
+        "rank buffers must share dtype and length"
+    );
+    Ok((dtype, len))
+}
+
+/// Byte extents → element extents (offset, len in elements of `es` bytes).
+fn elem_extents(extents: &PathExtents, es: usize) -> Vec<(PathId, usize, usize)> {
     extents
         .iter()
         .map(|(p, off, len)| {
-            debug_assert!(off % 4 == 0 && len % 4 == 0, "extent not f32-aligned");
-            (*p, (*off / 4) as usize, (*len / 4) as usize)
+            debug_assert!(
+                off % es as u64 == 0 && len % es as u64 == 0,
+                "extent not element-aligned"
+            );
+            (*p, (*off / es as u64) as usize, (*len / es as u64) as usize)
         })
         .collect()
 }
 
+/// Staging-chunk size in bytes, floored to a whole element.
+fn chunk_bytes_for(fabric: &Fabric, es: usize) -> usize {
+    (fabric.chunk_bytes() / es).max(1) * es
+}
+
 /// Interleaved chunked send/recv of one ring step: sends `send_from` to
 /// the `send` channel while draining the peer's block into `recv_into`
-/// (reduce-combining when `reduce`). Chunk pairs interleave to keep the
-/// double-buffered slots from deadlocking.
+/// (dtype-combining when `reduce` is set). Chunk pairs interleave to
+/// keep the double-buffered slots from deadlocking.
 fn step_exchange(
     send: &crate::memory::StagingChannel,
     recv: &crate::memory::StagingChannel,
-    send_from: &[f32],
-    recv_into: &mut [f32],
-    chunk_elems: usize,
-    reduce: bool,
+    send_from: &[u8],
+    recv_into: &mut [u8],
+    chunk_bytes: usize,
+    reduce: Option<(DataType, RedOp)>,
 ) {
-    let step = chunk_elems.max(1);
+    let step = chunk_bytes.max(1);
     let n_send = send_from.len().div_ceil(step);
     let n_recv = recv_into.len().div_ceil(step);
     let mut s_iter = send_from.chunks(step);
@@ -81,52 +109,60 @@ fn step_exchange(
     for c in 0..n_send.max(n_recv) {
         if c < n_send {
             let chunk = s_iter.next().unwrap();
-            send.send_next(f32_as_bytes(chunk));
+            send.send_next(chunk);
         }
         if c < n_recv {
             let chunk = r_chunks.next().unwrap();
-            if reduce {
-                recv.recv_next_reduce_f32(chunk);
-            } else {
-                recv.recv_next(f32_as_bytes_mut(chunk));
+            match reduce {
+                Some((dtype, op)) => recv.recv_next_combine(chunk, dtype, op),
+                None => recv.recv_next(chunk),
             }
         }
     }
 }
 
-/// In-place multi-path ring AllReduce (sum) over one buffer per rank.
-/// All buffers must have equal length; `extents` must cover
-/// `len*4` bytes.
-pub fn all_reduce_f32(
-    fabric: &Fabric,
-    extents: &PathExtents,
-    bufs: &mut [Vec<f32>],
-) -> Result<()> {
-    let n = fabric.n_ranks();
-    anyhow::ensure!(bufs.len() == n, "need one buffer per rank");
-    let len = bufs[0].len();
-    anyhow::ensure!(
-        bufs.iter().all(|b| b.len() == len),
-        "rank buffers must be equal length"
-    );
-    let covered: u64 = extents.iter().map(|e| e.2).sum();
-    anyhow::ensure!(covered == (len * 4) as u64, "extents must cover the message");
-    let eext = elem_extents(extents);
-    let chunk_elems = fabric.chunk_bytes() / 4;
-
-    // Hand each rank's buffer out as per-path segments.
-    let mut segs: Vec<Vec<&mut [f32]>> = Vec::with_capacity(n);
+/// Split each rank's buffer into per-path byte segments matching `eext`.
+fn path_segments<'a>(
+    bufs: &'a mut [DeviceBuffer],
+    eext: &[(PathId, usize, usize)],
+    es: usize,
+) -> Vec<Vec<&'a mut [u8]>> {
+    let mut segs = Vec::with_capacity(bufs.len());
     for buf in bufs.iter_mut() {
-        let mut rest: &mut [f32] = buf;
+        let mut rest: &mut [u8] = buf.bytes_mut();
         let mut per_path = Vec::with_capacity(eext.len());
-        for (_, _, elen) in &eext {
-            let (seg, tail) = rest.split_at_mut(*elen);
+        for (_, _, elen) in eext {
+            let (seg, tail) = rest.split_at_mut(*elen * es);
             per_path.push(seg);
             rest = tail;
         }
         segs.push(per_path);
     }
+    segs
+}
 
+/// In-place multi-path ring AllReduce over one typed buffer per rank.
+/// All buffers must have equal shape; `extents` must cover
+/// `len·size_bytes` bytes.
+pub fn all_reduce(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    bufs: &mut [DeviceBuffer],
+    op: RedOp,
+) -> Result<()> {
+    let n = fabric.n_ranks();
+    anyhow::ensure!(bufs.len() == n, "need one buffer per rank");
+    let (dtype, len) = same_shape(bufs)?;
+    let es = dtype.size_bytes();
+    let covered: u64 = extents.iter().map(|e| e.2).sum();
+    anyhow::ensure!(
+        covered == (len * es) as u64,
+        "extents must cover the message"
+    );
+    let eext = elem_extents(extents, es);
+    let chunk = chunk_bytes_for(fabric, es);
+
+    let segs = path_segments(bufs, &eext, es);
     std::thread::scope(|scope| {
         for (r, per_path) in segs.into_iter().enumerate() {
             for ((path, _, _), seg) in eext.iter().copied().zip(per_path) {
@@ -136,49 +172,62 @@ pub fn all_reduce_f32(
                 let send = fabric.channel(path, r, ring::next(r, n));
                 let recv = fabric.channel(path, ring::prev(r, n), r);
                 scope.spawn(move || {
-                    ring_allreduce_rank(seg, r, n, &send, &recv, chunk_elems);
+                    ring_allreduce_rank(seg, r, n, &send, &recv, chunk, dtype, op);
                 });
             }
         }
     });
+    if op == RedOp::Avg {
+        for buf in bufs.iter_mut() {
+            scale_avg(dtype, buf.bytes_mut(), n as u64);
+        }
+    }
     Ok(())
 }
 
 /// One rank's thread of the ring AllReduce over its path segment.
+#[allow(clippy::too_many_arguments)]
 fn ring_allreduce_rank(
-    x: &mut [f32],
+    x: &mut [u8],
     r: usize,
     n: usize,
     send: &crate::memory::StagingChannel,
     recv: &crate::memory::StagingChannel,
-    chunk_elems: usize,
+    chunk_bytes: usize,
+    dtype: DataType,
+    op: RedOp,
 ) {
-    let blocks = ring::split_extents(x.len() as u64, n, 1);
-    let range = |b: usize| blocks[b].0 as usize..(blocks[b].0 + blocks[b].1) as usize;
+    let es = dtype.size_bytes();
+    let blocks = ring::split_extents((x.len() / es) as u64, n, 1);
+    let range =
+        |b: usize| blocks[b].0 as usize * es..(blocks[b].0 + blocks[b].1) as usize * es;
 
-    // Phase 1: ReduceScatter — receive + combine.
+    // Phase 1: ReduceScatter — receive + combine (Avg sums on the wire).
     for s in 0..n - 1 {
         let sb = ring::rs_send_block(r, s, n);
         let rb = ring::rs_send_block(ring::prev(r, n), s, n);
         let (snd, rcv) = disjoint_regions(x, range(sb), range(rb));
-        step_exchange(send, recv, snd, rcv, chunk_elems, true);
+        step_exchange(send, recv, snd, rcv, chunk_bytes, Some((dtype, op)));
     }
     // Phase 2: AllGather of reduced blocks — receive = overwrite.
     for s in 0..n - 1 {
         let sb = ring::ar_ag_send_block(r, s, n);
         let rb = ring::ar_ag_send_block(ring::prev(r, n), s, n);
         let (snd, rcv) = disjoint_regions(x, range(sb), range(rb));
-        step_exchange(send, recv, snd, rcv, chunk_elems, false);
+        step_exchange(send, recv, snd, rcv, chunk_bytes, None);
     }
 }
 
 /// Borrow two disjoint block ranges of `x`, one shared one mutable.
 fn disjoint_regions(
-    x: &mut [f32],
+    x: &mut [u8],
     send: std::ops::Range<usize>,
     recv: std::ops::Range<usize>,
-) -> (&[f32], &mut [f32]) {
-    assert!(send.end <= recv.start || recv.end <= send.start, "ring blocks alias");
+) -> (&[u8], &mut [u8]) {
+    assert!(
+        send.end <= recv.start || recv.end <= send.start,
+        "ring blocks alias"
+    );
     // SAFETY: asserted disjoint; lifetimes tied to x's borrow.
     unsafe {
         let base = x.as_mut_ptr();
@@ -188,30 +237,37 @@ fn disjoint_regions(
     }
 }
 
-/// Multi-path ring AllGather: `inputs[r]` (equal lengths L) →
-/// `outputs[r]` of length n·L laid out as concatenated rank blocks.
-/// `extents` are over the per-rank contribution (L·4 bytes).
-pub fn all_gather_f32(
+/// Multi-path ring AllGather: `inputs[r]` (equal shapes, L elements) →
+/// `outputs[r]` of n·L elements laid out as concatenated rank blocks.
+/// `extents` are over the per-rank contribution (L·size_bytes bytes).
+pub fn all_gather(
     fabric: &Fabric,
     extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
+    inputs: &[DeviceBuffer],
+    outputs: &mut [DeviceBuffer],
 ) -> Result<()> {
     let n = fabric.n_ranks();
     anyhow::ensure!(inputs.len() == n && outputs.len() == n);
-    let l = inputs[0].len();
-    anyhow::ensure!(inputs.iter().all(|b| b.len() == l));
+    let (dtype, l) = same_shape(inputs)?;
+    let es = dtype.size_bytes();
     for o in outputs.iter_mut() {
-        o.resize(n * l, 0.0);
+        anyhow::ensure!(o.dtype() == dtype, "output dtype mismatch");
+        o.resize(n * l);
     }
     let covered: u64 = extents.iter().map(|e| e.2).sum();
-    anyhow::ensure!(covered == (l * 4) as u64, "extents must cover the contribution");
-    let eext = elem_extents(extents);
-    let chunk_elems = fabric.chunk_bytes() / 4;
+    anyhow::ensure!(
+        covered == (l * es) as u64,
+        "extents must cover the contribution"
+    );
+    let eext = elem_extents(extents, es);
+    let chunk = chunk_bytes_for(fabric, es);
 
     let out_ptrs: Vec<RawSlice> = outputs
         .iter_mut()
-        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .map(|o| {
+            let b = o.bytes_mut();
+            RawSlice(b.as_mut_ptr(), b.len())
+        })
         .collect();
 
     std::thread::scope(|scope| {
@@ -228,14 +284,14 @@ pub fn all_gather_f32(
                     // Own block first. SAFETY: regions (block b, extent
                     // [eoff,eoff+elen)) are disjoint across the (path,
                     // rank) threads sharing this output pointer.
-                    let own = unsafe { out.region(r * l + eoff, elen) };
-                    own.copy_from_slice(&input[eoff..eoff + elen]);
+                    let own = unsafe { out.region((r * l + eoff) * es, elen * es) };
+                    own.copy_from_slice(&input.bytes()[eoff * es..(eoff + elen) * es]);
                     for s in 0..n - 1 {
                         let sb = ring::ag_send_block(r, s, n);
                         let rb = ring::ag_send_block(ring::prev(r, n), s, n);
-                        let snd = unsafe { out.region(sb * l + eoff, elen) };
-                        let rcv = unsafe { out.region(rb * l + eoff, elen) };
-                        step_exchange(&send, &recv, snd, rcv, chunk_elems, false);
+                        let snd = unsafe { out.region((sb * l + eoff) * es, elen * es) };
+                        let rcv = unsafe { out.region((rb * l + eoff) * es, elen * es) };
+                        step_exchange(&send, &recv, snd, rcv, chunk, None);
                     }
                 });
             }
@@ -244,44 +300,42 @@ pub fn all_gather_f32(
     Ok(())
 }
 
-/// Multi-path pipelined Broadcast from rank 0, in place.
-pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32>]) -> Result<()> {
+/// Multi-path pipelined Broadcast from `root`, in place: the chain is
+/// root → root+1 → … around the ring.
+pub fn broadcast(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    bufs: &mut [DeviceBuffer],
+    root: usize,
+) -> Result<()> {
     let n = fabric.n_ranks();
     anyhow::ensure!(bufs.len() == n);
-    let len = bufs[0].len();
-    anyhow::ensure!(bufs.iter().all(|b| b.len() == len));
+    anyhow::ensure!(root < n, "root {root} outside {n} ranks");
+    let (dtype, len) = same_shape(bufs)?;
+    let es = dtype.size_bytes();
     let covered: u64 = extents.iter().map(|e| e.2).sum();
-    anyhow::ensure!(covered == (len * 4) as u64);
-    let eext = elem_extents(extents);
-    let chunk_elems = (fabric.chunk_bytes() / 4).max(1);
+    anyhow::ensure!(covered == (len * es) as u64);
+    let eext = elem_extents(extents, es);
+    let chunk = chunk_bytes_for(fabric, es);
 
-    let mut segs: Vec<Vec<&mut [f32]>> = Vec::with_capacity(n);
-    for buf in bufs.iter_mut() {
-        let mut rest: &mut [f32] = buf;
-        let mut per_path = Vec::with_capacity(eext.len());
-        for (_, _, elen) in &eext {
-            let (seg, tail) = rest.split_at_mut(*elen);
-            per_path.push(seg);
-            rest = tail;
-        }
-        segs.push(per_path);
-    }
-
+    let segs = path_segments(bufs, &eext, es);
     std::thread::scope(|scope| {
         for (r, per_path) in segs.into_iter().enumerate() {
+            // Position of rank r along the chain starting at `root`.
+            let pos = (r + n - root) % n;
             for ((path, _, _), seg) in eext.iter().copied().zip(per_path) {
                 if seg.is_empty() {
                     continue;
                 }
-                let send = (r + 1 < n).then(|| fabric.channel(path, r, r + 1));
-                let recv = (r > 0).then(|| fabric.channel(path, r - 1, r));
+                let send = (pos + 1 < n).then(|| fabric.channel(path, r, ring::next(r, n)));
+                let recv = (pos > 0).then(|| fabric.channel(path, ring::prev(r, n), r));
                 scope.spawn(move || {
-                    for chunk in seg.chunks_mut(chunk_elems) {
+                    for chunk_buf in seg.chunks_mut(chunk) {
                         if let Some(rc) = &recv {
-                            rc.recv_next(f32_as_bytes_mut(chunk));
+                            rc.recv_next(chunk_buf);
                         }
                         if let Some(sc) = &send {
-                            sc.send_next(f32_as_bytes(chunk));
+                            sc.send_next(chunk_buf);
                         }
                     }
                 });
@@ -290,18 +344,13 @@ pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32
     });
     Ok(())
 }
-
 
 /// Per-block path slicing for operators whose unit is the *block* (one
 /// rank's share) rather than the whole vector: within every block, each
 /// path carries the same proportional extent, so ring blocks stay
 /// aligned across paths. Returns, for `path`, its (offset, len) in
 /// elements within a block of `block_elems`.
-fn block_slice(
-    extents: &PathExtents,
-    path: PathId,
-    block_elems: usize,
-) -> (usize, usize) {
+fn block_slice(extents: &PathExtents, path: PathId, block_elems: usize) -> (usize, usize) {
     // Rebuild a Shares-like proportional split from the global extents.
     let total: u64 = extents.iter().map(|e| e.2).sum();
     let mut off = 0usize;
@@ -321,38 +370,46 @@ fn block_slice(
     (0, 0)
 }
 
-/// Multi-path ring ReduceScatter: `inputs[r]` (length L = n·B) →
-/// `outputs[r]` = the fully-reduced block `r` (length B). Blocks are
-/// `L/n` (L must divide evenly, the NCCL precondition).
-pub fn reduce_scatter_f32(
+/// Multi-path ring ReduceScatter: `inputs[r]` (n·B elems) → `outputs[r]`
+/// = the fully-reduced block `r` (B elems). Blocks are `L/n` (L must
+/// divide evenly, the NCCL precondition).
+pub fn reduce_scatter(
     fabric: &Fabric,
     extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
+    inputs: &[DeviceBuffer],
+    outputs: &mut [DeviceBuffer],
+    op: RedOp,
 ) -> Result<()> {
     let n = fabric.n_ranks();
     anyhow::ensure!(inputs.len() == n && outputs.len() == n);
-    let l = inputs[0].len();
+    let (dtype, l) = same_shape(inputs)?;
+    let es = dtype.size_bytes();
     anyhow::ensure!(l % n == 0, "message must divide into n equal blocks");
     let b = l / n;
-    anyhow::ensure!(inputs.iter().all(|x| x.len() == l));
     for o in outputs.iter_mut() {
-        o.resize(b, 0.0);
+        anyhow::ensure!(o.dtype() == dtype, "output dtype mismatch");
+        o.resize(b);
     }
     let covered: u64 = extents.iter().map(|e| e.2).sum();
-    anyhow::ensure!(covered == (l * 4) as u64, "extents must cover the message");
-    let chunk_elems = fabric.chunk_bytes() / 4;
+    anyhow::ensure!(
+        covered == (l * es) as u64,
+        "extents must cover the message"
+    );
+    let chunk = chunk_bytes_for(fabric, es);
     let paths: Vec<PathId> = extents.iter().map(|e| e.0).collect();
 
     // Scratch working copies (the ring mutates in place).
-    let mut scratch: Vec<Vec<f32>> = inputs.to_vec();
+    let mut scratch: Vec<Vec<u8>> = inputs.iter().map(|x| x.bytes().to_vec()).collect();
     let scratch_ptrs: Vec<RawSlice> = scratch
         .iter_mut()
         .map(|x| RawSlice(x.as_mut_ptr(), x.len()))
         .collect();
     let out_ptrs: Vec<RawSlice> = outputs
         .iter_mut()
-        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .map(|o| {
+            let ob = o.bytes_mut();
+            RawSlice(ob.as_mut_ptr(), ob.len())
+        })
         .collect();
 
     std::thread::scope(|scope| {
@@ -365,7 +422,7 @@ pub fn reduce_scatter_f32(
                 let send = fabric.channel(path, r, ring::next(r, n));
                 let recv = fabric.channel(path, ring::prev(r, n), r);
                 let sp = scratch_ptrs[r];
-                let op = out_ptrs[r];
+                let op_ptr = out_ptrs[r];
                 scope.spawn(move || {
                     // SAFETY: (path, rank) threads touch disjoint
                     // (block-slice × rank) regions of the shared scratch
@@ -373,47 +430,55 @@ pub fn reduce_scatter_f32(
                     for s in 0..n - 1 {
                         let sb = ring::rs_std_send_block(r, s, n);
                         let rb = ring::rs_std_send_block(ring::prev(r, n), s, n);
-                        let snd =
-                            unsafe { op.carve(sp, sb * b + poff, plen) };
+                        let snd = unsafe { op_ptr.carve(sp, (sb * b + poff) * es, plen * es) };
                         let rcv =
-                            unsafe { op.carve_mut(sp, rb * b + poff, plen) };
-                        step_exchange(&send, &recv, snd, rcv, chunk_elems, true);
+                            unsafe { op_ptr.carve_mut(sp, (rb * b + poff) * es, plen * es) };
+                        step_exchange(&send, &recv, snd, rcv, chunk, Some((dtype, op)));
                     }
                     // Shifted schedule: rank r now owns block r (NCCL).
-                    let src = unsafe { op.carve(sp, r * b + poff, plen) };
-                    let dst = unsafe { op.region(poff, plen) };
+                    let src = unsafe { op_ptr.carve(sp, (r * b + poff) * es, plen * es) };
+                    let dst = unsafe { op_ptr.region(poff * es, plen * es) };
                     dst.copy_from_slice(src);
                 });
             }
         }
     });
+    if op == RedOp::Avg {
+        for o in outputs.iter_mut() {
+            scale_avg(dtype, o.bytes_mut(), n as u64);
+        }
+    }
     Ok(())
 }
 
-/// Multi-path direct-exchange AllToAll: `inputs[r]` (length L = n·B) →
+/// Multi-path direct-exchange AllToAll: `inputs[r]` (n·B elems) →
 /// `outputs[r]` where output block `s` = input block `r` of rank `s`.
-pub fn all_to_all_f32(
+pub fn all_to_all(
     fabric: &Fabric,
     extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
+    inputs: &[DeviceBuffer],
+    outputs: &mut [DeviceBuffer],
 ) -> Result<()> {
     let n = fabric.n_ranks();
     anyhow::ensure!(inputs.len() == n && outputs.len() == n);
-    let l = inputs[0].len();
+    let (dtype, l) = same_shape(inputs)?;
+    let es = dtype.size_bytes();
     anyhow::ensure!(l % n == 0, "message must divide into n equal blocks");
     let b = l / n;
-    anyhow::ensure!(inputs.iter().all(|x| x.len() == l));
     for o in outputs.iter_mut() {
-        o.resize(l, 0.0);
+        anyhow::ensure!(o.dtype() == dtype, "output dtype mismatch");
+        o.resize(l);
     }
     let covered: u64 = extents.iter().map(|e| e.2).sum();
-    anyhow::ensure!(covered == (l * 4) as u64);
-    let chunk_elems = fabric.chunk_bytes() / 4;
+    anyhow::ensure!(covered == (l * es) as u64);
+    let chunk = chunk_bytes_for(fabric, es);
     let paths: Vec<PathId> = extents.iter().map(|e| e.0).collect();
     let out_ptrs: Vec<RawSlice> = outputs
         .iter_mut()
-        .map(|o| RawSlice(o.as_mut_ptr(), o.len()))
+        .map(|o| {
+            let ob = o.bytes_mut();
+            RawSlice(ob.as_mut_ptr(), ob.len())
+        })
         .collect();
 
     std::thread::scope(|scope| {
@@ -428,21 +493,106 @@ pub fn all_to_all_f32(
                 let fabric_ref = fabric;
                 scope.spawn(move || {
                     // Own block: straight copy.
-                    let own = unsafe { out.region(r * b + poff, plen) };
-                    own.copy_from_slice(&input[r * b + poff..r * b + poff + plen]);
+                    let own = unsafe { out.region((r * b + poff) * es, plen * es) };
+                    own.copy_from_slice(
+                        &input.bytes()[(r * b + poff) * es..(r * b + poff + plen) * es],
+                    );
                     for offset in 1..n {
                         let dst = (r + offset) % n;
                         let src = (r + n - offset) % n;
                         let send = fabric_ref.channel(path, r, dst);
                         let recv = fabric_ref.channel(path, src, r);
-                        let snd = &input[dst * b + poff..dst * b + poff + plen];
-                        let rcv = unsafe { out.region(src * b + poff, plen) };
-                        step_exchange(&send, &recv, snd, rcv, chunk_elems, false);
+                        let snd =
+                            &input.bytes()[(dst * b + poff) * es..(dst * b + poff + plen) * es];
+                        let rcv = unsafe { out.region((src * b + poff) * es, plen * es) };
+                        step_exchange(&send, &recv, snd, rcv, chunk, None);
                     }
                 });
             }
         }
     });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// f32 compatibility wrappers — thin shims over the typed executors so the
+// legacy `Vec<f32>` call sites keep one execution path through this module.
+// ---------------------------------------------------------------------------
+
+/// Vec<f32> rank buffers → typed buffers (shared by every f32 shim,
+/// here and on the Communicator).
+pub(crate) fn to_dev(bufs: &[Vec<f32>]) -> Vec<DeviceBuffer> {
+    bufs.iter().map(|b| DeviceBuffer::from_f32(b)).collect()
+}
+
+/// Copy typed results back into the caller's Vec<f32> buffers.
+pub(crate) fn write_back(bufs: &mut [Vec<f32>], dev: &[DeviceBuffer]) {
+    for (b, d) in bufs.iter_mut().zip(dev) {
+        b.clear();
+        b.extend_from_slice(&d.to_f32_vec());
+    }
+}
+
+/// f32-sum shim over [`all_reduce`].
+pub fn all_reduce_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    bufs: &mut [Vec<f32>],
+) -> Result<()> {
+    let mut dev = to_dev(bufs);
+    anyhow::ensure!(!dev.is_empty(), "need one buffer per rank");
+    all_reduce(fabric, extents, &mut dev, RedOp::Sum)?;
+    write_back(bufs, &dev);
+    Ok(())
+}
+
+/// f32 shim over [`all_gather`].
+pub fn all_gather_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let dev_in = to_dev(inputs);
+    let mut dev_out = to_dev(outputs);
+    all_gather(fabric, extents, &dev_in, &mut dev_out)?;
+    write_back(outputs, &dev_out);
+    Ok(())
+}
+
+/// f32 shim over [`broadcast`] (root 0).
+pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32>]) -> Result<()> {
+    let mut dev = to_dev(bufs);
+    broadcast(fabric, extents, &mut dev, 0)?;
+    write_back(bufs, &dev);
+    Ok(())
+}
+
+/// f32-sum shim over [`reduce_scatter`].
+pub fn reduce_scatter_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let dev_in = to_dev(inputs);
+    let mut dev_out = to_dev(outputs);
+    reduce_scatter(fabric, extents, &dev_in, &mut dev_out, RedOp::Sum)?;
+    write_back(outputs, &dev_out);
+    Ok(())
+}
+
+/// f32 shim over [`all_to_all`].
+pub fn all_to_all_f32(
+    fabric: &Fabric,
+    extents: &PathExtents,
+    inputs: &[Vec<f32>],
+    outputs: &mut [Vec<f32>],
+) -> Result<()> {
+    let dev_in = to_dev(inputs);
+    let mut dev_out = to_dev(outputs);
+    all_to_all(fabric, extents, &dev_in, &mut dev_out)?;
+    write_back(outputs, &dev_out);
     Ok(())
 }
 
@@ -515,6 +665,91 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_min_max_prod_integer_dtypes_bit_exact() {
+        // Integer ops are associative+commutative (wrapping), so any
+        // combine order must match the straight-line reference exactly.
+        let n = 4;
+        let len = 97;
+        let mut rng = Rng::seed_from_u64(9);
+        let vals: Vec<Vec<i32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.range_f32(-100.0, 100.0) as i32).collect())
+            .collect();
+        for (op, reference) in [
+            (
+                RedOp::Min,
+                (0..len)
+                    .map(|i| vals.iter().map(|v| v[i]).min().unwrap())
+                    .collect::<Vec<i32>>(),
+            ),
+            (
+                RedOp::Max,
+                (0..len)
+                    .map(|i| vals.iter().map(|v| v[i]).max().unwrap())
+                    .collect::<Vec<i32>>(),
+            ),
+            (
+                RedOp::Prod,
+                (0..len)
+                    .map(|i| vals.iter().map(|v| v[i]).fold(1i32, |a, b| a.wrapping_mul(b)))
+                    .collect::<Vec<i32>>(),
+            ),
+        ] {
+            for shares in splits() {
+                let f = fabric(n);
+                let ext = shares.to_extents((len * 4) as u64, 4);
+                let mut bufs: Vec<DeviceBuffer> =
+                    vals.iter().map(|v| DeviceBuffer::from_i32(v)).collect();
+                all_reduce(&f, &ext, &mut bufs, op).unwrap();
+                let want = DeviceBuffer::from_i32(&reference);
+                for (r, b) in bufs.iter().enumerate() {
+                    assert_eq!(b, &want, "i32 {op} rank {r} under {shares}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_f16_integer_values_exact() {
+        // Small integers and their sums are exactly representable in
+        // binary16, so even the re-rounding combine is bit-exact.
+        let n = 4;
+        let len = 130;
+        let vals: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..len).map(|i| ((i + r) % 9) as f32 - 4.0).collect())
+            .collect();
+        let expect: Vec<f32> = (0..len)
+            .map(|i| vals.iter().map(|v| v[i]).sum::<f32>())
+            .collect();
+        let f = fabric(n);
+        let shares = Shares::from_pcts(&[(PathId::Nvlink, 70.0), (PathId::Pcie, 30.0)]);
+        let ext = shares.to_extents((len * 2) as u64, 2);
+        let mut bufs: Vec<DeviceBuffer> = vals
+            .iter()
+            .map(|v| DeviceBuffer::from_f32_as(DataType::F16, v))
+            .collect();
+        all_reduce(&f, &ext, &mut bufs, RedOp::Sum).unwrap();
+        for b in &bufs {
+            assert_eq!(b.to_f32_vec(), expect);
+        }
+    }
+
+    #[test]
+    fn allreduce_avg_divides_after_sum() {
+        let n = 4;
+        let len = 64;
+        let vals: Vec<Vec<f32>> = (0..n).map(|r| vec![(r + 1) as f32 * 2.0; len]).collect();
+        // sum = 2+4+6+8 = 20, avg = 5.
+        let f = fabric(n);
+        let ext = Shares::nvlink_only().to_extents((len * 4) as u64, 4);
+        let mut bufs: Vec<DeviceBuffer> =
+            vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect();
+        all_reduce(&f, &ext, &mut bufs, RedOp::Avg).unwrap();
+        for b in &bufs {
+            assert!(b.to_f32_vec().iter().all(|&v| v == 5.0));
+        }
+    }
+
+    #[test]
     fn allgather_lossless_under_any_split() {
         for n in [2usize, 4, 8] {
             let len = 257;
@@ -536,18 +771,21 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_lossless() {
+    fn broadcast_lossless_any_root() {
         for n in [2usize, 4, 8] {
             let len = 130;
-            let root: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
-            for shares in splits() {
-                let f = fabric(n);
-                let ext = shares.to_extents((len * 4) as u64, 4);
-                let mut bufs = vec![vec![0f32; len]; n];
-                bufs[0].copy_from_slice(&root);
-                broadcast_f32(&f, &ext, &mut bufs).unwrap();
-                for b in &bufs {
-                    assert_eq!(b, &root);
+            let root_data: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+            for root in [0, n - 1, n / 2] {
+                for shares in splits() {
+                    let f = fabric(n);
+                    let ext = shares.to_extents((len * 4) as u64, 4);
+                    let mut bufs: Vec<DeviceBuffer> =
+                        (0..n).map(|_| DeviceBuffer::zeros(DataType::F32, len)).collect();
+                    bufs[root] = DeviceBuffer::from_f32(&root_data);
+                    broadcast(&f, &ext, &mut bufs, root).unwrap();
+                    for b in &bufs {
+                        assert_eq!(b.to_f32_vec(), root_data, "root {root} under {shares}");
+                    }
                 }
             }
         }
@@ -607,6 +845,30 @@ mod tests {
     }
 
     #[test]
+    fn reduce_scatter_u8_max_bit_exact() {
+        let n = 4;
+        let b = 33;
+        let l = n * b;
+        let mut rng = Rng::seed_from_u64(3);
+        let vals: Vec<Vec<u8>> = (0..n)
+            .map(|_| (0..l).map(|_| rng.range_f32(0.0, 255.0) as u8).collect())
+            .collect();
+        let f = fabric(n);
+        let shares = Shares::from_pcts(&[(PathId::Nvlink, 60.0), (PathId::Rdma, 40.0)]);
+        let ext = shares.to_extents(l as u64, 1);
+        let inputs: Vec<DeviceBuffer> = vals.iter().map(|v| DeviceBuffer::from_u8(v)).collect();
+        let mut outputs: Vec<DeviceBuffer> =
+            (0..n).map(|_| DeviceBuffer::zeros(DataType::U8, 0)).collect();
+        reduce_scatter(&f, &ext, &inputs, &mut outputs, RedOp::Max).unwrap();
+        for (r, o) in outputs.iter().enumerate() {
+            let want: Vec<u8> = (0..b)
+                .map(|i| vals.iter().map(|v| v[r * b + i]).max().unwrap())
+                .collect();
+            assert_eq!(o, &DeviceBuffer::from_u8(&want), "rank {r}");
+        }
+    }
+
+    #[test]
     fn alltoall_is_block_transpose() {
         for n in [2usize, 4, 8] {
             let b = 64;
@@ -636,5 +898,16 @@ mod tests {
         let ext = Shares::nvlink_only().to_extents(16, 4);
         let mut bufs = vec![vec![0f32; 4], vec![0f32; 5]];
         assert!(all_reduce_f32(&f, &ext, &mut bufs).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let f = fabric(2);
+        let ext = Shares::nvlink_only().to_extents(16, 4);
+        let mut bufs = vec![
+            DeviceBuffer::from_f32(&[0.0; 4]),
+            DeviceBuffer::from_i32(&[0; 4]),
+        ];
+        assert!(all_reduce(&f, &ext, &mut bufs, RedOp::Sum).is_err());
     }
 }

@@ -73,9 +73,12 @@ impl<'t> MultipathCollective<'t> {
         }
     }
 
-    /// Compile + simulate one collective of `msg_bytes` under `shares`.
-    pub fn run(&self, msg_bytes: u64, shares: &Shares) -> Result<RunReport> {
-        let extents = shares.to_extents(msg_bytes, 4);
+    /// Compile the DES spec for one invocation: extents are quantized at
+    /// `elem_bytes` alignment (the caller routes this through
+    /// [`DataType::size_bytes`] so U8/F16/F64 messages split on element
+    /// boundaries, not a hardwired 4).
+    pub fn spec(&self, msg_bytes: u64, shares: &Shares, elem_bytes: u64) -> MultipathSpec {
+        let extents = shares.to_extents(msg_bytes, elem_bytes);
         let paths = extents
             .iter()
             .map(|(p, _, len)| PathAssignment {
@@ -84,12 +87,30 @@ impl<'t> MultipathCollective<'t> {
                 model: self.model(*p),
             })
             .collect();
-        let spec = MultipathSpec {
+        MultipathSpec {
             kind: self.kind,
             n: self.n,
             msg_bytes,
             paths,
-        };
+        }
+    }
+
+    /// Compile + simulate one collective of `msg_bytes` under `shares`,
+    /// at f32 element granularity (the tuning/benchmark default),
+    /// degrading to 2/1-byte alignment for messages that are not
+    /// f32-divisible (U8/F16 size classes hit this via `ensure_tuned`).
+    pub fn run(&self, msg_bytes: u64, shares: &Shares) -> Result<RunReport> {
+        self.run_elem(msg_bytes, shares, crate::dtype::natural_align(msg_bytes))
+    }
+
+    /// As [`Self::run`], with an explicit element size.
+    pub fn run_elem(
+        &self,
+        msg_bytes: u64,
+        shares: &Shares,
+        elem_bytes: u64,
+    ) -> Result<RunReport> {
+        let spec = self.spec(msg_bytes, shares, elem_bytes);
         let outcome = simulate(self.topo, &spec, self.calib.reduce_bps)?;
         Ok(RunReport {
             outcome,

@@ -104,8 +104,24 @@ impl<'t> GraphBuilder<'t> {
         models: &[(PathId, PathModel)],
         reduce_bps: f64,
     ) -> Self {
+        Self::onto(topo, n, models, reduce_bps, topo.pool.clone(), TaskGraph::new())
+    }
+
+    /// Build onto an existing (pool, graph) — the fused `group_end`
+    /// launch compiles several collectives into ONE graph this way: each
+    /// call gets its own protocol-stream resources (its own CUDA
+    /// streams, in hardware terms) while the raw physical links stay
+    /// shared, so concurrent collectives contend for the same lanes
+    /// under max–min fair share.
+    pub fn onto(
+        topo: &'t Topology,
+        n: usize,
+        models: &[(PathId, PathModel)],
+        reduce_bps: f64,
+        mut pool: ResourcePool,
+        graph: TaskGraph,
+    ) -> Self {
         assert!(n >= 2 && n <= topo.n_gpus());
-        let mut pool = topo.pool.clone();
         let mut proto = HashMap::new();
         for (path, model) in models {
             for g in 0..n {
@@ -125,12 +141,17 @@ impl<'t> GraphBuilder<'t> {
         GraphBuilder {
             topo,
             pool,
-            graph: TaskGraph::new(),
+            graph,
             n,
             models: models.iter().copied().collect(),
             proto,
             reduce_bps,
         }
+    }
+
+    /// Hand the accumulated (pool, graph) back for further fused calls.
+    pub fn into_parts(self) -> (ResourcePool, TaskGraph) {
+        (self.pool, self.graph)
     }
 
     pub fn model(&self, path: PathId) -> PathModel {
@@ -304,35 +325,45 @@ impl<'t> GraphBuilder<'t> {
     }
 }
 
+/// Emit one collective's tasks into `b`, tagging each (call, path) as
+/// `tag_base + path.tag()` so fused launches can attribute finishes.
+fn build_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
+    for pa in &spec.paths {
+        if pa.bytes == 0 {
+            continue;
+        }
+        let tag = tag_base + pa.path.tag();
+        match spec.kind {
+            CollectiveKind::AllGather => {
+                super::allgather::build_tasks(b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::AllReduce => {
+                super::allreduce::build_tasks(b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::ReduceScatter => {
+                super::reduce_scatter::build_tasks(b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::Broadcast => {
+                super::broadcast::build_tasks(b, pa.path, pa.bytes, tag)
+            }
+            CollectiveKind::AllToAll => {
+                super::alltoall::build_tasks(b, pa.path, pa.bytes, tag)
+            }
+        }
+    }
+}
+
+/// Tag stride per fused call: path tags are 1..=3, so call `i` owns
+/// tags `i*4+1 ..= i*4+3`.
+const CALL_TAG_STRIDE: u32 = 4;
+
 /// Execute one multi-path collective on the DES; returns per-path times.
 pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Result<SimOutcome> {
     spec.validate()?;
     let models: Vec<(PathId, PathModel)> =
         spec.paths.iter().map(|p| (p.path, p.model)).collect();
     let mut b = GraphBuilder::new(topo, spec.n, &models, reduce_bps);
-    for pa in &spec.paths {
-        if pa.bytes == 0 {
-            continue;
-        }
-        let tag = pa.path.tag();
-        match spec.kind {
-            CollectiveKind::AllGather => {
-                super::allgather::build_tasks(&mut b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::AllReduce => {
-                super::allreduce::build_tasks(&mut b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::ReduceScatter => {
-                super::reduce_scatter::build_tasks(&mut b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::Broadcast => {
-                super::broadcast::build_tasks(&mut b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::AllToAll => {
-                super::alltoall::build_tasks(&mut b, pa.path, pa.bytes, tag)
-            }
-        }
-    }
+    build_call(&mut b, spec, 0);
     let tasks = b.graph.len();
     let sched = Engine::new(&b.pool).run(&b.graph)?;
     let per_path = spec
@@ -349,6 +380,62 @@ pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Resul
     Ok(SimOutcome {
         total: sched.makespan,
         per_path,
+        events: sched.events,
+        tasks,
+    })
+}
+
+/// Outcome of a fused multi-collective launch (`group_start`/`group_end`).
+#[derive(Debug, Clone)]
+pub struct GroupOutcome {
+    /// Makespan of the fused launch — all calls contending concurrently.
+    pub total: SimTime,
+    /// Each call's completion time *inside* the fused launch.
+    pub per_call: Vec<SimTime>,
+    pub events: u64,
+    pub tasks: usize,
+}
+
+/// Compile every spec into ONE task graph over ONE resource pool and run
+/// it. Calls share the raw physical links (NVLink lanes, PCIe root
+/// ports, NICs) but get private per-call protocol resources — the DES
+/// analog of NCCL's grouped launch, where fused collectives ride
+/// separate streams into the same wires.
+pub fn simulate_group(
+    topo: &Topology,
+    specs: &[MultipathSpec],
+    reduce_bps: f64,
+) -> Result<GroupOutcome> {
+    anyhow::ensure!(!specs.is_empty(), "empty group launch");
+    let mut pool = topo.pool.clone();
+    let mut graph = TaskGraph::new();
+    for (i, spec) in specs.iter().enumerate() {
+        spec.validate()?;
+        let models: Vec<(PathId, PathModel)> =
+            spec.paths.iter().map(|p| (p.path, p.model)).collect();
+        let mut b = GraphBuilder::onto(topo, spec.n, &models, reduce_bps, pool, graph);
+        build_call(&mut b, spec, i as u32 * CALL_TAG_STRIDE);
+        (pool, graph) = b.into_parts();
+    }
+    let tasks = graph.len();
+    let sched = Engine::new(&pool).run(&graph)?;
+    let per_call = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            spec.paths
+                .iter()
+                .filter(|pa| pa.bytes > 0)
+                .filter_map(|pa| {
+                    sched.tag_finish(&graph, i as u32 * CALL_TAG_STRIDE + pa.path.tag())
+                })
+                .max()
+                .unwrap_or(SimTime::ZERO)
+        })
+        .collect();
+    Ok(GroupOutcome {
+        total: sched.makespan,
+        per_call,
         events: sched.events,
         tasks,
     })
@@ -450,6 +537,71 @@ mod tests {
         let t_pcie = out.time_of(PathId::Pcie).unwrap();
         assert!(t_nv > SimTime::ZERO && t_pcie > SimTime::ZERO);
         assert_eq!(out.total, t_nv.max(t_pcie));
+    }
+
+    #[test]
+    fn fused_group_never_slower_than_sequential_sum() {
+        // Two collectives fused into one launch share the physical links
+        // under fair share; the fused makespan must not exceed launching
+        // them back to back, and with nonzero per-step latencies the
+        // overlap must win outright.
+        let topo = h800();
+        let calib = Calibration::h800();
+        let s = 32u64 << 20;
+        let mk = |kind: CollectiveKind| MultipathSpec {
+            kind,
+            n: 4,
+            msg_bytes: s,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: s,
+                model: calib.nvlink_model(kind, 4, topo.spec.nvlink_unidir_bps()),
+            }],
+        };
+        let specs = vec![mk(CollectiveKind::AllReduce), mk(CollectiveKind::AllGather)];
+        let seq: SimTime = specs
+            .iter()
+            .map(|sp| simulate(&topo, sp, 60e9).unwrap().total)
+            .sum();
+        let fused = simulate_group(&topo, &specs, 60e9).unwrap();
+        assert_eq!(fused.per_call.len(), 2);
+        assert!(
+            fused.total <= seq,
+            "fused {} > sequential sum {}",
+            fused.total,
+            seq
+        );
+        assert!(fused.total < seq, "no overlap benefit at all");
+        // Each call inside the fused launch finishes no earlier than it
+        // does alone (contention can only slow a call down) and no later
+        // than the fused makespan.
+        for (i, sp) in specs.iter().enumerate() {
+            let alone = simulate(&topo, sp, 60e9).unwrap().total;
+            assert!(fused.per_call[i] >= alone, "call {i} sped up under contention?");
+            assert!(fused.per_call[i] <= fused.total);
+        }
+    }
+
+    #[test]
+    fn single_call_group_matches_solo_simulate() {
+        let topo = h800();
+        let kind = CollectiveKind::AllGather;
+        let model = nv_model(kind, 4, &topo);
+        let s = 16u64 << 20;
+        let spec = MultipathSpec {
+            kind,
+            n: 4,
+            msg_bytes: s,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: s,
+                model,
+            }],
+        };
+        let solo = simulate(&topo, &spec, 60e9).unwrap();
+        let fused = simulate_group(&topo, std::slice::from_ref(&spec), 60e9).unwrap();
+        assert_eq!(fused.total, solo.total);
+        assert_eq!(fused.per_call, vec![solo.total]);
     }
 
     #[test]

@@ -3,35 +3,26 @@
 //! The paper ships FlexLink "as a lossless, drop-in replacement compatible
 //! with the NCCL API". This module mirrors the NCCL entry-point shapes —
 //! `ncclCommInitAll`, `ncclAllReduce(sendbuff, recvbuff, count, datatype,
-//! op, comm, stream)` — against the simulated node, so code written for
-//! NCCL maps one-to-one. (Streams collapse to synchronous calls here: the
-//! simulated device has no async queues.)
+//! op, comm, stream)`, `ncclGroupStart`/`ncclGroupEnd` — against the
+//! simulated node, so code written for NCCL maps one-to-one:
+//!
+//! * the full datatype matrix ([`DataType`]: F32/F64/F16/BF16/I32/I64/U8)
+//!   and redop matrix ([`RedOp`]: Sum/Prod/Min/Max/Avg);
+//! * out-of-place `sendbuff`/`recvbuff` pairs by default, with the
+//!   `*_in_place` variants covering NCCL's `sendbuff == recvbuff`
+//!   special case;
+//! * `flexlink_group_start`/`flexlink_group_end` batching collectives
+//!   into one fused DES launch.
+//!
+//! (Streams collapse to synchronous calls here: the simulated device has
+//! no async queues. `bufs` hold every rank's buffer — the single-process
+//! multi-device usage of `ncclCommInitAll`.)
 
-use super::{CollectiveReport, CommConfig, Communicator};
+use super::{CollectiveReport, CommConfig, Communicator, GroupReport};
 use crate::config::presets::Preset;
 use anyhow::Result;
 
-/// Mirror of `ncclDataType_t` (the subset the functional layer carries).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DataType {
-    /// `ncclFloat32`
-    F32,
-}
-
-impl DataType {
-    pub fn size_bytes(self) -> usize {
-        match self {
-            DataType::F32 => 4,
-        }
-    }
-}
-
-/// Mirror of `ncclRedOp_t`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RedOp {
-    /// `ncclSum`
-    Sum,
-}
+pub use crate::dtype::{DataType, DeviceBuffer, RedOp};
 
 /// Mirror of `ncclResult_t` communicator handle lifecycle:
 /// `flexlink_comm_init_all` ↔ `ncclCommInitAll`.
@@ -39,53 +30,112 @@ pub fn flexlink_comm_init_all(preset: Preset, n_devices: usize) -> Result<Commun
     Communicator::init(CommConfig::new(preset, n_devices))
 }
 
-/// `ncclAllReduce(sendbuff==recvbuff, count, ncclFloat32, ncclSum, comm)`.
-///
-/// NCCL's in-place convention (sendbuff == recvbuff) is the only mode the
-/// simulated device exposes; `bufs` holds every rank's buffer (the
-/// single-process multi-device usage of `ncclCommInitAll`).
+/// NCCL-shape validation: the explicit (count, datatype) pair must agree
+/// with the typed buffers.
+fn check(bufs: &[DeviceBuffer], count: usize, datatype: DataType) -> Result<()> {
+    for b in bufs {
+        anyhow::ensure!(
+            b.dtype() == datatype,
+            "buffer dtype {} != declared {datatype}",
+            b.dtype()
+        );
+        anyhow::ensure!(
+            b.len() == count,
+            "count mismatch with buffer length ({} vs {count})",
+            b.len()
+        );
+    }
+    Ok(())
+}
+
+/// `ncclAllReduce(sendbuff, recvbuff, count, datatype, op, comm)`.
 pub fn flexlink_all_reduce(
     comm: &mut Communicator,
-    bufs: &mut [Vec<f32>],
+    sendbufs: &[DeviceBuffer],
+    recvbufs: &mut [DeviceBuffer],
     count: usize,
     datatype: DataType,
     op: RedOp,
 ) -> Result<CollectiveReport> {
-    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
-    anyhow::ensure!(op == RedOp::Sum, "only ncclSum is wired");
-    for b in bufs.iter() {
-        anyhow::ensure!(b.len() == count, "count mismatch with buffer length");
-    }
-    comm.all_reduce_f32(bufs)
+    check(sendbufs, count, datatype)?;
+    comm.all_reduce(sendbufs, recvbufs, op)
 }
 
-/// `ncclAllGather(sendbuff, recvbuff, sendcount, ncclFloat32, comm)`.
+/// `ncclAllReduce` with `sendbuff == recvbuff` (the in-place special case).
+pub fn flexlink_all_reduce_in_place(
+    comm: &mut Communicator,
+    bufs: &mut [DeviceBuffer],
+    count: usize,
+    datatype: DataType,
+    op: RedOp,
+) -> Result<CollectiveReport> {
+    check(bufs, count, datatype)?;
+    comm.all_reduce_in_place(bufs, op)
+}
+
+/// `ncclAllGather(sendbuff, recvbuff, sendcount, datatype, comm)`.
 pub fn flexlink_all_gather(
     comm: &mut Communicator,
-    sendbufs: &[Vec<f32>],
-    recvbufs: &mut [Vec<f32>],
+    sendbufs: &[DeviceBuffer],
+    recvbufs: &mut [DeviceBuffer],
     sendcount: usize,
     datatype: DataType,
 ) -> Result<CollectiveReport> {
-    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
-    for b in sendbufs.iter() {
-        anyhow::ensure!(b.len() == sendcount, "sendcount mismatch");
-    }
-    comm.all_gather_f32(sendbufs, recvbufs)
+    check(sendbufs, sendcount, datatype)?;
+    comm.all_gather(sendbufs, recvbufs)
 }
 
-/// `ncclBroadcast(buff, count, ncclFloat32, root=0, comm)`.
+/// `ncclBroadcast(sendbuff, recvbuff, count, datatype, root, comm)` —
+/// `sendbuf` is the root rank's payload.
 pub fn flexlink_broadcast(
     comm: &mut Communicator,
-    bufs: &mut [Vec<f32>],
+    sendbuf: &DeviceBuffer,
+    recvbufs: &mut [DeviceBuffer],
+    count: usize,
+    datatype: DataType,
+    root: usize,
+) -> Result<CollectiveReport> {
+    check(std::slice::from_ref(sendbuf), count, datatype)?;
+    comm.broadcast(sendbuf, recvbufs, root)
+}
+
+/// `ncclReduceScatter(sendbuff, recvbuff, recvcount, datatype, op, comm)`
+/// — each rank sends n·recvcount elements and receives its reduced block
+/// of recvcount elements.
+pub fn flexlink_reduce_scatter(
+    comm: &mut Communicator,
+    sendbufs: &[DeviceBuffer],
+    recvbufs: &mut [DeviceBuffer],
+    recvcount: usize,
+    datatype: DataType,
+    op: RedOp,
+) -> Result<CollectiveReport> {
+    check(sendbufs, recvcount * comm.n_ranks(), datatype)?;
+    comm.reduce_scatter(sendbufs, recvbufs, op)
+}
+
+/// AllToAll (the `ncclSend`/`ncclRecv` block-transpose composite): each
+/// rank sends n blocks of `count/n` elements, one to every peer.
+pub fn flexlink_all_to_all(
+    comm: &mut Communicator,
+    sendbufs: &[DeviceBuffer],
+    recvbufs: &mut [DeviceBuffer],
     count: usize,
     datatype: DataType,
 ) -> Result<CollectiveReport> {
-    anyhow::ensure!(datatype == DataType::F32, "only ncclFloat32 is wired");
-    for b in bufs.iter() {
-        anyhow::ensure!(b.len() == count, "count mismatch");
-    }
-    comm.broadcast_f32(bufs)
+    check(sendbufs, count, datatype)?;
+    comm.all_to_all(sendbufs, recvbufs)
+}
+
+/// `ncclGroupStart`: collectives until `flexlink_group_end` are also
+/// enqueued for one fused launch.
+pub fn flexlink_group_start(comm: &mut Communicator) -> Result<()> {
+    comm.group_start()
+}
+
+/// `ncclGroupEnd`: close the group and return per-call + fused timings.
+pub fn flexlink_group_end(comm: &mut Communicator) -> Result<GroupReport> {
+    comm.group_end()
 }
 
 #[cfg(test)]
@@ -95,19 +145,52 @@ mod tests {
     #[test]
     fn nccl_shaped_calls_work() {
         let mut comm = flexlink_comm_init_all(Preset::H800, 2).unwrap();
-        let mut bufs = vec![vec![1.5f32; 256]; 2];
-        let rep =
-            flexlink_all_reduce(&mut comm, &mut bufs, 256, DataType::F32, RedOp::Sum).unwrap();
-        assert!(bufs[0].iter().all(|&v| v == 3.0));
+        let sends = vec![DeviceBuffer::from_f32(&[1.5f32; 256]); 2];
+        let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, 256); 2];
+        let rep = flexlink_all_reduce(
+            &mut comm,
+            &sends,
+            &mut recvs,
+            256,
+            DataType::F32,
+            RedOp::Sum,
+        )
+        .unwrap();
+        assert!(recvs[0].to_f32_vec().iter().all(|&v| v == 3.0));
         assert!(rep.algbw_gbps() > 0.0);
     }
 
     #[test]
     fn count_mismatch_rejected() {
         let mut comm = flexlink_comm_init_all(Preset::H800, 2).unwrap();
-        let mut bufs = vec![vec![0f32; 100]; 2];
-        assert!(
-            flexlink_all_reduce(&mut comm, &mut bufs, 128, DataType::F32, RedOp::Sum).is_err()
-        );
+        let sends = vec![DeviceBuffer::from_f32(&[0f32; 100]); 2];
+        let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, 100); 2];
+        assert!(flexlink_all_reduce(
+            &mut comm,
+            &sends,
+            &mut recvs,
+            128,
+            DataType::F32,
+            RedOp::Sum
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn datatype_mismatch_rejected() {
+        let mut comm = flexlink_comm_init_all(Preset::H800, 2).unwrap();
+        let mut bufs = vec![DeviceBuffer::from_i32(&[1; 64]); 2];
+        assert!(flexlink_all_reduce_in_place(
+            &mut comm,
+            &mut bufs,
+            64,
+            DataType::F32,
+            RedOp::Sum
+        )
+        .is_err());
+        // Declared correctly, the same buffers reduce fine.
+        flexlink_all_reduce_in_place(&mut comm, &mut bufs, 64, DataType::I32, RedOp::Sum)
+            .unwrap();
+        assert!(bufs[0].to_f64_vec().iter().all(|&v| v == 2.0));
     }
 }

@@ -2,8 +2,9 @@
 //! Figure-4 deployment (TP2 × DP4 inside one node) needs: sub-rings over
 //! subsets of the node's GPUs, each with its own tuned shares.
 
-use super::{CollectiveReport, CommConfig, Communicator};
+use super::{CollectiveReport, CommConfig, Communicator, GroupReport};
 use crate::collectives::CollectiveKind;
+use crate::dtype::{DeviceBuffer, RedOp};
 use anyhow::Result;
 
 /// A set of disjoint sub-communicators over one node, e.g. TP pairs
@@ -46,17 +47,43 @@ impl CommGroup {
         self.members.iter().position(|&m| m == global)
     }
 
-    /// AllReduce within the group (buffers indexed by *local* rank).
-    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
-        self.comm.all_reduce_f32(bufs)
+    /// Out-of-place AllReduce within the group (buffers indexed by
+    /// *local* rank).
+    pub fn all_reduce(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        op: RedOp,
+    ) -> Result<CollectiveReport> {
+        self.comm.all_reduce(send, recv, op)
     }
 
-    pub fn all_gather_f32(
+    /// In-place AllReduce within the group.
+    pub fn all_reduce_in_place(
         &mut self,
-        inputs: &[Vec<f32>],
-        outputs: &mut [Vec<f32>],
+        bufs: &mut [DeviceBuffer],
+        op: RedOp,
     ) -> Result<CollectiveReport> {
-        self.comm.all_gather_f32(inputs, outputs)
+        self.comm.all_reduce_in_place(bufs, op)
+    }
+
+    /// AllGather within the group.
+    pub fn all_gather(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+    ) -> Result<CollectiveReport> {
+        self.comm.all_gather(send, recv)
+    }
+
+    /// `ncclGroupStart` scoped to this sub-communicator.
+    pub fn group_start(&mut self) -> Result<()> {
+        self.comm.group_start()
+    }
+
+    /// `ncclGroupEnd` scoped to this sub-communicator.
+    pub fn group_end(&mut self) -> Result<GroupReport> {
+        self.comm.group_end()
     }
 
     pub fn time_collective(
@@ -105,10 +132,34 @@ mod tests {
     #[test]
     fn group_allreduce_is_scoped() {
         let mut groups = split_equal(&cfg(), 2).unwrap();
-        let mut bufs = vec![vec![3.0f32; 256], vec![4.0f32; 256]];
-        let rep = groups[1].all_reduce_f32(&mut bufs).unwrap();
-        assert!(bufs.iter().all(|b| b.iter().all(|&v| v == 7.0)));
+        let mut bufs = vec![
+            DeviceBuffer::from_f32(&[3.0f32; 256]),
+            DeviceBuffer::from_f32(&[4.0f32; 256]),
+        ];
+        let rep = groups[1]
+            .all_reduce_in_place(&mut bufs, RedOp::Sum)
+            .unwrap();
+        assert!(bufs
+            .iter()
+            .all(|b| b.to_f32_vec().iter().all(|&v| v == 7.0)));
         assert_eq!(rep.kind, CollectiveKind::AllReduce);
+    }
+
+    #[test]
+    fn tp_group_can_fuse_collectives() {
+        // A TP pair batching its AllReduce + AllGather (the Blink-style
+        // multi-collective schedule) through group semantics.
+        let mut groups = split_equal(&cfg(), 2).unwrap();
+        let g = &mut groups[0];
+        g.group_start().unwrap();
+        let mut ar = vec![DeviceBuffer::from_f32(&[1.0f32; 512]); 2];
+        g.all_reduce_in_place(&mut ar, RedOp::Sum).unwrap();
+        let ag_in = vec![DeviceBuffer::from_f32(&[2.0f32; 512]); 2];
+        let mut ag_out = vec![DeviceBuffer::zeros(crate::dtype::DataType::F32, 0); 2];
+        g.all_gather(&ag_in, &mut ag_out).unwrap();
+        let rep = g.group_end().unwrap();
+        assert_eq!(rep.calls.len(), 2);
+        assert!(rep.fused_total <= rep.sequential_total);
     }
 
     #[test]

@@ -8,8 +8,13 @@
 //! stage-2 runtime balancer exactly as the paper's Evaluator/Load
 //! Balancer pair does.
 //!
-//! [`api`] exposes the drop-in NCCL-style C-ish surface
-//! (`flexlink_all_reduce(comm, buf, count, datatype, op)`).
+//! The collective entry points are **typed**: buffers are
+//! [`DeviceBuffer`]s carrying a [`DataType`] tag, reductions take a full
+//! [`RedOp`], out-of-place send/recv pairs are the default (in-place is
+//! the NCCL-documented special case), and [`Self::group_start`] /
+//! [`Self::group_end`] fuse enqueued collectives into a single DES
+//! launch. [`api`] exposes the drop-in NCCL-style C-ish surface
+//! (`flexlink_all_reduce(comm, send, recv, count, datatype, op)`).
 
 pub mod api;
 pub mod group;
@@ -17,9 +22,11 @@ pub mod group;
 use crate::balancer::{initial_tune, RuntimeBalancer, Shares};
 use crate::collectives::exec;
 use crate::collectives::multipath::{MultipathCollective, RunReport};
+use crate::collectives::schedule::{simulate_group, MultipathSpec};
 use crate::collectives::CollectiveKind;
 use crate::config::presets::Preset;
 use crate::config::RunConfig;
+use crate::dtype::{DataType, DeviceBuffer, RedOp};
 use crate::links::PathId;
 use crate::memory::{MemoryLedger, StagingChannel};
 use crate::sim::SimTime;
@@ -82,18 +89,81 @@ impl CollectiveReport {
     }
 }
 
+/// One call of a fused group, with both timings exposed.
+#[derive(Debug, Clone)]
+pub struct GroupCall {
+    pub kind: CollectiveKind,
+    pub msg_bytes: u64,
+    /// Completion when launched alone (the sequential cost).
+    pub individual: SimTime,
+    /// Completion inside the fused launch, under contention.
+    pub fused_finish: SimTime,
+}
+
+/// What `group_end` returns: per-call and fused timings.
+#[derive(Debug, Clone)]
+pub struct GroupReport {
+    pub calls: Vec<GroupCall>,
+    /// Makespan of the single fused DES launch.
+    pub fused_total: SimTime,
+    /// Sum of the calls' individual completions — the cost of launching
+    /// them back to back. Fused ≤ sequential always (fair share is
+    /// work-conserving; latencies overlap).
+    pub sequential_total: SimTime,
+}
+
+impl GroupReport {
+    pub fn is_empty(&self) -> bool {
+        self.calls.is_empty()
+    }
+
+    /// Sequential / fused wall-clock ratio (≥ 1 means fusing won).
+    pub fn speedup(&self) -> f64 {
+        if self.fused_total == SimTime::ZERO {
+            1.0
+        } else {
+            self.sequential_total.as_secs_f64() / self.fused_total.as_secs_f64()
+        }
+    }
+}
+
+/// A collective enqueued between `group_start` and `group_end`.
+#[derive(Debug, Clone)]
+struct PendingCall {
+    kind: CollectiveKind,
+    msg_bytes: u64,
+    elem_bytes: u64,
+    shares: Shares,
+    individual: SimTime,
+}
+
 /// Per-(operator, size-class) balancer state (Algorithm 1 result +
 /// stage-2 balancer). Size classes are power-of-two buckets: the optimal
 /// distribution "can vary with data size" (§3.2.2), and a class tuned at
 /// 256 MB must not throttle a 128 KB call.
 struct OpState {
     balancer: RuntimeBalancer,
-    tuned_at: u64,
+    /// Collective calls served by this bucket (stats surface —
+    /// [`Communicator::call_count`]).
+    calls: u64,
 }
 
 /// log2 bucket of the message size.
 fn size_class(msg_bytes: u64) -> u32 {
     msg_bytes.max(1).next_power_of_two().trailing_zeros()
+}
+
+/// All rank buffers of one collective must agree on dtype and count;
+/// returns (dtype, message bytes).
+fn typed_msg(bufs: &[DeviceBuffer]) -> Result<(DataType, u64)> {
+    let dtype = bufs[0].dtype();
+    let count = bufs[0].len();
+    anyhow::ensure!(count > 0, "empty buffers");
+    anyhow::ensure!(
+        bufs.iter().all(|b| b.dtype() == dtype && b.len() == count),
+        "rank buffers must share dtype and element count"
+    );
+    Ok((dtype, (count * dtype.size_bytes()) as u64))
 }
 
 /// The FlexLink communicator.
@@ -103,6 +173,8 @@ pub struct Communicator {
     ledger: Arc<MemoryLedger>,
     fabric: Fabric,
     ops: HashMap<(CollectiveKind, u32), OpState>,
+    /// Open `group_start` scope, if any.
+    group: Option<Vec<PendingCall>>,
     /// Simulated time spent in one-time profiling (≈ the paper's 10 s).
     pub profiling_time: SimTime,
 }
@@ -123,6 +195,7 @@ impl Communicator {
             ledger,
             fabric,
             ops: HashMap::new(),
+            group: None,
             profiling_time: SimTime::ZERO,
         })
     }
@@ -156,6 +229,14 @@ impl Communicator {
             .map(|s| s.balancer.shares())
     }
 
+    /// Collective calls served so far by the (operator, size-class)
+    /// bucket of `msg_bytes`.
+    pub fn call_count(&self, kind: CollectiveKind, msg_bytes: u64) -> u64 {
+        self.ops
+            .get(&(kind, size_class(msg_bytes)))
+            .map_or(0, |s| s.calls)
+    }
+
     fn mc(&self, kind: CollectiveKind) -> MultipathCollective<'_> {
         MultipathCollective::new(&self.topo, self.cfg.run.calibration(), kind, self.n_ranks())
     }
@@ -178,26 +259,36 @@ impl Communicator {
             tuned.shares
         };
         let balancer = RuntimeBalancer::new(self.cfg.run.balancer.clone(), shares);
-        self.ops.insert(
-            key,
-            OpState {
-                balancer,
-                tuned_at: 0,
-            },
-        );
+        self.ops.insert(key, OpState { balancer, calls: 0 });
         Ok(())
     }
 
     /// Time a collective on the DES under the current shares and feed the
-    /// stage-2 balancer. Shared by every public collective entry point.
-    fn timed_call(&mut self, kind: CollectiveKind, msg_bytes: u64) -> Result<CollectiveReport> {
+    /// stage-2 balancer; inside a `group_start` scope the call is also
+    /// enqueued for the fused launch. Shared by every public collective
+    /// entry point — the single timing path.
+    fn timed_call(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+    ) -> Result<CollectiveReport> {
         self.ensure_tuned(kind, msg_bytes)?;
         let key = (kind, size_class(msg_bytes));
         let shares = self.ops[&key].balancer.shares().clone();
-        let sim = self.mc(kind).run(msg_bytes, &shares)?;
+        let sim = self.mc(kind).run_elem(msg_bytes, &shares, elem_bytes)?;
         let state = self.ops.get_mut(&key).unwrap();
         let adjusted = state.balancer.observe(sim.path_times());
-        state.tuned_at += 1;
+        state.calls += 1;
+        if let Some(pending) = self.group.as_mut() {
+            pending.push(PendingCall {
+                kind,
+                msg_bytes,
+                elem_bytes,
+                shares: shares.clone(),
+                individual: sim.total(),
+            });
+        }
         Ok(CollectiveReport {
             kind,
             msg_bytes,
@@ -207,76 +298,268 @@ impl Communicator {
         })
     }
 
-    /// In-place sum AllReduce over one equal-length f32 buffer per rank.
-    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
+    // -----------------------------------------------------------------
+    // Typed collective entry points (out-of-place default, in-place as
+    // the NCCL special case).
+    // -----------------------------------------------------------------
+
+    /// Copy each rank's send buffer into its recv buffer (auto-sized),
+    /// validating dtype agreement — the out-of-place prologue.
+    fn stage_out_of_place(
+        &self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        for (s, d) in send.iter().zip(recv.iter_mut()) {
+            anyhow::ensure!(d.dtype() == s.dtype(), "send/recv dtype mismatch");
+            d.resize(s.len());
+            d.bytes_mut().copy_from_slice(s.bytes());
+        }
+        Ok(())
+    }
+
+    /// Out-of-place AllReduce: `recv[r] = reduce(send[0..n])` under `op`.
+    pub fn all_reduce(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        op: RedOp,
+    ) -> Result<CollectiveReport> {
+        self.stage_out_of_place(send, recv)?;
+        self.all_reduce_in_place(recv, op)
+    }
+
+    /// In-place AllReduce (NCCL's `sendbuff == recvbuff` special case).
+    pub fn all_reduce_in_place(
+        &mut self,
+        bufs: &mut [DeviceBuffer],
+        op: RedOp,
+    ) -> Result<CollectiveReport> {
         anyhow::ensure!(bufs.len() == self.n_ranks(), "one buffer per rank");
-        let msg = (bufs[0].len() * 4) as u64;
-        let report = self.timed_call(CollectiveKind::AllReduce, msg)?;
-        let ext = report.shares.to_extents(msg, 4);
-        exec::all_reduce_f32(&self.fabric, &ext, bufs)?;
+        let (dtype, msg) = typed_msg(bufs)?;
+        let es = dtype.size_bytes() as u64;
+        let report = self.timed_call(CollectiveKind::AllReduce, msg, es)?;
+        let ext = report.shares.to_extents(msg, es);
+        exec::all_reduce(&self.fabric, &ext, bufs, op)?;
         Ok(report)
     }
 
-    /// AllGather: per-rank contributions → concatenated outputs.
+    /// AllGather: per-rank contributions → concatenated outputs
+    /// (recv buffers auto-size to n·count elements).
+    pub fn all_gather(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+    ) -> Result<CollectiveReport> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        let report = self.timed_call(CollectiveKind::AllGather, msg, es)?;
+        let ext = report.shares.to_extents(msg, es);
+        exec::all_gather(&self.fabric, &ext, send, recv)?;
+        Ok(report)
+    }
+
+    /// Out-of-place Broadcast: `send` is the root rank's buffer; every
+    /// rank's `recv[r]` ends holding it.
+    pub fn broadcast(
+        &mut self,
+        send: &DeviceBuffer,
+        recv: &mut [DeviceBuffer],
+        root: usize,
+    ) -> Result<CollectiveReport> {
+        anyhow::ensure!(recv.len() == self.n_ranks(), "one recv buffer per rank");
+        anyhow::ensure!(root < self.n_ranks(), "root outside communicator");
+        for d in recv.iter_mut() {
+            anyhow::ensure!(d.dtype() == send.dtype(), "send/recv dtype mismatch");
+            d.resize(send.len());
+        }
+        recv[root].bytes_mut().copy_from_slice(send.bytes());
+        self.broadcast_in_place(recv, root)
+    }
+
+    /// In-place Broadcast of `bufs[root]` to all ranks.
+    pub fn broadcast_in_place(
+        &mut self,
+        bufs: &mut [DeviceBuffer],
+        root: usize,
+    ) -> Result<CollectiveReport> {
+        anyhow::ensure!(bufs.len() == self.n_ranks(), "one buffer per rank");
+        let (dtype, msg) = typed_msg(bufs)?;
+        let es = dtype.size_bytes() as u64;
+        let report = self.timed_call(CollectiveKind::Broadcast, msg, es)?;
+        let ext = report.shares.to_extents(msg, es);
+        exec::broadcast(&self.fabric, &ext, bufs, root)?;
+        Ok(report)
+    }
+
+    /// ReduceScatter: `send[r]` (n·B elems) → `recv[r]` = reduced block r
+    /// under `op` (recv buffers auto-size to B elements).
+    pub fn reduce_scatter(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        op: RedOp,
+    ) -> Result<CollectiveReport> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        let report = self.timed_call(CollectiveKind::ReduceScatter, msg, es)?;
+        let ext = report.shares.to_extents(msg, es);
+        exec::reduce_scatter(&self.fabric, &ext, send, recv, op)?;
+        Ok(report)
+    }
+
+    /// AllToAll: block transpose across ranks (recv buffers auto-size).
+    pub fn all_to_all(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+    ) -> Result<CollectiveReport> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        let report = self.timed_call(CollectiveKind::AllToAll, msg, es)?;
+        let ext = report.shares.to_extents(msg, es);
+        exec::all_to_all(&self.fabric, &ext, send, recv)?;
+        Ok(report)
+    }
+
+    // -----------------------------------------------------------------
+    // Group semantics (`ncclGroupStart` / `ncclGroupEnd`).
+    // -----------------------------------------------------------------
+
+    /// Open a group: collectives called until [`Self::group_end`] still
+    /// execute (functionally and individually timed) and are additionally
+    /// enqueued for one fused DES launch.
+    pub fn group_start(&mut self) -> Result<()> {
+        anyhow::ensure!(self.group.is_none(), "group already open");
+        self.group = Some(Vec::new());
+        Ok(())
+    }
+
+    /// Close the group: fuse every enqueued collective into a single DES
+    /// launch — concurrent calls contend for the same physical links
+    /// under max–min fair share — and report per-call + fused timings.
+    pub fn group_end(&mut self) -> Result<GroupReport> {
+        anyhow::ensure!(self.group.is_some(), "group_end without group_start");
+        let pending = self.group.take().unwrap();
+        if pending.is_empty() {
+            return Ok(GroupReport {
+                calls: Vec::new(),
+                fused_total: SimTime::ZERO,
+                sequential_total: SimTime::ZERO,
+            });
+        }
+        let specs: Vec<MultipathSpec> = pending
+            .iter()
+            .map(|c| self.mc(c.kind).spec(c.msg_bytes, &c.shares, c.elem_bytes))
+            .collect();
+        let reduce_bps = self.cfg.run.calibration().reduce_bps;
+        let fused = simulate_group(&self.topo, &specs, reduce_bps)?;
+        let calls: Vec<GroupCall> = pending
+            .iter()
+            .zip(&fused.per_call)
+            .map(|(c, &t)| GroupCall {
+                kind: c.kind,
+                msg_bytes: c.msg_bytes,
+                individual: c.individual,
+                fused_finish: t,
+            })
+            .collect();
+        let sequential_total: SimTime = pending.iter().map(|c| c.individual).sum();
+        Ok(GroupReport {
+            calls,
+            fused_total: fused.total,
+            sequential_total,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Legacy f32 surface — deprecated shims over the typed path.
+    // -----------------------------------------------------------------
+
+    /// In-place sum AllReduce over one f32 buffer per rank.
+    #[deprecated(note = "use the typed `all_reduce`/`all_reduce_in_place` (DeviceBuffer) API")]
+    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
+        let mut dev = exec::to_dev(bufs);
+        let report = self.all_reduce_in_place(&mut dev, RedOp::Sum)?;
+        exec::write_back(bufs, &dev);
+        Ok(report)
+    }
+
+    /// AllGather: per-rank f32 contributions → concatenated outputs.
+    #[deprecated(note = "use the typed `all_gather` (DeviceBuffer) API")]
     pub fn all_gather_f32(
         &mut self,
         inputs: &[Vec<f32>],
         outputs: &mut [Vec<f32>],
     ) -> Result<CollectiveReport> {
-        anyhow::ensure!(inputs.len() == self.n_ranks(), "one input per rank");
-        let msg = (inputs[0].len() * 4) as u64;
-        let report = self.timed_call(CollectiveKind::AllGather, msg)?;
-        let ext = report.shares.to_extents(msg, 4);
-        exec::all_gather_f32(&self.fabric, &ext, inputs, outputs)?;
+        let dev_in = exec::to_dev(inputs);
+        let mut dev_out = exec::to_dev(outputs);
+        let report = self.all_gather(&dev_in, &mut dev_out)?;
+        exec::write_back(outputs, &dev_out);
         Ok(report)
     }
 
-    /// Broadcast rank 0's buffer to all ranks, in place.
+    /// Broadcast rank 0's f32 buffer to all ranks, in place.
+    #[deprecated(note = "use the typed `broadcast`/`broadcast_in_place` (DeviceBuffer) API")]
     pub fn broadcast_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
-        anyhow::ensure!(bufs.len() == self.n_ranks(), "one buffer per rank");
-        let msg = (bufs[0].len() * 4) as u64;
-        let report = self.timed_call(CollectiveKind::Broadcast, msg)?;
-        let ext = report.shares.to_extents(msg, 4);
-        exec::broadcast_f32(&self.fabric, &ext, bufs)?;
+        let mut dev = exec::to_dev(bufs);
+        let report = self.broadcast_in_place(&mut dev, 0)?;
+        exec::write_back(bufs, &dev);
         Ok(report)
     }
 
-    /// ReduceScatter: `inputs[r]` (n·B elems) → `outputs[r]` = reduced
-    /// block r (§6 extension, functional + timed).
+    /// ReduceScatter over f32 buffers (sum).
+    #[deprecated(note = "use the typed `reduce_scatter` (DeviceBuffer) API")]
     pub fn reduce_scatter_f32(
         &mut self,
         inputs: &[Vec<f32>],
         outputs: &mut [Vec<f32>],
     ) -> Result<CollectiveReport> {
-        anyhow::ensure!(inputs.len() == self.n_ranks(), "one input per rank");
-        let msg = (inputs[0].len() * 4) as u64;
-        let report = self.timed_call(CollectiveKind::ReduceScatter, msg)?;
-        let ext = report.shares.to_extents(msg, 4);
-        exec::reduce_scatter_f32(&self.fabric, &ext, inputs, outputs)?;
+        let dev_in = exec::to_dev(inputs);
+        let mut dev_out = exec::to_dev(outputs);
+        let report = self.reduce_scatter(&dev_in, &mut dev_out, RedOp::Sum)?;
+        exec::write_back(outputs, &dev_out);
         Ok(report)
     }
 
-    /// AllToAll: block transpose across ranks (§6 extension).
+    /// AllToAll over f32 buffers.
+    #[deprecated(note = "use the typed `all_to_all` (DeviceBuffer) API")]
     pub fn all_to_all_f32(
         &mut self,
         inputs: &[Vec<f32>],
         outputs: &mut [Vec<f32>],
     ) -> Result<CollectiveReport> {
-        anyhow::ensure!(inputs.len() == self.n_ranks(), "one input per rank");
-        let msg = (inputs[0].len() * 4) as u64;
-        let report = self.timed_call(CollectiveKind::AllToAll, msg)?;
-        let ext = report.shares.to_extents(msg, 4);
-        exec::all_to_all_f32(&self.fabric, &ext, inputs, outputs)?;
+        let dev_in = exec::to_dev(inputs);
+        let mut dev_out = exec::to_dev(outputs);
+        let report = self.all_to_all(&dev_in, &mut dev_out)?;
+        exec::write_back(outputs, &dev_out);
         Ok(report)
     }
 
-    /// Timing-only entry for pricing a collective without data movement.
+    /// Timing-only entry for pricing a collective without data movement
+    /// (enqueues into an open group like any other call).
     pub fn time_collective(
         &mut self,
         kind: CollectiveKind,
         msg_bytes: u64,
     ) -> Result<CollectiveReport> {
-        self.timed_call(kind, msg_bytes)
+        self.timed_call(kind, msg_bytes, crate::dtype::natural_align(msg_bytes))
     }
 
     /// Dedicated channel accessor for failure-injection tests.
@@ -296,20 +579,26 @@ mod tests {
         Communicator::init(cfg).unwrap()
     }
 
+    fn f32_bufs(vals: &[Vec<f32>]) -> Vec<DeviceBuffer> {
+        vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect()
+    }
+
     #[test]
     fn allreduce_end_to_end_lossless_and_faster_than_baseline() {
         let mut c = comm(4);
         let len = 4096;
-        let mut bufs: Vec<Vec<f32>> = (0..4)
+        let vals: Vec<Vec<f32>> = (0..4)
             .map(|r| (0..len).map(|i| (r * len + i) as f32 * 0.25).collect())
             .collect();
         let expect: Vec<f32> = (0..len)
-            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>())
+            .map(|i| vals.iter().map(|b| b[i]).sum::<f32>())
             .collect();
-        let rep = c.all_reduce_f32(&mut bufs).unwrap();
+        let mut bufs = f32_bufs(&vals);
+        let rep = c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         for b in &bufs {
+            let got = b.to_f32_vec();
             for i in 0..len {
-                assert!((b[i] - expect[i]).abs() <= 1e-3 * expect[i].abs().max(1.0));
+                assert!((got[i] - expect[i]).abs() <= 1e-3 * expect[i].abs().max(1.0));
             }
         }
         assert!(rep.shares.get(PathId::Nvlink) > 50.0);
@@ -317,36 +606,83 @@ mod tests {
     }
 
     #[test]
+    fn out_of_place_allreduce_leaves_send_untouched() {
+        let mut c = comm(2);
+        let send = f32_bufs(&[vec![1.5f32; 256], vec![2.5f32; 256]]);
+        let orig = send.clone();
+        let mut recv: Vec<DeviceBuffer> =
+            (0..2).map(|_| DeviceBuffer::zeros(DataType::F32, 256)).collect();
+        c.all_reduce(&send, &mut recv, RedOp::Sum).unwrap();
+        assert_eq!(send, orig, "send buffers mutated by out-of-place call");
+        for r in &recv {
+            assert!(r.to_f32_vec().iter().all(|&v| v == 4.0));
+        }
+    }
+
+    #[test]
     fn allgather_end_to_end() {
         let mut c = comm(2);
-        let inputs = vec![vec![1.0f32; 128], vec![2.0f32; 128]];
-        let mut outputs = vec![Vec::new(), Vec::new()];
-        let rep = c.all_gather_f32(&inputs, &mut outputs).unwrap();
+        let inputs = f32_bufs(&[vec![1.0f32; 128], vec![2.0f32; 128]]);
+        let mut outputs: Vec<DeviceBuffer> =
+            (0..2).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+        let rep = c.all_gather(&inputs, &mut outputs).unwrap();
         let mut expect = vec![1.0f32; 128];
         expect.extend(vec![2.0f32; 128]);
-        assert_eq!(outputs[0], expect);
-        assert_eq!(outputs[1], expect);
+        assert_eq!(outputs[0].to_f32_vec(), expect);
+        assert_eq!(outputs[1].to_f32_vec(), expect);
         assert_eq!(rep.kind, CollectiveKind::AllGather);
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let mut c = comm(4);
+        let payload: Vec<f32> = (0..96).map(|i| i as f32).collect();
+        let send = DeviceBuffer::from_f32(&payload);
+        let mut recv: Vec<DeviceBuffer> =
+            (0..4).map(|_| DeviceBuffer::zeros(DataType::F32, 96)).collect();
+        c.broadcast(&send, &mut recv, 2).unwrap();
+        for r in &recv {
+            assert_eq!(r.to_f32_vec(), payload);
+        }
+    }
+
+    #[test]
+    fn mixed_dtype_rejected_and_avg_supported() {
+        let mut c = comm(2);
+        let mut bad = vec![
+            DeviceBuffer::from_f32(&[1.0; 64]),
+            DeviceBuffer::from_i32(&[1; 64]),
+        ];
+        assert!(c.all_reduce_in_place(&mut bad, RedOp::Sum).is_err());
+
+        let mut bufs = vec![
+            DeviceBuffer::from_f32(&[1.0; 64]),
+            DeviceBuffer::from_f32(&[3.0; 64]),
+        ];
+        c.all_reduce_in_place(&mut bufs, RedOp::Avg).unwrap();
+        assert!(bufs[0].to_f32_vec().iter().all(|&v| v == 2.0));
     }
 
     #[test]
     fn tuning_is_lazy_and_cached_per_size_class() {
         let mut c = comm(2);
         assert!(c.shares_of_size(CollectiveKind::AllReduce, 256).is_none());
-        let mut bufs = vec![vec![1.0f32; 64]; 2];
-        c.all_reduce_f32(&mut bufs).unwrap();
+        let mut bufs = f32_bufs(&[vec![1.0f32; 64], vec![1.0f32; 64]]);
+        c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         let s1 = c
             .shares_of_size(CollectiveKind::AllReduce, 256)
             .unwrap()
             .clone();
         let t1 = c.profiling_time;
-        c.all_reduce_f32(&mut bufs).unwrap();
+        c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         // No re-tuning on the second call in the same size class.
         assert_eq!(c.profiling_time, t1);
-        // A different size class triggers its own tuning.
-        let mut big = vec![vec![1.0f32; 1 << 20]; 2];
-        c.all_reduce_f32(&mut big).unwrap();
+        assert_eq!(c.call_count(CollectiveKind::AllReduce, 256), 2);
+        // A different size class triggers its own tuning and counter.
+        let mut big = f32_bufs(&[vec![1.0f32; 1 << 20], vec![1.0f32; 1 << 20]]);
+        c.all_reduce_in_place(&mut big, RedOp::Sum).unwrap();
         assert!(c.profiling_time >= t1);
+        assert_eq!(c.call_count(CollectiveKind::AllReduce, 4 << 20), 1);
         let _ = s1;
     }
 
@@ -356,8 +692,8 @@ mod tests {
         cfg.run.disable_rdma = true;
         cfg.tune_msg_bytes = 32 << 20;
         let mut c = Communicator::init(cfg).unwrap();
-        let mut bufs = vec![vec![1.0f32; 1024]; 2];
-        let rep = c.all_reduce_f32(&mut bufs).unwrap();
+        let mut bufs = f32_bufs(&[vec![1.0f32; 1024], vec![1.0f32; 1024]]);
+        let rep = c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         assert_eq!(rep.shares.get(PathId::Rdma), 0.0);
     }
 
@@ -367,9 +703,59 @@ mod tests {
         cfg.run.disable_rdma = true;
         cfg.run.disable_pcie = true;
         let mut c = Communicator::init(cfg).unwrap();
-        let mut bufs = vec![vec![1.0f32; 1024]; 2];
-        let rep = c.all_reduce_f32(&mut bufs).unwrap();
+        let mut bufs = f32_bufs(&[vec![1.0f32; 1024], vec![1.0f32; 1024]]);
+        let rep = c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         assert_eq!(rep.shares, Shares::nvlink_only());
         assert_eq!(c.profiling_time, SimTime::ZERO);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_f32_shims_route_through_typed_path() {
+        let mut c = comm(2);
+        let mut bufs = vec![vec![1.5f32; 256], vec![1.5f32; 256]];
+        let rep = c.all_reduce_f32(&mut bufs).unwrap();
+        assert!(bufs.iter().all(|b| b.iter().all(|&v| v == 3.0)));
+        assert!(rep.algbw_gbps() > 0.0);
+        // The shim hits the same stats bucket as the typed call.
+        assert_eq!(c.call_count(CollectiveKind::AllReduce, 256 * 4), 1);
+    }
+
+    #[test]
+    fn group_fuses_calls_and_never_loses_to_sequential() {
+        let mut c = comm(4);
+        c.group_start().unwrap();
+        let mut ar = f32_bufs(&vec![vec![1.0f32; 4096]; 4]);
+        c.all_reduce_in_place(&mut ar, RedOp::Sum).unwrap();
+        let ag_in = f32_bufs(&vec![vec![2.0f32; 4096]; 4]);
+        let mut ag_out: Vec<DeviceBuffer> =
+            (0..4).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+        c.all_gather(&ag_in, &mut ag_out).unwrap();
+        let rep = c.group_end().unwrap();
+        assert_eq!(rep.calls.len(), 2);
+        assert_eq!(rep.calls[0].kind, CollectiveKind::AllReduce);
+        assert_eq!(rep.calls[1].kind, CollectiveKind::AllGather);
+        assert!(rep.fused_total <= rep.sequential_total);
+        assert!(rep.speedup() >= 1.0);
+        for call in &rep.calls {
+            assert!(call.fused_finish > SimTime::ZERO);
+            assert!(call.fused_finish <= rep.fused_total);
+        }
+        // Functional results still correct under grouping.
+        assert!(ar[0].to_f32_vec().iter().all(|&v| v == 4.0));
+        assert_eq!(ag_out[0].len(), 4 * 4096);
+    }
+
+    #[test]
+    fn group_misuse_rejected_and_empty_group_ok() {
+        let mut c = comm(2);
+        assert!(c.group_end().is_err());
+        c.group_start().unwrap();
+        assert!(c.group_start().is_err());
+        let rep = c.group_end().unwrap();
+        assert!(rep.is_empty());
+        assert_eq!(rep.speedup(), 1.0);
+        // Scope is closed again.
+        assert!(c.group_end().is_err());
     }
 }

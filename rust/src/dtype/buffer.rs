@@ -1,0 +1,223 @@
+//! Typed device buffers — the unit every collective operates on.
+//!
+//! A [`DeviceBuffer`] is a contiguous little-endian byte buffer carrying
+//! a [`DataType`] tag, standing in for `void* buff` + `ncclDataType_t`
+//! in the NCCL signatures. The collective executors move its bytes and
+//! dispatch reductions through [`super::combine`]; constructors and the
+//! widening accessors below are the host-side staging copies.
+
+use super::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, DataType};
+use anyhow::Result;
+
+/// A typed rank buffer: `count` elements of `dtype`, stored little-endian.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceBuffer {
+    dtype: DataType,
+    bytes: Vec<u8>,
+}
+
+impl DeviceBuffer {
+    /// A zero-initialized buffer of `count` elements.
+    pub fn zeros(dtype: DataType, count: usize) -> Self {
+        DeviceBuffer {
+            dtype,
+            bytes: vec![0u8; count * dtype.size_bytes()],
+        }
+    }
+
+    /// Adopt raw little-endian bytes; the length must be element-aligned.
+    pub fn from_raw(dtype: DataType, bytes: Vec<u8>) -> Result<Self> {
+        anyhow::ensure!(
+            bytes.len() % dtype.size_bytes() == 0,
+            "byte length {} not a multiple of {} ({dtype})",
+            bytes.len(),
+            dtype.size_bytes()
+        );
+        Ok(DeviceBuffer { dtype, bytes })
+    }
+
+    pub fn from_f32(vals: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        DeviceBuffer {
+            dtype: DataType::F32,
+            bytes,
+        }
+    }
+
+    pub fn from_f64(vals: &[f64]) -> Self {
+        let mut bytes = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        DeviceBuffer {
+            dtype: DataType::F64,
+            bytes,
+        }
+    }
+
+    pub fn from_i32(vals: &[i32]) -> Self {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        DeviceBuffer {
+            dtype: DataType::I32,
+            bytes,
+        }
+    }
+
+    pub fn from_i64(vals: &[i64]) -> Self {
+        let mut bytes = Vec::with_capacity(vals.len() * 8);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        DeviceBuffer {
+            dtype: DataType::I64,
+            bytes,
+        }
+    }
+
+    pub fn from_u8(vals: &[u8]) -> Self {
+        DeviceBuffer {
+            dtype: DataType::U8,
+            bytes: vals.to_vec(),
+        }
+    }
+
+    /// Convert f32 values into a buffer of any dtype (floats round to the
+    /// target precision, integers truncate) — the mixed-precision
+    /// entry point for tests and workload generators.
+    pub fn from_f32_as(dtype: DataType, vals: &[f32]) -> Self {
+        let mut bytes = Vec::with_capacity(vals.len() * dtype.size_bytes());
+        for &v in vals {
+            match dtype {
+                DataType::F32 => bytes.extend_from_slice(&v.to_le_bytes()),
+                DataType::F64 => bytes.extend_from_slice(&(v as f64).to_le_bytes()),
+                DataType::F16 => bytes.extend_from_slice(&f32_to_f16(v).to_le_bytes()),
+                DataType::BF16 => bytes.extend_from_slice(&f32_to_bf16(v).to_le_bytes()),
+                DataType::I32 => bytes.extend_from_slice(&(v as i32).to_le_bytes()),
+                DataType::I64 => bytes.extend_from_slice(&(v as i64).to_le_bytes()),
+                DataType::U8 => bytes.push(v as u8),
+            }
+        }
+        DeviceBuffer { dtype, bytes }
+    }
+
+    pub fn dtype(&self) -> DataType {
+        self.dtype
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / self.dtype.size_bytes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.bytes
+    }
+
+    /// Grow/shrink to `count` elements (zero-filling growth) — the
+    /// auto-sizing the out-of-place collectives apply to recv buffers.
+    pub fn resize(&mut self, count: usize) {
+        self.bytes.resize(count * self.dtype.size_bytes(), 0);
+    }
+
+    /// Element `i` widened to f64 (exact for every dtype except huge
+    /// I64 values beyond 2^53).
+    pub fn get_f64(&self, i: usize) -> f64 {
+        let es = self.dtype.size_bytes();
+        let b = &self.bytes[i * es..(i + 1) * es];
+        match self.dtype {
+            DataType::F32 => f32::from_le_bytes(b.try_into().unwrap()) as f64,
+            DataType::F64 => f64::from_le_bytes(b.try_into().unwrap()),
+            DataType::F16 => f16_to_f32(u16::from_le_bytes(b.try_into().unwrap())) as f64,
+            DataType::BF16 => bf16_to_f32(u16::from_le_bytes(b.try_into().unwrap())) as f64,
+            DataType::I32 => i32::from_le_bytes(b.try_into().unwrap()) as f64,
+            DataType::I64 => i64::from_le_bytes(b.try_into().unwrap()) as f64,
+            DataType::U8 => b[0] as f64,
+        }
+    }
+
+    /// Whole buffer widened to f64 (see [`Self::get_f64`]).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.get_f64(i)).collect()
+    }
+
+    /// Whole buffer widened/narrowed to f32. F32 buffers take a bulk
+    /// from_le_bytes path (the trainer round-trips gradients through
+    /// this every step).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        if self.dtype == DataType::F32 {
+            return self
+                .bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+        }
+        (0..self.len()).map(|i| self.get_f64(i) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_widen() {
+        let b = DeviceBuffer::from_f32(&[1.5, -2.0]);
+        assert_eq!(b.dtype(), DataType::F32);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.byte_len(), 8);
+        assert_eq!(b.to_f32_vec(), vec![1.5, -2.0]);
+
+        let b = DeviceBuffer::from_i64(&[-7, 1 << 40]);
+        assert_eq!(b.get_f64(0), -7.0);
+        assert_eq!(b.get_f64(1), (1u64 << 40) as f64);
+
+        let b = DeviceBuffer::from_f32_as(DataType::F16, &[3.0, -0.5]);
+        assert_eq!(b.dtype(), DataType::F16);
+        assert_eq!(b.to_f32_vec(), vec![3.0, -0.5]);
+
+        let b = DeviceBuffer::from_f32_as(DataType::U8, &[7.0, 250.0]);
+        assert_eq!(b.to_f64_vec(), vec![7.0, 250.0]);
+    }
+
+    #[test]
+    fn resize_zero_fills() {
+        let mut b = DeviceBuffer::from_i32(&[5]);
+        b.resize(3);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.to_f64_vec(), vec![5.0, 0.0, 0.0]);
+        b.resize(1);
+        assert_eq!(b.to_f64_vec(), vec![5.0]);
+    }
+
+    #[test]
+    fn raw_bytes_checked() {
+        assert!(DeviceBuffer::from_raw(DataType::F32, vec![0u8; 6]).is_err());
+        let b = DeviceBuffer::from_raw(DataType::F16, vec![0u8; 6]).unwrap();
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn zeros_are_zero() {
+        let b = DeviceBuffer::zeros(DataType::BF16, 4);
+        assert_eq!(b.len(), 4);
+        assert!(b.to_f64_vec().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,555 @@
+//! Datatypes and reduction operators for the typed collective API.
+//!
+//! Mirrors `ncclDataType_t` / `ncclRedOp_t`: every collective moves raw
+//! bytes, and reductions dispatch to a per-dtype combine kernel
+//! ([`combine`]) instead of a hardwired f32 add — the redesign that lets
+//! one generic byte-level executor serve the full datatype × redop
+//! matrix while keeping the paper's "lossless" property bit-checkable
+//! per type. Half types (F16/BF16) are carried as `u16` bit patterns and
+//! combined through f32, exactly as a CUDA `__half` kernel would widen.
+
+pub mod buffer;
+
+pub use buffer::DeviceBuffer;
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Mirror of `ncclDataType_t` (the subset the functional layer carries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    /// `ncclFloat32`
+    F32,
+    /// `ncclFloat64`
+    F64,
+    /// `ncclFloat16` — IEEE binary16, carried as its `u16` bit pattern.
+    F16,
+    /// `ncclBfloat16` — bfloat16, carried as its `u16` bit pattern.
+    BF16,
+    /// `ncclInt32`
+    I32,
+    /// `ncclInt64`
+    I64,
+    /// `ncclUint8`
+    U8,
+}
+
+impl DataType {
+    pub const ALL: [DataType; 7] = [
+        DataType::F32,
+        DataType::F64,
+        DataType::F16,
+        DataType::BF16,
+        DataType::I32,
+        DataType::I64,
+        DataType::U8,
+    ];
+
+    /// Element size in bytes — the single source of truth every message
+    /// size / extent-alignment computation routes through.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DataType::F32 => 4,
+            DataType::F64 => 8,
+            DataType::F16 | DataType::BF16 => 2,
+            DataType::I32 => 4,
+            DataType::I64 => 8,
+            DataType::U8 => 1,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            DataType::F32 | DataType::F64 | DataType::F16 | DataType::BF16
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DataType::F32 => "f32",
+            DataType::F64 => "f64",
+            DataType::F16 => "f16",
+            DataType::BF16 => "bf16",
+            DataType::I32 => "i32",
+            DataType::I64 => "i64",
+            DataType::U8 => "u8",
+        }
+    }
+}
+
+impl fmt::Display for DataType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl FromStr for DataType {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f32" | "float32" | "float" => DataType::F32,
+            "f64" | "float64" | "double" => DataType::F64,
+            "f16" | "float16" | "half" => DataType::F16,
+            "bf16" | "bfloat16" => DataType::BF16,
+            "i32" | "int32" => DataType::I32,
+            "i64" | "int64" => DataType::I64,
+            "u8" | "uint8" => DataType::U8,
+            other => anyhow::bail!("unknown datatype '{other}'"),
+        })
+    }
+}
+
+/// Mirror of `ncclRedOp_t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RedOp {
+    /// `ncclSum`
+    Sum,
+    /// `ncclProd`
+    Prod,
+    /// `ncclMin`
+    Min,
+    /// `ncclMax`
+    Max,
+    /// `ncclAvg` — summed on the wire, divided by the rank count once the
+    /// reduction completes (NCCL's documented implementation).
+    Avg,
+}
+
+impl RedOp {
+    pub const ALL: [RedOp; 5] = [
+        RedOp::Sum,
+        RedOp::Prod,
+        RedOp::Min,
+        RedOp::Max,
+        RedOp::Avg,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RedOp::Sum => "sum",
+            RedOp::Prod => "prod",
+            RedOp::Min => "min",
+            RedOp::Max => "max",
+            RedOp::Avg => "avg",
+        }
+    }
+}
+
+impl fmt::Display for RedOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Natural extent alignment for a message of unknown dtype: f32-sized
+/// when possible, degrading to 2/1 bytes so odd-sized (U8/F16) messages
+/// still split on element boundaries. Shared by every timing path so
+/// identical messages always quantize identically.
+pub fn natural_align(msg_bytes: u64) -> u64 {
+    let f32_es = DataType::F32.size_bytes() as u64;
+    if msg_bytes % f32_es == 0 {
+        f32_es
+    } else if msg_bytes % 2 == 0 {
+        2
+    } else {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Half-precision bit conversions (no external `half` crate in the sandbox).
+// ---------------------------------------------------------------------------
+
+/// IEEE binary16 bits → f32 (exact; every f16 value is representable).
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = (bits as u32 & 0x8000) << 16;
+    let exp = (bits >> 10) & 0x1f;
+    let man = (bits & 0x3ff) as u32;
+    let out = match (exp, man) {
+        (0, 0) => sign,
+        (0, _) => {
+            // Subnormal: normalize into an f32 normal.
+            let mut e: i32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+        (0x1f, 0) => sign | 0x7f80_0000,
+        (0x1f, _) => sign | 0x7fc0_0000,
+        _ => sign | ((exp as u32 + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(out)
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let exp = ((x >> 23) & 0xff) as i32;
+    let man = x & 0x7f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (canonical quiet NaN).
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal half. Rounding may carry into the exponent — adding 1 to
+        // the packed value handles that, including the carry into inf.
+        let half = (((unbiased + 15) as u32) << 10) | (man >> 13);
+        let round_bit = 0x1000u32;
+        if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+            return sign | (half + 1) as u16;
+        }
+        return sign | half as u16;
+    }
+    if unbiased >= -25 {
+        // Subnormal half.
+        let man = man | 0x80_0000;
+        let shift = (-14 - unbiased) as u32; // 1..=11
+        let mut half_man = man >> (shift + 13);
+        let round_bit = 1u32 << (shift + 12);
+        if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+            half_man += 1;
+        }
+        return sign | half_man as u16;
+    }
+    sign // underflow → signed zero
+}
+
+/// bfloat16 bits → f32 (exact).
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even.
+pub fn f32_to_bf16(value: f32) -> u16 {
+    let bits = value.to_bits();
+    if value.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // keep NaN quiet
+    }
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+// ---------------------------------------------------------------------------
+// The dtype-dispatched combine kernel.
+// ---------------------------------------------------------------------------
+
+/// One reducible element type: little-endian load/store plus the redop
+/// arithmetic. Integer Sum/Prod wrap (the GPU kernel convention).
+trait Lane: Copy {
+    const BYTES: usize;
+    fn load(b: &[u8]) -> Self;
+    fn store(self, b: &mut [u8]);
+    fn apply(self, other: Self, op: RedOp) -> Self;
+    fn div_n(self, n: u64) -> Self;
+}
+
+macro_rules! int_lane {
+    ($t:ty) => {
+        impl Lane for $t {
+            const BYTES: usize = std::mem::size_of::<$t>();
+            fn load(b: &[u8]) -> Self {
+                <$t>::from_le_bytes(b[..Self::BYTES].try_into().unwrap())
+            }
+            fn store(self, b: &mut [u8]) {
+                b[..Self::BYTES].copy_from_slice(&self.to_le_bytes());
+            }
+            fn apply(self, other: Self, op: RedOp) -> Self {
+                match op {
+                    RedOp::Sum | RedOp::Avg => self.wrapping_add(other),
+                    RedOp::Prod => self.wrapping_mul(other),
+                    RedOp::Min => std::cmp::Ord::min(self, other),
+                    RedOp::Max => std::cmp::Ord::max(self, other),
+                }
+            }
+            fn div_n(self, n: u64) -> Self {
+                self / (n as $t)
+            }
+        }
+    };
+}
+
+int_lane!(i32);
+int_lane!(i64);
+int_lane!(u8);
+
+macro_rules! float_lane {
+    ($t:ty) => {
+        impl Lane for $t {
+            const BYTES: usize = std::mem::size_of::<$t>();
+            fn load(b: &[u8]) -> Self {
+                <$t>::from_le_bytes(b[..Self::BYTES].try_into().unwrap())
+            }
+            fn store(self, b: &mut [u8]) {
+                b[..Self::BYTES].copy_from_slice(&self.to_le_bytes());
+            }
+            fn apply(self, other: Self, op: RedOp) -> Self {
+                match op {
+                    RedOp::Sum | RedOp::Avg => self + other,
+                    RedOp::Prod => self * other,
+                    RedOp::Min => self.min(other),
+                    RedOp::Max => self.max(other),
+                }
+            }
+            fn div_n(self, n: u64) -> Self {
+                self / (n as $t)
+            }
+        }
+    };
+}
+
+float_lane!(f32);
+float_lane!(f64);
+
+/// f16 carried as bits; arithmetic widens through f32 (re-rounding after
+/// each combine, like a `__half` CUDA kernel). Min/Max return the winning
+/// operand's original bits — no re-rounding, so they stay bit-exact.
+#[derive(Clone, Copy)]
+struct HalfLane(u16);
+
+impl Lane for HalfLane {
+    const BYTES: usize = 2;
+    fn load(b: &[u8]) -> Self {
+        HalfLane(u16::from_le_bytes(b[..2].try_into().unwrap()))
+    }
+    fn store(self, b: &mut [u8]) {
+        b[..2].copy_from_slice(&self.0.to_le_bytes());
+    }
+    fn apply(self, other: Self, op: RedOp) -> Self {
+        let (a, b) = (f16_to_f32(self.0), f16_to_f32(other.0));
+        match op {
+            RedOp::Sum | RedOp::Avg => HalfLane(f32_to_f16(a + b)),
+            RedOp::Prod => HalfLane(f32_to_f16(a * b)),
+            RedOp::Min => {
+                if b < a {
+                    other
+                } else {
+                    self
+                }
+            }
+            RedOp::Max => {
+                if b > a {
+                    other
+                } else {
+                    self
+                }
+            }
+        }
+    }
+    fn div_n(self, n: u64) -> Self {
+        HalfLane(f32_to_f16(f16_to_f32(self.0) / n as f32))
+    }
+}
+
+/// bfloat16 twin of [`HalfLane`].
+#[derive(Clone, Copy)]
+struct Bf16Lane(u16);
+
+impl Lane for Bf16Lane {
+    const BYTES: usize = 2;
+    fn load(b: &[u8]) -> Self {
+        Bf16Lane(u16::from_le_bytes(b[..2].try_into().unwrap()))
+    }
+    fn store(self, b: &mut [u8]) {
+        b[..2].copy_from_slice(&self.0.to_le_bytes());
+    }
+    fn apply(self, other: Self, op: RedOp) -> Self {
+        let (a, b) = (bf16_to_f32(self.0), bf16_to_f32(other.0));
+        match op {
+            RedOp::Sum | RedOp::Avg => Bf16Lane(f32_to_bf16(a + b)),
+            RedOp::Prod => Bf16Lane(f32_to_bf16(a * b)),
+            RedOp::Min => {
+                if b < a {
+                    other
+                } else {
+                    self
+                }
+            }
+            RedOp::Max => {
+                if b > a {
+                    other
+                } else {
+                    self
+                }
+            }
+        }
+    }
+    fn div_n(self, n: u64) -> Self {
+        Bf16Lane(f32_to_bf16(bf16_to_f32(self.0) / n as f32))
+    }
+}
+
+fn combine_lanes<T: Lane>(op: RedOp, acc: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(acc.len() % T::BYTES, 0, "acc not element-aligned");
+    debug_assert!(src.len() >= acc.len(), "src shorter than acc");
+    for (a, s) in acc
+        .chunks_exact_mut(T::BYTES)
+        .zip(src.chunks_exact(T::BYTES))
+    {
+        T::load(a).apply(T::load(s), op).store(a);
+    }
+}
+
+/// Elementwise `acc[i] = acc[i] op src[i]` over little-endian byte
+/// buffers — the consumer-side combine of the staged ReduceScatter step.
+/// [`RedOp::Avg`] combines as Sum (the divide happens in
+/// [`scale_avg`] once the reduction is complete).
+pub fn combine(dtype: DataType, op: RedOp, acc: &mut [u8], src: &[u8]) {
+    match dtype {
+        DataType::F32 => combine_lanes::<f32>(op, acc, src),
+        DataType::F64 => combine_lanes::<f64>(op, acc, src),
+        DataType::F16 => combine_lanes::<HalfLane>(op, acc, src),
+        DataType::BF16 => combine_lanes::<Bf16Lane>(op, acc, src),
+        DataType::I32 => combine_lanes::<i32>(op, acc, src),
+        DataType::I64 => combine_lanes::<i64>(op, acc, src),
+        DataType::U8 => combine_lanes::<u8>(op, acc, src),
+    }
+}
+
+fn scale_lanes<T: Lane>(buf: &mut [u8], n: u64) {
+    for a in buf.chunks_exact_mut(T::BYTES) {
+        T::load(a).div_n(n).store(a);
+    }
+}
+
+/// Elementwise divide-by-`n` — the [`RedOp::Avg`] finalizer (integer
+/// dtypes truncate, matching `ncclAvg` on integral types).
+pub fn scale_avg(dtype: DataType, buf: &mut [u8], n: u64) {
+    if n <= 1 {
+        return;
+    }
+    match dtype {
+        DataType::F32 => scale_lanes::<f32>(buf, n),
+        DataType::F64 => scale_lanes::<f64>(buf, n),
+        DataType::F16 => scale_lanes::<HalfLane>(buf, n),
+        DataType::BF16 => scale_lanes::<Bf16Lane>(buf, n),
+        DataType::I32 => scale_lanes::<i32>(buf, n),
+        DataType::I64 => scale_lanes::<i64>(buf, n),
+        DataType::U8 => scale_lanes::<u8>(buf, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_cover_matrix() {
+        assert_eq!(DataType::F32.size_bytes(), 4);
+        assert_eq!(DataType::F64.size_bytes(), 8);
+        assert_eq!(DataType::F16.size_bytes(), 2);
+        assert_eq!(DataType::BF16.size_bytes(), 2);
+        assert_eq!(DataType::I32.size_bytes(), 4);
+        assert_eq!(DataType::I64.size_bytes(), 8);
+        assert_eq!(DataType::U8.size_bytes(), 1);
+        assert_eq!(DataType::ALL.len(), 7);
+        assert_eq!(RedOp::ALL.len(), 5);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1024.0, -1024.0, 65504.0, 0.25,
+        ] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "f16 roundtrip of {v}");
+        }
+        // Overflow clamps to inf, NaN stays NaN, subnormals survive.
+        assert!(f16_to_f32(f32_to_f16(1e6)).is_infinite());
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        let tiny = 2f32.powi(-24); // smallest f16 subnormal
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        assert_eq!(f16_to_f32(f32_to_f16(2f32.powi(-30))), 0.0);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; RNE
+        // keeps the even mantissa (1.0).
+        assert_eq!(f16_to_f32(f32_to_f16(1.0 + 2f32.powi(-11))), 1.0);
+        // 1 + 3·2^-11 is halfway with an odd lower mantissa; rounds up.
+        let up = f16_to_f32(f32_to_f16(1.0 + 3.0 * 2f32.powi(-11)));
+        assert_eq!(up, 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -2.5, 128.0, 3.0e38, 1.0e-38] {
+            let back = bf16_to_f32(f32_to_bf16(v));
+            assert!(
+                (back - v).abs() <= v.abs() * 0.01,
+                "bf16 roundtrip of {v} gave {back}"
+            );
+        }
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0)), 1.0);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(f32::INFINITY)).is_infinite());
+    }
+
+    #[test]
+    fn combine_dispatches_per_dtype() {
+        // f32 sum
+        let mut acc = Vec::new();
+        for v in [1.0f32, 2.0] {
+            acc.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut src = Vec::new();
+        for v in [10.0f32, 20.0] {
+            src.extend_from_slice(&v.to_le_bytes());
+        }
+        combine(DataType::F32, RedOp::Sum, &mut acc, &src);
+        assert_eq!(f32::from_le_bytes(acc[0..4].try_into().unwrap()), 11.0);
+        assert_eq!(f32::from_le_bytes(acc[4..8].try_into().unwrap()), 22.0);
+
+        // i64 min
+        let mut acc = (-5i64).to_le_bytes().to_vec();
+        let src = (7i64).to_le_bytes().to_vec();
+        combine(DataType::I64, RedOp::Min, &mut acc, &src);
+        assert_eq!(i64::from_le_bytes(acc[..8].try_into().unwrap()), -5);
+
+        // u8 prod wraps
+        let mut acc = vec![200u8];
+        combine(DataType::U8, RedOp::Prod, &mut acc, &[3u8]);
+        assert_eq!(acc[0], 200u8.wrapping_mul(3));
+
+        // f16 sum of exact integers is exact
+        let mut acc = f32_to_f16(12.0).to_le_bytes().to_vec();
+        let src = f32_to_f16(30.0).to_le_bytes().to_vec();
+        combine(DataType::F16, RedOp::Sum, &mut acc, &src);
+        assert_eq!(
+            f16_to_f32(u16::from_le_bytes(acc[..2].try_into().unwrap())),
+            42.0
+        );
+    }
+
+    #[test]
+    fn scale_avg_divides() {
+        let mut buf = Vec::new();
+        for v in [8.0f32, -6.0] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        scale_avg(DataType::F32, &mut buf, 4);
+        assert_eq!(f32::from_le_bytes(buf[0..4].try_into().unwrap()), 2.0);
+        assert_eq!(f32::from_le_bytes(buf[4..8].try_into().unwrap()), -1.5);
+
+        let mut buf = (9i32).to_le_bytes().to_vec();
+        scale_avg(DataType::I32, &mut buf, 2);
+        assert_eq!(i32::from_le_bytes(buf[..4].try_into().unwrap()), 4);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!("bf16".parse::<DataType>().unwrap(), DataType::BF16);
+        assert_eq!("float32".parse::<DataType>().unwrap(), DataType::F32);
+        assert!("q4".parse::<DataType>().is_err());
+        assert_eq!(format!("{}", DataType::I64), "i64");
+        assert_eq!(format!("{}", RedOp::Avg), "avg");
+    }
+}

@@ -31,15 +31,35 @@
 //!
 //! ## Quickstart
 //!
+//! The API is typed and NCCL-shaped: buffers are [`dtype::DeviceBuffer`]s
+//! carrying a [`dtype::DataType`] tag, reductions take a full
+//! [`dtype::RedOp`], out-of-place send/recv pairs are the default, and
+//! `group_start`/`group_end` fuse collectives into one launch.
+//!
 //! ```no_run
 //! use flexlink::comm::{Communicator, CommConfig};
 //! use flexlink::config::presets::Preset;
+//! use flexlink::dtype::{DataType, DeviceBuffer, RedOp};
 //!
 //! let cfg = CommConfig::new(Preset::H800, 8);
 //! let mut comm = Communicator::init(cfg).unwrap();
-//! let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 1 << 20]).collect();
-//! let report = comm.all_reduce_f32(&mut bufs).unwrap();
+//! // One typed buffer per rank; out-of-place send/recv pairs.
+//! let send: Vec<DeviceBuffer> =
+//!     (0..8).map(|r| DeviceBuffer::from_f32(&vec![r as f32; 1 << 20])).collect();
+//! let mut recv: Vec<DeviceBuffer> =
+//!     (0..8).map(|_| DeviceBuffer::zeros(DataType::F32, 1 << 20)).collect();
+//! let report = comm.all_reduce(&send, &mut recv, RedOp::Sum).unwrap();
 //! println!("algbw = {:.1} GB/s", report.algbw_gbps());
+//!
+//! // Batched launch (ncclGroupStart/ncclGroupEnd): fused collectives
+//! // contend for the same links in one DES launch.
+//! comm.group_start().unwrap();
+//! comm.all_reduce_in_place(&mut recv, RedOp::Avg).unwrap();
+//! let mut gathered: Vec<DeviceBuffer> =
+//!     (0..8).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+//! comm.all_gather(&send, &mut gathered).unwrap();
+//! let group = comm.group_end().unwrap();
+//! println!("fused {} vs sequential {}", group.fused_total, group.sequential_total);
 //! ```
 
 pub mod balancer;
@@ -48,6 +68,7 @@ pub mod bench_harness;
 pub mod collectives;
 pub mod comm;
 pub mod config;
+pub mod dtype;
 pub mod links;
 pub mod memory;
 pub mod metrics;

@@ -35,7 +35,7 @@ COMMANDS:
   train   --model tiny|gpt10m|gpt100m --gpus <n> --steps <k>
           [--artifacts <dir>] [--csv <path>]
           data-parallel training with FlexLink gradient AllReduce
-  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead> [--csv <path>]
+  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group> [--csv <path>]
           regenerate a paper table/figure
   topo    --preset <p>
           print topology details and Table 1 numbers
@@ -347,11 +347,27 @@ fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
                 b.comm_fraction * 100.0
             );
         }
+        "group" => {
+            let r = bh::group_fusion(
+                Preset::H800,
+                8,
+                64,
+                &[
+                    CollectiveKind::AllReduce,
+                    CollectiveKind::AllGather,
+                    CollectiveKind::ReduceScatter,
+                ],
+            )?;
+            print!("{}", bh::render_group_fusion(&r));
+        }
         "overhead" => {
             use flexlink::comm::Communicator;
+            use flexlink::dtype::{DeviceBuffer, RedOp};
             let mut comm = Communicator::init(CommConfig::new(Preset::H800, 8))?;
-            let mut bufs = vec![vec![1.0f32; 1 << 20]; 8];
-            comm.all_reduce_f32(&mut bufs)?;
+            let ones = vec![1.0f32; 1 << 20];
+            let mut bufs: Vec<DeviceBuffer> =
+                (0..8).map(|_| DeviceBuffer::from_f32(&ones)).collect();
+            comm.all_reduce_in_place(&mut bufs, RedOp::Sum)?;
             let o = bh::overhead(&comm);
             println!("== §5.4 overhead analysis ==");
             println!(
@@ -367,7 +383,7 @@ fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
             println!("  one-time profiling (simulated): {:.2}s", o.profiling_time_s);
         }
         other => anyhow::bail!(
-            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead)"
+            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group)"
         ),
     }
     Ok(())

@@ -11,6 +11,7 @@
 //! monotonic-counter protocol; [`StagingChannel`] is the double-buffered
 //! pair used per (producer, consumer) link.
 
+use crate::dtype::{combine, DataType, RedOp};
 use crate::sync::SlotSem;
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -122,18 +123,26 @@ impl SharedSlot {
 
     /// Consumer side that *combines* instead of copying — the staged-path
     /// ReduceScatter step (consumer reads the staged chunk and reduces it
-    /// into its accumulator).
-    pub fn consume_reduce_f32(&self, i: u32, acc: &mut [f32]) {
-        assert!(acc.len() * 4 <= self.capacity());
+    /// into its accumulator) — dtype/op dispatched through
+    /// [`crate::dtype::combine`], the single reduction kernel.
+    pub fn consume_combine(&self, i: u32, acc: &mut [u8], dtype: DataType, op: RedOp) {
+        assert!(acc.len() <= self.capacity(), "read exceeds staging slot");
+        assert_eq!(acc.len() % dtype.size_bytes(), 0, "acc not element-aligned");
         self.sem.consume(i, || {
             let buf = unsafe { &*self.buf.get() };
-            for (k, a) in acc.iter_mut().enumerate() {
-                let off = k * 4;
-                let v = f32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
-                *a += v;
-            }
-            self.ledger.record_copy((acc.len() * 4) as u64);
+            combine(dtype, op, acc, &buf[..acc.len()]);
+            self.ledger.record_copy(acc.len() as u64);
         })
+    }
+
+    /// f32-sum convenience over [`Self::consume_combine`].
+    pub fn consume_reduce_f32(&self, i: u32, acc: &mut [f32]) {
+        // SAFETY: widening an f32 slice to its bytes is always valid; the
+        // exclusive borrow carries over.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(acc.as_mut_ptr().cast::<u8>(), acc.len() * 4)
+        };
+        self.consume_combine(i, bytes, DataType::F32, RedOp::Sum);
     }
 }
 
@@ -182,6 +191,11 @@ impl StagingChannel {
         self.slots[(k % 2) as usize].consume(k / 2, dst);
     }
 
+    /// Consumer: drain chunk `k`, combining into `acc` under (dtype, op).
+    pub fn recv_chunk_combine(&self, k: u32, acc: &mut [u8], dtype: DataType, op: RedOp) {
+        self.slots[(k % 2) as usize].consume_combine(k / 2, acc, dtype, op);
+    }
+
     /// Consumer: drain chunk `k`, reducing into `acc` (f32 sum).
     pub fn recv_chunk_reduce_f32(&self, k: u32, acc: &mut [f32]) {
         self.slots[(k % 2) as usize].consume_reduce_f32(k / 2, acc);
@@ -197,6 +211,13 @@ impl StagingChannel {
     pub fn recv_next(&self, dst: &mut [u8]) {
         let k = self.recv_seq.fetch_add(1, Ordering::Relaxed);
         self.recv_chunk(k as u32, dst);
+    }
+
+    /// Consumer: drain the next chunk, combining into `acc` under
+    /// (dtype, op) — the generic reduce path of the typed executors.
+    pub fn recv_next_combine(&self, acc: &mut [u8], dtype: DataType, op: RedOp) {
+        let k = self.recv_seq.fetch_add(1, Ordering::Relaxed);
+        self.recv_chunk_combine(k as u32, acc, dtype, op);
     }
 
     /// Consumer: drain the next chunk, reducing into `acc`.
@@ -246,6 +267,22 @@ mod tests {
         let mut acc = [10.0f32, 20.0, 30.0, 40.0];
         slot.consume_reduce_f32(0, &mut acc);
         assert_eq!(acc, [11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn consume_combine_dispatches_dtype_and_op() {
+        let ledger = MemoryLedger::new();
+        let slot = SharedSlot::new(16, ledger);
+        let staged = [3i32, -9, 100, 0];
+        let bytes: Vec<u8> = staged.iter().flat_map(|v| v.to_le_bytes()).collect();
+        slot.produce(0, &bytes);
+        let mut acc_vals = [5i32, -2, 7, -1];
+        let mut acc: Vec<u8> = acc_vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        slot.consume_combine(0, &mut acc, DataType::I32, RedOp::Min);
+        for (i, a) in acc_vals.iter_mut().enumerate() {
+            *a = i32::from_le_bytes(acc[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        assert_eq!(acc_vals, [3, -9, 7, -1]);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod data;
 pub mod optimizer;
 
 use crate::comm::{CommConfig, Communicator};
+use crate::dtype::{DeviceBuffer, RedOp};
 use crate::runtime::{HostTensor, LoadedModule, XlaRuntime};
 use crate::sim::SimTime;
 use anyhow::{Context, Result};
@@ -153,9 +154,11 @@ impl Trainer {
             grads.push(g);
         }
 
-        // FlexLink gradient AllReduce (real bytes + DES pricing), plus the
-        // NCCL baseline's virtual time for speedup accounting.
-        let report = self.comm.all_reduce_f32(&mut grads)?;
+        // FlexLink gradient AllReduce (real bytes + DES pricing) — the
+        // typed path with RedOp::Avg does the DP mean on the wire — plus
+        // the NCCL baseline's virtual time for speedup accounting.
+        let mut dev: Vec<DeviceBuffer> = grads.iter().map(|g| DeviceBuffer::from_f32(g)).collect();
+        let report = self.comm.all_reduce_in_place(&mut dev, RedOp::Avg)?;
         let baseline = {
             let bl = crate::baseline::NcclBaseline::new(
                 self.comm.topology(),
@@ -166,12 +169,8 @@ impl Trainer {
             bl.run(report.msg_bytes)?.total()
         };
 
-        // All ranks hold the identical summed gradient; average + Adam.
-        let mut grad = std::mem::take(&mut grads[0]);
-        let scale = 1.0 / n as f32;
-        for g in grad.iter_mut() {
-            *g *= scale;
-        }
+        // All ranks hold the identical averaged gradient; Adam.
+        let grad = dev[0].to_f32_vec();
         self.step_no += 1;
         match &self.adam {
             Some(module) => {

@@ -1,44 +1,90 @@
-//! Drop-in API integration: the NCCL-shaped surface over a full
-//! Communicator lifecycle, mixed-operator sequences, and §5.4 overhead
+//! Drop-in API integration: the typed NCCL-shaped surface over a full
+//! Communicator lifecycle — all five collectives, out-of-place buffers,
+//! group launches, mixed-operator sequences, and §5.4 overhead
 //! accounting.
 
+use flexlink::collectives::CollectiveKind;
 use flexlink::comm::api::{
-    flexlink_all_gather, flexlink_all_reduce, flexlink_broadcast, flexlink_comm_init_all,
-    DataType, RedOp,
+    flexlink_all_gather, flexlink_all_reduce, flexlink_all_reduce_in_place, flexlink_all_to_all,
+    flexlink_broadcast, flexlink_comm_init_all, flexlink_group_end, flexlink_group_start,
+    flexlink_reduce_scatter, DataType, DeviceBuffer, RedOp,
 };
 use flexlink::comm::{CommConfig, Communicator};
-use flexlink::collectives::CollectiveKind;
 use flexlink::config::presets::Preset;
 use flexlink::links::PathId;
 
 #[test]
-fn nccl_style_session() {
+fn nccl_style_session_all_five_collectives() {
     let mut comm = flexlink_comm_init_all(Preset::H800, 4).unwrap();
     let count = 2048;
 
-    // AllReduce
-    let mut bufs = vec![vec![0.5f32; count]; 4];
-    let rep = flexlink_all_reduce(&mut comm, &mut bufs, count, DataType::F32, RedOp::Sum).unwrap();
-    assert!(bufs.iter().all(|b| b.iter().all(|&v| v == 2.0)));
+    // AllReduce, out-of-place.
+    let sends = vec![DeviceBuffer::from_f32(&vec![0.5f32; count]); 4];
+    let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, count); 4];
+    let rep = flexlink_all_reduce(&mut comm, &sends, &mut recvs, count, DataType::F32, RedOp::Sum)
+        .unwrap();
+    assert!(recvs
+        .iter()
+        .all(|b| b.to_f32_vec().iter().all(|&v| v == 2.0)));
     assert!(rep.algbw_gbps() > 0.0);
 
-    // AllGather
-    let sends: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; count]).collect();
-    let mut recvs = vec![Vec::new(); 4];
+    // AllGather.
+    let sends: Vec<DeviceBuffer> = (0..4)
+        .map(|r| DeviceBuffer::from_f32(&vec![r as f32; count]))
+        .collect();
+    let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, 0); 4];
     flexlink_all_gather(&mut comm, &sends, &mut recvs, count, DataType::F32).unwrap();
     for r in &recvs {
-        assert_eq!(r.len(), 4 * count);
-        assert_eq!(r[0], 0.0);
-        assert_eq!(r[count], 1.0);
-        assert_eq!(r[3 * count], 3.0);
+        let v = r.to_f32_vec();
+        assert_eq!(v.len(), 4 * count);
+        assert_eq!(v[0], 0.0);
+        assert_eq!(v[count], 1.0);
+        assert_eq!(v[3 * count], 3.0);
     }
 
-    // Broadcast
-    let mut bufs = vec![vec![0f32; count]; 4];
-    bufs[0] = (0..count).map(|i| i as f32).collect();
-    flexlink_broadcast(&mut comm, &mut bufs, count, DataType::F32).unwrap();
-    for b in &bufs[1..] {
-        assert_eq!(b, &bufs[0]);
+    // Broadcast from a non-zero root.
+    let payload: Vec<f32> = (0..count).map(|i| i as f32).collect();
+    let send = DeviceBuffer::from_f32(&payload);
+    let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, count); 4];
+    flexlink_broadcast(&mut comm, &send, &mut recvs, count, DataType::F32, 1).unwrap();
+    for b in &recvs {
+        assert_eq!(b.to_f32_vec(), payload);
+    }
+
+    // ReduceScatter: 4 blocks of count/4.
+    let sends = vec![DeviceBuffer::from_f32(&vec![1.0f32; count]); 4];
+    let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, 0); 4];
+    flexlink_reduce_scatter(
+        &mut comm,
+        &sends,
+        &mut recvs,
+        count / 4,
+        DataType::F32,
+        RedOp::Sum,
+    )
+    .unwrap();
+    for b in &recvs {
+        assert_eq!(b.len(), count / 4);
+        assert!(b.to_f32_vec().iter().all(|&v| v == 4.0));
+    }
+
+    // AllToAll block transpose.
+    let sends: Vec<DeviceBuffer> = (0..4)
+        .map(|r| {
+            let v: Vec<f32> = (0..count).map(|i| (r * 4 + i / (count / 4)) as f32).collect();
+            DeviceBuffer::from_f32(&v)
+        })
+        .collect();
+    let mut recvs = vec![DeviceBuffer::zeros(DataType::F32, 0); 4];
+    flexlink_all_to_all(&mut comm, &sends, &mut recvs, count, DataType::F32).unwrap();
+    let block = count / 4;
+    for r in 0..4 {
+        let v = recvs[r].to_f32_vec();
+        for src in 0..4 {
+            assert!(v[src * block..(src + 1) * block]
+                .iter()
+                .all(|&x| x == (src * 4 + r) as f32));
+        }
     }
 }
 
@@ -50,13 +96,15 @@ fn repeated_collectives_keep_monotonic_counters_correct() {
     cfg.tune_msg_bytes = 4 << 20;
     let mut comm = Communicator::init(cfg).unwrap();
     for iter in 0..20 {
-        let mut bufs = vec![vec![iter as f32; 512]; 2];
-        comm.all_reduce_f32(&mut bufs).unwrap();
+        let mut bufs = vec![DeviceBuffer::from_f32(&vec![iter as f32; 512]); 2];
+        comm.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
         assert!(
-            bufs.iter().all(|b| b.iter().all(|&v| v == 2.0 * iter as f32)),
+            bufs.iter()
+                .all(|b| b.to_f32_vec().iter().all(|&v| v == 2.0 * iter as f32)),
             "stale data at iteration {iter}"
         );
     }
+    assert_eq!(comm.call_count(CollectiveKind::AllReduce, 512 * 4), 20);
 }
 
 #[test]
@@ -64,8 +112,8 @@ fn overhead_report_matches_paper_shape() {
     let mut cfg = CommConfig::new(Preset::H800, 4);
     cfg.tune_msg_bytes = 8 << 20;
     let mut comm = Communicator::init(cfg).unwrap();
-    let mut bufs = vec![vec![1.0f32; 1 << 18]; 4];
-    comm.all_reduce_f32(&mut bufs).unwrap();
+    let mut bufs = vec![DeviceBuffer::from_f32(&vec![1.0f32; 1 << 18]); 4];
+    comm.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
     let o = flexlink::bench_harness::overhead(&comm);
     // Pinned staging memory present and bounded (MBs, not GBs).
     assert!(o.pinned_bytes > 0);
@@ -89,31 +137,25 @@ fn timing_only_extension_ops() {
 }
 
 #[test]
-fn functional_extension_ops() {
+fn grouped_nccl_calls_fuse_into_one_launch() {
     let mut cfg = CommConfig::new(Preset::H800, 4);
-    cfg.tune_msg_bytes = 4 << 20;
+    cfg.tune_msg_bytes = 8 << 20;
     let mut comm = Communicator::init(cfg).unwrap();
-    // ReduceScatter: 4 blocks of 256.
-    let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![(r + 1) as f32; 1024]).collect();
-    let mut outs = vec![Vec::new(); 4];
-    comm.reduce_scatter_f32(&inputs, &mut outs).unwrap();
-    for o in &outs {
-        assert_eq!(o.len(), 256);
-        assert!(o.iter().all(|&v| v == 10.0));
-    }
-    // AllToAll block transpose.
-    let inputs: Vec<Vec<f32>> = (0..4)
-        .map(|r| (0..1024).map(|i| (r * 4 + i / 256) as f32).collect())
-        .collect();
-    let mut outs = vec![Vec::new(); 4];
-    comm.all_to_all_f32(&inputs, &mut outs).unwrap();
-    for r in 0..4 {
-        for src in 0..4 {
-            assert!(outs[r][src * 256..(src + 1) * 256]
-                .iter()
-                .all(|&v| v == (src * 4 + r) as f32));
-        }
-    }
+    let count = 1 << 16;
+
+    flexlink_group_start(&mut comm).unwrap();
+    let mut ar = vec![DeviceBuffer::from_f32(&vec![2.0f32; count]); 4];
+    flexlink_all_reduce_in_place(&mut comm, &mut ar, count, DataType::F32, RedOp::Sum).unwrap();
+    let ag_in = vec![DeviceBuffer::from_f32(&vec![1.0f32; count]); 4];
+    let mut ag_out = vec![DeviceBuffer::zeros(DataType::F32, 0); 4];
+    flexlink_all_gather(&mut comm, &ag_in, &mut ag_out, count, DataType::F32).unwrap();
+    let group = flexlink_group_end(&mut comm).unwrap();
+
+    assert_eq!(group.calls.len(), 2);
+    assert!(group.fused_total <= group.sequential_total);
+    // Data produced inside the group is still correct.
+    assert!(ar[0].to_f32_vec().iter().all(|&v| v == 8.0));
+    assert_eq!(ag_out[0].len(), 4 * count);
 }
 
 #[test]

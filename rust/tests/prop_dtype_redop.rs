@@ -1,0 +1,303 @@
+//! Property tests for the typed collective API: the full datatype ×
+//! redop matrix must be lossless (bit-exact where the arithmetic is
+//! exact, bounded-error for inexact float accumulation), and fused group
+//! launches must never lose to sequential launches.
+//!
+//! Exactness trick: pools of small integers / powers of two are exactly
+//! representable — and stay exact through every partial combine — in
+//! every dtype down to binary16, so even the re-rounding half-precision
+//! ring must match the straight-line reference bit for bit.
+
+use flexlink::balancer::Shares;
+use flexlink::collectives::{exec, CollectiveKind};
+use flexlink::comm::{CommConfig, Communicator};
+use flexlink::config::presets::Preset;
+use flexlink::dtype::{DataType, DeviceBuffer, RedOp};
+use flexlink::links::PathId;
+use flexlink::memory::MemoryLedger;
+use flexlink::transport::Fabric;
+use flexlink::util::rng::Rng;
+
+fn fabric(n: usize) -> Fabric {
+    // Tiny chunks exercise multi-chunk pipelining on every path.
+    Fabric::new(n, 64, MemoryLedger::new())
+}
+
+fn splits() -> Vec<Shares> {
+    vec![
+        Shares::nvlink_only(),
+        Shares::from_pcts(&[
+            (PathId::Nvlink, 81.0),
+            (PathId::Pcie, 12.0),
+            (PathId::Rdma, 7.0),
+        ]),
+    ]
+}
+
+/// Per-(dtype, op) value pool keeping every partial result exactly
+/// representable (see module docs).
+fn pool(dtype: DataType, op: RedOp, rng: &mut Rng) -> f32 {
+    match op {
+        RedOp::Prod => {
+            if dtype.is_float() {
+                // Powers of two with signs: products stay powers of two.
+                let mag = [0.5f32, 1.0, 2.0][rng.range_usize(0, 3)];
+                let sign = if rng.range_usize(0, 2) == 0 { 1.0 } else { -1.0 };
+                mag * sign
+            } else if dtype == DataType::U8 {
+                [1.0f32, 2.0, 3.0][rng.range_usize(0, 3)]
+            } else {
+                [-2.0f32, -1.0, 1.0, 2.0][rng.range_usize(0, 4)]
+            }
+        }
+        _ => {
+            if dtype == DataType::U8 {
+                rng.range_f32(0.0, 15.99).floor()
+            } else {
+                rng.range_f32(-8.0, 8.99).floor().clamp(-8.0, 8.0)
+            }
+        }
+    }
+}
+
+/// Straight-line f64 reference for one element across ranks, mirroring
+/// the wire semantics (Avg = sum then divide; integer division
+/// truncates via the `from_f32_as` cast when re-encoded).
+fn reference(vals: &[f64], op: RedOp, n: usize) -> f64 {
+    match op {
+        RedOp::Sum => vals.iter().sum(),
+        RedOp::Avg => vals.iter().sum::<f64>() / n as f64,
+        RedOp::Prod => vals.iter().product(),
+        RedOp::Min => vals.iter().cloned().fold(f64::INFINITY, f64::min),
+        RedOp::Max => vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+#[test]
+fn prop_allreduce_dtype_redop_matrix_bit_exact() {
+    let n = 4;
+    let len = 257; // ragged: exercises uneven ring blocks per path
+    let mut rng = Rng::seed_from_u64(0xD7_0E);
+    for dtype in DataType::ALL {
+        for op in RedOp::ALL {
+            // Draw per-rank exact-pool values.
+            let vals: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| pool(dtype, op, &mut rng)).collect())
+                .collect();
+            let expect_f64: Vec<f64> = (0..len)
+                .map(|i| {
+                    let col: Vec<f64> = vals.iter().map(|v| v[i] as f64).collect();
+                    reference(&col, op, n)
+                })
+                .collect();
+            let expect_f32: Vec<f32> = expect_f64.iter().map(|&v| v as f32).collect();
+            let expected = DeviceBuffer::from_f32_as(dtype, &expect_f32);
+            for shares in splits() {
+                let f = fabric(n);
+                let es = dtype.size_bytes() as u64;
+                let ext = shares.to_extents(len as u64 * es, es);
+                let mut bufs: Vec<DeviceBuffer> = vals
+                    .iter()
+                    .map(|v| DeviceBuffer::from_f32_as(dtype, v))
+                    .collect();
+                exec::all_reduce(&f, &ext, &mut bufs, op).unwrap();
+                for (r, b) in bufs.iter().enumerate() {
+                    assert_eq!(
+                        b, &expected,
+                        "{dtype} {op} rank {r} under {shares}: {:?} vs {:?}",
+                        &b.to_f64_vec()[..4.min(len)],
+                        &expected.to_f64_vec()[..4.min(len)]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_float_sum_avg_bounded_error_random_values() {
+    // Arbitrary (non-pool) floats: accumulation order may differ from
+    // the straight-line reference, but the error must stay bounded by
+    // the dtype's precision.
+    let n = 8;
+    let len = 301;
+    let mut rng = Rng::seed_from_u64(77);
+    for (dtype, rel_tol) in [
+        (DataType::F32, 1e-5f64),
+        (DataType::F64, 1e-12),
+        (DataType::F16, 2e-2),
+        (DataType::BF16, 1.5e-1),
+    ] {
+        for op in [RedOp::Sum, RedOp::Avg] {
+            let vals: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..len).map(|_| rng.range_f32(-4.0, 4.0)).collect())
+                .collect();
+            // Round inputs to the dtype first so the reference sums what
+            // the wire actually carries.
+            let bufs_exact: Vec<DeviceBuffer> = vals
+                .iter()
+                .map(|v| DeviceBuffer::from_f32_as(dtype, v))
+                .collect();
+            let f = fabric(n);
+            let es = dtype.size_bytes() as u64;
+            let shares = Shares::from_pcts(&[(PathId::Nvlink, 70.0), (PathId::Pcie, 30.0)]);
+            let ext = shares.to_extents(len as u64 * es, es);
+            let mut bufs = bufs_exact.clone();
+            exec::all_reduce(&f, &ext, &mut bufs, op).unwrap();
+            let div = if op == RedOp::Avg { n as f64 } else { 1.0 };
+            for i in 0..len {
+                let want: f64 =
+                    bufs_exact.iter().map(|b| b.get_f64(i)).sum::<f64>() / div;
+                let got = bufs[0].get_f64(i);
+                let tol = rel_tol * want.abs().max(1.0) * n as f64;
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{dtype} {op} elem {i}: got {got}, want {want} (tol {tol})"
+                );
+            }
+            // Reproducibility: every rank bit-identical.
+            for b in &bufs {
+                assert_eq!(b, &bufs[0], "{dtype} {op}: ranks disagree");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pure_movement_collectives_bit_exact_across_dtypes() {
+    // AllGather / Broadcast / AllToAll never combine — any dtype must
+    // come through bit-identical.
+    let n = 4;
+    let mut rng = Rng::seed_from_u64(5);
+    for dtype in DataType::ALL {
+        let len = 64 * n; // divisible into n blocks for AllToAll
+        let es = dtype.size_bytes() as u64;
+        let shares = Shares::from_pcts(&[(PathId::Nvlink, 60.0), (PathId::Rdma, 40.0)]);
+        let mk = |rng: &mut Rng| -> DeviceBuffer {
+            let v: Vec<f32> = (0..len).map(|_| pool(dtype, RedOp::Sum, rng)).collect();
+            DeviceBuffer::from_f32_as(dtype, &v)
+        };
+
+        // AllGather.
+        let inputs: Vec<DeviceBuffer> = (0..n).map(|_| mk(&mut rng)).collect();
+        let mut outputs = vec![DeviceBuffer::zeros(dtype, 0); n];
+        let f = fabric(n);
+        let ext = shares.to_extents(len as u64 * es, es);
+        exec::all_gather(&f, &ext, &inputs, &mut outputs).unwrap();
+        let mut expect_bytes = Vec::new();
+        for b in &inputs {
+            expect_bytes.extend_from_slice(b.bytes());
+        }
+        for o in &outputs {
+            assert_eq!(o.bytes(), &expect_bytes[..], "{dtype} allgather");
+        }
+
+        // Broadcast from root 2.
+        let f = fabric(n);
+        let mut bufs = vec![DeviceBuffer::zeros(dtype, len); n];
+        bufs[2] = mk(&mut rng);
+        let root_bytes = bufs[2].bytes().to_vec();
+        exec::broadcast(&f, &ext, &mut bufs, 2).unwrap();
+        for b in &bufs {
+            assert_eq!(b.bytes(), &root_bytes[..], "{dtype} broadcast");
+        }
+
+        // AllToAll.
+        let f = fabric(n);
+        let inputs: Vec<DeviceBuffer> = (0..n).map(|_| mk(&mut rng)).collect();
+        let mut outputs = vec![DeviceBuffer::zeros(dtype, 0); n];
+        exec::all_to_all(&f, &ext, &inputs, &mut outputs).unwrap();
+        let bes = dtype.size_bytes();
+        let block = len / n * bes;
+        for r in 0..n {
+            for src in 0..n {
+                assert_eq!(
+                    &outputs[r].bytes()[src * block..(src + 1) * block],
+                    &inputs[src].bytes()[r * block..(r + 1) * block],
+                    "{dtype} alltoall out[{r}] block {src}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn group_launch_fused_time_never_exceeds_sequential_sum() {
+    let mut cfg = CommConfig::new(Preset::H800, 8);
+    cfg.tune_msg_bytes = 32 << 20;
+    let mut comm = Communicator::init(cfg).unwrap();
+
+    comm.group_start().unwrap();
+    comm.time_collective(CollectiveKind::AllReduce, 32 << 20).unwrap();
+    comm.time_collective(CollectiveKind::AllGather, 32 << 20).unwrap();
+    comm.time_collective(CollectiveKind::ReduceScatter, 16 << 20).unwrap();
+    let rep = comm.group_end().unwrap();
+
+    assert_eq!(rep.calls.len(), 3);
+    assert!(
+        rep.fused_total <= rep.sequential_total,
+        "fused {} > sequential {}",
+        rep.fused_total,
+        rep.sequential_total
+    );
+    // With ≥2 calls and nonzero per-step latencies, overlap must win
+    // outright.
+    assert!(rep.fused_total < rep.sequential_total);
+    assert!(rep.speedup() >= 1.0);
+    for call in &rep.calls {
+        assert!(call.individual > flexlink::sim::SimTime::ZERO);
+        assert!(call.fused_finish > flexlink::sim::SimTime::ZERO);
+        assert!(call.fused_finish <= rep.fused_total);
+    }
+    // The group left no residue: a fresh group works and plain calls
+    // still run.
+    comm.group_start().unwrap();
+    let rep = comm.group_end().unwrap();
+    assert!(rep.is_empty());
+    comm.time_collective(CollectiveKind::Broadcast, 8 << 20).unwrap();
+}
+
+#[test]
+fn odd_sized_u8_message_through_communicator() {
+    // 257-byte U8 buffers: tuning, timing and extents must all cope with
+    // non-f32-divisible message sizes end to end.
+    let mut cfg = CommConfig::new(Preset::H800, 2);
+    cfg.tune_msg_bytes = 4 << 20;
+    let mut comm = Communicator::init(cfg).unwrap();
+    let a: Vec<u8> = (0..=255).chain(0..1).map(|v| v as u8).collect();
+    let b: Vec<u8> = a.iter().map(|v| v.wrapping_mul(3)).collect();
+    let mut bufs = vec![DeviceBuffer::from_u8(&a), DeviceBuffer::from_u8(&b)];
+    let rep = comm.all_reduce_in_place(&mut bufs, RedOp::Max).unwrap();
+    assert_eq!(rep.msg_bytes, 257);
+    let want: Vec<u8> = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| *x.max(y))
+        .collect();
+    assert_eq!(bufs[0], DeviceBuffer::from_u8(&want));
+    assert_eq!(bufs[1], DeviceBuffer::from_u8(&want));
+}
+
+#[test]
+fn typed_end_to_end_f16_training_shapes() {
+    // Mixed-precision DP shape: bf16 gradient Avg-AllReduce over a
+    // Communicator (timed + functional), small enough for CI.
+    let mut cfg = CommConfig::new(Preset::H800, 4);
+    cfg.tune_msg_bytes = 4 << 20;
+    let mut comm = Communicator::init(cfg).unwrap();
+    let len = 2048;
+    // Integer-valued grads: Avg over 4 ranks is exact even in bf16.
+    let vals: Vec<Vec<f32>> = (0..4)
+        .map(|r| (0..len).map(|i| ((i + r) % 8) as f32).collect())
+        .collect();
+    let mut bufs: Vec<DeviceBuffer> = vals
+        .iter()
+        .map(|v| DeviceBuffer::from_f32_as(DataType::BF16, v))
+        .collect();
+    let rep = comm.all_reduce_in_place(&mut bufs, RedOp::Avg).unwrap();
+    assert_eq!(rep.msg_bytes, len as u64 * 2);
+    for i in 0..len {
+        let want: f32 = vals.iter().map(|v| v[i]).sum::<f32>() / 4.0;
+        assert_eq!(bufs[0].to_f32_vec()[i], want, "elem {i}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Vendored API-compatible subset of the `anyhow` crate.
+//!
+//! The build sandbox has no crates.io access, so this in-tree shim
+//! provides exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`Context`] trait, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Swapping the path dependency in `rust/Cargo.toml`
+//! back to the registry restores the real crate with no source changes.
+
+use std::fmt;
+
+/// A flattened error: the newest context first, then the chain of causes
+/// (mirrors `anyhow::Error`'s Display/Debug shape).
+pub struct Error {
+    /// Invariant: never empty. `chain[0]` is the outermost message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost message of the cause chain.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`,
+// exactly like the real anyhow — that is what makes the blanket `From`
+// below coherent with `?` on `Result<_, Error>`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, on both `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u64> {
+        let n: u64 = s.parse().context("parsing number")?;
+        ensure!(n > 10, "{n} too small");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("abc").unwrap_err();
+        assert_eq!(e.to_string(), "parsing number");
+        assert!(format!("{e:?}").contains("Caused by"));
+        let e = parse("5").unwrap_err();
+        assert_eq!(e.to_string(), "5 too small");
+    }
+
+    #[test]
+    fn bare_ensure_names_condition() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x % 2 == 0);
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert!(check(3).unwrap_err().to_string().contains("x % 2 == 0"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let name = "x";
+        let e = anyhow!("--{name}: broken");
+        assert_eq!(e.to_string(), "--x: broken");
+        let e = anyhow!("{} {}", 1, 2);
+        assert_eq!(e.to_string(), "1 2");
+    }
+}
