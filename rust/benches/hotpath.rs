@@ -8,6 +8,7 @@ use flexlink::balancer::Shares;
 use flexlink::collectives::multipath::MultipathCollective;
 use flexlink::collectives::{exec, CollectiveKind};
 use flexlink::config::presets::Preset;
+use flexlink::dtype::{DeviceBuffer, RedOp};
 use flexlink::links::calib::Calibration;
 use flexlink::links::PathId;
 use flexlink::memory::{MemoryLedger, StagingChannel};
@@ -59,9 +60,11 @@ fn main() {
     let elems = (8 << 20) / 4;
     let ext = shares.to_extents((elems * 4) as u64, 4);
     let fabric = Fabric::new(8, 4 << 20, MemoryLedger::new());
-    let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; elems]).collect();
+    let mut bufs: Vec<DeviceBuffer> = (0..8)
+        .map(|r| DeviceBuffer::from_f32(&vec![r as f32; elems]))
+        .collect();
     let r = bench("functional_allreduce8_8mib", 1, 10, || {
-        exec::all_reduce_f32(&fabric, &ext, &mut bufs).unwrap();
+        exec::all_reduce(&fabric, &ext, &mut bufs, RedOp::Sum).unwrap();
     });
     let wire = CollectiveKind::AllReduce.wire_bytes_per_gpu((elems * 4) as u64, 8) * 8;
     let gbps = wire as f64 / (r.mean_ns / 1e9) / 1e9;

@@ -1,28 +1,33 @@
 //! The runtime *Evaluator* (§3.2.2): passively monitors path completion
 //! times over a sliding window of recent collective calls and surfaces
 //! persistent trends — never single-call spikes — to the Load Balancer.
+//!
+//! Generic over the share key so the same window/trend machinery serves
+//! both tiers: intra-node paths ([`PathId`]) and inter-node NIC stripes
+//! ([`crate::links::StripeId`]).
 
+use super::shares::ShareKey;
 use crate::links::PathId;
 use crate::sim::SimTime;
 use std::collections::VecDeque;
 
 /// A persistent slowest/fastest gap detected over a full window.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Trend {
-    pub slowest: PathId,
-    pub fastest: PathId,
+pub struct Trend<K: ShareKey = PathId> {
+    pub slowest: K,
+    pub fastest: K,
     /// Relative gap between windowed mean completion times.
     pub gap: f64,
 }
 
 /// Sliding-window monitor of per-path completion times.
 #[derive(Debug, Clone)]
-pub struct Evaluator {
+pub struct Evaluator<K: ShareKey = PathId> {
     window: usize,
-    samples: VecDeque<Vec<(PathId, SimTime)>>,
+    samples: VecDeque<Vec<(K, SimTime)>>,
 }
 
-impl Evaluator {
+impl<K: ShareKey> Evaluator<K> {
     pub fn new(window: usize) -> Self {
         assert!(window > 0);
         Evaluator {
@@ -32,7 +37,7 @@ impl Evaluator {
     }
 
     /// Record one collective call's per-path completion times.
-    pub fn observe(&mut self, times: Vec<(PathId, SimTime)>) {
+    pub fn observe(&mut self, times: Vec<(K, SimTime)>) {
         if self.samples.len() == self.window {
             self.samples.pop_front();
         }
@@ -59,8 +64,8 @@ impl Evaluator {
 
     /// Windowed mean completion per path (only paths present in *every*
     /// sample — a path activated/deactivated mid-window is skipped).
-    pub fn mean_times(&self) -> Vec<(PathId, f64)> {
-        let mut acc: Vec<(PathId, f64, usize)> = Vec::new();
+    pub fn mean_times(&self) -> Vec<(K, f64)> {
+        let mut acc: Vec<(K, f64, usize)> = Vec::new();
         for sample in &self.samples {
             for (p, t) in sample {
                 match acc.iter_mut().find(|(q, _, _)| q == p) {
@@ -81,7 +86,7 @@ impl Evaluator {
 
     /// The persistent trend, if the window is full and ≥2 paths are
     /// consistently present.
-    pub fn trend(&self) -> Option<Trend> {
+    pub fn trend(&self) -> Option<Trend<K>> {
         if !self.is_full() {
             return None;
         }
@@ -113,6 +118,7 @@ impl Evaluator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::links::StripeId;
 
     fn sample(nv_us: u64, pcie_us: u64) -> Vec<(PathId, SimTime)> {
         vec![
@@ -179,5 +185,22 @@ mod tests {
         e.reset();
         assert!(e.is_empty());
         assert!(e.trend().is_none());
+    }
+
+    #[test]
+    fn stripe_keyed_window_trends() {
+        let mut e: Evaluator<StripeId> = Evaluator::new(2);
+        e.observe(vec![
+            (StripeId(0), SimTime::from_micros(100)),
+            (StripeId(1), SimTime::from_micros(300)),
+        ]);
+        e.observe(vec![
+            (StripeId(0), SimTime::from_micros(100)),
+            (StripeId(1), SimTime::from_micros(300)),
+        ]);
+        let t = e.trend().unwrap();
+        assert_eq!(t.slowest, StripeId(1));
+        assert_eq!(t.fastest, StripeId(0));
+        assert!((t.gap - 2.0).abs() < 1e-9);
     }
 }

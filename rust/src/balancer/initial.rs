@@ -8,8 +8,13 @@
 //! (damping), deactivate paths whose share reaches zero, and stop after
 //! `STABILITY_REQUIRED` consecutive iterations under the convergence
 //! threshold — or when only NVLink remains active.
+//!
+//! The loop itself ([`tune_shares`]) is generic over the share key, so
+//! the same pseudocode tunes the intra-node tier (over [`PathId`]s, via
+//! [`initial_tune`]) and the inter-node tier (over NIC stripes, via
+//! [`super::tier::initial_tune_stripes`]) independently.
 
-use super::shares::Shares;
+use super::shares::{ShareKey, Shares};
 use crate::collectives::multipath::MultipathCollective;
 use crate::config::BalancerConfig;
 use crate::links::PathId;
@@ -18,28 +23,30 @@ use anyhow::Result;
 
 /// One Algorithm-1 iteration, for traces and Figure-5-style plots.
 #[derive(Debug, Clone)]
-pub struct TuneIteration {
+pub struct TuneIteration<K: ShareKey = PathId> {
     pub iter: u32,
-    pub shares: Shares,
-    pub times: Vec<(PathId, SimTime)>,
+    pub shares: Shares<K>,
+    pub times: Vec<(K, SimTime)>,
     pub imbalance: f64,
-    pub moved: Option<(PathId, PathId, f64)>,
+    pub moved: Option<(K, K, f64)>,
     pub step: f64,
 }
 
 /// Outcome of the initial tuning phase.
 #[derive(Debug, Clone)]
-pub struct TuneResult {
-    pub shares: Shares,
+pub struct TuneResult<K: ShareKey = PathId> {
+    pub shares: Shares<K>,
     pub iterations: u32,
     pub converged: bool,
     /// Total *simulated* profiling time spent (the paper reports ≈10 s of
     /// wall profiling on hardware).
     pub profiling_time: SimTime,
-    pub history: Vec<TuneIteration>,
+    pub history: Vec<TuneIteration<K>>,
 }
 
-fn slowest_fastest(times: &[(PathId, SimTime)]) -> ((PathId, SimTime), (PathId, SimTime)) {
+fn slowest_fastest<K: ShareKey>(
+    times: &[(K, SimTime)],
+) -> ((K, SimTime), (K, SimTime)) {
     let slow = times
         .iter()
         .max_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)))
@@ -53,21 +60,33 @@ fn slowest_fastest(times: &[(PathId, SimTime)]) -> ((PathId, SimTime), (PathId, 
     (slow, fast)
 }
 
-/// Run Algorithm 1 for one (operator, rank-count, message-size) context.
+/// The Algorithm-1 loop over an abstract measurable: `measure` returns
+/// the per-key completion times and the collective's total (makespan)
+/// under a candidate distribution.
 ///
-/// `aux`: the auxiliary paths to aggregate (Pcie and/or Rdma); NVLink is
-/// always active.
-pub fn initial_tune(
-    mc: &MultipathCollective<'_>,
-    msg_bytes: u64,
+/// `preferred` is the key share flows toward when it is not itself the
+/// bottleneck (NVLink for the intra tier; None for NIC stripes).
+/// `fallback` is the safety distribution re-measured at the end — if the
+/// converged shares are no better, they are discarded for it (§5.3:
+/// "correctly limits traffic diversion ... to avoid performance
+/// degradation"). Pass None to skip the check (even stripes have no
+/// meaningful single-key fallback).
+pub fn tune_shares<K, M>(
+    mut measure: M,
     cfg: &BalancerConfig,
-    aux: &[PathId],
-) -> Result<TuneResult> {
-    // Line 4-5: actives + heuristic initialization (NVLink dominant).
-    let mut shares = Shares::initial(cfg.nvlink_initial_share_pct, aux);
+    init: Shares<K>,
+    preferred: Option<K>,
+    fallback: Option<Shares<K>>,
+) -> Result<TuneResult<K>>
+where
+    K: ShareKey,
+    M: FnMut(&Shares<K>) -> Result<(Vec<(K, SimTime)>, SimTime)>,
+{
+    // Line 4-5: actives + heuristic initialization.
+    let mut shares = init;
     let mut step = cfg.initial_step_pct;
     let mut stability = 0u32;
-    let mut prev_slowest: Option<PathId> = None;
+    let mut prev_slowest: Option<K> = None;
     let mut history = Vec::new();
     let mut profiling_time = SimTime::ZERO;
     let mut converged = false;
@@ -75,15 +94,18 @@ pub fn initial_tune(
 
     for i in 1..=cfg.max_iterations {
         iters = i;
-        // Line 10: exit if only NVLink remains.
-        if shares.n_active() == 1 && shares.is_active(PathId::Nvlink) {
+        // Line 10: exit when a lone path remains (nothing to balance).
+        let lone_is_preferred = match preferred {
+            Some(p) => shares.is_active(p),
+            None => true,
+        };
+        if shares.n_active() == 1 && lone_is_preferred {
             converged = true;
             break;
         }
         // Line 11: MeasurePathTimings.
-        let report = mc.run(msg_bytes, &shares)?;
-        profiling_time += report.total();
-        let times = report.path_times();
+        let (times, total) = measure(&shares)?;
+        profiling_time += total;
         // Line 12-13: bottleneck detection.
         let ((c_slow, t_slow), (c_fast, t_fast)) = slowest_fastest(&times);
         let imbalance = (t_slow.as_secs_f64() - t_fast.as_secs_f64()) / t_fast.as_secs_f64();
@@ -117,12 +139,11 @@ pub fn initial_tune(
             }
         }
 
-        // Line 23-27: NVLink-centric source/target selection.
+        // Line 23-27: preferred-centric source/target selection.
         let source = c_slow;
-        let target = if c_slow != PathId::Nvlink && shares.is_active(PathId::Nvlink) {
-            PathId::Nvlink
-        } else {
-            c_fast
+        let target = match preferred {
+            Some(p) if c_slow != p && shares.is_active(p) => p,
+            _ => c_fast,
         };
         // Line 28-32: move (bounded by the source's share); a drained
         // source is deactivated inside `transfer`.
@@ -134,13 +155,14 @@ pub fn initial_tune(
 
     // Final safety check — §5.3: "our scheduler correctly limits traffic
     // diversion ... to avoid performance degradation". If the converged
-    // distribution is no better than NVLink-only, fall back to it.
-    let tuned_t = mc.run(msg_bytes, &shares)?.total();
-    let base = Shares::nvlink_only();
-    let base_t = mc.run(msg_bytes, &base)?.total();
-    profiling_time += tuned_t + base_t;
-    if tuned_t > base_t {
-        shares = base;
+    // distribution is no better than the fallback, fall back to it.
+    if let Some(base) = fallback {
+        let (_, tuned_t) = measure(&shares)?;
+        let (_, base_t) = measure(&base)?;
+        profiling_time += tuned_t + base_t;
+        if tuned_t > base_t {
+            shares = base;
+        }
     }
 
     Ok(TuneResult {
@@ -150,6 +172,29 @@ pub fn initial_tune(
         profiling_time,
         history,
     })
+}
+
+/// Run Algorithm 1 for one (operator, rank-count, message-size) context
+/// over the intra-node paths.
+///
+/// `aux`: the auxiliary paths to aggregate (Pcie and/or Rdma); NVLink is
+/// always active.
+pub fn initial_tune(
+    mc: &MultipathCollective<'_>,
+    msg_bytes: u64,
+    cfg: &BalancerConfig,
+    aux: &[PathId],
+) -> Result<TuneResult> {
+    tune_shares(
+        |shares| {
+            let report = mc.run(msg_bytes, shares)?;
+            Ok((report.path_times(), report.total()))
+        },
+        cfg,
+        Shares::initial(cfg.nvlink_initial_share_pct, aux),
+        Some(PathId::Nvlink),
+        Some(Shares::nvlink_only()),
+    )
 }
 
 #[cfg(test)]
@@ -258,5 +303,39 @@ mod tests {
             (8.0..=22.0).contains(&pcie),
             "PCIe-only share {pcie:.1}% vs paper ~13%"
         );
+    }
+
+    /// The generic core equalizes an arbitrary synthetic two-key system
+    /// with no preferred beneficiary: times proportional to share/speed
+    /// converge toward the speed ratio.
+    #[test]
+    fn generic_core_equalizes_synthetic_keys() {
+        use crate::links::StripeId;
+        let keys = [StripeId(0), StripeId(1)];
+        // Stripe 0 is 3× faster than stripe 1.
+        let speed = [3.0f64, 1.0];
+        let r = tune_shares(
+            |s: &Shares<StripeId>| {
+                let times: Vec<(StripeId, SimTime)> = keys
+                    .iter()
+                    .enumerate()
+                    .map(|(i, k)| {
+                        (*k, SimTime::from_secs_f64(s.get(*k).max(0.001) / speed[i]))
+                    })
+                    .collect();
+                let total = times.iter().map(|t| t.1).max().unwrap();
+                Ok((times, total))
+            },
+            &BalancerConfig::default(),
+            Shares::even(&keys),
+            None,
+            None,
+        )
+        .unwrap();
+        assert!(r.converged, "synthetic tune did not converge");
+        let s0 = r.shares.get(StripeId(0));
+        let s1 = r.shares.get(StripeId(1));
+        // Optimum is 75/25; convergence threshold leaves a band around it.
+        assert!(s0 > 2.0 * s1, "expected ~3:1 split, got {s0:.1}/{s1:.1}");
     }
 }

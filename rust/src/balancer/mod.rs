@@ -1,4 +1,4 @@
-//! The two-stage adaptive load balancing strategy (§3.2).
+//! The two-stage adaptive load balancing strategy (§3.2), per tier.
 //!
 //! "The approach is to be conservative initially and adaptive at runtime":
 //!
@@ -10,13 +10,20 @@
 //!   windows recent per-path timings; a periodic Load Balancer moves a
 //!   small fixed share from the persistent slowest path to the fastest,
 //!   prioritizing NVLink, without reacting to transient spikes.
+//!
+//! Both stages are generic over the share key and run **per tier** in a
+//! multi-node cluster: one instance over the intra-node paths
+//! ([`crate::links::PathId`]) and an independent instance over the
+//! inter-node NIC stripes ([`crate::links::StripeId`]) — see [`tier`].
 
 pub mod evaluator;
 pub mod initial;
 pub mod runtime;
 pub mod shares;
+pub mod tier;
 
 pub use evaluator::Evaluator;
-pub use initial::{initial_tune, TuneIteration, TuneResult};
+pub use initial::{initial_tune, tune_shares, TuneIteration, TuneResult};
 pub use runtime::{Adjustment, RuntimeBalancer};
-pub use shares::Shares;
+pub use shares::{ShareKey, Shares};
+pub use tier::{initial_tune_stripes, TierShares};

@@ -6,20 +6,25 @@
 //! exceeds a threshold, a small, fixed-size share is transferred from the
 //! slowest path to the fastest, prioritizing NVLink. ... This gradual
 //! approach avoids reacting to transient spikes."
+//!
+//! Generic over the share key: the intra tier runs it over [`PathId`]s
+//! with NVLink as the preferred beneficiary; the inter tier runs an
+//! independent instance over [`crate::links::StripeId`]s with no
+//! preference (identical NICs — pure slowest→fastest equalization).
 
 use super::evaluator::Evaluator;
-use super::shares::Shares;
+use super::shares::{ShareKey, Shares};
 use crate::config::BalancerConfig;
 use crate::links::PathId;
 use crate::sim::SimTime;
 
 /// One stage-2 share movement, for Figure-5-style traces.
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Adjustment {
+pub struct Adjustment<K: ShareKey = PathId> {
     /// Index of the collective call that triggered it.
     pub at_call: u64,
-    pub from: PathId,
-    pub to: PathId,
+    pub from: K,
+    pub to: K,
     pub moved_pct: f64,
     pub observed_gap: f64,
 }
@@ -27,27 +32,44 @@ pub struct Adjustment {
 /// The runtime Load Balancer: owns the live share distribution and its
 /// Evaluator; to be fed per-collective path timings.
 #[derive(Debug, Clone)]
-pub struct RuntimeBalancer {
+pub struct RuntimeBalancer<K: ShareKey = PathId> {
     cfg: BalancerConfig,
-    shares: Shares,
-    evaluator: Evaluator,
+    shares: Shares<K>,
+    evaluator: Evaluator<K>,
+    /// Beneficiary the balancer prioritizes when it is not itself the
+    /// bottleneck (the paper's "prioritizing NVLink").
+    preferred: Option<K>,
     calls: u64,
-    adjustments: Vec<Adjustment>,
+    adjustments: Vec<Adjustment<K>>,
 }
 
-impl RuntimeBalancer {
+impl RuntimeBalancer<PathId> {
+    /// Intra-tier balancer: NVLink is the preferred beneficiary.
     pub fn new(cfg: BalancerConfig, initial_shares: Shares) -> Self {
+        Self::with_preferred(cfg, initial_shares, Some(PathId::Nvlink))
+    }
+}
+
+impl<K: ShareKey> RuntimeBalancer<K> {
+    /// Generic constructor; `preferred` names the key share flows toward
+    /// when it is not the bottleneck (None → plain slowest→fastest).
+    pub fn with_preferred(
+        cfg: BalancerConfig,
+        initial_shares: Shares<K>,
+        preferred: Option<K>,
+    ) -> Self {
         let evaluator = Evaluator::new(cfg.window);
         RuntimeBalancer {
             cfg,
             shares: initial_shares,
             evaluator,
+            preferred,
             calls: 0,
             adjustments: Vec::new(),
         }
     }
 
-    pub fn shares(&self) -> &Shares {
+    pub fn shares(&self) -> &Shares<K> {
         &self.shares
     }
 
@@ -55,13 +77,13 @@ impl RuntimeBalancer {
         self.calls
     }
 
-    pub fn adjustments(&self) -> &[Adjustment] {
+    pub fn adjustments(&self) -> &[Adjustment<K>] {
         &self.adjustments
     }
 
     /// Feed one collective call's per-path completion times. Returns the
     /// adjustment if the (periodically invoked) Load Balancer acted.
-    pub fn observe(&mut self, times: Vec<(PathId, SimTime)>) -> Option<Adjustment> {
+    pub fn observe(&mut self, times: Vec<(K, SimTime)>) -> Option<Adjustment<K>> {
         self.calls += 1;
         self.evaluator.observe(times);
         // Periodic invocation: only when a full window has accumulated
@@ -70,11 +92,11 @@ impl RuntimeBalancer {
         if trend.gap <= self.cfg.runtime_threshold {
             return None;
         }
-        // Prioritize NVLink as the beneficiary unless it is the bottleneck.
-        let to = if trend.slowest != PathId::Nvlink && self.shares.is_active(PathId::Nvlink) {
-            PathId::Nvlink
-        } else {
-            trend.fastest
+        // Prioritize the preferred key as beneficiary unless it is the
+        // bottleneck itself.
+        let to = match self.preferred {
+            Some(p) if trend.slowest != p && self.shares.is_active(p) => p,
+            _ => trend.fastest,
         };
         let from = trend.slowest;
         if from == to {
@@ -103,6 +125,7 @@ impl RuntimeBalancer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::links::StripeId;
 
     fn cfg() -> BalancerConfig {
         BalancerConfig {
@@ -207,5 +230,29 @@ mod tests {
                 .observe(vec![(PathId::Nvlink, SimTime::from_micros(100))])
                 .is_none());
         }
+    }
+
+    #[test]
+    fn stripe_balancer_has_no_preferred_beneficiary() {
+        // Inter tier: slowest stripe sheds to the *fastest* stripe, not to
+        // any fixed one.
+        let keys: Vec<StripeId> = (0..4).map(StripeId).collect();
+        let mut rb = RuntimeBalancer::with_preferred(cfg(), Shares::even(&keys), None);
+        let sample = || {
+            vec![
+                (StripeId(0), SimTime::from_micros(100)),
+                (StripeId(1), SimTime::from_micros(100)),
+                (StripeId(2), SimTime::from_micros(80)),
+                (StripeId(3), SimTime::from_micros(400)),
+            ]
+        };
+        for _ in 0..3 {
+            assert!(rb.observe(sample()).is_none());
+        }
+        let adj = rb.observe(sample()).unwrap();
+        assert_eq!(adj.from, StripeId(3));
+        assert_eq!(adj.to, StripeId(2));
+        assert!((rb.shares().get(StripeId(3)) - 24.0).abs() < 1e-9);
+        assert!((rb.shares().total() - 100.0).abs() < 1e-9);
     }
 }

@@ -4,25 +4,35 @@
 //! "PCIe + RDMA Load (%)"), manipulated by Algorithm 1 and the runtime
 //! Load Balancer, and quantized to element-aligned byte extents when a
 //! message is actually split.
+//!
+//! Since the hierarchical (multi-node) refactor the container is generic
+//! over its key: the intra-node tier balances over [`PathId`]s, the
+//! inter-node tier over [`crate::links::StripeId`]s (per-NIC uplink
+//! stripes). `Shares` with no type argument keeps meaning the intra-node
+//! `Shares<PathId>` every pre-cluster call site was written against.
 
 use crate::links::PathId;
 use std::collections::BTreeMap;
 use std::fmt;
 
-/// A traffic distribution over active paths, in percentage points.
+/// What a share key must provide: identity, a stable order (extent
+/// layout + deterministic tie-breaking) and a display name.
+pub trait ShareKey: Copy + Ord + fmt::Debug + fmt::Display {}
+
+impl<T: Copy + Ord + fmt::Debug + fmt::Display> ShareKey for T {}
+
+/// A traffic distribution over active keys, in percentage points.
 /// Invariant: entries are ≥ 0 and sum to 100 (within fp tolerance);
-/// inactive paths are absent.
+/// inactive keys are absent.
 #[derive(Debug, Clone, PartialEq)]
-pub struct Shares {
-    map: BTreeMap<PathId, f64>,
+pub struct Shares<K: ShareKey = PathId> {
+    map: BTreeMap<K, f64>,
 }
 
-impl Shares {
+impl Shares<PathId> {
     /// Everything on NVLink (the NCCL baseline distribution).
     pub fn nvlink_only() -> Self {
-        let mut map = BTreeMap::new();
-        map.insert(PathId::Nvlink, 100.0);
-        Shares { map }
+        Shares::single(PathId::Nvlink)
     }
 
     /// The Algorithm-1 initialization heuristic: "NVLink gets dominant
@@ -42,9 +52,28 @@ impl Shares {
         }
         Shares { map }
     }
+}
 
-    /// Build from explicit (path, pct) pairs; normalizes to 100.
-    pub fn from_pcts(pairs: &[(PathId, f64)]) -> Self {
+impl<K: ShareKey> Shares<K> {
+    /// Everything on one key (the single-path degenerate distribution).
+    pub fn single(k: K) -> Self {
+        let mut map = BTreeMap::new();
+        map.insert(k, 100.0);
+        Shares { map }
+    }
+
+    /// Even split over `keys` — the inter-tier initialization (identical
+    /// NICs start with identical stripes).
+    pub fn even(keys: &[K]) -> Self {
+        assert!(!keys.is_empty(), "even split needs at least one key");
+        let each = 100.0 / keys.len() as f64;
+        Shares {
+            map: keys.iter().map(|k| (*k, each)).collect(),
+        }
+    }
+
+    /// Build from explicit (key, pct) pairs; normalizes to 100.
+    pub fn from_pcts(pairs: &[(K, f64)]) -> Self {
         let total: f64 = pairs.iter().map(|(_, v)| *v).sum();
         assert!(total > 0.0, "shares must be positive");
         let map = pairs
@@ -55,15 +84,15 @@ impl Shares {
         Shares { map }
     }
 
-    pub fn get(&self, p: PathId) -> f64 {
+    pub fn get(&self, p: K) -> f64 {
         self.map.get(&p).copied().unwrap_or(0.0)
     }
 
-    pub fn is_active(&self, p: PathId) -> bool {
+    pub fn is_active(&self, p: K) -> bool {
         self.map.contains_key(&p)
     }
 
-    pub fn active_paths(&self) -> Vec<PathId> {
+    pub fn active_paths(&self) -> Vec<K> {
         self.map.keys().copied().collect()
     }
 
@@ -74,7 +103,7 @@ impl Shares {
     /// Move up to `pct` points from `from` to `to`; deactivates `from` if
     /// it reaches ≤ `min_share` (Algorithm 1 line 31: "Deactivate path").
     /// Returns the amount actually moved.
-    pub fn transfer(&mut self, from: PathId, to: PathId, pct: f64, min_share: f64) -> f64 {
+    pub fn transfer(&mut self, from: K, to: K, pct: f64, min_share: f64) -> f64 {
         assert!(pct >= 0.0);
         let avail = self.get(from);
         if avail == 0.0 || from == to {
@@ -95,7 +124,7 @@ impl Shares {
     }
 
     /// Deactivate `p`, folding its share into `into`.
-    pub fn deactivate(&mut self, p: PathId, into: PathId) {
+    pub fn deactivate(&mut self, p: K, into: K) {
         if let Some(v) = self.map.remove(&p) {
             *self.map.entry(into).or_insert(0.0) += v;
         }
@@ -108,8 +137,9 @@ impl Shares {
 
     /// Quantize to byte extents over a `msg`-byte message: extents are
     /// `align`-aligned (element size), contiguous, cover the message
-    /// exactly, ordered NVLink → PCIe → RDMA. Zero-byte paths are dropped.
-    pub fn to_extents(&self, msg: u64, align: u64) -> Vec<(PathId, u64, u64)> {
+    /// exactly, ordered by key (NVLink → PCIe → RDMA for the intra tier).
+    /// Zero-byte keys are dropped.
+    pub fn to_extents(&self, msg: u64, align: u64) -> Vec<(K, u64, u64)> {
         assert!(align > 0 && msg % align == 0, "message not element-aligned");
         let paths = self.active_paths();
         let mut out = Vec::with_capacity(paths.len());
@@ -131,7 +161,7 @@ impl Shares {
     }
 }
 
-impl fmt::Display for Shares {
+impl<K: ShareKey> fmt::Display for Shares<K> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let mut first = true;
         for (p, v) in &self.map {
@@ -148,6 +178,7 @@ impl fmt::Display for Shares {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::links::StripeId;
 
     #[test]
     fn initial_heuristic() {
@@ -210,5 +241,22 @@ mod tests {
     fn from_pcts_normalizes() {
         let s = Shares::from_pcts(&[(PathId::Nvlink, 2.0), (PathId::Pcie, 2.0)]);
         assert!((s.get(PathId::Nvlink) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stripe_shares_even_and_transfer() {
+        let keys: Vec<StripeId> = (0..8).map(StripeId).collect();
+        let mut s = Shares::even(&keys);
+        assert_eq!(s.n_active(), 8);
+        assert!((s.get(StripeId(3)) - 12.5).abs() < 1e-9);
+        assert!((s.total() - 100.0).abs() < 1e-9);
+        let moved = s.transfer(StripeId(0), StripeId(1), 2.0, 0.5);
+        assert!((moved - 2.0).abs() < 1e-9);
+        assert!((s.get(StripeId(0)) - 10.5).abs() < 1e-9);
+        assert!((s.get(StripeId(1)) - 14.5).abs() < 1e-9);
+        // Extents keep stripe (BTreeMap) order and cover the message.
+        let ext = s.to_extents(64 << 20, 4);
+        assert_eq!(ext.iter().map(|e| e.2).sum::<u64>(), 64 << 20);
+        assert_eq!(ext[0].0, StripeId(0));
     }
 }

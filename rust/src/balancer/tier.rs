@@ -1,0 +1,101 @@
+//! Per-tier share state for hierarchical (multi-node) collectives.
+//!
+//! A cluster collective has two independent balancing problems:
+//!
+//! * the **intra-node tier** — how each node splits its local phases
+//!   across NVLink / staged-PCIe / RDMA-loopback ([`Shares<PathId>`],
+//!   exactly the single-node problem); and
+//! * the **inter-node tier** — how the cross-node phase is striped across
+//!   the node's RDMA NICs ([`Shares<StripeId>`]).
+//!
+//! Stage 1 ([`initial_tune_stripes`]) and stage 2
+//! ([`super::RuntimeBalancer`] keyed by stripe) run over each tier
+//! independently, reusing the same Algorithm-1 loop and Evaluator/Load
+//! Balancer machinery via the generic share key.
+
+use super::initial::{tune_shares, TuneResult};
+use super::shares::Shares;
+use crate::collectives::hierarchical::ClusterCollective;
+use crate::config::BalancerConfig;
+use crate::links::{PathId, StripeId};
+use crate::sim::SimTime;
+use anyhow::Result;
+
+/// The share state of one hierarchical collective: one distribution per
+/// tier. With `n_nodes == 1` the inter tier is unused (kept as the even
+/// split so the type stays total).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierShares {
+    /// Intra-node multipath split (NVLink / PCIe / RDMA).
+    pub intra: Shares<PathId>,
+    /// Inter-node NIC-stripe split.
+    pub inter: Shares<StripeId>,
+}
+
+/// The stripe keys of a node with `n` NICs (one per local GPU).
+pub fn stripes(n: usize) -> Vec<StripeId> {
+    (0..n).map(|i| StripeId(i as u32)).collect()
+}
+
+impl TierShares {
+    /// Even stripes + the given intra distribution.
+    pub fn new(intra: Shares<PathId>, n_stripes: usize) -> Self {
+        TierShares {
+            intra,
+            inter: Shares::even(&stripes(n_stripes)),
+        }
+    }
+
+    /// Degenerate single-node state (inter tier inert).
+    pub fn single_node(intra: Shares<PathId>) -> Self {
+        TierShares::new(intra, 1)
+    }
+}
+
+/// Stage 1 for the inter-node tier: Algorithm 1 over the NIC stripes of
+/// one hierarchical collective, equalizing per-stripe completion of the
+/// cross-node phase in isolation. With identical healthy NICs the even
+/// initialization is already balanced and the loop exits immediately;
+/// its value shows when a NIC degrades (see the cluster tests).
+pub fn initial_tune_stripes(
+    cc: &ClusterCollective<'_>,
+    msg_bytes: u64,
+    cfg: &BalancerConfig,
+) -> Result<TuneResult<StripeId>> {
+    let keys = stripes(cc.n_local);
+    tune_shares(
+        |shares: &Shares<StripeId>| {
+            let times = cc.run_inter_only(msg_bytes, shares)?;
+            let total = times
+                .iter()
+                .map(|t| t.1)
+                .max()
+                .unwrap_or(SimTime::ZERO);
+            Ok((times, total))
+        },
+        cfg,
+        Shares::even(&keys),
+        None,
+        None,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_shares_construction() {
+        let t = TierShares::new(Shares::nvlink_only(), 8);
+        assert_eq!(t.inter.n_active(), 8);
+        assert!((t.inter.get(StripeId(0)) - 12.5).abs() < 1e-9);
+        let d = TierShares::single_node(Shares::nvlink_only());
+        assert_eq!(d.inter.n_active(), 1);
+    }
+
+    #[test]
+    fn stripe_keys_are_dense() {
+        let ks = stripes(4);
+        assert_eq!(ks, vec![StripeId(0), StripeId(1), StripeId(2), StripeId(3)]);
+    }
+}

@@ -5,7 +5,8 @@
 //! benches both call in here. Paper-vs-measured comparisons are recorded
 //! in EXPERIMENTS.md.
 
-use crate::balancer::{initial_tune, RuntimeBalancer, Shares};
+use crate::balancer::{initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares};
+use crate::collectives::hierarchical::{flat_ring_allreduce, ClusterCollective};
 use crate::collectives::multipath::MultipathCollective;
 use crate::collectives::CollectiveKind;
 use crate::config::presets::Preset;
@@ -14,6 +15,7 @@ use crate::links::calib::Calibration;
 use crate::links::PathId;
 use crate::metrics::improvement_pct;
 use crate::report::{bar_chart, Table};
+use crate::topology::cluster::{Cluster, ClusterSpec};
 use crate::topology::Topology;
 use anyhow::Result;
 
@@ -323,6 +325,207 @@ pub fn render_group_fusion(r: &GroupFusionReport) -> String {
     s
 }
 
+/// One cell of the cluster-routed Table 2: identical numbers to
+/// [`table2_cell`] when `n_nodes == 1` (the degenerate-case regression
+/// anchor), hierarchical three-phase timings beyond.
+pub fn table2_cluster_cell(
+    cluster: &Cluster,
+    cfg: &BalancerConfig,
+    op: CollectiveKind,
+    n: usize,
+    mib: u64,
+) -> Result<Table2Row> {
+    let msg = mib << 20;
+    // Tune against the *live* shared pool (node views hold build-time
+    // snapshots), so failure injection via cluster.pool affects tuning
+    // and timing consistently. Identical pools on a healthy cluster.
+    let mut node0 = cluster.node(0).clone();
+    node0.pool = cluster.pool.clone();
+    let mc = MultipathCollective::new(&node0, Calibration::h800(), op, n);
+    let cc = ClusterCollective::new(cluster, Calibration::h800(), op, n);
+    let inter = if cluster.n_nodes() > 1 {
+        initial_tune_stripes(&cc, msg, cfg)?.shares
+    } else {
+        Shares::even(&crate::balancer::tier::stripes(n))
+    };
+    let timed = |intra: &Shares| -> Result<f64> {
+        let tiers = TierShares {
+            intra: intra.clone(),
+            inter: inter.clone(),
+        };
+        Ok(cc.run(msg, &tiers, 4)?.algbw_gbps())
+    };
+
+    let nccl = timed(&Shares::nvlink_only())?;
+    let pcie_only = initial_tune(&mc, msg, cfg, &[PathId::Pcie])?;
+    let pcie_gbps = timed(&pcie_only.shares)?;
+    let full = initial_tune(&mc, msg, cfg, &[PathId::Pcie, PathId::Rdma])?;
+    let full_gbps = timed(&full.shares)?;
+
+    Ok(Table2Row {
+        op,
+        n_gpus: n,
+        msg_mib: mib,
+        nccl_gbps: nccl,
+        pcie_only_gbps: pcie_gbps,
+        pcie_only_impr_pct: improvement_pct(nccl, pcie_gbps),
+        pcie_only_load_pct: pcie_only.shares.get(PathId::Pcie),
+        full_gbps,
+        full_impr_pct: improvement_pct(nccl, full_gbps),
+        full_pcie_load_pct: full.shares.get(PathId::Pcie),
+        full_rdma_load_pct: full.shares.get(PathId::Rdma),
+    })
+}
+
+/// Table 2 routed through the hierarchical compiler for an
+/// `n_nodes`-node cluster (`repro table2 --nodes N`).
+pub fn table2_cluster(n_nodes: usize, cfg: &BalancerConfig) -> Result<Vec<Table2Row>> {
+    let cluster = Cluster::build(&ClusterSpec::new(n_nodes, Preset::H800.spec()));
+    table2_grid()
+        .into_iter()
+        .map(|(op, n, mib)| table2_cluster_cell(&cluster, cfg, op, n, mib))
+        .collect()
+}
+
+/// One row of the cluster scaling sweep: hierarchical collective at
+/// `n_nodes`, per-tier times/bandwidths, and the naive flat-ring
+/// baseline it must beat.
+#[derive(Debug, Clone)]
+pub struct ClusterSweepRow {
+    pub op: CollectiveKind,
+    pub n_nodes: usize,
+    pub msg_mib: u64,
+    pub total_ms: f64,
+    pub algbw_gbps: f64,
+    /// Time inside the intra-node phases (phase 1 + phase 3 span).
+    pub intra_ms: f64,
+    /// Time inside the NIC-striped inter-node phase (0 at one node).
+    pub inter_ms: f64,
+    /// Per-tier algorithmic bandwidth, msg / tier time (0 when unused).
+    pub intra_algbw_gbps: f64,
+    pub inter_algbw_gbps: f64,
+    /// Naive flat global ring over the NIC fabric (AllReduce only; 0
+    /// otherwise or at one node).
+    pub flat_ring_ms: f64,
+}
+
+/// Sweep a collective across cluster sizes × message sizes, reporting
+/// per-tier algbw. Intra shares are stage-1 tuned per size on the node;
+/// stripes are tuned per size on the cluster.
+pub fn cluster_sweep(
+    preset: Preset,
+    op: CollectiveKind,
+    node_counts: &[usize],
+    sizes_mib: &[u64],
+    cfg: &BalancerConfig,
+) -> Result<Vec<ClusterSweepRow>> {
+    let mut rows = Vec::new();
+    // Stage-1 intra tuning only sees one node's links — identical for
+    // every cluster size, so tune once per message size, not per nn.
+    let node_spec = preset.spec();
+    let tune_topo = Topology::build(&node_spec);
+    let tune_mc =
+        MultipathCollective::new(&tune_topo, Calibration::h800(), op, node_spec.n_gpus);
+    let mut intra_by_mib = Vec::with_capacity(sizes_mib.len());
+    for &mib in sizes_mib {
+        let shares =
+            initial_tune(&tune_mc, mib << 20, cfg, &[PathId::Pcie, PathId::Rdma])?.shares;
+        intra_by_mib.push(shares);
+    }
+    for &nn in node_counts {
+        let cluster = Cluster::build(&ClusterSpec::new(nn, node_spec.clone()));
+        let nl = cluster.gpus_per_node();
+        let cc = ClusterCollective::new(&cluster, Calibration::h800(), op, nl);
+        for (&mib, intra) in sizes_mib.iter().zip(&intra_by_mib) {
+            let msg = mib << 20;
+            let inter = if nn > 1 {
+                initial_tune_stripes(&cc, msg, cfg)?.shares
+            } else {
+                Shares::even(&crate::balancer::tier::stripes(nl))
+            };
+            let rep = cc.run(
+                msg,
+                &TierShares {
+                    intra: intra.clone(),
+                    inter,
+                },
+                4,
+            )?;
+            let total_s = rep.total.as_secs_f64();
+            let inter_s = if nn > 1 {
+                rep.inter_phase.saturating_sub(rep.intra_phase1).as_secs_f64()
+            } else {
+                0.0
+            };
+            let intra_s = (total_s - inter_s).max(0.0);
+            let flat_ms = if nn > 1 && op == CollectiveKind::AllReduce {
+                flat_ring_allreduce(&cluster, &Calibration::h800(), msg)?.as_secs_f64()
+                    * 1e3
+            } else {
+                0.0
+            };
+            rows.push(ClusterSweepRow {
+                op,
+                n_nodes: nn,
+                msg_mib: mib,
+                total_ms: total_s * 1e3,
+                algbw_gbps: rep.algbw_gbps(),
+                intra_ms: intra_s * 1e3,
+                inter_ms: inter_s * 1e3,
+                intra_algbw_gbps: if intra_s > 0.0 {
+                    msg as f64 / intra_s / 1e9
+                } else {
+                    0.0
+                },
+                inter_algbw_gbps: if inter_s > 0.0 {
+                    msg as f64 / inter_s / 1e9
+                } else {
+                    0.0
+                },
+                flat_ring_ms: flat_ms,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn render_cluster_sweep(rows: &[ClusterSweepRow]) -> String {
+    let mut t = Table::new(
+        "Cluster sweep: hierarchical collectives, per-tier algbw (GB/s)",
+        &[
+            "op", "nodes", "msg", "total(ms)", "algbw", "intra(ms)", "intra bw",
+            "inter(ms)", "inter bw", "flat ring(ms)",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.op.to_string(),
+            r.n_nodes.to_string(),
+            format!("{}MB", r.msg_mib),
+            format!("{:.3}", r.total_ms),
+            format!("{:.1}", r.algbw_gbps),
+            format!("{:.3}", r.intra_ms),
+            format!("{:.1}", r.intra_algbw_gbps),
+            if r.n_nodes > 1 {
+                format!("{:.3}", r.inter_ms)
+            } else {
+                "-".into()
+            },
+            if r.n_nodes > 1 {
+                format!("{:.1}", r.inter_algbw_gbps)
+            } else {
+                "-".into()
+            },
+            if r.flat_ring_ms > 0.0 {
+                format!("{:.3}", r.flat_ring_ms)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t.render()
+}
+
 /// §5.4 overhead report for a live communicator.
 #[derive(Debug, Clone)]
 pub struct OverheadReport {
@@ -417,6 +620,58 @@ mod tests {
         let rendered = render_group_fusion(&r);
         assert!(rendered.contains("allreduce"));
         assert!(rendered.contains("speedup"));
+    }
+
+    #[test]
+    fn cluster_table2_degenerates_bit_identically() {
+        // `repro table2 --nodes 1` must reproduce today's single-node
+        // numbers exactly — the degenerate-case regression anchor.
+        let topo = topo();
+        let cluster = Cluster::build(&ClusterSpec::new(1, Preset::H800.spec()));
+        let cfg = BalancerConfig::default();
+        for (op, n, mib) in [
+            (CollectiveKind::AllGather, 4, 64u64),
+            (CollectiveKind::AllReduce, 2, 32),
+        ] {
+            let flat = table2_cell(&topo, &cfg, op, n, mib).unwrap();
+            let hier = table2_cluster_cell(&cluster, &cfg, op, n, mib).unwrap();
+            assert_eq!(flat.nccl_gbps.to_bits(), hier.nccl_gbps.to_bits());
+            assert_eq!(flat.pcie_only_gbps.to_bits(), hier.pcie_only_gbps.to_bits());
+            assert_eq!(flat.full_gbps.to_bits(), hier.full_gbps.to_bits());
+            assert_eq!(
+                flat.full_pcie_load_pct.to_bits(),
+                hier.full_pcie_load_pct.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_sweep_reports_tiers_and_beats_flat_ring() {
+        let rows = cluster_sweep(
+            Preset::H800,
+            CollectiveKind::AllReduce,
+            &[1, 2],
+            &[32],
+            &BalancerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2);
+        let one = &rows[0];
+        let two = &rows[1];
+        assert_eq!(one.n_nodes, 1);
+        assert_eq!(one.inter_ms, 0.0);
+        assert!(one.algbw_gbps > 0.0);
+        assert!(two.inter_ms > 0.0, "2-node run must show an inter phase");
+        assert!(two.inter_algbw_gbps > 0.0);
+        assert!(
+            two.total_ms < two.flat_ring_ms,
+            "hierarchical {}ms not under flat ring {}ms",
+            two.total_ms,
+            two.flat_ring_ms
+        );
+        let rendered = render_cluster_sweep(&rows);
+        assert!(rendered.contains("allreduce"));
+        assert!(rendered.contains("inter"));
     }
 
     #[test]

@@ -515,8 +515,9 @@ pub fn all_to_all(
 }
 
 // ---------------------------------------------------------------------------
-// f32 compatibility wrappers — thin shims over the typed executors so the
-// legacy `Vec<f32>` call sites keep one execution path through this module.
+// f32 compatibility wrappers — deprecated shims over the typed executors,
+// kept only for the one shim-equivalence test (and any straggler callers)
+// until the legacy `Vec<f32>` surface is deleted outright.
 // ---------------------------------------------------------------------------
 
 /// Vec<f32> rank buffers → typed buffers (shared by every f32 shim,
@@ -534,6 +535,7 @@ pub(crate) fn write_back(bufs: &mut [Vec<f32>], dev: &[DeviceBuffer]) {
 }
 
 /// f32-sum shim over [`all_reduce`].
+#[deprecated(note = "use the typed `all_reduce` (DeviceBuffer) executor")]
 pub fn all_reduce_f32(
     fabric: &Fabric,
     extents: &PathExtents,
@@ -547,6 +549,7 @@ pub fn all_reduce_f32(
 }
 
 /// f32 shim over [`all_gather`].
+#[deprecated(note = "use the typed `all_gather` (DeviceBuffer) executor")]
 pub fn all_gather_f32(
     fabric: &Fabric,
     extents: &PathExtents,
@@ -561,6 +564,7 @@ pub fn all_gather_f32(
 }
 
 /// f32 shim over [`broadcast`] (root 0).
+#[deprecated(note = "use the typed `broadcast` (DeviceBuffer) executor")]
 pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32>]) -> Result<()> {
     let mut dev = to_dev(bufs);
     broadcast(fabric, extents, &mut dev, 0)?;
@@ -569,6 +573,7 @@ pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32
 }
 
 /// f32-sum shim over [`reduce_scatter`].
+#[deprecated(note = "use the typed `reduce_scatter` (DeviceBuffer) executor")]
 pub fn reduce_scatter_f32(
     fabric: &Fabric,
     extents: &PathExtents,
@@ -583,6 +588,7 @@ pub fn reduce_scatter_f32(
 }
 
 /// f32 shim over [`all_to_all`].
+#[deprecated(note = "use the typed `all_to_all` (DeviceBuffer) executor")]
 pub fn all_to_all_f32(
     fabric: &Fabric,
     extents: &PathExtents,
@@ -615,6 +621,14 @@ mod tests {
             .collect()
     }
 
+    fn dev_bufs(v: &[Vec<f32>]) -> Vec<DeviceBuffer> {
+        v.iter().map(|b| DeviceBuffer::from_f32(b)).collect()
+    }
+
+    fn f32s(dev: &[DeviceBuffer]) -> Vec<Vec<f32>> {
+        dev.iter().map(|d| d.to_f32_vec()).collect()
+    }
+
     fn splits() -> Vec<Shares> {
         vec![
             Shares::nvlink_only(),
@@ -643,8 +657,9 @@ mod tests {
             for shares in splits() {
                 let f = fabric(n);
                 let ext = shares.to_extents((len * 4) as u64, 4);
-                let mut bufs = orig.clone();
-                all_reduce_f32(&f, &ext, &mut bufs).unwrap();
+                let mut dev = dev_bufs(&orig);
+                all_reduce(&f, &ext, &mut dev, RedOp::Sum).unwrap();
+                let bufs = f32s(&dev);
                 for (r, b) in bufs.iter().enumerate() {
                     // Ring AR adds in a fixed order per element; compare
                     // against *some* summation order with tight tolerance,
@@ -761,10 +776,11 @@ mod tests {
             for shares in splits() {
                 let f = fabric(n);
                 let ext = shares.to_extents((len * 4) as u64, 4);
-                let mut outputs = vec![Vec::new(); n];
-                all_gather_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                let mut outputs: Vec<DeviceBuffer> =
+                    (0..n).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+                all_gather(&f, &ext, &dev_bufs(&inputs), &mut outputs).unwrap();
                 for (r, o) in outputs.iter().enumerate() {
-                    assert_eq!(o, &expect, "rank {r} output wrong under {shares}");
+                    assert_eq!(o.to_f32_vec(), expect, "rank {r} output wrong under {shares}");
                 }
             }
         }
@@ -805,8 +821,9 @@ mod tests {
             let expect: Vec<f32> = (0..len)
                 .map(|i| orig.iter().map(|b| b[i]).sum::<f32>())
                 .collect();
-            let mut bufs = orig.clone();
-            all_reduce_f32(&f, &ext, &mut bufs).unwrap();
+            let mut dev = dev_bufs(&orig);
+            all_reduce(&f, &ext, &mut dev, RedOp::Sum).unwrap();
+            let bufs = f32s(&dev);
             for b in &bufs {
                 for i in 0..len {
                     assert!((b[i] - expect[i]).abs() <= 1e-4 * expect[i].abs().max(1.0));
@@ -826,8 +843,11 @@ mod tests {
             for shares in splits() {
                 let f = fabric(n);
                 let ext = shares.to_extents((l * 4) as u64, 4);
-                let mut outputs = vec![Vec::new(); n];
-                reduce_scatter_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                let mut outputs: Vec<DeviceBuffer> =
+                    (0..n).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+                reduce_scatter(&f, &ext, &dev_bufs(&inputs), &mut outputs, RedOp::Sum)
+                    .unwrap();
+                let outputs = f32s(&outputs);
                 for (r, o) in outputs.iter().enumerate() {
                     assert_eq!(o.len(), b);
                     for i in 0..b {
@@ -877,8 +897,10 @@ mod tests {
             for shares in splits() {
                 let f = fabric(n);
                 let ext = shares.to_extents((l * 4) as u64, 4);
-                let mut outputs = vec![Vec::new(); n];
-                all_to_all_f32(&f, &ext, &inputs, &mut outputs).unwrap();
+                let mut outputs: Vec<DeviceBuffer> =
+                    (0..n).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+                all_to_all(&f, &ext, &dev_bufs(&inputs), &mut outputs).unwrap();
+                let outputs = f32s(&outputs);
                 for r in 0..n {
                     for src in 0..n {
                         assert_eq!(
@@ -896,8 +918,11 @@ mod tests {
     fn length_mismatch_rejected() {
         let f = fabric(2);
         let ext = Shares::nvlink_only().to_extents(16, 4);
-        let mut bufs = vec![vec![0f32; 4], vec![0f32; 5]];
-        assert!(all_reduce_f32(&f, &ext, &mut bufs).is_err());
+        let mut bufs = vec![
+            DeviceBuffer::from_f32(&[0.0; 4]),
+            DeviceBuffer::from_f32(&[0.0; 5]),
+        ];
+        assert!(all_reduce(&f, &ext, &mut bufs, RedOp::Sum).is_err());
     }
 
     #[test]

@@ -1,0 +1,1124 @@
+//! Hierarchical (multi-node) collective compiler.
+//!
+//! Lowers AllReduce / AllGather / ReduceScatter / Broadcast over a
+//! [`Cluster`] to the canonical three-phase form:
+//!
+//! ```text
+//!   phase 1: intra-node (NVLink/PCIe multipath)   — e.g. reduce-scatter
+//!   phase 2: inter-node, striped across the node's RDMA NICs
+//!   phase 3: intra-node (NVLink/PCIe multipath)   — e.g. all-gather
+//! ```
+//!
+//! All three phases compile into ONE [`TaskGraph`] over the cluster's
+//! shared [`ResourcePool`], so the existing fair-share DES prices
+//! cross-tier contention (NIC uplinks and staged-PCIe traffic squeezing
+//! the same lane, spine oversubscription, phase overlap through chunked
+//! dependencies) with no additional machinery. Intra-phase tasks carry
+//! their [`PathId`] tag, inter-phase tasks their [`StripeId`] tag — the
+//! per-tier balancers each read their own completion times from one run.
+//!
+//! `n_nodes == 1` is the degenerate case: [`ClusterCollective::run`]
+//! delegates to the flat single-node [`MultipathCollective`], so the
+//! pre-cluster Table 2 numbers reproduce bit-identically.
+//!
+//! Modeling note: when the inter tier's stripe shares deviate from the
+//! even split, the surplus bytes are still charged to the carrier NIC
+//! only — shuffling a shard to a neighbour GPU's NIC rides the NVSwitch
+//! at ≥10× the NIC's protocol rate while the NVLink fabric is otherwise
+//! idle between phases, so that movement is below the model's fidelity.
+
+use super::multipath::MultipathCollective;
+use super::ring;
+use super::schedule::GraphBuilder;
+use super::CollectiveKind;
+use crate::balancer::shares::Shares;
+use crate::balancer::tier::TierShares;
+use crate::links::calib::Calibration;
+use crate::links::{PathId, PathModel, StripeId};
+use crate::sim::{Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind};
+use crate::topology::cluster::Cluster;
+use anyhow::Result;
+
+/// A bound (cluster, calibration, operator, local-rank-count) context —
+/// the hierarchical analogue of [`MultipathCollective`].
+pub struct ClusterCollective<'c> {
+    pub cluster: &'c Cluster,
+    pub calib: Calibration,
+    pub kind: CollectiveKind,
+    /// Ranks participating per node (the intra-node ring size); the
+    /// cross-node phase stripes over this many NICs per node.
+    pub n_local: usize,
+}
+
+/// DES outcome of one hierarchical collective.
+#[derive(Debug, Clone)]
+pub struct HierReport {
+    pub kind: CollectiveKind,
+    pub msg_bytes: u64,
+    /// Makespan of the whole three-phase graph.
+    pub total: SimTime,
+    /// Per intra-node path completion (latest tagged task across nodes
+    /// and phases) — the intra-tier balancer's observable.
+    pub intra_times: Vec<(PathId, SimTime)>,
+    /// Per NIC-stripe completion — the inter-tier balancer's observable.
+    /// Empty in the degenerate single-node case.
+    pub inter_times: Vec<(StripeId, SimTime)>,
+    /// When the last node finished phase 1 (ZERO when the op has none).
+    pub intra_phase1: SimTime,
+    /// When the last node finished the inter-node phase (ZERO at n=1).
+    pub inter_phase: SimTime,
+    pub events: u64,
+    pub tasks: usize,
+}
+
+impl HierReport {
+    /// Paper metric: algorithm bandwidth in GB/s.
+    pub fn algbw_gbps(&self) -> f64 {
+        self.kind.algbw_gbps(self.msg_bytes, self.total.as_secs_f64())
+    }
+}
+
+impl<'c> ClusterCollective<'c> {
+    pub fn new(
+        cluster: &'c Cluster,
+        calib: Calibration,
+        kind: CollectiveKind,
+        n_local: usize,
+    ) -> Self {
+        assert!(
+            n_local >= 2 && n_local <= cluster.gpus_per_node(),
+            "n_local {} outside 2..={}",
+            n_local,
+            cluster.gpus_per_node()
+        );
+        ClusterCollective {
+            cluster,
+            calib,
+            kind,
+            n_local,
+        }
+    }
+
+    /// Total participating ranks across the cluster.
+    pub fn n_global(&self) -> usize {
+        self.n_local * self.cluster.n_nodes()
+    }
+
+    /// Calibrated intra-node path model for a given phase collective.
+    fn path_model(&self, phase_kind: CollectiveKind, path: PathId) -> PathModel {
+        let spec = &self.cluster.spec.node;
+        match path {
+            PathId::Nvlink => {
+                self.calib
+                    .nvlink_model(phase_kind, self.n_local, spec.nvlink_unidir_bps())
+            }
+            PathId::Pcie => self.calib.pcie_model(spec.pcie_unidir_bps(), self.n_local),
+            PathId::Rdma => self.calib.rdma_model(spec.nic_unidir_bps(), self.n_local),
+        }
+    }
+
+    fn intra_models(
+        &self,
+        phase_kind: CollectiveKind,
+        intra: &Shares<PathId>,
+    ) -> Vec<(PathId, PathModel)> {
+        intra
+            .active_paths()
+            .into_iter()
+            .map(|p| (p, self.path_model(phase_kind, p)))
+            .collect()
+    }
+
+    /// Total bytes the inter-node phase carries (before striping).
+    fn inter_payload(&self, msg_bytes: u64) -> u64 {
+        match self.kind {
+            // Reduced shards: the whole vector crosses once per ring pass.
+            CollectiveKind::AllReduce => msg_bytes,
+            // Every local rank's contribution must reach every node.
+            CollectiveKind::AllGather => msg_bytes * self.n_local as u64,
+            CollectiveKind::ReduceScatter => msg_bytes,
+            CollectiveKind::Broadcast => msg_bytes,
+            CollectiveKind::AllToAll => msg_bytes,
+        }
+    }
+
+    /// Compile + simulate one hierarchical collective under per-tier
+    /// shares. `elem_bytes` aligns extent quantization (dtype size).
+    pub fn run(
+        &self,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        elem_bytes: u64,
+    ) -> Result<HierReport> {
+        anyhow::ensure!(msg_bytes > 0, "empty message");
+        if self.cluster.n_nodes() == 1 {
+            // Degenerate case: exactly the flat single-node pipeline.
+            // Route the *cluster's* pool into the node view so failure
+            // injection via `cluster.pool` (scale_capacity /
+            // scale_matching) is honoured here too — at build time the
+            // two pools are identical, so healthy timings stay
+            // bit-identical to the flat path.
+            let mut topo = self.cluster.node(0).clone();
+            topo.pool = self.cluster.pool.clone();
+            let mc = MultipathCollective::new(
+                &topo,
+                self.calib.clone(),
+                self.kind,
+                self.n_local,
+            );
+            let rep = mc.run_elem(msg_bytes, &tiers.intra, elem_bytes)?;
+            return Ok(HierReport {
+                kind: self.kind,
+                msg_bytes,
+                total: rep.outcome.total,
+                intra_times: rep.path_times(),
+                inter_times: Vec::new(),
+                intra_phase1: SimTime::ZERO,
+                inter_phase: SimTime::ZERO,
+                events: rep.outcome.events,
+                tasks: rep.outcome.tasks,
+            });
+        }
+        match self.kind {
+            CollectiveKind::AllReduce => self.run_allreduce(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::AllGather => self.run_allgather(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::ReduceScatter => {
+                self.run_reduce_scatter(msg_bytes, tiers, elem_bytes)
+            }
+            CollectiveKind::Broadcast => self.run_broadcast(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::AllToAll => anyhow::bail!(
+                "alltoall has no hierarchical lowering yet (single-node only)"
+            ),
+        }
+    }
+
+    /// Simulate the inter-node phase alone under candidate stripe shares
+    /// — the stage-1 stripe tuner's measurable. Per-stripe completion
+    /// times come back tagged exactly as in the full three-phase run.
+    pub fn run_inter_only(
+        &self,
+        msg_bytes: u64,
+        inter: &Shares<StripeId>,
+    ) -> Result<Vec<(StripeId, SimTime)>> {
+        anyhow::ensure!(
+            self.cluster.n_nodes() >= 2,
+            "inter phase needs ≥2 nodes"
+        );
+        let nn = self.cluster.n_nodes();
+        let mut hg = HierGraph::new(self);
+        let payload = self.inter_payload(msg_bytes);
+        let ext = inter.to_extents(payload, crate::dtype::natural_align(payload));
+        let root = hg.barrier(Vec::new());
+        let entry = vec![root; nn];
+        for (sid, _, len) in &ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            match self.kind {
+                CollectiveKind::AllReduce => {
+                    let finals = hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
+                    let sub = len.div_ceil(nn as u64);
+                    let start = chunked_deps(&finals);
+                    hg.inter_ring_allgather(stripe, sub, &start, tag);
+                }
+                CollectiveKind::AllGather => {
+                    let n_chunks = hg.inter_chunks(*len);
+                    let start: Vec<Vec<Vec<TaskId>>> =
+                        vec![vec![vec![root]; n_chunks]; nn];
+                    hg.inter_ring_allgather(stripe, *len, &start, tag);
+                }
+                CollectiveKind::ReduceScatter => {
+                    hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
+                }
+                CollectiveKind::Broadcast => {
+                    hg.inter_chain(stripe, *len, &[root], tag);
+                }
+                CollectiveKind::AllToAll => {
+                    anyhow::bail!("alltoall has no hierarchical lowering yet")
+                }
+            }
+        }
+        let sched = Engine::new(&hg.pool).run(&hg.graph)?;
+        Ok(ext
+            .iter()
+            .filter_map(|(sid, _, _)| {
+                sched.tag_finish(&hg.graph, sid.tag()).map(|t| (*sid, t))
+            })
+            .collect())
+    }
+
+    // -----------------------------------------------------------------
+    // Per-operator three-phase lowerings.
+    // -----------------------------------------------------------------
+
+    /// AllReduce: intra reduce-scatter → inter ring allreduce per stripe
+    /// → intra allgather.
+    fn run_allreduce(
+        &self,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<HierReport> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let mut hg = HierGraph::new(self);
+        let intra_ext = tiers.intra.to_extents(msg, elem);
+        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+        let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+
+        // Phase 1: intra reduce-scatter on every node.
+        let mut p1_bar = Vec::with_capacity(nn);
+        for k in 0..nn {
+            let mut finals: Vec<TaskId> = Vec::new();
+            hg.with_node_builder(k, &rs_models, |b| {
+                for (p, _, len) in &intra_ext {
+                    let block = len.div_ceil(nl);
+                    for f in intra_ring_reduce_scatter(b, *p, block, &[], p.tag()) {
+                        finals.extend(f);
+                    }
+                }
+            });
+            p1_bar.push(hg.barrier(finals));
+        }
+
+        // Phase 2: per-stripe inter-node ring allreduce of the shards.
+        let inter_ext = tiers.inter.to_extents(msg, elem);
+        let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for (sid, _, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            let rs_finals = hg.inter_ring_reduce_scatter(stripe, *len, &p1_bar, tag);
+            let sub = len.div_ceil(nn as u64);
+            let start = chunked_deps(&rs_finals);
+            let ag_done = hg.inter_ring_allgather(stripe, sub, &start, tag);
+            for k in 0..nn {
+                done_per_node[k].extend(rs_finals[k].iter().copied());
+                done_per_node[k].extend(ag_done[k].iter().copied());
+            }
+        }
+        let p2_bar: Vec<TaskId> =
+            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
+
+        // Phase 3: intra allgather of the fully reduced blocks.
+        for k in 0..nn {
+            hg.with_node_builder(k, &ag_models, |b| {
+                for (p, _, len) in &intra_ext {
+                    let block = len.div_ceil(nl);
+                    let entry: Vec<Vec<TaskId>> = vec![vec![p2_bar[k]]; nl as usize];
+                    intra_ring_allgather(b, *p, block, &entry, p.tag());
+                }
+            });
+        }
+        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+    }
+
+    /// AllGather: inter ring allgather per stripe → intra allgather of
+    /// the node-resident blocks (no reduce phase).
+    fn run_allgather(
+        &self,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<HierReport> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let mut hg = HierGraph::new(self);
+        let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+
+        // Phase 2 first: stripe g carries the g-th local rank's
+        // contribution around the node ring.
+        let inter_ext = tiers.inter.to_extents(msg * nl, elem);
+        let root = hg.barrier(Vec::new());
+        let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for (sid, _, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let n_chunks = hg.inter_chunks(*len);
+            let start: Vec<Vec<Vec<TaskId>>> = vec![vec![vec![root]; n_chunks]; nn];
+            let done = hg.inter_ring_allgather(stripe, *len, &start, sid.tag());
+            for k in 0..nn {
+                done_per_node[k].extend(done[k].iter().copied());
+            }
+        }
+        let p2_bar: Vec<TaskId> =
+            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
+
+        // Phase 3: intra allgather; each rank now forwards its gathered
+        // group of `n_nodes` same-index blocks.
+        let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
+        for k in 0..nn {
+            hg.with_node_builder(k, &ag_models, |b| {
+                for (p, _, len) in &intra_ext {
+                    let entry: Vec<Vec<TaskId>> = vec![vec![p2_bar[k]]; nl as usize];
+                    intra_ring_allgather(b, *p, *len, &entry, p.tag());
+                }
+            });
+        }
+        hg.finish(self.kind, msg, tiers, &[], &p2_bar)
+    }
+
+    /// ReduceScatter: intra reduce-scatter → inter ring reduce-scatter
+    /// per stripe (outputs land scattered; no phase 3).
+    fn run_reduce_scatter(
+        &self,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<HierReport> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let mut hg = HierGraph::new(self);
+        let intra_ext = tiers.intra.to_extents(msg, elem);
+        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+
+        let mut p1_bar = Vec::with_capacity(nn);
+        for k in 0..nn {
+            let mut finals: Vec<TaskId> = Vec::new();
+            hg.with_node_builder(k, &rs_models, |b| {
+                for (p, _, len) in &intra_ext {
+                    let block = len.div_ceil(nl);
+                    for f in intra_ring_reduce_scatter(b, *p, block, &[], p.tag()) {
+                        finals.extend(f);
+                    }
+                }
+            });
+            p1_bar.push(hg.barrier(finals));
+        }
+
+        let inter_ext = tiers.inter.to_extents(msg, elem);
+        let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for (sid, _, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            // The stripe extent IS the per-node slab (even stripes give
+            // msg/n_local each); the node ring reduces it across nodes.
+            let finals = hg.inter_ring_reduce_scatter(stripe, *len, &p1_bar, sid.tag());
+            for k in 0..nn {
+                done_per_node[k].extend(finals[k].iter().copied());
+            }
+        }
+        let p2_bar: Vec<TaskId> =
+            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
+        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+    }
+
+    /// Broadcast: intra chain at the root node → inter chain per stripe
+    /// → intra allgather on the non-root nodes.
+    fn run_broadcast(
+        &self,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<HierReport> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let mut hg = HierGraph::new(self);
+        let intra_ext = tiers.intra.to_extents(msg, elem);
+        let bc_models = self.intra_models(CollectiveKind::Broadcast, &tiers.intra);
+        let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+
+        // Phase 1: pipeline the message down the root node's local chain
+        // so every local GPU (hence every NIC) holds a copy.
+        let mut at_rank: Vec<Vec<TaskId>> = vec![Vec::new(); self.n_local];
+        hg.with_node_builder(0, &bc_models, |b| {
+            for (p, _, len) in &intra_ext {
+                let arr = intra_chain_broadcast(b, *p, *len, &[], p.tag());
+                for (r, a) in arr.into_iter().enumerate() {
+                    at_rank[r].extend(a);
+                }
+            }
+        });
+        let p1_bar = vec![hg.barrier(at_rank.iter().flatten().copied().collect())];
+
+        // Phase 2: stripe g forwards its slice down the node chain.
+        let inter_ext = tiers.inter.to_extents(msg, elem);
+        let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for (sid, _, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let entry = hg.barrier(at_rank[stripe].clone());
+            let done = hg.inter_chain(stripe, *len, &[entry], sid.tag());
+            for k in 1..nn {
+                done_per_node[k].extend(done[k].iter().copied());
+            }
+        }
+        let p2_bar: Vec<TaskId> = done_per_node
+            .iter()
+            .skip(1)
+            .map(|d| hg.barrier(d.clone()))
+            .collect();
+
+        // Phase 3: non-root nodes reassemble the stripes locally.
+        for k in 1..nn {
+            hg.with_node_builder(k, &ag_models, |b| {
+                for (p, _, len) in &intra_ext {
+                    let block = len.div_ceil(nl);
+                    let entry: Vec<Vec<TaskId>> =
+                        vec![vec![p2_bar[k - 1]]; nl as usize];
+                    intra_ring_allgather(b, *p, block, &entry, p.tag());
+                }
+            });
+        }
+        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+    }
+}
+
+/// Naive baseline for the cluster: ONE flat ring over every global GPU,
+/// NVLink inside a node, a single NIC at each node boundary — what you
+/// get by feeding the global rank list to the single-node ring scheduler.
+/// The hierarchical lowering must beat its makespan (all NICs stripe in
+/// parallel instead of serializing the whole vector through one uplink
+/// per boundary).
+pub fn flat_ring_allreduce(
+    cluster: &Cluster,
+    calib: &Calibration,
+    msg_bytes: u64,
+) -> Result<SimTime> {
+    anyhow::ensure!(cluster.n_nodes() >= 2, "flat ring baseline needs ≥2 nodes");
+    let nn = cluster.n_nodes();
+    let nl = cluster.gpus_per_node();
+    let ng = nn * nl;
+    let spec = &cluster.spec.node;
+    let nv = calib.nvlink_model(CollectiveKind::AllReduce, nl, spec.nvlink_unidir_bps());
+    let nic = calib.rdma_model(spec.nic_unidir_bps(), ng);
+    let hop_extra = SimTime::from_secs_f64(cluster.spec.fabric.hop_latency_us * 1e-6);
+
+    let mut pool = cluster.pool.clone();
+    let mut graph = TaskGraph::new();
+    let crosses = |r: usize| (r % nl) == nl - 1;
+    let proto: Vec<ResourceId> = (0..ng)
+        .map(|r| {
+            let cap = if crosses(r) { nic.rate_cap } else { nv.rate_cap };
+            pool.add(format!("proto.flatring.gpu{r}"), cap)
+        })
+        .collect();
+
+    let block = msg_bytes.div_ceil(ng as u64);
+    let sizes = ring::chunk_sizes(block, nv.chunk_bytes);
+
+    // One ring step for sender r: gate latency, FIFO-chunked transfer;
+    // `reduce` marks the ReduceScatter half, where the consumer must
+    // combine each arrival (same reduce_after accounting as
+    // GraphBuilder::send_block / HierGraph::send_inter, so the baseline
+    // pays the same reduce amplification the hierarchical path does).
+    let mut send_step = |graph: &mut TaskGraph,
+                         r: usize,
+                         deps_pc: &[Vec<TaskId>],
+                         reduce: bool|
+     -> Vec<TaskId> {
+        let (k, g) = cluster.locate(r);
+        let nxt = (r + 1) % ng;
+        let (k2, g2) = cluster.locate(nxt);
+        let mut route_base = vec![proto[r]];
+        if k == k2 {
+            route_base.push(cluster.node(k).nvlink_up[g]);
+            route_base.push(cluster.node(k).nvlink_down[g2]);
+        } else {
+            route_base.extend(cluster.uplink_route(k, g, k2, g2));
+        }
+        let model = if crosses(r) { &nic } else { &nv };
+        let mut lat = model.step_latency;
+        if crosses(r) {
+            lat = lat + hop_extra;
+        }
+        if reduce {
+            lat = lat + model.reduce_step_latency;
+        }
+        let gate = if lat > SimTime::ZERO {
+            Some(graph.add(
+                TaskKind::Delay { duration: lat },
+                deps_pc.first().cloned().unwrap_or_default(),
+            ))
+        } else {
+            None
+        };
+        let mut prev_egress: Option<TaskId> = None;
+        let mut arrivals = Vec::with_capacity(sizes.len());
+        for (c, &bytes) in sizes.iter().enumerate() {
+            let mut deps = deps_pc.get(c).cloned().unwrap_or_default();
+            if let Some(gt) = gate {
+                deps.push(gt);
+            }
+            if let Some(pe) = prev_egress {
+                deps.push(pe);
+            }
+            let t = graph.add(
+                TaskKind::Transfer {
+                    bytes,
+                    route: route_base.clone(),
+                    weight: 1.0,
+                    latency: SimTime::ZERO,
+                    rate_cap: f64::INFINITY,
+                },
+                deps,
+            );
+            prev_egress = Some(t);
+            // Cross-node arrivals pay the consumer combine (exactly as
+            // send_inter does); NVLink's in-fabric reduce is inside its
+            // fitted B_eff, mirroring send_block.
+            let arrival = if reduce && bytes > 0 && crosses(r) {
+                graph.add(
+                    TaskKind::Delay {
+                        duration: SimTime::for_transfer(bytes, calib.reduce_bps),
+                    },
+                    vec![t],
+                )
+            } else {
+                t
+            };
+            arrivals.push(arrival);
+        }
+        arrivals
+    };
+
+    let mut prev: Vec<Vec<TaskId>> = vec![Vec::new(); ng];
+    for s in 0..2 * (ng - 1) {
+        let reduce = s < ng - 1;
+        let mut arrs = Vec::with_capacity(ng);
+        for r in 0..ng {
+            let deps: Vec<Vec<TaskId>> = if s == 0 {
+                Vec::new()
+            } else {
+                prev[(r + ng - 1) % ng].iter().map(|t| vec![*t]).collect()
+            };
+            arrs.push(send_step(&mut graph, r, &deps, reduce));
+        }
+        prev = arrs;
+    }
+    let sched = Engine::new(&pool).run(&graph)?;
+    Ok(sched.makespan)
+}
+
+// ---------------------------------------------------------------------
+// Graph-assembly plumbing.
+// ---------------------------------------------------------------------
+
+/// Chunk-aligned dep lists from per-node final-arrival lists.
+fn chunked_deps(finals: &[Vec<TaskId>]) -> Vec<Vec<Vec<TaskId>>> {
+    finals
+        .iter()
+        .map(|f| f.iter().map(|t| vec![*t]).collect())
+        .collect()
+}
+
+/// Owns the growing (pool, graph) pair plus the inter-tier protocol
+/// resources; intra phases borrow it back out through [`GraphBuilder`].
+struct HierGraph<'c> {
+    cluster: &'c Cluster,
+    pool: ResourcePool,
+    graph: TaskGraph,
+    n_local: usize,
+    inter_model: PathModel,
+    hop_latency: SimTime,
+    /// `[node][stripe]` single-put-stream cap of that NIC's uplink.
+    stripe_proto: Vec<Vec<ResourceId>>,
+    reduce_bps: f64,
+}
+
+impl<'c> HierGraph<'c> {
+    fn new(cc: &ClusterCollective<'c>) -> Self {
+        let nn = cc.cluster.n_nodes();
+        let nl = cc.n_local;
+        let spec = &cc.cluster.spec.node;
+        let inter_model = cc.calib.rdma_model(spec.nic_unidir_bps(), nn.max(2));
+        let hop_latency =
+            SimTime::from_secs_f64(cc.cluster.spec.fabric.hop_latency_us * 1e-6);
+        let mut pool = cc.cluster.pool.clone();
+        let stripe_proto = (0..nn)
+            .map(|k| {
+                (0..nl)
+                    .map(|g| {
+                        pool.add(
+                            format!("proto.inter.node{k}.nic{g}"),
+                            inter_model.rate_cap,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        HierGraph {
+            cluster: cc.cluster,
+            pool,
+            graph: TaskGraph::new(),
+            n_local: nl,
+            inter_model,
+            hop_latency,
+            stripe_proto,
+            reduce_bps: cc.calib.reduce_bps,
+        }
+    }
+
+    fn barrier(&mut self, deps: Vec<TaskId>) -> TaskId {
+        self.graph.add(TaskKind::Barrier, deps)
+    }
+
+    fn inter_chunks(&self, bytes: u64) -> usize {
+        ring::chunk_sizes(bytes, self.inter_model.chunk_bytes).len()
+    }
+
+    /// Lend the (pool, graph) pair to a per-node [`GraphBuilder`] for one
+    /// intra phase on node `k`.
+    fn with_node_builder<F>(&mut self, k: usize, models: &[(PathId, PathModel)], f: F)
+    where
+        F: FnOnce(&mut GraphBuilder<'_>),
+    {
+        let pool = std::mem::take(&mut self.pool);
+        let graph = std::mem::take(&mut self.graph);
+        let mut b = GraphBuilder::onto(
+            self.cluster.node(k),
+            self.n_local,
+            models,
+            self.reduce_bps,
+            pool,
+            graph,
+        );
+        f(&mut b);
+        let (pool, graph) = b.into_parts();
+        self.pool = pool;
+        self.graph = graph;
+    }
+
+    /// Emit one inter-node block send `src_node → dst_node` on `stripe`
+    /// (chunk-pipelined, FIFO egress, per-step gate latency — the
+    /// cross-node mirror of [`GraphBuilder::send_block`]).
+    #[allow(clippy::too_many_arguments)]
+    fn send_inter(
+        &mut self,
+        src_node: usize,
+        dst_node: usize,
+        stripe: usize,
+        bytes: u64,
+        deps_per_chunk: &[Vec<TaskId>],
+        reduce_after: bool,
+        tag: u32,
+    ) -> Vec<TaskId> {
+        let sizes = ring::chunk_sizes(bytes, self.inter_model.chunk_bytes);
+        debug_assert!(deps_per_chunk.is_empty() || deps_per_chunk.len() == sizes.len());
+        let step_lat = self.inter_model.step_latency
+            + self.hop_latency
+            + if reduce_after {
+                self.inter_model.reduce_step_latency
+            } else {
+                SimTime::ZERO
+            };
+        let gate: Option<TaskId> = if step_lat > SimTime::ZERO {
+            let gate_deps = deps_per_chunk.first().cloned().unwrap_or_default();
+            Some(self.graph.add_tagged(
+                TaskKind::Delay { duration: step_lat },
+                gate_deps,
+                tag,
+            ))
+        } else {
+            None
+        };
+        let mut prev_egress: Option<TaskId> = None;
+        let mut arrivals = Vec::with_capacity(sizes.len());
+        for (c, &chunk_bytes) in sizes.iter().enumerate() {
+            let mut deps = deps_per_chunk.get(c).cloned().unwrap_or_default();
+            if let Some(g) = gate {
+                deps.push(g);
+            }
+            if let Some(pe) = prev_egress {
+                deps.push(pe);
+            }
+            let mut route = vec![self.stripe_proto[src_node][stripe]];
+            route.extend(
+                self.cluster
+                    .uplink_route(src_node, stripe, dst_node, stripe),
+            );
+            let t = self.graph.add_tagged(
+                TaskKind::Transfer {
+                    bytes: chunk_bytes,
+                    route,
+                    weight: 1.0,
+                    latency: SimTime::ZERO,
+                    rate_cap: f64::INFINITY,
+                },
+                deps,
+                tag,
+            );
+            prev_egress = Some(t);
+            let arrival = if reduce_after && chunk_bytes > 0 {
+                self.graph.add_tagged(
+                    TaskKind::Delay {
+                        duration: SimTime::for_transfer(chunk_bytes, self.reduce_bps),
+                    },
+                    vec![t],
+                    tag,
+                )
+            } else {
+                t
+            };
+            arrivals.push(arrival);
+        }
+        arrivals
+    }
+
+    /// Ring reduce-scatter over the nodes on one stripe. `entry[k]` gates
+    /// node k's first send (its phase-1 output). Returns per-node final
+    /// (reduced-at-node) arrival ids, chunk-aligned.
+    fn inter_ring_reduce_scatter(
+        &mut self,
+        stripe: usize,
+        bytes: u64,
+        entry: &[TaskId],
+        tag: u32,
+    ) -> Vec<Vec<TaskId>> {
+        let nn = self.cluster.n_nodes();
+        let sub = bytes.div_ceil(nn as u64);
+        let n_chunks = self.inter_chunks(sub);
+        let mut prev: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for s in 0..nn - 1 {
+            let mut arr = Vec::with_capacity(nn);
+            for k in 0..nn {
+                let deps: Vec<Vec<TaskId>> = (0..n_chunks)
+                    .map(|c| {
+                        let mut d = vec![entry[k]];
+                        if s > 0 {
+                            d.push(prev[ring::prev(k, nn)][c]);
+                        }
+                        d
+                    })
+                    .collect();
+                arr.push(self.send_inter(k, ring::next(k, nn), stripe, sub, &deps, true, tag));
+            }
+            prev = arr;
+        }
+        // The block fully reduced AT node k arrived from prev(k).
+        (0..nn).map(|k| prev[ring::prev(k, nn)].clone()).collect()
+    }
+
+    /// Ring allgather over the nodes on one stripe; `start[k]` is the
+    /// chunk-aligned availability of node k's block. Returns every
+    /// arrival at each node (the stripe's per-node completion set).
+    fn inter_ring_allgather(
+        &mut self,
+        stripe: usize,
+        bytes: u64,
+        start: &[Vec<Vec<TaskId>>],
+        tag: u32,
+    ) -> Vec<Vec<TaskId>> {
+        let nn = self.cluster.n_nodes();
+        let mut at: Vec<Vec<Vec<TaskId>>> = start.to_vec();
+        let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for _s in 0..nn - 1 {
+            let mut new_at: Vec<Vec<Vec<TaskId>>> = vec![Vec::new(); nn];
+            for k in 0..nn {
+                let a = self.send_inter(k, ring::next(k, nn), stripe, bytes, &at[k], false, tag);
+                done[ring::next(k, nn)].extend(a.iter().copied());
+                new_at[ring::next(k, nn)] = a.iter().map(|t| vec![*t]).collect();
+            }
+            at = new_at;
+        }
+        done
+    }
+
+    /// Pipeline chain node0 → node1 → … on one stripe (Broadcast's inter
+    /// phase). Returns per-node arrival ids (node 0 empty).
+    fn inter_chain(
+        &mut self,
+        stripe: usize,
+        bytes: u64,
+        entry: &[TaskId],
+        tag: u32,
+    ) -> Vec<Vec<TaskId>> {
+        let nn = self.cluster.n_nodes();
+        let n_chunks = self.inter_chunks(bytes);
+        let mut at: Vec<Vec<TaskId>> = (0..n_chunks).map(|_| entry.to_vec()).collect();
+        let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for hop in 0..nn - 1 {
+            let a = self.send_inter(hop, hop + 1, stripe, bytes, &at, false, tag);
+            done[hop + 1] = a.clone();
+            at = a.iter().map(|t| vec![*t]).collect();
+        }
+        done
+    }
+
+    /// Run the assembled graph and collect per-tier observables.
+    fn finish(
+        self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        p1_bars: &[TaskId],
+        p2_bars: &[TaskId],
+    ) -> Result<HierReport> {
+        let tasks = self.graph.len();
+        let sched = Engine::new(&self.pool).run(&self.graph)?;
+        let intra_times = tiers
+            .intra
+            .active_paths()
+            .into_iter()
+            .filter_map(|p| sched.tag_finish(&self.graph, p.tag()).map(|t| (p, t)))
+            .collect();
+        let inter_times = tiers
+            .inter
+            .active_paths()
+            .into_iter()
+            .filter_map(|s| sched.tag_finish(&self.graph, s.tag()).map(|t| (s, t)))
+            .collect();
+        let intra_phase1 = p1_bars
+            .iter()
+            .map(|t| sched.finish_of(*t))
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        let inter_phase = p2_bars
+            .iter()
+            .map(|t| sched.finish_of(*t))
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        Ok(HierReport {
+            kind,
+            msg_bytes,
+            total: sched.makespan,
+            intra_times,
+            inter_times,
+            intra_phase1,
+            inter_phase,
+            events: sched.events,
+            tasks,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Intra-phase ring loops with explicit entry dependencies (the flat
+// builders in allgather.rs / reduce_scatter.rs assume locally resident
+// data; hierarchical phases must gate on the previous phase instead).
+// ---------------------------------------------------------------------
+
+/// Ring reduce-scatter over the builder's node; every step-0 chunk gates
+/// on `entry`. Returns per-rank final (reduced) arrival ids.
+fn intra_ring_reduce_scatter(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    block: u64,
+    entry: &[TaskId],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    let n_chunks = b.chunks_for(path, block).len();
+    let mut prev: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for s in 0..n - 1 {
+        let mut arr = Vec::with_capacity(n);
+        for r in 0..n {
+            let deps: Vec<Vec<TaskId>> = (0..n_chunks)
+                .map(|c| {
+                    let mut d = entry.to_vec();
+                    if s > 0 {
+                        d.push(prev[ring::prev(r, n)][c]);
+                    }
+                    d
+                })
+                .collect();
+            arr.push(b.send_block(path, r, ring::next(r, n), block, &deps, true, true, tag));
+        }
+        prev = arr;
+    }
+    (0..n).map(|r| prev[ring::prev(r, n)].clone()).collect()
+}
+
+/// Ring allgather over the builder's node; `entry_per_rank[r]` gates rank
+/// r's first send. Returns every arrival at each rank.
+fn intra_ring_allgather(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    block: u64,
+    entry_per_rank: &[Vec<TaskId>],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    let n_chunks = b.chunks_for(path, block).len();
+    let mut at: Vec<Vec<Vec<TaskId>>> = entry_per_rank
+        .iter()
+        .map(|e| vec![e.clone(); n_chunks])
+        .collect();
+    let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for _s in 0..n - 1 {
+        let mut new_at: Vec<Vec<Vec<TaskId>>> = vec![Vec::new(); n];
+        for r in 0..n {
+            let a = b.send_block(path, r, ring::next(r, n), block, &at[r], true, false, tag);
+            done[ring::next(r, n)].extend(a.iter().copied());
+            new_at[ring::next(r, n)] = a.iter().map(|t| vec![*t]).collect();
+        }
+        at = new_at;
+    }
+    done
+}
+
+/// Pipelined chain broadcast 0 → 1 → … → n−1 on the builder's node.
+/// Returns per-rank arrival ids (rank 0, the source, stays empty).
+fn intra_chain_broadcast(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    msg: u64,
+    entry: &[TaskId],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    let n_chunks = b.chunks_for(path, msg).len();
+    let mut at: Vec<Vec<TaskId>> = (0..n_chunks).map(|_| entry.to_vec()).collect();
+    let mut arrivals_at: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for hop in 0..n - 1 {
+        let a = b.send_block(path, hop, hop + 1, msg, &at, true, false, tag);
+        arrivals_at[hop + 1] = a.clone();
+        at = a.iter().map(|t| vec![*t]).collect();
+    }
+    arrivals_at
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+    use crate::topology::cluster::ClusterSpec;
+
+    fn cluster(nn: usize) -> Cluster {
+        Cluster::build(&ClusterSpec::new(nn, Preset::H800.spec()))
+    }
+
+    fn cc(c: &Cluster, kind: CollectiveKind) -> ClusterCollective<'_> {
+        ClusterCollective::new(c, Calibration::h800(), kind, c.gpus_per_node())
+    }
+
+    /// n_nodes = 1 must be bit-identical to the flat single-node DES.
+    #[test]
+    fn single_node_is_bit_identical_to_flat_path() {
+        let c = cluster(1);
+        let flat_topo = crate::topology::Topology::build(&Preset::H800.spec());
+        for kind in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+            let hier = cc(&c, kind);
+            let shares = Shares::from_pcts(&[
+                (PathId::Nvlink, 83.0),
+                (PathId::Pcie, 10.0),
+                (PathId::Rdma, 7.0),
+            ]);
+            let tiers = TierShares::single_node(shares.clone());
+            let msg = 64u64 << 20;
+            let h = hier.run(msg, &tiers, 4).unwrap();
+            let f = MultipathCollective::new(&flat_topo, Calibration::h800(), kind, 8)
+                .run_elem(msg, &shares, 4)
+                .unwrap();
+            assert_eq!(h.total, f.outcome.total, "{kind}: degenerate case diverged");
+            assert_eq!(h.intra_times, f.path_times());
+            assert!(h.inter_times.is_empty());
+        }
+    }
+
+    /// The tentpole claim: hierarchical AllReduce beats the naive flat
+    /// ring over the NIC fabric, at 2 and 4 nodes.
+    #[test]
+    fn hierarchical_allreduce_beats_flat_ring() {
+        for nn in [2usize, 4] {
+            let c = cluster(nn);
+            let col = cc(&c, CollectiveKind::AllReduce);
+            let tiers = TierShares::new(Shares::nvlink_only(), c.gpus_per_node());
+            let msg = 256u64 << 20;
+            let hier = col.run(msg, &tiers, 4).unwrap();
+            let flat = flat_ring_allreduce(&c, &Calibration::h800(), msg).unwrap();
+            assert!(
+                hier.total < flat,
+                "nn={nn}: hierarchical {} not faster than flat ring {}",
+                hier.total,
+                flat
+            );
+            // The win must be structural (NIC striping), not marginal.
+            assert!(
+                hier.total.as_secs_f64() * 2.0 < flat.as_secs_f64(),
+                "nn={nn}: expected ≥2× from striping, got {} vs {}",
+                hier.total,
+                flat
+            );
+        }
+    }
+
+    /// Every lowered operator produces a sane multi-node report: nonzero
+    /// total, per-stripe times for all stripes, phases ordered.
+    #[test]
+    fn all_lowered_ops_simulate_on_two_nodes() {
+        let c = cluster(2);
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::Broadcast,
+        ] {
+            let col = cc(&c, kind);
+            let tiers = TierShares::new(Shares::nvlink_only(), 8);
+            let rep = col.run(32 << 20, &tiers, 4).unwrap();
+            assert!(rep.total > SimTime::ZERO, "{kind}: zero makespan");
+            assert_eq!(rep.inter_times.len(), 8, "{kind}: missing stripe times");
+            assert!(rep.inter_phase > SimTime::ZERO, "{kind}: no inter phase");
+            assert!(rep.inter_phase <= rep.total);
+            assert!(rep.intra_phase1 <= rep.inter_phase, "{kind}: phases out of order");
+            assert!(rep.algbw_gbps() > 0.0);
+        }
+    }
+
+    /// More nodes at fixed message size must not get cheaper: the
+    /// inter-node ring grows while per-NIC bandwidth stays fixed.
+    #[test]
+    fn allreduce_scales_monotonically_in_nodes() {
+        let msg = 64u64 << 20;
+        let mut prev = SimTime::ZERO;
+        for nn in [2usize, 4, 8] {
+            let c = cluster(nn);
+            let col = cc(&c, CollectiveKind::AllReduce);
+            let tiers = TierShares::new(Shares::nvlink_only(), 8);
+            let t = col.run(msg, &tiers, 4).unwrap().total;
+            assert!(
+                t >= prev,
+                "nn={nn}: {t} faster than {prev} at fewer nodes"
+            );
+            prev = t;
+        }
+    }
+
+    /// A degraded NIC shows up in the inter-only measurable as a slower
+    /// stripe — the signal the stripe tuner equalizes away.
+    #[test]
+    fn degraded_nic_slows_its_stripe() {
+        let mut c = cluster(2);
+        let bad = c.node(0).nic_up[2];
+        c.pool.scale_capacity(bad, 0.25);
+        let col = cc(&c, CollectiveKind::AllGather);
+        let even = Shares::even(&crate::balancer::tier::stripes(8));
+        let times = col.run_inter_only(32 << 20, &even).unwrap();
+        assert_eq!(times.len(), 8);
+        let t2 = times.iter().find(|t| t.0 == StripeId(2)).unwrap().1;
+        let t0 = times.iter().find(|t| t.0 == StripeId(0)).unwrap().1;
+        assert!(
+            t2.as_secs_f64() > 1.5 * t0.as_secs_f64(),
+            "degraded stripe {} vs healthy {}",
+            t2,
+            t0
+        );
+    }
+
+    /// Spine oversubscription throttles the striped inter phase.
+    #[test]
+    fn oversubscribed_spine_slows_inter_phase() {
+        let full = cluster(4);
+        let mut spec = ClusterSpec::new(4, Preset::H800.spec());
+        spec.fabric = crate::topology::cluster::InterNodeFabric::oversubscribed(16.0);
+        let tight = Cluster::build(&spec);
+        let even = Shares::even(&crate::balancer::tier::stripes(8));
+        let msg = 64u64 << 20;
+        let t_full = cc(&full, CollectiveKind::AllGather)
+            .run_inter_only(msg, &even)
+            .unwrap()
+            .iter()
+            .map(|t| t.1)
+            .max()
+            .unwrap();
+        let t_tight = cc(&tight, CollectiveKind::AllGather)
+            .run_inter_only(msg, &even)
+            .unwrap()
+            .iter()
+            .map(|t| t.1)
+            .max()
+            .unwrap();
+        assert!(
+            t_tight > t_full,
+            "16:1 spine {} not slower than full bisection {}",
+            t_tight,
+            t_full
+        );
+    }
+}

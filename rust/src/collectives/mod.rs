@@ -13,12 +13,18 @@
 //!
 //! Supported operators: AllReduce and AllGather (the paper's evaluation,
 //! §5.1) plus ReduceScatter, Broadcast and AllToAll (its §6 future work).
+//!
+//! Multi-node clusters lower through [`hierarchical`]: intra-node phase →
+//! NIC-striped inter-node phase → intra-node phase, compiled into one
+//! task graph over the cluster's shared resource pool; `n_nodes = 1`
+//! degenerates to the flat single-node pipeline above bit-identically.
 
 pub mod allgather;
 pub mod allreduce;
 pub mod alltoall;
 pub mod broadcast;
 pub mod exec;
+pub mod hierarchical;
 pub mod multipath;
 pub mod reduce_scatter;
 pub mod ring;

@@ -23,6 +23,10 @@ impl CommGroup {
     /// sound.
     pub fn new(cfg: &CommConfig, members: Vec<usize>) -> Result<Self> {
         let spec = cfg.run.node_spec();
+        anyhow::ensure!(
+            cfg.run.n_nodes == 1,
+            "sub-communicator groups are defined over one node's GPUs"
+        );
         anyhow::ensure!(members.len() >= 2, "group needs ≥2 members");
         anyhow::ensure!(
             members.iter().all(|&m| m < spec.n_gpus),

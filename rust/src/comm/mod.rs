@@ -19,17 +19,21 @@
 pub mod api;
 pub mod group;
 
-use crate::balancer::{initial_tune, RuntimeBalancer, Shares};
+use crate::balancer::{
+    initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares,
+};
 use crate::collectives::exec;
+use crate::collectives::hierarchical::ClusterCollective;
 use crate::collectives::multipath::{MultipathCollective, RunReport};
-use crate::collectives::schedule::{simulate_group, MultipathSpec};
+use crate::collectives::schedule::{simulate_group, MultipathSpec, PathTiming, SimOutcome};
 use crate::collectives::CollectiveKind;
 use crate::config::presets::Preset;
 use crate::config::RunConfig;
 use crate::dtype::{DataType, DeviceBuffer, RedOp};
-use crate::links::PathId;
+use crate::links::{PathId, StripeId};
 use crate::memory::{MemoryLedger, StagingChannel};
 use crate::sim::SimTime;
+use crate::topology::cluster::Cluster;
 use crate::topology::Topology;
 use crate::transport::Fabric;
 use anyhow::Result;
@@ -53,6 +57,14 @@ impl CommConfig {
         }
     }
 
+    /// A hierarchical `n_nodes × n_gpus` cluster communicator config.
+    pub fn cluster(preset: Preset, n_nodes: usize, n_gpus: usize) -> Self {
+        CommConfig {
+            run: RunConfig::cluster(preset, n_nodes, n_gpus),
+            tune_msg_bytes: 256 << 20,
+        }
+    }
+
     /// Auxiliary paths enabled by this config.
     pub fn aux_paths(&self) -> Vec<PathId> {
         let mut v = Vec::new();
@@ -66,6 +78,21 @@ impl CommConfig {
     }
 }
 
+/// Inter-tier detail of one hierarchical (multi-node) collective call.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    /// NIC-stripe shares in effect for this call.
+    pub inter_shares: Shares<StripeId>,
+    /// Per-stripe completion times (the inter balancer's observable).
+    pub inter_times: Vec<(StripeId, SimTime)>,
+    /// Finish of the last intra-node phase-1 task.
+    pub intra_phase1: SimTime,
+    /// Finish of the inter-node phase.
+    pub inter_phase: SimTime,
+    /// Stage-2 stripe adjustment triggered by this call, if any.
+    pub adjusted: Option<crate::balancer::Adjustment<StripeId>>,
+}
+
 /// What one collective call returns alongside its (functional) result.
 #[derive(Debug, Clone)]
 pub struct CollectiveReport {
@@ -73,10 +100,12 @@ pub struct CollectiveReport {
     pub msg_bytes: u64,
     /// DES outcome under the shares used for this call.
     pub sim: RunReport,
-    /// Shares in effect for this call.
+    /// Intra-node shares in effect for this call.
     pub shares: Shares,
-    /// Stage-2 adjustment triggered by this call, if any.
+    /// Stage-2 intra adjustment triggered by this call, if any.
     pub adjusted: Option<crate::balancer::Adjustment>,
+    /// Inter-tier detail; `None` on single-node communicators.
+    pub tiers: Option<TierReport>,
 }
 
 impl CollectiveReport {
@@ -170,9 +199,14 @@ fn typed_msg(bufs: &[DeviceBuffer]) -> Result<(DataType, u64)> {
 pub struct Communicator {
     cfg: CommConfig,
     topo: Topology,
+    /// The full cluster graph (single node = degenerate 1-node cluster).
+    cluster: Cluster,
     ledger: Arc<MemoryLedger>,
     fabric: Fabric,
     ops: HashMap<(CollectiveKind, u32), OpState>,
+    /// Inter-tier (NIC-stripe) balancer per (operator, size class);
+    /// populated only when `n_nodes > 1`.
+    inter_ops: HashMap<(CollectiveKind, u32), RuntimeBalancer<StripeId>>,
     /// Open `group_start` scope, if any.
     group: Option<Vec<PendingCall>>,
     /// Simulated time spent in one-time profiling (≈ the paper's 10 s).
@@ -181,31 +215,47 @@ pub struct Communicator {
 
 impl Communicator {
     /// Initialize: build topology + fabric ("initializes NCCL
-    /// communicators and NVSHMEM contexts", §3.1).
+    /// communicators and NVSHMEM contexts", §3.1). With `n_nodes > 1`
+    /// this also builds the shared cluster fabric, and every collective
+    /// lowers hierarchically.
     pub fn init(cfg: CommConfig) -> Result<Self> {
         cfg.run.validate()?;
         let spec = cfg.run.node_spec();
         let topo = Topology::build(&spec);
+        let cluster = Cluster::build(&cfg.run.cluster_spec());
         let ledger = MemoryLedger::new();
         let chunk = cfg.run.calibration().chunk_bytes as usize;
-        let fabric = Fabric::new(cfg.run.n_gpus, chunk, ledger.clone());
+        let fabric = Fabric::new(cfg.run.n_gpus * cfg.run.n_nodes, chunk, ledger.clone());
         Ok(Communicator {
             cfg,
             topo,
+            cluster,
             ledger,
             fabric,
             ops: HashMap::new(),
+            inter_ops: HashMap::new(),
             group: None,
             profiling_time: SimTime::ZERO,
         })
     }
 
+    /// Global rank count (`n_nodes × n_gpus`); buffers are one per
+    /// global rank.
     pub fn n_ranks(&self) -> usize {
+        self.cfg.run.n_gpus * self.cfg.run.n_nodes
+    }
+
+    /// Ranks per node (the intra-node ring size).
+    pub fn n_local(&self) -> usize {
         self.cfg.run.n_gpus
     }
 
     pub fn topology(&self) -> &Topology {
         &self.topo
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
     }
 
     pub fn ledger(&self) -> &Arc<MemoryLedger> {
@@ -237,8 +287,20 @@ impl Communicator {
             .map_or(0, |s| s.calls)
     }
 
+    /// Intra-node multipath context: rings span the node's local ranks
+    /// even in cluster mode (the intra tier of the hierarchical lowering).
     fn mc(&self, kind: CollectiveKind) -> MultipathCollective<'_> {
-        MultipathCollective::new(&self.topo, self.cfg.run.calibration(), kind, self.n_ranks())
+        MultipathCollective::new(&self.topo, self.cfg.run.calibration(), kind, self.n_local())
+    }
+
+    /// Hierarchical cluster context for multi-node lowering.
+    fn cc(&self, kind: CollectiveKind) -> ClusterCollective<'_> {
+        ClusterCollective::new(
+            &self.cluster,
+            self.cfg.run.calibration(),
+            kind,
+            self.n_local(),
+        )
     }
 
     /// Ensure the (operator, size class) has been through Algorithm 1
@@ -263,16 +325,43 @@ impl Communicator {
         Ok(())
     }
 
+    /// Ensure the (operator, size class) has a tuned inter-tier (NIC
+    /// stripe) distribution — cluster mode only.
+    fn ensure_inter_tuned(&mut self, kind: CollectiveKind, msg_bytes: u64) -> Result<()> {
+        debug_assert!(self.cfg.run.n_nodes > 1);
+        let key = (kind, size_class(msg_bytes));
+        if self.inter_ops.contains_key(&key) {
+            return Ok(());
+        }
+        let tuned = {
+            let cc = self.cc(kind);
+            initial_tune_stripes(&cc, msg_bytes, &self.cfg.run.balancer)?
+        };
+        self.profiling_time += tuned.profiling_time;
+        let rb = RuntimeBalancer::with_preferred(
+            self.cfg.run.balancer.clone(),
+            tuned.shares,
+            None,
+        );
+        self.inter_ops.insert(key, rb);
+        Ok(())
+    }
+
     /// Time a collective on the DES under the current shares and feed the
-    /// stage-2 balancer; inside a `group_start` scope the call is also
+    /// stage-2 balancer(s); inside a `group_start` scope the call is also
     /// enqueued for the fused launch. Shared by every public collective
-    /// entry point — the single timing path.
+    /// entry point — the single timing path. In cluster mode the call
+    /// lowers hierarchically and each tier's balancer observes its own
+    /// completion times.
     fn timed_call(
         &mut self,
         kind: CollectiveKind,
         msg_bytes: u64,
         elem_bytes: u64,
     ) -> Result<CollectiveReport> {
+        if self.cfg.run.n_nodes > 1 {
+            return self.timed_call_cluster(kind, msg_bytes, elem_bytes);
+        }
         self.ensure_tuned(kind, msg_bytes)?;
         let key = (kind, size_class(msg_bytes));
         let shares = self.ops[&key].balancer.shares().clone();
@@ -295,7 +384,97 @@ impl Communicator {
             sim,
             shares,
             adjusted,
+            tiers: None,
         })
+    }
+
+    /// Cluster-mode timing path: hierarchical three-phase DES, per-tier
+    /// share state, per-tier stage-2 observation.
+    fn timed_call_cluster(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+    ) -> Result<CollectiveReport> {
+        // Unsupported kinds must fail before any (expensive, cached)
+        // stage-1 tuning runs.
+        anyhow::ensure!(
+            kind != CollectiveKind::AllToAll,
+            "alltoall has no hierarchical lowering yet (single-node only)"
+        );
+        self.ensure_tuned(kind, msg_bytes)?;
+        self.ensure_inter_tuned(kind, msg_bytes)?;
+        let key = (kind, size_class(msg_bytes));
+        let intra = self.ops[&key].balancer.shares().clone();
+        let inter = self.inter_ops[&key].shares().clone();
+        let tiers = TierShares {
+            intra: intra.clone(),
+            inter: inter.clone(),
+        };
+        let hier = self.cc(kind).run(msg_bytes, &tiers, elem_bytes)?;
+
+        let state = self.ops.get_mut(&key).unwrap();
+        let adjusted = state.balancer.observe(hier.intra_times.clone());
+        state.calls += 1;
+        let inter_adjusted = self
+            .inter_ops
+            .get_mut(&key)
+            .unwrap()
+            .observe(hier.inter_times.clone());
+
+        // Repackage the hierarchical outcome behind the stable RunReport
+        // surface (per intra-path timings + makespan).
+        let per_path: Vec<PathTiming> = intra
+            .to_extents(msg_bytes, elem_bytes)
+            .iter()
+            .map(|(p, _, len)| PathTiming {
+                path: *p,
+                bytes: *len,
+                time: hier
+                    .intra_times
+                    .iter()
+                    .find(|(q, _)| q == p)
+                    .map(|(_, t)| *t)
+                    .unwrap_or(SimTime::ZERO),
+            })
+            .collect();
+        let sim = RunReport {
+            outcome: SimOutcome {
+                total: hier.total,
+                per_path,
+                events: hier.events,
+                tasks: hier.tasks,
+            },
+            msg_bytes,
+            kind,
+        };
+        Ok(CollectiveReport {
+            kind,
+            msg_bytes,
+            sim,
+            shares: intra,
+            adjusted,
+            tiers: Some(TierReport {
+                inter_shares: inter,
+                inter_times: hier.inter_times,
+                intra_phase1: hier.intra_phase1,
+                inter_phase: hier.inter_phase,
+                adjusted: inter_adjusted,
+            }),
+        })
+    }
+
+    /// Current inter-tier (NIC stripe) distribution for an operator at a
+    /// message size; `None` on single-node communicators or before the
+    /// first call of that size class.
+    pub fn inter_shares_of(
+        &self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+    ) -> Option<&Shares<StripeId>> {
+        self.inter_ops
+            .get(&(kind, size_class(msg_bytes)))
+            .map(|rb| rb.shares())
     }
 
     // -----------------------------------------------------------------
@@ -444,8 +623,13 @@ impl Communicator {
 
     /// Open a group: collectives called until [`Self::group_end`] still
     /// execute (functionally and individually timed) and are additionally
-    /// enqueued for one fused DES launch.
+    /// enqueued for one fused DES launch. (Single-node only for now: the
+    /// fused-launch compiler predates the hierarchical lowering.)
     pub fn group_start(&mut self) -> Result<()> {
+        anyhow::ensure!(
+            self.cfg.run.n_nodes == 1,
+            "fused group launches are not yet supported on multi-node communicators"
+        );
         anyhow::ensure!(self.group.is_none(), "group already open");
         self.group = Some(Vec::new());
         Ok(())
@@ -709,6 +893,10 @@ mod tests {
         assert_eq!(c.profiling_time, SimTime::ZERO);
     }
 
+    /// The ONE shim-equivalence test: every other caller has migrated to
+    /// the typed DeviceBuffer surface; this asserts the deprecated f32
+    /// shims (Communicator- and executor-level) remain exact wrappers of
+    /// the typed path until they are deleted.
     #[test]
     #[allow(deprecated)]
     fn legacy_f32_shims_route_through_typed_path() {
@@ -719,6 +907,21 @@ mod tests {
         assert!(rep.algbw_gbps() > 0.0);
         // The shim hits the same stats bucket as the typed call.
         assert_eq!(c.call_count(CollectiveKind::AllReduce, 256 * 4), 1);
+
+        // Executor-level shim ≡ typed executor, bit for bit.
+        let vals = vec![vec![0.75f32; 96], vec![-1.25f32; 96]];
+        let ext = Shares::from_pcts(&[(PathId::Nvlink, 80.0), (PathId::Pcie, 20.0)])
+            .to_extents(96 * 4, 4);
+        let shim_fabric = Fabric::new(2, 256, MemoryLedger::new());
+        let mut shim_bufs = vals.clone();
+        exec::all_reduce_f32(&shim_fabric, &ext, &mut shim_bufs).unwrap();
+        let typed_fabric = Fabric::new(2, 256, MemoryLedger::new());
+        let mut typed_bufs: Vec<DeviceBuffer> =
+            vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect();
+        exec::all_reduce(&typed_fabric, &ext, &mut typed_bufs, RedOp::Sum).unwrap();
+        for (s, t) in shim_bufs.iter().zip(&typed_bufs) {
+            assert_eq!(s, &t.to_f32_vec(), "shim diverged from typed executor");
+        }
     }
 
     #[test]
@@ -744,6 +947,43 @@ mod tests {
         // Functional results still correct under grouping.
         assert!(ar[0].to_f32_vec().iter().all(|&v| v == 4.0));
         assert_eq!(ag_out[0].len(), 4 * 4096);
+    }
+
+    #[test]
+    fn cluster_communicator_runs_hierarchically() {
+        // 2 nodes × 2 GPUs = 4 global ranks.
+        let mut cfg = CommConfig::cluster(Preset::H800, 2, 2);
+        cfg.tune_msg_bytes = 16 << 20;
+        let mut c = Communicator::init(cfg).unwrap();
+        assert_eq!(c.n_ranks(), 4);
+        assert_eq!(c.n_local(), 2);
+        assert_eq!(c.cluster().n_nodes(), 2);
+
+        let mut bufs = f32_bufs(&vec![vec![1.0f32; 1024]; 4]);
+        let rep = c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
+        // Functionally exact: 1+1+1+1 = 4 on every global rank.
+        for b in &bufs {
+            assert!(b.to_f32_vec().iter().all(|&v| v == 4.0));
+        }
+        // Per-tier detail present, stripes covered, phases ordered.
+        let tiers = rep.tiers.as_ref().expect("cluster call must carry tiers");
+        assert_eq!(tiers.inter_times.len(), 2);
+        assert!((tiers.inter_shares.total() - 100.0).abs() < 1e-6);
+        assert!(tiers.inter_phase <= rep.time());
+        assert!(rep.time() > SimTime::ZERO);
+        // Inter-tier share state is now cached for this size class.
+        assert!(c.inter_shares_of(CollectiveKind::AllReduce, 1024 * 4).is_some());
+        // Fused groups are single-node only.
+        assert!(c.group_start().is_err());
+    }
+
+    #[test]
+    fn single_node_reports_carry_no_tiers() {
+        let mut c = comm(2);
+        let mut bufs = f32_bufs(&[vec![1.0f32; 256], vec![1.0f32; 256]]);
+        let rep = c.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
+        assert!(rep.tiers.is_none());
+        assert!(c.inter_shares_of(CollectiveKind::AllReduce, 256 * 4).is_none());
     }
 
     #[test]

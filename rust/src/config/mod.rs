@@ -58,8 +58,14 @@ impl Default for BalancerConfig {
 pub struct RunConfig {
     /// Hardware preset name (h800, h100, a800, gb200, gb300) or "custom".
     pub preset: Preset,
-    /// GPUs participating in the collective (≤ node GPU count).
+    /// GPUs participating in the collective *per node* (≤ node GPU count).
     pub n_gpus: usize,
+    /// Nodes in the cluster; 1 = the classic single-server FlexLink
+    /// setup, >1 builds the hierarchical cluster fabric.
+    pub n_nodes: usize,
+    /// Spine oversubscription factor of the inter-node fabric (≥ 1;
+    /// 1 = full bisection). Ignored when `n_nodes == 1`.
+    pub spine_oversub: f64,
     pub balancer: BalancerConfig,
     /// Override the node spec entirely (when preset == Custom).
     pub node: Option<NodeSpec>,
@@ -80,6 +86,8 @@ impl RunConfig {
         RunConfig {
             preset,
             n_gpus,
+            n_nodes: 1,
+            spine_oversub: 1.0,
             balancer: BalancerConfig::default(),
             node: None,
             disable_rdma: false,
@@ -88,11 +96,31 @@ impl RunConfig {
         }
     }
 
+    /// As [`Self::new`], for an `n_nodes`-node cluster.
+    pub fn cluster(preset: Preset, n_nodes: usize, n_gpus: usize) -> Self {
+        let mut cfg = Self::new(preset, n_gpus);
+        cfg.n_nodes = n_nodes;
+        cfg
+    }
+
     /// Resolve the hardware spec (preset or custom override).
     pub fn node_spec(&self) -> NodeSpec {
         match (&self.node, self.preset) {
             (Some(spec), _) => spec.clone(),
             (None, p) => p.spec(),
+        }
+    }
+
+    /// The full cluster shape this run simulates (n_nodes = 1 degenerates
+    /// to the plain single-node topology).
+    pub fn cluster_spec(&self) -> crate::topology::cluster::ClusterSpec {
+        crate::topology::cluster::ClusterSpec {
+            n_nodes: self.n_nodes,
+            node: self.node_spec(),
+            fabric: crate::topology::cluster::InterNodeFabric {
+                oversubscription: self.spine_oversub,
+                ..Default::default()
+            },
         }
     }
 
@@ -116,7 +144,8 @@ impl RunConfig {
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let doc = KvDoc::parse(text)?;
         const KNOWN: &[&str] = &[
-            "preset", "n_gpus", "disable_rdma", "disable_pcie", "seed",
+            "preset", "n_gpus", "n_nodes", "spine_oversub",
+            "disable_rdma", "disable_pcie", "seed",
             "balancer.initial_step_pct", "balancer.convergence_threshold",
             "balancer.stability_required", "balancer.max_iterations",
             "balancer.window", "balancer.runtime_threshold",
@@ -148,6 +177,8 @@ impl RunConfig {
         Ok(RunConfig {
             preset,
             n_gpus: doc.usize_or("n_gpus", preset.spec().n_gpus),
+            n_nodes: doc.usize_or("n_nodes", 1),
+            spine_oversub: doc.f64_or("spine_oversub", 1.0),
             balancer,
             node: None,
             disable_rdma: doc.bool_or("disable_rdma", false),
@@ -161,6 +192,8 @@ impl RunConfig {
         let mut doc = KvDoc::default();
         doc.set("preset", Value::Str(self.preset.to_string()));
         doc.set("n_gpus", Value::Int(self.n_gpus as i64));
+        doc.set("n_nodes", Value::Int(self.n_nodes as i64));
+        doc.set("spine_oversub", Value::Float(self.spine_oversub));
         doc.set("disable_rdma", Value::Bool(self.disable_rdma));
         doc.set("disable_pcie", Value::Bool(self.disable_pcie));
         doc.set("seed", Value::Int(self.seed as i64));
@@ -198,6 +231,15 @@ impl RunConfig {
         anyhow::ensure!(
             self.n_gpus.is_power_of_two(),
             "ring schedules here require power-of-two GPU counts (paper uses 2/4/8)"
+        );
+        anyhow::ensure!(
+            self.n_nodes >= 1 && self.n_nodes.is_power_of_two(),
+            "n_nodes must be a power of two ≥ 1, got {}",
+            self.n_nodes
+        );
+        anyhow::ensure!(
+            self.spine_oversub >= 1.0 && self.spine_oversub.is_finite(),
+            "spine_oversub must be ≥ 1"
         );
         let b = &self.balancer;
         anyhow::ensure!(b.initial_step_pct > 0.0, "initial_step_pct must be > 0");
@@ -246,5 +288,26 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(RunConfig::from_toml_str("prest = \"h800\"").is_err());
+    }
+
+    #[test]
+    fn cluster_fields_roundtrip_and_validate() {
+        let mut cfg = RunConfig::cluster(Preset::H800, 4, 8);
+        cfg.spine_oversub = 2.0;
+        cfg.validate().unwrap();
+        let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.n_nodes, 4);
+        assert!((back.spine_oversub - 2.0).abs() < 1e-9);
+        let spec = back.cluster_spec();
+        assert_eq!(spec.n_nodes, 4);
+        assert!((spec.fabric.oversubscription - 2.0).abs() < 1e-9);
+
+        // Defaults stay single-node.
+        assert_eq!(RunConfig::new(Preset::H800, 8).n_nodes, 1);
+        // Non-pow2 node counts rejected.
+        assert!(RunConfig::cluster(Preset::H800, 3, 8).validate().is_err());
+        let mut bad = RunConfig::new(Preset::H800, 8);
+        bad.spine_oversub = 0.5;
+        assert!(bad.validate().is_err());
     }
 }

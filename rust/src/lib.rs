@@ -23,7 +23,11 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: [`comm::Communicator`]
 //!   (NCCL-compatible API), multi-path [`collectives`], the two-stage
-//!   [`balancer`], the NCCL [`baseline`], plus every substrate.
+//!   [`balancer`], the NCCL [`baseline`], plus every substrate. Beyond the
+//!   paper's single server, [`topology::cluster`] models hierarchical
+//!   multi-node deployments ([`collectives::hierarchical`] lowers each
+//!   collective to intra-node → NIC-striped inter-node → intra-node
+//!   phases, with an independent balancer per tier).
 //! * **L2 (python/compile/model.py)** — JAX transformer fwd/bwd, AOT-lowered
 //!   to HLO text, executed from Rust via [`runtime`] (PJRT CPU).
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (ReduceScatter

@@ -58,6 +58,29 @@ impl fmt::Display for PathId {
     }
 }
 
+/// One inter-node NIC stripe: the uplink of local GPU `g` carrying its
+/// slice of a hierarchical collective's cross-node phase. Stripes are the
+/// *inter-tier* analogue of [`PathId`]: the per-tier balancer equalizes
+/// completion times across them exactly as it does across intra paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StripeId(pub u32);
+
+impl StripeId {
+    /// Task-graph metrics tag. Intra paths own tags 1..=3; stripes start
+    /// above them so one hierarchical graph can carry both.
+    pub const TAG_BASE: u32 = 8;
+
+    pub fn tag(self) -> u32 {
+        Self::TAG_BASE + self.0
+    }
+}
+
+impl fmt::Display for StripeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "nic{}", self.0)
+    }
+}
+
 /// Protocol model of one path, consumed by the collective builders.
 #[derive(Debug, Clone, Copy)]
 pub struct PathModel {
@@ -102,6 +125,15 @@ mod tests {
         assert_eq!(PathId::Nvlink.to_string(), "nvlink");
         assert_eq!(PathId::Pcie.to_string(), "pcie");
         assert_eq!(PathId::Rdma.to_string(), "rdma");
+    }
+
+    #[test]
+    fn stripe_tags_clear_path_tags() {
+        for p in PathId::ALL {
+            assert!(StripeId(0).tag() > p.tag());
+        }
+        assert_eq!(StripeId(3).tag(), StripeId::TAG_BASE + 3);
+        assert_eq!(StripeId(5).to_string(), "nic5");
     }
 
     #[test]

@@ -35,9 +35,12 @@ COMMANDS:
   train   --model tiny|gpt10m|gpt100m --gpus <n> --steps <k>
           [--artifacts <dir>] [--csv <path>]
           data-parallel training with FlexLink gradient AllReduce
-  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group> [--csv <path>]
-          regenerate a paper table/figure
-  topo    --preset <p>
+  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster>
+          [--nodes <n>] [--csv <path>]
+          regenerate a paper table/figure; --nodes routes table2 through
+          the hierarchical cluster compiler (1 = bit-identical degenerate
+          case) and `cluster` sweeps 1/2/4/8 nodes with per-tier algbw
+  topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
 Collective kinds: allreduce, allgather, reduce_scatter, broadcast, alltoall
@@ -76,7 +79,8 @@ fn main() -> Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .unwrap_or("table2");
-            repro(what, args.flag("csv"))
+            let nodes = args.flag("nodes").map(|s| s.parse::<usize>()).transpose()?;
+            repro(what, nodes, args.flag("csv"))
         }
         Some("topo") => {
             let spec = preset.spec();
@@ -92,6 +96,23 @@ fn main() -> Result<()> {
                 spec.idle_bw_opportunity() * 100.0
             );
             println!("  resources: {}", topo.pool.len());
+            let nodes = args.usize_or("nodes", 1)?;
+            if nodes > 1 {
+                use flexlink::topology::cluster::{Cluster, ClusterSpec};
+                let cluster = Cluster::build(&ClusterSpec::new(nodes, spec.clone()));
+                let spine = cluster.spine.expect("multi-node cluster has a spine");
+                println!(
+                    "  cluster: {} nodes, {} global GPUs, {} shared resources",
+                    cluster.n_nodes(),
+                    cluster.n_global_gpus(),
+                    cluster.pool.len()
+                );
+                println!(
+                    "  spine: {:.0} GB/s ({}:1 oversubscription)",
+                    cluster.pool.capacity(spine) / 1e9,
+                    cluster.spec.fabric.oversubscription
+                );
+            }
             Ok(())
         }
         _ => {
@@ -228,9 +249,20 @@ fn train(
     Ok(())
 }
 
-fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
+fn repro(what: &str, nodes: Option<usize>, csv_path: Option<&str>) -> Result<()> {
     let topo = Topology::build(&Preset::H800.spec());
     let cfg = BalancerConfig::default();
+    anyhow::ensure!(
+        nodes.is_none() || matches!(what, "table2" | "cluster"),
+        "--nodes only applies to the table2 and cluster targets ('{what}' is single-node)"
+    );
+    if let Some(n) = nodes {
+        // Same rule RunConfig::validate enforces for TOML configs.
+        anyhow::ensure!(
+            n >= 1 && n.is_power_of_two(),
+            "--nodes must be a power of two ≥ 1, got {n}"
+        );
+    }
     match what {
         "table1" => {
             let rows = bh::table1();
@@ -252,7 +284,13 @@ fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
             }
         }
         "table2" => {
-            let rows = bh::table2(&topo, &cfg)?;
+            // `--nodes` routes through the hierarchical cluster compiler;
+            // `--nodes 1` is the degenerate case and reproduces the plain
+            // single-node numbers bit-identically.
+            let rows = match nodes {
+                Some(n) => bh::table2_cluster(n, &cfg)?,
+                None => bh::table2(&topo, &cfg)?,
+            };
             print!("{}", bh::render_table2(&rows));
             if let Some(p) = csv_path {
                 let mut csv = Csv::new(&[
@@ -347,6 +385,56 @@ fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
                 b.comm_fraction * 100.0
             );
         }
+        "cluster" => {
+            // The multi-node scaling sweep: 1/2/4/8 nodes × message
+            // sizes, hierarchical vs the naive flat NIC ring, per-tier
+            // algbw. `--nodes` restricts the sweep to one node count.
+            let node_counts: Vec<usize> = match nodes {
+                Some(n) => vec![n],
+                None => vec![1, 2, 4, 8],
+            };
+            let sizes = [64u64, 256];
+            let mut all = Vec::new();
+            for op in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+                all.extend(bh::cluster_sweep(
+                    Preset::H800,
+                    op,
+                    &node_counts,
+                    &sizes,
+                    &cfg,
+                )?);
+            }
+            print!("{}", bh::render_cluster_sweep(&all));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "op",
+                    "nodes",
+                    "mib",
+                    "total_ms",
+                    "algbw",
+                    "intra_ms",
+                    "intra_algbw",
+                    "inter_ms",
+                    "inter_algbw",
+                    "flat_ring_ms",
+                ]);
+                for r in &all {
+                    csv.row(&[
+                        r.op.to_string(),
+                        r.n_nodes.to_string(),
+                        r.msg_mib.to_string(),
+                        format!("{:.4}", r.total_ms),
+                        format!("{:.2}", r.algbw_gbps),
+                        format!("{:.4}", r.intra_ms),
+                        format!("{:.2}", r.intra_algbw_gbps),
+                        format!("{:.4}", r.inter_ms),
+                        format!("{:.2}", r.inter_algbw_gbps),
+                        format!("{:.4}", r.flat_ring_ms),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
         "group" => {
             let r = bh::group_fusion(
                 Preset::H800,
@@ -383,7 +471,7 @@ fn repro(what: &str, csv_path: Option<&str>) -> Result<()> {
             println!("  one-time profiling (simulated): {:.2}s", o.profiling_time_s);
         }
         other => anyhow::bail!(
-            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group)"
+            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster)"
         ),
     }
     Ok(())

@@ -85,6 +85,21 @@ impl ResourcePool {
         self.resources[id.0 as usize].capacity_bps *= factor;
     }
 
+    /// Scale every resource whose name contains `needle` (cluster-scale
+    /// failure injection: degrade one node's NICs, a whole spine, ...).
+    /// Returns how many resources matched.
+    pub fn scale_matching(&mut self, needle: &str, factor: f64) -> usize {
+        assert!(factor > 0.0 && factor.is_finite());
+        let mut hit = 0;
+        for r in self.resources.iter_mut() {
+            if r.name.contains(needle) {
+                r.capacity_bps *= factor;
+                hit += 1;
+            }
+        }
+        hit
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (ResourceId, &Resource)> {
         self.resources
             .iter()
@@ -115,6 +130,19 @@ mod tests {
         let a = pool.add("x", 100.0);
         pool.scale_capacity(a, 0.5);
         assert_eq!(pool.capacity(a), 50.0);
+    }
+
+    #[test]
+    fn scale_matching_hits_by_substring() {
+        let mut pool = ResourcePool::new();
+        let a = pool.add("node0.nic.up.gpu0", 100.0);
+        let b = pool.add("node0.nic.up.gpu1", 100.0);
+        let c = pool.add("node1.nic.up.gpu0", 100.0);
+        assert_eq!(pool.scale_matching("node0.nic", 0.5), 2);
+        assert_eq!(pool.capacity(a), 50.0);
+        assert_eq!(pool.capacity(b), 50.0);
+        assert_eq!(pool.capacity(c), 100.0);
+        assert_eq!(pool.scale_matching("absent", 2.0), 0);
     }
 
     #[test]

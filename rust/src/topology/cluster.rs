@@ -1,0 +1,278 @@
+//! Hierarchical cluster topology: N copies of the intra-node graph plus
+//! an inter-node RDMA fabric, all in ONE shared [`ResourcePool`].
+//!
+//! ```text
+//!   node0 ─ nic.up.gpu g ─┐                   ┌─ nic.down.gpu g ─ node1
+//!   node2 ─ nic.up.gpu g ─┼──▶ spine (×1/f) ──┼─ nic.down.gpu g ─ node3
+//!   ...                   └───────────────────┘
+//! ```
+//!
+//! Every node keeps its full intra-node resource graph (NVLink lanes,
+//! PCIe root ports, per-GPU NICs, NUMA host memory); cross-node flows
+//! route `nic.up[src] → spine → nic.down[dst]` (plus the PCIe legs on
+//! path-contended platforms, §2.2.2 — the same lane squeeze the
+//! single-node RDMA path models). The spine is a single oversubscribable
+//! resource: capacity = total NIC uplink / oversubscription factor `f`,
+//! so rail-striped traffic contends there the moment `f > 1`. Because
+//! everything lives in one pool, one hierarchical task graph prices
+//! cross-tier contention (e.g. intra-node staging vs. NIC uplinks on the
+//! same PCIe lane) with no extra machinery.
+//!
+//! The single-node case degenerates exactly: `n_nodes == 1` builds the
+//! plain [`Topology`] with identical resource ids and no spine.
+
+use super::{GpuId, Topology};
+use crate::config::presets::NodeSpec;
+use crate::sim::{ResourceId, ResourcePool};
+
+/// Rank across the whole cluster; `g = node * gpus_per_node + local`.
+pub type GlobalGpuId = usize;
+
+/// The inter-node fabric connecting the per-GPU NICs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InterNodeFabric {
+    /// Spine oversubscription factor `f ≥ 1`: spine capacity is the total
+    /// NIC uplink bandwidth divided by `f` (1 = full bisection).
+    pub oversubscription: f64,
+    /// Per-hop switch/propagation latency charged on every inter-node
+    /// ring step, µs.
+    pub hop_latency_us: f64,
+}
+
+impl Default for InterNodeFabric {
+    fn default() -> Self {
+        InterNodeFabric {
+            oversubscription: 1.0,
+            hop_latency_us: 2.0,
+        }
+    }
+}
+
+impl InterNodeFabric {
+    /// Non-blocking (full-bisection) fabric.
+    pub fn full_bisection() -> Self {
+        Self::default()
+    }
+
+    /// Oversubscribed fabric (e.g. 4:1 spine).
+    pub fn oversubscribed(factor: f64) -> Self {
+        assert!(factor >= 1.0, "oversubscription factor must be ≥ 1");
+        InterNodeFabric {
+            oversubscription: factor,
+            ..Self::default()
+        }
+    }
+}
+
+/// Shape of one cluster: N identical nodes plus the fabric between them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub node: NodeSpec,
+    pub fabric: InterNodeFabric,
+}
+
+impl ClusterSpec {
+    pub fn new(n_nodes: usize, node: NodeSpec) -> Self {
+        ClusterSpec {
+            n_nodes,
+            node,
+            fabric: InterNodeFabric::default(),
+        }
+    }
+}
+
+/// The built cluster resource graph: per-node [`Topology`] views whose
+/// [`ResourceId`]s all index the shared `pool`.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub spec: ClusterSpec,
+    /// The one pool every node's resources (and the spine) live in.
+    pub pool: ResourcePool,
+    nodes: Vec<Topology>,
+    /// The spine resource; `None` in the degenerate single-node cluster.
+    pub spine: Option<ResourceId>,
+}
+
+impl Cluster {
+    pub fn build(spec: &ClusterSpec) -> Self {
+        assert!(spec.n_nodes >= 1, "cluster needs at least one node");
+        if spec.n_nodes == 1 {
+            // Degenerate case: exactly the single-node topology — same
+            // resource ids, same names, no spine.
+            let t = Topology::build(&spec.node);
+            let pool = t.pool.clone();
+            return Cluster {
+                spec: spec.clone(),
+                pool,
+                nodes: vec![t],
+                spine: None,
+            };
+        }
+        let mut pool = ResourcePool::new();
+        let mut nodes: Vec<Topology> = (0..spec.n_nodes)
+            .map(|k| Topology::build_into(&spec.node, &mut pool, &format!("node{k}.")))
+            .collect();
+        let total_uplink =
+            spec.node.nic_unidir_bps() * (spec.node.n_gpus * spec.n_nodes) as f64;
+        let spine = pool.add(
+            "spine",
+            total_uplink / spec.fabric.oversubscription.max(1.0),
+        );
+        // Install the finished shared pool into every node view so
+        // per-node code (GraphBuilder etc.) can read capacities.
+        for t in nodes.iter_mut() {
+            t.pool = pool.clone();
+        }
+        Cluster {
+            spec: spec.clone(),
+            pool,
+            nodes,
+            spine: Some(spine),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.spec.n_nodes
+    }
+
+    pub fn gpus_per_node(&self) -> usize {
+        self.spec.node.n_gpus
+    }
+
+    /// Total GPUs across the cluster.
+    pub fn n_global_gpus(&self) -> usize {
+        self.n_nodes() * self.gpus_per_node()
+    }
+
+    /// Per-node topology view. Its `ResourceId`s index the shared
+    /// [`Cluster::pool`]; the view's own `pool` field is a build-time
+    /// *snapshot* kept for capacity reads — mutate capacities (failure
+    /// injection) through `cluster.pool`, which every simulation path
+    /// reads, not through a node view.
+    pub fn node(&self, k: usize) -> &Topology {
+        &self.nodes[k]
+    }
+
+    /// Global rank ↔ (node, local) mapping.
+    pub fn locate(&self, g: GlobalGpuId) -> (usize, GpuId) {
+        debug_assert!(g < self.n_global_gpus());
+        (g / self.gpus_per_node(), g % self.gpus_per_node())
+    }
+
+    pub fn global_id(&self, node: usize, local: GpuId) -> GlobalGpuId {
+        debug_assert!(node < self.n_nodes() && local < self.gpus_per_node());
+        node * self.gpus_per_node() + local
+    }
+
+    /// Route of one cross-node RDMA put on NIC stripe `nic`:
+    /// `nic.up[src] → spine → nic.down[dst]`, wrapped in the PCIe legs on
+    /// path-contended platforms (the §2.2.2 lane squeeze). `src_nic` and
+    /// `dst_nic` may differ (the naive flat ring enters a node on NIC 0).
+    pub fn uplink_route(
+        &self,
+        src_node: usize,
+        src_nic: GpuId,
+        dst_node: usize,
+        dst_nic: GpuId,
+    ) -> Vec<ResourceId> {
+        debug_assert_ne!(src_node, dst_node);
+        let s = &self.nodes[src_node];
+        let d = &self.nodes[dst_node];
+        let mut route = Vec::with_capacity(6);
+        if self.spec.node.path_contention {
+            route.push(s.pcie_up[src_nic]);
+        }
+        route.push(s.nic_up[src_nic]);
+        if let Some(sp) = self.spine {
+            route.push(sp);
+        }
+        route.push(d.nic_down[dst_nic]);
+        if self.spec.node.path_contention {
+            route.push(d.pcie_down[dst_nic]);
+        }
+        route
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    fn h800_cluster(n_nodes: usize) -> Cluster {
+        Cluster::build(&ClusterSpec::new(n_nodes, Preset::H800.spec()))
+    }
+
+    #[test]
+    fn single_node_degenerates_to_plain_topology() {
+        let c = h800_cluster(1);
+        let t = Topology::build(&Preset::H800.spec());
+        assert!(c.spine.is_none());
+        assert_eq!(c.pool.len(), t.pool.len());
+        assert_eq!(c.node(0).nvlink_up, t.nvlink_up);
+        assert_eq!(c.node(0).pool.find("nvlink.up.gpu0"), t.pool.find("nvlink.up.gpu0"));
+        assert_eq!(c.n_global_gpus(), 8);
+    }
+
+    #[test]
+    fn multi_node_shares_one_pool() {
+        let c = h800_cluster(4);
+        assert_eq!(c.n_global_gpus(), 32);
+        // 4 nodes × (6 per-GPU resources × 8 GPUs + 2 NUMA) + spine.
+        assert_eq!(c.pool.len(), 4 * (6 * 8 + 2) + 1);
+        // Node views index disjoint id ranges of the same pool.
+        assert_ne!(c.node(0).nvlink_up[0], c.node(1).nvlink_up[0]);
+        assert_eq!(
+            c.pool.get(c.node(2).nic_up[3]).name,
+            "node2.nic.up.gpu3"
+        );
+        // Per-node capacities match the single-node build.
+        let t = Topology::build(&Preset::H800.spec());
+        assert_eq!(
+            c.pool.capacity(c.node(3).pcie_up[0]),
+            t.pool.capacity(t.pcie_up[0])
+        );
+    }
+
+    #[test]
+    fn global_rank_mapping_roundtrips() {
+        let c = h800_cluster(2);
+        for g in 0..c.n_global_gpus() {
+            let (k, l) = c.locate(g);
+            assert_eq!(c.global_id(k, l), g);
+        }
+        assert_eq!(c.locate(9), (1, 1));
+    }
+
+    #[test]
+    fn spine_capacity_tracks_oversubscription() {
+        let full = h800_cluster(2);
+        let spine = full.spine.unwrap();
+        // 2 nodes × 8 NICs × 25 GB/s unidir = 400 GB/s.
+        assert!((full.pool.capacity(spine) - 400e9).abs() < 1.0);
+        let mut spec = ClusterSpec::new(2, Preset::H800.spec());
+        spec.fabric = InterNodeFabric::oversubscribed(4.0);
+        let over = Cluster::build(&spec);
+        assert!((over.pool.capacity(over.spine.unwrap()) - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn uplink_route_respects_path_contention() {
+        let c = h800_cluster(2);
+        let r = c.uplink_route(0, 3, 1, 3);
+        // Contended H800: pcie.up → nic.up → spine → nic.down → pcie.down.
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0], c.node(0).pcie_up[3]);
+        assert_eq!(r[1], c.node(0).nic_up[3]);
+        assert_eq!(r[2], c.spine.unwrap());
+        assert_eq!(r[3], c.node(1).nic_down[3]);
+        assert_eq!(r[4], c.node(1).pcie_down[3]);
+
+        let gb = Cluster::build(&ClusterSpec::new(2, Preset::Gb300.spec()));
+        let r = gb.uplink_route(1, 0, 0, 2);
+        assert_eq!(r.len(), 3, "decoupled platform skips the PCIe legs");
+        assert_eq!(r[0], gb.node(1).nic_up[0]);
+        assert_eq!(r[2], gb.node(0).nic_down[2]);
+    }
+}

@@ -14,6 +14,7 @@
 //! (`path_contention = false`) the NIC hangs off its own lane, so RDMA
 //! routes skip the shared PCIe resource.
 
+pub mod cluster;
 pub mod numa;
 
 use crate::config::presets::NodeSpec;
@@ -46,11 +47,23 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Build the resource graph for `spec`.
+    /// Build the resource graph for `spec` with its own private pool.
     pub fn build(spec: &NodeSpec) -> Self {
+        let mut pool = ResourcePool::new();
+        let mut t = Self::build_into(spec, &mut pool, "");
+        t.pool = pool;
+        t
+    }
+
+    /// Append this node's resources to an existing — possibly shared —
+    /// pool, name-prefixed (`node3.nvlink.up.gpu0` …). The returned view
+    /// carries an *empty* `pool`; the caller (see
+    /// [`cluster::Cluster::build`]) installs the finished shared pool so
+    /// every node's `ResourceId`s index into it. With an empty prefix and
+    /// a fresh pool this is exactly the single-node [`Topology::build`].
+    pub fn build_into(spec: &NodeSpec, pool: &mut ResourcePool, prefix: &str) -> Self {
         let n = spec.n_gpus;
         assert!(n >= 2, "topology needs ≥2 GPUs");
-        let mut pool = ResourcePool::new();
         let mut nvlink_up = Vec::with_capacity(n);
         let mut nvlink_down = Vec::with_capacity(n);
         let mut pcie_up = Vec::with_capacity(n);
@@ -59,19 +72,19 @@ impl Topology {
         let mut nic_down = Vec::with_capacity(n);
 
         for g in 0..n {
-            nvlink_up.push(pool.add(format!("nvlink.up.gpu{g}"), spec.nvlink_unidir_bps()));
-            nvlink_down.push(pool.add(format!("nvlink.down.gpu{g}"), spec.nvlink_unidir_bps()));
-            pcie_up.push(pool.add(format!("pcie.up.gpu{g}"), spec.pcie_unidir_bps()));
-            pcie_down.push(pool.add(format!("pcie.down.gpu{g}"), spec.pcie_unidir_bps()));
-            nic_up.push(pool.add(format!("nic.up.gpu{g}"), spec.nic_unidir_bps()));
-            nic_down.push(pool.add(format!("nic.down.gpu{g}"), spec.nic_unidir_bps()));
+            nvlink_up.push(pool.add(format!("{prefix}nvlink.up.gpu{g}"), spec.nvlink_unidir_bps()));
+            nvlink_down.push(pool.add(format!("{prefix}nvlink.down.gpu{g}"), spec.nvlink_unidir_bps()));
+            pcie_up.push(pool.add(format!("{prefix}pcie.up.gpu{g}"), spec.pcie_unidir_bps()));
+            pcie_down.push(pool.add(format!("{prefix}pcie.down.gpu{g}"), spec.pcie_unidir_bps()));
+            nic_up.push(pool.add(format!("{prefix}nic.up.gpu{g}"), spec.nic_unidir_bps()));
+            nic_down.push(pool.add(format!("{prefix}nic.down.gpu{g}"), spec.nic_unidir_bps()));
         }
 
         let numa_of = numa::assign(n, spec.numa_nodes);
         let hostmem = (0..spec.numa_nodes.max(1))
             .map(|i| {
                 pool.add(
-                    format!("hostmem.numa{i}"),
+                    format!("{prefix}hostmem.numa{i}"),
                     spec.host_mem_gbps * 1e9 / spec.numa_nodes.max(1) as f64,
                 )
             })
@@ -79,7 +92,7 @@ impl Topology {
 
         Topology {
             spec: spec.clone(),
-            pool,
+            pool: ResourcePool::new(),
             nvlink_up,
             nvlink_down,
             pcie_up,

@@ -89,6 +89,90 @@ fn stage2_is_quiet_at_tuning_point() {
     assert!(drift <= 1.5, "nvlink share drifted {drift:.1} points");
 }
 
+/// Stage-2 under a hardware step change: when the NVLink lanes degrade
+/// *after* tuning, the runtime balancer must (a) not react to a single
+/// transient spike, and (b) once the degradation is sustained, start
+/// draining NVLink within one Evaluator window and end up no slower than
+/// the stale distribution.
+#[test]
+fn stage2_converges_after_nvlink_step_change_but_ignores_spikes() {
+    let op = CollectiveKind::AllGather;
+    let msg = 128u64 << 20;
+    let healthy = h800();
+    let mut degraded_topo = h800();
+    // Halve every NVLink lane: the calibrated protocol rate (148 GB/s)
+    // now exceeds the physical 100 GB/s, so the NVLink path slows ~1.5×.
+    for g in 0..8 {
+        degraded_topo.pool.scale_capacity(degraded_topo.nvlink_up[g], 0.5);
+        degraded_topo.pool.scale_capacity(degraded_topo.nvlink_down[g], 0.5);
+    }
+    let mc = MultipathCollective::new(&healthy, Calibration::h800(), op, 8);
+    let mc_deg = MultipathCollective::new(&degraded_topo, Calibration::h800(), op, 8);
+
+    let mut cfg = BalancerConfig::default();
+    let tuned = initial_tune(&mc, msg, &cfg, &[PathId::Pcie, PathId::Rdma]).unwrap();
+
+    // Self-calibrate the trigger threshold between the healthy and the
+    // degraded single-call gaps, so the windowed mean of one spike stays
+    // below it while a sustained shift crosses it.
+    let gap = |times: &[(PathId, flexlink::sim::SimTime)]| {
+        let mut ts: Vec<f64> = times.iter().map(|t| t.1.as_secs_f64()).collect();
+        ts.sort_by(f64::total_cmp);
+        (ts[ts.len() - 1] - ts[0]) / ts[0]
+    };
+    let g_healthy = gap(&mc.run(msg, &tuned.shares).unwrap().path_times());
+    let g_degraded = gap(&mc_deg.run(msg, &tuned.shares).unwrap().path_times());
+    assert!(
+        g_degraded > g_healthy + 0.05,
+        "degradation not observable: healthy gap {g_healthy:.3}, degraded {g_degraded:.3}"
+    );
+    cfg.window = 10;
+    cfg.runtime_threshold = g_healthy + 0.6 * (g_degraded - g_healthy);
+
+    let mut rb = RuntimeBalancer::new(cfg.clone(), tuned.shares.clone());
+    // Steady healthy traffic: a full window plus slack, no action.
+    for _ in 0..cfg.window + 5 {
+        let rep = mc.run(msg, rb.shares()).unwrap();
+        assert!(rb.observe(rep.path_times()).is_none(), "fired on healthy load");
+    }
+    // One transient spike (a single degraded call) must be damped away.
+    let spike = mc_deg.run(msg, rb.shares()).unwrap();
+    assert!(
+        rb.observe(spike.path_times()).is_none(),
+        "reacted to a single-call transient spike"
+    );
+    assert!(rb.adjustments().is_empty());
+
+    // Sustained step change: the balancer must act within one window of
+    // degraded samples and move share *off* the NVLink path.
+    let switch = rb.calls();
+    let t_stale = mc_deg.run(msg, &tuned.shares).unwrap().total();
+    for _ in 0..4 * cfg.window {
+        let rep = mc_deg.run(msg, rb.shares()).unwrap();
+        rb.observe(rep.path_times());
+    }
+    let adjs = rb.adjustments();
+    assert!(!adjs.is_empty(), "never adapted to the sustained step change");
+    assert!(
+        adjs[0].at_call <= switch + cfg.window as u64,
+        "first adjustment at call {} — later than one window after the switch at {}",
+        adjs[0].at_call,
+        switch
+    );
+    assert_eq!(adjs[0].from, PathId::Nvlink, "drained the wrong path");
+    // Converged toward the new optimum: the adapted shares are no slower
+    // on the degraded hardware than the stale tuning, and NVLink holds a
+    // strictly smaller share.
+    let t_adapted = mc_deg.run(msg, rb.shares()).unwrap().total();
+    assert!(
+        t_adapted <= t_stale,
+        "adapted {} slower than stale {}",
+        t_adapted,
+        t_stale
+    );
+    assert!(rb.shares().get(PathId::Nvlink) < tuned.shares.get(PathId::Nvlink));
+}
+
 /// Disabled-path configurations tune correctly (PCIe-only column).
 #[test]
 fn pcie_only_mode_never_assigns_rdma() {

@@ -6,6 +6,7 @@ use flexlink::balancer::Shares;
 use flexlink::collectives::multipath::MultipathCollective;
 use flexlink::collectives::{exec, CollectiveKind};
 use flexlink::config::presets::Preset;
+use flexlink::dtype::{DataType, DeviceBuffer, RedOp};
 use flexlink::links::calib::Calibration;
 use flexlink::links::PathId;
 use flexlink::memory::MemoryLedger;
@@ -55,7 +56,7 @@ fn functional_allreduce_32mb_8ranks() {
         (PathId::Rdma, 7.0),
     ]);
     let ext = shares.to_extents((elems * 4) as u64, 4);
-    let mut bufs: Vec<Vec<f32>> = (0..n)
+    let vals: Vec<Vec<f32>> = (0..n)
         .map(|r| {
             (0..elems)
                 .map(|i| ((i * (r + 1)) % 1000) as f32 * 0.001)
@@ -66,14 +67,17 @@ fn functional_allreduce_32mb_8ranks() {
     let spot: Vec<usize> = vec![0, 1, elems / 2, elems - 1];
     let expect: Vec<f32> = spot
         .iter()
-        .map(|&i| bufs.iter().map(|b| b[i]).sum::<f32>())
+        .map(|&i| vals.iter().map(|b| b[i]).sum::<f32>())
         .collect();
-    exec::all_reduce_f32(&fabric, &ext, &mut bufs).unwrap();
+    let mut bufs: Vec<DeviceBuffer> =
+        vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect();
+    exec::all_reduce(&fabric, &ext, &mut bufs, RedOp::Sum).unwrap();
+    let got0 = bufs[0].to_f32_vec();
     for (k, &i) in spot.iter().enumerate() {
         assert!(
-            (bufs[0][i] - expect[k]).abs() <= 1e-3 * expect[k].abs().max(1.0),
+            (got0[i] - expect[k]).abs() <= 1e-3 * expect[k].abs().max(1.0),
             "elem {i}: {} vs {}",
-            bufs[0][i],
+            got0[i],
             expect[k]
         );
     }
@@ -131,15 +135,18 @@ fn degraded_link_slows_but_stays_correct() {
     // Functional correctness is independent of link health.
     let fabric = Fabric::new(4, 1 << 16, MemoryLedger::new());
     let ext = shares.to_extents(4096, 4);
-    let inputs: Vec<Vec<f32>> = (0..4).map(|r| vec![r as f32; 1024]).collect();
-    let mut outputs = vec![Vec::new(); 4];
-    exec::all_gather_f32(&fabric, &ext, &inputs, &mut outputs).unwrap();
+    let inputs: Vec<DeviceBuffer> = (0..4)
+        .map(|r| DeviceBuffer::from_f32(&vec![r as f32; 1024]))
+        .collect();
+    let mut outputs: Vec<DeviceBuffer> =
+        (0..4).map(|_| DeviceBuffer::zeros(DataType::F32, 0)).collect();
+    exec::all_gather(&fabric, &ext, &inputs, &mut outputs).unwrap();
     let mut expect = Vec::new();
     for r in 0..4 {
         expect.extend(vec![r as f32; 1024]);
     }
     for o in &outputs {
-        assert_eq!(o, &expect);
+        assert_eq!(o.to_f32_vec(), expect);
     }
 }
 

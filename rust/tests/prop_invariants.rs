@@ -8,6 +8,7 @@ use flexlink::balancer::Shares;
 use flexlink::collectives::multipath::MultipathCollective;
 use flexlink::collectives::{exec, ring, CollectiveKind};
 use flexlink::config::presets::Preset;
+use flexlink::dtype::{DeviceBuffer, RedOp};
 use flexlink::links::calib::Calibration;
 use flexlink::links::PathId;
 use flexlink::memory::MemoryLedger;
@@ -88,14 +89,17 @@ fn prop_allreduce_lossless_random_splits() {
         let shares = Shares::from_pcts(&pairs);
         let ext = shares.to_extents((len * 4) as u64, 4);
         let fabric = Fabric::new(n, 256, MemoryLedger::new());
-        let mut bufs: Vec<Vec<f32>> = (0..n)
+        let vals: Vec<Vec<f32>> = (0..n)
             .map(|_| (0..len).map(|_| rng.range_f32(-4.0, 4.0)).collect())
             .collect();
         let expect: Vec<f32> = (0..len)
-            .map(|i| bufs.iter().map(|b| b[i]).sum::<f32>())
+            .map(|i| vals.iter().map(|b| b[i]).sum::<f32>())
             .collect();
-        exec::all_reduce_f32(&fabric, &ext, &mut bufs).unwrap();
-        for (r, b) in bufs.iter().enumerate() {
+        let mut bufs: Vec<DeviceBuffer> =
+            vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect();
+        exec::all_reduce(&fabric, &ext, &mut bufs, RedOp::Sum).unwrap();
+        for (r, d) in bufs.iter().enumerate() {
+            let b = d.to_f32_vec();
             for i in 0..len {
                 assert!(
                     (b[i] - expect[i]).abs() <= 1e-4 * expect[i].abs().max(1.0),
