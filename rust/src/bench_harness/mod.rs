@@ -327,13 +327,15 @@ pub fn render_group_fusion(r: &GroupFusionReport) -> String {
 
 /// One cell of the cluster-routed Table 2: identical numbers to
 /// [`table2_cell`] when `n_nodes == 1` (the degenerate-case regression
-/// anchor), hierarchical three-phase timings beyond.
+/// anchor), hierarchical three-phase timings beyond. `pipeline` picks
+/// the phase-join strategy (chunk-pipelined vs whole-phase barriers).
 pub fn table2_cluster_cell(
     cluster: &Cluster,
     cfg: &BalancerConfig,
     op: CollectiveKind,
     n: usize,
     mib: u64,
+    pipeline: bool,
 ) -> Result<Table2Row> {
     let msg = mib << 20;
     // Tune against the *live* shared pool (node views hold build-time
@@ -342,7 +344,8 @@ pub fn table2_cluster_cell(
     let mut node0 = cluster.node(0).clone();
     node0.pool = cluster.pool.clone();
     let mc = MultipathCollective::new(&node0, Calibration::h800(), op, n);
-    let cc = ClusterCollective::new(cluster, Calibration::h800(), op, n);
+    let cc = ClusterCollective::new(cluster, Calibration::h800(), op, n)
+        .with_pipeline(pipeline);
     let inter = if cluster.n_nodes() > 1 {
         initial_tune_stripes(&cc, msg, cfg)?.shares
     } else {
@@ -378,40 +381,55 @@ pub fn table2_cluster_cell(
 }
 
 /// Table 2 routed through the hierarchical compiler for an
-/// `n_nodes`-node cluster (`repro table2 --nodes N`).
-pub fn table2_cluster(n_nodes: usize, cfg: &BalancerConfig) -> Result<Vec<Table2Row>> {
+/// `n_nodes`-node cluster (`repro table2 --nodes N [--no-pipeline]`).
+pub fn table2_cluster(
+    n_nodes: usize,
+    cfg: &BalancerConfig,
+    pipeline: bool,
+) -> Result<Vec<Table2Row>> {
     let cluster = Cluster::build(&ClusterSpec::new(n_nodes, Preset::H800.spec()));
     table2_grid()
         .into_iter()
-        .map(|(op, n, mib)| table2_cluster_cell(&cluster, cfg, op, n, mib))
+        .map(|(op, n, mib)| table2_cluster_cell(&cluster, cfg, op, n, mib, pipeline))
         .collect()
 }
 
-/// One row of the cluster scaling sweep: hierarchical collective at
-/// `n_nodes`, per-tier times/bandwidths, and the naive flat-ring
-/// baseline it must beat.
+/// One row of the cluster scaling sweep: the chunk-pipelined hierarchical
+/// collective at `n_nodes`, per-tier times/bandwidths, the whole-phase
+/// barrier lowering it replaces (overlap-gain column), and the naive
+/// flat-ring baseline both must beat.
 #[derive(Debug, Clone)]
 pub struct ClusterSweepRow {
     pub op: CollectiveKind,
     pub n_nodes: usize,
     pub msg_mib: u64,
+    /// Makespan of the default (chunk-pipelined) lowering.
     pub total_ms: f64,
     pub algbw_gbps: f64,
-    /// Time inside the intra-node phases (phase 1 + phase 3 span).
+    /// Summed spans of the intra phases (phase 1 + phase 3; under
+    /// pipelining these overlap the inter span — that's the point).
+    /// Equal to the makespan at one node (the flat run is all-intra).
     pub intra_ms: f64,
-    /// Time inside the NIC-striped inter-node phase (0 at one node).
+    /// Span of the NIC-striped inter-node phase (0 at one node).
     pub inter_ms: f64,
     /// Per-tier algorithmic bandwidth, msg / tier time (0 when unused).
     pub intra_algbw_gbps: f64,
     pub inter_algbw_gbps: f64,
+    /// Makespan of the whole-phase-barrier lowering (= `total_ms` at one
+    /// node, where both degenerate to the flat path).
+    pub barriered_ms: f64,
+    /// Overlap gain of pipelining: (barriered − pipelined) / barriered,
+    /// in percent. 0 at one node.
+    pub overlap_gain_pct: f64,
     /// Naive flat global ring over the NIC fabric (AllReduce only; 0
     /// otherwise or at one node).
     pub flat_ring_ms: f64,
 }
 
 /// Sweep a collective across cluster sizes × message sizes, reporting
-/// per-tier algbw. Intra shares are stage-1 tuned per size on the node;
-/// stripes are tuned per size on the cluster.
+/// per-tier algbw and the barriered-vs-pipelined overlap gain. Intra
+/// shares are stage-1 tuned per size on the node; stripes are tuned per
+/// size on the cluster.
 pub fn cluster_sweep(
     preset: Preset,
     op: CollectiveKind,
@@ -443,21 +461,31 @@ pub fn cluster_sweep(
             } else {
                 Shares::even(&crate::balancer::tier::stripes(nl))
             };
-            let rep = cc.run(
-                msg,
-                &TierShares {
-                    intra: intra.clone(),
-                    inter,
-                },
-                4,
-            )?;
-            let total_s = rep.total.as_secs_f64();
-            let inter_s = if nn > 1 {
-                rep.inter_phase.saturating_sub(rep.intra_phase1).as_secs_f64()
-            } else {
-                0.0
+            let tiers = TierShares {
+                intra: intra.clone(),
+                inter,
             };
-            let intra_s = (total_s - inter_s).max(0.0);
+            let rep = cc.run(msg, &tiers, 4)?;
+            let barriered_s = if nn > 1 {
+                ClusterCollective::new(&cluster, Calibration::h800(), op, nl)
+                    .with_pipeline(false)
+                    .run(msg, &tiers, 4)?
+                    .total
+                    .as_secs_f64()
+            } else {
+                rep.total.as_secs_f64()
+            };
+            let total_s = rep.total.as_secs_f64();
+            let inter_s = rep.inter_phase.duration().as_secs_f64();
+            // Tier time from the phase spans, not total-minus-inter: the
+            // pipelined inter span stretches over most of the makespan
+            // (overlap), which would collapse the intra residual to a
+            // meaningless sliver.
+            let intra_s = if nn > 1 {
+                (rep.intra_phase1.duration() + rep.intra_phase3.duration()).as_secs_f64()
+            } else {
+                total_s
+            };
             let flat_ms = if nn > 1 && op == CollectiveKind::AllReduce {
                 flat_ring_allreduce(&cluster, &Calibration::h800(), msg)?.as_secs_f64()
                     * 1e3
@@ -482,6 +510,12 @@ pub fn cluster_sweep(
                 } else {
                     0.0
                 },
+                barriered_ms: barriered_s * 1e3,
+                overlap_gain_pct: if nn > 1 && barriered_s > 0.0 {
+                    (barriered_s - total_s) / barriered_s * 100.0
+                } else {
+                    0.0
+                },
                 flat_ring_ms: flat_ms,
             });
         }
@@ -491,10 +525,10 @@ pub fn cluster_sweep(
 
 pub fn render_cluster_sweep(rows: &[ClusterSweepRow]) -> String {
     let mut t = Table::new(
-        "Cluster sweep: hierarchical collectives, per-tier algbw (GB/s)",
+        "Cluster sweep: pipelined hierarchical collectives, per-tier algbw (GB/s)",
         &[
             "op", "nodes", "msg", "total(ms)", "algbw", "intra(ms)", "intra bw",
-            "inter(ms)", "inter bw", "flat ring(ms)",
+            "inter(ms)", "inter bw", "barrier(ms)", "overlap", "flat ring(ms)",
         ],
     );
     for r in rows {
@@ -513,6 +547,16 @@ pub fn render_cluster_sweep(rows: &[ClusterSweepRow]) -> String {
             },
             if r.n_nodes > 1 {
                 format!("{:.1}", r.inter_algbw_gbps)
+            } else {
+                "-".into()
+            },
+            if r.n_nodes > 1 {
+                format!("{:.3}", r.barriered_ms)
+            } else {
+                "-".into()
+            },
+            if r.n_nodes > 1 {
+                format!("{:.1}%", r.overlap_gain_pct)
             } else {
                 "-".into()
             },
@@ -634,14 +678,19 @@ mod tests {
             (CollectiveKind::AllReduce, 2, 32),
         ] {
             let flat = table2_cell(&topo, &cfg, op, n, mib).unwrap();
-            let hier = table2_cluster_cell(&cluster, &cfg, op, n, mib).unwrap();
-            assert_eq!(flat.nccl_gbps.to_bits(), hier.nccl_gbps.to_bits());
-            assert_eq!(flat.pcie_only_gbps.to_bits(), hier.pcie_only_gbps.to_bits());
-            assert_eq!(flat.full_gbps.to_bits(), hier.full_gbps.to_bits());
-            assert_eq!(
-                flat.full_pcie_load_pct.to_bits(),
-                hier.full_pcie_load_pct.to_bits()
-            );
+            // Both phase-join strategies degenerate identically at 1 node
+            // (the flat lowering has no phases to join).
+            for pipeline in [true, false] {
+                let hier =
+                    table2_cluster_cell(&cluster, &cfg, op, n, mib, pipeline).unwrap();
+                assert_eq!(flat.nccl_gbps.to_bits(), hier.nccl_gbps.to_bits());
+                assert_eq!(flat.pcie_only_gbps.to_bits(), hier.pcie_only_gbps.to_bits());
+                assert_eq!(flat.full_gbps.to_bits(), hier.full_gbps.to_bits());
+                assert_eq!(
+                    flat.full_pcie_load_pct.to_bits(),
+                    hier.full_pcie_load_pct.to_bits()
+                );
+            }
         }
     }
 
@@ -660,6 +709,8 @@ mod tests {
         let two = &rows[1];
         assert_eq!(one.n_nodes, 1);
         assert_eq!(one.inter_ms, 0.0);
+        assert_eq!(one.overlap_gain_pct, 0.0);
+        assert_eq!(one.barriered_ms, one.total_ms);
         assert!(one.algbw_gbps > 0.0);
         assert!(two.inter_ms > 0.0, "2-node run must show an inter phase");
         assert!(two.inter_algbw_gbps > 0.0);
@@ -669,9 +720,19 @@ mod tests {
             two.total_ms,
             two.flat_ring_ms
         );
+        // The overlap-gain column: pipelining must strictly beat the
+        // whole-phase barriers at 2 nodes.
+        assert!(
+            two.total_ms < two.barriered_ms,
+            "pipelined {}ms not under barriered {}ms",
+            two.total_ms,
+            two.barriered_ms
+        );
+        assert!(two.overlap_gain_pct > 0.0);
         let rendered = render_cluster_sweep(&rows);
         assert!(rendered.contains("allreduce"));
         assert!(rendered.contains("inter"));
+        assert!(rendered.contains("overlap"));
     }
 
     #[test]

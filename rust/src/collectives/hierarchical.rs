@@ -17,6 +17,18 @@
 //! their [`PathId`] tag, inter-phase tasks their [`StripeId`] tag — the
 //! per-tier balancers each read their own completion times from one run.
 //!
+//! By default the phases are **chunk-pipelined** rather than joined with
+//! whole-phase barriers: each inter-node stripe chunk starts the moment
+//! the intra-phase chunks producing its bytes finish, and each phase-3
+//! intra chunk starts the moment its stripe chunk lands (the dependency
+//! threading runs through [`super::schedule::ChunkMap`]). The fair-share
+//! DES then prices the resulting NVLink/PCIe/NIC overlap contention with
+//! no additional machinery. The barriered lowering is kept behind
+//! [`ClusterCollective::with_pipeline`] as the comparison baseline, and
+//! single-chunk schedules compile to the barriered graph *task-for-task*
+//! (chunk pipelining has nothing to thread there) — the degeneracy the
+//! golden-trace and property suites pin.
+//!
 //! `n_nodes == 1` is the degenerate case: [`ClusterCollective::run`]
 //! delegates to the flat single-node [`MultipathCollective`], so the
 //! pre-cluster Table 2 numbers reproduce bit-identically.
@@ -24,12 +36,13 @@
 //! Modeling note: when the inter tier's stripe shares deviate from the
 //! even split, the surplus bytes are still charged to the carrier NIC
 //! only — shuffling a shard to a neighbour GPU's NIC rides the NVSwitch
-//! at ≥10× the NIC's protocol rate while the NVLink fabric is otherwise
-//! idle between phases, so that movement is below the model's fidelity.
+//! at ≥10× the NIC's single-put protocol rate, so that movement stays
+//! below NIC-granularity model fidelity even though the NVLink fabric is
+//! no longer idle between phases under the pipelined lowering.
 
 use super::multipath::MultipathCollective;
 use super::ring;
-use super::schedule::GraphBuilder;
+use super::schedule::{ChunkMap, GraphBuilder};
 use super::CollectiveKind;
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
@@ -38,6 +51,38 @@ use crate::links::{PathId, PathModel, StripeId};
 use crate::sim::{Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind};
 use crate::topology::cluster::Cluster;
 use anyhow::Result;
+use std::ops::Range;
+
+/// First-start → last-finish span of one lowering phase. Under the
+/// barriered lowering the phases abut (one span's `end` is the next
+/// phase's gate); under chunk pipelining they interleave, so a single
+/// timestamp cannot describe a phase. The per-tier balancers are
+/// unaffected either way — they read their tag-attributed completion
+/// times ([`HierReport::intra_times`] / [`HierReport::inter_times`]),
+/// which stay correct under overlap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PhaseSpan {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl PhaseSpan {
+    /// The absent phase (degenerate single-node runs, or an operator
+    /// without that phase).
+    pub const EMPTY: PhaseSpan = PhaseSpan {
+        start: SimTime::ZERO,
+        end: SimTime::ZERO,
+    };
+
+    /// Busy length of the span (saturating; EMPTY → ZERO).
+    pub fn duration(self) -> SimTime {
+        self.end.saturating_sub(self.start)
+    }
+
+    pub fn is_empty(self) -> bool {
+        self == Self::EMPTY
+    }
+}
 
 /// A bound (cluster, calibration, operator, local-rank-count) context —
 /// the hierarchical analogue of [`MultipathCollective`].
@@ -48,6 +93,29 @@ pub struct ClusterCollective<'c> {
     /// Ranks participating per node (the intra-node ring size); the
     /// cross-node phase stripes over this many NICs per node.
     pub n_local: usize,
+    /// Chunk-level cross-phase pipelining (the default). `false` joins
+    /// the phases with whole-phase barriers — kept as a first-class
+    /// comparison baseline (`pipeline_phases` in `RunConfig`,
+    /// `--no-pipeline` on the CLI, the overlap-gain column of
+    /// `cluster_sweep`).
+    pub pipeline: bool,
+}
+
+/// A compiled (not yet executed) hierarchical lowering: the task graph,
+/// the resource pool it routes over, and the task-id watermarks of its
+/// phases. Phases are emitted contiguously — phase 1 is `p1_range`,
+/// the inter-node phase `p2_range`, phase 3 everything after — so a
+/// phase *span* is an id-range query on the resulting schedule
+/// ([`crate::sim::Schedule::range_span`]), which stays meaningful when
+/// pipelined phases interleave in time.
+#[derive(Debug, Clone)]
+pub struct CompiledHier {
+    pub pool: ResourcePool,
+    pub graph: TaskGraph,
+    /// Phase-1 (intra) task ids; empty for operators without a phase 1.
+    pub p1_range: Range<usize>,
+    /// Inter-node phase task ids.
+    pub p2_range: Range<usize>,
 }
 
 /// DES outcome of one hierarchical collective.
@@ -63,10 +131,14 @@ pub struct HierReport {
     /// Per NIC-stripe completion — the inter-tier balancer's observable.
     /// Empty in the degenerate single-node case.
     pub inter_times: Vec<(StripeId, SimTime)>,
-    /// When the last node finished phase 1 (ZERO when the op has none).
-    pub intra_phase1: SimTime,
-    /// When the last node finished the inter-node phase (ZERO at n=1).
-    pub inter_phase: SimTime,
+    /// Span of phase 1 (EMPTY when the op has none, or at n = 1).
+    pub intra_phase1: PhaseSpan,
+    /// Span of the inter-node phase (EMPTY at n = 1). Under pipelining
+    /// its `start` typically precedes `intra_phase1.end` — that overlap
+    /// is the point.
+    pub inter_phase: PhaseSpan,
+    /// Span of phase 3 (EMPTY when the op has none, or at n = 1).
+    pub intra_phase3: PhaseSpan,
     pub events: u64,
     pub tasks: usize,
 }
@@ -96,7 +168,16 @@ impl<'c> ClusterCollective<'c> {
             calib,
             kind,
             n_local,
+            pipeline: true,
         }
+    }
+
+    /// Select the phase-join strategy: `true` (default) threads per-chunk
+    /// dependencies across phases, `false` rebuilds today's whole-phase
+    /// barriers.
+    pub fn with_pipeline(mut self, pipeline: bool) -> Self {
+        self.pipeline = pipeline;
+        self
     }
 
     /// Total participating ranks across the cluster.
@@ -173,19 +254,72 @@ impl<'c> ClusterCollective<'c> {
                 total: rep.outcome.total,
                 intra_times: rep.path_times(),
                 inter_times: Vec::new(),
-                intra_phase1: SimTime::ZERO,
-                inter_phase: SimTime::ZERO,
+                intra_phase1: PhaseSpan::EMPTY,
+                inter_phase: PhaseSpan::EMPTY,
+                intra_phase3: PhaseSpan::EMPTY,
                 events: rep.outcome.events,
                 tasks: rep.outcome.tasks,
             });
         }
+        let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
+        let tasks = compiled.graph.len();
+        let sched = Engine::new(&compiled.pool).run(&compiled.graph)?;
+        let intra_times = tiers
+            .intra
+            .active_paths()
+            .into_iter()
+            .filter_map(|p| sched.tag_finish(&compiled.graph, p.tag()).map(|t| (p, t)))
+            .collect();
+        let inter_times = tiers
+            .inter
+            .active_paths()
+            .into_iter()
+            .filter_map(|s| sched.tag_finish(&compiled.graph, s.tag()).map(|t| (s, t)))
+            .collect();
+        let span = |r: &Range<usize>| {
+            sched
+                .range_span(r.clone())
+                .map(|(start, end)| PhaseSpan { start, end })
+                .unwrap_or(PhaseSpan::EMPTY)
+        };
+        Ok(HierReport {
+            kind: self.kind,
+            msg_bytes,
+            total: sched.makespan,
+            intra_times,
+            inter_times,
+            intra_phase1: span(&compiled.p1_range),
+            inter_phase: span(&compiled.p2_range),
+            // Phase 3 is everything emitted after the inter phase.
+            intra_phase3: span(&(compiled.p2_range.end..tasks)),
+            events: sched.events,
+            tasks,
+        })
+    }
+
+    /// Compile the multi-node lowering without executing it — the surface
+    /// the structural tests (graph equality, per-resource byte
+    /// conservation) inspect. `n_nodes == 1` has no hierarchical graph;
+    /// use [`Self::run`], which delegates to the flat compiler there.
+    pub fn compile(
+        &self,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        elem_bytes: u64,
+    ) -> Result<CompiledHier> {
+        anyhow::ensure!(msg_bytes > 0, "empty message");
+        anyhow::ensure!(
+            self.cluster.n_nodes() >= 2,
+            "single-node collectives lower through MultipathCollective, not the \
+             hierarchical compiler"
+        );
         match self.kind {
-            CollectiveKind::AllReduce => self.run_allreduce(msg_bytes, tiers, elem_bytes),
-            CollectiveKind::AllGather => self.run_allgather(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::AllReduce => self.compile_allreduce(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::AllGather => self.compile_allgather(msg_bytes, tiers, elem_bytes),
             CollectiveKind::ReduceScatter => {
-                self.run_reduce_scatter(msg_bytes, tiers, elem_bytes)
+                self.compile_reduce_scatter(msg_bytes, tiers, elem_bytes)
             }
-            CollectiveKind::Broadcast => self.run_broadcast(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::Broadcast => self.compile_broadcast(msg_bytes, tiers, elem_bytes),
             CollectiveKind::AllToAll => anyhow::bail!(
                 "alltoall has no hierarchical lowering yet (single-node only)"
             ),
@@ -230,7 +364,8 @@ impl<'c> ClusterCollective<'c> {
                     hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
                 }
                 CollectiveKind::Broadcast => {
-                    hg.inter_chain(stripe, *len, &[root], tag);
+                    let entry = vec![vec![root]; hg.inter_chunks(*len)];
+                    hg.inter_chain(stripe, *len, &entry, tag);
                 }
                 CollectiveKind::AllToAll => {
                     anyhow::bail!("alltoall has no hierarchical lowering yet")
@@ -247,216 +382,432 @@ impl<'c> ClusterCollective<'c> {
     }
 
     // -----------------------------------------------------------------
-    // Per-operator three-phase lowerings.
+    // Per-operator three-phase lowerings. Each compiles either the
+    // chunk-pipelined graph (per-chunk dependency threading through
+    // ChunkMaps) or the barriered graph (whole-phase joins); single-chunk
+    // schedules always take the barriered shape — with one chunk per
+    // block the pipeline has nothing to thread, so the two lowerings
+    // must coincide task-for-task (pinned by tests/prop_pipeline.rs).
     // -----------------------------------------------------------------
+
+    /// Phase 1 for the reducing operators: intra reduce-scatter on every
+    /// node. Returns the per-node whole-phase barriers (barriered mode)
+    /// or the per-node byte-interval producer maps over `[0, msg)`
+    /// (pipelined mode; rank r's reduced block lands at offset
+    /// `extent_off + rs_owned_block(r)·block`).
+    fn phase1_reduce_scatter(
+        &self,
+        hg: &mut HierGraph<'_>,
+        intra_ext: &[(PathId, u64, u64)],
+        rs_models: &[(PathId, PathModel)],
+        pipeline: bool,
+    ) -> (Vec<TaskId>, Vec<ChunkMap>) {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let mut bars = Vec::new();
+        let mut maps = Vec::new();
+        for k in 0..nn {
+            let mut map = ChunkMap::new();
+            let mut finals_all: Vec<TaskId> = Vec::new();
+            hg.with_node_builder(k, rs_models, |b| {
+                for (p, off, len) in intra_ext {
+                    let block = len.div_ceil(nl);
+                    let finals = intra_ring_reduce_scatter(b, *p, block, &[], p.tag());
+                    if pipeline {
+                        let sizes = b.chunks_for(*p, block);
+                        for (r, f) in finals.iter().enumerate() {
+                            let blk = ring::rs_owned_block(r, nl as usize) as u64;
+                            map.insert_chunks(*off + blk * block, &sizes, f);
+                        }
+                    } else {
+                        for f in finals {
+                            finals_all.extend(f);
+                        }
+                    }
+                }
+            });
+            if pipeline {
+                maps.push(map);
+            } else {
+                bars.push(hg.barrier(finals_all));
+            }
+        }
+        (bars, maps)
+    }
 
     /// AllReduce: intra reduce-scatter → inter ring allreduce per stripe
     /// → intra allgather.
-    fn run_allreduce(
+    fn compile_allreduce(
         &self,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
-    ) -> Result<HierReport> {
+    ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
         let mut hg = HierGraph::new(self);
         let intra_ext = tiers.intra.to_extents(msg, elem);
+        let inter_ext = tiers.inter.to_extents(msg, elem);
         let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        // Every PathModel this calibration emits shares `calib.chunk_bytes`
+        // (intra paths and the inter NIC stripes alike).
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(intra_ext
+                .iter()
+                .all(|(_, _, len)| single_chunk(len.div_ceil(nl), chunk))
+                && inter_ext
+                    .iter()
+                    .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
 
         // Phase 1: intra reduce-scatter on every node.
-        let mut p1_bar = Vec::with_capacity(nn);
-        for k in 0..nn {
-            let mut finals: Vec<TaskId> = Vec::new();
-            hg.with_node_builder(k, &rs_models, |b| {
-                for (p, _, len) in &intra_ext {
-                    let block = len.div_ceil(nl);
-                    for f in intra_ring_reduce_scatter(b, *p, block, &[], p.tag()) {
-                        finals.extend(f);
-                    }
-                }
-            });
-            p1_bar.push(hg.barrier(finals));
-        }
+        let (p1_bars, p1_maps) =
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, pipeline);
+        let p1_end = hg.graph.len();
 
         // Phase 2: per-stripe inter-node ring allreduce of the shards.
-        let inter_ext = tiers.inter.to_extents(msg, elem);
         let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
-        for (sid, _, len) in &inter_ext {
+        let mut p2_maps: Vec<ChunkMap> = vec![ChunkMap::new(); nn];
+        for (sid, s_off, len) in &inter_ext {
             let stripe = sid.0 as usize;
             let tag = sid.tag();
-            let rs_finals = hg.inter_ring_reduce_scatter(stripe, *len, &p1_bar, tag);
             let sub = len.div_ceil(nn as u64);
-            let start = chunked_deps(&rs_finals);
-            let ag_done = hg.inter_ring_allgather(stripe, sub, &start, tag);
-            for k in 0..nn {
-                done_per_node[k].extend(rs_finals[k].iter().copied());
-                done_per_node[k].extend(ag_done[k].iter().copied());
+            if pipeline {
+                let rs_finals =
+                    hg.inter_ring_reduce_scatter_piped(stripe, *s_off, *len, &p1_maps, tag);
+                let sub_sizes = ring::chunk_sizes(sub, hg.inter_model.chunk_bytes);
+                for k in 0..nn {
+                    // After the inter ring RS, node k owns the stripe's
+                    // fully reduced sub-block (k+1) mod nn.
+                    let own = ring::rs_owned_block(k, nn) as u64;
+                    p2_maps[k].insert_chunks(*s_off + own * sub, &sub_sizes, &rs_finals[k]);
+                }
+                let start = chunked_deps(&rs_finals);
+                let steps = hg.inter_ring_allgather_steps(stripe, sub, &start, tag);
+                for (s, per_node) in steps.iter().enumerate() {
+                    for m in 0..nn {
+                        // AG step s delivers sub-block (m − s) mod nn to
+                        // node m (see inter_ring_allgather_steps docs).
+                        let blk = ((m + nn - s) % nn) as u64;
+                        p2_maps[m].insert_chunks(
+                            *s_off + blk * sub,
+                            &sub_sizes,
+                            &per_node[m],
+                        );
+                    }
+                }
+            } else {
+                let rs_finals = hg.inter_ring_reduce_scatter(stripe, *len, &p1_bars, tag);
+                let start = chunked_deps(&rs_finals);
+                let ag_done = hg.inter_ring_allgather(stripe, sub, &start, tag);
+                for k in 0..nn {
+                    done_per_node[k].extend(rs_finals[k].iter().copied());
+                    done_per_node[k].extend(ag_done[k].iter().copied());
+                }
             }
         }
-        let p2_bar: Vec<TaskId> =
-            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
+        let p2_bars: Vec<TaskId> = if pipeline {
+            Vec::new()
+        } else {
+            done_per_node.into_iter().map(|d| hg.barrier(d)).collect()
+        };
+        let p2_end = hg.graph.len();
 
-        // Phase 3: intra allgather of the fully reduced blocks.
+        // Phase 3: intra allgather of the fully reduced blocks; rank r
+        // opens its ring with block r of each extent.
         for k in 0..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, _, len) in &intra_ext {
+                for (p, off, len) in &intra_ext {
                     let block = len.div_ceil(nl);
-                    let entry: Vec<Vec<TaskId>> = vec![vec![p2_bar[k]]; nl as usize];
+                    let sizes = b.chunks_for(*p, block);
+                    let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
+                        (0..nl)
+                            .map(|r| p2_maps[k].deps_for_chunks(*off + r * block, &sizes))
+                            .collect()
+                    } else {
+                        vec![vec![vec![p2_bars[k]]; sizes.len()]; nl as usize]
+                    };
                     intra_ring_allgather(b, *p, block, &entry, p.tag());
                 }
             });
         }
-        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
     }
 
     /// AllGather: inter ring allgather per stripe → intra allgather of
     /// the node-resident blocks (no reduce phase).
-    fn run_allgather(
+    fn compile_allgather(
         &self,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
-    ) -> Result<HierReport> {
+    ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
         let mut hg = HierGraph::new(self);
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        let inter_ext = tiers.inter.to_extents(msg * nl, elem);
+        let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(inter_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
+                && intra_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk)));
 
         // Phase 2 first: stripe g carries the g-th local rank's
-        // contribution around the node ring.
-        let inter_ext = tiers.inter.to_extents(msg * nl, elem);
+        // contribution around the node ring. Inter coordinate space:
+        // [0, msg·nl) = the node's local contributions concatenated in
+        // rank order. Each node's availability map is *source-extended*
+        // (src_node·stride + offset) so a phase-3 chunk can wait for one
+        // specific node's copy of a slice rather than the slowest.
         let root = hg.barrier(Vec::new());
+        let stride = msg * nl;
         let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
-        for (sid, _, len) in &inter_ext {
+        let mut p2_maps: Vec<ChunkMap> = vec![ChunkMap::new(); nn];
+        for (sid, s_off, len) in &inter_ext {
             let stripe = sid.0 as usize;
-            let n_chunks = hg.inter_chunks(*len);
-            let start: Vec<Vec<Vec<TaskId>>> = vec![vec![vec![root]; n_chunks]; nn];
-            let done = hg.inter_ring_allgather(stripe, *len, &start, sid.tag());
-            for k in 0..nn {
-                done_per_node[k].extend(done[k].iter().copied());
+            let sizes = ring::chunk_sizes(*len, hg.inter_model.chunk_bytes);
+            let start: Vec<Vec<Vec<TaskId>>> = vec![vec![vec![root]; sizes.len()]; nn];
+            let steps = hg.inter_ring_allgather_steps(stripe, *len, &start, sid.tag());
+            for (s, per_node) in steps.iter().enumerate() {
+                for m in 0..nn {
+                    if pipeline {
+                        // Step s delivers node (m − 1 − s) mod nn's copy
+                        // to node m.
+                        let src = (m + nn - 1 - s) % nn;
+                        p2_maps[m].insert_chunks(
+                            src as u64 * stride + *s_off,
+                            &sizes,
+                            &per_node[m],
+                        );
+                    } else {
+                        done_per_node[m].extend(per_node[m].iter().copied());
+                    }
+                }
             }
         }
-        let p2_bar: Vec<TaskId> =
-            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
+        let p2_bars: Vec<TaskId> = if pipeline {
+            Vec::new()
+        } else {
+            done_per_node.into_iter().map(|d| hg.barrier(d)).collect()
+        };
+        let p2_end = hg.graph.len();
 
-        // Phase 3: intra allgather; each rank now forwards its gathered
-        // group of `n_nodes` same-index blocks.
-        let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
+        // Phase 3: intra allgather; each rank forwards its gathered group
+        // of `n_nodes` same-index copies (nn·msg bytes per rank before
+        // the path split).
         for k in 0..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, _, len) in &intra_ext {
-                    let entry: Vec<Vec<TaskId>> = vec![vec![p2_bar[k]]; nl as usize];
+                for (p, off, len) in &intra_ext {
+                    let sizes = b.chunks_for(*p, *len);
+                    let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
+                        (0..self.n_local)
+                            .map(|r| {
+                                group_entry_deps(
+                                    &p2_maps[k],
+                                    k,
+                                    r,
+                                    *off,
+                                    &sizes,
+                                    msg,
+                                    nn,
+                                    stride,
+                                )
+                            })
+                            .collect()
+                    } else {
+                        vec![vec![vec![p2_bars[k]]; sizes.len()]; self.n_local]
+                    };
                     intra_ring_allgather(b, *p, *len, &entry, p.tag());
                 }
             });
         }
-        hg.finish(self.kind, msg, tiers, &[], &p2_bar)
+        Ok(hg.into_compiled(0..0, 0..p2_end))
     }
 
     /// ReduceScatter: intra reduce-scatter → inter ring reduce-scatter
     /// per stripe (outputs land scattered; no phase 3).
-    fn run_reduce_scatter(
+    fn compile_reduce_scatter(
         &self,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
-    ) -> Result<HierReport> {
+    ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
         let mut hg = HierGraph::new(self);
         let intra_ext = tiers.intra.to_extents(msg, elem);
-        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
-
-        let mut p1_bar = Vec::with_capacity(nn);
-        for k in 0..nn {
-            let mut finals: Vec<TaskId> = Vec::new();
-            hg.with_node_builder(k, &rs_models, |b| {
-                for (p, _, len) in &intra_ext {
-                    let block = len.div_ceil(nl);
-                    for f in intra_ring_reduce_scatter(b, *p, block, &[], p.tag()) {
-                        finals.extend(f);
-                    }
-                }
-            });
-            p1_bar.push(hg.barrier(finals));
-        }
-
         let inter_ext = tiers.inter.to_extents(msg, elem);
-        let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
-        for (sid, _, len) in &inter_ext {
+        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(intra_ext
+                .iter()
+                .all(|(_, _, len)| single_chunk(len.div_ceil(nl), chunk))
+                && inter_ext
+                    .iter()
+                    .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
+
+        let (p1_bars, p1_maps) =
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, pipeline);
+        let p1_end = hg.graph.len();
+
+        for (sid, s_off, len) in &inter_ext {
             let stripe = sid.0 as usize;
             // The stripe extent IS the per-node slab (even stripes give
             // msg/n_local each); the node ring reduces it across nodes.
-            let finals = hg.inter_ring_reduce_scatter(stripe, *len, &p1_bar, sid.tag());
-            for k in 0..nn {
-                done_per_node[k].extend(finals[k].iter().copied());
+            if pipeline {
+                hg.inter_ring_reduce_scatter_piped(stripe, *s_off, *len, &p1_maps, sid.tag());
+            } else {
+                hg.inter_ring_reduce_scatter(stripe, *len, &p1_bars, sid.tag());
             }
         }
-        let p2_bar: Vec<TaskId> =
-            done_per_node.into_iter().map(|d| hg.barrier(d)).collect();
-        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+        let p2_end = hg.graph.len();
+        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
     }
 
     /// Broadcast: intra chain at the root node → inter chain per stripe
     /// → intra allgather on the non-root nodes.
-    fn run_broadcast(
+    fn compile_broadcast(
         &self,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
-    ) -> Result<HierReport> {
+    ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
         let mut hg = HierGraph::new(self);
         let intra_ext = tiers.intra.to_extents(msg, elem);
+        let inter_ext = tiers.inter.to_extents(msg, elem);
         let bc_models = self.intra_models(CollectiveKind::Broadcast, &tiers.intra);
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(intra_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
+                && inter_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk)));
 
         // Phase 1: pipeline the message down the root node's local chain
-        // so every local GPU (hence every NIC) holds a copy.
+        // so every local GPU (hence every NIC) holds a copy. Pipelined
+        // mode keeps a per-rank producer map over [0, msg): stripe g's
+        // uplink reads from GPU g, so it gates on *that rank's* arrivals.
         let mut at_rank: Vec<Vec<TaskId>> = vec![Vec::new(); self.n_local];
+        let mut rank_maps: Vec<ChunkMap> = vec![ChunkMap::new(); self.n_local];
         hg.with_node_builder(0, &bc_models, |b| {
-            for (p, _, len) in &intra_ext {
+            for (p, off, len) in &intra_ext {
+                let sizes = b.chunks_for(*p, *len);
                 let arr = intra_chain_broadcast(b, *p, *len, &[], p.tag());
                 for (r, a) in arr.into_iter().enumerate() {
+                    // Rank 0 is the source: locally resident, no map
+                    // entries (its arrival list is empty).
+                    if !a.is_empty() {
+                        rank_maps[r].insert_chunks(*off, &sizes, &a);
+                    }
                     at_rank[r].extend(a);
                 }
             }
         });
-        let p1_bar = vec![hg.barrier(at_rank.iter().flatten().copied().collect())];
+        let p1_end = hg.graph.len();
 
         // Phase 2: stripe g forwards its slice down the node chain.
-        let inter_ext = tiers.inter.to_extents(msg, elem);
         let mut done_per_node: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
-        for (sid, _, len) in &inter_ext {
+        let mut p2_maps: Vec<ChunkMap> = vec![ChunkMap::new(); nn];
+        for (sid, s_off, len) in &inter_ext {
             let stripe = sid.0 as usize;
-            let entry = hg.barrier(at_rank[stripe].clone());
-            let done = hg.inter_chain(stripe, *len, &[entry], sid.tag());
+            let sizes = ring::chunk_sizes(*len, hg.inter_model.chunk_bytes);
+            let entry: Vec<Vec<TaskId>> = if pipeline {
+                rank_maps[stripe].deps_for_chunks(*s_off, &sizes)
+            } else {
+                let bar = hg.barrier(at_rank[stripe].clone());
+                vec![vec![bar]; sizes.len()]
+            };
+            let done = hg.inter_chain(stripe, *len, &entry, sid.tag());
             for k in 1..nn {
+                if pipeline {
+                    p2_maps[k].insert_chunks(*s_off, &sizes, &done[k]);
+                }
                 done_per_node[k].extend(done[k].iter().copied());
             }
         }
-        let p2_bar: Vec<TaskId> = done_per_node
-            .iter()
-            .skip(1)
-            .map(|d| hg.barrier(d.clone()))
-            .collect();
+        let p2_bars: Vec<TaskId> = if pipeline {
+            Vec::new()
+        } else {
+            done_per_node
+                .iter()
+                .skip(1)
+                .map(|d| hg.barrier(d.clone()))
+                .collect()
+        };
+        let p2_end = hg.graph.len();
 
         // Phase 3: non-root nodes reassemble the stripes locally.
         for k in 1..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, _, len) in &intra_ext {
+                for (p, off, len) in &intra_ext {
                     let block = len.div_ceil(nl);
-                    let entry: Vec<Vec<TaskId>> =
-                        vec![vec![p2_bar[k - 1]]; nl as usize];
+                    let sizes = b.chunks_for(*p, block);
+                    let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
+                        (0..nl)
+                            .map(|r| p2_maps[k].deps_for_chunks(*off + r * block, &sizes))
+                            .collect()
+                    } else {
+                        vec![vec![vec![p2_bars[k - 1]]; sizes.len()]; self.n_local]
+                    };
                     intra_ring_allgather(b, *p, block, &entry, p.tag());
                 }
             });
         }
-        hg.finish(self.kind, msg, tiers, &p1_bar, &p2_bar)
+        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
     }
+}
+
+/// One block compiles to a single chunk on this chunk grid — nothing for
+/// the cross-phase pipeline to thread.
+fn single_chunk(bytes: u64, chunk: u64) -> bool {
+    ring::chunk_sizes(bytes, chunk).len() == 1
+}
+
+/// Dependencies for rank r's phase-3 allgather chunks in a hierarchical
+/// AllGather. Rank r's ring block is its *gathered group*: node j's copy
+/// of rank r's contribution sits at group offset j·msg. Each consumer
+/// chunk is decomposed into per-source-node segments, projected into the
+/// inter coordinate space (rank r's contribution occupies
+/// [r·msg, (r+1)·msg) there) and looked up in the node's source-extended
+/// arrival map. The locally resident copy (j == node_k) needs no
+/// dependency.
+#[allow(clippy::too_many_arguments)]
+fn group_entry_deps(
+    map: &ChunkMap,
+    node_k: usize,
+    r: usize,
+    off: u64,
+    sizes: &[u64],
+    msg: u64,
+    nn: usize,
+    stride: u64,
+) -> Vec<Vec<TaskId>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut pos = off;
+    for &sz in sizes {
+        let (lo, hi) = (pos, pos + sz);
+        pos = hi;
+        let mut deps: Vec<TaskId> = Vec::new();
+        let mut x = lo;
+        while x < hi {
+            let j = (x / msg) as usize;
+            let seg_end = hi.min((j as u64 + 1) * msg);
+            if j != node_k && j < nn {
+                let base = j as u64 * stride + r as u64 * msg;
+                let y0 = x - j as u64 * msg;
+                let y1 = seg_end - j as u64 * msg;
+                deps.extend(map.producers(base + y0, base + y1));
+            }
+            x = seg_end;
+        }
+        deps.sort_unstable();
+        deps.dedup();
+        out.push(deps);
+    }
+    out
 }
 
 /// Naive baseline for the cluster: ONE flat ring over every global GPU,
@@ -750,6 +1101,17 @@ impl<'c> HierGraph<'c> {
         arrivals
     }
 
+    /// Consume the accumulated (pool, graph) into a [`CompiledHier`] with
+    /// the given phase id-ranges.
+    fn into_compiled(self, p1_range: Range<usize>, p2_range: Range<usize>) -> CompiledHier {
+        CompiledHier {
+            pool: self.pool,
+            graph: self.graph,
+            p1_range,
+            p2_range,
+        }
+    }
+
     /// Ring reduce-scatter over the nodes on one stripe. `entry[k]` gates
     /// node k's first send (its phase-1 output). Returns per-node final
     /// (reduced-at-node) arrival ids, chunk-aligned.
@@ -784,9 +1146,91 @@ impl<'c> HierGraph<'c> {
         (0..nn).map(|k| prev[ring::prev(k, nn)].clone()).collect()
     }
 
-    /// Ring allgather over the nodes on one stripe; `start[k]` is the
-    /// chunk-aligned availability of node k's block. Returns every
-    /// arrival at each node (the stripe's per-node completion set).
+    /// As [`Self::inter_ring_reduce_scatter`], but gated per chunk on the
+    /// byte-interval producers of each step's ring block instead of a
+    /// whole-phase entry barrier: node k's step-s send carries the
+    /// stripe's sub-block (k − s) mod nn (`ring::rs_send_block`), so each
+    /// of its chunks starts the moment the phase-1 chunks producing those
+    /// bytes — plus the previous ring step's same-chunk arrival — finish.
+    /// `producers[k]` is node k's phase-1 map over the message
+    /// coordinates; `s_off` is the stripe extent's offset there.
+    fn inter_ring_reduce_scatter_piped(
+        &mut self,
+        stripe: usize,
+        s_off: u64,
+        bytes: u64,
+        producers: &[ChunkMap],
+        tag: u32,
+    ) -> Vec<Vec<TaskId>> {
+        let nn = self.cluster.n_nodes();
+        let sub = bytes.div_ceil(nn as u64);
+        let sizes = ring::chunk_sizes(sub, self.inter_model.chunk_bytes);
+        let mut prev: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+        for s in 0..nn - 1 {
+            let mut arr = Vec::with_capacity(nn);
+            for k in 0..nn {
+                let blk = ring::rs_send_block(k, s, nn) as u64;
+                let mut deps = producers[k].deps_for_chunks(s_off + blk * sub, &sizes);
+                if s > 0 {
+                    for (c, d) in deps.iter_mut().enumerate() {
+                        d.push(prev[ring::prev(k, nn)][c]);
+                    }
+                }
+                if s == nn - 2 {
+                    // Final step: the consumer combine at next(k) folds
+                    // the RECEIVER's own phase-1 shard into the block.
+                    // At earlier steps that dependency is imposed by the
+                    // receiver's own next-step send of the same block,
+                    // but the fully reduced block is never sent again —
+                    // without this the final combine (and everything the
+                    // pipeline hangs off it) could run before the
+                    // receiver's intra phase produced those bytes.
+                    let recv =
+                        producers[ring::next(k, nn)].deps_for_chunks(s_off + blk * sub, &sizes);
+                    for (d, mut r) in deps.iter_mut().zip(recv) {
+                        d.append(&mut r);
+                    }
+                }
+                arr.push(self.send_inter(k, ring::next(k, nn), stripe, sub, &deps, true, tag));
+            }
+            prev = arr;
+        }
+        (0..nn).map(|k| prev[ring::prev(k, nn)].clone()).collect()
+    }
+
+    /// Ring allgather over the nodes on one stripe, returning the arrival
+    /// chunk ids per `[step][node]`. With `start[k]` holding node k's own
+    /// block, step s delivers to node m the block that originated at node
+    /// (m − 1 − s) mod nn; when `start` holds the reduce-scatter outputs
+    /// (node k owns block (k+1) mod nn), step s delivers block
+    /// (m − s) mod nn. Callers that pipeline use this attribution to
+    /// register arrivals in their availability maps.
+    fn inter_ring_allgather_steps(
+        &mut self,
+        stripe: usize,
+        bytes: u64,
+        start: &[Vec<Vec<TaskId>>],
+        tag: u32,
+    ) -> Vec<Vec<Vec<TaskId>>> {
+        let nn = self.cluster.n_nodes();
+        let mut at: Vec<Vec<Vec<TaskId>>> = start.to_vec();
+        let mut steps: Vec<Vec<Vec<TaskId>>> = Vec::with_capacity(nn - 1);
+        for _s in 0..nn - 1 {
+            let mut new_at: Vec<Vec<Vec<TaskId>>> = vec![Vec::new(); nn];
+            let mut arrived: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
+            for k in 0..nn {
+                let a = self.send_inter(k, ring::next(k, nn), stripe, bytes, &at[k], false, tag);
+                arrived[ring::next(k, nn)] = a.clone();
+                new_at[ring::next(k, nn)] = a.iter().map(|t| vec![*t]).collect();
+            }
+            at = new_at;
+            steps.push(arrived);
+        }
+        steps
+    }
+
+    /// Flattened [`Self::inter_ring_allgather_steps`]: every arrival at
+    /// each node (the stripe's per-node completion set).
     fn inter_ring_allgather(
         &mut self,
         stripe: usize,
@@ -795,32 +1239,29 @@ impl<'c> HierGraph<'c> {
         tag: u32,
     ) -> Vec<Vec<TaskId>> {
         let nn = self.cluster.n_nodes();
-        let mut at: Vec<Vec<Vec<TaskId>>> = start.to_vec();
+        let steps = self.inter_ring_allgather_steps(stripe, bytes, start, tag);
         let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
-        for _s in 0..nn - 1 {
-            let mut new_at: Vec<Vec<Vec<TaskId>>> = vec![Vec::new(); nn];
-            for k in 0..nn {
-                let a = self.send_inter(k, ring::next(k, nn), stripe, bytes, &at[k], false, tag);
-                done[ring::next(k, nn)].extend(a.iter().copied());
-                new_at[ring::next(k, nn)] = a.iter().map(|t| vec![*t]).collect();
+        for per_node in &steps {
+            for (m, a) in per_node.iter().enumerate() {
+                done[m].extend(a.iter().copied());
             }
-            at = new_at;
         }
         done
     }
 
     /// Pipeline chain node0 → node1 → … on one stripe (Broadcast's inter
-    /// phase). Returns per-node arrival ids (node 0 empty).
+    /// phase); `entry_per_chunk[c]` gates chunk c's first hop. Returns
+    /// per-node arrival ids (node 0 empty).
     fn inter_chain(
         &mut self,
         stripe: usize,
         bytes: u64,
-        entry: &[TaskId],
+        entry_per_chunk: &[Vec<TaskId>],
         tag: u32,
     ) -> Vec<Vec<TaskId>> {
         let nn = self.cluster.n_nodes();
-        let n_chunks = self.inter_chunks(bytes);
-        let mut at: Vec<Vec<TaskId>> = (0..n_chunks).map(|_| entry.to_vec()).collect();
+        debug_assert_eq!(entry_per_chunk.len(), self.inter_chunks(bytes));
+        let mut at: Vec<Vec<TaskId>> = entry_per_chunk.to_vec();
         let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); nn];
         for hop in 0..nn - 1 {
             let a = self.send_inter(hop, hop + 1, stripe, bytes, &at, false, tag);
@@ -828,52 +1269,6 @@ impl<'c> HierGraph<'c> {
             at = a.iter().map(|t| vec![*t]).collect();
         }
         done
-    }
-
-    /// Run the assembled graph and collect per-tier observables.
-    fn finish(
-        self,
-        kind: CollectiveKind,
-        msg_bytes: u64,
-        tiers: &TierShares,
-        p1_bars: &[TaskId],
-        p2_bars: &[TaskId],
-    ) -> Result<HierReport> {
-        let tasks = self.graph.len();
-        let sched = Engine::new(&self.pool).run(&self.graph)?;
-        let intra_times = tiers
-            .intra
-            .active_paths()
-            .into_iter()
-            .filter_map(|p| sched.tag_finish(&self.graph, p.tag()).map(|t| (p, t)))
-            .collect();
-        let inter_times = tiers
-            .inter
-            .active_paths()
-            .into_iter()
-            .filter_map(|s| sched.tag_finish(&self.graph, s.tag()).map(|t| (s, t)))
-            .collect();
-        let intra_phase1 = p1_bars
-            .iter()
-            .map(|t| sched.finish_of(*t))
-            .max()
-            .unwrap_or(SimTime::ZERO);
-        let inter_phase = p2_bars
-            .iter()
-            .map(|t| sched.finish_of(*t))
-            .max()
-            .unwrap_or(SimTime::ZERO);
-        Ok(HierReport {
-            kind,
-            msg_bytes,
-            total: sched.makespan,
-            intra_times,
-            inter_times,
-            intra_phase1,
-            inter_phase,
-            events: sched.events,
-            tasks,
-        })
     }
 }
 
@@ -914,21 +1309,23 @@ fn intra_ring_reduce_scatter(
     (0..n).map(|r| prev[ring::prev(r, n)].clone()).collect()
 }
 
-/// Ring allgather over the builder's node; `entry_per_rank[r]` gates rank
-/// r's first send. Returns every arrival at each rank.
+/// Ring allgather over the builder's node; `entry[r][c]` gates chunk c of
+/// rank r's first send (rank r opens with ring block r). Barriered
+/// callers replicate one barrier across chunks; pipelined callers thread
+/// the per-chunk producers of each rank's block. Returns every arrival at
+/// each rank.
 fn intra_ring_allgather(
     b: &mut GraphBuilder<'_>,
     path: PathId,
     block: u64,
-    entry_per_rank: &[Vec<TaskId>],
+    entry: &[Vec<Vec<TaskId>>],
     tag: u32,
 ) -> Vec<Vec<TaskId>> {
     let n = b.n;
-    let n_chunks = b.chunks_for(path, block).len();
-    let mut at: Vec<Vec<Vec<TaskId>>> = entry_per_rank
+    debug_assert!(entry
         .iter()
-        .map(|e| vec![e.clone(); n_chunks])
-        .collect();
+        .all(|per_rank| per_rank.len() == b.chunks_for(path, block).len()));
+    let mut at: Vec<Vec<Vec<TaskId>>> = entry.to_vec();
     let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); n];
     for _s in 0..n - 1 {
         let mut new_at: Vec<Vec<Vec<TaskId>>> = vec![Vec::new(); n];
@@ -1044,10 +1441,103 @@ mod tests {
             let rep = col.run(32 << 20, &tiers, 4).unwrap();
             assert!(rep.total > SimTime::ZERO, "{kind}: zero makespan");
             assert_eq!(rep.inter_times.len(), 8, "{kind}: missing stripe times");
-            assert!(rep.inter_phase > SimTime::ZERO, "{kind}: no inter phase");
-            assert!(rep.inter_phase <= rep.total);
-            assert!(rep.intra_phase1 <= rep.inter_phase, "{kind}: phases out of order");
+            assert!(
+                rep.inter_phase.end > SimTime::ZERO,
+                "{kind}: no inter phase"
+            );
+            assert!(rep.inter_phase.end <= rep.total);
+            assert!(rep.inter_phase.start <= rep.inter_phase.end);
+            assert!(
+                rep.intra_phase1.end <= rep.inter_phase.end,
+                "{kind}: inter phase cannot end before the phase-1 output feeding it"
+            );
             assert!(rep.algbw_gbps() > 0.0);
+        }
+    }
+
+    /// The tentpole: chunk-pipelined phase joins beat the whole-phase
+    /// barriers for every multi-chunk lowering, and the phase spans show
+    /// the overlap (the inter phase starts before phase 1 has drained).
+    #[test]
+    fn pipelined_beats_barriered_and_overlaps_phases() {
+        for nn in [2usize, 4] {
+            let c = cluster(nn);
+            for kind in [CollectiveKind::AllReduce, CollectiveKind::AllGather] {
+                let tiers = TierShares::new(Shares::nvlink_only(), 8);
+                let msg = 64u64 << 20;
+                let pipe = cc(&c, kind).run(msg, &tiers, 4).unwrap();
+                let bar = cc(&c, kind)
+                    .with_pipeline(false)
+                    .run(msg, &tiers, 4)
+                    .unwrap();
+                assert!(
+                    pipe.total < bar.total,
+                    "nn={nn} {kind}: pipelined {} not under barriered {}",
+                    pipe.total,
+                    bar.total
+                );
+                if kind == CollectiveKind::AllReduce {
+                    assert!(
+                        pipe.inter_phase.start < pipe.intra_phase1.end,
+                        "nn={nn} {kind}: no overlap — inter starts {} after phase 1 ends {}",
+                        pipe.inter_phase.start,
+                        pipe.intra_phase1.end
+                    );
+                }
+            }
+        }
+    }
+
+    /// Both lowerings move exactly the same bytes over exactly the same
+    /// resources — pipelining reorders time, never traffic.
+    #[test]
+    fn pipelined_and_barriered_conserve_resource_bytes() {
+        let c = cluster(2);
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::Broadcast,
+        ] {
+            let tiers = TierShares::new(Shares::nvlink_only(), 8);
+            let pipe = cc(&c, kind).compile(24 << 20, &tiers, 4).unwrap();
+            let bar = cc(&c, kind)
+                .with_pipeline(false)
+                .compile(24 << 20, &tiers, 4)
+                .unwrap();
+            assert_eq!(
+                pipe.graph.resource_bytes(),
+                bar.graph.resource_bytes(),
+                "{kind}: lowering changed per-resource traffic"
+            );
+        }
+    }
+
+    /// Single-chunk schedules must compile to the barriered graph
+    /// task-for-task — the degeneracy contract of the pipelined lowering.
+    #[test]
+    fn single_chunk_pipelined_graph_equals_barriered() {
+        let c = cluster(2);
+        let mut calib = Calibration::h800();
+        calib.chunk_bytes = 1 << 40; // every block is one chunk
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::Broadcast,
+        ] {
+            let tiers = TierShares::new(Shares::nvlink_only(), 8);
+            let mk = |pipeline: bool| {
+                ClusterCollective::new(&c, calib.clone(), kind, 8)
+                    .with_pipeline(pipeline)
+                    .compile(8 << 20, &tiers, 4)
+                    .unwrap()
+            };
+            assert_eq!(
+                mk(true).graph,
+                mk(false).graph,
+                "{kind}: single-chunk pipelined graph diverged from barriered"
+            );
         }
     }
 

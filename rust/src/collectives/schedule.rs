@@ -22,6 +22,94 @@ use crate::topology::Topology;
 use anyhow::Result;
 use std::collections::HashMap;
 
+/// Byte-interval → producing-chunk index: the reusable joint between two
+/// pipelined schedule stages whose chunk grids disagree.
+///
+/// A producing stage registers, per emitted chunk, the byte interval it
+/// covers (in whatever linear coordinate space the caller picks) and the
+/// task whose completion makes those bytes available. A consuming stage
+/// then asks, per *its own* chunks, which producer tasks overlap — the
+/// per-chunk dependency lists that let a cross-node stripe start the
+/// moment the intra-phase chunks feeding it finish, instead of waiting
+/// behind a whole-phase barrier. Mismatched chunk sizes across tiers
+/// (1 MiB intra staging vs. NIC-stripe sub-blocks, say) are the normal
+/// case: overlap is resolved at byte granularity.
+///
+/// Intervals may overlap (several producers of the same bytes — e.g. the
+/// same slice arriving from every node of an allgather ring); a query
+/// returns every overlapping producer, sorted and deduplicated.
+#[derive(Debug, Clone, Default)]
+pub struct ChunkMap {
+    /// (offset, len, producer); `len > 0` by construction.
+    entries: Vec<(u64, u64, TaskId)>,
+}
+
+impl ChunkMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Register one producer covering `[offset, offset + len)`.
+    /// Zero-length registrations are dropped (a zero-byte chunk produces
+    /// nothing a consumer could wait for).
+    pub fn insert(&mut self, offset: u64, len: u64, task: TaskId) {
+        if len > 0 {
+            self.entries.push((offset, len, task));
+        }
+    }
+
+    /// Register a chunk-aligned task list starting at `offset`:
+    /// `tasks[c]` produces the `sizes[c]`-byte chunk at the running
+    /// offset. `sizes` and `tasks` must be parallel (the shape both
+    /// `ring::chunk_sizes` and the graph builders emit).
+    pub fn insert_chunks(&mut self, offset: u64, sizes: &[u64], tasks: &[TaskId]) {
+        debug_assert_eq!(sizes.len(), tasks.len(), "chunk sizes/tasks mismatch");
+        let mut off = offset;
+        for (sz, t) in sizes.iter().zip(tasks) {
+            self.insert(off, *sz, *t);
+            off += sz;
+        }
+    }
+
+    /// Every producer overlapping `[lo, hi)`, sorted and deduplicated.
+    /// Empty when the interval is empty or nothing covers it.
+    pub fn producers(&self, lo: u64, hi: u64) -> Vec<TaskId> {
+        if hi <= lo {
+            return Vec::new();
+        }
+        let mut out: Vec<TaskId> = self
+            .entries
+            .iter()
+            .filter(|(off, len, _)| *off < hi && off + len > lo)
+            .map(|(_, _, t)| *t)
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Per-chunk dependency lists for a consumer whose chunk grid starts
+    /// at `offset` with the given `sizes` — the shape the graph builders'
+    /// `deps_per_chunk` parameters expect.
+    pub fn deps_for_chunks(&self, offset: u64, sizes: &[u64]) -> Vec<Vec<TaskId>> {
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut off = offset;
+        for sz in sizes {
+            out.push(self.producers(off, off + sz));
+            off += sz;
+        }
+        out
+    }
+}
+
 /// Traffic assigned to one path by the balancer.
 #[derive(Debug, Clone, Copy)]
 pub struct PathAssignment {
@@ -602,6 +690,40 @@ mod tests {
         let fused = simulate_group(&topo, std::slice::from_ref(&spec), 60e9).unwrap();
         assert_eq!(fused.total, solo.total);
         assert_eq!(fused.per_call, vec![solo.total]);
+    }
+
+    #[test]
+    fn chunk_map_joins_mismatched_grids() {
+        // Producer grid: 4 × 4-byte chunks over [0, 16). Consumer grid:
+        // 3-byte chunks — every consumer chunk picks up exactly the
+        // producers its bytes straddle.
+        let mut m = ChunkMap::new();
+        let tasks: Vec<TaskId> = (0..4u32).map(TaskId).collect();
+        m.insert_chunks(0, &[4, 4, 4, 4], &tasks);
+        assert_eq!(m.len(), 4);
+        let deps = m.deps_for_chunks(0, &[3, 3, 3, 3, 3, 1]);
+        assert_eq!(deps[0], vec![TaskId(0)]); // [0,3)
+        assert_eq!(deps[1], vec![TaskId(0), TaskId(1)]); // [3,6)
+        assert_eq!(deps[2], vec![TaskId(1), TaskId(2)]); // [6,9)
+        assert_eq!(deps[3], vec![TaskId(2)]); // [9,12)
+        assert_eq!(deps[4], vec![TaskId(3)]); // [12,15)
+        assert_eq!(deps[5], vec![TaskId(3)]); // [15,16)
+        // Out-of-coverage and empty queries come back empty.
+        assert!(m.producers(16, 20).is_empty());
+        assert!(m.producers(5, 5).is_empty());
+    }
+
+    #[test]
+    fn chunk_map_overlapping_producers_dedup() {
+        // Two copies of the same interval (allgather: every node's copy
+        // of a slice) plus a zero-length chunk that must vanish.
+        let mut m = ChunkMap::new();
+        m.insert(0, 8, TaskId(7));
+        m.insert(0, 8, TaskId(3));
+        m.insert(4, 0, TaskId(9));
+        let p = m.producers(2, 6);
+        assert_eq!(p, vec![TaskId(3), TaskId(7)]);
+        assert_eq!(m.len(), 2, "zero-length entry must be dropped");
     }
 
     #[test]

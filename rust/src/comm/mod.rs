@@ -23,7 +23,7 @@ use crate::balancer::{
     initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares,
 };
 use crate::collectives::exec;
-use crate::collectives::hierarchical::ClusterCollective;
+use crate::collectives::hierarchical::{ClusterCollective, PhaseSpan};
 use crate::collectives::multipath::{MultipathCollective, RunReport};
 use crate::collectives::schedule::{simulate_group, MultipathSpec, PathTiming, SimOutcome};
 use crate::collectives::CollectiveKind;
@@ -85,10 +85,14 @@ pub struct TierReport {
     pub inter_shares: Shares<StripeId>,
     /// Per-stripe completion times (the inter balancer's observable).
     pub inter_times: Vec<(StripeId, SimTime)>,
-    /// Finish of the last intra-node phase-1 task.
-    pub intra_phase1: SimTime,
-    /// Finish of the inter-node phase.
-    pub inter_phase: SimTime,
+    /// Span of the intra-node phase 1. Under the default chunk-pipelined
+    /// lowering phases interleave, so spans — not single timestamps —
+    /// describe them.
+    pub intra_phase1: PhaseSpan,
+    /// Span of the inter-node phase.
+    pub inter_phase: PhaseSpan,
+    /// Span of the intra-node phase 3.
+    pub intra_phase3: PhaseSpan,
     /// Stage-2 stripe adjustment triggered by this call, if any.
     pub adjusted: Option<crate::balancer::Adjustment<StripeId>>,
 }
@@ -293,7 +297,8 @@ impl Communicator {
         MultipathCollective::new(&self.topo, self.cfg.run.calibration(), kind, self.n_local())
     }
 
-    /// Hierarchical cluster context for multi-node lowering.
+    /// Hierarchical cluster context for multi-node lowering, honouring
+    /// the config's phase-join strategy (`pipeline_phases`).
     fn cc(&self, kind: CollectiveKind) -> ClusterCollective<'_> {
         ClusterCollective::new(
             &self.cluster,
@@ -301,6 +306,7 @@ impl Communicator {
             kind,
             self.n_local(),
         )
+        .with_pipeline(self.cfg.run.pipeline_phases)
     }
 
     /// Ensure the (operator, size class) has been through Algorithm 1
@@ -459,6 +465,7 @@ impl Communicator {
                 inter_times: hier.inter_times,
                 intra_phase1: hier.intra_phase1,
                 inter_phase: hier.inter_phase,
+                intra_phase3: hier.intra_phase3,
                 adjusted: inter_adjusted,
             }),
         })
@@ -969,7 +976,8 @@ mod tests {
         let tiers = rep.tiers.as_ref().expect("cluster call must carry tiers");
         assert_eq!(tiers.inter_times.len(), 2);
         assert!((tiers.inter_shares.total() - 100.0).abs() < 1e-6);
-        assert!(tiers.inter_phase <= rep.time());
+        assert!(tiers.inter_phase.end <= rep.time());
+        assert!(tiers.inter_phase.start <= tiers.inter_phase.end);
         assert!(rep.time() > SimTime::ZERO);
         // Inter-tier share state is now cached for this size class.
         assert!(c.inter_shares_of(CollectiveKind::AllReduce, 1024 * 4).is_some());

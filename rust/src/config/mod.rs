@@ -66,6 +66,11 @@ pub struct RunConfig {
     /// Spine oversubscription factor of the inter-node fabric (≥ 1;
     /// 1 = full bisection). Ignored when `n_nodes == 1`.
     pub spine_oversub: f64,
+    /// Chunk-level cross-phase pipelining of the hierarchical lowering
+    /// (default true). `false` rebuilds the whole-phase-barrier joins —
+    /// the comparison baseline. Ignored when `n_nodes == 1` (the flat
+    /// lowering has no phases to join).
+    pub pipeline_phases: bool,
     pub balancer: BalancerConfig,
     /// Override the node spec entirely (when preset == Custom).
     pub node: Option<NodeSpec>,
@@ -88,6 +93,7 @@ impl RunConfig {
             n_gpus,
             n_nodes: 1,
             spine_oversub: 1.0,
+            pipeline_phases: true,
             balancer: BalancerConfig::default(),
             node: None,
             disable_rdma: false,
@@ -144,7 +150,7 @@ impl RunConfig {
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let doc = KvDoc::parse(text)?;
         const KNOWN: &[&str] = &[
-            "preset", "n_gpus", "n_nodes", "spine_oversub",
+            "preset", "n_gpus", "n_nodes", "spine_oversub", "pipeline_phases",
             "disable_rdma", "disable_pcie", "seed",
             "balancer.initial_step_pct", "balancer.convergence_threshold",
             "balancer.stability_required", "balancer.max_iterations",
@@ -179,6 +185,7 @@ impl RunConfig {
             n_gpus: doc.usize_or("n_gpus", preset.spec().n_gpus),
             n_nodes: doc.usize_or("n_nodes", 1),
             spine_oversub: doc.f64_or("spine_oversub", 1.0),
+            pipeline_phases: doc.bool_or("pipeline_phases", true),
             balancer,
             node: None,
             disable_rdma: doc.bool_or("disable_rdma", false),
@@ -194,6 +201,7 @@ impl RunConfig {
         doc.set("n_gpus", Value::Int(self.n_gpus as i64));
         doc.set("n_nodes", Value::Int(self.n_nodes as i64));
         doc.set("spine_oversub", Value::Float(self.spine_oversub));
+        doc.set("pipeline_phases", Value::Bool(self.pipeline_phases));
         doc.set("disable_rdma", Value::Bool(self.disable_rdma));
         doc.set("disable_pcie", Value::Bool(self.disable_pcie));
         doc.set("seed", Value::Int(self.seed as i64));
@@ -294,10 +302,14 @@ mod tests {
     fn cluster_fields_roundtrip_and_validate() {
         let mut cfg = RunConfig::cluster(Preset::H800, 4, 8);
         cfg.spine_oversub = 2.0;
+        cfg.pipeline_phases = false;
         cfg.validate().unwrap();
         let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
         assert_eq!(back.n_nodes, 4);
         assert!((back.spine_oversub - 2.0).abs() < 1e-9);
+        assert!(!back.pipeline_phases, "pipeline_phases did not roundtrip");
+        // Pipelining defaults ON when the key is absent.
+        assert!(RunConfig::from_toml_str("preset = \"h800\"").unwrap().pipeline_phases);
         let spec = back.cluster_spec();
         assert_eq!(spec.n_nodes, 4);
         assert!((spec.fabric.oversubscription - 2.0).abs() < 1e-9);

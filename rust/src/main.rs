@@ -36,10 +36,12 @@ COMMANDS:
           [--artifacts <dir>] [--csv <path>]
           data-parallel training with FlexLink gradient AllReduce
   repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster>
-          [--nodes <n>] [--csv <path>]
+          [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
-          case) and `cluster` sweeps 1/2/4/8 nodes with per-tier algbw
+          case), --no-pipeline joins its phases with whole-phase barriers
+          instead of chunk pipelining, and `cluster` sweeps 1/2/4/8 nodes
+          with per-tier algbw plus the barriered-vs-pipelined overlap gain
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
@@ -48,7 +50,7 @@ Presets: h800 (paper testbed), h100, a800, gb200, gb300
 ";
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["no-rdma", "help"])?;
+    let args = Args::parse(std::env::args().skip(1), &["no-rdma", "no-pipeline", "help"])?;
     if args.has("help") {
         print!("{USAGE}");
         return Ok(());
@@ -80,7 +82,7 @@ fn main() -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("table2");
             let nodes = args.flag("nodes").map(|s| s.parse::<usize>()).transpose()?;
-            repro(what, nodes, args.flag("csv"))
+            repro(what, nodes, !args.has("no-pipeline"), args.flag("csv"))
         }
         Some("topo") => {
             let spec = preset.spec();
@@ -249,12 +251,16 @@ fn train(
     Ok(())
 }
 
-fn repro(what: &str, nodes: Option<usize>, csv_path: Option<&str>) -> Result<()> {
+fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str>) -> Result<()> {
     let topo = Topology::build(&Preset::H800.spec());
     let cfg = BalancerConfig::default();
     anyhow::ensure!(
         nodes.is_none() || matches!(what, "table2" | "cluster"),
         "--nodes only applies to the table2 and cluster targets ('{what}' is single-node)"
+    );
+    anyhow::ensure!(
+        pipeline || what == "cluster" || (what == "table2" && nodes.is_some()),
+        "--no-pipeline only applies to the hierarchical targets (table2 --nodes, cluster)"
     );
     if let Some(n) = nodes {
         // Same rule RunConfig::validate enforces for TOML configs.
@@ -284,11 +290,12 @@ fn repro(what: &str, nodes: Option<usize>, csv_path: Option<&str>) -> Result<()>
             }
         }
         "table2" => {
-            // `--nodes` routes through the hierarchical cluster compiler;
+            // `--nodes` routes through the hierarchical cluster compiler
+            // (chunk-pipelined phase joins unless --no-pipeline);
             // `--nodes 1` is the degenerate case and reproduces the plain
             // single-node numbers bit-identically.
             let rows = match nodes {
-                Some(n) => bh::table2_cluster(n, &cfg)?,
+                Some(n) => bh::table2_cluster(n, &cfg, pipeline)?,
                 None => bh::table2(&topo, &cfg)?,
             };
             print!("{}", bh::render_table2(&rows));
@@ -416,6 +423,8 @@ fn repro(what: &str, nodes: Option<usize>, csv_path: Option<&str>) -> Result<()>
                     "intra_algbw",
                     "inter_ms",
                     "inter_algbw",
+                    "barriered_ms",
+                    "overlap_gain_pct",
                     "flat_ring_ms",
                 ]);
                 for r in &all {
@@ -429,6 +438,8 @@ fn repro(what: &str, nodes: Option<usize>, csv_path: Option<&str>) -> Result<()>
                         format!("{:.2}", r.intra_algbw_gbps),
                         format!("{:.4}", r.inter_ms),
                         format!("{:.2}", r.inter_algbw_gbps),
+                        format!("{:.4}", r.barriered_ms),
+                        format!("{:.2}", r.overlap_gain_pct),
                         format!("{:.4}", r.flat_ring_ms),
                     ]);
                 }

@@ -17,14 +17,14 @@ use super::clock::SimTime;
 use super::fairshare::{FlowId, FlowSim};
 use super::resource::{ResourceId, ResourcePool};
 use anyhow::{bail, Result};
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 /// Index of a task inside a [`TaskGraph`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TaskId(pub u32);
 
 /// What a task does when it runs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TaskKind {
     /// A timed data movement across shared link resources.
     Transfer {
@@ -43,7 +43,7 @@ pub enum TaskKind {
     Barrier,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 struct TaskSpec {
     kind: TaskKind,
     deps: Vec<TaskId>,
@@ -52,8 +52,11 @@ struct TaskSpec {
     tag: u32,
 }
 
-/// Builder + storage for the collective's task DAG.
-#[derive(Debug, Clone, Default)]
+/// Builder + storage for the collective's task DAG. Graph equality
+/// (`PartialEq`) is task-for-task: same kinds, same dependency lists,
+/// same tags, in the same insertion order — the observable the
+/// pipelined-vs-barriered degeneracy tests compare.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TaskGraph {
     tasks: Vec<TaskSpec>,
 }
@@ -116,6 +119,23 @@ impl TaskGraph {
     pub fn tag_of(&self, id: TaskId) -> u32 {
         self.tasks[id.0 as usize].tag
     }
+
+    /// Total transfer payload routed through each resource. Two lowerings
+    /// of the same collective must agree here exactly — rearranging
+    /// dependencies (e.g. chunk-level phase pipelining) may move bytes in
+    /// time but never conjure or drop them (conservation invariant; see
+    /// `tests/prop_pipeline.rs`).
+    pub fn resource_bytes(&self) -> BTreeMap<ResourceId, u64> {
+        let mut out = BTreeMap::new();
+        for t in &self.tasks {
+            if let TaskKind::Transfer { bytes, route, .. } = &t.kind {
+                for r in route {
+                    *out.entry(*r).or_insert(0u64) += bytes;
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Per-task execution record.
@@ -146,6 +166,23 @@ impl Schedule {
             .filter(|i| graph.tasks[*i].tag == tag)
             .map(|i| self.timings[i].finish)
             .max()
+    }
+
+    /// (first start, last finish) among the tasks whose ids fall in
+    /// `range` — the phase-span observable for graphs whose phases are
+    /// emitted contiguously (see `collectives::hierarchical`). `None`
+    /// for an empty or out-of-bounds range.
+    pub fn range_span(&self, range: std::ops::Range<usize>) -> Option<(SimTime, SimTime)> {
+        if range.is_empty() || range.end > self.timings.len() {
+            return None;
+        }
+        let mut first = SimTime::NEVER;
+        let mut last = SimTime::ZERO;
+        for t in &self.timings[range] {
+            first = first.min(t.start);
+            last = last.max(t.finish);
+        }
+        Some((first, last))
     }
 
     /// Total busy span (first start → last finish) among tasks with `tag`.
@@ -486,6 +523,48 @@ mod tests {
         let (p, _, _) = pool();
         let s = Engine::new(&p).run(&TaskGraph::new()).unwrap();
         assert_eq!(s.makespan, SimTime::ZERO);
+    }
+
+    #[test]
+    fn range_span_covers_contiguous_phase() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let t1 = g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        let _t2 = g.transfer(1000, vec![a], SimTime::ZERO, vec![t1]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        let (first, last) = s.range_span(0..2).unwrap();
+        assert_eq!(first, SimTime::ZERO);
+        assert_eq!(last, s.makespan);
+        let (f2, l2) = s.range_span(1..2).unwrap();
+        assert_eq!(f2, s.finish_of(t1));
+        assert_eq!(l2, s.makespan);
+        assert!(s.range_span(0..0).is_none());
+        assert!(s.range_span(0..99).is_none());
+    }
+
+    #[test]
+    fn resource_bytes_counts_transfer_payload_per_route_hop() {
+        let (_, a, b) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(100, vec![a], SimTime::ZERO, vec![]);
+        g.transfer(50, vec![a, b], SimTime::ZERO, vec![]);
+        g.delay(SimTime::from_micros(1), vec![]);
+        let by = g.resource_bytes();
+        assert_eq!(by.get(&a), Some(&150));
+        assert_eq!(by.get(&b), Some(&50));
+    }
+
+    #[test]
+    fn graph_equality_is_task_for_task() {
+        let (_, a, _) = pool();
+        let mk = |lat: u64| {
+            let mut g = TaskGraph::new();
+            let t = g.transfer(10, vec![a], SimTime::from_micros(lat), vec![]);
+            g.barrier(vec![t]);
+            g
+        };
+        assert_eq!(mk(5), mk(5));
+        assert_ne!(mk(5), mk(6));
     }
 
     #[test]

@@ -18,6 +18,24 @@ use super::resource::{ResourceId, ResourcePool};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FlowId(pub u64);
 
+/// Aggregate weights at or below this are treated as zero when sizing the
+/// progressive-filling level λ (a resource with no effective demand must
+/// not produce a 0/0 level).
+pub const WEIGHT_EPS: f64 = 1e-12;
+
+/// Relative tolerance of the freeze condition: a flow counts as
+/// bottlenecked (on its own rate cap, or on a resource filling under λ)
+/// when it is within this fraction of the limit. Absolute comparison
+/// would livelock the filling loop on f64 rounding at large capacities.
+pub const FREEZE_REL_EPS: f64 = 1e-9;
+
+/// Clamp applied to a flow's rate cap before scaling [`FREEZE_REL_EPS`]:
+/// an *infinite* cap (uncapped flow) must keep the epsilon finite, since
+/// `∞ − ∞` is NaN and `x >= NaN` is false-forever — the filling loop
+/// would never freeze the flow via its cap (it freezes on a resource
+/// instead, which is the intended behaviour; see the unit tests).
+pub const RATE_CAP_EPS_CLAMP: f64 = 1e18;
+
 #[derive(Debug, Clone)]
 struct FlowState {
     route: Vec<ResourceId>,
@@ -146,7 +164,7 @@ impl FlowSim {
             let mut lambda = f64::INFINITY;
             for (rid, res) in pool.iter() {
                 let w = self.scratch_weight[rid.0 as usize];
-                if w > 1e-12 {
+                if w > WEIGHT_EPS {
                     let cap_left = (res.capacity_bps - self.scratch_used[rid.0 as usize]).max(0.0);
                     lambda = lambda.min(cap_left / w);
                 }
@@ -170,12 +188,14 @@ impl FlowSim {
                 }
                 let id = self.active[k] as usize;
                 let f = self.slab[id].as_ref().unwrap();
-                let capped = f.weight * lambda >= f.rate_cap - 1e-9 * f.rate_cap.min(1e18);
+                let capped = f.weight * lambda
+                    >= f.rate_cap - FREEZE_REL_EPS * f.rate_cap.min(RATE_CAP_EPS_CLAMP);
                 let bottlenecked = capped
                     || f.route.iter().any(|r| {
                         let i = r.0 as usize;
                         let cap_left = (pool.capacity(*r) - self.scratch_used[i]).max(0.0);
-                        self.scratch_weight[i] * lambda >= cap_left - 1e-9 * pool.capacity(*r)
+                        self.scratch_weight[i] * lambda
+                            >= cap_left - FREEZE_REL_EPS * pool.capacity(*r)
                     });
                 if bottlenecked {
                     let rate = (f.weight * lambda).min(f.rate_cap);
@@ -385,6 +405,46 @@ mod tests {
         let f = sim.add_capped(vec![r], 1000, 1.0, 30.0);
         sim.recompute(&pool);
         assert!((sim.rate(f).unwrap() - 30.0).abs() < 1e-9);
+    }
+
+    /// Pin the freeze-condition edge case the named epsilons guard: a
+    /// flow whose fair share lands *exactly* on its rate cap must freeze
+    /// (within `FREEZE_REL_EPS` relative tolerance) instead of
+    /// livelocking the filling loop, and an infinite cap must never
+    /// satisfy the capped test — `∞ − FREEZE_REL_EPS·RATE_CAP_EPS_CLAMP`
+    /// stays `∞`, so such flows freeze on a resource instead.
+    #[test]
+    fn freeze_condition_edge_cases() {
+        // Exact-cap boundary: two equal flows on a 100 B/s link, one
+        // capped at precisely its 50 B/s fair share. The capped test must
+        // fire despite fp equality being knife-edge.
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let capped = sim.add_capped(vec![r], 1000, 1.0, 50.0);
+        let free = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!((sim.rate(capped).unwrap() - 50.0).abs() < 1e-9);
+        assert!((sim.rate(free).unwrap() - 50.0).abs() < 1e-9);
+
+        // A cap within one relative epsilon *below* the fair share still
+        // freezes at the cap (not above it).
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let cap = 50.0 * (1.0 - 0.5 * FREEZE_REL_EPS);
+        let near = sim.add_capped(vec![r], 1000, 1.0, cap);
+        sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        assert!(sim.rate(near).unwrap() <= cap);
+
+        // Infinite rate cap: the flow must be frozen by the resource, at
+        // a finite rate — the RATE_CAP_EPS_CLAMP guard at work.
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let f = sim.add_capped(vec![r], 1000, 1.0, f64::INFINITY);
+        sim.recompute(&pool);
+        let rate = sim.rate(f).unwrap();
+        assert!(rate.is_finite());
+        assert!((rate - 100.0).abs() < 1e-9);
     }
 
     #[test]

@@ -85,8 +85,32 @@ fn hierarchical_allreduce_beats_naive_flat_ring_end_to_end() {
     );
     // Sanity on the per-tier observables the balancers consume.
     assert_eq!(hier.inter_times.len(), 8);
-    assert!(hier.intra_phase1 > flexlink::sim::SimTime::ZERO);
-    assert!(hier.inter_phase >= hier.intra_phase1);
+    assert!(hier.intra_phase1.end > flexlink::sim::SimTime::ZERO);
+    assert!(hier.inter_phase.end >= hier.intra_phase1.end);
+    // Default lowering is chunk-pipelined: the inter phase starts before
+    // phase 1 drains (cross-phase overlap), and the whole-phase-barrier
+    // lowering is strictly slower.
+    assert!(
+        hier.inter_phase.start < hier.intra_phase1.end,
+        "no cross-phase overlap: inter starts {} after phase 1 ends {}",
+        hier.inter_phase.start,
+        hier.intra_phase1.end
+    );
+    let barriered = ClusterCollective::new(
+        &cluster,
+        Calibration::h800(),
+        CollectiveKind::AllReduce,
+        8,
+    )
+    .with_pipeline(false)
+    .run(msg, &tiers, 4)
+    .unwrap();
+    assert!(
+        hier.total < barriered.total,
+        "pipelined {} not under barriered {}",
+        hier.total,
+        barriered.total
+    );
 }
 
 /// Pure-movement collectives stay bit-exact across 2 nodes: every global
