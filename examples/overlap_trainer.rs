@@ -1,0 +1,82 @@
+//! Compute/comm overlap end to end: a DDP-style training step where the
+//! backward pass is simulated as compute chunks on one stream while each
+//! finished gradient bucket's Avg-AllReduce rides a second stream behind
+//! an event — all priced together on the shared stream-ordered DES, with
+//! the real bytes averaged losslessly on the functional path.
+//!
+//! Run: `cargo run --release --example overlap_trainer`
+
+use flexlink::collectives::CollectiveKind;
+use flexlink::comm::{CommConfig, Communicator};
+use flexlink::config::presets::Preset;
+use flexlink::dtype::{DeviceBuffer, RedOp};
+use flexlink::sim::SimTime;
+
+fn main() -> flexlink::Result<()> {
+    let n = 8;
+    let cfg = CommConfig::new(Preset::H800, n);
+    let mut comm = Communicator::init(cfg)?;
+
+    // A 64 MB gradient (16M f32 params), rank r holding the value r+1
+    // everywhere so the DP average is checkable by eye: (1+…+8)/8 = 4.5.
+    let elems = (64 << 20) / 4;
+    let grads: Vec<Vec<f32>> = (0..n).map(|r| vec![(r + 1) as f32; elems]).collect();
+
+    // Size the simulated backward window to the solo AllReduce time —
+    // the regime where gradient traffic is fully hideable in principle.
+    let comm_solo = comm.time_collective(CollectiveKind::AllReduce, (elems * 4) as u64)?.time();
+    let bwd = comm_solo;
+    println!(
+        "solo gradient AllReduce {comm_solo}, simulated backward {bwd}; \
+         overlapping with {} buckets:",
+        8
+    );
+
+    let buckets = 8usize;
+    let chunk = SimTime::from_secs_f64(bwd.as_secs_f64() / buckets as f64);
+    let compute_stream = comm.create_stream();
+    let comm_stream = comm.create_stream();
+    let t0 = comm.device().now();
+    let mut handles = Vec::new();
+    let mut bucket_devs: Vec<Vec<DeviceBuffer>> = Vec::new();
+    for b in 0..buckets {
+        let lo = elems * b / buckets;
+        let hi = elems * (b + 1) / buckets;
+        // Backward chunk b "computes" this bucket's gradient...
+        comm.compute_async(chunk, compute_stream)?;
+        let ready = comm.record_event(compute_stream)?;
+        // ...and its AllReduce launches the moment it lands.
+        comm.stream_wait_event(comm_stream, ready)?;
+        let mut dev: Vec<DeviceBuffer> = grads
+            .iter()
+            .map(|g| DeviceBuffer::from_f32(&g[lo..hi]))
+            .collect();
+        handles.push(comm.all_reduce_in_place_async(&mut dev, RedOp::Avg, comm_stream)?);
+        bucket_devs.push(dev);
+    }
+    let overlapped = comm.synchronize()?.saturating_sub(t0);
+
+    // Lossless: every rank's every bucket holds the exact DP mean.
+    for dev in &bucket_devs {
+        for rank in dev {
+            assert!(rank.to_f32_vec().iter().all(|&v| v == 4.5));
+        }
+    }
+
+    let mut comm_total = SimTime::ZERO;
+    for h in handles {
+        comm_total += comm.wait(h)?.time();
+    }
+    let sequential = bwd + comm_total;
+    println!("  bucketed comm total  {comm_total}");
+    println!("  sequential (bwd+comm) {sequential}");
+    println!("  overlapped window     {overlapped}");
+    println!(
+        "  step-time saving      {:.1}% (overlap efficiency {:.1}%)",
+        (1.0 - overlapped.as_secs_f64() / sequential.as_secs_f64()) * 100.0,
+        sequential.saturating_sub(overlapped).as_secs_f64()
+            / bwd.as_secs_f64().min(comm_total.as_secs_f64())
+            * 100.0
+    );
+    Ok(())
+}

@@ -514,94 +514,6 @@ pub fn all_to_all(
     Ok(())
 }
 
-// ---------------------------------------------------------------------------
-// f32 compatibility wrappers — deprecated shims over the typed executors,
-// kept only for the one shim-equivalence test (and any straggler callers)
-// until the legacy `Vec<f32>` surface is deleted outright.
-// ---------------------------------------------------------------------------
-
-/// Vec<f32> rank buffers → typed buffers (shared by every f32 shim,
-/// here and on the Communicator).
-pub(crate) fn to_dev(bufs: &[Vec<f32>]) -> Vec<DeviceBuffer> {
-    bufs.iter().map(|b| DeviceBuffer::from_f32(b)).collect()
-}
-
-/// Copy typed results back into the caller's Vec<f32> buffers.
-pub(crate) fn write_back(bufs: &mut [Vec<f32>], dev: &[DeviceBuffer]) {
-    for (b, d) in bufs.iter_mut().zip(dev) {
-        b.clear();
-        b.extend_from_slice(&d.to_f32_vec());
-    }
-}
-
-/// f32-sum shim over [`all_reduce`].
-#[deprecated(note = "use the typed `all_reduce` (DeviceBuffer) executor")]
-pub fn all_reduce_f32(
-    fabric: &Fabric,
-    extents: &PathExtents,
-    bufs: &mut [Vec<f32>],
-) -> Result<()> {
-    let mut dev = to_dev(bufs);
-    anyhow::ensure!(!dev.is_empty(), "need one buffer per rank");
-    all_reduce(fabric, extents, &mut dev, RedOp::Sum)?;
-    write_back(bufs, &dev);
-    Ok(())
-}
-
-/// f32 shim over [`all_gather`].
-#[deprecated(note = "use the typed `all_gather` (DeviceBuffer) executor")]
-pub fn all_gather_f32(
-    fabric: &Fabric,
-    extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
-) -> Result<()> {
-    let dev_in = to_dev(inputs);
-    let mut dev_out = to_dev(outputs);
-    all_gather(fabric, extents, &dev_in, &mut dev_out)?;
-    write_back(outputs, &dev_out);
-    Ok(())
-}
-
-/// f32 shim over [`broadcast`] (root 0).
-#[deprecated(note = "use the typed `broadcast` (DeviceBuffer) executor")]
-pub fn broadcast_f32(fabric: &Fabric, extents: &PathExtents, bufs: &mut [Vec<f32>]) -> Result<()> {
-    let mut dev = to_dev(bufs);
-    broadcast(fabric, extents, &mut dev, 0)?;
-    write_back(bufs, &dev);
-    Ok(())
-}
-
-/// f32-sum shim over [`reduce_scatter`].
-#[deprecated(note = "use the typed `reduce_scatter` (DeviceBuffer) executor")]
-pub fn reduce_scatter_f32(
-    fabric: &Fabric,
-    extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
-) -> Result<()> {
-    let dev_in = to_dev(inputs);
-    let mut dev_out = to_dev(outputs);
-    reduce_scatter(fabric, extents, &dev_in, &mut dev_out, RedOp::Sum)?;
-    write_back(outputs, &dev_out);
-    Ok(())
-}
-
-/// f32 shim over [`all_to_all`].
-#[deprecated(note = "use the typed `all_to_all` (DeviceBuffer) executor")]
-pub fn all_to_all_f32(
-    fabric: &Fabric,
-    extents: &PathExtents,
-    inputs: &[Vec<f32>],
-    outputs: &mut [Vec<f32>],
-) -> Result<()> {
-    let dev_in = to_dev(inputs);
-    let mut dev_out = to_dev(outputs);
-    all_to_all(fabric, extents, &dev_in, &mut dev_out)?;
-    write_back(outputs, &dev_out);
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

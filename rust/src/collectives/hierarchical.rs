@@ -42,7 +42,7 @@
 
 use super::multipath::MultipathCollective;
 use super::ring;
-use super::schedule::{ChunkMap, GraphBuilder};
+use super::schedule::{phase_span, ChunkMap, GraphBuilder};
 use super::CollectiveKind;
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
@@ -53,36 +53,14 @@ use crate::topology::cluster::Cluster;
 use anyhow::Result;
 use std::ops::Range;
 
-/// First-start → last-finish span of one lowering phase. Under the
-/// barriered lowering the phases abut (one span's `end` is the next
-/// phase's gate); under chunk pipelining they interleave, so a single
-/// timestamp cannot describe a phase. The per-tier balancers are
-/// unaffected either way — they read their tag-attributed completion
-/// times ([`HierReport::intra_times`] / [`HierReport::inter_times`]),
-/// which stay correct under overlap.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct PhaseSpan {
-    pub start: SimTime,
-    pub end: SimTime,
-}
-
-impl PhaseSpan {
-    /// The absent phase (degenerate single-node runs, or an operator
-    /// without that phase).
-    pub const EMPTY: PhaseSpan = PhaseSpan {
-        start: SimTime::ZERO,
-        end: SimTime::ZERO,
-    };
-
-    /// Busy length of the span (saturating; EMPTY → ZERO).
-    pub fn duration(self) -> SimTime {
-        self.end.saturating_sub(self.start)
-    }
-
-    pub fn is_empty(self) -> bool {
-        self == Self::EMPTY
-    }
-}
+/// Phase spans are the hoisted [`super::schedule::PhaseSpan`] — one
+/// definition shared with the stream scheduler's per-op spans; re-exported
+/// here because hierarchical reports are where they first appeared. The
+/// per-tier balancers are unaffected by span overlap either way — they
+/// read their tag-attributed completion times
+/// ([`HierReport::intra_times`] / [`HierReport::inter_times`]), which
+/// stay correct under it.
+pub use super::schedule::PhaseSpan;
 
 /// A bound (cluster, calibration, operator, local-rank-count) context —
 /// the hierarchical analogue of [`MultipathCollective`].
@@ -116,6 +94,11 @@ pub struct CompiledHier {
     pub p1_range: Range<usize>,
     /// Inter-node phase task ids.
     pub p2_range: Range<usize>,
+    /// Phase-3 (intra) task ids — everything this lowering emitted after
+    /// the inter phase. Recorded explicitly (not "to end of graph") so a
+    /// plan compiled *onto* a shared stream-batch graph keeps its own
+    /// watermark when later ops append more tasks.
+    pub p3_range: Range<usize>,
 }
 
 /// DES outcome of one hierarchical collective.
@@ -276,22 +259,15 @@ impl<'c> ClusterCollective<'c> {
             .into_iter()
             .filter_map(|s| sched.tag_finish(&compiled.graph, s.tag()).map(|t| (s, t)))
             .collect();
-        let span = |r: &Range<usize>| {
-            sched
-                .range_span(r.clone())
-                .map(|(start, end)| PhaseSpan { start, end })
-                .unwrap_or(PhaseSpan::EMPTY)
-        };
         Ok(HierReport {
             kind: self.kind,
             msg_bytes,
             total: sched.makespan,
             intra_times,
             inter_times,
-            intra_phase1: span(&compiled.p1_range),
-            inter_phase: span(&compiled.p2_range),
-            // Phase 3 is everything emitted after the inter phase.
-            intra_phase3: span(&(compiled.p2_range.end..tasks)),
+            intra_phase1: phase_span(&sched, compiled.p1_range.clone()),
+            inter_phase: phase_span(&sched, compiled.p2_range.clone()),
+            intra_phase3: phase_span(&sched, compiled.p3_range.clone()),
             events: sched.events,
             tasks,
         })
@@ -307,19 +283,50 @@ impl<'c> ClusterCollective<'c> {
         tiers: &TierShares,
         elem_bytes: u64,
     ) -> Result<CompiledHier> {
+        self.compile_onto(
+            msg_bytes,
+            tiers,
+            elem_bytes,
+            self.cluster.pool.clone(),
+            TaskGraph::new(),
+        )
+    }
+
+    /// As [`Self::compile`], appending onto an existing (pool, graph) —
+    /// how the stream scheduler fuses several enqueued cluster
+    /// collectives into ONE DES launch. The lowering adds its own
+    /// protocol/stripe resources (its own streams into the NICs) while
+    /// the raw physical links stay shared, so concurrent hierarchical
+    /// collectives contend for the same lanes under max–min fair share.
+    /// The returned phase ranges are absolute ids in the shared graph.
+    pub fn compile_onto(
+        &self,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        elem_bytes: u64,
+        pool: ResourcePool,
+        graph: TaskGraph,
+    ) -> Result<CompiledHier> {
         anyhow::ensure!(msg_bytes > 0, "empty message");
         anyhow::ensure!(
             self.cluster.n_nodes() >= 2,
             "single-node collectives lower through MultipathCollective, not the \
              hierarchical compiler"
         );
+        let hg = HierGraph::onto(self, pool, graph);
         match self.kind {
-            CollectiveKind::AllReduce => self.compile_allreduce(msg_bytes, tiers, elem_bytes),
-            CollectiveKind::AllGather => self.compile_allgather(msg_bytes, tiers, elem_bytes),
-            CollectiveKind::ReduceScatter => {
-                self.compile_reduce_scatter(msg_bytes, tiers, elem_bytes)
+            CollectiveKind::AllReduce => {
+                self.compile_allreduce(hg, msg_bytes, tiers, elem_bytes)
             }
-            CollectiveKind::Broadcast => self.compile_broadcast(msg_bytes, tiers, elem_bytes),
+            CollectiveKind::AllGather => {
+                self.compile_allgather(hg, msg_bytes, tiers, elem_bytes)
+            }
+            CollectiveKind::ReduceScatter => {
+                self.compile_reduce_scatter(hg, msg_bytes, tiers, elem_bytes)
+            }
+            CollectiveKind::Broadcast => {
+                self.compile_broadcast(hg, msg_bytes, tiers, elem_bytes)
+            }
             CollectiveKind::AllToAll => anyhow::bail!(
                 "alltoall has no hierarchical lowering yet (single-node only)"
             ),
@@ -439,13 +446,14 @@ impl<'c> ClusterCollective<'c> {
     /// → intra allgather.
     fn compile_allreduce(
         &self,
+        mut hg: HierGraph<'_>,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
     ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
-        let mut hg = HierGraph::new(self);
+        let base = hg.graph.len();
         let intra_ext = tiers.intra.to_extents(msg, elem);
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
@@ -532,20 +540,21 @@ impl<'c> ClusterCollective<'c> {
                 }
             });
         }
-        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
+        Ok(hg.into_compiled(base..p1_end, p1_end..p2_end))
     }
 
     /// AllGather: inter ring allgather per stripe → intra allgather of
     /// the node-resident blocks (no reduce phase).
     fn compile_allgather(
         &self,
+        mut hg: HierGraph<'_>,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
     ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
-        let mut hg = HierGraph::new(self);
+        let base = hg.graph.len();
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
         let inter_ext = tiers.inter.to_extents(msg * nl, elem);
         let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
@@ -622,20 +631,21 @@ impl<'c> ClusterCollective<'c> {
                 }
             });
         }
-        Ok(hg.into_compiled(0..0, 0..p2_end))
+        Ok(hg.into_compiled(base..base, base..p2_end))
     }
 
     /// ReduceScatter: intra reduce-scatter → inter ring reduce-scatter
     /// per stripe (outputs land scattered; no phase 3).
     fn compile_reduce_scatter(
         &self,
+        mut hg: HierGraph<'_>,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
     ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
-        let mut hg = HierGraph::new(self);
+        let base = hg.graph.len();
         let intra_ext = tiers.intra.to_extents(msg, elem);
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
@@ -663,20 +673,21 @@ impl<'c> ClusterCollective<'c> {
             }
         }
         let p2_end = hg.graph.len();
-        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
+        Ok(hg.into_compiled(base..p1_end, p1_end..p2_end))
     }
 
     /// Broadcast: intra chain at the root node → inter chain per stripe
     /// → intra allgather on the non-root nodes.
     fn compile_broadcast(
         &self,
+        mut hg: HierGraph<'_>,
         msg: u64,
         tiers: &TierShares,
         elem: u64,
     ) -> Result<CompiledHier> {
         let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
-        let mut hg = HierGraph::new(self);
+        let base = hg.graph.len();
         let intra_ext = tiers.intra.to_extents(msg, elem);
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let bc_models = self.intra_models(CollectiveKind::Broadcast, &tiers.intra);
@@ -756,7 +767,7 @@ impl<'c> ClusterCollective<'c> {
                 }
             });
         }
-        Ok(hg.into_compiled(0..p1_end, p1_end..p2_end))
+        Ok(hg.into_compiled(base..p1_end, p1_end..p2_end))
     }
 }
 
@@ -964,13 +975,21 @@ struct HierGraph<'c> {
 
 impl<'c> HierGraph<'c> {
     fn new(cc: &ClusterCollective<'c>) -> Self {
+        Self::onto(cc, cc.cluster.pool.clone(), TaskGraph::new())
+    }
+
+    /// Build onto an existing (pool, graph): the lowering's private
+    /// stripe-protocol resources are appended to `pool`, its tasks to
+    /// `graph` — several enqueued cluster collectives fuse into one DES
+    /// launch this way (the hierarchical mirror of
+    /// [`GraphBuilder::onto`]).
+    fn onto(cc: &ClusterCollective<'c>, mut pool: ResourcePool, graph: TaskGraph) -> Self {
         let nn = cc.cluster.n_nodes();
         let nl = cc.n_local;
         let spec = &cc.cluster.spec.node;
         let inter_model = cc.calib.rdma_model(spec.nic_unidir_bps(), nn.max(2));
         let hop_latency =
             SimTime::from_secs_f64(cc.cluster.spec.fabric.hop_latency_us * 1e-6);
-        let mut pool = cc.cluster.pool.clone();
         let stripe_proto = (0..nn)
             .map(|k| {
                 (0..nl)
@@ -986,7 +1005,7 @@ impl<'c> HierGraph<'c> {
         HierGraph {
             cluster: cc.cluster,
             pool,
-            graph: TaskGraph::new(),
+            graph,
             n_local: nl,
             inter_model,
             hop_latency,
@@ -1102,13 +1121,16 @@ impl<'c> HierGraph<'c> {
     }
 
     /// Consume the accumulated (pool, graph) into a [`CompiledHier`] with
-    /// the given phase id-ranges.
+    /// the given phase id-ranges; phase 3 is everything emitted after the
+    /// inter phase, watermarked at the graph's current length.
     fn into_compiled(self, p1_range: Range<usize>, p2_range: Range<usize>) -> CompiledHier {
+        let p3_range = p2_range.end..self.graph.len();
         CompiledHier {
             pool: self.pool,
             graph: self.graph,
             p1_range,
             p2_range,
+            p3_range,
         }
     }
 

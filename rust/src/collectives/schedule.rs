@@ -17,10 +17,64 @@
 use super::ring::chunk_sizes;
 use super::CollectiveKind;
 use crate::links::{PathId, PathModel};
-use crate::sim::{Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind};
+use crate::sim::{
+    Engine, ResourceId, ResourcePool, Schedule, SimTime, TaskGraph, TaskId, TaskKind,
+};
 use crate::topology::Topology;
 use anyhow::Result;
 use std::collections::HashMap;
+
+/// First-start → last-finish span of one contiguous task-id range — a
+/// lowering phase of a hierarchical collective, or one op of a fused
+/// stream batch. Under the barriered hierarchical lowering phases abut
+/// (one span's `end` is the next phase's gate); under chunk pipelining —
+/// and under concurrent stream execution — spans interleave, so a single
+/// timestamp cannot describe them. Shared by [`HierReport`] and the
+/// per-op spans of the stream scheduler (one definition, one query path:
+/// [`phase_span`] over [`Schedule::range_span`]).
+///
+/// [`HierReport`]: super::hierarchical::HierReport
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PhaseSpan {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl PhaseSpan {
+    /// The absent phase (degenerate single-node runs, or an operator
+    /// without that phase).
+    pub const EMPTY: PhaseSpan = PhaseSpan {
+        start: SimTime::ZERO,
+        end: SimTime::ZERO,
+    };
+
+    /// Busy length of the span (saturating; EMPTY → ZERO).
+    pub fn duration(self) -> SimTime {
+        self.end.saturating_sub(self.start)
+    }
+
+    pub fn is_empty(self) -> bool {
+        self == Self::EMPTY
+    }
+
+    /// The span shifted `earlier` leftward (saturating at zero) — how a
+    /// batch-relative span becomes op-relative.
+    pub fn rebased(self, earlier: SimTime) -> PhaseSpan {
+        PhaseSpan {
+            start: self.start.saturating_sub(earlier),
+            end: self.end.saturating_sub(earlier),
+        }
+    }
+}
+
+/// Span of the tasks whose ids fall in `range` on an executed schedule;
+/// [`PhaseSpan::EMPTY`] for an empty or out-of-bounds range.
+pub fn phase_span(sched: &Schedule, range: std::ops::Range<usize>) -> PhaseSpan {
+    sched
+        .range_span(range)
+        .map(|(start, end)| PhaseSpan { start, end })
+        .unwrap_or(PhaseSpan::EMPTY)
+}
 
 /// Byte-interval → producing-chunk index: the reusable joint between two
 /// pipelined schedule stages whose chunk grids disagree.
@@ -415,7 +469,11 @@ impl<'t> GraphBuilder<'t> {
 
 /// Emit one collective's tasks into `b`, tagging each (call, path) as
 /// `tag_base + path.tag()` so fused launches can attribute finishes.
-fn build_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
+/// This is the compiled form of one single-node collective — the stream
+/// scheduler appends one per enqueued op into a shared (pool, graph)
+/// with `tag_base = 0` and disambiguates by task-id range instead of by
+/// tag ([`crate::sim::Schedule::tag_finish_in`]).
+pub fn append_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
     for pa in &spec.paths {
         if pa.bytes == 0 {
             continue;
@@ -441,17 +499,13 @@ fn build_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
     }
 }
 
-/// Tag stride per fused call: path tags are 1..=3, so call `i` owns
-/// tags `i*4+1 ..= i*4+3`.
-const CALL_TAG_STRIDE: u32 = 4;
-
 /// Execute one multi-path collective on the DES; returns per-path times.
 pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Result<SimOutcome> {
     spec.validate()?;
     let models: Vec<(PathId, PathModel)> =
         spec.paths.iter().map(|p| (p.path, p.model)).collect();
     let mut b = GraphBuilder::new(topo, spec.n, &models, reduce_bps);
-    build_call(&mut b, spec, 0);
+    append_call(&mut b, spec, 0);
     let tasks = b.graph.len();
     let sched = Engine::new(&b.pool).run(&b.graph)?;
     let per_path = spec
@@ -473,61 +527,13 @@ pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Resul
     })
 }
 
-/// Outcome of a fused multi-collective launch (`group_start`/`group_end`).
-#[derive(Debug, Clone)]
-pub struct GroupOutcome {
-    /// Makespan of the fused launch — all calls contending concurrently.
-    pub total: SimTime,
-    /// Each call's completion time *inside* the fused launch.
-    pub per_call: Vec<SimTime>,
-    pub events: u64,
-    pub tasks: usize,
-}
-
-/// Compile every spec into ONE task graph over ONE resource pool and run
-/// it. Calls share the raw physical links (NVLink lanes, PCIe root
-/// ports, NICs) but get private per-call protocol resources — the DES
-/// analog of NCCL's grouped launch, where fused collectives ride
-/// separate streams into the same wires.
-pub fn simulate_group(
-    topo: &Topology,
-    specs: &[MultipathSpec],
-    reduce_bps: f64,
-) -> Result<GroupOutcome> {
-    anyhow::ensure!(!specs.is_empty(), "empty group launch");
-    let mut pool = topo.pool.clone();
-    let mut graph = TaskGraph::new();
-    for (i, spec) in specs.iter().enumerate() {
-        spec.validate()?;
-        let models: Vec<(PathId, PathModel)> =
-            spec.paths.iter().map(|p| (p.path, p.model)).collect();
-        let mut b = GraphBuilder::onto(topo, spec.n, &models, reduce_bps, pool, graph);
-        build_call(&mut b, spec, i as u32 * CALL_TAG_STRIDE);
-        (pool, graph) = b.into_parts();
-    }
-    let tasks = graph.len();
-    let sched = Engine::new(&pool).run(&graph)?;
-    let per_call = specs
-        .iter()
-        .enumerate()
-        .map(|(i, spec)| {
-            spec.paths
-                .iter()
-                .filter(|pa| pa.bytes > 0)
-                .filter_map(|pa| {
-                    sched.tag_finish(&graph, i as u32 * CALL_TAG_STRIDE + pa.path.tag())
-                })
-                .max()
-                .unwrap_or(SimTime::ZERO)
-        })
-        .collect();
-    Ok(GroupOutcome {
-        total: sched.makespan,
-        per_call,
-        events: sched.events,
-        tasks,
-    })
-}
+// NOTE: the old `simulate_group` fused-launch compiler (tag-stride
+// attribution) was deleted when `group_start`/`group_end` were rebuilt
+// over the stream scheduler — fused launches now compile through
+// `comm::stream::SimDevice`, which appends per-op fragments with
+// [`append_call`] / `ClusterCollective::compile_onto` and attributes
+// per-op completion by task-id range (`Schedule::tag_finish_in`), so
+// there is exactly ONE implementation of concurrent-collective pricing.
 
 #[cfg(test)]
 mod tests {
@@ -627,70 +633,11 @@ mod tests {
         assert_eq!(out.total, t_nv.max(t_pcie));
     }
 
-    #[test]
-    fn fused_group_never_slower_than_sequential_sum() {
-        // Two collectives fused into one launch share the physical links
-        // under fair share; the fused makespan must not exceed launching
-        // them back to back, and with nonzero per-step latencies the
-        // overlap must win outright.
-        let topo = h800();
-        let calib = Calibration::h800();
-        let s = 32u64 << 20;
-        let mk = |kind: CollectiveKind| MultipathSpec {
-            kind,
-            n: 4,
-            msg_bytes: s,
-            paths: vec![PathAssignment {
-                path: PathId::Nvlink,
-                bytes: s,
-                model: calib.nvlink_model(kind, 4, topo.spec.nvlink_unidir_bps()),
-            }],
-        };
-        let specs = vec![mk(CollectiveKind::AllReduce), mk(CollectiveKind::AllGather)];
-        let seq: SimTime = specs
-            .iter()
-            .map(|sp| simulate(&topo, sp, 60e9).unwrap().total)
-            .sum();
-        let fused = simulate_group(&topo, &specs, 60e9).unwrap();
-        assert_eq!(fused.per_call.len(), 2);
-        assert!(
-            fused.total <= seq,
-            "fused {} > sequential sum {}",
-            fused.total,
-            seq
-        );
-        assert!(fused.total < seq, "no overlap benefit at all");
-        // Each call inside the fused launch finishes no earlier than it
-        // does alone (contention can only slow a call down) and no later
-        // than the fused makespan.
-        for (i, sp) in specs.iter().enumerate() {
-            let alone = simulate(&topo, sp, 60e9).unwrap().total;
-            assert!(fused.per_call[i] >= alone, "call {i} sped up under contention?");
-            assert!(fused.per_call[i] <= fused.total);
-        }
-    }
-
-    #[test]
-    fn single_call_group_matches_solo_simulate() {
-        let topo = h800();
-        let kind = CollectiveKind::AllGather;
-        let model = nv_model(kind, 4, &topo);
-        let s = 16u64 << 20;
-        let spec = MultipathSpec {
-            kind,
-            n: 4,
-            msg_bytes: s,
-            paths: vec![PathAssignment {
-                path: PathId::Nvlink,
-                bytes: s,
-                model,
-            }],
-        };
-        let solo = simulate(&topo, &spec, 60e9).unwrap();
-        let fused = simulate_group(&topo, std::slice::from_ref(&spec), 60e9).unwrap();
-        assert_eq!(fused.total, solo.total);
-        assert_eq!(fused.per_call, vec![solo.total]);
-    }
+    // (The old simulate_group fused-launch tests moved up the stack:
+    // comm::tests::group_fuses_calls_and_never_loses_to_sequential and
+    // tests/prop_streams.rs cover fused-vs-sequential and the solo
+    // degenerate case against the stream scheduler, which is now the
+    // only fused-launch implementation.)
 
     #[test]
     fn chunk_map_joins_mismatched_grids() {

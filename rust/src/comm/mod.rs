@@ -11,13 +11,31 @@
 //! The collective entry points are **typed**: buffers are
 //! [`DeviceBuffer`]s carrying a [`DataType`] tag, reductions take a full
 //! [`RedOp`], out-of-place send/recv pairs are the default (in-place is
-//! the NCCL-documented special case), and [`Self::group_start`] /
-//! [`Self::group_end`] fuse enqueued collectives into a single DES
-//! launch. [`api`] exposes the drop-in NCCL-style C-ish surface
+//! the NCCL-documented special case).
+//!
+//! Execution is **stream-ordered and nonblocking**, like real NCCL: the
+//! `*_async` entry points enqueue onto a [`Stream`] and return a
+//! [`PendingOp`] immediately; [`Event`]s impose cross-stream edges;
+//! [`Communicator::wait`] / [`Communicator::stream_synchronize`] drive a
+//! single shared fair-share DES ([`SimDevice`]) so concurrent
+//! collectives — across streams, and across multiple communicators built
+//! over the same cluster via [`Communicator::init_shared`] — are priced
+//! with real link contention (see [`stream`] for the batch semantics).
+//! The blocking methods are thin enqueue+wait wrappers over that
+//! machinery and produce bit-identical reports to the pre-stream
+//! Communicator. [`Communicator::group_start`] /
+//! [`Communicator::group_end`] are sugar over per-call streams: every
+//! enqueued collective fuses into one DES launch. [`api`] exposes the
+//! drop-in NCCL-style C-ish surface
 //! (`flexlink_all_reduce(comm, send, recv, count, datatype, op)`).
 
 pub mod api;
 pub mod group;
+pub mod stream;
+
+pub use stream::{
+    CollectiveOutcome, CollectivePlan, Event, OpOutcome, PendingOp, SimDevice, Stream,
+};
 
 use crate::balancer::{
     initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares,
@@ -25,7 +43,6 @@ use crate::balancer::{
 use crate::collectives::exec;
 use crate::collectives::hierarchical::{ClusterCollective, PhaseSpan};
 use crate::collectives::multipath::{MultipathCollective, RunReport};
-use crate::collectives::schedule::{simulate_group, MultipathSpec, PathTiming, SimOutcome};
 use crate::collectives::CollectiveKind;
 use crate::config::presets::Preset;
 use crate::config::RunConfig;
@@ -160,13 +177,11 @@ impl GroupReport {
     }
 }
 
-/// A collective enqueued between `group_start` and `group_end`.
+/// A collective enqueued between `group_start` and `group_end`: its
+/// compiled plan (shares snapshotted at call time) plus its solo timing.
 #[derive(Debug, Clone)]
 struct PendingCall {
-    kind: CollectiveKind,
-    msg_bytes: u64,
-    elem_bytes: u64,
-    shares: Shares,
+    plan: CollectivePlan,
     individual: SimTime,
 }
 
@@ -207,6 +222,13 @@ pub struct Communicator {
     cluster: Cluster,
     ledger: Arc<MemoryLedger>,
     fabric: Fabric,
+    /// The shared stream-ordered DES this communicator prices against —
+    /// possibly shared with other communicators ([`Self::init_shared`]).
+    device: Arc<SimDevice>,
+    /// Stream the blocking entry points enqueue onto (always drained by
+    /// their immediate wait, so blocking calls never queue behind each
+    /// other spuriously).
+    default_stream: Stream,
     ops: HashMap<(CollectiveKind, u32), OpState>,
     /// Inter-tier (NIC-stripe) balancer per (operator, size class);
     /// populated only when `n_nodes > 1`.
@@ -221,21 +243,55 @@ impl Communicator {
     /// Initialize: build topology + fabric ("initializes NCCL
     /// communicators and NVSHMEM contexts", §3.1). With `n_nodes > 1`
     /// this also builds the shared cluster fabric, and every collective
-    /// lowers hierarchically.
+    /// lowers hierarchically. A fresh [`SimDevice`] is created; use
+    /// [`Self::init_shared`] to build further communicators over it.
     pub fn init(cfg: CommConfig) -> Result<Self> {
         cfg.run.validate()?;
-        let spec = cfg.run.node_spec();
-        let topo = Topology::build(&spec);
+        let topo = Topology::build(&cfg.run.node_spec());
         let cluster = Cluster::build(&cfg.run.cluster_spec());
+        let device = Arc::new(SimDevice::new(
+            topo.clone(),
+            cluster.clone(),
+            cfg.run.calibration(),
+        ));
+        Self::init_parts(cfg, topo, cluster, device)
+    }
+
+    /// Initialize a communicator over an *existing* device — the
+    /// multi-communicator deployment (DP and TP communicators sharing
+    /// one cluster, multi-tenant jobs): their collectives contend on the
+    /// same links in the shared DES instead of being priced in separate
+    /// vacuums. The config must describe the same cluster shape the
+    /// device simulates.
+    pub fn init_shared(cfg: CommConfig, device: &Arc<SimDevice>) -> Result<Self> {
+        cfg.run.validate()?;
+        anyhow::ensure!(
+            cfg.run.cluster_spec() == device.cluster().spec,
+            "config's cluster shape differs from the shared device's"
+        );
+        let topo = Topology::build(&cfg.run.node_spec());
+        let cluster = Cluster::build(&cfg.run.cluster_spec());
+        Self::init_parts(cfg, topo, cluster, Arc::clone(device))
+    }
+
+    fn init_parts(
+        cfg: CommConfig,
+        topo: Topology,
+        cluster: Cluster,
+        device: Arc<SimDevice>,
+    ) -> Result<Self> {
         let ledger = MemoryLedger::new();
         let chunk = cfg.run.calibration().chunk_bytes as usize;
         let fabric = Fabric::new(cfg.run.n_gpus * cfg.run.n_nodes, chunk, ledger.clone());
+        let default_stream = device.create_stream();
         Ok(Communicator {
             cfg,
             topo,
             cluster,
             ledger,
             fabric,
+            device,
+            default_stream,
             ops: HashMap::new(),
             inter_ops: HashMap::new(),
             group: None,
@@ -353,122 +409,109 @@ impl Communicator {
         Ok(())
     }
 
-    /// Time a collective on the DES under the current shares and feed the
-    /// stage-2 balancer(s); inside a `group_start` scope the call is also
-    /// enqueued for the fused launch. Shared by every public collective
-    /// entry point — the single timing path. In cluster mode the call
-    /// lowers hierarchically and each tier's balancer observes its own
-    /// completion times.
+    /// Compile one collective into an enqueueable [`CollectivePlan`]:
+    /// lazy stage-1 tuning for the (operator, size-class) bucket, then a
+    /// snapshot of the shares in effect. The plan is self-contained — it
+    /// prices on the shared device without further reference to this
+    /// communicator, and can be enqueued many times.
+    fn plan(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+    ) -> Result<CollectivePlan> {
+        if self.cfg.run.n_nodes > 1 {
+            // Unsupported kinds must fail before any (expensive, cached)
+            // stage-1 tuning runs.
+            anyhow::ensure!(
+                kind != CollectiveKind::AllToAll,
+                "alltoall has no hierarchical lowering yet (single-node only)"
+            );
+            self.ensure_tuned(kind, msg_bytes)?;
+            self.ensure_inter_tuned(kind, msg_bytes)?;
+            let key = (kind, size_class(msg_bytes));
+            let tiers = TierShares {
+                intra: self.ops[&key].balancer.shares().clone(),
+                inter: self.inter_ops[&key].shares().clone(),
+            };
+            Ok(CollectivePlan::hier(
+                kind,
+                msg_bytes,
+                elem_bytes,
+                tiers,
+                self.n_local(),
+                self.cfg.run.pipeline_phases,
+            ))
+        } else {
+            self.ensure_tuned(kind, msg_bytes)?;
+            let key = (kind, size_class(msg_bytes));
+            let shares = self.ops[&key].balancer.shares().clone();
+            let spec = self.mc(kind).spec(msg_bytes, &shares, elem_bytes);
+            Ok(CollectivePlan::flat(kind, msg_bytes, elem_bytes, spec, shares))
+        }
+    }
+
+    /// Time a collective: enqueue on the default stream and wait — the
+    /// blocking entry point is literally enqueue+synchronize, so its
+    /// report is bit-identical to pricing the op alone (the device's
+    /// uncontended fast path runs the exact solo compilation). Inside a
+    /// `group_start` scope the call is additionally enqueued for the
+    /// fused launch. Shared by every public collective entry point.
     fn timed_call(
         &mut self,
         kind: CollectiveKind,
         msg_bytes: u64,
         elem_bytes: u64,
     ) -> Result<CollectiveReport> {
-        if self.cfg.run.n_nodes > 1 {
-            return self.timed_call_cluster(kind, msg_bytes, elem_bytes);
-        }
-        self.ensure_tuned(kind, msg_bytes)?;
-        let key = (kind, size_class(msg_bytes));
-        let shares = self.ops[&key].balancer.shares().clone();
-        let sim = self.mc(kind).run_elem(msg_bytes, &shares, elem_bytes)?;
-        let state = self.ops.get_mut(&key).unwrap();
-        let adjusted = state.balancer.observe(sim.path_times());
-        state.calls += 1;
+        let plan = self.plan(kind, msg_bytes, elem_bytes)?;
+        let op = self
+            .device
+            .enqueue_collective(plan.clone(), self.default_stream)?;
+        let report = self.wait(op)?;
         if let Some(pending) = self.group.as_mut() {
             pending.push(PendingCall {
-                kind,
-                msg_bytes,
-                elem_bytes,
-                shares: shares.clone(),
-                individual: sim.total(),
+                plan,
+                individual: report.time(),
             });
         }
-        Ok(CollectiveReport {
-            kind,
-            msg_bytes,
-            sim,
-            shares,
-            adjusted,
-            tiers: None,
-        })
+        Ok(report)
     }
 
-    /// Cluster-mode timing path: hierarchical three-phase DES, per-tier
-    /// share state, per-tier stage-2 observation.
-    fn timed_call_cluster(
-        &mut self,
-        kind: CollectiveKind,
-        msg_bytes: u64,
-        elem_bytes: u64,
-    ) -> Result<CollectiveReport> {
-        // Unsupported kinds must fail before any (expensive, cached)
-        // stage-1 tuning runs.
-        anyhow::ensure!(
-            kind != CollectiveKind::AllToAll,
-            "alltoall has no hierarchical lowering yet (single-node only)"
-        );
-        self.ensure_tuned(kind, msg_bytes)?;
-        self.ensure_inter_tuned(kind, msg_bytes)?;
-        let key = (kind, size_class(msg_bytes));
-        let intra = self.ops[&key].balancer.shares().clone();
-        let inter = self.inter_ops[&key].shares().clone();
-        let tiers = TierShares {
-            intra: intra.clone(),
-            inter: inter.clone(),
-        };
-        let hier = self.cc(kind).run(msg_bytes, &tiers, elem_bytes)?;
+    /// Claim a completed (or pending — the device synchronizes first)
+    /// collective handle: returns its [`CollectiveReport`] and feeds the
+    /// stage-2 balancer(s). Only *uncontended* pricings are observed —
+    /// completion times from a shared batch conflate share imbalance
+    /// with cross-op contention and would thrash the tuner; contended
+    /// calls still count toward [`Self::call_count`].
+    pub fn wait(&mut self, op: PendingOp) -> Result<CollectiveReport> {
+        let outcome = self.wait_op(op)?;
+        outcome
+            .collective
+            .map(|c| c.report)
+            .ok_or_else(|| anyhow::anyhow!("handle is a compute op, not a collective"))
+    }
 
-        let state = self.ops.get_mut(&key).unwrap();
-        let adjusted = state.balancer.observe(hier.intra_times.clone());
-        state.calls += 1;
-        let inter_adjusted = self
-            .inter_ops
-            .get_mut(&key)
-            .unwrap()
-            .observe(hier.inter_times.clone());
-
-        // Repackage the hierarchical outcome behind the stable RunReport
-        // surface (per intra-path timings + makespan).
-        let per_path: Vec<PathTiming> = intra
-            .to_extents(msg_bytes, elem_bytes)
-            .iter()
-            .map(|(p, _, len)| PathTiming {
-                path: *p,
-                bytes: *len,
-                time: hier
-                    .intra_times
-                    .iter()
-                    .find(|(q, _)| q == p)
-                    .map(|(_, t)| *t)
-                    .unwrap_or(SimTime::ZERO),
-            })
-            .collect();
-        let sim = RunReport {
-            outcome: SimOutcome {
-                total: hier.total,
-                per_path,
-                events: hier.events,
-                tasks: hier.tasks,
-            },
-            msg_bytes,
-            kind,
-        };
-        Ok(CollectiveReport {
-            kind,
-            msg_bytes,
-            sim,
-            shares: intra,
-            adjusted,
-            tiers: Some(TierReport {
-                inter_shares: inter,
-                inter_times: hier.inter_times,
-                intra_phase1: hier.intra_phase1,
-                inter_phase: hier.inter_phase,
-                intra_phase3: hier.intra_phase3,
-                adjusted: inter_adjusted,
-            }),
-        })
+    /// As [`Self::wait`], returning the raw [`OpOutcome`] (absolute
+    /// times, contention flag; compute ops land here too).
+    pub fn wait_op(&mut self, op: PendingOp) -> Result<OpOutcome> {
+        let mut outcome = self.device.take_result(op)?;
+        if let Some(col) = outcome.collective.as_mut() {
+            let key = (col.report.kind, size_class(col.report.msg_bytes));
+            if let Some(state) = self.ops.get_mut(&key) {
+                state.calls += 1;
+                if !outcome.contended {
+                    col.report.adjusted = state.balancer.observe(col.intra_obs.clone());
+                }
+            }
+            if !outcome.contended {
+                if let (Some(tiers), Some(rb)) =
+                    (col.report.tiers.as_mut(), self.inter_ops.get_mut(&key))
+                {
+                    tiers.adjusted = rb.observe(col.inter_obs.clone());
+                }
+            }
+        }
+        Ok(outcome)
     }
 
     /// Current inter-tier (NIC stripe) distribution for an operator at a
@@ -625,26 +668,209 @@ impl Communicator {
     }
 
     // -----------------------------------------------------------------
-    // Group semantics (`ncclGroupStart` / `ncclGroupEnd`).
+    // Stream-ordered nonblocking API (`cudaStream_t`/`cudaEvent_t`
+    // analogues over the shared DES).
+    // -----------------------------------------------------------------
+
+    /// The shared stream-ordered device — pass to [`Self::init_shared`]
+    /// to build further communicators contending on the same links.
+    pub fn device(&self) -> &Arc<SimDevice> {
+        &self.device
+    }
+
+    /// Create a new stream (FIFO op queue) on the shared device.
+    pub fn create_stream(&self) -> Stream {
+        self.device.create_stream()
+    }
+
+    /// Record an [`Event`] capturing all work enqueued on `stream` so
+    /// far; another stream can [`Self::stream_wait_event`] on it.
+    pub fn record_event(&self, stream: Stream) -> Result<Event> {
+        self.device.record_event(stream)
+    }
+
+    /// Make all work subsequently enqueued on `stream` wait for `event`.
+    pub fn stream_wait_event(&self, stream: Stream, event: Event) -> Result<()> {
+        self.device.wait_event(stream, event)
+    }
+
+    /// Drain every pending op on `stream` (the whole device's pending
+    /// batch prices together — see [`stream`] module docs) and return
+    /// the absolute virtual time its last op finished.
+    pub fn stream_synchronize(&self, stream: Stream) -> Result<SimTime> {
+        self.device.stream_synchronize(stream)
+    }
+
+    /// Device-wide synchronize: price everything pending, return the
+    /// virtual clock.
+    pub fn synchronize(&self) -> Result<SimTime> {
+        self.device.synchronize()
+    }
+
+    /// Enqueue a simulated compute op (e.g. a backward-pass chunk) that
+    /// occupies `stream` for `duration` without touching any link — the
+    /// piece that lets a trainer overlap compute with collectives.
+    pub fn compute_async(&self, duration: SimTime, stream: Stream) -> Result<PendingOp> {
+        self.device.enqueue_compute(duration, stream)
+    }
+
+    /// Timing-only async enqueue of a collective (no data movement):
+    /// tunes lazily, snapshots shares, returns immediately.
+    pub fn time_collective_async(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        let plan = self.plan(kind, msg_bytes, crate::dtype::natural_align(msg_bytes))?;
+        self.device.enqueue_collective(plan, stream)
+    }
+
+    /// Internal: eager functional execution + timing enqueue — the shape
+    /// every `*_async` collective shares. Data moves NOW (results are
+    /// schedule-independent in the simulator, so the lossless claim is
+    /// unaffected); the DES prices the op at the next synchronization.
+    fn enqueue_exec(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+        stream: Stream,
+        run_exec: impl FnOnce(&Fabric, &exec::PathExtents) -> Result<()>,
+    ) -> Result<PendingOp> {
+        // Validate the stream BEFORE moving any bytes: an Err from an
+        // async entry point must imply the caller's buffers are
+        // untouched (otherwise a retry would re-reduce reduced data).
+        self.device.validate_stream(stream)?;
+        let plan = self.plan(kind, msg_bytes, elem_bytes)?;
+        let ext = plan.intra_shares().to_extents(msg_bytes, elem_bytes);
+        run_exec(&self.fabric, &ext)?;
+        self.device.enqueue_collective(plan, stream)
+    }
+
+    /// Nonblocking in-place AllReduce: bytes move eagerly, timing lands
+    /// on `stream`; claim the handle with [`Self::wait`].
+    pub fn all_reduce_in_place_async(
+        &mut self,
+        bufs: &mut [DeviceBuffer],
+        op: RedOp,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        anyhow::ensure!(bufs.len() == self.n_ranks(), "one buffer per rank");
+        let (dtype, msg) = typed_msg(bufs)?;
+        let es = dtype.size_bytes() as u64;
+        self.enqueue_exec(CollectiveKind::AllReduce, msg, es, stream, |fabric, ext| {
+            exec::all_reduce(fabric, ext, bufs, op)
+        })
+    }
+
+    /// Nonblocking out-of-place AllReduce.
+    pub fn all_reduce_async(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        op: RedOp,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        self.stage_out_of_place(send, recv)?;
+        self.all_reduce_in_place_async(recv, op, stream)
+    }
+
+    /// Nonblocking AllGather.
+    pub fn all_gather_async(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        self.enqueue_exec(CollectiveKind::AllGather, msg, es, stream, |fabric, ext| {
+            exec::all_gather(fabric, ext, send, recv)
+        })
+    }
+
+    /// Nonblocking in-place Broadcast of `bufs[root]`.
+    pub fn broadcast_in_place_async(
+        &mut self,
+        bufs: &mut [DeviceBuffer],
+        root: usize,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        anyhow::ensure!(bufs.len() == self.n_ranks(), "one buffer per rank");
+        anyhow::ensure!(root < self.n_ranks(), "root outside communicator");
+        let (dtype, msg) = typed_msg(bufs)?;
+        let es = dtype.size_bytes() as u64;
+        self.enqueue_exec(CollectiveKind::Broadcast, msg, es, stream, |fabric, ext| {
+            exec::broadcast(fabric, ext, bufs, root)
+        })
+    }
+
+    /// Nonblocking ReduceScatter.
+    pub fn reduce_scatter_async(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        op: RedOp,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        self.enqueue_exec(
+            CollectiveKind::ReduceScatter,
+            msg,
+            es,
+            stream,
+            |fabric, ext| exec::reduce_scatter(fabric, ext, send, recv, op),
+        )
+    }
+
+    /// Nonblocking AllToAll (single-node only, like its blocking form).
+    pub fn all_to_all_async(
+        &mut self,
+        send: &[DeviceBuffer],
+        recv: &mut [DeviceBuffer],
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        anyhow::ensure!(
+            send.len() == self.n_ranks() && recv.len() == self.n_ranks(),
+            "one send and one recv buffer per rank"
+        );
+        let (dtype, msg) = typed_msg(send)?;
+        let es = dtype.size_bytes() as u64;
+        self.enqueue_exec(CollectiveKind::AllToAll, msg, es, stream, |fabric, ext| {
+            exec::all_to_all(fabric, ext, send, recv)
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Group semantics (`ncclGroupStart` / `ncclGroupEnd`) — sugar over
+    // per-call streams.
     // -----------------------------------------------------------------
 
     /// Open a group: collectives called until [`Self::group_end`] still
     /// execute (functionally and individually timed) and are additionally
-    /// enqueued for one fused DES launch. (Single-node only for now: the
-    /// fused-launch compiler predates the hierarchical lowering.)
+    /// enqueued for one fused DES launch. Works on single-node *and*
+    /// multi-node communicators — the stream machinery fuses
+    /// hierarchical lowerings like any other op.
     pub fn group_start(&mut self) -> Result<()> {
-        anyhow::ensure!(
-            self.cfg.run.n_nodes == 1,
-            "fused group launches are not yet supported on multi-node communicators"
-        );
         anyhow::ensure!(self.group.is_none(), "group already open");
         self.group = Some(Vec::new());
         Ok(())
     }
 
-    /// Close the group: fuse every enqueued collective into a single DES
-    /// launch — concurrent calls contend for the same physical links
-    /// under max–min fair share — and report per-call + fused timings.
+    /// Close the group: every enqueued collective rides its own fresh
+    /// stream into ONE fused DES launch — concurrent calls contend for
+    /// the same physical links under max–min fair share — and per-call +
+    /// fused timings are reported. (Synchronizes the device.)
     pub fn group_end(&mut self) -> Result<GroupReport> {
         anyhow::ensure!(self.group.is_some(), "group_end without group_start");
         let pending = self.group.take().unwrap();
@@ -655,92 +881,36 @@ impl Communicator {
                 sequential_total: SimTime::ZERO,
             });
         }
-        let specs: Vec<MultipathSpec> = pending
+        let handles: Vec<PendingOp> = pending
             .iter()
-            .map(|c| self.mc(c.kind).spec(c.msg_bytes, &c.shares, c.elem_bytes))
-            .collect();
-        let reduce_bps = self.cfg.run.calibration().reduce_bps;
-        let fused = simulate_group(&self.topo, &specs, reduce_bps)?;
-        let calls: Vec<GroupCall> = pending
-            .iter()
-            .zip(&fused.per_call)
-            .map(|(c, &t)| GroupCall {
-                kind: c.kind,
-                msg_bytes: c.msg_bytes,
-                individual: c.individual,
-                fused_finish: t,
+            .map(|c| {
+                let s = self.device.create_stream();
+                self.device.enqueue_collective(c.plan.clone(), s)
             })
-            .collect();
+            .collect::<Result<_>>()?;
+        self.device.synchronize()?;
+        let mut calls = Vec::with_capacity(pending.len());
+        let mut fused_total = SimTime::ZERO;
+        for (c, h) in pending.iter().zip(handles) {
+            // Raw claim: fused completions are contended by design and
+            // must not feed the stage-2 balancer a second observation of
+            // the same call.
+            let outcome = self.device.take_result(h)?;
+            let fin = outcome.finish_in_batch();
+            fused_total = fused_total.max(fin);
+            calls.push(GroupCall {
+                kind: c.plan.kind,
+                msg_bytes: c.plan.msg_bytes,
+                individual: c.individual,
+                fused_finish: fin,
+            });
+        }
         let sequential_total: SimTime = pending.iter().map(|c| c.individual).sum();
         Ok(GroupReport {
             calls,
-            fused_total: fused.total,
+            fused_total,
             sequential_total,
         })
-    }
-
-    // -----------------------------------------------------------------
-    // Legacy f32 surface — deprecated shims over the typed path.
-    // -----------------------------------------------------------------
-
-    /// In-place sum AllReduce over one f32 buffer per rank.
-    #[deprecated(note = "use the typed `all_reduce`/`all_reduce_in_place` (DeviceBuffer) API")]
-    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
-        let mut dev = exec::to_dev(bufs);
-        let report = self.all_reduce_in_place(&mut dev, RedOp::Sum)?;
-        exec::write_back(bufs, &dev);
-        Ok(report)
-    }
-
-    /// AllGather: per-rank f32 contributions → concatenated outputs.
-    #[deprecated(note = "use the typed `all_gather` (DeviceBuffer) API")]
-    pub fn all_gather_f32(
-        &mut self,
-        inputs: &[Vec<f32>],
-        outputs: &mut [Vec<f32>],
-    ) -> Result<CollectiveReport> {
-        let dev_in = exec::to_dev(inputs);
-        let mut dev_out = exec::to_dev(outputs);
-        let report = self.all_gather(&dev_in, &mut dev_out)?;
-        exec::write_back(outputs, &dev_out);
-        Ok(report)
-    }
-
-    /// Broadcast rank 0's f32 buffer to all ranks, in place.
-    #[deprecated(note = "use the typed `broadcast`/`broadcast_in_place` (DeviceBuffer) API")]
-    pub fn broadcast_f32(&mut self, bufs: &mut [Vec<f32>]) -> Result<CollectiveReport> {
-        let mut dev = exec::to_dev(bufs);
-        let report = self.broadcast_in_place(&mut dev, 0)?;
-        exec::write_back(bufs, &dev);
-        Ok(report)
-    }
-
-    /// ReduceScatter over f32 buffers (sum).
-    #[deprecated(note = "use the typed `reduce_scatter` (DeviceBuffer) API")]
-    pub fn reduce_scatter_f32(
-        &mut self,
-        inputs: &[Vec<f32>],
-        outputs: &mut [Vec<f32>],
-    ) -> Result<CollectiveReport> {
-        let dev_in = exec::to_dev(inputs);
-        let mut dev_out = exec::to_dev(outputs);
-        let report = self.reduce_scatter(&dev_in, &mut dev_out, RedOp::Sum)?;
-        exec::write_back(outputs, &dev_out);
-        Ok(report)
-    }
-
-    /// AllToAll over f32 buffers.
-    #[deprecated(note = "use the typed `all_to_all` (DeviceBuffer) API")]
-    pub fn all_to_all_f32(
-        &mut self,
-        inputs: &[Vec<f32>],
-        outputs: &mut [Vec<f32>],
-    ) -> Result<CollectiveReport> {
-        let dev_in = exec::to_dev(inputs);
-        let mut dev_out = exec::to_dev(outputs);
-        let report = self.all_to_all(&dev_in, &mut dev_out)?;
-        exec::write_back(outputs, &dev_out);
-        Ok(report)
     }
 
     /// Timing-only entry for pricing a collective without data movement
@@ -900,35 +1070,161 @@ mod tests {
         assert_eq!(c.profiling_time, SimTime::ZERO);
     }
 
-    /// The ONE shim-equivalence test: every other caller has migrated to
-    /// the typed DeviceBuffer surface; this asserts the deprecated f32
-    /// shims (Communicator- and executor-level) remain exact wrappers of
-    /// the typed path until they are deleted.
+    /// The blocking wrappers are literally enqueue+wait: a manual
+    /// enqueue + synchronize on a fresh stream must produce a
+    /// bit-identical report (same DES numbers, same balancer feed).
     #[test]
-    #[allow(deprecated)]
-    fn legacy_f32_shims_route_through_typed_path() {
-        let mut c = comm(2);
-        let mut bufs = vec![vec![1.5f32; 256], vec![1.5f32; 256]];
-        let rep = c.all_reduce_f32(&mut bufs).unwrap();
-        assert!(bufs.iter().all(|b| b.iter().all(|&v| v == 3.0)));
-        assert!(rep.algbw_gbps() > 0.0);
-        // The shim hits the same stats bucket as the typed call.
-        assert_eq!(c.call_count(CollectiveKind::AllReduce, 256 * 4), 1);
-
-        // Executor-level shim ≡ typed executor, bit for bit.
-        let vals = vec![vec![0.75f32; 96], vec![-1.25f32; 96]];
-        let ext = Shares::from_pcts(&[(PathId::Nvlink, 80.0), (PathId::Pcie, 20.0)])
-            .to_extents(96 * 4, 4);
-        let shim_fabric = Fabric::new(2, 256, MemoryLedger::new());
-        let mut shim_bufs = vals.clone();
-        exec::all_reduce_f32(&shim_fabric, &ext, &mut shim_bufs).unwrap();
-        let typed_fabric = Fabric::new(2, 256, MemoryLedger::new());
-        let mut typed_bufs: Vec<DeviceBuffer> =
-            vals.iter().map(|v| DeviceBuffer::from_f32(v)).collect();
-        exec::all_reduce(&typed_fabric, &ext, &mut typed_bufs, RedOp::Sum).unwrap();
-        for (s, t) in shim_bufs.iter().zip(&typed_bufs) {
-            assert_eq!(s, &t.to_f32_vec(), "shim diverged from typed executor");
+    fn blocking_is_bit_identical_to_enqueue_plus_wait() {
+        let mut blocking = comm(4);
+        let mut streamed = comm(4);
+        let msg = (1u64 << 20) * 4;
+        let rep_b = blocking
+            .time_collective(CollectiveKind::AllReduce, msg)
+            .unwrap();
+        let s = streamed.create_stream();
+        let h = streamed
+            .time_collective_async(CollectiveKind::AllReduce, msg, s)
+            .unwrap();
+        let rep_s = streamed.wait(h).unwrap();
+        assert_eq!(
+            rep_b.sim.outcome.total.as_nanos(),
+            rep_s.sim.outcome.total.as_nanos(),
+            "blocking vs enqueue+wait diverged"
+        );
+        assert_eq!(rep_b.sim.outcome.events, rep_s.sim.outcome.events);
+        assert_eq!(rep_b.sim.outcome.tasks, rep_s.sim.outcome.tasks);
+        assert_eq!(rep_b.shares, rep_s.shares);
+        for (a, b) in rep_b
+            .sim
+            .outcome
+            .per_path
+            .iter()
+            .zip(&rep_s.sim.outcome.per_path)
+        {
+            assert_eq!(a.path, b.path);
+            assert_eq!(a.time, b.time);
         }
+        // Both fed the same stats bucket identically.
+        assert_eq!(
+            blocking.call_count(CollectiveKind::AllReduce, msg),
+            streamed.call_count(CollectiveKind::AllReduce, msg)
+        );
+    }
+
+    #[test]
+    fn streams_overlap_and_fifo_holds() {
+        let mut c = comm(4);
+        let msg = 8u64 << 20;
+        // Warm the tuner so enqueues snapshot a stable distribution.
+        let solo = c.time_collective(CollectiveKind::AllReduce, msg).unwrap().time();
+        let s1 = c.create_stream();
+        let s2 = c.create_stream();
+        let a1 = c.time_collective_async(CollectiveKind::AllReduce, msg, s1).unwrap();
+        let a2 = c.time_collective_async(CollectiveKind::AllReduce, msg, s1).unwrap();
+        let b1 = c.time_collective_async(CollectiveKind::AllReduce, msg, s2).unwrap();
+        c.synchronize().unwrap();
+        let (o1, o2, ob) = (
+            c.wait_op(a1).unwrap(),
+            c.wait_op(a2).unwrap(),
+            c.wait_op(b1).unwrap(),
+        );
+        // FIFO: same-stream ops never overlap.
+        assert!(o2.span.start >= o1.finished, "stream FIFO violated");
+        assert!(o1.contended && o2.contended && ob.contended);
+        // Concurrency: the other stream's op overlaps stream 1's work
+        // and is slowed by contention, but not serialized behind it.
+        assert!(ob.duration() >= solo, "contended op faster than solo?");
+        let makespan = o2.finished.max(ob.finished).saturating_sub(o1.epoch);
+        let serial = solo + solo + solo;
+        assert!(makespan < serial, "streams fully serialized");
+    }
+
+    #[test]
+    fn event_edges_are_respected() {
+        let mut c = comm(2);
+        let msg = 4u64 << 20;
+        c.time_collective(CollectiveKind::AllGather, msg).unwrap();
+        let s1 = c.create_stream();
+        let s2 = c.create_stream();
+        let a = c.time_collective_async(CollectiveKind::AllGather, msg, s1).unwrap();
+        let e = c.record_event(s1).unwrap();
+        c.stream_wait_event(s2, e).unwrap();
+        let b = c.time_collective_async(CollectiveKind::AllGather, msg, s2).unwrap();
+        c.synchronize().unwrap();
+        let (oa, ob) = (c.wait_op(a).unwrap(), c.wait_op(b).unwrap());
+        assert!(
+            ob.span.start >= oa.finished,
+            "event wait edge ignored: {} < {}",
+            ob.span.start.as_nanos(),
+            oa.finished.as_nanos()
+        );
+    }
+
+    #[test]
+    fn shared_device_prices_cross_communicator_contention() {
+        let mut cfg = CommConfig::new(Preset::H800, 4);
+        cfg.tune_msg_bytes = 16 << 20;
+        let mut a = Communicator::init(cfg.clone()).unwrap();
+        let mut b = Communicator::init_shared(cfg.clone(), a.device()).unwrap();
+        let msg = 16u64 << 20;
+        let solo_a = a.time_collective(CollectiveKind::AllReduce, msg).unwrap().time();
+        let solo_b = b.time_collective(CollectiveKind::AllGather, msg).unwrap().time();
+        let sa = a.create_stream();
+        let sb = b.create_stream();
+        let ha = a.time_collective_async(CollectiveKind::AllReduce, msg, sa).unwrap();
+        let hb = b.time_collective_async(CollectiveKind::AllGather, msg, sb).unwrap();
+        a.synchronize().unwrap();
+        let oa = a.wait_op(ha).unwrap();
+        let ob = b.wait_op(hb).unwrap();
+        // DES-priced slowdown: each op at least as slow as alone...
+        assert!(oa.duration() >= solo_a);
+        assert!(ob.duration() >= solo_b);
+        // ...strictly contended (they share every NVLink lane)...
+        assert!(
+            oa.duration() > solo_a || ob.duration() > solo_b,
+            "no contention between communicators sharing a device"
+        );
+        // ...but not serialized: the fused makespan beats back-to-back.
+        let makespan = oa.finished.max(ob.finished).saturating_sub(oa.epoch);
+        assert!(makespan < solo_a + solo_b, "communicators serialized");
+        // A different ring size over the same node is fine (TP+DP mixes
+        // share one device); a different hardware shape is rejected.
+        assert!(Communicator::init_shared(
+            CommConfig::new(Preset::H800, 2),
+            a.device()
+        )
+        .is_ok());
+        assert!(Communicator::init_shared(
+            CommConfig::new(Preset::H100, 4),
+            a.device()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compute_ops_occupy_streams_without_links() {
+        let mut c = comm(2);
+        let msg = 4u64 << 20;
+        let solo = c.time_collective(CollectiveKind::AllReduce, msg).unwrap().time();
+        let cs = c.create_stream();
+        let ks = c.create_stream();
+        let d = SimTime::from_secs_f64(solo.as_secs_f64() * 2.0);
+        let hk = c.compute_async(d, ks).unwrap();
+        let hc = c.time_collective_async(CollectiveKind::AllReduce, msg, cs).unwrap();
+        c.synchronize().unwrap();
+        let ok = c.wait_op(hk).unwrap();
+        let oc = c.wait_op(hc).unwrap();
+        assert!(ok.collective.is_none());
+        assert_eq!(ok.duration(), d);
+        // Disjoint resources: the collective is NOT slowed by compute
+        // (≤1µs of event-interleaving f64 noise tolerated), and the
+        // batch makespan is just the longer of the two.
+        assert!(oc.duration().as_nanos().abs_diff(solo.as_nanos()) <= 1_000);
+        let makespan = ok.finished.max(oc.finished).saturating_sub(ok.epoch);
+        assert_eq!(makespan, d);
+        // Claiming a compute handle as a collective report fails.
+        let hk2 = c.compute_async(d, ks).unwrap();
+        assert!(c.wait(hk2).is_err());
     }
 
     #[test]
@@ -981,8 +1277,14 @@ mod tests {
         assert!(rep.time() > SimTime::ZERO);
         // Inter-tier share state is now cached for this size class.
         assert!(c.inter_shares_of(CollectiveKind::AllReduce, 1024 * 4).is_some());
-        // Fused groups are single-node only.
-        assert!(c.group_start().is_err());
+        // Groups work on cluster communicators too (the stream machinery
+        // fuses hierarchical lowerings like any other op); the full
+        // regression lives in tests/integration_cluster.rs.
+        c.group_start().unwrap();
+        c.time_collective(CollectiveKind::AllReduce, 1 << 20).unwrap();
+        let rep = c.group_end().unwrap();
+        assert_eq!(rep.calls.len(), 1);
+        assert!(rep.fused_total > SimTime::ZERO);
     }
 
     #[test]

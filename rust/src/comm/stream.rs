@@ -1,0 +1,873 @@
+//! Stream-ordered nonblocking execution: [`Stream`], [`Event`],
+//! [`PendingOp`] and the single shared fair-share DES behind them.
+//!
+//! Real NCCL calls are *stream-ordered and nonblocking*: a collective
+//! enqueues onto a CUDA stream and returns immediately; ops on one stream
+//! run FIFO, ops on different streams overlap, and `cudaEvent`s impose
+//! cross-stream edges. That concurrency is exactly where the paper's
+//! link-aggregation gains must survive in end-to-end training (DP+TP
+//! traffic mixing, compute/comm overlap), so the simulator mirrors it:
+//!
+//! * [`SimDevice`] is the device-wide scheduler — ONE per physical
+//!   cluster, shared by every [`Communicator`](super::Communicator) built
+//!   over it ([`Communicator::init_shared`](super::Communicator::init_shared)),
+//!   so concurrent collectives from *different* communicators contend for
+//!   the same links instead of being priced in separate vacuums.
+//! * Enqueued ops accumulate until a synchronization point
+//!   ([`SimDevice::synchronize`] / `stream_synchronize` / claiming a
+//!   handle). The whole pending batch then compiles into ONE task graph
+//!   over ONE resource pool — each op keeps its private protocol-stream
+//!   resources (its own CUDA streams, in hardware terms) while the raw
+//!   physical links stay shared — and executes in a single DES launch.
+//!   Fair-share pricing of the merged graph is what makes two concurrent
+//!   collectives *slow each other down* without serializing.
+//! * Within the batch, FIFO order per stream and Event wait edges become
+//!   dependency edges: each op fragment is suspended behind its
+//!   predecessors' completion barriers
+//!   ([`TaskGraph::gate_roots_in`]).
+//!
+//! ## The virtual clock and batch semantics
+//!
+//! The device keeps an absolute virtual clock (`now`). A synchronization
+//! drains *every* pending op (the `cudaDeviceSynchronize` model — the
+//! v1 simplification is that `stream_synchronize` also flushes
+//! concurrently pending work on other streams, which can only make its
+//! pricing *more* honest, since that work would contend in reality too);
+//! the batch is priced from a common origin (`epoch = now`) and the clock
+//! advances by its makespan. An op priced alone in its batch takes the
+//! exact solo code path of the blocking API, which is why the blocking
+//! wrappers — now thin enqueue+wait sugar — stay bit-identical to the
+//! pre-stream Communicator (golden traces pass unregenerated).
+//!
+//! Functional data movement is *eager*: `*_async` entry points move the
+//! real bytes at enqueue time (results never depend on the schedule in a
+//! simulator — the lossless claim is unaffected) and only the *timing* is
+//! deferred to the shared DES. Enqueue order is always a valid
+//! linearization of the stream/event partial order because an [`Event`]
+//! must be recorded before it can be waited on.
+
+use crate::balancer::shares::Shares;
+use crate::balancer::tier::TierShares;
+use crate::collectives::hierarchical::ClusterCollective;
+use crate::collectives::multipath::RunReport;
+use crate::collectives::schedule::{
+    self, phase_span, GraphBuilder, MultipathSpec, PathTiming, PhaseSpan, SimOutcome,
+};
+use crate::collectives::CollectiveKind;
+use crate::links::calib::Calibration;
+use crate::links::{PathId, PathModel, StripeId};
+use crate::sim::{Engine, Schedule, SimTime, TaskGraph, TaskId};
+use crate::topology::cluster::Cluster;
+use crate::topology::Topology;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Device-unique tags so handles from one [`SimDevice`] cannot be
+/// silently misread by another (two communicators over two *different*
+/// devices do not share a virtual timeline).
+static NEXT_DEVICE_TAG: AtomicU64 = AtomicU64::new(1);
+
+/// A FIFO queue of enqueued ops — the `cudaStream_t` analogue. Ops on one
+/// stream never overlap; ops on different streams price concurrently in
+/// the shared DES. Cheap copyable handle, bound to its device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stream {
+    dev: u64,
+    id: u32,
+}
+
+/// A cross-stream synchronization marker — the `cudaEvent_t` analogue:
+/// record on one stream, wait on another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    dev: u64,
+    id: u32,
+}
+
+/// Completion handle of one enqueued op; claim it with
+/// [`Communicator::wait`](super::Communicator::wait) (collectives) or
+/// [`SimDevice::take_result`] (raw outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PendingOp {
+    dev: u64,
+    id: u64,
+}
+
+/// An enqueueable collective, fully resolved at enqueue time: shares are
+/// snapshotted (the op prices under the distribution in effect when it
+/// was issued, as on real hardware), the single-node form carries its
+/// compiled [`MultipathSpec`] — the plan is built once and can be
+/// enqueued any number of times.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    pub kind: CollectiveKind,
+    pub msg_bytes: u64,
+    pub elem_bytes: u64,
+    pub(crate) shape: PlanShape,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) enum PlanShape {
+    /// Single-node multi-path lowering.
+    Flat { spec: MultipathSpec, shares: Shares },
+    /// Hierarchical multi-node lowering.
+    Hier {
+        tiers: TierShares,
+        n_local: usize,
+        pipeline: bool,
+    },
+}
+
+impl CollectivePlan {
+    /// Single-node multi-path plan.
+    pub(crate) fn flat(
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+        spec: MultipathSpec,
+        shares: Shares,
+    ) -> Self {
+        CollectivePlan {
+            kind,
+            msg_bytes,
+            elem_bytes,
+            shape: PlanShape::Flat { spec, shares },
+        }
+    }
+
+    /// Hierarchical multi-node plan.
+    pub(crate) fn hier(
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        elem_bytes: u64,
+        tiers: TierShares,
+        n_local: usize,
+        pipeline: bool,
+    ) -> Self {
+        CollectivePlan {
+            kind,
+            msg_bytes,
+            elem_bytes,
+            shape: PlanShape::Hier {
+                tiers,
+                n_local,
+                pipeline,
+            },
+        }
+    }
+
+    /// Intra-node share distribution the plan was issued under.
+    pub fn intra_shares(&self) -> &Shares {
+        match &self.shape {
+            PlanShape::Flat { shares, .. } => shares,
+            PlanShape::Hier { tiers, .. } => &tiers.intra,
+        }
+    }
+}
+
+/// Collective detail of a priced op.
+#[derive(Debug, Clone)]
+pub struct CollectiveOutcome {
+    /// Report in the blocking API's shape (op-relative times; `adjusted`
+    /// is filled in by the claiming communicator's stage-2 balancer).
+    pub report: super::CollectiveReport,
+    /// Per-path completion observable (what the intra balancer reads).
+    pub intra_obs: Vec<(PathId, SimTime)>,
+    /// Per-stripe completion observable (inter balancer; empty when the
+    /// op lowered flat).
+    pub inter_obs: Vec<(StripeId, SimTime)>,
+}
+
+/// What the DES produced for one enqueued op.
+#[derive(Debug, Clone)]
+pub struct OpOutcome {
+    /// Absolute virtual-time origin of the batch this op priced in.
+    pub epoch: SimTime,
+    /// Absolute time its dependencies (FIFO predecessor, event waits)
+    /// cleared — the op's launch point.
+    pub ready: SimTime,
+    /// Absolute completion.
+    pub finished: SimTime,
+    /// Absolute first-start → last-finish span of the op's own tasks.
+    pub span: PhaseSpan,
+    /// True when the op shared its pricing batch with other ops (its
+    /// times include real link contention).
+    pub contended: bool,
+    /// Collective detail; `None` for pure compute ops.
+    pub collective: Option<CollectiveOutcome>,
+}
+
+impl OpOutcome {
+    /// Completion time from the op's launch point (queueing excluded).
+    pub fn duration(&self) -> SimTime {
+        self.finished.saturating_sub(self.ready)
+    }
+
+    /// Completion time from the batch origin — the op's finish inside
+    /// its fused launch.
+    pub fn finish_in_batch(&self) -> SimTime {
+        self.finished.saturating_sub(self.epoch)
+    }
+}
+
+/// One enqueued-but-unpriced op.
+struct PendingState {
+    id: u64,
+    /// Ids of pending ops whose completion gates this one (FIFO
+    /// predecessor on the same stream, plus event wait edges). Always
+    /// earlier ids of the same batch.
+    deps: Vec<u64>,
+    payload: OpPayload,
+}
+
+enum OpPayload {
+    Collective(CollectivePlan),
+    /// Simulated on-GPU compute (backward pass chunk, kernel, …): a pure
+    /// virtual-time cost that occupies its stream without touching links.
+    Compute { duration: SimTime },
+}
+
+struct StreamState {
+    /// Last op ever enqueued (pending or priced) — the FIFO tail.
+    tail: Option<u64>,
+    /// Absolute finish of the tail once priced (meaningful only when
+    /// `tail < flushed_below`).
+    tail_finish: SimTime,
+    /// Event deps to attach to the next enqueued op (from
+    /// `wait_event`; FIFO chaining extends them to all later ops).
+    waits: Vec<u64>,
+}
+
+struct EventState {
+    /// Op whose completion the event marks; `None` when the stream was
+    /// empty at record time (immediately satisfied).
+    dep: Option<u64>,
+}
+
+/// Device state is *bounded*: a flush drains every pending op, so "is
+/// this op priced?" is a watermark comparison (`id < flushed_below`),
+/// not a membership map, and events older than the last flush are all
+/// resolved (`id < event_base`) so their states can be dropped. Only
+/// unclaimed collective/compute outcomes persist until their handle is
+/// claimed.
+struct DeviceState {
+    now: SimTime,
+    next_op: u64,
+    /// Every op with id below this has been priced (flush drains all).
+    flushed_below: u64,
+    streams: Vec<StreamState>,
+    /// Event states created since the last flush; an event id below
+    /// `event_base` is resolved (its dep op priced) and needs no state.
+    events: Vec<EventState>,
+    event_base: u32,
+    pending: Vec<PendingState>,
+    /// Priced, unclaimed outcomes.
+    results: HashMap<u64, OpOutcome>,
+}
+
+/// The single shared fair-share DES all streams — and all communicators
+/// built over one cluster — price against. See the module docs for the
+/// batch semantics.
+pub struct SimDevice {
+    tag: u64,
+    topo: Topology,
+    cluster: Cluster,
+    calib: Calibration,
+    state: Mutex<DeviceState>,
+}
+
+impl SimDevice {
+    pub(crate) fn new(topo: Topology, cluster: Cluster, calib: Calibration) -> Self {
+        SimDevice {
+            tag: NEXT_DEVICE_TAG.fetch_add(1, Ordering::Relaxed),
+            topo,
+            cluster,
+            calib,
+            state: Mutex::new(DeviceState {
+                now: SimTime::ZERO,
+                next_op: 0,
+                flushed_below: 0,
+                streams: Vec::new(),
+                events: Vec::new(),
+                event_base: 0,
+                pending: Vec::new(),
+                results: HashMap::new(),
+            }),
+        }
+    }
+
+    /// The cluster this device simulates (single node = 1-node cluster).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Current absolute virtual time.
+    pub fn now(&self) -> SimTime {
+        self.lock().now
+    }
+
+    /// Ops enqueued and not yet priced.
+    pub fn pending_ops(&self) -> usize {
+        self.lock().pending.len()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, DeviceState> {
+        self.state.lock().expect("SimDevice lock poisoned")
+    }
+
+    fn check_stream(&self, st: &DeviceState, s: Stream) -> Result<()> {
+        anyhow::ensure!(s.dev == self.tag, "stream belongs to a different device");
+        anyhow::ensure!((s.id as usize) < st.streams.len(), "unknown stream");
+        Ok(())
+    }
+
+    /// Validate a stream handle without enqueueing anything — callers
+    /// with side effects (eager functional execution) check this first
+    /// so a bad handle cannot leave buffers half-mutated.
+    pub fn validate_stream(&self, s: Stream) -> Result<()> {
+        self.check_stream(&self.lock(), s)
+    }
+
+    /// Create a new, idle stream.
+    pub fn create_stream(&self) -> Stream {
+        let mut st = self.lock();
+        st.streams.push(StreamState {
+            tail: None,
+            tail_finish: SimTime::ZERO,
+            waits: Vec::new(),
+        });
+        Stream {
+            dev: self.tag,
+            id: (st.streams.len() - 1) as u32,
+        }
+    }
+
+    /// Record an event on `stream`: it fires when everything enqueued on
+    /// the stream so far completes.
+    pub fn record_event(&self, stream: Stream) -> Result<Event> {
+        let mut st = self.lock();
+        self.check_stream(&st, stream)?;
+        // A tail that already priced is in the past — satisfied.
+        let flushed_below = st.flushed_below;
+        let dep = st.streams[stream.id as usize]
+            .tail
+            .filter(|t| *t >= flushed_below);
+        let id = st.event_base as usize + st.events.len();
+        st.events.push(EventState { dep });
+        Ok(Event {
+            dev: self.tag,
+            id: id as u32,
+        })
+    }
+
+    /// Make all work subsequently enqueued on `stream` wait for `event`.
+    pub fn wait_event(&self, stream: Stream, event: Event) -> Result<()> {
+        let mut st = self.lock();
+        self.check_stream(&st, stream)?;
+        anyhow::ensure!(event.dev == self.tag, "event belongs to a different device");
+        if event.id < st.event_base {
+            // Recorded before the last flush — resolved, nothing to wait.
+            return Ok(());
+        }
+        let idx = (event.id - st.event_base) as usize;
+        anyhow::ensure!(idx < st.events.len(), "unknown event");
+        if let Some(dep) = st.events[idx].dep {
+            if dep >= st.flushed_below {
+                st.streams[stream.id as usize].waits.push(dep);
+            }
+        }
+        Ok(())
+    }
+
+    /// Enqueue one collective plan onto a stream; returns immediately.
+    pub fn enqueue_collective(
+        &self,
+        plan: CollectivePlan,
+        stream: Stream,
+    ) -> Result<PendingOp> {
+        if let PlanShape::Flat { spec, .. } = &plan.shape {
+            spec.validate()?;
+        }
+        self.enqueue(OpPayload::Collective(plan), stream)
+    }
+
+    /// Enqueue a simulated compute op (pure stream-occupying delay).
+    pub fn enqueue_compute(&self, duration: SimTime, stream: Stream) -> Result<PendingOp> {
+        self.enqueue(OpPayload::Compute { duration }, stream)
+    }
+
+    fn enqueue(&self, payload: OpPayload, stream: Stream) -> Result<PendingOp> {
+        let mut st = self.lock();
+        self.check_stream(&st, stream)?;
+        let id = st.next_op;
+        st.next_op += 1;
+        let mut deps: Vec<u64> = Vec::new();
+        {
+            let ss = &mut st.streams[stream.id as usize];
+            deps.append(&mut ss.waits);
+            if let Some(t) = ss.tail {
+                deps.push(t);
+            }
+            ss.tail = Some(id);
+        }
+        // Already-priced predecessors lie before `now` — no edge needed.
+        let flushed_below = st.flushed_below;
+        deps.retain(|d| *d >= flushed_below);
+        deps.sort_unstable();
+        deps.dedup();
+        st.pending.push(PendingState { id, deps, payload });
+        Ok(PendingOp { dev: self.tag, id })
+    }
+
+    /// Price every pending op and advance the clock. Idempotent when
+    /// nothing is pending. Returns the absolute virtual time afterwards.
+    pub fn synchronize(&self) -> Result<SimTime> {
+        let mut st = self.lock();
+        self.flush(&mut st)?;
+        Ok(st.now)
+    }
+
+    /// Synchronize and return the absolute completion time of the last
+    /// op enqueued on `stream` (device `now` if the stream never ran).
+    pub fn stream_synchronize(&self, stream: Stream) -> Result<SimTime> {
+        let mut st = self.lock();
+        self.check_stream(&st, stream)?;
+        self.flush(&mut st)?;
+        let ss = &st.streams[stream.id as usize];
+        Ok(if ss.tail.is_some() {
+            ss.tail_finish
+        } else {
+            st.now
+        })
+    }
+
+    /// Claim the outcome of one op (pricing the pending batch first if
+    /// needed). Each handle can be claimed once.
+    pub fn take_result(&self, op: PendingOp) -> Result<OpOutcome> {
+        anyhow::ensure!(op.dev == self.tag, "handle belongs to a different device");
+        let mut st = self.lock();
+        if op.id >= st.flushed_below {
+            self.flush(&mut st)?;
+        }
+        st.results
+            .remove(&op.id)
+            .ok_or_else(|| anyhow::anyhow!("unknown or already-claimed op handle"))
+    }
+
+    // -----------------------------------------------------------------
+    // Pricing.
+    // -----------------------------------------------------------------
+
+    fn flush(&self, st: &mut DeviceState) -> Result<()> {
+        if st.pending.is_empty() {
+            return Ok(());
+        }
+        let batch = std::mem::take(&mut st.pending);
+        let epoch = st.now;
+        let outcomes = if batch.len() == 1 {
+            // Uncontended fast path: the exact solo compilation of the
+            // blocking API — bit-identical reports, by construction.
+            let op = &batch[0];
+            debug_assert!(op.deps.is_empty(), "solo op cannot have batch deps");
+            vec![(op.id, self.price_solo(op, epoch)?)]
+        } else {
+            self.price_batch(&batch, epoch)?
+        };
+        // Stream tails priced in this batch pin their finish times (the
+        // `stream_synchronize` observable) before the outcomes move
+        // into the claim map.
+        for ss in &mut st.streams {
+            if let Some(t) = ss.tail {
+                if let Some((_, o)) = outcomes.iter().find(|(id, _)| *id == t) {
+                    ss.tail_finish = o.finished;
+                }
+            }
+        }
+        for (id, outcome) in outcomes {
+            st.now = st.now.max(outcome.finished);
+            st.results.insert(id, outcome);
+        }
+        // Everything enqueued so far is now priced; events recorded
+        // before this point are resolved and their states droppable.
+        st.flushed_below = st.next_op;
+        st.event_base += st.events.len() as u32;
+        st.events.clear();
+        Ok(())
+    }
+
+    /// Solo pricing — one op, no contention, the blocking code path.
+    fn price_solo(&self, op: &PendingState, epoch: SimTime) -> Result<OpOutcome> {
+        match &op.payload {
+            OpPayload::Compute { duration } => Ok(OpOutcome {
+                epoch,
+                ready: epoch,
+                finished: epoch + *duration,
+                span: PhaseSpan {
+                    start: epoch,
+                    end: epoch + *duration,
+                },
+                contended: false,
+                collective: None,
+            }),
+            OpPayload::Collective(plan) => {
+                let (report, intra_obs, inter_obs) = self.price_plan_solo(plan)?;
+                let total = report.sim.total();
+                Ok(OpOutcome {
+                    epoch,
+                    ready: epoch,
+                    finished: epoch + total,
+                    span: PhaseSpan {
+                        start: epoch,
+                        end: epoch + total,
+                    },
+                    contended: false,
+                    collective: Some(CollectiveOutcome {
+                        report,
+                        intra_obs,
+                        inter_obs,
+                    }),
+                })
+            }
+        }
+    }
+
+    /// One plan through the pre-stream blocking pipeline (also used by
+    /// the tuning-free "individual" timings of fused groups).
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn price_plan_solo(
+        &self,
+        plan: &CollectivePlan,
+    ) -> Result<(
+        super::CollectiveReport,
+        Vec<(PathId, SimTime)>,
+        Vec<(StripeId, SimTime)>,
+    )> {
+        match &plan.shape {
+            PlanShape::Flat { spec, shares } => {
+                let outcome = schedule::simulate(&self.topo, spec, self.calib.reduce_bps)?;
+                let sim = RunReport {
+                    outcome,
+                    msg_bytes: plan.msg_bytes,
+                    kind: plan.kind,
+                };
+                let intra_obs = sim.path_times();
+                let report = super::CollectiveReport {
+                    kind: plan.kind,
+                    msg_bytes: plan.msg_bytes,
+                    sim,
+                    shares: shares.clone(),
+                    adjusted: None,
+                    tiers: None,
+                };
+                Ok((report, intra_obs, Vec::new()))
+            }
+            PlanShape::Hier {
+                tiers,
+                n_local,
+                pipeline,
+            } => {
+                let cc = ClusterCollective::new(
+                    &self.cluster,
+                    self.calib.clone(),
+                    plan.kind,
+                    *n_local,
+                )
+                .with_pipeline(*pipeline);
+                let hier = cc.run(plan.msg_bytes, tiers, plan.elem_bytes)?;
+                // Repackage behind the stable RunReport surface, exactly
+                // as the blocking cluster path always has.
+                let per_path: Vec<PathTiming> = tiers
+                    .intra
+                    .to_extents(plan.msg_bytes, plan.elem_bytes)
+                    .iter()
+                    .map(|(p, _, len)| PathTiming {
+                        path: *p,
+                        bytes: *len,
+                        time: hier
+                            .intra_times
+                            .iter()
+                            .find(|(q, _)| q == p)
+                            .map(|(_, t)| *t)
+                            .unwrap_or(SimTime::ZERO),
+                    })
+                    .collect();
+                let sim = RunReport {
+                    outcome: SimOutcome {
+                        total: hier.total,
+                        per_path,
+                        events: hier.events,
+                        tasks: hier.tasks,
+                    },
+                    msg_bytes: plan.msg_bytes,
+                    kind: plan.kind,
+                };
+                let report = super::CollectiveReport {
+                    kind: plan.kind,
+                    msg_bytes: plan.msg_bytes,
+                    sim,
+                    shares: tiers.intra.clone(),
+                    adjusted: None,
+                    tiers: Some(super::TierReport {
+                        inter_shares: tiers.inter.clone(),
+                        inter_times: hier.inter_times.clone(),
+                        intra_phase1: hier.intra_phase1,
+                        inter_phase: hier.inter_phase,
+                        intra_phase3: hier.intra_phase3,
+                        adjusted: None,
+                    }),
+                };
+                Ok((report, hier.intra_times, hier.inter_times))
+            }
+        }
+    }
+
+    /// Fused pricing: compile the whole batch into ONE graph over ONE
+    /// pool — private protocol resources per op, shared physical links —
+    /// and run a single DES launch.
+    fn price_batch(
+        &self,
+        batch: &[PendingState],
+        epoch: SimTime,
+    ) -> Result<Vec<(u64, OpOutcome)>> {
+        struct Frag {
+            range: Range<usize>,
+            barrier: TaskId,
+            entry: Vec<TaskId>,
+            /// (p1, p2, p3) phase ranges of a hierarchical lowering.
+            phases: Option<(Range<usize>, Range<usize>, Range<usize>)>,
+        }
+        let mut pool = if self.cluster.n_nodes() > 1 {
+            self.cluster.pool.clone()
+        } else {
+            self.topo.pool.clone()
+        };
+        let mut graph = TaskGraph::new();
+        let mut barrier_of: HashMap<u64, TaskId> = HashMap::new();
+        let mut frags: Vec<Frag> = Vec::with_capacity(batch.len());
+
+        for op in batch {
+            let entry: Vec<TaskId> = op.deps.iter().map(|d| barrier_of[d]).collect();
+            let base = graph.len();
+            let mut phases = None;
+            match &op.payload {
+                OpPayload::Compute { duration } => {
+                    graph.delay(*duration, entry.clone());
+                }
+                OpPayload::Collective(plan) => match &plan.shape {
+                    PlanShape::Flat { spec, .. } => {
+                        let models: Vec<(PathId, PathModel)> =
+                            spec.paths.iter().map(|p| (p.path, p.model)).collect();
+                        let mut b = GraphBuilder::onto(
+                            &self.topo,
+                            spec.n,
+                            &models,
+                            self.calib.reduce_bps,
+                            pool,
+                            graph,
+                        );
+                        schedule::append_call(&mut b, spec, 0);
+                        (pool, graph) = b.into_parts();
+                    }
+                    PlanShape::Hier {
+                        tiers,
+                        n_local,
+                        pipeline,
+                    } => {
+                        let cc = ClusterCollective::new(
+                            &self.cluster,
+                            self.calib.clone(),
+                            plan.kind,
+                            *n_local,
+                        )
+                        .with_pipeline(*pipeline);
+                        let compiled = cc.compile_onto(
+                            plan.msg_bytes,
+                            tiers,
+                            plan.elem_bytes,
+                            pool,
+                            graph,
+                        )?;
+                        phases = Some((
+                            compiled.p1_range.clone(),
+                            compiled.p2_range.clone(),
+                            compiled.p3_range.clone(),
+                        ));
+                        pool = compiled.pool;
+                        graph = compiled.graph;
+                    }
+                },
+            }
+            let range = base..graph.len();
+            // FIFO / event edges: suspend the fragment behind its
+            // predecessors' completion barriers.
+            graph.gate_roots_in(range.clone(), &entry);
+            let sinks = graph.sinks_in(range.clone());
+            let barrier = graph.barrier(sinks);
+            barrier_of.insert(op.id, barrier);
+            frags.push(Frag {
+                range,
+                barrier,
+                entry,
+                phases,
+            });
+        }
+
+        let sched = Engine::new(&pool).run(&graph)?;
+        let events = sched.events;
+
+        let mut out = Vec::with_capacity(batch.len());
+        for (op, frag) in batch.iter().zip(&frags) {
+            let finish_rel = sched.finish_of(frag.barrier);
+            let ready_rel = frag
+                .entry
+                .iter()
+                .map(|b| sched.finish_of(*b))
+                .max()
+                .unwrap_or(SimTime::ZERO);
+            let span_rel = phase_span(&sched, frag.range.clone());
+            let collective = match &op.payload {
+                OpPayload::Compute { .. } => None,
+                OpPayload::Collective(plan) => Some(self.contended_outcome(
+                    plan,
+                    &sched,
+                    &graph,
+                    frag.range.clone(),
+                    frag.phases.clone(),
+                    ready_rel,
+                    finish_rel,
+                    events,
+                )),
+            };
+            out.push((
+                op.id,
+                OpOutcome {
+                    epoch,
+                    ready: epoch + ready_rel,
+                    finished: epoch + finish_rel,
+                    span: PhaseSpan {
+                        start: epoch + span_rel.start,
+                        end: epoch + span_rel.end,
+                    },
+                    contended: true,
+                    collective,
+                },
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Build one op's collective outcome from its fragment of the fused
+    /// schedule. All report times are rebased to the op's launch point
+    /// (`ready_rel`), mirroring the solo report's zero origin; `events`
+    /// counts the whole batch (per-op attribution of merged heap events
+    /// is not meaningful).
+    #[allow(clippy::too_many_arguments)]
+    fn contended_outcome(
+        &self,
+        plan: &CollectivePlan,
+        sched: &Schedule,
+        graph: &TaskGraph,
+        range: Range<usize>,
+        phases: Option<(Range<usize>, Range<usize>, Range<usize>)>,
+        ready_rel: SimTime,
+        finish_rel: SimTime,
+        events: u64,
+    ) -> CollectiveOutcome {
+        let rel = |t: SimTime| t.saturating_sub(ready_rel);
+        let tag_time = |tag: u32| {
+            sched
+                .tag_finish_in(graph, tag, range.clone())
+                .map(rel)
+                .unwrap_or(SimTime::ZERO)
+        };
+        let (per_path, shares, tiers_rep, intra_obs, inter_obs) = match &plan.shape {
+            PlanShape::Flat { spec, shares } => {
+                let per_path: Vec<PathTiming> = spec
+                    .paths
+                    .iter()
+                    .map(|pa| PathTiming {
+                        path: pa.path,
+                        bytes: pa.bytes,
+                        time: tag_time(pa.path.tag()),
+                    })
+                    .collect();
+                let intra_obs: Vec<(PathId, SimTime)> = per_path
+                    .iter()
+                    .filter(|p| p.bytes > 0)
+                    .map(|p| (p.path, p.time))
+                    .collect();
+                (per_path, shares.clone(), None, intra_obs, Vec::new())
+            }
+            PlanShape::Hier { tiers, .. } => {
+                let intra_obs: Vec<(PathId, SimTime)> = tiers
+                    .intra
+                    .active_paths()
+                    .into_iter()
+                    .filter_map(|p| {
+                        sched
+                            .tag_finish_in(graph, p.tag(), range.clone())
+                            .map(|t| (p, rel(t)))
+                    })
+                    .collect();
+                let inter_obs: Vec<(StripeId, SimTime)> = tiers
+                    .inter
+                    .active_paths()
+                    .into_iter()
+                    .filter_map(|s| {
+                        sched
+                            .tag_finish_in(graph, s.tag(), range.clone())
+                            .map(|t| (s, rel(t)))
+                    })
+                    .collect();
+                let per_path: Vec<PathTiming> = tiers
+                    .intra
+                    .to_extents(plan.msg_bytes, plan.elem_bytes)
+                    .iter()
+                    .map(|(p, _, len)| PathTiming {
+                        path: *p,
+                        bytes: *len,
+                        time: intra_obs
+                            .iter()
+                            .find(|(q, _)| q == p)
+                            .map(|(_, t)| *t)
+                            .unwrap_or(SimTime::ZERO),
+                    })
+                    .collect();
+                let (p1, p2, p3) = phases.expect("hier op carries phase ranges");
+                let tiers_rep = super::TierReport {
+                    inter_shares: tiers.inter.clone(),
+                    inter_times: inter_obs.clone(),
+                    intra_phase1: phase_span(sched, p1).rebased(ready_rel),
+                    inter_phase: phase_span(sched, p2).rebased(ready_rel),
+                    intra_phase3: phase_span(sched, p3).rebased(ready_rel),
+                    adjusted: None,
+                };
+                (per_path, tiers.intra.clone(), Some(tiers_rep), intra_obs, inter_obs)
+            }
+        };
+        CollectiveOutcome {
+            report: super::CollectiveReport {
+                kind: plan.kind,
+                msg_bytes: plan.msg_bytes,
+                sim: RunReport {
+                    outcome: SimOutcome {
+                        total: finish_rel.saturating_sub(ready_rel),
+                        per_path,
+                        events,
+                        tasks: range.len(),
+                    },
+                    msg_bytes: plan.msg_bytes,
+                    kind: plan.kind,
+                },
+                shares,
+                adjusted: None,
+                tiers: tiers_rep,
+            },
+            intra_obs,
+            inter_obs,
+        }
+    }
+}

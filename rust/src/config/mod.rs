@@ -71,6 +71,12 @@ pub struct RunConfig {
     /// the comparison baseline. Ignored when `n_nodes == 1` (the flat
     /// lowering has no phases to join).
     pub pipeline_phases: bool,
+    /// Effective (MFU-discounted) per-GPU compute throughput in TFLOPS,
+    /// used to price simulated [`ComputeOp`]s — the backward-pass chunks
+    /// the trainer overlaps with gradient collectives on the stream API.
+    ///
+    /// [`ComputeOp`]: crate::comm::Communicator::compute_async
+    pub gpu_tflops: f64,
     pub balancer: BalancerConfig,
     /// Override the node spec entirely (when preset == Custom).
     pub node: Option<NodeSpec>,
@@ -86,6 +92,12 @@ fn default_seed() -> u64 {
     0xF1EC5
 }
 
+/// H800 BF16 dense peak is ~990 TFLOPS; production MFU of ~35% lands at
+/// ~350 effective TFLOPS — the default the trainer's overlap model uses.
+fn default_gpu_tflops() -> f64 {
+    350.0
+}
+
 impl RunConfig {
     pub fn new(preset: Preset, n_gpus: usize) -> Self {
         RunConfig {
@@ -94,6 +106,7 @@ impl RunConfig {
             n_nodes: 1,
             spine_oversub: 1.0,
             pipeline_phases: true,
+            gpu_tflops: default_gpu_tflops(),
             balancer: BalancerConfig::default(),
             node: None,
             disable_rdma: false,
@@ -151,7 +164,7 @@ impl RunConfig {
         let doc = KvDoc::parse(text)?;
         const KNOWN: &[&str] = &[
             "preset", "n_gpus", "n_nodes", "spine_oversub", "pipeline_phases",
-            "disable_rdma", "disable_pcie", "seed",
+            "gpu_tflops", "disable_rdma", "disable_pcie", "seed",
             "balancer.initial_step_pct", "balancer.convergence_threshold",
             "balancer.stability_required", "balancer.max_iterations",
             "balancer.window", "balancer.runtime_threshold",
@@ -186,6 +199,7 @@ impl RunConfig {
             n_nodes: doc.usize_or("n_nodes", 1),
             spine_oversub: doc.f64_or("spine_oversub", 1.0),
             pipeline_phases: doc.bool_or("pipeline_phases", true),
+            gpu_tflops: doc.f64_or("gpu_tflops", default_gpu_tflops()),
             balancer,
             node: None,
             disable_rdma: doc.bool_or("disable_rdma", false),
@@ -202,6 +216,7 @@ impl RunConfig {
         doc.set("n_nodes", Value::Int(self.n_nodes as i64));
         doc.set("spine_oversub", Value::Float(self.spine_oversub));
         doc.set("pipeline_phases", Value::Bool(self.pipeline_phases));
+        doc.set("gpu_tflops", Value::Float(self.gpu_tflops));
         doc.set("disable_rdma", Value::Bool(self.disable_rdma));
         doc.set("disable_pcie", Value::Bool(self.disable_pcie));
         doc.set("seed", Value::Int(self.seed as i64));
@@ -249,6 +264,10 @@ impl RunConfig {
             self.spine_oversub >= 1.0 && self.spine_oversub.is_finite(),
             "spine_oversub must be ≥ 1"
         );
+        anyhow::ensure!(
+            self.gpu_tflops > 0.0 && self.gpu_tflops.is_finite(),
+            "gpu_tflops must be > 0"
+        );
         let b = &self.balancer;
         anyhow::ensure!(b.initial_step_pct > 0.0, "initial_step_pct must be > 0");
         anyhow::ensure!(b.window > 0, "evaluator window must be > 0");
@@ -285,12 +304,19 @@ mod tests {
         let mut cfg = RunConfig::new(Preset::Gb200, 4);
         cfg.balancer.window = 17;
         cfg.disable_rdma = true;
+        cfg.gpu_tflops = 123.5;
         let text = cfg.to_toml().unwrap();
         let back = RunConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.n_gpus, 4);
         assert_eq!(back.preset, Preset::Gb200);
         assert_eq!(back.balancer.window, 17);
         assert!(back.disable_rdma);
+        assert!((back.gpu_tflops - 123.5).abs() < 1e-9);
+        // Defaulted when absent; zero/negative rejected.
+        assert!(RunConfig::from_toml_str("preset = \"h800\"").unwrap().gpu_tflops > 0.0);
+        let mut bad = RunConfig::new(Preset::H800, 8);
+        bad.gpu_tflops = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

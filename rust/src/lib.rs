@@ -35,10 +35,15 @@
 //!
 //! ## Quickstart
 //!
-//! The API is typed and NCCL-shaped: buffers are [`dtype::DeviceBuffer`]s
-//! carrying a [`dtype::DataType`] tag, reductions take a full
-//! [`dtype::RedOp`], out-of-place send/recv pairs are the default, and
-//! `group_start`/`group_end` fuse collectives into one launch.
+//! The API is typed, NCCL-shaped, and **stream-ordered**: buffers are
+//! [`dtype::DeviceBuffer`]s carrying a [`dtype::DataType`] tag,
+//! reductions take a full [`dtype::RedOp`], out-of-place send/recv pairs
+//! are the default, and — like real NCCL — collectives are nonblocking:
+//! the `*_async` forms enqueue onto a [`comm::Stream`] and return a
+//! [`comm::PendingOp`] immediately, so independent streams (and whole
+//! separate communicators sharing one device via
+//! [`comm::Communicator::init_shared`]) overlap and contend on the same
+//! simulated links.
 //!
 //! ```no_run
 //! use flexlink::comm::{Communicator, CommConfig};
@@ -47,16 +52,26 @@
 //!
 //! let cfg = CommConfig::new(Preset::H800, 8);
 //! let mut comm = Communicator::init(cfg).unwrap();
-//! // One typed buffer per rank; out-of-place send/recv pairs.
 //! let send: Vec<DeviceBuffer> =
 //!     (0..8).map(|r| DeviceBuffer::from_f32(&vec![r as f32; 1 << 20])).collect();
 //! let mut recv: Vec<DeviceBuffer> =
 //!     (0..8).map(|_| DeviceBuffer::zeros(DataType::F32, 1 << 20)).collect();
-//! let report = comm.all_reduce(&send, &mut recv, RedOp::Sum).unwrap();
+//!
+//! // Nonblocking: enqueue onto streams, overlap compute with comm,
+//! // synchronize to price everything on the shared fair-share DES.
+//! let comm_stream = comm.create_stream();
+//! let compute_stream = comm.create_stream();
+//! let h = comm.all_reduce_async(&send, &mut recv, RedOp::Sum, comm_stream).unwrap();
+//! comm.compute_async(flexlink::sim::SimTime::from_micros(500), compute_stream).unwrap();
+//! comm.synchronize().unwrap();
+//! let report = comm.wait(h).unwrap();
 //! println!("algbw = {:.1} GB/s", report.algbw_gbps());
 //!
+//! // Blocking calls are thin enqueue+wait sugar over the same machinery.
+//! comm.all_reduce_in_place(&mut recv, RedOp::Avg).unwrap();
+//!
 //! // Batched launch (ncclGroupStart/ncclGroupEnd): fused collectives
-//! // contend for the same links in one DES launch.
+//! // ride per-call streams into one DES launch.
 //! comm.group_start().unwrap();
 //! comm.all_reduce_in_place(&mut recv, RedOp::Avg).unwrap();
 //! let mut gathered: Vec<DeviceBuffer> =

@@ -33,15 +33,21 @@ COMMANDS:
   tune    --op <kind> --gpus <n> --preset <p> --mib <size>
           run Algorithm 1 and print the tuning trajectory
   train   --model tiny|gpt10m|gpt100m --gpus <n> --steps <k>
-          [--artifacts <dir>] [--csv <path>]
-          data-parallel training with FlexLink gradient AllReduce
-  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster>
+          [--overlap <buckets>] [--artifacts <dir>] [--csv <path>]
+          data-parallel training with FlexLink gradient AllReduce;
+          --overlap buckets the backward pass and hides gradient traffic
+          under compute on the stream-ordered DES
+  repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|
+           cluster|overlap|concurrent>
           [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
           case), --no-pipeline joins its phases with whole-phase barriers
-          instead of chunk pipelining, and `cluster` sweeps 1/2/4/8 nodes
-          with per-tier algbw plus the barriered-vs-pipelined overlap gain
+          instead of chunk pipelining, `cluster` sweeps 1/2/4/8 nodes
+          with per-tier algbw plus the barriered-vs-pipelined overlap
+          gain, `overlap` sweeps compute/comm overlap (bucketed backward
+          vs sequential), and `concurrent` prices two communicators
+          contending on one shared device
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
@@ -72,6 +78,7 @@ fn main() -> Result<()> {
             args.usize_or("gpus", 4)?,
             &args.str_or("model", "tiny"),
             args.usize_or("steps", 20)?,
+            args.usize_or("overlap", 0)?,
             &args.str_or("artifacts", "artifacts"),
             args.flag("csv"),
         ),
@@ -193,6 +200,7 @@ fn train(
     gpus: usize,
     model: &str,
     steps: usize,
+    overlap: usize,
     artifacts: &str,
     csv_path: Option<&str>,
 ) -> Result<()> {
@@ -200,6 +208,7 @@ fn train(
     cfg.model = model.to_string();
     cfg.artifact_dir = artifacts.into();
     cfg.steps = steps;
+    cfg.overlap_buckets = overlap;
     if model == "gpt10m" {
         cfg.batch = 4;
         cfg.seq = 128;
@@ -211,15 +220,23 @@ fn train(
     }
     let mut trainer = Trainer::new(cfg)?;
     println!(
-        "# model={model} params={} gpus={gpus} steps={steps}",
+        "# model={model} params={} gpus={gpus} steps={steps} overlap_buckets={overlap}",
         trainer.n_params()
     );
-    let mut csv = Csv::new(&["step", "loss", "comm_ms", "baseline_comm_ms", "algbw_gbps"]);
+    let mut csv = Csv::new(&[
+        "step",
+        "loss",
+        "comm_ms",
+        "baseline_comm_ms",
+        "algbw_gbps",
+        "step_ms",
+        "step_seq_ms",
+    ]);
     let records = trainer.train()?;
     for r in &records {
         println!(
-            "step {:>4}  loss {:>8.4}  comm {:>9}  (nccl {:>9})  algbw {:>6.1} GB/s",
-            r.step, r.loss, r.comm_time, r.baseline_comm_time, r.algbw_gbps
+            "step {:>4}  loss {:>8.4}  comm {:>9}  (nccl {:>9})  algbw {:>6.1} GB/s  step {:>9}",
+            r.step, r.loss, r.comm_time, r.baseline_comm_time, r.algbw_gbps, r.sim_step_time
         );
         csv.row(&[
             r.step.to_string(),
@@ -227,6 +244,8 @@ fn train(
             format!("{:.4}", r.comm_time.as_secs_f64() * 1e3),
             format!("{:.4}", r.baseline_comm_time.as_secs_f64() * 1e3),
             format!("{:.2}", r.algbw_gbps),
+            format!("{:.4}", r.sim_step_time.as_secs_f64() * 1e3),
+            format!("{:.4}", r.sim_step_time_sequential.as_secs_f64() * 1e3),
         ]);
     }
     let first = &records[0];
@@ -236,13 +255,22 @@ fn train(
         .iter()
         .map(|r| r.baseline_comm_time.as_secs_f64())
         .sum();
+    let step_s: f64 = records.iter().map(|r| r.sim_step_time.as_secs_f64()).sum();
+    let step_seq_s: f64 = records
+        .iter()
+        .map(|r| r.sim_step_time_sequential.as_secs_f64())
+        .sum();
     println!(
-        "# loss {:.4} → {:.4} | total comm {:.3}s vs NCCL {:.3}s ({:+.1}%)",
+        "# loss {:.4} → {:.4} | total comm {:.3}s vs NCCL {:.3}s ({:+.1}%) | \
+         step time {:.3}s vs sequential {:.3}s ({:+.1}% from overlap)",
         first.loss,
         last.loss,
         comm,
         base,
-        (comm / base - 1.0) * 100.0
+        (comm / base - 1.0) * 100.0,
+        step_s,
+        step_seq_s,
+        (step_s / step_seq_s - 1.0) * 100.0
     );
     if let Some(p) = csv_path {
         csv.write_file(p)?;
@@ -446,6 +474,70 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
                 csv.write_file(p)?;
             }
         }
+        "overlap" => {
+            // Compute/comm overlap on the stream-ordered DES: bucketed
+            // DDP-style backward vs the strictly sequential schedule.
+            let rows = bh::overlap_sweep(Preset::H800, 8, &[64, 256], &[1, 2, 4, 8])?;
+            print!("{}", bh::render_overlap_sweep(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "mib",
+                    "buckets",
+                    "compute_ms",
+                    "comm_solo_ms",
+                    "sequential_ms",
+                    "overlapped_ms",
+                    "saving_pct",
+                    "overlap_efficiency_pct",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.msg_mib.to_string(),
+                        r.buckets.to_string(),
+                        format!("{:.4}", r.compute_ms),
+                        format!("{:.4}", r.comm_solo_ms),
+                        format!("{:.4}", r.sequential_ms),
+                        format!("{:.4}", r.overlapped_ms),
+                        format!("{:.2}", r.saving_pct),
+                        format!("{:.2}", r.overlap_efficiency_pct),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
+        "concurrent" => {
+            // Two communicators over ONE shared device: the DES prices
+            // real contention — slower than alone, faster than serial.
+            let rows = bh::concurrent_sweep(Preset::H800, 8, &[32, 64, 256])?;
+            print!("{}", bh::render_concurrent_sweep(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "mib",
+                    "solo_ar_ms",
+                    "solo_ag_ms",
+                    "contended_ar_ms",
+                    "contended_ag_ms",
+                    "slowdown_ar",
+                    "slowdown_ag",
+                    "makespan_ms",
+                    "sequential_ms",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.msg_mib.to_string(),
+                        format!("{:.4}", r.solo_ar_ms),
+                        format!("{:.4}", r.solo_ag_ms),
+                        format!("{:.4}", r.contended_ar_ms),
+                        format!("{:.4}", r.contended_ag_ms),
+                        format!("{:.3}", r.slowdown_ar),
+                        format!("{:.3}", r.slowdown_ag),
+                        format!("{:.4}", r.makespan_ms),
+                        format!("{:.4}", r.sequential_ms),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
         "group" => {
             let r = bh::group_fusion(
                 Preset::H800,
@@ -482,7 +574,8 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
             println!("  one-time profiling (simulated): {:.2}s", o.profiling_time_s);
         }
         other => anyhow::bail!(
-            "unknown repro target '{other}' (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster)"
+            "unknown repro target '{other}' \
+             (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|concurrent)"
         ),
     }
     Ok(())

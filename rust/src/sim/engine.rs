@@ -120,6 +120,51 @@ impl TaskGraph {
         self.tasks[id.0 as usize].tag
     }
 
+    /// Gate the *roots* of an already-emitted task range on `deps`: every
+    /// task in `range` with an empty dependency list gains them. All
+    /// non-root tasks of a fragment reach its roots transitively, so this
+    /// suspends the whole fragment behind `deps` — how a stream's op
+    /// fragment is chained behind its FIFO predecessor (and any Event
+    /// wait edges) after being compiled by a builder that knows nothing
+    /// about streams. `deps` must reference tasks emitted before `range`.
+    pub fn gate_roots_in(&mut self, range: std::ops::Range<usize>, deps: &[TaskId]) {
+        if deps.is_empty() {
+            return;
+        }
+        for d in deps {
+            assert!(
+                (d.0 as usize) < range.start,
+                "gate deps must precede the gated range (got {d:?} for {range:?})"
+            );
+        }
+        for t in &mut self.tasks[range] {
+            if t.deps.is_empty() {
+                t.deps.extend_from_slice(deps);
+            }
+        }
+    }
+
+    /// Tasks in `range` that no other task *in the range* depends on —
+    /// the completion frontier of an op fragment. A barrier over the
+    /// sinks finishes exactly when the fragment does, without enumerating
+    /// every task id as a dependency.
+    pub fn sinks_in(&self, range: std::ops::Range<usize>) -> Vec<TaskId> {
+        let mut has_dependent = vec![false; range.len()];
+        for t in &self.tasks[range.clone()] {
+            for d in &t.deps {
+                let i = d.0 as usize;
+                if range.contains(&i) {
+                    has_dependent[i - range.start] = true;
+                }
+            }
+        }
+        range
+            .clone()
+            .filter(|i| !has_dependent[i - range.start])
+            .map(|i| TaskId(i as u32))
+            .collect()
+    }
+
     /// Total transfer payload routed through each resource. Two lowerings
     /// of the same collective must agree here exactly — rearranging
     /// dependencies (e.g. chunk-level phase pipelining) may move bytes in
@@ -162,8 +207,20 @@ impl Schedule {
     /// Latest finish among tasks whose tag matches — e.g. the completion
     /// time of one path of a multi-path collective.
     pub fn tag_finish(&self, graph: &TaskGraph, tag: u32) -> Option<SimTime> {
-        (0..self.timings.len())
-            .filter(|i| graph.tasks[*i].tag == tag)
+        self.tag_finish_in(graph, tag, 0..self.timings.len())
+    }
+
+    /// As [`Self::tag_finish`], restricted to the task ids in `range` —
+    /// the per-op attribution query for graphs holding several fused ops
+    /// whose fragments reuse the same path/stripe tags.
+    pub fn tag_finish_in(
+        &self,
+        graph: &TaskGraph,
+        tag: u32,
+        range: std::ops::Range<usize>,
+    ) -> Option<SimTime> {
+        range
+            .filter(|i| *i < self.timings.len() && graph.tasks[*i].tag == tag)
             .map(|i| self.timings[i].finish)
             .max()
     }
@@ -565,6 +622,69 @@ mod tests {
         };
         assert_eq!(mk(5), mk(5));
         assert_ne!(mk(5), mk(6));
+    }
+
+    #[test]
+    fn gate_roots_suspends_whole_fragment() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let head = g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        // Fragment emitted independently (roots have no deps)...
+        let base = g.len();
+        let r1 = g.transfer(500, vec![a], SimTime::ZERO, vec![]);
+        let _r2 = g.transfer(500, vec![a], SimTime::ZERO, vec![r1]);
+        // ...then chained FIFO-style behind `head`.
+        g.gate_roots_in(base..g.len(), &[head]);
+        let s = Engine::new(&p).run(&g).unwrap();
+        assert_eq!(s.timings[r1.0 as usize].start, s.finish_of(head));
+        // 10s head + 5s + 5s, fully serialized.
+        assert!((s.makespan.as_secs_f64() - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sinks_are_the_completion_frontier() {
+        let (_, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let t0 = g.transfer(10, vec![a], SimTime::ZERO, vec![]);
+        let t1 = g.transfer(10, vec![a], SimTime::ZERO, vec![t0]);
+        let t2 = g.transfer(10, vec![a], SimTime::ZERO, vec![t0]);
+        assert_eq!(g.sinks_in(0..3), vec![t1, t2]);
+        // Restricting the range re-roots the query: t0's dependents fall
+        // outside, so t0 becomes the sink of its own singleton range.
+        assert_eq!(g.sinks_in(0..1), vec![t0]);
+    }
+
+    #[test]
+    fn tag_finish_in_is_range_scoped() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        g.add_tagged(
+            TaskKind::Transfer {
+                bytes: 1000,
+                route: vec![a],
+                weight: 1.0,
+                latency: SimTime::ZERO,
+                rate_cap: f64::INFINITY,
+            },
+            vec![],
+            1,
+        );
+        g.add_tagged(
+            TaskKind::Transfer {
+                bytes: 500,
+                route: vec![b],
+                weight: 1.0,
+                latency: SimTime::ZERO,
+                rate_cap: f64::INFINITY,
+            },
+            vec![],
+            1,
+        );
+        let s = Engine::new(&p).run(&g).unwrap();
+        // Same tag, two "ops": the range picks one fragment's finish.
+        assert!((s.tag_finish_in(&g, 1, 0..1).unwrap().as_secs_f64() - 10.0).abs() < 1e-6);
+        assert!((s.tag_finish_in(&g, 1, 1..2).unwrap().as_secs_f64() - 5.0).abs() < 1e-6);
+        assert!(s.tag_finish_in(&g, 2, 0..2).is_none());
     }
 
     #[test]

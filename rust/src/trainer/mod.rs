@@ -14,7 +14,7 @@
 pub mod data;
 pub mod optimizer;
 
-use crate::comm::{CommConfig, Communicator};
+use crate::comm::{CommConfig, Communicator, Stream};
 use crate::dtype::{DeviceBuffer, RedOp};
 use crate::runtime::{HostTensor, LoadedModule, XlaRuntime};
 use crate::sim::SimTime;
@@ -37,6 +37,13 @@ pub struct TrainerConfig {
     pub vocab: usize,
     /// Use the AOT Adam artifact (true) or the Rust fallback (false).
     pub xla_optimizer: bool,
+    /// Gradient buckets for compute/comm overlap (DDP-style): with B > 1
+    /// the backward pass is simulated as B compute chunks on one stream
+    /// while each finished bucket's AllReduce rides a second stream,
+    /// gated by an [`Event`](crate::comm::Event) — so gradient traffic
+    /// hides under backward compute exactly as in production data
+    /// parallelism. 0 or 1 keeps the blocking step.
+    pub overlap_buckets: usize,
 }
 
 impl TrainerConfig {
@@ -52,6 +59,7 @@ impl TrainerConfig {
             seq: 32,
             vocab: 64,
             xla_optimizer: true,
+            overlap_buckets: 0,
         }
     }
 }
@@ -61,11 +69,31 @@ impl TrainerConfig {
 pub struct StepRecord {
     pub step: usize,
     pub loss: f32,
-    /// Simulated comm time of the gradient AllReduce under FlexLink.
+    /// Simulated comm time of the gradient AllReduce under FlexLink
+    /// (summed bucket durations when overlapping).
     pub comm_time: SimTime,
     /// Simulated comm time under the NVLink-only baseline, for speedup.
     pub baseline_comm_time: SimTime,
     pub algbw_gbps: f64,
+    /// Simulated end-to-end step time: fwd compute + the (possibly
+    /// overlapped) bwd-compute/gradient-comm window, as scheduled on the
+    /// shared DES.
+    pub sim_step_time: SimTime,
+    /// The same step with bwd and comm strictly sequential — what
+    /// overlap saves is the difference.
+    pub sim_step_time_sequential: SimTime,
+}
+
+impl StepRecord {
+    /// Fraction of the sequential step time that overlap removed.
+    pub fn overlap_saving(&self) -> f64 {
+        let seq = self.sim_step_time_sequential.as_secs_f64();
+        if seq <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.sim_step_time.as_secs_f64() / seq
+        }
+    }
 }
 
 /// The data-parallel trainer.
@@ -78,6 +106,9 @@ pub struct Trainer {
     opt: optimizer::AdamState,
     corpus: data::SyntheticCorpus,
     step_no: usize,
+    /// (compute, comm) streams for the overlapped step — created once
+    /// and reused so long runs don't grow the device's stream table.
+    overlap_streams: Option<(Stream, Stream)>,
 }
 
 impl Trainer {
@@ -111,6 +142,7 @@ impl Trainer {
             opt,
             corpus,
             step_no: 0,
+            overlap_streams: None,
         })
     }
 
@@ -157,8 +189,25 @@ impl Trainer {
         // FlexLink gradient AllReduce (real bytes + DES pricing) — the
         // typed path with RedOp::Avg does the DP mean on the wire — plus
         // the NCCL baseline's virtual time for speedup accounting.
-        let mut dev: Vec<DeviceBuffer> = grads.iter().map(|g| DeviceBuffer::from_f32(g)).collect();
-        let report = self.comm.all_reduce_in_place(&mut dev, RedOp::Avg)?;
+        // With `overlap_buckets > 1` the backward pass is simulated as
+        // compute chunks overlapping per-bucket AllReduces (DDP-style).
+        let (fwd_t, bwd_t) = self.compute_times();
+        let buckets = self.cfg.overlap_buckets.max(1).min(self.params.len());
+        let (grad, comm_time, algbw_gbps, msg_bytes, window) = if buckets <= 1 {
+            let mut dev: Vec<DeviceBuffer> =
+                grads.iter().map(|g| DeviceBuffer::from_f32(g)).collect();
+            let report = self.comm.all_reduce_in_place(&mut dev, RedOp::Avg)?;
+            let window = bwd_t + report.time();
+            (
+                dev[0].to_f32_vec(),
+                report.time(),
+                report.algbw_gbps(),
+                report.msg_bytes,
+                window,
+            )
+        } else {
+            self.overlapped_all_reduce(&grads, bwd_t, buckets)?
+        };
         let baseline = {
             let bl = crate::baseline::NcclBaseline::new(
                 self.comm.topology(),
@@ -166,11 +215,10 @@ impl Trainer {
                 crate::collectives::CollectiveKind::AllReduce,
                 n,
             );
-            bl.run(report.msg_bytes)?.total()
+            bl.run(msg_bytes)?.total()
         };
 
         // All ranks hold the identical averaged gradient; Adam.
-        let grad = dev[0].to_f32_vec();
         self.step_no += 1;
         match &self.adam {
             Some(module) => {
@@ -188,10 +236,87 @@ impl Trainer {
         Ok(StepRecord {
             step: self.step_no,
             loss: loss_sum / n as f32,
-            comm_time: report.time(),
+            comm_time,
             baseline_comm_time: baseline,
-            algbw_gbps: report.algbw_gbps(),
+            algbw_gbps,
+            sim_step_time: fwd_t + window,
+            sim_step_time_sequential: fwd_t + bwd_t + comm_time,
         })
+    }
+
+    /// Simulated fwd/bwd compute times per step: 2·P·T (fwd) and 4·P·T
+    /// (bwd) flops over the configured effective GPU throughput.
+    fn compute_times(&self) -> (SimTime, SimTime) {
+        let p = self.params.len() as f64;
+        let tokens = (self.cfg.batch * self.cfg.seq) as f64;
+        let rate = self.cfg.comm.run.gpu_tflops * 1e12;
+        (
+            SimTime::from_secs_f64(2.0 * p * tokens / rate),
+            SimTime::from_secs_f64(4.0 * p * tokens / rate),
+        )
+    }
+
+    /// DDP-style overlapped gradient AllReduce: backward compute chunks
+    /// on one stream, each finished bucket's Avg-AllReduce on a second
+    /// stream behind an event — priced together on the shared DES.
+    /// Returns (averaged grad, summed comm time, algbw, msg bytes,
+    /// simulated bwd+comm window).
+    #[allow(clippy::type_complexity)]
+    fn overlapped_all_reduce(
+        &mut self,
+        grads: &[Vec<f32>],
+        bwd_t: SimTime,
+        buckets: usize,
+    ) -> Result<(Vec<f32>, SimTime, f64, u64, SimTime)> {
+        let n = self.comm.n_ranks();
+        let len = self.params.len();
+        let chunk_t = SimTime::from_secs_f64(bwd_t.as_secs_f64() / buckets as f64);
+        let (compute_stream, comm_stream) = *self.overlap_streams.get_or_insert_with(|| {
+            (self.comm.create_stream(), self.comm.create_stream())
+        });
+        let t0 = self.comm.device().now();
+        let mut handles = Vec::with_capacity(buckets);
+        let mut compute_handles = Vec::with_capacity(buckets);
+        let mut bucket_devs: Vec<Vec<DeviceBuffer>> = Vec::with_capacity(buckets);
+        for b in 0..buckets {
+            let lo = len * b / buckets;
+            let hi = len * (b + 1) / buckets;
+            compute_handles.push(self.comm.compute_async(chunk_t, compute_stream)?);
+            let e = self.comm.record_event(compute_stream)?;
+            self.comm.stream_wait_event(comm_stream, e)?;
+            let mut dev: Vec<DeviceBuffer> = (0..n)
+                .map(|r| DeviceBuffer::from_f32(&grads[r][lo..hi]))
+                .collect();
+            let h = self
+                .comm
+                .all_reduce_in_place_async(&mut dev, RedOp::Avg, comm_stream)?;
+            handles.push(h);
+            bucket_devs.push(dev);
+        }
+        let t1 = self.comm.synchronize()?;
+        let mut comm_time = SimTime::ZERO;
+        let mut msg_bytes = 0u64;
+        for h in handles {
+            let rep = self.comm.wait(h)?;
+            comm_time += rep.time();
+            msg_bytes += rep.msg_bytes;
+        }
+        // Claim the compute outcomes too: unclaimed results would pile
+        // up in the device over a long training run.
+        for h in compute_handles {
+            self.comm.wait_op(h)?;
+        }
+        let mut grad = Vec::with_capacity(len);
+        for dev in &bucket_devs {
+            grad.extend_from_slice(&dev[0].to_f32_vec());
+        }
+        debug_assert_eq!(grad.len(), len);
+        let algbw = if comm_time > SimTime::ZERO {
+            msg_bytes as f64 / comm_time.as_secs_f64() / 1e9
+        } else {
+            0.0
+        };
+        Ok((grad, comm_time, algbw, msg_bytes, t1.saturating_sub(t0)))
     }
 
     /// Run the configured number of steps, returning the loss curve.

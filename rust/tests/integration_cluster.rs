@@ -173,6 +173,37 @@ fn movement_collectives_bit_exact_across_two_nodes() {
     }
 }
 
+/// Regression for the old cluster-rejection of `group_start`: a 2-node
+/// group of AllReduce + AllGather routes through the stream machinery,
+/// completes, and the fused launch beats launching them back to back
+/// (shared NICs + NVLink under fair share, latencies overlapping).
+#[test]
+fn two_node_group_fuses_and_beats_sequential() {
+    let mut cfg = CommConfig::cluster(Preset::H800, 2, 2);
+    cfg.tune_msg_bytes = 8 << 20;
+    let mut comm = Communicator::init(cfg).unwrap();
+    comm.group_start().unwrap();
+    comm.time_collective(CollectiveKind::AllReduce, 8 << 20).unwrap();
+    comm.time_collective(CollectiveKind::AllGather, 8 << 20).unwrap();
+    let rep = comm.group_end().unwrap();
+    assert_eq!(rep.calls.len(), 2);
+    assert_eq!(rep.calls[0].kind, CollectiveKind::AllReduce);
+    assert_eq!(rep.calls[1].kind, CollectiveKind::AllGather);
+    for call in &rep.calls {
+        assert!(call.fused_finish > flexlink::sim::SimTime::ZERO);
+        assert!(call.fused_finish <= rep.fused_total);
+        // Contention can only slow a call relative to running alone.
+        assert!(call.fused_finish >= call.individual);
+    }
+    assert!(
+        rep.fused_total < rep.sequential_total,
+        "2-node fused group {} did not beat sequential {}",
+        rep.fused_total,
+        rep.sequential_total
+    );
+    assert!(rep.speedup() > 1.0);
+}
+
 /// Stage-1 stripe tuning shifts load away from a degraded NIC uplink —
 /// the inter tier's version of Algorithm 1.
 #[test]

@@ -1,0 +1,235 @@
+//! Property tests for the stream-ordered execution semantics:
+//!
+//! (a) FIFO — ops enqueued on ONE stream never overlap in the priced
+//!     schedule, in enqueue order;
+//! (b) work conservation — concurrent streams are makespan-additive-or-
+//!     better (never slower than running the same ops back to back), and
+//!     resource-disjoint streams (compute vs comm) overlap fully;
+//! (c) Event wait edges are respected across streams;
+//! (d) the blocking entry points are bit-identical to manual
+//!     enqueue+synchronize, on single-node AND hierarchical (2-node)
+//!     communicators — the wrappers really are thin sugar.
+
+use flexlink::collectives::CollectiveKind;
+use flexlink::comm::{CommConfig, Communicator, PendingOp};
+use flexlink::config::presets::Preset;
+use flexlink::sim::SimTime;
+use flexlink::util::rng::Rng;
+
+fn comm(n: usize) -> Communicator {
+    let mut cfg = CommConfig::new(Preset::H800, n);
+    cfg.tune_msg_bytes = 8 << 20;
+    Communicator::init(cfg).unwrap()
+}
+
+const KINDS: [CollectiveKind; 3] = [
+    CollectiveKind::AllReduce,
+    CollectiveKind::AllGather,
+    CollectiveKind::ReduceScatter,
+];
+
+/// (a) FIFO: random op mixes on one stream price strictly in order.
+#[test]
+fn fifo_holds_on_one_stream() {
+    let mut rng = Rng::seed_from_u64(0xF1F0);
+    for case in 0..4u64 {
+        let mut c = comm(4);
+        // Warm every size class used below so enqueues don't interleave
+        // with tuning.
+        for kind in KINDS {
+            c.time_collective(kind, 4 << 20).unwrap();
+            c.time_collective(kind, 16 << 20).unwrap();
+        }
+        let s = c.create_stream();
+        let n_ops = 3 + (case as usize % 3);
+        let mut handles: Vec<PendingOp> = Vec::new();
+        for _ in 0..n_ops {
+            let kind = KINDS[rng.below(3) as usize];
+            let mib = if rng.below(2) == 0 { 4u64 } else { 16 };
+            handles.push(c.time_collective_async(kind, mib << 20, s).unwrap());
+        }
+        c.synchronize().unwrap();
+        let outcomes: Vec<_> = handles
+            .into_iter()
+            .map(|h| c.wait_op(h).unwrap())
+            .collect();
+        for w in outcomes.windows(2) {
+            assert!(
+                w[1].span.start >= w[0].finished,
+                "case {case}: FIFO violated — op started at {} before predecessor \
+                 finished at {}",
+                w[1].span.start.as_nanos(),
+                w[0].finished.as_nanos()
+            );
+            assert!(w[1].finished > w[0].finished);
+        }
+    }
+}
+
+/// (b) Concurrent streams: never slower than back-to-back (fair share is
+/// work-conserving, latencies overlap), never faster than the slowest
+/// single op.
+#[test]
+fn independent_streams_are_makespan_additive_or_better() {
+    let mut rng = Rng::seed_from_u64(0xADD1);
+    for case in 0..3u64 {
+        let mut c = comm(4);
+        let mut solo = Vec::new();
+        let mut specs = Vec::new();
+        for _ in 0..3 {
+            let kind = KINDS[rng.below(3) as usize];
+            let mib = 8u64 + 8 * rng.below(3);
+            solo.push(c.time_collective(kind, mib << 20).unwrap().time());
+            specs.push((kind, mib));
+        }
+        let t0 = c.device().now();
+        // One op per stream — maximal concurrency.
+        for &(kind, mib) in &specs {
+            let s = c.create_stream();
+            c.time_collective_async(kind, mib << 20, s).unwrap();
+        }
+        let makespan = c.synchronize().unwrap().saturating_sub(t0);
+        let additive: SimTime = solo.iter().copied().sum();
+        let slowest = solo.iter().copied().max().unwrap();
+        assert!(
+            makespan <= additive,
+            "case {case}: concurrent {} slower than sequential {}",
+            makespan,
+            additive
+        );
+        assert!(
+            makespan.as_nanos() + 1_000 >= slowest.as_nanos(),
+            "case {case}: makespan {} under the slowest solo op {}",
+            makespan,
+            slowest
+        );
+    }
+}
+
+/// (b') Resource-disjoint streams overlap fully: a compute chain prices
+/// in parallel with a comm chain, makespan = max of the two.
+#[test]
+fn disjoint_compute_and_comm_streams_fully_overlap() {
+    let mut c = comm(2);
+    let msg = 8u64 << 20;
+    let comm_solo = c.time_collective(CollectiveKind::AllReduce, msg).unwrap().time();
+    let chunk = SimTime::from_secs_f64(comm_solo.as_secs_f64() * 0.8);
+    let ks = c.create_stream();
+    let cs = c.create_stream();
+    let t0 = c.device().now();
+    // 3 compute chunks FIFO on one stream, 2 ARs FIFO on the other.
+    for _ in 0..3 {
+        c.compute_async(chunk, ks).unwrap();
+    }
+    for _ in 0..2 {
+        c.time_collective_async(CollectiveKind::AllReduce, msg, cs).unwrap();
+    }
+    let makespan = c.synchronize().unwrap().saturating_sub(t0);
+    let compute_total = SimTime::from_nanos(chunk.as_nanos() * 3);
+    let comm_total = SimTime::from_nanos(comm_solo.as_nanos() * 2);
+    let expect = compute_total.max(comm_total);
+    // ≤1µs f64 event-interleaving noise on the comm side.
+    assert!(
+        makespan.as_nanos().abs_diff(expect.as_nanos()) <= 1_000,
+        "disjoint streams did not overlap fully: {} vs {}",
+        makespan,
+        expect
+    );
+}
+
+/// (c) Random event edges across two streams are always respected.
+#[test]
+fn event_wait_edges_hold_under_random_schedules() {
+    let mut rng = Rng::seed_from_u64(0xE4E4);
+    for case in 0..4u64 {
+        let mut c = comm(2);
+        c.time_collective(CollectiveKind::AllGather, 4 << 20).unwrap();
+        let s1 = c.create_stream();
+        let s2 = c.create_stream();
+        let mut h1 = Vec::new();
+        let mut h2 = Vec::new();
+        let mut edges: Vec<(usize, usize)> = Vec::new(); // (s1 op idx, s2 op idx)
+        let n1 = 2 + (case as usize % 2);
+        for i in 0..n1 {
+            h1.push(
+                c.time_collective_async(CollectiveKind::AllGather, 4 << 20, s1)
+                    .unwrap(),
+            );
+            if rng.below(2) == 0 {
+                // Enqueue an s2 op gated on everything s1 has done so
+                // far — the interleaving the edge must survive.
+                let e = c.record_event(s1).unwrap();
+                c.stream_wait_event(s2, e).unwrap();
+                edges.push((i, h2.len()));
+                h2.push(
+                    c.time_collective_async(CollectiveKind::AllGather, 4 << 20, s2)
+                        .unwrap(),
+                );
+            }
+        }
+        c.synchronize().unwrap();
+        let o1: Vec<_> = h1.into_iter().map(|h| c.wait_op(h).unwrap()).collect();
+        let o2: Vec<_> = h2.into_iter().map(|h| c.wait_op(h).unwrap()).collect();
+        for &(src, dst) in &edges {
+            assert!(
+                o2[dst].span.start >= o1[src].finished,
+                "case {case}: event edge s1[{src}] → s2[{dst}] violated"
+            );
+        }
+    }
+}
+
+/// (d) Blocking ≡ enqueue+synchronize, bit for bit — single-node and
+/// hierarchical. Covers DES numbers, per-path times, and balancer-state
+/// evolution (shares after the call).
+#[test]
+fn blocking_wrappers_are_enqueue_plus_synchronize() {
+    // Single node, every lowered kind.
+    for kind in KINDS {
+        let mut blocking = comm(4);
+        let mut streamed = comm(4);
+        let msg = 12u64 << 20;
+        for round in 0..3 {
+            let rb = blocking.time_collective(kind, msg).unwrap();
+            let s = streamed.create_stream();
+            let h = streamed.time_collective_async(kind, msg, s).unwrap();
+            streamed.stream_synchronize(s).unwrap();
+            let rs = streamed.wait(h).unwrap();
+            assert_eq!(
+                rb.sim.outcome.total.as_nanos(),
+                rs.sim.outcome.total.as_nanos(),
+                "{kind} round {round}: totals diverged"
+            );
+            assert_eq!(rb.sim.outcome.events, rs.sim.outcome.events);
+            assert_eq!(rb.sim.outcome.tasks, rs.sim.outcome.tasks);
+            assert_eq!(rb.shares, rs.shares, "{kind} round {round}: shares diverged");
+            assert_eq!(rb.adjusted.is_some(), rs.adjusted.is_some());
+        }
+        assert_eq!(
+            blocking.shares_of_size(kind, msg),
+            streamed.shares_of_size(kind, msg),
+            "{kind}: stage-2 balancer state diverged"
+        );
+    }
+
+    // Hierarchical (2 nodes × 2 GPUs): the cluster lowering rides the
+    // same enqueue+wait path.
+    let mut cfg = CommConfig::cluster(Preset::H800, 2, 2);
+    cfg.tune_msg_bytes = 8 << 20;
+    let mut blocking = Communicator::init(cfg.clone()).unwrap();
+    let mut streamed = Communicator::init(cfg).unwrap();
+    let msg = 8u64 << 20;
+    let rb = blocking.time_collective(CollectiveKind::AllReduce, msg).unwrap();
+    let s = streamed.create_stream();
+    let h = streamed
+        .time_collective_async(CollectiveKind::AllReduce, msg, s)
+        .unwrap();
+    let rs = streamed.wait(h).unwrap();
+    assert_eq!(rb.sim.outcome.total.as_nanos(), rs.sim.outcome.total.as_nanos());
+    assert_eq!(rb.sim.outcome.events, rs.sim.outcome.events);
+    let (tb, ts) = (rb.tiers.unwrap(), rs.tiers.unwrap());
+    assert_eq!(tb.inter_times, ts.inter_times);
+    assert_eq!(tb.intra_phase1, ts.intra_phase1);
+    assert_eq!(tb.inter_phase, ts.inter_phase);
+    assert_eq!(tb.intra_phase3, ts.intra_phase3);
+}
