@@ -15,6 +15,15 @@
 //! multi-node cluster: one instance over the intra-node paths
 //! ([`crate::links::PathId`]) and an independent instance over the
 //! inter-node NIC stripes ([`crate::links::StripeId`]) — see [`tier`].
+//!
+//! The balancer's observables are *algorithm-conditioned*: a size
+//! bucket's lowering algorithm ([`crate::collectives::algo::AlgoTable`])
+//! is fixed once at stage-1 time, so every per-path completion the
+//! Evaluator windows afterwards was produced under the same algorithm —
+//! stage 2 never mixes ring and tree timings in one window. Stage-1
+//! share tuning itself runs under the ring incumbent (the calibration's
+//! reference schedule); the algorithm is selected after, under the tuned
+//! shares.
 
 pub mod evaluator;
 pub mod initial;

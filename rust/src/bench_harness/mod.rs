@@ -6,6 +6,7 @@
 //! in EXPERIMENTS.md.
 
 use crate::balancer::{initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares};
+use crate::collectives::algo::{Algo, AlgoSpec, AlgoTable};
 use crate::collectives::hierarchical::{flat_ring_allreduce, ClusterCollective};
 use crate::collectives::multipath::MultipathCollective;
 use crate::collectives::CollectiveKind;
@@ -772,6 +773,150 @@ pub fn render_concurrent_sweep(rows: &[ConcurrentRow]) -> String {
     t.render()
 }
 
+/// One `repro ablation` row: fixed-algorithm latencies plus the
+/// auto-tuner's pick at this size.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub op: CollectiveKind,
+    pub n_gpus: usize,
+    pub kib: u64,
+    pub ring_ms: f64,
+    pub tree_ms: f64,
+    pub hd_ms: f64,
+    pub auto_ms: f64,
+    /// What the [`AlgoTable`] tuner chose for this size bucket.
+    pub auto_algo: Algo,
+    /// Fastest fixed algorithm at this size.
+    pub winner: Algo,
+}
+
+impl AblationRow {
+    fn best_fixed_ms(&self) -> f64 {
+        self.ring_ms.min(self.tree_ms).min(self.hd_ms)
+    }
+}
+
+/// The ring / tree / halving-doubling crossover sweep (§5.3's latency
+/// amplification, §6's tree remedy): fixed-algorithm latencies per
+/// message size, NVLink-only (one path isolates the algorithm dimension
+/// from the share dimension), plus the auto tuner's selection — `repro
+/// ablation`. Sizes are KiB and should be powers of two so each lands in
+/// its own tuner bucket.
+pub fn ablation_sweep(
+    preset: Preset,
+    op: CollectiveKind,
+    gpus: usize,
+    sizes_kib: &[u64],
+) -> Result<Vec<AblationRow>> {
+    let topo = Topology::build(&preset.spec());
+    let shares = Shares::nvlink_only();
+    let mut table = AlgoTable::new(AlgoSpec::Auto);
+    let mut rows = Vec::with_capacity(sizes_kib.len());
+    for &kib in sizes_kib {
+        let msg = kib << 10;
+        let mc = MultipathCollective::new(&topo, Calibration::h800(), op, gpus);
+        let ms = |algo: Algo| -> Result<f64> {
+            Ok(mc.run_algo(msg, &shares, algo)?.total().as_secs_f64() * 1e3)
+        };
+        let ring_ms = ms(Algo::Ring)?;
+        // Unregistered (op, algo) pairs resolve to ring — the column then
+        // just repeats the ring number, keeping the table rectangular.
+        let tree_ms = ms(Algo::Tree)?;
+        let hd_ms = ms(Algo::HalvingDoubling)?;
+        let (auto_algo, _probe) = table.select(&mc, msg, &shares)?;
+        // The DES is deterministic, so auto's latency is the already
+        // measured column of whichever algorithm it picked.
+        let auto_ms = match crate::collectives::algo::resolve(op, auto_algo, gpus) {
+            Algo::Ring => ring_ms,
+            Algo::Tree => tree_ms,
+            Algo::HalvingDoubling => hd_ms,
+        };
+        let mut winner = Algo::Ring;
+        let mut best = ring_ms;
+        for (a, t) in [(Algo::Tree, tree_ms), (Algo::HalvingDoubling, hd_ms)] {
+            if t < best {
+                winner = a;
+                best = t;
+            }
+        }
+        rows.push(AblationRow {
+            op,
+            n_gpus: gpus,
+            kib,
+            ring_ms,
+            tree_ms,
+            hd_ms,
+            auto_ms,
+            auto_algo,
+            winner,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_ablation(rows: &[AblationRow]) -> String {
+    let mut out = String::new();
+    if rows.is_empty() {
+        return out;
+    }
+    let fmt_size = |kib: u64| {
+        if kib >= 1024 {
+            format!("{} MiB", kib >> 10)
+        } else {
+            format!("{kib} KiB")
+        }
+    };
+    let mut t = Table::new(
+        &format!(
+            "Algorithm crossover: {} x{} (NVLink-only)",
+            rows[0].op, rows[0].n_gpus
+        ),
+        &["Size", "Ring ms", "Tree ms", "HD ms", "Auto ms", "Auto pick", "Winner"],
+    );
+    for r in rows {
+        t.row(vec![
+            fmt_size(r.kib),
+            format!("{:.4}", r.ring_ms),
+            format!("{:.4}", r.tree_ms),
+            format!("{:.4}", r.hd_ms),
+            format!("{:.4}", r.auto_ms),
+            r.auto_algo.to_string(),
+            r.winner.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    // Crossover summary: the boundary past which ring stays ahead of
+    // tree (scanned from the large end, so a non-monotone middle cannot
+    // produce a self-contradictory line).
+    let ring_tail = rows
+        .iter()
+        .rev()
+        .take_while(|r| r.ring_ms <= r.tree_ms)
+        .count();
+    if ring_tail == 0 {
+        out.push_str("crossover: tree beats ring at every swept size\n");
+    } else if ring_tail == rows.len() {
+        out.push_str("crossover: ring wins at every swept size\n");
+    } else {
+        let last_tree = &rows[rows.len() - ring_tail - 1];
+        let first_ring = &rows[rows.len() - ring_tail];
+        out.push_str(&format!(
+            "crossover: tree beats ring up to {}; ring wins from {}\n",
+            fmt_size(last_tree.kib),
+            fmt_size(first_ring.kib)
+        ));
+    }
+    let tracked = rows
+        .iter()
+        .filter(|r| r.auto_ms <= r.best_fixed_ms() * 1.01)
+        .count();
+    out.push_str(&format!(
+        "auto tracked the fastest fixed algorithm at {tracked}/{} sizes\n",
+        rows.len()
+    ));
+    out
+}
+
 /// §5.4 overhead report for a live communicator.
 #[derive(Debug, Clone)]
 pub struct OverheadReport {
@@ -780,6 +925,9 @@ pub struct OverheadReport {
     pub host_copies: u64,
     pub host_bytes_copied: u64,
     pub profiling_time_s: f64,
+    /// Simulated time the algorithm tuner spent on DES probes (kept
+    /// beside the Algorithm-1 share-profiling time).
+    pub algo_probe_time_s: f64,
 }
 
 pub fn overhead(comm: &crate::comm::Communicator) -> OverheadReport {
@@ -790,6 +938,7 @@ pub fn overhead(comm: &crate::comm::Communicator) -> OverheadReport {
         host_copies: l.host_copies(),
         host_bytes_copied: l.host_bytes_copied(),
         profiling_time_s: comm.profiling_time.as_secs_f64(),
+        algo_probe_time_s: comm.algo_probe_time.as_secs_f64(),
     }
 }
 
@@ -977,6 +1126,43 @@ mod tests {
         assert!(r.makespan_ms >= r.solo_ar_ms.max(r.solo_ag_ms) * 0.999);
         let rendered = render_concurrent_sweep(&rows);
         assert!(rendered.contains("makespan"));
+    }
+
+    /// The ISSUE's acceptance shape: tree AllReduce beats ring below
+    /// some message size at n=8, ring wins at ≥64 MiB, and auto tracks
+    /// the winner on both sides.
+    #[test]
+    fn ablation_sweep_shows_crossover_and_auto_tracks() {
+        let rows =
+            ablation_sweep(Preset::H800, CollectiveKind::AllReduce, 8, &[256, 65536]).unwrap();
+        let small = &rows[0];
+        let big = &rows[1];
+        assert!(
+            small.tree_ms < small.ring_ms,
+            "tree {:.4}ms should beat ring {:.4}ms at 256KiB",
+            small.tree_ms,
+            small.ring_ms
+        );
+        assert!(
+            big.ring_ms < big.tree_ms,
+            "ring {:.4}ms should beat tree {:.4}ms at 64MiB",
+            big.ring_ms,
+            big.tree_ms
+        );
+        assert_eq!(big.auto_algo, Algo::Ring, "auto must ring the bandwidth regime");
+        assert_ne!(small.auto_algo, Algo::Ring, "auto must leave ring when latency-bound");
+        for r in &rows {
+            assert!(
+                r.auto_ms <= r.best_fixed_ms() * 1.01,
+                "{} KiB: auto {:.4}ms off the winner {:.4}ms",
+                r.kib,
+                r.auto_ms,
+                r.best_fixed_ms()
+            );
+        }
+        let rendered = render_ablation(&rows);
+        assert!(rendered.contains("crossover"));
+        assert!(rendered.contains("auto tracked"));
     }
 
     #[test]

@@ -1,0 +1,759 @@
+//! Pluggable lowering algorithms with size-adaptive auto-selection.
+//!
+//! The paper's §5.3 blames ring latency amplification ("2(N−1) sequential
+//! steps") for the small-message regime, and §6 names tree-based
+//! algorithms as the fix. This module makes the *algorithm* a first-class
+//! tuned dimension, orthogonal to the path-share dimension the balancer
+//! owns:
+//!
+//! * [`Algo`] — the lowering algorithms: the canonical NCCL [`Algo::Ring`],
+//!   the binomial [`Algo::Tree`] (AllReduce, Broadcast), and
+//!   [`Algo::HalvingDoubling`] (recursive-halving ReduceScatter,
+//!   recursive-doubling AllGather, and their AllReduce composition).
+//! * [`lower`] — the lowering registry: the ONE dispatch point every
+//!   consumer (flat sim, exec timing face, stream scheduler's fused
+//!   launches, hierarchical `compile_onto`) flows through.
+//!   Non-power-of-two rank counts fall back to ring here, once
+//!   ([`resolve`]), so the per-algorithm builders can assume pow2.
+//! * [`predict`] / [`select_analytic`] — an analytic α–β cost model per
+//!   (kind, algo, n), seeded from the calibrated [`PathModel`] (the same
+//!   α/B_eff/ρ constants the DES charges), for cheap candidate ordering.
+//! * [`AlgoTable`] — the tuner: `algo = "auto"` consults the analytic
+//!   model and, whenever it predicts a switch away from ring, refines the
+//!   shortlist with DES-backed probes; the winner is cached per
+//!   (operator, message-size-bucket) — the crossover table NCCL's tuner
+//!   keeps, discovered instead of shipped.
+//!
+//! Fixed overrides come via the `algo` TOML key / `--algo` CLI flag
+//! ([`AlgoSpec`]). `algo = "ring"` reproduces the pre-algorithm schedules
+//! bit-identically (the registry then calls exactly the old builders).
+
+use super::schedule::GraphBuilder;
+use super::CollectiveKind;
+use crate::balancer::shares::Shares;
+use crate::collectives::multipath::MultipathCollective;
+use crate::links::{PathId, PathModel};
+use crate::sim::{SimTime, TaskId};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+
+/// Streaming efficiency of the halving-doubling lowerings relative to the
+/// path's calibrated single-stream rate. Ring keeps every transfer a
+/// contiguous block — that is *why* NCCL rings win the bandwidth-bound
+/// regime — while recursive halving/doubling moves strided half-vector
+/// segments whose scatter/gather addressing costs a slice of the
+/// streaming rate. Charged per-transfer (task-level `rate_cap`) so the
+/// DES and the analytic model agree on the crossover.
+pub const HD_EFF: f64 = 0.85;
+
+/// A collective lowering algorithm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Canonical NCCL ring / chain schedules — bandwidth-optimal,
+    /// 2(N−1) (AllReduce) sequential latency steps.
+    Ring,
+    /// Binomial tree (AllReduce: reduce sweep + broadcast sweep;
+    /// Broadcast: binomial fan-out). log₂N latency steps, but non-leaf
+    /// links carry the whole vector.
+    Tree,
+    /// Recursive halving (ReduceScatter) / doubling (AllGather) and their
+    /// AllReduce composition: ring's wire bytes in log₂N steps, at a
+    /// strided-segment streaming penalty ([`HD_EFF`]).
+    HalvingDoubling,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 3] = [Algo::Ring, Algo::Tree, Algo::HalvingDoubling];
+}
+
+impl fmt::Display for Algo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Algo::Ring => "ring",
+            Algo::Tree => "tree",
+            Algo::HalvingDoubling => "halving_doubling",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl FromStr for Algo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "ring" => Algo::Ring,
+            "tree" => Algo::Tree,
+            "halving_doubling" | "halvingdoubling" | "hd" => Algo::HalvingDoubling,
+            other => anyhow::bail!("unknown algorithm '{other}' (ring|tree|halving_doubling)"),
+        })
+    }
+}
+
+/// Algorithm selection policy: tuned per size bucket, or pinned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AlgoSpec {
+    /// Size-adaptive selection via [`AlgoTable`] (the default).
+    #[default]
+    Auto,
+    /// Fixed override (`algo = "ring"` in TOML, `--algo ring` on the
+    /// CLI). Still [`resolve`]d, so an unsupported (kind, algo) pair
+    /// falls back to ring instead of failing.
+    Fixed(Algo),
+}
+
+impl fmt::Display for AlgoSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AlgoSpec::Auto => write!(f, "auto"),
+            AlgoSpec::Fixed(a) => write!(f, "{a}"),
+        }
+    }
+}
+
+impl FromStr for AlgoSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            Ok(AlgoSpec::Auto)
+        } else {
+            Ok(AlgoSpec::Fixed(s.parse()?))
+        }
+    }
+}
+
+/// The algorithms registered for (kind, n), ring first (ring is the
+/// incumbent and the tie-break winner). Non-power-of-two rank counts
+/// have only ring — the single fallback gate of the registry.
+pub fn candidates(kind: CollectiveKind, n: usize) -> &'static [Algo] {
+    if !n.is_power_of_two() {
+        return &[Algo::Ring];
+    }
+    match kind {
+        CollectiveKind::AllReduce => &[Algo::Ring, Algo::Tree, Algo::HalvingDoubling],
+        CollectiveKind::AllGather | CollectiveKind::ReduceScatter => {
+            &[Algo::Ring, Algo::HalvingDoubling]
+        }
+        CollectiveKind::Broadcast => &[Algo::Ring, Algo::Tree],
+        CollectiveKind::AllToAll => &[Algo::Ring],
+    }
+}
+
+/// Resolve a requested algorithm to a registered lowering: unsupported
+/// (kind, algo) pairs and non-power-of-two rank counts fall back to ring.
+pub fn resolve(kind: CollectiveKind, algo: Algo, n: usize) -> Algo {
+    if candidates(kind, n).contains(&algo) {
+        algo
+    } else {
+        Algo::Ring
+    }
+}
+
+/// log2 bucket of a message size — the granularity at which both the
+/// share tuner and the algorithm tuner cache their decisions (§3.2.2:
+/// the optimum "can vary with data size").
+pub fn size_class(msg_bytes: u64) -> u32 {
+    msg_bytes.max(1).next_power_of_two().trailing_zeros()
+}
+
+// ---------------------------------------------------------------------
+// Analytic α–β cost model.
+// ---------------------------------------------------------------------
+
+/// Analytic completion estimate for one (kind, algo) lowering of `msg`
+/// bytes over `n` ranks on a path with the given calibrated model. Seeded
+/// entirely from the calibration (α = `step_latency`, ρ =
+/// `reduce_step_latency`, B = `rate_cap`, plus the staged consumer
+/// combine on PCIe) so ordering tracks the DES; [`AlgoTable`] refines
+/// close calls with real DES probes.
+pub fn predict(
+    kind: CollectiveKind,
+    algo: Algo,
+    n: usize,
+    model: &PathModel,
+    msg: u64,
+    reduce_bps: f64,
+    path: PathId,
+) -> SimTime {
+    let algo = resolve(kind, algo, n);
+    let b = model.rate_cap;
+    let alpha = model.step_latency.as_secs_f64();
+    let rho = model.reduce_step_latency.as_secs_f64();
+    let l = n.max(2).trailing_zeros() as f64;
+    let nf = n as f64;
+    let s = msg as f64;
+    // Staged-path consumer combine (send_block charges it on PCIe only).
+    let combine = |bytes: f64| {
+        if path == PathId::Pcie {
+            bytes / reduce_bps
+        } else {
+            0.0
+        }
+    };
+    use Algo::*;
+    use CollectiveKind::*;
+    let secs = match (kind, algo) {
+        (AllReduce, Ring) => {
+            (nf - 1.0) * (alpha + rho)
+                + (nf - 1.0) * alpha
+                + 2.0 * (nf - 1.0) / nf * s / b
+                + combine((nf - 1.0) / nf * s)
+        }
+        // Root carries log₂N full vectors in AND out (chunk-pipelined
+        // sweeps overlap, so the root's lane is the bottleneck).
+        (AllReduce, Tree) => l * (alpha + rho) + l * alpha + l * s / b + combine(l * s),
+        (AllReduce, HalvingDoubling) => {
+            l * (alpha + rho)
+                + l * alpha
+                + 2.0 * (nf - 1.0) / nf * s / (HD_EFF * b)
+                + combine((nf - 1.0) / nf * s)
+        }
+        (AllGather, Ring) => (nf - 1.0) * alpha + (nf - 1.0) * s / b,
+        (AllGather, HalvingDoubling) => l * alpha + (nf - 1.0) * s / (HD_EFF * b),
+        (ReduceScatter, Ring) => {
+            (nf - 1.0) * (alpha + rho)
+                + (nf - 1.0) / nf * s / b
+                + combine((nf - 1.0) / nf * s)
+        }
+        (ReduceScatter, HalvingDoubling) => {
+            l * (alpha + rho)
+                + (nf - 1.0) / nf * s / (HD_EFF * b)
+                + combine((nf - 1.0) / nf * s)
+        }
+        // Pipelined chain streams the vector once past every hop.
+        (Broadcast, Ring) => (nf - 1.0) * alpha + s / b,
+        // Binomial root sends log₂N full copies down its one lane.
+        (Broadcast, Tree) => l * alpha + l * s / b,
+        (AllToAll, Ring) => (nf - 1.0) * alpha + (nf - 1.0) / nf * s / b,
+        _ => unreachable!("resolve() yields only registered (kind, algo) pairs"),
+    };
+    SimTime::from_secs_f64(secs)
+}
+
+/// Analytic argmin over the registered candidates (ring-first tie-break).
+/// The hierarchical compiler uses this per intra-node phase, at the
+/// phase's own message size (a DES probe there would recurse).
+pub fn select_analytic(
+    kind: CollectiveKind,
+    n: usize,
+    model: &PathModel,
+    msg: u64,
+    reduce_bps: f64,
+    path: PathId,
+) -> Algo {
+    let mut best = Algo::Ring;
+    let mut best_t = SimTime::from_nanos(u64::MAX);
+    for &a in candidates(kind, n) {
+        let t = predict(kind, a, n, model, msg, reduce_bps, path);
+        if t < best_t {
+            best = a;
+            best_t = t;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// The AlgoTable tuner.
+// ---------------------------------------------------------------------
+
+/// One tuned bucket: the chosen algorithm plus the evidence behind it.
+#[derive(Debug, Clone)]
+pub struct AlgoEntry {
+    pub algo: Algo,
+    /// Analytic estimates per candidate (always populated under auto).
+    pub analytic: Vec<(Algo, SimTime)>,
+    /// DES probe results; empty when the analytic model already picked
+    /// ring (the incumbent needs no confirmation) or the choice is fixed.
+    pub probes: Vec<(Algo, SimTime)>,
+}
+
+/// Per-(operator, size-bucket) algorithm selection cache — the NCCL-tuner
+/// analogue. Under [`AlgoSpec::Auto`] a bucket's first call seeds the
+/// analytic estimates; if they predict a switch away from ring, the
+/// shortlist (candidates within 2× of the analytic best) is probed on the
+/// real DES and the measured winner is cached. Probe time is returned so
+/// the communicator can account it (beside, not inside, the Algorithm-1
+/// profiling time).
+#[derive(Debug, Default)]
+pub struct AlgoTable {
+    spec: AlgoSpec,
+    entries: HashMap<(CollectiveKind, u32), AlgoEntry>,
+}
+
+impl AlgoTable {
+    pub fn new(spec: AlgoSpec) -> Self {
+        AlgoTable {
+            spec,
+            entries: HashMap::new(),
+        }
+    }
+
+    /// The policy this table runs.
+    pub fn spec(&self) -> AlgoSpec {
+        self.spec
+    }
+
+    /// The cached decision for (kind, size bucket), if already tuned.
+    pub fn chosen(&self, kind: CollectiveKind, msg_bytes: u64) -> Option<Algo> {
+        self.entries
+            .get(&(kind, size_class(msg_bytes)))
+            .map(|e| e.algo)
+    }
+
+    /// Full evidence for (kind, size bucket), if already tuned.
+    pub fn entry(&self, kind: CollectiveKind, msg_bytes: u64) -> Option<&AlgoEntry> {
+        self.entries.get(&(kind, size_class(msg_bytes)))
+    }
+
+    /// Select (and cache) the algorithm for one (operator, size-bucket)
+    /// under the given share distribution. Returns the choice plus the
+    /// simulated time spent on DES probes (ZERO on cache hits, fixed
+    /// specs, and analytic-ring conclusions).
+    pub fn select(
+        &mut self,
+        mc: &MultipathCollective<'_>,
+        msg_bytes: u64,
+        shares: &Shares,
+    ) -> Result<(Algo, SimTime)> {
+        let key = (mc.kind, size_class(msg_bytes));
+        if let Some(e) = self.entries.get(&key) {
+            return Ok((e.algo, SimTime::ZERO));
+        }
+        let entry;
+        let mut probe_time = SimTime::ZERO;
+        match self.spec {
+            AlgoSpec::Fixed(a) => {
+                entry = AlgoEntry {
+                    algo: resolve(mc.kind, a, mc.n),
+                    analytic: Vec::new(),
+                    probes: Vec::new(),
+                };
+            }
+            AlgoSpec::Auto => {
+                // Analytic seed: per candidate, the slowest active path
+                // bounds the collective (paths run concurrently).
+                let extents = shares.to_extents(msg_bytes, crate::dtype::natural_align(msg_bytes));
+                let analytic: Vec<(Algo, SimTime)> = candidates(mc.kind, mc.n)
+                    .iter()
+                    .map(|&a| {
+                        let t = extents
+                            .iter()
+                            .filter(|(_, _, len)| *len > 0)
+                            .map(|(p, _, len)| {
+                                predict(
+                                    mc.kind,
+                                    a,
+                                    mc.n,
+                                    &mc.model(*p),
+                                    *len,
+                                    mc.calib.reduce_bps,
+                                    *p,
+                                )
+                            })
+                            .max()
+                            .unwrap_or(SimTime::ZERO);
+                        (a, t)
+                    })
+                    .collect();
+                let (mut best, mut best_t) = analytic[0];
+                for &(a, t) in &analytic[1..] {
+                    if t < best_t {
+                        best = a;
+                        best_t = t;
+                    }
+                }
+                if best == Algo::Ring {
+                    // The incumbent won on the model it was calibrated
+                    // against — no probe needed (this also keeps the
+                    // bandwidth-bound buckets probe-free).
+                    entry = AlgoEntry {
+                        algo: Algo::Ring,
+                        analytic,
+                        probes: Vec::new(),
+                    };
+                } else {
+                    // A switch is predicted: confirm on the DES over the
+                    // shortlist of plausible candidates.
+                    let cutoff = SimTime::from_nanos(best_t.as_nanos().saturating_mul(2));
+                    let mut probes = Vec::new();
+                    for &(a, t) in &analytic {
+                        if t <= cutoff {
+                            let measured = mc.run_algo(msg_bytes, shares, a)?.total();
+                            probe_time += measured;
+                            probes.push((a, measured));
+                        }
+                    }
+                    let (mut algo, mut algo_t) = probes[0];
+                    for &(a, t) in &probes[1..] {
+                        if t < algo_t {
+                            algo = a;
+                            algo_t = t;
+                        }
+                    }
+                    entry = AlgoEntry {
+                        algo,
+                        analytic,
+                        probes,
+                    };
+                }
+            }
+        }
+        let algo = entry.algo;
+        self.entries.insert(key, entry);
+        Ok((algo, probe_time))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lowering registry.
+// ---------------------------------------------------------------------
+
+/// Emit one collective's tasks for `bytes` on `path` under `algo` — the
+/// single dispatch point that replaced the hardcoded per-kind ring match
+/// in `schedule::append_call`. Unsupported combinations and
+/// non-power-of-two rank counts resolve to ring here.
+pub fn lower(
+    b: &mut GraphBuilder<'_>,
+    kind: CollectiveKind,
+    algo: Algo,
+    path: PathId,
+    bytes: u64,
+    tag: u32,
+) {
+    use Algo::*;
+    use CollectiveKind::*;
+    match (kind, resolve(kind, algo, b.n)) {
+        (AllReduce, Ring) => super::allreduce::build_tasks(b, path, bytes, tag),
+        (AllReduce, Tree) => super::tree::build_allreduce(b, path, bytes, tag),
+        (AllReduce, HalvingDoubling) => halving_doubling_allreduce(b, path, bytes, tag),
+        (AllGather, Ring) => super::allgather::build_tasks(b, path, bytes, tag),
+        (AllGather, HalvingDoubling) => {
+            doubling_allgather(b, path, bytes, &[], tag);
+        }
+        (ReduceScatter, Ring) => super::reduce_scatter::build_tasks(b, path, bytes, tag),
+        (ReduceScatter, HalvingDoubling) => {
+            halving_reduce_scatter(b, path, bytes, &[], tag);
+        }
+        (Broadcast, Ring) => super::broadcast::build_tasks(b, path, bytes, tag),
+        (Broadcast, Tree) => {
+            super::tree::build_broadcast(b, path, bytes, &[], tag);
+        }
+        (AllToAll, Ring) => super::alltoall::build_tasks(b, path, bytes, tag),
+        (kind, algo) => unreachable!("resolve() returned unregistered ({kind}, {algo})"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Halving-doubling lowerings.
+// ---------------------------------------------------------------------
+
+/// Recursive-halving ReduceScatter of a `msg`-byte vector: log₂N pairwise
+/// exchange stages at rank distance N/2, N/4, …, 1; each stage sends the
+/// half of the current working range the rank gives up (N/2^(k+1) blocks)
+/// and reduces the arriving half. Stages join at per-rank reduction
+/// barriers (the halving boundary *is* a reduce), matching the analytic
+/// model's serialized-stage cost. Every send is capped at [`HD_EFF`] of
+/// the path's streaming rate (strided segments).
+///
+/// `entry` gates every rank's first send (hierarchical phases pass the
+/// previous phase's barrier; flat callers pass `&[]` for locally resident
+/// data). Returns per-rank final arrival chunks — under the canonical
+/// keep-the-half-containing-your-own-index scheme, rank `r` ends owning
+/// block `r` (grid: `chunks_for(path, ceil(msg/n))`).
+pub fn halving_reduce_scatter(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    msg: u64,
+    entry: &[TaskId],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    assert!(n.is_power_of_two(), "halving-doubling needs power-of-two ranks");
+    let block = msg.div_ceil(n as u64);
+    let stages = n.trailing_zeros() as usize;
+    let cap = HD_EFF * b.model(path).rate_cap;
+    // watermark[r]: "r has reduced everything received so far".
+    let mut watermark: Vec<Vec<TaskId>> = vec![entry.to_vec(); n];
+    let mut finals: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for k in 0..stages {
+        let d = n >> (k + 1);
+        let bytes = d as u64 * block;
+        let n_chunks = b.chunks_for(path, bytes).len();
+        let mut arr: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let deps: Vec<Vec<TaskId>> = vec![watermark[r].clone(); n_chunks];
+            arr.push(b.send_block_capped(path, r, r ^ d, bytes, &deps, true, true, tag, cap));
+        }
+        let last = k == stages - 1;
+        for r in 0..n {
+            let arrived = arr[r ^ d].clone(); // arrival AT r is from its partner
+            if last {
+                // Final block: the last arrival joined with r's own
+                // reduce watermark (earlier stages also contributed to
+                // this block, and those combines live at r, not at the
+                // sender — without the join the block could look final
+                // before r reduced them in).
+                finals[r] = arrived
+                    .iter()
+                    .map(|a| {
+                        if watermark[r].is_empty() {
+                            *a
+                        } else {
+                            let mut dd = vec![*a];
+                            dd.extend(watermark[r].iter().copied());
+                            b.graph.barrier(dd)
+                        }
+                    })
+                    .collect();
+            } else {
+                let mut dd = watermark[r].clone();
+                dd.extend(arrived.iter().copied());
+                watermark[r] = vec![b.graph.barrier(dd)];
+            }
+        }
+    }
+    finals
+}
+
+/// Recursive-doubling AllGather of per-rank `block`-byte contributions:
+/// log₂N pairwise exchange stages at distance 1, 2, …, N/2, each sending
+/// the rank's whole current range (2^k blocks). `entry[r]` gates rank
+/// r's stage-0 send per chunk of its own block (the shape hierarchical
+/// phase-3 callers thread from their availability maps; `&[]` = locally
+/// resident). Later stages join at per-rank barriers. Returns every
+/// arrival at each rank.
+pub fn doubling_allgather(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    block: u64,
+    entry: &[Vec<Vec<TaskId>>],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    assert!(n.is_power_of_two(), "halving-doubling needs power-of-two ranks");
+    let stages = n.trailing_zeros() as usize;
+    let cap = HD_EFF * b.model(path).rate_cap;
+    let n0 = b.chunks_for(path, block).len();
+    debug_assert!(entry.is_empty() || entry.len() == n);
+    let mut watermark: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    let mut done: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for k in 0..stages {
+        let d = 1usize << k;
+        let bytes = d as u64 * block;
+        let n_chunks = b.chunks_for(path, bytes).len();
+        let mut arr: Vec<Vec<TaskId>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let deps: Vec<Vec<TaskId>> = if k == 0 {
+                match entry.get(r) {
+                    Some(e) if !e.is_empty() => {
+                        debug_assert_eq!(e.len(), n0, "entry grid must match the block grid");
+                        e.clone()
+                    }
+                    _ => Vec::new(),
+                }
+            } else {
+                vec![watermark[r].clone(); n_chunks]
+            };
+            arr.push(b.send_block_capped(path, r, r ^ d, bytes, &deps, true, false, tag, cap));
+        }
+        for r in 0..n {
+            let arrived = arr[r ^ d].clone();
+            done[r].extend(arrived.iter().copied());
+            let mut dd = watermark[r].clone();
+            if k == 0 {
+                if let Some(e) = entry.get(r) {
+                    for c in e {
+                        dd.extend(c.iter().copied());
+                    }
+                }
+            }
+            dd.extend(arrived.iter().copied());
+            watermark[r] = vec![b.graph.barrier(dd)];
+        }
+    }
+    done
+}
+
+/// Halving-doubling AllReduce: recursive-halving ReduceScatter feeding a
+/// recursive-doubling AllGather of the reduced blocks.
+pub fn halving_doubling_allreduce(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
+    let n = b.n as u64;
+    let finals = halving_reduce_scatter(b, path, msg, &[], tag);
+    let entry: Vec<Vec<Vec<TaskId>>> = finals
+        .iter()
+        .map(|f| f.iter().map(|t| vec![*t]).collect())
+        .collect();
+    doubling_allgather(b, path, msg.div_ceil(n), &entry, tag);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::schedule::{simulate, MultipathSpec, PathAssignment};
+    use crate::config::presets::Preset;
+    use crate::links::calib::Calibration;
+    use crate::topology::Topology;
+
+    fn nv_model(kind: CollectiveKind, n: usize) -> PathModel {
+        let topo = Topology::build(&Preset::H800.spec());
+        Calibration::h800().nvlink_model(kind, n, topo.spec.nvlink_unidir_bps())
+    }
+
+    fn run_fixed(kind: CollectiveKind, n: usize, msg: u64, algo: Algo) -> f64 {
+        let topo = Topology::build(&Preset::H800.spec());
+        let spec = MultipathSpec {
+            kind,
+            n,
+            msg_bytes: msg,
+            algo,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: msg,
+                model: nv_model(kind, n),
+            }],
+        };
+        simulate(&topo, &spec, 500e9).unwrap().total.as_secs_f64()
+    }
+
+    #[test]
+    fn registry_and_fallback_table() {
+        use CollectiveKind::*;
+        // Tree registered only where a tree lowering exists.
+        assert_eq!(resolve(AllReduce, Algo::Tree, 8), Algo::Tree);
+        assert_eq!(resolve(Broadcast, Algo::Tree, 8), Algo::Tree);
+        assert_eq!(resolve(AllGather, Algo::Tree, 8), Algo::Ring);
+        assert_eq!(resolve(ReduceScatter, Algo::Tree, 8), Algo::Ring);
+        // Halving-doubling for the partitionable operators.
+        for k in [AllReduce, AllGather, ReduceScatter] {
+            assert_eq!(resolve(k, Algo::HalvingDoubling, 8), Algo::HalvingDoubling);
+        }
+        assert_eq!(resolve(Broadcast, Algo::HalvingDoubling, 8), Algo::Ring);
+        assert_eq!(resolve(AllToAll, Algo::Tree, 8), Algo::Ring);
+        // Non-power-of-two ranks: everything rings (the single gate).
+        for k in [AllReduce, AllGather, ReduceScatter, Broadcast] {
+            for a in Algo::ALL {
+                assert_eq!(resolve(k, a, 6), Algo::Ring, "{k}/{a} at n=6");
+            }
+        }
+        // Ring always leads the candidate order (tie-break winner).
+        for k in [AllReduce, AllGather, ReduceScatter, Broadcast, AllToAll] {
+            assert_eq!(candidates(k, 8)[0], Algo::Ring);
+        }
+    }
+
+    #[test]
+    fn analytic_model_orders_the_regimes() {
+        let kind = CollectiveKind::AllReduce;
+        let m = nv_model(kind, 8);
+        let t = |algo, msg| predict(kind, algo, 8, &m, msg, 500e9, PathId::Nvlink);
+        // Latency-bound: both alternatives beat ring's 14 steps.
+        let small = 256u64 << 10;
+        assert!(t(Algo::Tree, small) < t(Algo::Ring, small));
+        assert!(t(Algo::HalvingDoubling, small) < t(Algo::Ring, small));
+        // Bandwidth-bound: ring's contiguous blocks win.
+        let big = 256u64 << 20;
+        assert!(t(Algo::Ring, big) < t(Algo::Tree, big));
+        assert!(t(Algo::Ring, big) < t(Algo::HalvingDoubling, big));
+        assert_eq!(select_analytic(kind, 8, &m, big, 500e9, PathId::Nvlink), Algo::Ring);
+        assert_ne!(
+            select_analytic(kind, 8, &m, small, 500e9, PathId::Nvlink),
+            Algo::Ring
+        );
+        // n=2 degenerates: ring is optimal at every size (HD pays the
+        // strided-segment penalty for the same wire bytes).
+        for msg in [small, big] {
+            assert_eq!(
+                select_analytic(kind, 2, &nv_model(kind, 2), msg, 500e9, PathId::Nvlink),
+                Algo::Ring
+            );
+        }
+    }
+
+    #[test]
+    fn hd_allreduce_simulates_and_beats_ring_when_latency_bound() {
+        let kind = CollectiveKind::AllReduce;
+        let small = 256u64 << 10;
+        let ring = run_fixed(kind, 8, small, Algo::Ring);
+        let hd = run_fixed(kind, 8, small, Algo::HalvingDoubling);
+        assert!(hd < ring, "hd {hd:.6}s not under ring {ring:.6}s at 256KiB");
+        // And loses the bandwidth-bound regime to the strided penalty.
+        let big = 256u64 << 20;
+        let ring_b = run_fixed(kind, 8, big, Algo::Ring);
+        let hd_b = run_fixed(kind, 8, big, Algo::HalvingDoubling);
+        assert!(ring_b < hd_b, "ring {ring_b:.6}s not under hd {hd_b:.6}s at 256MiB");
+    }
+
+    #[test]
+    fn hd_component_lowerings_simulate() {
+        for (kind, msg) in [
+            (CollectiveKind::ReduceScatter, 4u64 << 20),
+            (CollectiveKind::AllGather, 1u64 << 20),
+        ] {
+            let ring = run_fixed(kind, 8, msg, Algo::Ring);
+            let hd = run_fixed(kind, 8, msg, Algo::HalvingDoubling);
+            assert!(ring > 0.0 && hd > 0.0);
+            // Latency-bound sizes: fewer stages win despite the penalty.
+            assert!(hd < ring, "{kind}: hd {hd:.6}s not under ring {ring:.6}s");
+        }
+    }
+
+    #[test]
+    fn size_classes_bucket_by_pow2() {
+        assert_eq!(size_class(1), 0);
+        assert_eq!(size_class(256 << 10), size_class(256 << 10));
+        assert_ne!(size_class(256 << 10), size_class(512 << 10));
+        assert_eq!(size_class((256 << 10) - 1), size_class(256 << 10));
+    }
+
+    #[test]
+    fn algo_spec_parses_and_displays() {
+        assert_eq!("auto".parse::<AlgoSpec>().unwrap(), AlgoSpec::Auto);
+        assert_eq!("ring".parse::<AlgoSpec>().unwrap(), AlgoSpec::Fixed(Algo::Ring));
+        assert_eq!(
+            "halving-doubling".parse::<AlgoSpec>().unwrap(),
+            AlgoSpec::Fixed(Algo::HalvingDoubling)
+        );
+        assert_eq!("hd".parse::<Algo>().unwrap(), Algo::HalvingDoubling);
+        assert!("rings".parse::<AlgoSpec>().is_err());
+        assert_eq!(AlgoSpec::Auto.to_string(), "auto");
+        assert_eq!(AlgoSpec::Fixed(Algo::Tree).to_string(), "tree");
+        for a in Algo::ALL {
+            assert_eq!(a.to_string().parse::<Algo>().unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn algo_table_probes_switches_and_trusts_ring() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let mc = MultipathCollective::new(
+            &topo,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            8,
+        );
+        let shares = Shares::nvlink_only();
+        let mut table = AlgoTable::new(AlgoSpec::Auto);
+        // Bandwidth-bound bucket: analytic ring conclusion, no probes.
+        let (big, cost_big) = table.select(&mc, 256 << 20, &shares).unwrap();
+        assert_eq!(big, Algo::Ring);
+        assert_eq!(cost_big, SimTime::ZERO);
+        assert!(table.entry(CollectiveKind::AllReduce, 256 << 20).unwrap().probes.is_empty());
+        // Latency-bound bucket: predicted switch, DES-confirmed.
+        let (small, cost_small) = table.select(&mc, 256 << 10, &shares).unwrap();
+        assert_ne!(small, Algo::Ring);
+        assert!(cost_small > SimTime::ZERO);
+        // Cached afterwards (200 KiB shares the 256 KiB pow2 bucket):
+        // same answer, no new probe time.
+        let (again, cost_again) = table.select(&mc, 200 << 10, &shares).unwrap();
+        assert_eq!(again, small);
+        assert_eq!(cost_again, SimTime::ZERO);
+        assert_eq!(table.chosen(CollectiveKind::AllReduce, 256 << 10), Some(small));
+        // Fixed specs never probe.
+        let mut fixed = AlgoTable::new(AlgoSpec::Fixed(Algo::Tree));
+        let (a, c) = fixed.select(&mc, 256 << 10, &shares).unwrap();
+        assert_eq!(a, Algo::Tree);
+        assert_eq!(c, SimTime::ZERO);
+    }
+}

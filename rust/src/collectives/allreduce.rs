@@ -71,6 +71,7 @@ pub fn build_tasks(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
 
 #[cfg(test)]
 mod tests {
+    use crate::collectives::algo::Algo;
     use crate::collectives::schedule::{simulate, MultipathSpec, PathAssignment};
     use crate::collectives::CollectiveKind;
     use crate::config::presets::Preset;
@@ -88,6 +89,7 @@ mod tests {
             kind,
             n,
             msg_bytes: s,
+            algo: Algo::Ring,
             paths: vec![PathAssignment {
                 path: PathId::Nvlink,
                 bytes: s,

@@ -15,6 +15,13 @@
 //!
 //! [`RedOp::Avg`] follows NCCL: Sum on the wire, a divide-by-ranks
 //! finalizer on the reduced output.
+//!
+//! The lowering-*algorithm* dimension ([`crate::collectives::algo`])
+//! lives entirely on the timing face: collectives are algorithm-agnostic
+//! semantically (any correct schedule produces the same bytes), so the
+//! functional executors always run the ring schedule regardless of which
+//! algorithm the tuner priced the call under — the lossless claim needs
+//! no per-algorithm executor matrix.
 
 use super::ring;
 use crate::dtype::{scale_avg, DataType, DeviceBuffer, RedOp};

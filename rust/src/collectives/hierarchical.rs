@@ -33,6 +33,15 @@
 //! delegates to the flat single-node [`MultipathCollective`], so the
 //! pre-cluster Table 2 numbers reproduce bit-identically.
 //!
+//! Intra-node phases carry a lowering-*algorithm* dimension
+//! ([`ClusterCollective::with_algo`]): under `auto` each phase selects
+//! ring / tree / halving-doubling from its **own** phase message size
+//! (the [`super::algo`] analytic model), so a large collective whose
+//! PCIe extent is small can still tree that extent. The inter-node ring
+//! always stays ring. Non-ring phase-1 lowerings register their final
+//! blocks in the same byte-interval producer maps, so chunk pipelining
+//! into the inter phase survives the algorithm switch.
+//!
 //! Modeling note: when the inter tier's stripe shares deviate from the
 //! even split, the surplus bytes are still charged to the carrier NIC
 //! only — shuffling a shard to a neighbour GPU's NIC rides the NVSwitch
@@ -40,9 +49,11 @@
 //! below NIC-granularity model fidelity even though the NVLink fabric is
 //! no longer idle between phases under the pipelined lowering.
 
+use super::algo::{self, Algo, AlgoSpec};
 use super::multipath::MultipathCollective;
 use super::ring;
 use super::schedule::{phase_span, ChunkMap, GraphBuilder};
+use super::tree;
 use super::CollectiveKind;
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
@@ -77,6 +88,17 @@ pub struct ClusterCollective<'c> {
     /// `--no-pipeline` on the CLI, the overlap-gain column of
     /// `cluster_sweep`).
     pub pipeline: bool,
+    /// Intra-phase lowering-algorithm policy. [`AlgoSpec::Auto`] picks
+    /// per phase from the phase's *own* message size (a 256 MB AllReduce
+    /// still runs small intra phases on its PCIe extent); fixed specs
+    /// resolve per phase kind. The **inter** ring always stays ring —
+    /// the NIC stripes are a bandwidth pipeline, not a latency problem.
+    /// Defaults to ring ([`ClusterCollective::new`]) so direct
+    /// constructions — golden traces, property suites, the paper-table
+    /// benches — keep their pinned schedules; the Communicator wires the
+    /// config's `algo` key (default auto) through
+    /// [`ClusterCollective::with_algo`].
+    pub algo: AlgoSpec,
 }
 
 /// A compiled (not yet executed) hierarchical lowering: the task graph,
@@ -152,6 +174,7 @@ impl<'c> ClusterCollective<'c> {
             kind,
             n_local,
             pipeline: true,
+            algo: AlgoSpec::Fixed(Algo::Ring),
         }
     }
 
@@ -161,6 +184,43 @@ impl<'c> ClusterCollective<'c> {
     pub fn with_pipeline(mut self, pipeline: bool) -> Self {
         self.pipeline = pipeline;
         self
+    }
+
+    /// Select the intra-phase algorithm policy (see the `algo` field).
+    pub fn with_algo(mut self, algo: AlgoSpec) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Algorithm for one intra phase of `phase_kind` moving `msg` bytes
+    /// on `path` — auto mode selects analytically from the phase's own
+    /// message size (DES probes would recurse into the compiler);
+    /// non-power-of-two local rings resolve to ring inside the registry.
+    fn phase_algo(
+        &self,
+        phase_kind: CollectiveKind,
+        path: PathId,
+        msg: u64,
+        models: &[(PathId, PathModel)],
+    ) -> Algo {
+        match self.algo {
+            AlgoSpec::Fixed(a) => algo::resolve(phase_kind, a, self.n_local),
+            AlgoSpec::Auto => {
+                let model = models
+                    .iter()
+                    .find(|(p, _)| *p == path)
+                    .map(|(_, m)| *m)
+                    .expect("model for every active path");
+                algo::select_analytic(
+                    phase_kind,
+                    self.n_local,
+                    &model,
+                    msg,
+                    self.calib.reduce_bps,
+                    path,
+                )
+            }
+        }
     }
 
     /// Total participating ranks across the cluster.
@@ -398,15 +458,19 @@ impl<'c> ClusterCollective<'c> {
     // -----------------------------------------------------------------
 
     /// Phase 1 for the reducing operators: intra reduce-scatter on every
-    /// node. Returns the per-node whole-phase barriers (barriered mode)
-    /// or the per-node byte-interval producer maps over `[0, msg)`
-    /// (pipelined mode; rank r's reduced block lands at offset
-    /// `extent_off + rs_owned_block(r)·block`).
+    /// node, per-path algorithm dispatched through `rs_algos` (parallel
+    /// to `intra_ext`). Returns the per-node whole-phase barriers
+    /// (barriered mode) or the per-node byte-interval producer maps over
+    /// `[0, msg)` (pipelined mode; under ring, rank r's reduced block
+    /// lands at offset `extent_off + rs_owned_block(r)·block`; under
+    /// recursive halving at `extent_off + r·block` — the maps carry
+    /// actual byte offsets, so the inter phase is ownership-agnostic).
     fn phase1_reduce_scatter(
         &self,
         hg: &mut HierGraph<'_>,
         intra_ext: &[(PathId, u64, u64)],
         rs_models: &[(PathId, PathModel)],
+        rs_algos: &[Algo],
         pipeline: bool,
     ) -> (Vec<TaskId>, Vec<ChunkMap>) {
         let nn = self.cluster.n_nodes();
@@ -417,13 +481,23 @@ impl<'c> ClusterCollective<'c> {
             let mut map = ChunkMap::new();
             let mut finals_all: Vec<TaskId> = Vec::new();
             hg.with_node_builder(k, rs_models, |b| {
-                for (p, off, len) in intra_ext {
+                for ((p, off, len), al) in intra_ext.iter().zip(rs_algos) {
                     let block = len.div_ceil(nl);
-                    let finals = intra_ring_reduce_scatter(b, *p, block, &[], p.tag());
+                    let (finals, owned_block): (Vec<Vec<TaskId>>, fn(usize, usize) -> usize) =
+                        match al {
+                            Algo::HalvingDoubling => (
+                                algo::halving_reduce_scatter(b, *p, *len, &[], p.tag()),
+                                |r, _n| r,
+                            ),
+                            _ => (
+                                intra_ring_reduce_scatter(b, *p, block, &[], p.tag()),
+                                ring::rs_owned_block,
+                            ),
+                        };
                     if pipeline {
                         let sizes = b.chunks_for(*p, block);
                         for (r, f) in finals.iter().enumerate() {
-                            let blk = ring::rs_owned_block(r, nl as usize) as u64;
+                            let blk = owned_block(r, nl as usize) as u64;
                             map.insert_chunks(*off + blk * block, &sizes, f);
                         }
                     } else {
@@ -458,6 +532,21 @@ impl<'c> ClusterCollective<'c> {
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        // Per-extent intra algorithms, selected from each phase's own
+        // message size (phase 1 reduce-scatters `len`; phase 3 gathers
+        // per-rank blocks of `len/nl`).
+        let rs_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::ReduceScatter, *p, *len, &rs_models)
+            })
+            .collect();
+        let ag_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::AllGather, *p, len.div_ceil(nl), &ag_models)
+            })
+            .collect();
         // Every PathModel this calibration emits shares `calib.chunk_bytes`
         // (intra paths and the inter NIC stripes alike).
         let chunk = self.calib.chunk_bytes;
@@ -471,7 +560,7 @@ impl<'c> ClusterCollective<'c> {
 
         // Phase 1: intra reduce-scatter on every node.
         let (p1_bars, p1_maps) =
-            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, pipeline);
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline);
         let p1_end = hg.graph.len();
 
         // Phase 2: per-stripe inter-node ring allreduce of the shards.
@@ -523,10 +612,11 @@ impl<'c> ClusterCollective<'c> {
         let p2_end = hg.graph.len();
 
         // Phase 3: intra allgather of the fully reduced blocks; rank r
-        // opens its ring with block r of each extent.
+        // opens with block r of each extent (either algorithm starts
+        // from the rank's own block, so the entry shape is shared).
         for k in 0..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, off, len) in &intra_ext {
+                for ((p, off, len), al) in intra_ext.iter().zip(&ag_algos) {
                     let block = len.div_ceil(nl);
                     let sizes = b.chunks_for(*p, block);
                     let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
@@ -536,7 +626,7 @@ impl<'c> ClusterCollective<'c> {
                     } else {
                         vec![vec![vec![p2_bars[k]]; sizes.len()]; nl as usize]
                     };
-                    intra_ring_allgather(b, *p, block, &entry, p.tag());
+                    intra_allgather_dispatch(b, *al, *p, block, &entry, p.tag());
                 }
             });
         }
@@ -558,6 +648,12 @@ impl<'c> ClusterCollective<'c> {
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
         let inter_ext = tiers.inter.to_extents(msg * nl, elem);
         let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
+        // Phase-3 algorithm per extent, from the per-rank gathered-group
+        // size (each rank contributes `len` bytes to the intra ring).
+        let ag_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| self.phase_algo(CollectiveKind::AllGather, *p, *len, &ag_models))
+            .collect();
         let chunk = self.calib.chunk_bytes;
         let pipeline = self.pipeline
             && !(inter_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
@@ -607,7 +703,7 @@ impl<'c> ClusterCollective<'c> {
         // the path split).
         for k in 0..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, off, len) in &intra_ext {
+                for ((p, off, len), al) in intra_ext.iter().zip(&ag_algos) {
                     let sizes = b.chunks_for(*p, *len);
                     let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
                         (0..self.n_local)
@@ -627,7 +723,7 @@ impl<'c> ClusterCollective<'c> {
                     } else {
                         vec![vec![vec![p2_bars[k]]; sizes.len()]; self.n_local]
                     };
-                    intra_ring_allgather(b, *p, *len, &entry, p.tag());
+                    intra_allgather_dispatch(b, *al, *p, *len, &entry, p.tag());
                 }
             });
         }
@@ -649,6 +745,12 @@ impl<'c> ClusterCollective<'c> {
         let intra_ext = tiers.intra.to_extents(msg, elem);
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+        let rs_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::ReduceScatter, *p, *len, &rs_models)
+            })
+            .collect();
         let chunk = self.calib.chunk_bytes;
         let pipeline = self.pipeline
             && !(intra_ext
@@ -659,7 +761,7 @@ impl<'c> ClusterCollective<'c> {
                     .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
 
         let (p1_bars, p1_maps) =
-            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, pipeline);
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline);
         let p1_end = hg.graph.len();
 
         for (sid, s_off, len) in &inter_ext {
@@ -692,6 +794,18 @@ impl<'c> ClusterCollective<'c> {
         let inter_ext = tiers.inter.to_extents(msg, elem);
         let bc_models = self.intra_models(CollectiveKind::Broadcast, &tiers.intra);
         let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        // Phase-1 lowering per extent (pipelined chain vs binomial tree)
+        // and phase-3 reassembly algorithm, each from its own phase size.
+        let bc_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| self.phase_algo(CollectiveKind::Broadcast, *p, *len, &bc_models))
+            .collect();
+        let ag_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::AllGather, *p, len.div_ceil(nl), &ag_models)
+            })
+            .collect();
         let chunk = self.calib.chunk_bytes;
         let pipeline = self.pipeline
             && !(intra_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
@@ -704,9 +818,12 @@ impl<'c> ClusterCollective<'c> {
         let mut at_rank: Vec<Vec<TaskId>> = vec![Vec::new(); self.n_local];
         let mut rank_maps: Vec<ChunkMap> = vec![ChunkMap::new(); self.n_local];
         hg.with_node_builder(0, &bc_models, |b| {
-            for (p, off, len) in &intra_ext {
+            for ((p, off, len), al) in intra_ext.iter().zip(&bc_algos) {
                 let sizes = b.chunks_for(*p, *len);
-                let arr = intra_chain_broadcast(b, *p, *len, &[], p.tag());
+                let arr = match al {
+                    Algo::Tree => tree::build_broadcast(b, *p, *len, &[], p.tag()),
+                    _ => intra_chain_broadcast(b, *p, *len, &[], p.tag()),
+                };
                 for (r, a) in arr.into_iter().enumerate() {
                     // Rank 0 is the source: locally resident, no map
                     // entries (its arrival list is empty).
@@ -753,7 +870,7 @@ impl<'c> ClusterCollective<'c> {
         // Phase 3: non-root nodes reassemble the stripes locally.
         for k in 1..nn {
             hg.with_node_builder(k, &ag_models, |b| {
-                for (p, off, len) in &intra_ext {
+                for ((p, off, len), al) in intra_ext.iter().zip(&ag_algos) {
                     let block = len.div_ceil(nl);
                     let sizes = b.chunks_for(*p, block);
                     let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
@@ -763,7 +880,7 @@ impl<'c> ClusterCollective<'c> {
                     } else {
                         vec![vec![vec![p2_bars[k - 1]]; sizes.len()]; self.n_local]
                     };
-                    intra_ring_allgather(b, *p, block, &entry, p.tag());
+                    intra_allgather_dispatch(b, *al, *p, block, &entry, p.tag());
                 }
             });
         }
@@ -1331,6 +1448,24 @@ fn intra_ring_reduce_scatter(
     (0..n).map(|r| prev[ring::prev(r, n)].clone()).collect()
 }
 
+/// Dispatch one intra allgather phase to its selected lowering. Both
+/// lowerings take the same per-rank/per-chunk entry shape (each rank
+/// opens with its own block) and return every arrival at each rank, so
+/// the three-phase compilers are algorithm-agnostic past this point.
+fn intra_allgather_dispatch(
+    b: &mut GraphBuilder<'_>,
+    al: Algo,
+    path: PathId,
+    block: u64,
+    entry: &[Vec<Vec<TaskId>>],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    match al {
+        Algo::HalvingDoubling => algo::doubling_allgather(b, path, block, entry, tag),
+        _ => intra_ring_allgather(b, path, block, entry, tag),
+    }
+}
+
 /// Ring allgather over the builder's node; `entry[r][c]` gates chunk c of
 /// rank r's first send (rank r opens with ring block r). Barriered
 /// callers replicate one barrier across chunks; pipelined callers thread
@@ -1561,6 +1696,51 @@ mod tests {
                 "{kind}: single-chunk pipelined graph diverged from barriered"
             );
         }
+    }
+
+    /// Under `auto`, latency-bound intra phases leave ring (tree /
+    /// halving-doubling selected from the phase's own message size), yet
+    /// the lowering moves exactly the same total traffic and simulates
+    /// to a sane multi-node report; in the bandwidth-bound regime auto
+    /// compiles the ring graph identically (ring stays the default for
+    /// direct constructions, so everything else in this suite is
+    /// untouched).
+    #[test]
+    fn auto_intra_algos_conserve_traffic_and_ring_large_messages() {
+        let c = cluster(2);
+        let sum = |g: &CompiledHier| g.graph.resource_bytes().values().sum::<u64>();
+        let mut non_ring_seen = false;
+        for kind in [
+            CollectiveKind::AllReduce,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::Broadcast,
+        ] {
+            let tiers = TierShares::new(Shares::nvlink_only(), 8);
+            let msg = 2u64 << 20; // small phases → auto leaves ring
+            let auto_cc = ClusterCollective::new(&c, Calibration::h800(), kind, 8)
+                .with_algo(AlgoSpec::Auto);
+            let a = auto_cc.compile(msg, &tiers, 4).unwrap();
+            let r = cc(&c, kind).compile(msg, &tiers, 4).unwrap();
+            assert_eq!(sum(&a), sum(&r), "{kind}: auto changed total traffic");
+            non_ring_seen |= a.graph != r.graph;
+            let rep = auto_cc.run(msg, &tiers, 4).unwrap();
+            assert!(rep.total > SimTime::ZERO, "{kind}: zero makespan under auto");
+            assert_eq!(rep.inter_times.len(), 8, "{kind}: missing stripe times");
+        }
+        assert!(
+            non_ring_seen,
+            "auto never left ring at 2 MiB — the dispatch is dead"
+        );
+        // Bandwidth-bound: auto and ring compile the identical graph.
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let big = 256u64 << 20;
+        let a = ClusterCollective::new(&c, Calibration::h800(), CollectiveKind::AllReduce, 8)
+            .with_algo(AlgoSpec::Auto)
+            .compile(big, &tiers, 4)
+            .unwrap();
+        let r = cc(&c, CollectiveKind::AllReduce).compile(big, &tiers, 4).unwrap();
+        assert_eq!(a.graph, r.graph, "auto must ring the 256 MiB lowering");
     }
 
     /// More nodes at fixed message size must not get cheaper: the

@@ -18,7 +18,15 @@
 //! NIC-striped inter-node phase → intra-node phase, compiled into one
 //! task graph over the cluster's shared resource pool; `n_nodes = 1`
 //! degenerates to the flat single-node pipeline above bit-identically.
+//!
+//! The *lowering algorithm* is a tuned dimension of its own ([`algo`]):
+//! ring is the bandwidth-optimal default, binomial [`tree`] and
+//! halving-doubling lowerings open the latency-bound small-message
+//! regime (§5.3/§6), and an [`algo::AlgoTable`] tuner picks per
+//! (operator, message-size-bucket) — orthogonal to the balancer's
+//! path-share dimension.
 
+pub mod algo;
 pub mod allgather;
 pub mod allreduce;
 pub mod alltoall;

@@ -3,6 +3,7 @@
 //! This is the piece the balancer iterates against ("MeasurePathTimings"
 //! in Algorithm 1) and the Communicator uses to time production calls.
 
+use super::algo::{self, Algo};
 use super::schedule::{simulate, MultipathSpec, PathAssignment, SimOutcome};
 use super::CollectiveKind;
 use crate::balancer::shares::Shares;
@@ -76,8 +77,24 @@ impl<'t> MultipathCollective<'t> {
     /// Compile the DES spec for one invocation: extents are quantized at
     /// `elem_bytes` alignment (the caller routes this through
     /// [`DataType::size_bytes`] so U8/F16/F64 messages split on element
-    /// boundaries, not a hardwired 4).
+    /// boundaries, not a hardwired 4). Lowers with the ring algorithm —
+    /// the pre-algorithm default every tuner and paper-table consumer
+    /// still measures against.
     pub fn spec(&self, msg_bytes: u64, shares: &Shares, elem_bytes: u64) -> MultipathSpec {
+        self.spec_algo(msg_bytes, shares, elem_bytes, Algo::Ring)
+    }
+
+    /// As [`Self::spec`], under an explicit lowering algorithm. The
+    /// request is [`algo::resolve`]d here, so the spec always names the
+    /// algorithm that will actually lower (unsupported combinations and
+    /// non-power-of-two rank counts ring).
+    pub fn spec_algo(
+        &self,
+        msg_bytes: u64,
+        shares: &Shares,
+        elem_bytes: u64,
+        algo: Algo,
+    ) -> MultipathSpec {
         let extents = shares.to_extents(msg_bytes, elem_bytes);
         let paths = extents
             .iter()
@@ -91,6 +108,7 @@ impl<'t> MultipathCollective<'t> {
             kind: self.kind,
             n: self.n,
             msg_bytes,
+            algo: algo::resolve(self.kind, algo, self.n),
             paths,
         }
     }
@@ -110,7 +128,25 @@ impl<'t> MultipathCollective<'t> {
         shares: &Shares,
         elem_bytes: u64,
     ) -> Result<RunReport> {
-        let spec = self.spec(msg_bytes, shares, elem_bytes);
+        self.run_algo_elem(msg_bytes, shares, elem_bytes, Algo::Ring)
+    }
+
+    /// As [`Self::run`], under an explicit lowering algorithm — the
+    /// [`algo::AlgoTable`] tuner's DES probe, and the `repro ablation`
+    /// sweep's measurable.
+    pub fn run_algo(&self, msg_bytes: u64, shares: &Shares, algo: Algo) -> Result<RunReport> {
+        self.run_algo_elem(msg_bytes, shares, crate::dtype::natural_align(msg_bytes), algo)
+    }
+
+    /// As [`Self::run_algo`], with an explicit element size.
+    pub fn run_algo_elem(
+        &self,
+        msg_bytes: u64,
+        shares: &Shares,
+        elem_bytes: u64,
+        algo: Algo,
+    ) -> Result<RunReport> {
+        let spec = self.spec_algo(msg_bytes, shares, elem_bytes, algo);
         let outcome = simulate(self.topo, &spec, self.calib.reduce_bps)?;
         Ok(RunReport {
             outcome,

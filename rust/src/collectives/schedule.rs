@@ -14,6 +14,7 @@
 //! [`simulate`] executes one multi-path collective and reports per-path
 //! completion times — the observable the two-stage balancer consumes.
 
+use super::algo::{self, Algo};
 use super::ring::chunk_sizes;
 use super::CollectiveKind;
 use crate::links::{PathId, PathModel};
@@ -179,6 +180,11 @@ pub struct MultipathSpec {
     pub n: usize,
     /// Total message bytes (paper convention per operator).
     pub msg_bytes: u64,
+    /// Lowering algorithm for every path of this call (selected per
+    /// size bucket by [`super::algo::AlgoTable`], or pinned via
+    /// `algo = "…"` / `--algo`). [`Algo::Ring`] reproduces the
+    /// pre-algorithm schedules bit-identically.
+    pub algo: Algo,
     /// Active paths; `bytes` must sum to `msg_bytes`.
     pub paths: Vec<PathAssignment>,
 }
@@ -329,6 +335,37 @@ impl<'t> GraphBuilder<'t> {
         reduce_after: bool,
         tag: u32,
     ) -> Vec<TaskId> {
+        self.send_block_capped(
+            path,
+            src,
+            dst,
+            block,
+            deps_per_chunk,
+            charge_step_latency,
+            reduce_after,
+            tag,
+            f64::INFINITY,
+        )
+    }
+
+    /// As [`Self::send_block`], with an additional per-flow rate cap on
+    /// every emitted transfer — how non-contiguous lowerings (the
+    /// halving-doubling family, [`super::algo::HD_EFF`]) charge their
+    /// strided-segment streaming penalty without touching the path's
+    /// shared protocol resources.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_block_capped(
+        &mut self,
+        path: PathId,
+        src: usize,
+        dst: usize,
+        block: u64,
+        deps_per_chunk: &[Vec<TaskId>],
+        charge_step_latency: bool,
+        reduce_after: bool,
+        tag: u32,
+        rate_cap: f64,
+    ) -> Vec<TaskId> {
         let model = self.models[&path];
         let sizes = self.chunks_for(path, block);
         debug_assert!(deps_per_chunk.is_empty() || deps_per_chunk.len() == sizes.len());
@@ -386,7 +423,7 @@ impl<'t> GraphBuilder<'t> {
                             route,
                             weight: 1.0,
                             latency,
-                            rate_cap: f64::INFINITY,
+                            rate_cap,
                         },
                         deps,
                         tag,
@@ -409,7 +446,7 @@ impl<'t> GraphBuilder<'t> {
                             route: d2h_route,
                             weight: 1.0,
                             latency,
-                            rate_cap: f64::INFINITY,
+                            rate_cap,
                         },
                         deps,
                         tag,
@@ -423,7 +460,7 @@ impl<'t> GraphBuilder<'t> {
                             route: h2d_route,
                             weight: 1.0,
                             latency: SimTime::ZERO,
-                            rate_cap: f64::INFINITY,
+                            rate_cap,
                         },
                         vec![d2h],
                         tag,
@@ -452,7 +489,7 @@ impl<'t> GraphBuilder<'t> {
                             route,
                             weight: 1.0,
                             latency,
-                            rate_cap: f64::INFINITY,
+                            rate_cap,
                         },
                         deps,
                         tag,
@@ -472,30 +509,16 @@ impl<'t> GraphBuilder<'t> {
 /// This is the compiled form of one single-node collective — the stream
 /// scheduler appends one per enqueued op into a shared (pool, graph)
 /// with `tag_base = 0` and disambiguates by task-id range instead of by
-/// tag ([`crate::sim::Schedule::tag_finish_in`]).
+/// tag ([`crate::sim::Schedule::tag_finish_in`]). The per-kind lowering
+/// is dispatched through the [`super::algo`] registry under the spec's
+/// algorithm.
 pub fn append_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
     for pa in &spec.paths {
         if pa.bytes == 0 {
             continue;
         }
         let tag = tag_base + pa.path.tag();
-        match spec.kind {
-            CollectiveKind::AllGather => {
-                super::allgather::build_tasks(b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::AllReduce => {
-                super::allreduce::build_tasks(b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::ReduceScatter => {
-                super::reduce_scatter::build_tasks(b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::Broadcast => {
-                super::broadcast::build_tasks(b, pa.path, pa.bytes, tag)
-            }
-            CollectiveKind::AllToAll => {
-                super::alltoall::build_tasks(b, pa.path, pa.bytes, tag)
-            }
-        }
+        algo::lower(b, spec.kind, spec.algo, pa.path, pa.bytes, tag);
     }
 }
 
@@ -561,6 +584,7 @@ mod tests {
             kind,
             n: 8,
             msg_bytes: s,
+            algo: Algo::Ring,
             paths: vec![PathAssignment {
                 path: PathId::Nvlink,
                 bytes: s,
@@ -590,6 +614,7 @@ mod tests {
             kind,
             n: 2,
             msg_bytes: s,
+            algo: Algo::Ring,
             paths: vec![PathAssignment {
                 path: PathId::Nvlink,
                 bytes: s,
@@ -613,6 +638,7 @@ mod tests {
             kind,
             n: 4,
             msg_bytes: s,
+            algo: Algo::Ring,
             paths: vec![
                 PathAssignment {
                     path: PathId::Nvlink,
@@ -680,6 +706,7 @@ mod tests {
             kind: CollectiveKind::AllGather,
             n: 4,
             msg_bytes: 100,
+            algo: Algo::Ring,
             paths: vec![PathAssignment {
                 path: PathId::Nvlink,
                 bytes: 60,

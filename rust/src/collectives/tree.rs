@@ -1,16 +1,24 @@
-//! Tree AllReduce — the paper's §6 alternative for the 8-GPU latency
-//! problem: "we will explore alternatives like tree-based algorithms".
+//! Binomial-tree lowerings — the paper's §6 alternative for the 8-GPU
+//! latency problem: "we will explore alternatives like tree-based
+//! algorithms".
 //!
-//! Binomial tree, rooted at rank 0: a reduce sweep up (log₂N stages, each
-//! half of the remaining ranks sends its full vector to its partner, who
-//! combines) followed by a broadcast sweep down. Versus the ring's
-//! 2(N−1) sequential steps this pays only 2·log₂N step latencies — but
-//! each non-leaf link carries the *whole* message, so the bandwidth term
-//! is ≈2·S/B instead of ring's 2·S·(N−1)/(N·B): tree wins small
-//! (latency-bound) messages, ring wins large ones. The ablation bench
-//! sweeps the crossover.
+//! * [`build_allreduce`] — binomial tree rooted at rank 0: a reduce sweep
+//!   up (log₂N stages; each stage, half of the remaining ranks sends its
+//!   full vector to its partner, who combines) followed by a broadcast
+//!   sweep down. Versus the ring's 2(N−1) sequential steps this pays only
+//!   2·log₂N step latencies — but the root's single lane carries log₂N
+//!   full vectors each way, so the bandwidth term is ≈log₂N·S/B instead
+//!   of ring's 2·S·(N−1)/(N·B): tree wins small (latency-bound)
+//!   messages, ring wins large ones.
+//! * [`build_broadcast`] — binomial fan-out from rank 0: log₂N stages
+//!   versus the chain's N−1 hops, at the price of the root streaming
+//!   log₂N full copies.
+//!
+//! Both are registered in the [`super::algo`] lowering registry (which
+//! falls back to ring for non-power-of-two rank counts) and swept against
+//! ring by the `repro ablation` subcommand — the measured crossover table
+//! lives in EXPERIMENTS.md §Algorithms.
 
-use super::ring::chunk_sizes;
 use super::schedule::{GraphBuilder, SimOutcome};
 use crate::links::{PathId, PathModel};
 use crate::sim::{Engine, SimTime, TaskId};
@@ -18,8 +26,9 @@ use crate::topology::Topology;
 use anyhow::Result;
 
 /// Append tree-AllReduce tasks for a `msg`-byte vector on `path`.
-/// Requires power-of-two rank counts (the paper's 2/4/8).
-pub fn build_tasks(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
+/// Requires power-of-two rank counts (the paper's 2/4/8) — callers going
+/// through [`super::algo::lower`] get the ring fallback instead.
+pub fn build_allreduce(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
     let n = b.n;
     assert!(n.is_power_of_two(), "tree schedule needs power-of-two ranks");
     let stages = n.trailing_zeros() as usize;
@@ -62,7 +71,47 @@ pub fn build_tasks(b: &mut GraphBuilder<'_>, path: PathId, msg: u64, tag: u32) {
     }
 }
 
-/// Simulate a single-path tree AllReduce (the ablation's entry point).
+/// Append binomial-tree Broadcast tasks for `msg` bytes from rank 0 on
+/// `path`: stage k (spans N/2, N/4, …, 1) has every holder forward the
+/// full vector to the rank `span` above it. Chunk-wise dependency
+/// threading lets a subtree start forwarding the moment a chunk lands.
+/// `entry` gates the root's sends (hierarchical phases pass the previous
+/// phase's producers; flat callers pass `&[]` for resident data).
+/// Returns per-rank arrival chunk ids (rank 0, the source, stays empty) —
+/// the same shape as the chain lowering, so hierarchical callers build
+/// their availability maps identically.
+pub fn build_broadcast(
+    b: &mut GraphBuilder<'_>,
+    path: PathId,
+    msg: u64,
+    entry: &[TaskId],
+    tag: u32,
+) -> Vec<Vec<TaskId>> {
+    let n = b.n;
+    assert!(n.is_power_of_two(), "tree schedule needs power-of-two ranks");
+    let stages = n.trailing_zeros() as usize;
+    let n_chunks = b.chunks_for(path, msg).len();
+    let mut at: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    for s in (0..stages).rev() {
+        let span = 1usize << s;
+        for r in (0..n).step_by(2 * span) {
+            let dst = r + span;
+            let deps: Vec<Vec<TaskId>> = if at[r].is_empty() {
+                // Root-resident data, gated on the caller's entry deps.
+                vec![entry.to_vec(); n_chunks]
+            } else {
+                at[r].iter().map(|t| vec![*t]).collect()
+            };
+            at[dst] = b.send_block(path, r, dst, msg, &deps, true, false, tag);
+        }
+    }
+    at
+}
+
+/// Simulate a single-path tree AllReduce in isolation — the ablations
+/// bench's measurable. (The `repro ablation` CLI sweep goes through the
+/// registry instead: `bench_harness::ablation_sweep` →
+/// `MultipathCollective::run_algo`.)
 pub fn simulate_tree(
     topo: &Topology,
     model: PathModel,
@@ -72,7 +121,7 @@ pub fn simulate_tree(
     reduce_bps: f64,
 ) -> Result<SimOutcome> {
     let mut b = GraphBuilder::new(topo, n, &[(path, model)], reduce_bps);
-    build_tasks(&mut b, path, msg, path.tag());
+    build_allreduce(&mut b, path, msg, path.tag());
     let tasks = b.graph.len();
     let sched = Engine::new(&b.pool).run(&b.graph)?;
     Ok(SimOutcome {
@@ -87,12 +136,12 @@ pub fn simulate_tree(
     })
 }
 
-/// Latency floor of the tree schedule (for quick analytical checks).
+/// Latency floor of the tree AllReduce (for quick analytical checks):
+/// 2·log₂N stages, each paying the per-step α plus one full-vector
+/// transfer at the path's rate cap.
 pub fn latency_floor(n: usize, model: &PathModel, msg: u64) -> SimTime {
     let stages = n.trailing_zeros() as u64;
     let per_stage = model.step_latency + SimTime::for_transfer(msg, model.rate_cap);
-    let chunks = chunk_sizes(msg, model.chunk_bytes).len();
-    let _ = chunks;
     SimTime::from_nanos(2 * stages * per_stage.as_nanos())
 }
 
@@ -152,7 +201,8 @@ mod tests {
         );
     }
 
-    /// Tree schedules only exist for power-of-two rank counts.
+    /// Tree schedules only exist for power-of-two rank counts (the
+    /// registry falls back to ring; the builder itself refuses).
     #[test]
     #[should_panic(expected = "power-of-two")]
     fn non_pow2_rejected() {
@@ -160,7 +210,7 @@ mod tests {
         let model =
             calib.nvlink_model(CollectiveKind::AllReduce, 8, topo.spec.nvlink_unidir_bps());
         let mut b = GraphBuilder::new(&topo, 6, &[(PathId::Nvlink, model)], calib.reduce_bps);
-        build_tasks(&mut b, PathId::Nvlink, 1 << 20, 1);
+        build_allreduce(&mut b, PathId::Nvlink, 1 << 20, 1);
     }
 
     /// 2-rank tree degenerates to one exchange + one return — both
@@ -175,6 +225,39 @@ mod tests {
         assert!(
             (0.5..=2.0).contains(&ratio),
             "2-rank tree/ring ratio {ratio:.2} out of range"
+        );
+    }
+
+    fn bcast_time(n: usize, msg: u64, tree: bool) -> f64 {
+        let (topo, calib) = setup();
+        let kind = CollectiveKind::Broadcast;
+        let model = calib.nvlink_model(kind, n, topo.spec.nvlink_unidir_bps());
+        let mut b = GraphBuilder::new(&topo, n, &[(PathId::Nvlink, model)], calib.reduce_bps);
+        if tree {
+            build_broadcast(&mut b, PathId::Nvlink, msg, &[], 1);
+        } else {
+            crate::collectives::broadcast::build_tasks(&mut b, PathId::Nvlink, msg, 1);
+        }
+        Engine::new(&b.pool)
+            .run(&b.graph)
+            .unwrap()
+            .makespan
+            .as_secs_f64()
+    }
+
+    /// Binomial broadcast: log₂N launch latencies beat the chain's N−1
+    /// for small messages; the chain's single-copy streaming wins large.
+    #[test]
+    fn binomial_broadcast_crossover() {
+        let small = 64u64 << 10;
+        assert!(
+            bcast_time(8, small, true) < bcast_time(8, small, false),
+            "binomial should beat chain at 64KiB"
+        );
+        let big = 256u64 << 20;
+        assert!(
+            bcast_time(8, big, false) < bcast_time(8, big, true),
+            "chain should beat binomial at 256MiB"
         );
     }
 }

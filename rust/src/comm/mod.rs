@@ -40,6 +40,7 @@ pub use stream::{
 use crate::balancer::{
     initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares,
 };
+use crate::collectives::algo::{size_class, Algo, AlgoTable};
 use crate::collectives::exec;
 use crate::collectives::hierarchical::{ClusterCollective, PhaseSpan};
 use crate::collectives::multipath::{MultipathCollective, RunReport};
@@ -186,19 +187,20 @@ struct PendingCall {
 }
 
 /// Per-(operator, size-class) balancer state (Algorithm 1 result +
-/// stage-2 balancer). Size classes are power-of-two buckets: the optimal
-/// distribution "can vary with data size" (§3.2.2), and a class tuned at
+/// stage-2 balancer + the bucket's lowering algorithm). Size classes are
+/// power-of-two buckets: the optimal distribution — and the optimal
+/// algorithm — "can vary with data size" (§3.2.2), and a class tuned at
 /// 256 MB must not throttle a 128 KB call.
 struct OpState {
     balancer: RuntimeBalancer,
     /// Collective calls served by this bucket (stats surface —
     /// [`Communicator::call_count`]).
     calls: u64,
-}
-
-/// log2 bucket of the message size.
-fn size_class(msg_bytes: u64) -> u32 {
-    msg_bytes.max(1).next_power_of_two().trailing_zeros()
+    /// Lowering algorithm the [`AlgoTable`] selected for this bucket
+    /// (ring / tree / halving-doubling); every call of the bucket — and
+    /// every stage-2 observation it feeds — runs under it, so the
+    /// balancer's windows stay homogeneous.
+    algo: Algo,
 }
 
 /// All rank buffers of one collective must agree on dtype and count;
@@ -233,10 +235,17 @@ pub struct Communicator {
     /// Inter-tier (NIC-stripe) balancer per (operator, size class);
     /// populated only when `n_nodes > 1`.
     inter_ops: HashMap<(CollectiveKind, u32), RuntimeBalancer<StripeId>>,
+    /// Per-(operator, size-class) lowering-algorithm tuner (`algo` config
+    /// key: auto-selected by default, pinnable to ring/tree/hd).
+    algos: AlgoTable,
     /// Open `group_start` scope, if any.
     group: Option<Vec<PendingCall>>,
     /// Simulated time spent in one-time profiling (≈ the paper's 10 s).
     pub profiling_time: SimTime,
+    /// Simulated time the algorithm tuner spent on DES probes — kept
+    /// beside (not inside) `profiling_time`, whose meaning stays "the
+    /// Algorithm-1 share-tuning phase".
+    pub algo_probe_time: SimTime,
 }
 
 impl Communicator {
@@ -284,6 +293,7 @@ impl Communicator {
         let chunk = cfg.run.calibration().chunk_bytes as usize;
         let fabric = Fabric::new(cfg.run.n_gpus * cfg.run.n_nodes, chunk, ledger.clone());
         let default_stream = device.create_stream();
+        let algos = AlgoTable::new(cfg.run.algo);
         Ok(Communicator {
             cfg,
             topo,
@@ -294,8 +304,10 @@ impl Communicator {
             default_stream,
             ops: HashMap::new(),
             inter_ops: HashMap::new(),
+            algos,
             group: None,
             profiling_time: SimTime::ZERO,
+            algo_probe_time: SimTime::ZERO,
         })
     }
 
@@ -347,6 +359,26 @@ impl Communicator {
             .map_or(0, |s| s.calls)
     }
 
+    /// Lowering algorithm the tuner selected for the (operator,
+    /// size-class) bucket of `msg_bytes`; `None` before the bucket's
+    /// first call. Meaningful on single-node communicators — a
+    /// hierarchical (multi-node) collective selects per intra *phase*
+    /// inside the cluster compiler instead, so its flat buckets always
+    /// read ring here.
+    pub fn algo_of(&self, kind: CollectiveKind, msg_bytes: u64) -> Option<Algo> {
+        self.ops.get(&(kind, size_class(msg_bytes))).map(|s| s.algo)
+    }
+
+    /// Full algorithm-tuner evidence (analytic estimates + DES probes)
+    /// for a bucket, if tuned.
+    pub fn algo_entry(
+        &self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+    ) -> Option<&crate::collectives::algo::AlgoEntry> {
+        self.algos.entry(kind, msg_bytes)
+    }
+
     /// Intra-node multipath context: rings span the node's local ranks
     /// even in cluster mode (the intra tier of the hierarchical lowering).
     fn mc(&self, kind: CollectiveKind) -> MultipathCollective<'_> {
@@ -354,7 +386,9 @@ impl Communicator {
     }
 
     /// Hierarchical cluster context for multi-node lowering, honouring
-    /// the config's phase-join strategy (`pipeline_phases`).
+    /// the config's phase-join strategy (`pipeline_phases`) and its
+    /// algorithm policy (`algo` — each intra phase selects from its own
+    /// phase message size; the inter ring stays ring).
     fn cc(&self, kind: CollectiveKind) -> ClusterCollective<'_> {
         ClusterCollective::new(
             &self.cluster,
@@ -363,11 +397,15 @@ impl Communicator {
             self.n_local(),
         )
         .with_pipeline(self.cfg.run.pipeline_phases)
+        .with_algo(self.cfg.run.algo)
     }
 
     /// Ensure the (operator, size class) has been through Algorithm 1
-    /// (lazy, one-time per class — tuned at the class's own size so a
-    /// 256 MB profile never throttles a 128 KB call).
+    /// *and* the algorithm tuner (lazy, one-time per class — tuned at the
+    /// class's own size so a 256 MB profile never throttles a 128 KB
+    /// call). Shares are tuned first, under the ring incumbent; the
+    /// [`AlgoTable`] then picks the bucket's lowering algorithm under
+    /// those shares (analytic seed, DES probes on predicted switches).
     fn ensure_tuned(&mut self, kind: CollectiveKind, msg_bytes: u64) -> Result<()> {
         let key = (kind, size_class(msg_bytes));
         if self.ops.contains_key(&key) {
@@ -382,8 +420,31 @@ impl Communicator {
             self.profiling_time += tuned.profiling_time;
             tuned.shares
         };
+        let (algo, probe_time) = if self.cfg.run.n_nodes > 1 {
+            // Hierarchical plans select their algorithms per intra phase
+            // (from the phase message sizes, inside the cluster
+            // compiler); this flat bucket's algorithm would never be
+            // consulted — don't burn probes on it.
+            (Algo::Ring, SimTime::ZERO)
+        } else {
+            let mc = MultipathCollective::new(
+                &self.topo,
+                self.cfg.run.calibration(),
+                kind,
+                self.cfg.run.n_gpus,
+            );
+            self.algos.select(&mc, msg_bytes, &shares)?
+        };
+        self.algo_probe_time += probe_time;
         let balancer = RuntimeBalancer::new(self.cfg.run.balancer.clone(), shares);
-        self.ops.insert(key, OpState { balancer, calls: 0 });
+        self.ops.insert(
+            key,
+            OpState {
+                balancer,
+                calls: 0,
+                algo,
+            },
+        );
         Ok(())
     }
 
@@ -441,12 +502,15 @@ impl Communicator {
                 tiers,
                 self.n_local(),
                 self.cfg.run.pipeline_phases,
+                self.cfg.run.algo,
             ))
         } else {
             self.ensure_tuned(kind, msg_bytes)?;
             let key = (kind, size_class(msg_bytes));
-            let shares = self.ops[&key].balancer.shares().clone();
-            let spec = self.mc(kind).spec(msg_bytes, &shares, elem_bytes);
+            let state = &self.ops[&key];
+            let shares = state.balancer.shares().clone();
+            let algo = state.algo;
+            let spec = self.mc(kind).spec_algo(msg_bytes, &shares, elem_bytes, algo);
             Ok(CollectivePlan::flat(kind, msg_bytes, elem_bytes, spec, shares))
         }
     }

@@ -48,6 +48,7 @@
 
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
+use crate::collectives::algo::AlgoSpec;
 use crate::collectives::hierarchical::ClusterCollective;
 use crate::collectives::multipath::RunReport;
 use crate::collectives::schedule::{
@@ -111,13 +112,15 @@ pub struct CollectivePlan {
 
 #[derive(Debug, Clone)]
 pub(crate) enum PlanShape {
-    /// Single-node multi-path lowering.
+    /// Single-node multi-path lowering (the spec carries its algorithm).
     Flat { spec: MultipathSpec, shares: Shares },
-    /// Hierarchical multi-node lowering.
+    /// Hierarchical multi-node lowering; each intra phase selects its
+    /// algorithm from its own phase message size under `algo`.
     Hier {
         tiers: TierShares,
         n_local: usize,
         pipeline: bool,
+        algo: AlgoSpec,
     },
 }
 
@@ -139,6 +142,7 @@ impl CollectivePlan {
     }
 
     /// Hierarchical multi-node plan.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn hier(
         kind: CollectiveKind,
         msg_bytes: u64,
@@ -146,6 +150,7 @@ impl CollectivePlan {
         tiers: TierShares,
         n_local: usize,
         pipeline: bool,
+        algo: AlgoSpec,
     ) -> Self {
         CollectivePlan {
             kind,
@@ -155,6 +160,7 @@ impl CollectivePlan {
                 tiers,
                 n_local,
                 pipeline,
+                algo,
             },
         }
     }
@@ -568,6 +574,7 @@ impl SimDevice {
                 tiers,
                 n_local,
                 pipeline,
+                algo,
             } => {
                 let cc = ClusterCollective::new(
                     &self.cluster,
@@ -575,7 +582,8 @@ impl SimDevice {
                     plan.kind,
                     *n_local,
                 )
-                .with_pipeline(*pipeline);
+                .with_pipeline(*pipeline)
+                .with_algo(*algo);
                 let hier = cc.run(plan.msg_bytes, tiers, plan.elem_bytes)?;
                 // Repackage behind the stable RunReport surface, exactly
                 // as the blocking cluster path always has.
@@ -675,6 +683,7 @@ impl SimDevice {
                         tiers,
                         n_local,
                         pipeline,
+                        algo,
                     } => {
                         let cc = ClusterCollective::new(
                             &self.cluster,
@@ -682,7 +691,8 @@ impl SimDevice {
                             plan.kind,
                             *n_local,
                         )
-                        .with_pipeline(*pipeline);
+                        .with_pipeline(*pipeline)
+                        .with_algo(*algo);
                         let compiled = cc.compile_onto(
                             plan.msg_bytes,
                             tiers,

@@ -3,6 +3,7 @@
 
 pub mod presets;
 
+use crate::collectives::algo::AlgoSpec;
 use crate::links::calib::Calibration;
 use anyhow::{Context, Result};
 use crate::util::kv::KvDoc;
@@ -71,6 +72,14 @@ pub struct RunConfig {
     /// the comparison baseline. Ignored when `n_nodes == 1` (the flat
     /// lowering has no phases to join).
     pub pipeline_phases: bool,
+    /// Collective lowering-algorithm policy (`algo` TOML key /
+    /// `--algo`): `"auto"` (default) lets the per-size-bucket
+    /// [`AlgoTable`] tuner pick ring / tree / halving-doubling;
+    /// `"ring"` etc. pin it (ring reproduces the pre-algorithm
+    /// schedules bit-identically).
+    ///
+    /// [`AlgoTable`]: crate::collectives::algo::AlgoTable
+    pub algo: AlgoSpec,
     /// Effective (MFU-discounted) per-GPU compute throughput in TFLOPS,
     /// used to price simulated [`ComputeOp`]s — the backward-pass chunks
     /// the trainer overlaps with gradient collectives on the stream API.
@@ -106,6 +115,7 @@ impl RunConfig {
             n_nodes: 1,
             spine_oversub: 1.0,
             pipeline_phases: true,
+            algo: AlgoSpec::Auto,
             gpu_tflops: default_gpu_tflops(),
             balancer: BalancerConfig::default(),
             node: None,
@@ -164,7 +174,7 @@ impl RunConfig {
         let doc = KvDoc::parse(text)?;
         const KNOWN: &[&str] = &[
             "preset", "n_gpus", "n_nodes", "spine_oversub", "pipeline_phases",
-            "gpu_tflops", "disable_rdma", "disable_pcie", "seed",
+            "algo", "gpu_tflops", "disable_rdma", "disable_pcie", "seed",
             "balancer.initial_step_pct", "balancer.convergence_threshold",
             "balancer.stability_required", "balancer.max_iterations",
             "balancer.window", "balancer.runtime_threshold",
@@ -199,6 +209,7 @@ impl RunConfig {
             n_nodes: doc.usize_or("n_nodes", 1),
             spine_oversub: doc.f64_or("spine_oversub", 1.0),
             pipeline_phases: doc.bool_or("pipeline_phases", true),
+            algo: doc.str_or("algo", "auto").parse()?,
             gpu_tflops: doc.f64_or("gpu_tflops", default_gpu_tflops()),
             balancer,
             node: None,
@@ -216,6 +227,7 @@ impl RunConfig {
         doc.set("n_nodes", Value::Int(self.n_nodes as i64));
         doc.set("spine_oversub", Value::Float(self.spine_oversub));
         doc.set("pipeline_phases", Value::Bool(self.pipeline_phases));
+        doc.set("algo", Value::Str(self.algo.to_string()));
         doc.set("gpu_tflops", Value::Float(self.gpu_tflops));
         doc.set("disable_rdma", Value::Bool(self.disable_rdma));
         doc.set("disable_pcie", Value::Bool(self.disable_pcie));
@@ -336,6 +348,21 @@ mod tests {
         assert!(!back.pipeline_phases, "pipeline_phases did not roundtrip");
         // Pipelining defaults ON when the key is absent.
         assert!(RunConfig::from_toml_str("preset = \"h800\"").unwrap().pipeline_phases);
+        // Algorithm policy: auto by default, roundtrips, rejects typos.
+        use crate::collectives::algo::Algo;
+        assert_eq!(
+            RunConfig::from_toml_str("preset = \"h800\"").unwrap().algo,
+            AlgoSpec::Auto
+        );
+        let mut with_algo = RunConfig::new(Preset::H800, 8);
+        with_algo.algo = AlgoSpec::Fixed(Algo::Tree);
+        let back = RunConfig::from_toml_str(&with_algo.to_toml().unwrap()).unwrap();
+        assert_eq!(back.algo, AlgoSpec::Fixed(Algo::Tree));
+        assert_eq!(
+            RunConfig::from_toml_str("algo = \"halving_doubling\"").unwrap().algo,
+            AlgoSpec::Fixed(Algo::HalvingDoubling)
+        );
+        assert!(RunConfig::from_toml_str("algo = \"rings\"").is_err());
         let spec = back.cluster_spec();
         assert_eq!(spec.n_nodes, 4);
         assert!((spec.fabric.oversubscription - 2.0).abs() < 1e-9);

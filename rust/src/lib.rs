@@ -35,7 +35,16 @@
 //!
 //! ## Quickstart
 //!
-//! The API is typed, NCCL-shaped, and **stream-ordered**: buffers are
+//! Lowering **algorithms** are a tuned dimension: every collective
+//! dispatches through the [`collectives::algo`] registry (ring /
+//! binomial tree / halving-doubling), and the default `algo = "auto"`
+//! policy (TOML key, or `--algo` on the CLI) picks per
+//! (operator, message-size-bucket) — tree-family lowerings open the
+//! latency-bound small-message regime, ring keeps the bandwidth-bound
+//! one, and `algo = "ring"` reproduces the classic schedules
+//! bit-identically (see EXPERIMENTS.md §Algorithms for the crossover
+//! table). Orthogonally, the API is typed, NCCL-shaped, and
+//! **stream-ordered**: buffers are
 //! [`dtype::DeviceBuffer`]s carrying a [`dtype::DataType`] tag,
 //! reductions take a full [`dtype::RedOp`], out-of-place send/recv pairs
 //! are the default, and — like real NCCL — collectives are nonblocking:

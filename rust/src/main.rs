@@ -9,6 +9,7 @@
 
 use flexlink::balancer::{initial_tune, Shares};
 use flexlink::bench_harness as bh;
+use flexlink::collectives::algo::{AlgoSpec, AlgoTable};
 use flexlink::collectives::multipath::MultipathCollective;
 use flexlink::collectives::CollectiveKind;
 use flexlink::comm::CommConfig;
@@ -29,7 +30,10 @@ USAGE: flexlink <COMMAND> [OPTIONS]
 
 COMMANDS:
   bench   --op <kind> --gpus <n> --preset <p> --sizes 32,64,128,256 [--no-rdma]
-          nccl-tests-style bandwidth sweep, FlexLink vs NCCL
+          [--algo auto|ring|tree|halving_doubling]
+          nccl-tests-style bandwidth sweep, FlexLink vs NCCL; --algo pins
+          the FlexLink lowering algorithm (default: auto-tuned per size,
+          the NCCL column stays the ring baseline)
   tune    --op <kind> --gpus <n> --preset <p> --mib <size>
           run Algorithm 1 and print the tuning trajectory
   train   --model tiny|gpt10m|gpt100m --gpus <n> --steps <k>
@@ -38,7 +42,7 @@ COMMANDS:
           --overlap buckets the backward pass and hides gradient traffic
           under compute on the stream-ordered DES
   repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|
-           cluster|overlap|concurrent>
+           cluster|overlap|concurrent|ablation>
           [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
@@ -46,8 +50,10 @@ COMMANDS:
           instead of chunk pipelining, `cluster` sweeps 1/2/4/8 nodes
           with per-tier algbw plus the barriered-vs-pipelined overlap
           gain, `overlap` sweeps compute/comm overlap (bucketed backward
-          vs sequential), and `concurrent` prices two communicators
-          contending on one shared device
+          vs sequential), `concurrent` prices two communicators
+          contending on one shared device, and `ablation` sweeps the
+          ring/tree/halving-doubling crossover (8-GPU AllReduce,
+          64 KiB – 256 MiB) against the auto tuner's picks
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
@@ -67,7 +73,8 @@ fn main() -> Result<()> {
             let op: CollectiveKind = args.parse_or("op", CollectiveKind::AllGather)?;
             let gpus = args.usize_or("gpus", 8)?;
             let sizes = args.u64_list_or("sizes", &[32, 64, 128, 256])?;
-            bench(preset, op, gpus, &sizes, args.has("no-rdma"))
+            let algo: AlgoSpec = args.parse_or("algo", AlgoSpec::Auto)?;
+            bench(preset, op, gpus, &sizes, args.has("no-rdma"), algo)
         }
         Some("tune") => {
             let op: CollectiveKind = args.parse_or("op", CollectiveKind::AllGather)?;
@@ -131,7 +138,14 @@ fn main() -> Result<()> {
     }
 }
 
-fn bench(preset: Preset, op: CollectiveKind, gpus: usize, sizes: &[u64], no_rdma: bool) -> Result<()> {
+fn bench(
+    preset: Preset,
+    op: CollectiveKind,
+    gpus: usize,
+    sizes: &[u64],
+    no_rdma: bool,
+    algo: AlgoSpec,
+) -> Result<()> {
     RunConfig::new(preset, gpus).validate()?;
     let topo = Topology::build(&preset.spec());
     let cfg = BalancerConfig::default();
@@ -140,20 +154,28 @@ fn bench(preset: Preset, op: CollectiveKind, gpus: usize, sizes: &[u64], no_rdma
     } else {
         vec![PathId::Pcie, PathId::Rdma]
     };
-    println!("# op={op} gpus={gpus} preset={preset} aux={aux:?}");
-    println!("{:>8} {:>12} {:>12} {:>8}  shares", "size", "nccl GB/s", "flex GB/s", "impr");
+    // The NCCL column stays the ring baseline; `algo` governs only the
+    // FlexLink run (auto = per-size-bucket AlgoTable selection).
+    let mut algos = AlgoTable::new(algo);
+    println!("# op={op} gpus={gpus} preset={preset} aux={aux:?} algo={algo}");
+    println!(
+        "{:>8} {:>12} {:>12} {:>8} {:>18}  shares",
+        "size", "nccl GB/s", "flex GB/s", "impr", "algo"
+    );
     for &mib in sizes {
         let msg = mib << 20;
         let mc = MultipathCollective::new(&topo, Calibration::h800(), op, gpus);
         let base = mc.run(msg, &Shares::nvlink_only())?;
         let tuned = initial_tune(&mc, msg, &cfg, &aux)?;
-        let flex = mc.run(msg, &tuned.shares)?;
+        let (picked, _probe) = algos.select(&mc, msg, &tuned.shares)?;
+        let flex = mc.run_algo(msg, &tuned.shares, picked)?;
         println!(
-            "{:>6}MB {:>12.1} {:>12.1} {:>7.1}%  {}",
+            "{:>6}MB {:>12.1} {:>12.1} {:>7.1}% {:>18}  {}",
             mib,
             base.algbw_gbps(),
             flex.algbw_gbps(),
             (flex.algbw_gbps() / base.algbw_gbps() - 1.0) * 100.0,
+            picked,
             tuned.shares
         );
     }
@@ -538,6 +560,42 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
                 csv.write_file(p)?;
             }
         }
+        "ablation" => {
+            // The ring/tree/halving-doubling crossover sweep (§5.3 ring
+            // latency amplification vs §6 tree remedy): fixed-algorithm
+            // latencies per size, plus the auto tuner's pick.
+            let sizes_kib: Vec<u64> = (6..=18).map(|p| 1u64 << p).collect(); // 64 KiB..256 MiB
+            let rows =
+                bh::ablation_sweep(Preset::H800, CollectiveKind::AllReduce, 8, &sizes_kib)?;
+            print!("{}", bh::render_ablation(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "op",
+                    "gpus",
+                    "kib",
+                    "ring_ms",
+                    "tree_ms",
+                    "hd_ms",
+                    "auto_ms",
+                    "auto_algo",
+                    "winner",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.op.to_string(),
+                        r.n_gpus.to_string(),
+                        r.kib.to_string(),
+                        format!("{:.5}", r.ring_ms),
+                        format!("{:.5}", r.tree_ms),
+                        format!("{:.5}", r.hd_ms),
+                        format!("{:.5}", r.auto_ms),
+                        r.auto_algo.to_string(),
+                        r.winner.to_string(),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
         "group" => {
             let r = bh::group_fusion(
                 Preset::H800,
@@ -572,10 +630,15 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
                 o.host_bytes_copied >> 20
             );
             println!("  one-time profiling (simulated): {:.2}s", o.profiling_time_s);
+            println!(
+                "  algorithm-tuner DES probes (simulated): {:.3}s",
+                o.algo_probe_time_s
+            );
         }
         other => anyhow::bail!(
             "unknown repro target '{other}' \
-             (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|concurrent)"
+             (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|\
+             concurrent|ablation)"
         ),
     }
     Ok(())

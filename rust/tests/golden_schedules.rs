@@ -22,6 +22,10 @@
 //!   against those seeds (Rust f64 arithmetic is IEEE and opt-level
 //!   independent, so that comparison is exact) — regression tracking
 //!   proper starts once the goldens land in the repo.
+//! * `GOLDEN_STRICT=1` (set in CI) — a missing golden file FAILS instead
+//!   of silently seeding, so "the goldens were never committed" is a red
+//!   build, not a quietly self-baselining one. Run `cargo test -q` once
+//!   locally and commit `rust/tests/golden/*.json` to satisfy it.
 //!
 //! Independent of the files, this suite enforces the ISSUE's acceptance
 //! inequalities: at 1 node the pipeline toggle is inert (bit-identical
@@ -183,35 +187,49 @@ fn diff_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("../target/golden-diff")
 }
 
+fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| v == "1").unwrap_or(false)
+}
+
+/// Check one snapshot against its golden file: regenerate / seed /
+/// strict-fail / compare, pushing any failure message. Shared by the
+/// hierarchical suite and the flat tree-AllReduce traces.
+fn check_snapshot(name: &str, snap: &BTreeMap<String, u64>, failures: &mut Vec<String>) {
+    let regen = env_flag("GOLDEN_REGEN");
+    let strict = env_flag("GOLDEN_STRICT");
+    let path = golden_dir().join(format!("{name}.json"));
+    if !regen && !path.exists() && strict {
+        failures.push(format!(
+            "{name}: golden file missing under GOLDEN_STRICT=1 — run `cargo test -q` \
+             locally and commit rust/tests/golden/{name}.json"
+        ));
+        return;
+    }
+    if regen || !path.exists() {
+        fs::create_dir_all(golden_dir()).unwrap();
+        fs::write(&path, render_flat_json(snap)).unwrap();
+        eprintln!("golden: seeded {}", path.display());
+        return;
+    }
+    let text = fs::read_to_string(&path).unwrap();
+    let want = parse_flat_json(&text)
+        .unwrap_or_else(|| panic!("unparseable golden file {}", path.display()));
+    if let Err(msg) = compare(name, &want, snap) {
+        fs::create_dir_all(diff_dir()).unwrap();
+        fs::write(diff_dir().join(format!("{name}.json")), render_flat_json(snap)).unwrap();
+        failures.push(msg);
+    }
+}
+
 #[test]
 fn golden_schedules_match_committed_traces() {
-    let regen = std::env::var("GOLDEN_REGEN").map(|v| v == "1").unwrap_or(false);
     let mut reports: BTreeMap<String, HierReport> = BTreeMap::new();
     let mut failures = Vec::new();
 
     for cfg in configs() {
         let name = cfg.name();
         let rep = run_config(&cfg);
-        let snap = snapshot(&rep);
-        let path = golden_dir().join(format!("{name}.json"));
-        if regen || !path.exists() {
-            fs::create_dir_all(golden_dir()).unwrap();
-            fs::write(&path, render_flat_json(&snap)).unwrap();
-            eprintln!("golden: seeded {}", path.display());
-        } else {
-            let text = fs::read_to_string(&path).unwrap();
-            let want = parse_flat_json(&text)
-                .unwrap_or_else(|| panic!("unparseable golden file {}", path.display()));
-            if let Err(msg) = compare(&name, &want, &snap) {
-                fs::create_dir_all(diff_dir()).unwrap();
-                fs::write(
-                    diff_dir().join(format!("{name}.json")),
-                    render_flat_json(&snap),
-                )
-                .unwrap();
-                failures.push(msg);
-            }
-        }
+        check_snapshot(&name, &snapshot(&rep), &mut failures);
         reports.insert(name, rep);
     }
 
@@ -246,6 +264,73 @@ fn golden_schedules_match_committed_traces() {
         "golden mismatches (observed snapshots left in target/golden-diff/; \
          after an intentional schedule change regenerate with \
          `GOLDEN_REGEN=1 cargo test -q golden` and commit):\n{}",
+        failures.join("\n")
+    );
+}
+
+/// Golden traces for the tree-AllReduce lowering at n=8 (ISSUE 5): the
+/// flat single-path schedule at a latency-bound and a bandwidth-bound
+/// size, pinned exactly like the hierarchical traces. Independent of the
+/// files, the regime inequalities are enforced inline: tree beats the
+/// ring schedule at 1 MiB and loses to it at 64 MiB.
+#[test]
+fn golden_tree_allreduce_traces() {
+    use flexlink::collectives::algo::Algo;
+    use flexlink::collectives::schedule::{simulate, MultipathSpec, PathAssignment};
+    use flexlink::topology::Topology;
+
+    let topo = Topology::build(&Preset::H800.spec());
+    let kind = CollectiveKind::AllReduce;
+    let model = Calibration::h800().nvlink_model(kind, 8, topo.spec.nvlink_unidir_bps());
+    let run = |mib: u64, algo: Algo| {
+        let msg = mib << 20;
+        let spec = MultipathSpec {
+            kind,
+            n: 8,
+            msg_bytes: msg,
+            algo,
+            paths: vec![PathAssignment {
+                path: PathId::Nvlink,
+                bytes: msg,
+                model,
+            }],
+        };
+        simulate(&topo, &spec, Calibration::h800().reduce_bps).unwrap()
+    };
+
+    let mut failures = Vec::new();
+    for mib in [1u64, 64] {
+        let out = run(mib, Algo::Tree);
+        let mut snap = BTreeMap::new();
+        snap.insert("makespan_ns".to_string(), out.total.as_nanos());
+        snap.insert("events".to_string(), out.events);
+        snap.insert("tasks".to_string(), out.tasks as u64);
+        for p in &out.per_path {
+            snap.insert(format!("path.{}_ns", p.path), p.time.as_nanos());
+        }
+        check_snapshot(&format!("tree_allreduce_8g_{mib}mib"), &snap, &mut failures);
+        // Regime inequality, file-independent.
+        let ring = run(mib, Algo::Ring);
+        if mib == 1 {
+            assert!(
+                out.total < ring.total,
+                "tree {} not under ring {} at 1 MiB",
+                out.total,
+                ring.total
+            );
+        } else {
+            assert!(
+                ring.total < out.total,
+                "ring {} not under tree {} at 64 MiB",
+                ring.total,
+                out.total
+            );
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "tree golden mismatches (regenerate with GOLDEN_REGEN=1 after an \
+         intentional schedule change):\n{}",
         failures.join("\n")
     );
 }

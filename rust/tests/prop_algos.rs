@@ -1,0 +1,239 @@
+//! Property suite for the pluggable lowering algorithms (ISSUE 5):
+//!
+//! * `auto` selection is never slower than the worst fixed algorithm,
+//!   and matches the better of ring/tree (within 1%) at both sweep
+//!   endpoints — the regime-tracking contract of the `AlgoTable` tuner.
+//! * Every lowering moves exactly the operator's wire bytes over the
+//!   physical NVLink lanes (`TaskGraph::resource_bytes`): algorithms
+//!   reorder *time*, never traffic.
+//! * The registry's ring path is the legacy builder, task-for-task —
+//!   `algo = "ring"` reproduces the pre-algorithm schedules
+//!   bit-identically.
+//! * Non-power-of-two rank counts fall back to ring at the registry.
+//! * The Communicator caches one algorithm per (operator, size-bucket),
+//!   accounts DES probe time beside (not inside) the Algorithm-1
+//!   profiling time, and honours fixed overrides.
+
+use flexlink::balancer::Shares;
+use flexlink::collectives::algo::{self, Algo, AlgoSpec, AlgoTable};
+use flexlink::collectives::multipath::MultipathCollective;
+use flexlink::collectives::schedule::{simulate, GraphBuilder, MultipathSpec, PathAssignment};
+use flexlink::collectives::{
+    allgather, allreduce, alltoall, broadcast, reduce_scatter, CollectiveKind,
+};
+use flexlink::comm::{CommConfig, Communicator};
+use flexlink::config::presets::Preset;
+use flexlink::links::calib::Calibration;
+use flexlink::links::{PathId, PathModel};
+use flexlink::sim::SimTime;
+use flexlink::topology::Topology;
+
+fn h800() -> Topology {
+    Topology::build(&Preset::H800.spec())
+}
+
+fn nv_model(topo: &Topology, kind: CollectiveKind, n: usize) -> PathModel {
+    Calibration::h800().nvlink_model(kind, n, topo.spec.nvlink_unidir_bps())
+}
+
+/// DES time of one fixed-algorithm NVLink-only lowering, in seconds.
+fn fixed_time(topo: &Topology, kind: CollectiveKind, n: usize, msg: u64, algo: Algo) -> f64 {
+    let spec = MultipathSpec {
+        kind,
+        n,
+        msg_bytes: msg,
+        algo: algo::resolve(kind, algo, n),
+        paths: vec![PathAssignment {
+            path: PathId::Nvlink,
+            bytes: msg,
+            model: nv_model(topo, kind, n),
+        }],
+    };
+    simulate(topo, &spec, Calibration::h800().reduce_bps)
+        .unwrap()
+        .total
+        .as_secs_f64()
+}
+
+/// `auto` tracks the regimes: never worse than the worst fixed
+/// algorithm anywhere, and within 1% of the better of ring/tree at the
+/// sweep endpoints (256 KiB latency-bound, 256 MiB bandwidth-bound).
+#[test]
+fn auto_never_slower_than_worst_and_tracks_endpoints() {
+    let topo = h800();
+    let kind = CollectiveKind::AllReduce;
+    let mc = MultipathCollective::new(&topo, Calibration::h800(), kind, 8);
+    let shares = Shares::nvlink_only();
+    let mut table = AlgoTable::new(AlgoSpec::Auto);
+    let sizes: Vec<u64> = vec![256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20, 256 << 20];
+    for (i, &msg) in sizes.iter().enumerate() {
+        let ring = fixed_time(&topo, kind, 8, msg, Algo::Ring);
+        let tree = fixed_time(&topo, kind, 8, msg, Algo::Tree);
+        let hd = fixed_time(&topo, kind, 8, msg, Algo::HalvingDoubling);
+        let (picked, _) = table.select(&mc, msg, &shares).unwrap();
+        let auto = fixed_time(&topo, kind, 8, msg, picked);
+        let worst = ring.max(tree).max(hd);
+        assert!(
+            auto <= worst * 1.0001,
+            "{msg}B: auto ({picked}) {auto:.6}s slower than worst fixed {worst:.6}s"
+        );
+        if i == 0 || i == sizes.len() - 1 {
+            let best_rt = ring.min(tree);
+            assert!(
+                auto <= best_rt * 1.01,
+                "{msg}B endpoint: auto ({picked}) {auto:.6}s off ring/tree best {best_rt:.6}s"
+            );
+        }
+    }
+    // The acceptance regimes themselves: tree beats ring small, ring
+    // wins at ≥64 MiB, and auto agrees with each side.
+    let small = 256u64 << 10;
+    assert!(fixed_time(&topo, kind, 8, small, Algo::Tree) < fixed_time(&topo, kind, 8, small, Algo::Ring));
+    assert_ne!(table.chosen(kind, small), Some(Algo::Ring));
+    for big in [64u64 << 20, 256 << 20] {
+        assert!(fixed_time(&topo, kind, 8, big, Algo::Ring) < fixed_time(&topo, kind, 8, big, Algo::Tree));
+    }
+    assert_eq!(table.chosen(kind, 256 << 20), Some(Algo::Ring));
+}
+
+/// Every lowering conserves wire bytes on the physical NVLink lanes:
+/// the up-lane total matches the operator's closed form, and the
+/// down-lane total mirrors it (each hop has exactly one of each).
+#[test]
+fn every_lowering_conserves_resource_bytes() {
+    let topo = h800();
+    let n = 8usize;
+    let msg = 8u64 << 20; // divisible by n: the closed forms are exact
+    let cases: &[(CollectiveKind, u64)] = &[
+        (CollectiveKind::AllReduce, 2 * (n as u64 - 1) * msg / n as u64 * n as u64),
+        (CollectiveKind::AllGather, (n as u64 - 1) * msg * n as u64),
+        (CollectiveKind::ReduceScatter, (n as u64 - 1) * msg),
+        (CollectiveKind::Broadcast, (n as u64 - 1) * msg),
+        (CollectiveKind::AllToAll, (n as u64 - 1) * msg),
+    ];
+    for &(kind, expect) in cases {
+        for &al in algo::candidates(kind, n) {
+            let model = nv_model(&topo, kind, n);
+            let mut b = GraphBuilder::new(&topo, n, &[(PathId::Nvlink, model)], 500e9);
+            algo::lower(&mut b, kind, al, PathId::Nvlink, msg, 1);
+            let by = b.graph.resource_bytes();
+            let lane = |ids: &[flexlink::sim::ResourceId]| -> u64 {
+                ids.iter().map(|r| by.get(r).copied().unwrap_or(0)).sum()
+            };
+            let up = lane(&topo.nvlink_up[..n]);
+            let down = lane(&topo.nvlink_down[..n]);
+            assert_eq!(up, expect, "{kind}/{al}: up-lane bytes");
+            assert_eq!(up, down, "{kind}/{al}: up/down asymmetry");
+        }
+    }
+}
+
+/// The registry's ring arm IS the legacy builder — identical graphs.
+#[test]
+fn registry_ring_is_the_legacy_lowering() {
+    let topo = h800();
+    let msg = 6u64 << 20;
+    for kind in [
+        CollectiveKind::AllReduce,
+        CollectiveKind::AllGather,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::Broadcast,
+        CollectiveKind::AllToAll,
+    ] {
+        let model = nv_model(&topo, kind, 8);
+        let mut via_registry = GraphBuilder::new(&topo, 8, &[(PathId::Nvlink, model)], 500e9);
+        algo::lower(&mut via_registry, kind, Algo::Ring, PathId::Nvlink, msg, 1);
+        let mut direct = GraphBuilder::new(&topo, 8, &[(PathId::Nvlink, model)], 500e9);
+        match kind {
+            CollectiveKind::AllReduce => {
+                allreduce::build_tasks(&mut direct, PathId::Nvlink, msg, 1)
+            }
+            CollectiveKind::AllGather => {
+                allgather::build_tasks(&mut direct, PathId::Nvlink, msg, 1)
+            }
+            CollectiveKind::ReduceScatter => {
+                reduce_scatter::build_tasks(&mut direct, PathId::Nvlink, msg, 1)
+            }
+            CollectiveKind::Broadcast => {
+                broadcast::build_tasks(&mut direct, PathId::Nvlink, msg, 1)
+            }
+            CollectiveKind::AllToAll => {
+                alltoall::build_tasks(&mut direct, PathId::Nvlink, msg, 1)
+            }
+        }
+        assert_eq!(
+            via_registry.graph, direct.graph,
+            "{kind}: registry ring diverged from the legacy builder"
+        );
+    }
+}
+
+/// Non-power-of-two rank counts resolve to ring at the registry — the
+/// tree/hd builders are never reached.
+#[test]
+fn non_pow2_ranks_fall_back_to_ring() {
+    let topo = h800();
+    let kind = CollectiveKind::AllReduce;
+    let model = nv_model(&topo, kind, 6);
+    let msg = 3u64 << 20;
+    let build = |al: Algo| {
+        let mut b = GraphBuilder::new(&topo, 6, &[(PathId::Nvlink, model)], 500e9);
+        algo::lower(&mut b, kind, al, PathId::Nvlink, msg, 1);
+        b.graph
+    };
+    let ring = build(Algo::Ring);
+    assert_eq!(build(Algo::Tree), ring);
+    assert_eq!(build(Algo::HalvingDoubling), ring);
+}
+
+/// Communicator integration: per-bucket caching, probe-time accounting
+/// beside the Algorithm-1 profiling time, and fixed overrides.
+#[test]
+fn communicator_selects_caches_and_overrides() {
+    let mut cfg = CommConfig::new(Preset::H800, 8);
+    cfg.run.disable_pcie = true;
+    cfg.run.disable_rdma = true;
+    let mut c = Communicator::init(cfg.clone()).unwrap();
+    let kind = CollectiveKind::AllReduce;
+
+    // Latency-bound bucket: auto leaves ring, confirmed by DES probes.
+    let small = 256u64 << 10;
+    c.time_collective(kind, small).unwrap();
+    assert_ne!(c.algo_of(kind, small), Some(Algo::Ring));
+    assert!(c.algo_probe_time > SimTime::ZERO);
+    // Probes are not Algorithm-1 profiling (nvlink-only mode skips it).
+    assert_eq!(c.profiling_time, SimTime::ZERO);
+    assert!(!c.algo_entry(kind, small).unwrap().probes.is_empty());
+
+    // Cached per bucket: a second call probes nothing new.
+    let probed = c.algo_probe_time;
+    c.time_collective(kind, small).unwrap();
+    assert_eq!(c.algo_probe_time, probed);
+
+    // Bandwidth-bound bucket: analytic ring conclusion, probe-free.
+    let big = 256u64 << 20;
+    c.time_collective(kind, big).unwrap();
+    assert_eq!(c.algo_of(kind, big), Some(Algo::Ring));
+    assert_eq!(c.algo_probe_time, probed);
+
+    // `algo = "ring"` reproduces the ring pipeline bit-identically.
+    let mut ring_cfg = cfg.clone();
+    ring_cfg.run.algo = AlgoSpec::Fixed(Algo::Ring);
+    let mut rc = Communicator::init(ring_cfg).unwrap();
+    let rep = rc.time_collective(kind, small).unwrap();
+    let topo = h800();
+    let expect = MultipathCollective::new(&topo, Calibration::h800(), kind, 8)
+        .run(small, &Shares::nvlink_only())
+        .unwrap();
+    assert_eq!(rep.sim.outcome.total.as_nanos(), expect.outcome.total.as_nanos());
+    assert_eq!(rep.sim.outcome.tasks, expect.outcome.tasks);
+    assert_eq!(rc.algo_probe_time, SimTime::ZERO);
+
+    // Fixed tree override pins every bucket.
+    let mut tree_cfg = cfg;
+    tree_cfg.run.algo = AlgoSpec::Fixed(Algo::Tree);
+    let mut tc = Communicator::init(tree_cfg).unwrap();
+    tc.time_collective(kind, small).unwrap();
+    assert_eq!(tc.algo_of(kind, small), Some(Algo::Tree));
+    assert_eq!(tc.algo_probe_time, SimTime::ZERO);
+}
