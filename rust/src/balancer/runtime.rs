@@ -120,6 +120,31 @@ impl<K: ShareKey> RuntimeBalancer<K> {
         self.evaluator.reset();
         Some(adj)
     }
+
+    /// Fault-path entry (the `RerouteStripes` recovery policy): drop
+    /// `from` *immediately*, folding its whole share into `into`. A
+    /// detected dead stripe must not wait out an Evaluator window — the
+    /// windowed trend machinery exists to damp transient spikes, and a
+    /// death is not transient. Resets the window (post-fault timings are
+    /// a new regime) and records the move with an infinite observed gap
+    /// so fault-driven adjustments are distinguishable in traces.
+    /// Returns the share folded over, 0.0 if `from` was not active.
+    pub fn force_deactivate(&mut self, from: K, into: K) -> f64 {
+        if !self.shares.is_active(from) || from == into {
+            return 0.0;
+        }
+        let pct = self.shares.get(from);
+        self.shares.deactivate(from, into);
+        self.adjustments.push(Adjustment {
+            at_call: self.calls,
+            from,
+            to: into,
+            moved_pct: pct,
+            observed_gap: f64::INFINITY,
+        });
+        self.evaluator.reset();
+        pct
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +255,37 @@ mod tests {
                 .observe(vec![(PathId::Nvlink, SimTime::from_micros(100))])
                 .is_none());
         }
+    }
+
+    #[test]
+    fn force_deactivate_bypasses_window_and_resets_it() {
+        let keys: Vec<StripeId> = (0..4).map(StripeId).collect();
+        let mut rb = RuntimeBalancer::with_preferred(cfg(), Shares::even(&keys), None);
+        // One observation in — window far from full.
+        rb.observe(vec![(StripeId(0), SimTime::from_micros(100))]);
+        let pct = rb.force_deactivate(StripeId(3), StripeId(0));
+        assert!((pct - 25.0).abs() < 1e-9);
+        assert!(!rb.shares().is_active(StripeId(3)));
+        assert!((rb.shares().get(StripeId(0)) - 50.0).abs() < 1e-9);
+        assert!((rb.shares().total() - 100.0).abs() < 1e-9);
+        let adj = *rb.adjustments().last().unwrap();
+        assert_eq!(adj.from, StripeId(3));
+        assert!(adj.observed_gap.is_infinite());
+        // Dropping an inactive stripe is a no-op.
+        assert_eq!(rb.force_deactivate(StripeId(3), StripeId(0)), 0.0);
+        // The evaluator window restarted: 4 more calls before stage 2 can
+        // act again.
+        let skew = || {
+            vec![
+                (StripeId(0), SimTime::from_micros(300)),
+                (StripeId(1), SimTime::from_micros(100)),
+                (StripeId(2), SimTime::from_micros(100)),
+            ]
+        };
+        for _ in 0..3 {
+            assert!(rb.observe(skew()).is_none());
+        }
+        assert!(rb.observe(skew()).is_some());
     }
 
     #[test]

@@ -50,6 +50,22 @@ impl TierShares {
     pub fn single_node(intra: Shares<PathId>) -> Self {
         TierShares::new(intra, 1)
     }
+
+    /// The share state with `dead` removed from the inter tier, its share
+    /// folded into the lowest surviving stripe — the re-lowered
+    /// distribution after a NIC death ([`crate::faults`]'s `ReLower` and
+    /// `RerouteStripes` recovery policies both converge here; they differ
+    /// in *cost*, not in the surviving distribution). `None` when `dead`
+    /// was the only active stripe (no survivors to lower over).
+    pub fn without_stripe(&self, dead: StripeId) -> Option<TierShares> {
+        if !self.inter.is_active(dead) {
+            return Some(self.clone());
+        }
+        let survivor = self.inter.active_paths().into_iter().find(|s| *s != dead)?;
+        let mut out = self.clone();
+        out.inter.deactivate(dead, survivor);
+        Some(out)
+    }
 }
 
 /// Stage 1 for the inter-node tier: Algorithm 1 over the NIC stripes of
@@ -97,5 +113,23 @@ mod tests {
     fn stripe_keys_are_dense() {
         let ks = stripes(4);
         assert_eq!(ks, vec![StripeId(0), StripeId(1), StripeId(2), StripeId(3)]);
+    }
+
+    #[test]
+    fn without_stripe_folds_into_lowest_survivor() {
+        let t = TierShares::new(Shares::nvlink_only(), 4);
+        let t2 = t.without_stripe(StripeId(2)).unwrap();
+        assert!(!t2.inter.is_active(StripeId(2)));
+        assert!((t2.inter.get(StripeId(0)) - 50.0).abs() < 1e-9);
+        assert!((t2.inter.total() - 100.0).abs() < 1e-9);
+        assert_eq!(t2.intra, t.intra);
+        // Inactive stripe → unchanged; last stripe → no survivors.
+        assert_eq!(t2.without_stripe(StripeId(2)).unwrap(), t2);
+        let mut last = t.clone();
+        for s in 1..4 {
+            last = last.without_stripe(StripeId(s)).unwrap();
+        }
+        assert_eq!(last.inter.n_active(), 1);
+        assert!(last.without_stripe(StripeId(0)).is_none());
     }
 }

@@ -942,6 +942,130 @@ pub fn overhead(comm: &crate::comm::Communicator) -> OverheadReport {
     }
 }
 
+/// One `repro chaos` row: one recovery policy's replay of the scenario
+/// timeline (EXPERIMENTS.md §Chaos).
+#[derive(Debug, Clone)]
+pub struct ChaosRow {
+    pub policy: crate::faults::RecoveryPolicy,
+    pub scenario: String,
+    pub n_nodes: usize,
+    pub msg_mib: u64,
+    pub steps: usize,
+    pub faults: usize,
+    pub failures: usize,
+    /// Mean time-to-recover in milliseconds; negative when no outage
+    /// occurred (rendered as "-").
+    pub mean_ttr_ms: f64,
+    pub fault_free_gbps: f64,
+    pub goodput_gbps: f64,
+    pub goodput_ratio_pct: f64,
+    pub degraded_steps: usize,
+}
+
+/// The `repro chaos` sweep: draw ONE fault timeline (seeded schedule, or
+/// the fixed [`crate::faults::chaos::smoke_timeline`] under `--smoke`)
+/// and replay it through the step loop once per recovery policy, so the
+/// per-policy goodput and TTR numbers are an apples-to-apples comparison
+/// on identical fault arrivals.
+#[allow(clippy::too_many_arguments)]
+pub fn chaos_sweep(
+    preset: Preset,
+    n_nodes: usize,
+    msg_mib: u64,
+    steps: usize,
+    ccfg: &crate::config::ChaosConfig,
+    seed: u64,
+    policies: &[crate::faults::RecoveryPolicy],
+    smoke: bool,
+    cfg: &BalancerConfig,
+) -> Result<Vec<ChaosRow>> {
+    use crate::faults::{chaos, RecoverySpec};
+    use crate::sim::SimTime;
+    anyhow::ensure!(n_nodes >= 2, "chaos sweeps need a multi-node cluster");
+    let op = CollectiveKind::AllReduce;
+    let msg = msg_mib << 20;
+    let cluster = Cluster::build(&ClusterSpec::new(n_nodes, preset.spec()));
+    let nl = cluster.gpus_per_node();
+    // Fault-free step time anchors both the smoke timeline's fixed fault
+    // times and the stochastic schedule's horizon.
+    let tiers0 = TierShares::new(Shares::nvlink_only(), nl);
+    let t0 = ClusterCollective::new(&cluster, Calibration::h800(), op, nl)
+        .run(msg, &tiers0, 4)?
+        .total;
+    let (scenario_name, timeline) = if smoke {
+        ("smoke".to_string(), chaos::smoke_timeline(t0))
+    } else {
+        let scenario = chaos::ChaosScenario::nic_death(n_nodes, nl, ccfg.mtbf_s, ccfg.mttr_s);
+        let horizon = SimTime::from_secs_f64(t0.as_secs_f64() * steps as f64 * 2.0);
+        let tl = crate::faults::schedule(&scenario.specs, horizon, seed);
+        (scenario.name, tl)
+    };
+    policies
+        .iter()
+        .map(|&policy| {
+            let rec = RecoverySpec::from_config(policy, ccfg);
+            let out = chaos::run_chaos(
+                &cluster,
+                Calibration::h800(),
+                op,
+                msg,
+                steps,
+                &timeline,
+                &rec,
+                cfg,
+            )?;
+            Ok(ChaosRow {
+                policy,
+                scenario: scenario_name.clone(),
+                n_nodes,
+                msg_mib,
+                steps: out.steps,
+                faults: out.faults_injected,
+                failures: out.failures,
+                mean_ttr_ms: out
+                    .mean_ttr()
+                    .map(|t| t.as_secs_f64() * 1e3)
+                    .unwrap_or(-1.0),
+                fault_free_gbps: out.fault_free_gbps(),
+                goodput_gbps: out.goodput_gbps(),
+                goodput_ratio_pct: out.goodput_ratio() * 100.0,
+                degraded_steps: out.degraded_steps,
+            })
+        })
+        .collect()
+}
+
+pub fn render_chaos(rows: &[ChaosRow]) -> String {
+    let mut t = Table::new(
+        "Chaos sweep: goodput under faults, per recovery policy (one shared timeline)",
+        &[
+            "policy", "scenario", "nodes", "msg", "steps", "faults", "aborts",
+            "mean TTR(ms)", "fault-free", "goodput", "ratio", "degraded",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.policy.to_string(),
+            r.scenario.clone(),
+            r.n_nodes.to_string(),
+            format!("{}MB", r.msg_mib),
+            r.steps.to_string(),
+            r.faults.to_string(),
+            r.failures.to_string(),
+            if r.mean_ttr_ms < 0.0 {
+                "-".into()
+            } else {
+                format!("{:.3}", r.mean_ttr_ms)
+            },
+            format!("{:.1}", r.fault_free_gbps),
+            format!("{:.1}", r.goodput_gbps),
+            format!("{:.1}%", r.goodput_ratio_pct),
+            r.degraded_steps.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -155,6 +155,30 @@ impl HierReport {
     }
 }
 
+/// Outcome of [`ClusterCollective::run_under_faults`]: the usual report
+/// plus failure bookkeeping from the fault timeline.
+#[derive(Debug, Clone)]
+pub struct FaultedHierRun {
+    pub report: HierReport,
+    /// Tasks that failed (in-flight on a dead resource, or activated onto
+    /// a dead route). 0 means the collective completed cleanly.
+    pub failed_tasks: usize,
+    /// Virtual time of the first failure, if any — the abort instant a
+    /// recovery policy's detection latency counts from.
+    pub first_failure: Option<SimTime>,
+    /// Pool state at the end of the timeline (capacities after every
+    /// applied event).
+    pub pool: ResourcePool,
+}
+
+impl FaultedHierRun {
+    /// True when the collective completed without failures — only then is
+    /// `report.total` a valid step time.
+    pub fn ok(&self) -> bool {
+        self.failed_tasks == 0
+    }
+}
+
 impl<'c> ClusterCollective<'c> {
     pub fn new(
         cluster: &'c Cluster,
@@ -330,6 +354,74 @@ impl<'c> ClusterCollective<'c> {
             intra_phase3: phase_span(&sched, compiled.p3_range.clone()),
             events: sched.events,
             tasks,
+        })
+    }
+
+    /// As [`Self::run`], executed under a fault timeline
+    /// ([`crate::sim::run_with_events`]): capacity mutations land
+    /// mid-flight, in-flight transfers over dead resources fail, and the
+    /// outcome carries failure bookkeeping beside the usual report.
+    ///
+    /// With an **empty timeline this is exactly [`Self::run`]'s code
+    /// path** — `run_with_events` delegates to `Engine::run` — so a
+    /// zero-fault chaos schedule stays bit-identical to the fault-free
+    /// engine (pinned in `tests/prop_faults.rs` against the goldens).
+    ///
+    /// On a failed run the report's timings are still well-defined (a
+    /// failed task "finishes" at its failure instant) but do **not**
+    /// price a completed collective — callers must check
+    /// [`FaultedHierRun::ok`] before using `report.total` as a step time
+    /// or feeding balancer observables.
+    pub fn run_under_faults(
+        &self,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        elem_bytes: u64,
+        events: &[crate::sim::RateEvent],
+    ) -> Result<FaultedHierRun> {
+        anyhow::ensure!(
+            self.cluster.n_nodes() >= 2,
+            "fault-injected runs price multi-node clusters (n_nodes >= 2)"
+        );
+        let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
+        let tasks = compiled.graph.len();
+        let CompiledHier {
+            pool,
+            graph,
+            p1_range,
+            p2_range,
+            p3_range,
+        } = compiled;
+        let run = crate::sim::run_with_events(pool, &graph, events)?;
+        let sched = run.schedule;
+        let intra_times = tiers
+            .intra
+            .active_paths()
+            .into_iter()
+            .filter_map(|p| sched.tag_finish(&graph, p.tag()).map(|t| (p, t)))
+            .collect();
+        let inter_times = tiers
+            .inter
+            .active_paths()
+            .into_iter()
+            .filter_map(|s| sched.tag_finish(&graph, s.tag()).map(|t| (s, t)))
+            .collect();
+        Ok(FaultedHierRun {
+            report: HierReport {
+                kind: self.kind,
+                msg_bytes,
+                total: sched.makespan,
+                intra_times,
+                inter_times,
+                intra_phase1: phase_span(&sched, p1_range),
+                inter_phase: phase_span(&sched, p2_range),
+                intra_phase3: phase_span(&sched, p3_range),
+                events: sched.events,
+                tasks,
+            },
+            failed_tasks: run.failed.len(),
+            first_failure: run.first_failure,
+            pool: run.pool,
         })
     }
 

@@ -28,6 +28,17 @@
 //! enqueued collective fuses into one DES launch. [`api`] exposes the
 //! drop-in NCCL-style C-ish surface
 //! (`flexlink_all_reduce(comm, send, recv, count, datatype, op)`).
+//!
+//! **Faults.** The Communicator models the healthy path; behavior under
+//! link/NIC/node failure lives in [`crate::faults`], which drives the
+//! same compiled lowerings through the event-injecting engine
+//! ([`crate::sim::run_with_events`]) and prices the NCCL-shaped recovery
+//! options — stripe rerouting through the runtime balancer the
+//! Communicator already owns, abort+re-lower over survivors (the
+//! `ncclCommAbort` + re-init pattern), or trainer-level
+//! checkpoint-restart. A zero-fault timeline takes exactly the code path
+//! the Communicator uses, so chaos runs and production runs share one
+//! pricing model.
 
 pub mod api;
 pub mod group;

@@ -54,6 +54,47 @@ impl Default for BalancerConfig {
     }
 }
 
+/// Tunables of the fault-injection subsystem ([`crate::faults`]): the
+/// default fault process intensities and the recovery-policy cost model
+/// (`[chaos]` TOML keys, `repro chaos` CLI flags).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Mean time between failures of the default fault process, seconds
+    /// of *simulated* time. Collective steps run in the µs–ms range, so
+    /// the default is deliberately compressed (vs real datacenter MTBFs)
+    /// to land a handful of faults inside a short sweep's horizon.
+    pub mtbf_s: f64,
+    /// Mean time to repair, simulated seconds.
+    pub mttr_s: f64,
+    /// Fault-detection latency (health-check/timeout), microseconds.
+    /// Every recovery policy pays it.
+    pub detection_us: f64,
+    /// Communicator abort + re-setup cost for the `relower` policy,
+    /// milliseconds (NCCL abort+reinit scale).
+    pub reinit_ms: f64,
+    /// Steps between trainer checkpoints (`ckpt` policy recomputes
+    /// everything since the last multiple).
+    pub ckpt_interval: usize,
+    /// Checkpoint reload cost for the `ckpt` policy, seconds.
+    pub reload_s: f64,
+    /// Default recovery policy when the CLI does not pin one.
+    pub policy: crate::faults::RecoveryPolicy,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            mtbf_s: 0.05,
+            mttr_s: 0.5,
+            detection_us: 1000.0,
+            reinit_ms: 100.0,
+            ckpt_interval: 50,
+            reload_s: 2.0,
+            policy: crate::faults::RecoveryPolicy::RerouteStripes,
+        }
+    }
+}
+
 /// Full run configuration (TOML-loadable).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -93,11 +134,17 @@ pub struct RunConfig {
     pub disable_rdma: bool,
     /// Disable the PCIe path (NVLink-only degenerates to the baseline).
     pub disable_pcie: bool,
-    /// RNG seed for workload generators.
+    /// RNG seed for workload generators and chaos fault schedules
+    /// (`seed` TOML key, global `--seed` CLI flag).
     pub seed: u64,
+    /// Fault-injection tunables (`chaos.*` TOML keys).
+    pub chaos: ChaosConfig,
 }
 
-fn default_seed() -> u64 {
+/// The crate-wide default RNG seed — the value `--seed` and the `seed`
+/// TOML key fall back to, shared by workload generators and chaos fault
+/// schedules so an unseeded run is still reproducible.
+pub fn default_seed() -> u64 {
     0xF1EC5
 }
 
@@ -122,6 +169,7 @@ impl RunConfig {
             disable_rdma: false,
             disable_pcie: false,
             seed: default_seed(),
+            chaos: ChaosConfig::default(),
         }
     }
 
@@ -180,6 +228,9 @@ impl RunConfig {
             "balancer.window", "balancer.runtime_threshold",
             "balancer.runtime_step_pct", "balancer.min_share_pct",
             "balancer.nvlink_initial_share_pct",
+            "chaos.mtbf_s", "chaos.mttr_s", "chaos.detection_us",
+            "chaos.reinit_ms", "chaos.ckpt_interval", "chaos.reload_s",
+            "chaos.policy",
         ];
         for k in doc.keys() {
             anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key '{k}'");
@@ -203,6 +254,19 @@ impl RunConfig {
             nvlink_initial_share_pct: doc
                 .f64_or("balancer.nvlink_initial_share_pct", d.nvlink_initial_share_pct),
         };
+        let dc = ChaosConfig::default();
+        let chaos = ChaosConfig {
+            mtbf_s: doc.f64_or("chaos.mtbf_s", dc.mtbf_s),
+            mttr_s: doc.f64_or("chaos.mttr_s", dc.mttr_s),
+            detection_us: doc.f64_or("chaos.detection_us", dc.detection_us),
+            reinit_ms: doc.f64_or("chaos.reinit_ms", dc.reinit_ms),
+            ckpt_interval: doc.usize_or("chaos.ckpt_interval", dc.ckpt_interval),
+            reload_s: doc.f64_or("chaos.reload_s", dc.reload_s),
+            policy: doc
+                .str_or("chaos.policy", &dc.policy.to_string())
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?,
+        };
         Ok(RunConfig {
             preset,
             n_gpus: doc.usize_or("n_gpus", preset.spec().n_gpus),
@@ -216,6 +280,7 @@ impl RunConfig {
             disable_rdma: doc.bool_or("disable_rdma", false),
             disable_pcie: doc.bool_or("disable_pcie", false),
             seed: doc.u64_or("seed", default_seed()),
+            chaos,
         })
     }
 
@@ -251,6 +316,14 @@ impl RunConfig {
             "balancer.nvlink_initial_share_pct",
             Value::Float(b.nvlink_initial_share_pct),
         );
+        let c = &self.chaos;
+        doc.set("chaos.mtbf_s", Value::Float(c.mtbf_s));
+        doc.set("chaos.mttr_s", Value::Float(c.mttr_s));
+        doc.set("chaos.detection_us", Value::Float(c.detection_us));
+        doc.set("chaos.reinit_ms", Value::Float(c.reinit_ms));
+        doc.set("chaos.ckpt_interval", Value::Int(c.ckpt_interval as i64));
+        doc.set("chaos.reload_s", Value::Float(c.reload_s));
+        doc.set("chaos.policy", Value::Str(c.policy.to_string()));
         Ok(doc.render())
     }
 
@@ -286,6 +359,28 @@ impl RunConfig {
         anyhow::ensure!(
             (0.0..=100.0).contains(&b.nvlink_initial_share_pct),
             "nvlink_initial_share_pct out of range"
+        );
+        let c = &self.chaos;
+        anyhow::ensure!(
+            c.mtbf_s > 0.0 && c.mtbf_s.is_finite(),
+            "chaos.mtbf_s must be > 0"
+        );
+        anyhow::ensure!(
+            c.mttr_s > 0.0 && c.mttr_s.is_finite(),
+            "chaos.mttr_s must be > 0"
+        );
+        anyhow::ensure!(
+            c.detection_us >= 0.0 && c.detection_us.is_finite(),
+            "chaos.detection_us must be ≥ 0"
+        );
+        anyhow::ensure!(
+            c.reinit_ms >= 0.0 && c.reinit_ms.is_finite(),
+            "chaos.reinit_ms must be ≥ 0"
+        );
+        anyhow::ensure!(c.ckpt_interval >= 1, "chaos.ckpt_interval must be ≥ 1");
+        anyhow::ensure!(
+            c.reload_s >= 0.0 && c.reload_s.is_finite(),
+            "chaos.reload_s must be ≥ 0"
         );
         Ok(())
     }
@@ -328,6 +423,31 @@ mod tests {
         assert!(RunConfig::from_toml_str("preset = \"h800\"").unwrap().gpu_tflops > 0.0);
         let mut bad = RunConfig::new(Preset::H800, 8);
         bad.gpu_tflops = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn chaos_fields_roundtrip_and_validate() {
+        use crate::faults::RecoveryPolicy;
+        let mut cfg = RunConfig::new(Preset::H800, 8);
+        cfg.chaos.mtbf_s = 0.25;
+        cfg.chaos.ckpt_interval = 7;
+        cfg.chaos.policy = RecoveryPolicy::ReLower;
+        cfg.validate().unwrap();
+        let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
+        assert!((back.chaos.mtbf_s - 0.25).abs() < 1e-9);
+        assert_eq!(back.chaos.ckpt_interval, 7);
+        assert_eq!(back.chaos.policy, RecoveryPolicy::ReLower);
+        // Defaults when keys are absent; bad values rejected.
+        let d = RunConfig::from_toml_str("preset = \"h800\"").unwrap().chaos;
+        assert!((d.mtbf_s - 0.05).abs() < 1e-9);
+        assert_eq!(d.policy, RecoveryPolicy::RerouteStripes);
+        assert!(RunConfig::from_toml_str("chaos.policy = \"raid\"").is_err());
+        let mut bad = RunConfig::new(Preset::H800, 8);
+        bad.chaos.ckpt_interval = 0;
+        assert!(bad.validate().is_err());
+        bad = RunConfig::new(Preset::H800, 8);
+        bad.chaos.mttr_s = -1.0;
         assert!(bad.validate().is_err());
     }
 

@@ -1,0 +1,481 @@
+//! The chaos harness: a training-step loop driven against one fault
+//! timeline, once per recovery policy.
+//!
+//! [`run_chaos`] walks virtual time step by step. Each step compiles the
+//! collective over the *current* share state (and, after a `ReLower`
+//! node shrink, the current surviving cluster), lowers the timeline's
+//! still-relevant faults to engine rate events relative to the step's
+//! start ([`super::timeline_events`]), and executes under
+//! [`crate::sim::run_with_events`]. A clean step advances the clock by
+//! its makespan; an aborted step hands the failure instant to the
+//! recovery policy, which advances the clock by its own cost model
+//! ([`super::RecoverySpec`]) and mutates the share / cluster state.
+//! Because every policy replays the *same* timeline, the resulting
+//! [`ChaosOutcome`]s compare goodput and time-to-recover apples to
+//! apples (`repro chaos`, EXPERIMENTS.md §Chaos).
+//!
+//! With an empty timeline the loop reduces to `steps` identical
+//! fault-free runs — `run_with_events` delegates to the plain engine, so
+//! the zero-fault chaos path is bit-identical to `cc.run`
+//! (`tests/prop_faults.rs` pins this against the golden traces).
+
+use super::recovery::{RecoveryPolicy, RecoverySpec};
+use super::spec::{timeline_events, FaultSpec, InjectedFault};
+use crate::balancer::shares::Shares;
+use crate::balancer::tier::TierShares;
+use crate::balancer::RuntimeBalancer;
+use crate::collectives::hierarchical::ClusterCollective;
+use crate::collectives::CollectiveKind;
+use crate::config::BalancerConfig;
+use crate::links::calib::Calibration;
+use crate::links::StripeId;
+use crate::sim::SimTime;
+use crate::topology::cluster::{Cluster, ClusterSpec};
+use anyhow::{bail, Context, Result};
+
+/// A named bundle of fault processes — the unit the `repro chaos` sweep
+/// schedules and replays per policy.
+#[derive(Debug, Clone)]
+pub struct ChaosScenario {
+    pub name: String,
+    pub specs: Vec<FaultSpec>,
+}
+
+impl ChaosScenario {
+    /// NIC deaths only, over every NIC of the cluster — the scenario the
+    /// acceptance ordering (reroute ≻ relower ≻ ckpt) is stated on.
+    pub fn nic_death(n_nodes: usize, n_nics: usize, mtbf_s: f64, mttr_s: f64) -> Self {
+        ChaosScenario {
+            name: "nic-death".into(),
+            specs: vec![FaultSpec::any_nic_death(n_nodes, n_nics, mtbf_s, mttr_s)],
+        }
+    }
+
+    /// NIC deaths plus non-fatal noise: sustained NVLink degradation and
+    /// NIC rate jitter. The noise stretches steps without aborting them,
+    /// so `degraded_steps` separates from `failures` in the report.
+    pub fn mixed(n_nodes: usize, n_nics: usize, mtbf_s: f64, mttr_s: f64) -> Self {
+        ChaosScenario {
+            name: "mixed".into(),
+            specs: vec![
+                FaultSpec::any_nic_death(n_nodes, n_nics, mtbf_s, mttr_s),
+                FaultSpec::link_degrade("node0.nvlink", 0.6, mtbf_s * 2.0, mttr_s),
+                FaultSpec::link_jitter("nic.up", 0.7, 0.95, mtbf_s, mttr_s * 0.5),
+            ],
+        }
+    }
+}
+
+/// A fixed two-fault timeline scaled to the fault-free step time `t0`:
+/// one NIC death landing mid-step-3-ish and never repairing within the
+/// run, one NVLink degradation window. Deterministic by construction
+/// (no RNG), so `repro chaos --smoke` is stable across seeds — the CI
+/// tier-1 smoke and the acceptance ordering test both use it.
+pub fn smoke_timeline(t0: SimTime) -> Vec<InjectedFault> {
+    let s = t0.as_secs_f64();
+    vec![
+        InjectedFault::nic_death(
+            0,
+            1,
+            SimTime::from_secs_f64(s * 2.5),
+            SimTime::from_secs_f64(s * 200.0),
+        ),
+        InjectedFault::degrade(
+            "node1.nvlink",
+            0.6,
+            SimTime::from_secs_f64(s * 5.0),
+            SimTime::from_secs_f64(s * 7.0),
+        ),
+    ]
+}
+
+/// What one policy's replay of a timeline produced.
+#[derive(Debug, Clone)]
+pub struct ChaosOutcome {
+    pub policy: RecoveryPolicy,
+    pub msg_bytes: u64,
+    /// Steps the trainer banked (always the requested count on success).
+    pub steps: usize,
+    /// Aborted collective attempts (one fault can abort several).
+    pub failures: usize,
+    /// Timeline entries whose injection fell inside the run's horizon.
+    pub faults_injected: usize,
+    /// Fault-instant → next-banked-step spans, one per outage.
+    pub recoveries: Vec<SimTime>,
+    /// Clean steps that still ran > 0.1% over the fault-free step time
+    /// (degradation windows, post-recovery reduced stripe counts).
+    pub degraded_steps: usize,
+    /// Total virtual time to bank all steps.
+    pub virtual_time: SimTime,
+    /// Fault-free single-step makespan (the goodput baseline).
+    pub fault_free_step: SimTime,
+    /// Collective attempts, successful or aborted.
+    pub attempts: usize,
+}
+
+impl ChaosOutcome {
+    /// Banked training bytes per virtual second, in GB/s.
+    pub fn goodput_gbps(&self) -> f64 {
+        let s = self.virtual_time.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        (self.steps as f64 * self.msg_bytes as f64) / s / 1e9
+    }
+
+    /// The same metric for a fault-free run (every step at `t0`).
+    pub fn fault_free_gbps(&self) -> f64 {
+        let s = self.fault_free_step.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.msg_bytes as f64 / s / 1e9
+    }
+
+    /// Goodput as a fraction of fault-free (1.0 = no loss).
+    pub fn goodput_ratio(&self) -> f64 {
+        let ff = self.fault_free_gbps();
+        if ff <= 0.0 {
+            return 0.0;
+        }
+        self.goodput_gbps() / ff
+    }
+
+    /// Mean time-to-recover across outages; `None` if none occurred.
+    pub fn mean_ttr(&self) -> Option<SimTime> {
+        if self.recoveries.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.recoveries.iter().map(|t| t.0).sum();
+        Some(SimTime(sum / self.recoveries.len() as u64))
+    }
+}
+
+/// Replay `timeline` through a `steps`-step training loop under one
+/// recovery policy. See the module docs for the step/recovery state
+/// machine; the policy-specific abort handling is inline below.
+#[allow(clippy::too_many_arguments)]
+pub fn run_chaos(
+    cluster: &Cluster,
+    calib: Calibration,
+    kind: CollectiveKind,
+    msg_bytes: u64,
+    steps: usize,
+    timeline: &[InjectedFault],
+    rec: &RecoverySpec,
+    cfg: &BalancerConfig,
+) -> Result<ChaosOutcome> {
+    anyhow::ensure!(
+        cluster.n_nodes() >= 2,
+        "chaos runs price multi-node clusters (n_nodes >= 2)"
+    );
+    anyhow::ensure!(steps > 0, "need at least one step");
+    let nl = cluster.gpus_per_node();
+    let tiers0 = TierShares::new(Shares::nvlink_only(), nl);
+    // Fault-free reference step (also the zero-fault bit-identity anchor:
+    // with an empty timeline every loop step takes exactly this path).
+    let t0 = ClusterCollective::new(cluster, calib.clone(), kind, nl)
+        .run(msg_bytes, &tiers0, 4)?
+        .total;
+    anyhow::ensure!(t0 > SimTime::ZERO, "degenerate fault-free step");
+    let degraded_floor = SimTime::from_secs_f64(t0.as_secs_f64() * 1.001);
+
+    let mut current = tiers0.clone();
+    let mut inter_rb = RuntimeBalancer::with_preferred(cfg.clone(), tiers0.inter.clone(), None);
+    // `ReLower` node death swaps in a shrunken cluster; all collective
+    // borrows stay inside the per-step scope below so the swap is legal.
+    let mut shrunk: Option<Cluster> = None;
+    let mut now = SimTime::ZERO;
+    let mut completed = 0usize;
+    let mut failures = 0usize;
+    let mut degraded = 0usize;
+    let mut recoveries: Vec<SimTime> = Vec::new();
+    let mut pending_fail: Option<SimTime> = None;
+    let mut attempts = 0usize;
+    // Every abort either removes a fault's route from the lowering or
+    // advances the clock past its repair, so the loop terminates; the
+    // guard turns a modeling bug into an error instead of a hang.
+    let max_attempts = steps * 8 + 64;
+
+    while completed < steps {
+        attempts += 1;
+        if attempts > max_attempts {
+            bail!(
+                "chaos loop did not converge after {max_attempts} attempts \
+                 ({completed}/{steps} steps banked)"
+            );
+        }
+        let (run, cur_nn) = {
+            let active: &Cluster = shrunk.as_ref().unwrap_or(cluster);
+            let cc = ClusterCollective::new(active, calib.clone(), kind, nl);
+            let events = timeline_events(timeline, &active.pool, now);
+            (
+                cc.run_under_faults(msg_bytes, &current, 4, &events)?,
+                active.n_nodes(),
+            )
+        };
+
+        if run.ok() {
+            let dt = run.report.total;
+            now = now + dt;
+            completed += 1;
+            if dt > degraded_floor {
+                degraded += 1;
+            }
+            if let Some(tf) = pending_fail.take() {
+                recoveries.push(now.saturating_sub(tf));
+            }
+            // Only RerouteStripes keeps adapting between faults — the
+            // stage-2 balancer equalizes the surviving stripes. ReLower
+            // trusts its recompiled distribution; CheckpointRestart has
+            // no communication-layer agency at all.
+            if rec.policy == RecoveryPolicy::RerouteStripes
+                && inter_rb.observe(run.report.inter_times.clone()).is_some()
+            {
+                current.inter = inter_rb.shares().clone();
+            }
+            continue;
+        }
+
+        // Aborted step: no bytes banked, clock moves to the failure
+        // instant and then by the policy's recovery cost.
+        failures += 1;
+        let tf_abs = now + run.first_failure.context("failed run lacks first_failure")?;
+        pending_fail.get_or_insert(tf_abs);
+        let culprits: Vec<&InjectedFault> = timeline
+            .iter()
+            .filter(|f| f.is_death() && f.at <= tf_abs && tf_abs < f.until)
+            .collect();
+
+        match rec.policy {
+            RecoveryPolicy::RerouteStripes => {
+                now = tf_abs + rec.detection;
+                for f in &culprits {
+                    if let Some(s) = f.target.stripe {
+                        let dead = StripeId(s);
+                        let into = inter_rb
+                            .shares()
+                            .active_paths()
+                            .into_iter()
+                            .find(|x| *x != dead)
+                            .context("no surviving NIC stripe to reroute onto")?;
+                        if inter_rb.force_deactivate(dead, into) > 0.0 {
+                            current.inter = inter_rb.shares().clone();
+                        }
+                    } else if f.target.node.is_some() {
+                        bail!(
+                            "RerouteStripes cannot survive node death — \
+                             use the relower or ckpt policy"
+                        );
+                    } else {
+                        // A dead link with no modeled alternative (e.g.
+                        // an NVLink lane): nothing to reroute onto, so
+                        // the policy degrades to waiting out the repair.
+                        now = now.max(f.until);
+                    }
+                }
+            }
+            RecoveryPolicy::ReLower => {
+                now = tf_abs + rec.detection + rec.reinit;
+                for f in &culprits {
+                    if let Some(s) = f.target.stripe {
+                        current = current
+                            .without_stripe(StripeId(s))
+                            .context("no surviving NIC stripe to re-lower over")?;
+                    } else if f.target.node.is_some() {
+                        anyhow::ensure!(
+                            cur_nn > 2,
+                            "cannot re-lower below 2 nodes (node death at {} nodes)",
+                            cur_nn
+                        );
+                        // Survivors are relabeled densely (node k's
+                        // resources renamed) — a modeling artifact that
+                        // keeps the topology builder unchanged. Repaired
+                        // nodes never rejoin: no elastic regrow, which is
+                        // conservative for this policy's goodput.
+                        shrunk = Some(Cluster::build(&ClusterSpec::new(
+                            cur_nn - 1,
+                            cluster.spec.node.clone(),
+                        )));
+                    } else {
+                        now = now.max(f.until);
+                    }
+                }
+                // Reinit wipes runtime balancer state along with the
+                // communicator.
+                inter_rb =
+                    RuntimeBalancer::with_preferred(cfg.clone(), current.inter.clone(), None);
+            }
+            RecoveryPolicy::CheckpointRestart => {
+                // The trainer has no comm-layer agency: wait until the
+                // hardware is repaired, reload the checkpoint, recompute
+                // everything since the last checkpoint boundary. The
+                // lost steps naturally re-run through the loop,
+                // consuming virtual time a second time.
+                let repair = culprits.iter().map(|f| f.until).max().unwrap_or(tf_abs);
+                now = (tf_abs + rec.detection).max(repair) + rec.reload;
+                let lost = completed % rec.ckpt_interval.max(1);
+                completed -= lost;
+            }
+        }
+    }
+
+    let faults_injected = timeline.iter().filter(|f| f.at < now).count();
+    Ok(ChaosOutcome {
+        policy: rec.policy,
+        msg_bytes,
+        steps: completed,
+        failures,
+        faults_injected,
+        recoveries,
+        degraded_steps: degraded,
+        virtual_time: now,
+        fault_free_step: t0,
+        attempts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+    use crate::config::ChaosConfig;
+
+    fn cluster(nn: usize) -> Cluster {
+        Cluster::build(&ClusterSpec::new(nn, Preset::H800.spec()))
+    }
+
+    fn rec(policy: RecoveryPolicy) -> RecoverySpec {
+        RecoverySpec::from_config(policy, &ChaosConfig::default())
+    }
+
+    const MSG: u64 = 1 << 20;
+
+    #[test]
+    fn empty_timeline_runs_all_steps_at_fault_free_time() {
+        let c = cluster(2);
+        let out = run_chaos(
+            &c,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            MSG,
+            4,
+            &[],
+            &rec(RecoveryPolicy::RerouteStripes),
+            &BalancerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(out.steps, 4);
+        assert_eq!(out.failures, 0);
+        assert_eq!(out.degraded_steps, 0);
+        assert_eq!(out.attempts, 4);
+        assert!(out.recoveries.is_empty());
+        assert_eq!(out.virtual_time, SimTime(out.fault_free_step.0 * 4));
+        assert!((out.goodput_ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nic_death_reroute_recovers_and_degrades() {
+        let c = cluster(2);
+        let t0 = ClusterCollective::new(&c, Calibration::h800(), CollectiveKind::AllReduce, 8)
+            .run(MSG, &TierShares::new(Shares::nvlink_only(), 8), 4)
+            .unwrap()
+            .total;
+        let tl = smoke_timeline(t0);
+        let out = run_chaos(
+            &c,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            MSG,
+            6,
+            &tl,
+            &rec(RecoveryPolicy::RerouteStripes),
+            &BalancerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(out.steps, 6);
+        assert!(out.failures >= 1, "the NIC death aborts at least one step");
+        assert_eq!(out.recoveries.len(), 1, "one outage, one recovery span");
+        assert!(out.mean_ttr().unwrap() > SimTime::ZERO);
+        // Post-reroute steps run on 7 stripes → slower than fault-free.
+        assert!(out.degraded_steps >= 1);
+        assert!(out.goodput_ratio() < 1.0);
+        // Loose floor: the 1 ms default detection latency dwarfs a 1 MiB
+        // step time, so the ratio is dominated by the single outage.
+        assert!(out.goodput_ratio() > 0.02, "reroute keeps real goodput");
+    }
+
+    #[test]
+    fn node_death_relower_shrinks_cluster_and_ckpt_waits() {
+        let c = cluster(3);
+        let t0 = ClusterCollective::new(&c, Calibration::h800(), CollectiveKind::AllReduce, 8)
+            .run(MSG, &TierShares::new(Shares::nvlink_only(), 8), 4)
+            .unwrap()
+            .total;
+        let s = t0.as_secs_f64();
+        let tl = vec![InjectedFault::node_death(
+            2,
+            SimTime::from_secs_f64(s * 1.5),
+            SimTime::from_secs_f64(s * 40.0),
+        )];
+        let relower = run_chaos(
+            &c,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            MSG,
+            5,
+            &tl,
+            &rec(RecoveryPolicy::ReLower),
+            &BalancerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(relower.steps, 5);
+        assert!(relower.failures >= 1);
+        // Recompiled over 2 survivors: the loop finished without the dead
+        // node, and the post-shrink steps are degraded vs 3-node t0 only
+        // if slower — either way the run converged, which is the point.
+        let ckpt = run_chaos(
+            &c,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            MSG,
+            5,
+            &tl,
+            &rec(RecoveryPolicy::CheckpointRestart),
+            &BalancerConfig::default(),
+        )
+        .unwrap();
+        assert!(ckpt.failures >= 1);
+        // Ckpt waits out the ~40·t0 repair; relower pays only
+        // detection + reinit and recompiles.
+        assert!(
+            relower.virtual_time < ckpt.virtual_time,
+            "relower {:?} should beat ckpt {:?}",
+            relower.virtual_time,
+            ckpt.virtual_time
+        );
+        assert!(relower.goodput_gbps() > ckpt.goodput_gbps());
+    }
+
+    #[test]
+    fn reroute_rejects_node_death() {
+        let c = cluster(2);
+        let tl = vec![InjectedFault::node_death(
+            1,
+            SimTime::from_secs_f64(1e-6),
+            SimTime::from_secs_f64(1e3),
+        )];
+        let err = run_chaos(
+            &c,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            MSG,
+            2,
+            &tl,
+            &rec(RecoveryPolicy::RerouteStripes),
+            &BalancerConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("node death"));
+    }
+}

@@ -1,0 +1,47 @@
+//! Fault injection and recovery — chaos engineering for the DES.
+//!
+//! Production scale is defined by behavior under failure, not peak
+//! algbw (*Collective Communication for 100k+ GPUs*, Si et al., devotes
+//! as much text to fault reconfiguration as to routing). This module
+//! turns the simulator into a chaos testbed in three layers:
+//!
+//! * [`spec`] — the **fault model**: [`FaultSpec`] processes (link-rate
+//!   jitter, link/NIC degradation, link/NIC/node death) with MTBF/MTTR
+//!   exponentials drawn from the seeded SplitMix64 stream
+//!   ([`crate::util::rng`]), so a chaos timeline is a deterministic
+//!   function of `(specs, horizon, seed)`. Concrete [`InjectedFault`]s
+//!   lower to engine [`crate::sim::RateEvent`]s against nominal pool
+//!   capacities — injection scales a target's capacity (0 = death),
+//!   repair restores nominal.
+//!
+//! * the **DES integration** — [`crate::sim::run_with_events`] executes
+//!   a task graph under the event timeline: the fair-share solver
+//!   re-converges at each mutation timestamp, in-flight transfers over a
+//!   dead resource fail at the fault instant, and transfers activating
+//!   onto a dead route fail immediately (dslab-style event-driven
+//!   mutation of the shared resource state). With an empty timeline it
+//!   delegates to the plain engine, so the zero-fault chaos path is
+//!   bit-identical to the fault-free one (`tests/prop_faults.rs`).
+//!
+//! * [`recovery`] + [`chaos`] — **recovery policies** and the step-loop
+//!   harness. [`RecoveryPolicy::RerouteStripes`] folds the dead NIC's
+//!   stripe share into the survivors through the existing
+//!   [`crate::balancer::RuntimeBalancer`] (FlexLink's multipath striping
+//!   is what makes this cheap — a ring has nowhere to reroute);
+//!   [`RecoveryPolicy::ReLower`] aborts and recompiles the collective
+//!   over the surviving ranks (NCCL abort+reinit style, priced by a
+//!   reinit cost; node death shrinks the cluster);
+//!   [`RecoveryPolicy::CheckpointRestart`] is the trainer-level
+//!   baseline — wait out the repair, reload, and recompute the steps
+//!   lost since the last checkpoint. [`chaos::run_chaos`] walks a
+//!   training-step loop against one timeline per policy and reports
+//!   time-to-recover and goodput vs fault-free (`repro chaos` on the
+//!   CLI, EXPERIMENTS.md §Chaos).
+
+pub mod chaos;
+pub mod recovery;
+pub mod spec;
+
+pub use chaos::{run_chaos, ChaosOutcome, ChaosScenario};
+pub use recovery::{RecoveryPolicy, RecoverySpec};
+pub use spec::{schedule, timeline_events, FaultKind, FaultSpec, FaultTarget, InjectedFault};

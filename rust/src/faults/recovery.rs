@@ -1,0 +1,131 @@
+//! Recovery policies and their cost knobs.
+//!
+//! A death fault aborts the in-flight collective; what happens next — and
+//! what it costs — is the policy:
+//!
+//! * [`RecoveryPolicy::RerouteStripes`] — pay only *detection*: fold the
+//!   dead NIC's stripe share into the survivors through the runtime
+//!   balancer and keep going with the same compiled structure. FlexLink's
+//!   multipath striping makes this the cheap path — a plain ring has no
+//!   second stripe to reroute onto.
+//! * [`RecoveryPolicy::ReLower`] — pay detection + *reinit*: abort the
+//!   communicator and recompile the collective over the surviving ranks
+//!   (NCCL abort+reinit style). Handles node death, which pure stripe
+//!   rerouting cannot.
+//! * [`RecoveryPolicy::CheckpointRestart`] — the trainer-level baseline:
+//!   wait out the repair, pay *reload*, and recompute every step since
+//!   the last checkpoint. No communication-layer intelligence at all.
+//!
+//! The cost knobs live in [`RecoverySpec`] and come from
+//! `[chaos]` config ([`crate::config::ChaosConfig`]).
+
+use crate::config::ChaosConfig;
+use crate::sim::SimTime;
+use std::fmt;
+use std::str::FromStr;
+
+/// What the system does after a death fault aborts a collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Rebalance stripe shares off the dead NIC (comm-layer, no reinit).
+    RerouteStripes,
+    /// Abort + recompile over surviving ranks (comm-layer, pays reinit).
+    ReLower,
+    /// Wait out repair, reload checkpoint, recompute lost steps.
+    CheckpointRestart,
+}
+
+impl RecoveryPolicy {
+    /// All policies, in cheapest-first order (the `repro chaos` sweep
+    /// compares them over one shared timeline).
+    pub const ALL: [RecoveryPolicy; 3] = [
+        RecoveryPolicy::RerouteStripes,
+        RecoveryPolicy::ReLower,
+        RecoveryPolicy::CheckpointRestart,
+    ];
+}
+
+impl FromStr for RecoveryPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "reroute" | "reroute_stripes" => Ok(RecoveryPolicy::RerouteStripes),
+            "relower" | "re_lower" => Ok(RecoveryPolicy::ReLower),
+            "ckpt" | "checkpoint" | "checkpoint_restart" => Ok(RecoveryPolicy::CheckpointRestart),
+            other => Err(format!(
+                "unknown recovery policy '{other}' (expected reroute|relower|ckpt)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for RecoveryPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            RecoveryPolicy::RerouteStripes => "reroute",
+            RecoveryPolicy::ReLower => "relower",
+            RecoveryPolicy::CheckpointRestart => "ckpt",
+        })
+    }
+}
+
+/// A policy plus its cost model.
+#[derive(Debug, Clone)]
+pub struct RecoverySpec {
+    pub policy: RecoveryPolicy,
+    /// Time from fault instant to the system *noticing* (health-check /
+    /// timeout latency). Every policy pays it.
+    pub detection: SimTime,
+    /// Communicator teardown + re-setup cost (`ReLower` only).
+    pub reinit: SimTime,
+    /// Steps between trainer checkpoints (`CheckpointRestart`: everything
+    /// since the last multiple is recomputed).
+    pub ckpt_interval: usize,
+    /// Checkpoint reload cost (`CheckpointRestart` only).
+    pub reload: SimTime,
+}
+
+impl RecoverySpec {
+    /// Bind a policy to the `[chaos]` config's cost knobs.
+    pub fn from_config(policy: RecoveryPolicy, cfg: &ChaosConfig) -> Self {
+        RecoverySpec {
+            policy,
+            detection: SimTime::from_secs_f64(cfg.detection_us * 1e-6),
+            reinit: SimTime::from_secs_f64(cfg.reinit_ms * 1e-3),
+            ckpt_interval: cfg.ckpt_interval.max(1),
+            reload: SimTime::from_secs_f64(cfg.reload_s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_display_roundtrip() {
+        for p in RecoveryPolicy::ALL {
+            assert_eq!(p.to_string().parse::<RecoveryPolicy>().unwrap(), p);
+        }
+        assert_eq!(
+            "reroute_stripes".parse::<RecoveryPolicy>().unwrap(),
+            RecoveryPolicy::RerouteStripes
+        );
+        assert_eq!(
+            "CHECKPOINT".parse::<RecoveryPolicy>().unwrap(),
+            RecoveryPolicy::CheckpointRestart
+        );
+        assert!("raid".parse::<RecoveryPolicy>().is_err());
+    }
+
+    #[test]
+    fn spec_from_config_converts_units() {
+        let cfg = ChaosConfig::default();
+        let spec = RecoverySpec::from_config(RecoveryPolicy::ReLower, &cfg);
+        assert_eq!(spec.policy, RecoveryPolicy::ReLower);
+        assert!((spec.detection.as_secs_f64() - cfg.detection_us * 1e-6).abs() < 1e-12);
+        assert!((spec.reinit.as_secs_f64() - cfg.reinit_ms * 1e-3).abs() < 1e-9);
+        assert!(spec.ckpt_interval >= 1);
+    }
+}

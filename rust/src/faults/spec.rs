@@ -1,0 +1,449 @@
+//! The fault model: stochastic fault processes and their deterministic
+//! lowering to engine rate events.
+//!
+//! A [`FaultSpec`] is one fault *process* — which resources it can hit,
+//! what it does to them ([`FaultKind`]), and its MTBF/MTTR exponentials.
+//! [`schedule`] draws a concrete timeline of [`InjectedFault`]s from the
+//! seeded SplitMix64 stream (one independent substream per spec, so
+//! adding a process never perturbs another's draws), and
+//! [`timeline_events`] lowers the timeline to the sorted
+//! [`RateEvent`]s [`crate::sim::run_with_events`] consumes: injection
+//! scales each target resource to `factor × nominal` (0 = death), repair
+//! restores nominal capacity.
+//!
+//! Simplifications, stated rather than hidden: repairs restore *nominal*
+//! capacity, so when two faults overlap on one resource the earliest
+//! repair already restores it (last event wins); repaired resources
+//! rejoin the pool but recovery policies do not re-activate dropped
+//! stripes (no elastic regrow — conservative for the policies' goodput).
+
+use crate::sim::{RateEvent, ResourcePool, SimTime};
+use crate::util::rng::Rng;
+
+/// What a fault does to its target resources while active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Transient rate jitter (straggler links): capacity scaled by a
+    /// factor drawn uniformly from `[lo, hi)` per event.
+    RateJitter { lo: f64, hi: f64 },
+    /// Sustained degradation to `factor × nominal` (0 < factor < 1) —
+    /// a flapping NIC, a downtrained PCIe lane.
+    Degrade { factor: f64 },
+    /// Hard death: capacity → 0 until repair. In-flight transfers over
+    /// the target fail (the engine marks their tasks failed) and the
+    /// collective aborts — recovery is the policy layer's job.
+    Death,
+}
+
+/// The resource set one fault event hits, plus what the recovery layer
+/// needs to know about it (which NIC stripe it disables, which node it
+/// takes down). Needles are pool-name substrings resolved at lowering
+/// time, so one target can cover both directions of a NIC.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultTarget {
+    /// Pool-name substrings zeroed/scaled together.
+    pub needles: Vec<String>,
+    /// NIC stripe this target disables, when it is a NIC — drives the
+    /// `RerouteStripes` / `ReLower` stripe surgery.
+    pub stripe: Option<u32>,
+    /// Node index this target kills entirely, when it is a node —
+    /// drives communicator shrink under `ReLower`.
+    pub node: Option<usize>,
+}
+
+impl FaultTarget {
+    /// Both directions of NIC `nic` on node `node` (the per-GPU NIC of
+    /// the H800 topology: `node{k}.nic.{up,down}.gpu{g}`).
+    pub fn nic(node: usize, nic: usize) -> Self {
+        FaultTarget {
+            needles: vec![
+                format!("node{node}.nic.up.gpu{nic}"),
+                format!("node{node}.nic.down.gpu{nic}"),
+            ],
+            stripe: Some(nic as u32),
+            node: None,
+        }
+    }
+
+    /// Every resource of node `node` (NVLink, PCIe, NICs, host memory).
+    pub fn node(node: usize) -> Self {
+        FaultTarget {
+            needles: vec![format!("node{node}.")],
+            stripe: None,
+            node: Some(node),
+        }
+    }
+
+    /// An arbitrary link set by name substring (e.g. `"node1.nvlink"`).
+    pub fn link(needle: impl Into<String>) -> Self {
+        FaultTarget {
+            needles: vec![needle.into()],
+            stripe: None,
+            node: None,
+        }
+    }
+}
+
+/// One fault process: candidate targets (each event draws one
+/// uniformly), the fault kind, and MTBF/MTTR means in sim-seconds.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Label for reports ("nic-death", "nvlink-jitter", ...).
+    pub name: String,
+    pub kind: FaultKind,
+    pub targets: Vec<FaultTarget>,
+    /// Mean time between failures (exponential inter-arrival), seconds.
+    pub mtbf_s: f64,
+    /// Mean time to repair (exponential duration), seconds.
+    pub mttr_s: f64,
+}
+
+impl FaultSpec {
+    pub fn new(
+        name: impl Into<String>,
+        kind: FaultKind,
+        targets: Vec<FaultTarget>,
+        mtbf_s: f64,
+        mttr_s: f64,
+    ) -> Self {
+        assert!(mtbf_s > 0.0 && mtbf_s.is_finite(), "MTBF must be positive");
+        assert!(mttr_s > 0.0 && mttr_s.is_finite(), "MTTR must be positive");
+        assert!(!targets.is_empty(), "fault spec needs at least one target");
+        if let FaultKind::Degrade { factor } = kind {
+            assert!((0.0..1.0).contains(&factor), "degrade factor in (0, 1)");
+            assert!(factor > 0.0, "factor 0 is Death, not Degrade");
+        }
+        if let FaultKind::RateJitter { lo, hi } = kind {
+            assert!(0.0 < lo && lo <= hi && hi <= 1.0, "jitter range in (0, 1]");
+        }
+        FaultSpec {
+            name: name.into(),
+            kind,
+            targets,
+            mtbf_s,
+            mttr_s,
+        }
+    }
+
+    /// Death process over every NIC of an `n_nodes × n_nics` cluster.
+    pub fn any_nic_death(n_nodes: usize, n_nics: usize, mtbf_s: f64, mttr_s: f64) -> Self {
+        let targets = (0..n_nodes)
+            .flat_map(|k| (0..n_nics).map(move |g| FaultTarget::nic(k, g)))
+            .collect();
+        FaultSpec::new("nic-death", FaultKind::Death, targets, mtbf_s, mttr_s)
+    }
+
+    /// Death process over whole nodes.
+    pub fn any_node_death(n_nodes: usize, mtbf_s: f64, mttr_s: f64) -> Self {
+        let targets = (0..n_nodes).map(FaultTarget::node).collect();
+        FaultSpec::new("node-death", FaultKind::Death, targets, mtbf_s, mttr_s)
+    }
+
+    /// Sustained degradation on a named link set.
+    pub fn link_degrade(needle: &str, factor: f64, mtbf_s: f64, mttr_s: f64) -> Self {
+        FaultSpec::new(
+            format!("degrade:{needle}"),
+            FaultKind::Degrade { factor },
+            vec![FaultTarget::link(needle)],
+            mtbf_s,
+            mttr_s,
+        )
+    }
+
+    /// Transient rate jitter on a named link set.
+    pub fn link_jitter(needle: &str, lo: f64, hi: f64, mtbf_s: f64, mttr_s: f64) -> Self {
+        FaultSpec::new(
+            format!("jitter:{needle}"),
+            FaultKind::RateJitter { lo, hi },
+            vec![FaultTarget::link(needle)],
+            mtbf_s,
+            mttr_s,
+        )
+    }
+}
+
+/// One concrete injected fault: absolute injection/repair times, the
+/// drawn target, and the resolved capacity factor (0 = death).
+#[derive(Debug, Clone)]
+pub struct InjectedFault {
+    /// Name of the spec that drew it (or a label for hand-built faults).
+    pub spec: String,
+    pub kind: FaultKind,
+    pub at: SimTime,
+    pub until: SimTime,
+    pub target: FaultTarget,
+    /// Capacity multiplier vs nominal during `[at, until)`.
+    pub factor: f64,
+}
+
+impl InjectedFault {
+    /// True when this fault zeroes its targets (aborts collectives).
+    pub fn is_death(&self) -> bool {
+        self.factor <= 0.0
+    }
+
+    /// Hand-built NIC death (deterministic scenarios, smoke tests).
+    pub fn nic_death(node: usize, nic: usize, at: SimTime, until: SimTime) -> Self {
+        assert!(at < until);
+        InjectedFault {
+            spec: "nic-death".into(),
+            kind: FaultKind::Death,
+            at,
+            until,
+            target: FaultTarget::nic(node, nic),
+            factor: 0.0,
+        }
+    }
+
+    /// Hand-built node death.
+    pub fn node_death(node: usize, at: SimTime, until: SimTime) -> Self {
+        assert!(at < until);
+        InjectedFault {
+            spec: "node-death".into(),
+            kind: FaultKind::Death,
+            at,
+            until,
+            target: FaultTarget::node(node),
+            factor: 0.0,
+        }
+    }
+
+    /// Hand-built degradation window on a named link set.
+    pub fn degrade(needle: &str, factor: f64, at: SimTime, until: SimTime) -> Self {
+        assert!(at < until);
+        assert!(factor > 0.0 && factor < 1.0);
+        InjectedFault {
+            spec: format!("degrade:{needle}"),
+            kind: FaultKind::Degrade { factor },
+            at,
+            until,
+            target: FaultTarget::link(needle),
+            factor,
+        }
+    }
+}
+
+/// Exponential draw with the given mean (inverse-CDF over the SplitMix64
+/// uniform; `1 - u ∈ (0, 1]` keeps the log finite).
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean
+}
+
+/// Draw a deterministic fault timeline over `[0, horizon)`.
+///
+/// Each spec renews independently: exponential MTBF inter-arrival, then
+/// an exponential MTTR repair duration; the next arrival counts from the
+/// repair (a resource cannot re-fail while already failed). Each event
+/// draws its target uniformly from the spec's candidates and resolves
+/// its capacity factor (jitter draws per event). The result is sorted by
+/// injection time and is a pure function of `(specs, horizon, seed)`.
+pub fn schedule(specs: &[FaultSpec], horizon: SimTime, seed: u64) -> Vec<InjectedFault> {
+    let mut out = Vec::new();
+    let end = horizon.as_secs_f64();
+    for (si, spec) in specs.iter().enumerate() {
+        // Independent substream per spec (SplitMix64's own increment
+        // constant spreads the seeds).
+        let mut rng =
+            Rng::seed_from_u64(seed ^ (si as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut t = 0.0f64;
+        loop {
+            t += exp_sample(&mut rng, spec.mtbf_s);
+            if t >= end {
+                break;
+            }
+            let dur = exp_sample(&mut rng, spec.mttr_s).max(1e-9);
+            let target =
+                spec.targets[rng.below(spec.targets.len() as u64) as usize].clone();
+            let factor = match spec.kind {
+                FaultKind::Death => 0.0,
+                FaultKind::Degrade { factor } => factor,
+                FaultKind::RateJitter { lo, hi } => lo + rng.f64() * (hi - lo),
+            };
+            out.push(InjectedFault {
+                spec: spec.name.clone(),
+                kind: spec.kind,
+                at: SimTime::from_secs_f64(t),
+                until: SimTime::from_secs_f64(t + dur),
+                target,
+                factor,
+            });
+            t += dur;
+        }
+    }
+    out.sort_by(|a, b| a.at.cmp(&b.at).then(a.spec.cmp(&b.spec)));
+    out
+}
+
+/// Lower the faults still relevant at `t0` to engine [`RateEvent`]s
+/// *relative to* `t0` (a step's own virtual clock), against nominal
+/// capacities read from `nominal`.
+///
+/// For every fault with `until > t0`: an injection event at
+/// `max(at, t0) − t0` setting each matching resource to
+/// `factor × nominal` (so a fault already active at `t0` lands at
+/// relative time 0 — the step starts on degraded hardware), and a repair
+/// event at `until − t0` restoring nominal. Faults whose needles match
+/// nothing in `nominal` are skipped (e.g. a fault addressed to a node
+/// that a shrink already removed). The result is time-sorted, ready for
+/// [`crate::sim::run_with_events`]; events beyond the step's makespan
+/// are simply never reached.
+pub fn timeline_events(
+    faults: &[InjectedFault],
+    nominal: &ResourcePool,
+    t0: SimTime,
+) -> Vec<RateEvent> {
+    let mut evs: Vec<RateEvent> = Vec::new();
+    for f in faults {
+        if f.until <= t0 {
+            continue;
+        }
+        let mut set_fault = Vec::new();
+        let mut set_repair = Vec::new();
+        for needle in &f.target.needles {
+            for id in nominal.find_matching(needle) {
+                let cap = nominal.capacity(id);
+                set_fault.push((id, cap * f.factor));
+                set_repair.push((id, cap));
+            }
+        }
+        if set_fault.is_empty() {
+            continue;
+        }
+        evs.push(RateEvent {
+            at: f.at.saturating_sub(t0),
+            set: set_fault,
+        });
+        if f.until < SimTime::NEVER {
+            evs.push(RateEvent {
+                at: f.until.saturating_sub(t0),
+                set: set_repair,
+            });
+        }
+    }
+    // Stable: ties keep injection-before-repair emission order per fault.
+    evs.sort_by_key(|e| e.at);
+    evs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_nic_pool() -> ResourcePool {
+        let mut p = ResourcePool::new();
+        p.add("node0.nic.up.gpu0", 100.0);
+        p.add("node0.nic.down.gpu0", 100.0);
+        p.add("node0.nic.up.gpu1", 100.0);
+        p.add("node0.nic.down.gpu1", 100.0);
+        p.add("node0.nvlink.up.gpu0", 400.0);
+        p
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let specs = vec![
+            FaultSpec::any_nic_death(2, 8, 5.0, 2.0),
+            FaultSpec::link_jitter("nvlink", 0.6, 0.95, 3.0, 1.0),
+        ];
+        let h = SimTime::from_secs_f64(100.0);
+        let a = schedule(&specs, h, 42);
+        let b = schedule(&specs, h, 42);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty(), "100s horizon at 5s/3s MTBF draws events");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.until, y.until);
+            assert_eq!(x.target, y.target);
+            assert_eq!(x.factor, y.factor);
+        }
+        let c = schedule(&specs, h, 43);
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.at != y.at),
+            "different seeds draw different timelines"
+        );
+        // Sorted by injection time; repairs after injections; jitter
+        // factors inside the configured band.
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        for f in &a {
+            assert!(f.at < f.until);
+            if f.kind != FaultKind::Death {
+                assert!((0.6..0.95).contains(&f.factor));
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_mean_interarrival_tracks_mtbf() {
+        let specs = vec![FaultSpec::any_nic_death(1, 1, 4.0, 0.5)];
+        let h = SimTime::from_secs_f64(20_000.0);
+        let tl = schedule(&specs, h, 7);
+        // Renewal rate = 1/(MTBF + MTTR) = 1/4.5 per second.
+        let expect = 20_000.0 / 4.5;
+        let n = tl.len() as f64;
+        assert!(
+            (n - expect).abs() < expect * 0.1,
+            "drew {n} events, expected ≈{expect}"
+        );
+    }
+
+    #[test]
+    fn timeline_events_resolve_against_nominal() {
+        let pool = two_nic_pool();
+        let f = InjectedFault::nic_death(
+            0,
+            1,
+            SimTime::from_secs_f64(2.0),
+            SimTime::from_secs_f64(5.0),
+        );
+        let evs = timeline_events(&[f], &pool, SimTime::ZERO);
+        assert_eq!(evs.len(), 2);
+        // Injection zeroes both NIC directions; repair restores nominal.
+        assert_eq!(evs[0].at, SimTime::from_secs_f64(2.0));
+        assert_eq!(evs[0].set.len(), 2);
+        assert!(evs[0].set.iter().all(|(_, c)| *c == 0.0));
+        assert_eq!(evs[1].at, SimTime::from_secs_f64(5.0));
+        assert!(evs[1].set.iter().all(|(_, c)| *c == 100.0));
+        let hit: Vec<_> = evs[0].set.iter().map(|(id, _)| pool.get(*id).name.clone()).collect();
+        assert!(hit.contains(&"node0.nic.up.gpu1".to_string()));
+        assert!(hit.contains(&"node0.nic.down.gpu1".to_string()));
+    }
+
+    #[test]
+    fn timeline_events_rebase_and_clip_to_window() {
+        let pool = two_nic_pool();
+        let active = InjectedFault::degrade(
+            "node0.nvlink",
+            0.5,
+            SimTime::from_secs_f64(1.0),
+            SimTime::from_secs_f64(8.0),
+        );
+        let past = InjectedFault::nic_death(
+            0,
+            0,
+            SimTime::from_secs_f64(0.5),
+            SimTime::from_secs_f64(2.0),
+        );
+        let t0 = SimTime::from_secs_f64(4.0);
+        let evs = timeline_events(&[past, active], &pool, t0);
+        // The repaired fault is dropped; the active one lands at rel 0
+        // with its repair rebased to 4s.
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].at, SimTime::ZERO);
+        assert!((evs[0].set[0].1 - 200.0).abs() < 1e-9);
+        assert_eq!(evs[1].at, SimTime::from_secs_f64(4.0));
+        assert!((evs[1].set[0].1 - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unmatched_needles_are_skipped() {
+        let pool = two_nic_pool();
+        let ghost = InjectedFault::node_death(
+            7,
+            SimTime::from_secs_f64(1.0),
+            SimTime::from_secs_f64(2.0),
+        );
+        assert!(timeline_events(&[ghost], &pool, SimTime::ZERO).is_empty());
+    }
+}

@@ -97,6 +97,7 @@ pub mod collectives;
 pub mod comm;
 pub mod config;
 pub mod dtype;
+pub mod faults;
 pub mod links;
 pub mod memory;
 pub mod metrics;

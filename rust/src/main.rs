@@ -42,7 +42,7 @@ COMMANDS:
           --overlap buckets the backward pass and hides gradient traffic
           under compute on the stream-ordered DES
   repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|
-           cluster|overlap|concurrent|ablation>
+           cluster|overlap|concurrent|ablation|chaos>
           [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
@@ -53,21 +53,35 @@ COMMANDS:
           vs sequential), `concurrent` prices two communicators
           contending on one shared device, and `ablation` sweeps the
           ring/tree/halving-doubling crossover (8-GPU AllReduce,
-          64 KiB – 256 MiB) against the auto tuner's picks
+          64 KiB – 256 MiB) against the auto tuner's picks, and `chaos`
+          injects a seeded fault timeline (NIC deaths by default) into a
+          training-step loop and compares recovery policies
+          [chaos only: --mtbf <s> --mttr <s> --policy reroute|relower|ckpt
+           --steps <k> --mib <size> --smoke]
+          --smoke replays a fixed deterministic two-fault timeline (the
+          CI tier-1 check); without --policy all three are compared on
+          one shared timeline
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
+
+Global: --seed <u64> seeds every stochastic draw (workload generators,
+chaos fault schedules); identical seeds replay identical runs
 
 Collective kinds: allreduce, allgather, reduce_scatter, broadcast, alltoall
 Presets: h800 (paper testbed), h100, a800, gb200, gb300
 ";
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &["no-rdma", "no-pipeline", "help"])?;
+    let args = Args::parse(
+        std::env::args().skip(1),
+        &["no-rdma", "no-pipeline", "smoke", "help"],
+    )?;
     if args.has("help") {
         print!("{USAGE}");
         return Ok(());
     }
     let preset: Preset = args.parse_or("preset", Preset::H800)?;
+    let seed = args.u64_or("seed", flexlink::config::default_seed())?;
     match args.subcommand.as_deref() {
         Some("bench") => {
             let op: CollectiveKind = args.parse_or("op", CollectiveKind::AllGather)?;
@@ -88,6 +102,7 @@ fn main() -> Result<()> {
             args.usize_or("overlap", 0)?,
             &args.str_or("artifacts", "artifacts"),
             args.flag("csv"),
+            seed,
         ),
         Some("repro") => {
             let what = args
@@ -96,7 +111,7 @@ fn main() -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("table2");
             let nodes = args.flag("nodes").map(|s| s.parse::<usize>()).transpose()?;
-            repro(what, nodes, !args.has("no-pipeline"), args.flag("csv"))
+            repro(what, nodes, !args.has("no-pipeline"), args.flag("csv"), seed, &args)
         }
         Some("topo") => {
             let spec = preset.spec();
@@ -217,6 +232,7 @@ fn tune(preset: Preset, op: CollectiveKind, gpus: usize, mib: u64) -> Result<()>
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn train(
     preset: Preset,
     gpus: usize,
@@ -225,12 +241,14 @@ fn train(
     overlap: usize,
     artifacts: &str,
     csv_path: Option<&str>,
+    seed: u64,
 ) -> Result<()> {
     let mut cfg = TrainerConfig::tiny(CommConfig::new(preset, gpus));
     cfg.model = model.to_string();
     cfg.artifact_dir = artifacts.into();
     cfg.steps = steps;
     cfg.overlap_buckets = overlap;
+    cfg.seed = seed;
     if model == "gpt10m" {
         cfg.batch = 4;
         cfg.seq = 128;
@@ -301,16 +319,32 @@ fn train(
     Ok(())
 }
 
-fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str>) -> Result<()> {
+fn repro(
+    what: &str,
+    nodes: Option<usize>,
+    pipeline: bool,
+    csv_path: Option<&str>,
+    seed: u64,
+    args: &Args,
+) -> Result<()> {
     let topo = Topology::build(&Preset::H800.spec());
     let cfg = BalancerConfig::default();
     anyhow::ensure!(
-        nodes.is_none() || matches!(what, "table2" | "cluster"),
-        "--nodes only applies to the table2 and cluster targets ('{what}' is single-node)"
+        nodes.is_none() || matches!(what, "table2" | "cluster" | "chaos"),
+        "--nodes only applies to the table2, cluster and chaos targets \
+         ('{what}' is single-node)"
     );
     anyhow::ensure!(
         pipeline || what == "cluster" || (what == "table2" && nodes.is_some()),
         "--no-pipeline only applies to the hierarchical targets (table2 --nodes, cluster)"
+    );
+    anyhow::ensure!(
+        what == "chaos"
+            || (args.flag("mtbf").is_none()
+                && args.flag("mttr").is_none()
+                && args.flag("policy").is_none()
+                && !args.has("smoke")),
+        "--mtbf/--mttr/--policy/--smoke only apply to the chaos target"
     );
     if let Some(n) = nodes {
         // Same rule RunConfig::validate enforces for TOML configs.
@@ -596,6 +630,72 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
                 csv.write_file(p)?;
             }
         }
+        "chaos" => {
+            // Fault injection & recovery: replay one seeded fault
+            // timeline (or the fixed --smoke one) through a training-step
+            // loop, once per recovery policy, and compare goodput/TTR.
+            use flexlink::faults::RecoveryPolicy;
+            let dc = flexlink::config::ChaosConfig::default();
+            let ccfg = flexlink::config::ChaosConfig {
+                mtbf_s: args.parse_or("mtbf", dc.mtbf_s)?,
+                mttr_s: args.parse_or("mttr", dc.mttr_s)?,
+                ..dc
+            };
+            let smoke = args.has("smoke");
+            let steps = args.usize_or("steps", if smoke { 8 } else { 24 })?;
+            let mib = args.u64_or("mib", 64)?;
+            let nn = nodes.unwrap_or(2);
+            anyhow::ensure!(nn >= 2, "chaos needs a multi-node cluster (--nodes ≥ 2)");
+            let policies: Vec<RecoveryPolicy> = match args.flag("policy") {
+                None => RecoveryPolicy::ALL.to_vec(),
+                Some(p) => vec![p.parse().map_err(|e: String| anyhow::anyhow!(e))?],
+            };
+            let rows = bh::chaos_sweep(
+                Preset::H800,
+                nn,
+                mib,
+                steps,
+                &ccfg,
+                seed,
+                &policies,
+                smoke,
+                &cfg,
+            )?;
+            print!("{}", bh::render_chaos(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "policy",
+                    "scenario",
+                    "nodes",
+                    "mib",
+                    "steps",
+                    "faults",
+                    "aborts",
+                    "mean_ttr_ms",
+                    "fault_free_gbps",
+                    "goodput_gbps",
+                    "goodput_ratio_pct",
+                    "degraded_steps",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.policy.to_string(),
+                        r.scenario.clone(),
+                        r.n_nodes.to_string(),
+                        r.msg_mib.to_string(),
+                        r.steps.to_string(),
+                        r.faults.to_string(),
+                        r.failures.to_string(),
+                        format!("{:.4}", r.mean_ttr_ms),
+                        format!("{:.2}", r.fault_free_gbps),
+                        format!("{:.2}", r.goodput_gbps),
+                        format!("{:.2}", r.goodput_ratio_pct),
+                        r.degraded_steps.to_string(),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
         "group" => {
             let r = bh::group_fusion(
                 Preset::H800,
@@ -638,7 +738,7 @@ fn repro(what: &str, nodes: Option<usize>, pipeline: bool, csv_path: Option<&str
         other => anyhow::bail!(
             "unknown repro target '{other}' \
              (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|\
-             concurrent|ablation)"
+             concurrent|ablation|chaos)"
         ),
     }
     Ok(())

@@ -444,6 +444,286 @@ impl<'a> Engine<'a> {
     }
 }
 
+/// A timed capacity mutation applied mid-run by [`run_with_events`]: at
+/// `at` (absolute virtual time), every `(resource, capacity)` pair in
+/// `set` is written to the pool outright — **capacity 0 is death**.
+/// Fault schedules ([`crate::faults::spec`]) lower to a sorted list of
+/// these; repairs are just later events restoring nominal capacity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateEvent {
+    pub at: SimTime,
+    pub set: Vec<(ResourceId, f64)>,
+}
+
+/// Outcome of a fault-injected run ([`run_with_events`]): the usual
+/// [`Schedule`] plus failure bookkeeping. Failed tasks carry their
+/// *failure* time as `finish` in the schedule (the instant the fault hit
+/// or the task tried to activate onto a dead route) so dependents still
+/// release and the DAG runs to the end — whether a failure aborts the
+/// whole collective is the recovery policy's call, not the engine's.
+#[derive(Debug, Clone)]
+pub struct FaultRun {
+    pub schedule: Schedule,
+    /// Tasks that failed (in-flight on a resource that died, or activated
+    /// onto a dead route), in failure order.
+    pub failed: Vec<TaskId>,
+    /// Time of the first failure, if any.
+    pub first_failure: Option<SimTime>,
+    /// The pool after every event ≤ the end of the run was applied (plus
+    /// any trailing events — the timeline's end state, for callers
+    /// chaining runs).
+    pub pool: ResourcePool,
+}
+
+impl FaultRun {
+    /// True when no task failed — the run is a valid collective pricing.
+    pub fn ok(&self) -> bool {
+        self.failed.is_empty()
+    }
+}
+
+/// Run `graph` under a timeline of capacity mutations (`events`, sorted
+/// by time ascending).
+///
+/// With **no events this is exactly [`Engine::run`]** — it delegates to
+/// the same code path, so a zero-fault chaos schedule is bit-identical to
+/// the fault-free engine (the invariant `tests/prop_faults.rs` pins
+/// against the golden traces).
+///
+/// With events, the run loop gains a third next-time candidate (the next
+/// pending mutation) alongside flow completions and heap events. At a
+/// mutation timestamp the pool capacities are rewritten, the fair-share
+/// solver is invalidated and re-converges over the survivors, and:
+///
+/// * in-flight flows whose route crosses a dead (capacity-0) resource are
+///   **failed** at that instant — removed from the solver (so survivors
+///   re-expand into the freed capacity) and their tasks marked failed;
+///   a flow whose bytes already hit zero at the same instant completes
+///   instead (delivery beats death on the tie);
+/// * transfers *activating* onto a dead route fail immediately at their
+///   activation time;
+/// * everything else (degradations, repairs) just changes rates — flows
+///   stretch or tighten, nothing fails.
+pub fn run_with_events(
+    mut pool: ResourcePool,
+    graph: &TaskGraph,
+    events: &[RateEvent],
+) -> Result<FaultRun> {
+    if events.is_empty() {
+        // The exact fault-free code path (bit-identity anchor).
+        let schedule = Engine::new(&pool).run(graph)?;
+        return Ok(FaultRun {
+            schedule,
+            failed: Vec::new(),
+            first_failure: None,
+            pool,
+        });
+    }
+    for w in events.windows(2) {
+        if w[0].at > w[1].at {
+            bail!("fault events must be sorted by time");
+        }
+    }
+
+    let n = graph.tasks.len();
+    let mut timings = vec![
+        TaskTiming {
+            start: SimTime::NEVER,
+            finish: SimTime::NEVER,
+        };
+        n
+    ];
+    let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+    let mut pending: Vec<u32> = vec![0; n];
+    for (i, t) in graph.tasks.iter().enumerate() {
+        pending[i] = t.deps.len() as u32;
+        for d in &t.deps {
+            dependents[d.0 as usize].push(TaskId(i as u32));
+        }
+    }
+
+    let mut heap: BinaryHeap<HeapEv> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut push = |heap: &mut BinaryHeap<HeapEv>, at: SimTime, ev: Event| {
+        heap.push(HeapEv { at, seq, ev });
+        seq += 1;
+    };
+
+    let mut flows = FlowSim::new();
+    let mut flow_task: HashMap<FlowId, TaskId> = HashMap::new();
+    let mut done: usize = 0;
+    let mut n_events: u64 = 0;
+    let mut now = SimTime::ZERO;
+    let mut finished: Vec<TaskId> = Vec::new();
+    let mut done_flows: Vec<FlowId> = Vec::new();
+    let mut failed: Vec<TaskId> = Vec::new();
+    let mut first_failure: Option<SimTime> = None;
+    let mut next_mut: usize = 0;
+
+    macro_rules! start_task {
+        ($tid:expr, $t:expr) => {{
+            let tid: TaskId = $tid;
+            let t: SimTime = $t;
+            timings[tid.0 as usize].start = t;
+            match &graph.tasks[tid.0 as usize].kind {
+                TaskKind::Transfer { latency, .. } => {
+                    push(&mut heap, t + *latency, Event::Activate(tid));
+                }
+                TaskKind::Delay { duration } => {
+                    push(&mut heap, t + *duration, Event::Finish(tid));
+                }
+                TaskKind::Barrier => {
+                    push(&mut heap, t, Event::Finish(tid));
+                }
+            }
+        }};
+    }
+
+    for i in 0..n {
+        if pending[i] == 0 {
+            start_task!(TaskId(i as u32), SimTime::ZERO);
+        }
+    }
+
+    while done < n {
+        flows.recompute(&pool);
+        let t_flow = flows.next_completion(now).map(|f| f.1);
+        let t_evt = heap.peek().map(|e| e.at);
+        // Past-due mutations (an event timestamped before the run's first
+        // activity) apply "now".
+        let t_mut = events.get(next_mut).map(|e| e.at.max(now));
+        let next = match [t_flow, t_evt, t_mut].into_iter().flatten().min() {
+            Some(t) => t,
+            None => bail!(
+                "engine stuck: {done}/{n} tasks done, no pending events \
+                 (dependency cycle or orphaned task)"
+            ),
+        };
+        if next == SimTime::NEVER {
+            bail!("engine stuck: flows starved with zero rate and no events");
+        }
+        flows.advance_by(next.saturating_sub(now));
+        now = next;
+
+        finished.clear();
+
+        // Apply every capacity mutation due now, then fail the in-flight
+        // flows the deaths starved.
+        let mut mutated = false;
+        while events
+            .get(next_mut)
+            .map(|e| e.at.max(now) == now)
+            .unwrap_or(false)
+        {
+            for (rid, cap) in &events[next_mut].set {
+                pool.set_capacity(*rid, *cap);
+            }
+            next_mut += 1;
+            n_events += 1;
+            mutated = true;
+        }
+        if mutated {
+            flows.invalidate();
+            for fid in flows.active_ids() {
+                // A flow that already delivered its last byte completes
+                // (picked up by completions_at below) even if its route
+                // died at the same instant.
+                if flows.remaining_bytes(fid).unwrap_or(0.0) <= 0.0 {
+                    continue;
+                }
+                let dead = flows
+                    .route_of(fid)
+                    .map(|r| r.iter().any(|res| pool.is_dead(*res)))
+                    .unwrap_or(false);
+                if dead {
+                    flows.remove(fid);
+                    let tid = flow_task.remove(&fid).expect("unknown flow");
+                    failed.push(tid);
+                    first_failure.get_or_insert(now);
+                    n_events += 1;
+                    finished.push(tid);
+                }
+            }
+        }
+
+        // Drain all heap events at `now`; activation onto a dead route is
+        // an immediate failure.
+        while heap.peek().map(|e| e.at == now).unwrap_or(false) {
+            let HeapEv { ev, .. } = heap.pop().unwrap();
+            n_events += 1;
+            match ev {
+                Event::Activate(tid) => {
+                    if let TaskKind::Transfer {
+                        bytes,
+                        route,
+                        weight,
+                        rate_cap,
+                        ..
+                    } = &graph.tasks[tid.0 as usize].kind
+                    {
+                        if route.iter().any(|r| pool.is_dead(*r)) {
+                            failed.push(tid);
+                            first_failure.get_or_insert(now);
+                            finished.push(tid);
+                        } else {
+                            let fid = flows.add_capped(route.clone(), *bytes, *weight, *rate_cap);
+                            flow_task.insert(fid, tid);
+                        }
+                    }
+                }
+                Event::Finish(tid) => finished.push(tid),
+            }
+        }
+
+        flows.recompute(&pool);
+        flows.completions_at(now, &mut done_flows);
+        for i in 0..done_flows.len() {
+            let fid = done_flows[i];
+            flows.remove(fid);
+            let tid = flow_task.remove(&fid).expect("unknown flow");
+            n_events += 1;
+            finished.push(tid);
+        }
+
+        for &tid in finished.iter() {
+            debug_assert_eq!(
+                timings[tid.0 as usize].finish,
+                SimTime::NEVER,
+                "task finished twice"
+            );
+            timings[tid.0 as usize].finish = now;
+            done += 1;
+            for dep in &dependents[tid.0 as usize] {
+                pending[dep.0 as usize] -= 1;
+                if pending[dep.0 as usize] == 0 {
+                    start_task!(*dep, now);
+                }
+            }
+        }
+    }
+
+    // Apply trailing mutations so the returned pool is the timeline's end
+    // state even when the run outpaced the schedule.
+    while let Some(e) = events.get(next_mut) {
+        for (rid, cap) in &e.set {
+            pool.set_capacity(*rid, *cap);
+        }
+        next_mut += 1;
+    }
+
+    let makespan = timings.iter().map(|t| t.finish).max().unwrap_or(SimTime::ZERO);
+    Ok(FaultRun {
+        schedule: Schedule {
+            timings,
+            makespan,
+            events: n_events,
+        },
+        failed,
+        first_failure,
+        pool,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -685,6 +965,160 @@ mod tests {
         assert!((s.tag_finish_in(&g, 1, 0..1).unwrap().as_secs_f64() - 10.0).abs() < 1e-6);
         assert!((s.tag_finish_in(&g, 1, 1..2).unwrap().as_secs_f64() - 5.0).abs() < 1e-6);
         assert!(s.tag_finish_in(&g, 2, 0..2).is_none());
+    }
+
+    #[test]
+    fn empty_event_list_is_bit_identical_to_run() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        let t1 = g.transfer(1000, vec![a], SimTime::from_micros(3), vec![]);
+        g.transfer(700, vec![a, b], SimTime::ZERO, vec![]);
+        g.transfer(500, vec![b], SimTime::ZERO, vec![t1]);
+        let plain = Engine::new(&p).run(&g).unwrap();
+        let faulted = run_with_events(p.clone(), &g, &[]).unwrap();
+        assert!(faulted.ok());
+        assert_eq!(faulted.first_failure, None);
+        assert_eq!(plain.timings, faulted.schedule.timings);
+        assert_eq!(plain.makespan, faulted.schedule.makespan);
+        assert_eq!(plain.events, faulted.schedule.events);
+    }
+
+    #[test]
+    fn midflight_rate_change_stretches_completion() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        // Full rate for 5s (500 bytes through), then the link halves:
+        // 500 bytes left at 50 B/s → finish at 15s exactly.
+        let ev = vec![RateEvent {
+            at: SimTime::from_secs_f64(5.0),
+            set: vec![(a, 50.0)],
+        }];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert!(r.ok());
+        assert!((r.schedule.makespan.as_secs_f64() - 15.0).abs() < 1e-6);
+        assert_eq!(r.pool.capacity(a), 50.0);
+    }
+
+    #[test]
+    fn repair_event_restores_rate_piecewise() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        // 100 B/s for 2s (200 B), 25 B/s for 8s (200 B), repaired for the
+        // final 600 B at 100 B/s (6s) → makespan 16s.
+        let ev = vec![
+            RateEvent {
+                at: SimTime::from_secs_f64(2.0),
+                set: vec![(a, 25.0)],
+            },
+            RateEvent {
+                at: SimTime::from_secs_f64(10.0),
+                set: vec![(a, 100.0)],
+            },
+        ];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert!(r.ok());
+        assert!((r.schedule.makespan.as_secs_f64() - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn death_fails_inflight_task_and_spares_disjoint_survivor() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        let doomed = g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        let safe = g.transfer(1000, vec![b], SimTime::ZERO, vec![]);
+        let ev = vec![RateEvent {
+            at: SimTime::from_secs_f64(4.0),
+            set: vec![(a, 0.0)],
+        }];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert_eq!(r.failed, vec![doomed]);
+        assert_eq!(r.first_failure, Some(SimTime::from_secs_f64(4.0)));
+        // The doomed task "finishes" (fails) at the fault instant; the
+        // survivor is untouched.
+        assert_eq!(r.schedule.finish_of(doomed), SimTime::from_secs_f64(4.0));
+        assert!((r.schedule.finish_of(safe).as_secs_f64() - 10.0).abs() < 1e-6);
+        assert!(r.pool.is_dead(a));
+    }
+
+    #[test]
+    fn activation_onto_dead_route_fails_immediately() {
+        let (p, a, b) = pool();
+        let mut g = TaskGraph::new();
+        let head = g.transfer(1000, vec![b], SimTime::ZERO, vec![]);
+        // Starts only after `head` (t=10), by which time `a` is dead.
+        let late = g.transfer(1000, vec![a], SimTime::ZERO, vec![head]);
+        let tail = g.barrier(vec![late]);
+        let ev = vec![RateEvent {
+            at: SimTime::from_secs_f64(5.0),
+            set: vec![(a, 0.0)],
+        }];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert_eq!(r.failed, vec![late]);
+        assert_eq!(r.first_failure, Some(SimTime::from_secs_f64(10.0)));
+        // Failure still releases dependents: the DAG runs to the end.
+        assert_eq!(r.schedule.finish_of(tail), SimTime::from_secs_f64(10.0));
+    }
+
+    #[test]
+    fn shared_link_rate_window_prices_piecewise() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        let doomed = g.transfer(10_000, vec![a], SimTime::ZERO, vec![]);
+        let lucky = g.transfer(1000, vec![a], SimTime::ZERO, vec![]);
+        // Two flows split `a` 50/50; a degradation window [4s, 8s) halves
+        // the link (each flow 25 B/s), then the repair restores it.
+        let ev = vec![
+            RateEvent {
+                at: SimTime::from_secs_f64(4.0),
+                set: vec![(a, 50.0)],
+            },
+            RateEvent {
+                at: SimTime::from_secs_f64(8.0),
+                set: vec![(a, 100.0)],
+            },
+        ];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert!(r.ok());
+        // lucky: 200 B by t=4, 100 B in (4,8), 700 B left shared at 50 →
+        // done at t=22. doomed continues alone at 100 B/s afterwards.
+        assert!((r.schedule.finish_of(lucky).as_secs_f64() - 22.0).abs() < 1e-6);
+        assert!(r.schedule.finish_of(doomed) > r.schedule.finish_of(lucky));
+    }
+
+    #[test]
+    fn unsorted_events_rejected() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(10, vec![a], SimTime::ZERO, vec![]);
+        let ev = vec![
+            RateEvent {
+                at: SimTime::from_secs_f64(2.0),
+                set: vec![(a, 50.0)],
+            },
+            RateEvent {
+                at: SimTime::from_secs_f64(1.0),
+                set: vec![(a, 75.0)],
+            },
+        ];
+        assert!(run_with_events(p, &g, &ev).is_err());
+    }
+
+    #[test]
+    fn trailing_events_land_on_returned_pool() {
+        let (p, a, _) = pool();
+        let mut g = TaskGraph::new();
+        g.transfer(100, vec![a], SimTime::ZERO, vec![]);
+        // Fault long after the 1s run completes.
+        let ev = vec![RateEvent {
+            at: SimTime::from_secs_f64(1000.0),
+            set: vec![(a, 0.0)],
+        }];
+        let r = run_with_events(p, &g, &ev).unwrap();
+        assert!(r.ok());
+        assert!((r.schedule.makespan.as_secs_f64() - 1.0).abs() < 1e-6);
+        assert!(r.pool.is_dead(a));
     }
 
     #[test]

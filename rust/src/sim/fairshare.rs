@@ -107,6 +107,28 @@ impl FlowSim {
         id
     }
 
+    /// Force the next [`Self::recompute`] to run even though no flow was
+    /// added or removed. Rates are a function of (active flows, pool
+    /// capacities); the dirty flag only tracks the flow half, so callers
+    /// that mutate the *pool* mid-run (fault injection changing a link's
+    /// rate at a timeline event) must invalidate before recomputing — the
+    /// solver then re-converges over the surviving capacities at that
+    /// timestamp.
+    pub fn invalidate(&mut self) {
+        self.dirty = true;
+    }
+
+    /// Ids of the currently-active flows, ascending (deterministic scan
+    /// order for the engine's dead-route sweep after a fault event).
+    pub fn active_ids(&self) -> Vec<FlowId> {
+        self.active.iter().map(|&id| FlowId(id)).collect()
+    }
+
+    /// Route of an active flow.
+    pub fn route_of(&self, id: FlowId) -> Option<&[ResourceId]> {
+        self.get(id).map(|f| f.route.as_slice())
+    }
+
     /// Remove a flow (normally on completion). Returns true if it existed.
     pub fn remove(&mut self, id: FlowId) -> bool {
         let idx = id.0 as usize;
@@ -445,6 +467,68 @@ mod tests {
         let rate = sim.rate(f).unwrap();
         assert!(rate.is_finite());
         assert!((rate - 100.0).abs() < 1e-9);
+    }
+
+    /// Mid-flight pool mutation + `invalidate` must be equivalent to
+    /// restarting a fresh solver from that instant with the surviving
+    /// bytes (split-run equivalence — the property the chaos timeline
+    /// relies on when it rewrites capacities at a fault timestamp).
+    #[test]
+    fn midflight_mutation_matches_split_run() {
+        let (mut pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![r], 1000, 1.0);
+        let b = sim.add(vec![r], 2000, 1.0);
+        sim.recompute(&pool);
+        // Run 4s at 50/50, then halve the link.
+        sim.advance_by(SimTime::from_secs_f64(4.0));
+        pool.scale_capacity(r, 0.5);
+        sim.invalidate();
+        sim.recompute(&pool);
+
+        // Fresh solver seeded with the remaining bytes over the mutated
+        // pool must agree on every rate and completion time.
+        let mut fresh = FlowSim::new();
+        let fa = fresh.add(vec![r], 800, 1.0);
+        let fb = fresh.add(vec![r], 1800, 1.0);
+        fresh.recompute(&pool);
+        assert!((sim.rate(a).unwrap() - fresh.rate(fa).unwrap()).abs() < 1e-9);
+        assert!((sim.rate(b).unwrap() - fresh.rate(fb).unwrap()).abs() < 1e-9);
+        assert!(
+            (sim.remaining_bytes(a).unwrap() - fresh.remaining_bytes(fa).unwrap()).abs() < 1e-9
+        );
+        let (ca, ta) = sim.next_completion(SimTime::ZERO).unwrap();
+        let (cf, tf) = fresh.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(ca, a);
+        assert_eq!(cf, fa);
+        assert_eq!(ta, tf);
+    }
+
+    /// Capacity zeroed mid-run (death): the dead resource's flows freeze
+    /// at rate 0 and flows on other resources keep their full rate — the
+    /// progressive-filling freeze test handles λ = 0 without special
+    /// cases.
+    #[test]
+    fn zero_capacity_freezes_only_dead_routes() {
+        let mut pool = ResourcePool::new();
+        let dead = pool.add("nic", 100.0);
+        let live = pool.add("nvlink", 400.0);
+        let mut sim = FlowSim::new();
+        let fd = sim.add(vec![dead], 1000, 1.0);
+        let fl = sim.add(vec![live], 1000, 1.0);
+        sim.recompute(&pool);
+        sim.advance_by(SimTime::from_secs_f64(1.0));
+        pool.set_capacity(dead, 0.0);
+        sim.invalidate();
+        sim.recompute(&pool);
+        assert_eq!(sim.rate(fd).unwrap(), 0.0);
+        assert!((sim.rate(fl).unwrap() - 400.0).abs() < 1e-9);
+        // A starved flow never completes; the survivor still does.
+        let (id, t) = sim.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(id, fl);
+        assert!(t < SimTime::NEVER);
+        assert_eq!(sim.active_ids(), vec![fd, fl]);
+        assert_eq!(sim.route_of(fd).unwrap(), &[dead]);
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! The two-stage balancer only ever observes per-path completion times, so
 //! driving it from virtual time reproduces its behaviour exactly (see
 //! DESIGN.md, substitution ledger).
+//!
+//! Fault injection rides on the same substrate: [`run_with_events`]
+//! executes a graph under a timeline of [`RateEvent`] capacity mutations
+//! (capacity 0 = death), with the fair-share solver re-converging at each
+//! event timestamp and in-flight tasks on dead resources marked failed —
+//! see [`crate::faults`] for the fault model and recovery policies.
 
 pub mod clock;
 pub mod engine;
@@ -17,6 +23,9 @@ pub mod fairshare;
 pub mod resource;
 
 pub use clock::SimTime;
-pub use engine::{Engine, Schedule, TaskGraph, TaskId, TaskKind, TaskTiming};
+pub use engine::{
+    run_with_events, Engine, FaultRun, RateEvent, Schedule, TaskGraph, TaskId, TaskKind,
+    TaskTiming,
+};
 pub use fairshare::FlowSim;
 pub use resource::{ResourceId, ResourcePool};

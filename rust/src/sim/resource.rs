@@ -100,6 +100,45 @@ impl ResourcePool {
         hit
     }
 
+    /// Set one resource's capacity outright. Unlike [`Self::add`] and
+    /// [`Self::scale_capacity`], **zero is allowed**: capacity 0 models a
+    /// dead link/NIC under fault injection (the fair-share solver assigns
+    /// its flows rate 0 and the engine fails them — see
+    /// [`crate::sim::run_with_events`]). Negative and non-finite
+    /// capacities stay rejected.
+    pub fn set_capacity(&mut self, id: ResourceId, capacity_bps: f64) {
+        assert!(
+            capacity_bps >= 0.0 && capacity_bps.is_finite(),
+            "capacity must be non-negative/finite"
+        );
+        self.resources[id.0 as usize].capacity_bps = capacity_bps;
+    }
+
+    /// [`Self::set_capacity`] for every resource whose name contains
+    /// `needle`. Returns how many matched.
+    pub fn set_matching(&mut self, needle: &str, capacity_bps: f64) -> usize {
+        let ids = self.find_matching(needle);
+        for id in &ids {
+            self.set_capacity(*id, capacity_bps);
+        }
+        ids.len()
+    }
+
+    /// Ids of every resource whose name contains `needle`, in id order.
+    pub fn find_matching(&self, needle: &str) -> Vec<ResourceId> {
+        self.resources
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.name.contains(needle))
+            .map(|(i, _)| ResourceId(i as u32))
+            .collect()
+    }
+
+    /// True when fault injection has zeroed this resource's capacity.
+    pub fn is_dead(&self, id: ResourceId) -> bool {
+        self.capacity(id) <= 0.0
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (ResourceId, &Resource)> {
         self.resources
             .iter()
@@ -149,5 +188,28 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         ResourcePool::new().add("bad", 0.0);
+    }
+
+    #[test]
+    fn set_capacity_allows_death_and_repair() {
+        let mut pool = ResourcePool::new();
+        let a = pool.add("node0.nic.up.gpu1", 100.0);
+        let b = pool.add("node0.nic.down.gpu1", 100.0);
+        let c = pool.add("node0.nvlink.up.gpu1", 400.0);
+        assert!(!pool.is_dead(a));
+        assert_eq!(pool.set_matching("node0.nic.", 0.0), 2);
+        assert!(pool.is_dead(a) && pool.is_dead(b));
+        assert!(!pool.is_dead(c));
+        pool.set_capacity(a, 100.0);
+        assert!(!pool.is_dead(a));
+        assert_eq!(pool.find_matching("node0.nic."), vec![a, b]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_capacity_rejected_by_set() {
+        let mut pool = ResourcePool::new();
+        let a = pool.add("x", 1.0);
+        pool.set_capacity(a, -1.0);
     }
 }

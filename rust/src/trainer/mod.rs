@@ -96,6 +96,25 @@ impl StepRecord {
     }
 }
 
+/// Trainer-side cost of a checkpoint-restart recovery: reloading the
+/// last checkpoint plus recomputing every step since it, each at
+/// `step_time`. This is the time the `ckpt` recovery policy
+/// ([`crate::faults::RecoveryPolicy::CheckpointRestart`]) charges *on
+/// top of* waiting out the hardware repair — the chaos harness replays
+/// the lost steps through its own loop, and this closed form is the
+/// equivalence the `prop_faults` suite checks it against.
+pub fn checkpoint_restart_cost(
+    step_time: SimTime,
+    steps_since_ckpt: usize,
+    reload: SimTime,
+) -> SimTime {
+    SimTime(
+        reload
+            .0
+            .saturating_add(step_time.0.saturating_mul(steps_since_ckpt as u64)),
+    )
+}
+
 /// The data-parallel trainer.
 pub struct Trainer {
     cfg: TrainerConfig,
@@ -336,6 +355,15 @@ fn artifact(dir: &Path, model: &str, which: &str) -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn checkpoint_restart_cost_is_reload_plus_recompute() {
+        let step = SimTime::from_micros(250);
+        let reload = SimTime::from_secs_f64(2.0);
+        assert_eq!(checkpoint_restart_cost(step, 0, reload), reload);
+        let c = checkpoint_restart_cost(step, 7, reload);
+        assert_eq!(c, SimTime(reload.0 + step.0 * 7));
+    }
 
     #[test]
     fn artifact_paths() {

@@ -1,0 +1,298 @@
+//! Property suite for the fault-injection subsystem ([`flexlink::faults`]):
+//!
+//! (a) **zero-fault bit-identity** — an empty event timeline must take
+//!     the exact fault-free code path: `run_with_events(…, &[])` equals
+//!     `Engine::run` schedule-for-schedule, `run_under_faults` equals
+//!     `run` field-for-field, and a zero-fault chaos loop banks every
+//!     step at exactly the fault-free step time. Combined with the
+//!     golden-trace suite (which pins `run`'s schedules bit-exactly),
+//!     this anchors the whole chaos path to the goldens.
+//! (b) **post-completion events are inert** — rate events scheduled
+//!     after the graph drains must not perturb the schedule.
+//! (c) **degradation windows only stretch** — a mid-flight rate cut
+//!     never shortens the makespan and never fails tasks.
+//! (d) **`ReLower` conserves bytes** — recompiling without a dead NIC
+//!     stripe moves the dead stripe's traffic onto survivors: the dead
+//!     NIC carries zero bytes and the surviving NICs' total matches the
+//!     baseline within chunk-padding slack.
+//! (e) **policy ordering under NIC death** — on the deterministic smoke
+//!     timeline, `RerouteStripes` strictly beats `ReLower` strictly
+//!     beats `CheckpointRestart` on goodput, and recovers faster — the
+//!     acceptance ordering, plus the trainer's closed-form
+//!     checkpoint-restart cost agreeing with the harness's rework.
+
+use flexlink::balancer::{Shares, TierShares};
+use flexlink::collectives::hierarchical::ClusterCollective;
+use flexlink::collectives::CollectiveKind;
+use flexlink::config::presets::Preset;
+use flexlink::config::{BalancerConfig, ChaosConfig};
+use flexlink::faults::chaos::{run_chaos, smoke_timeline};
+use flexlink::faults::{schedule, FaultSpec, RecoveryPolicy, RecoverySpec};
+use flexlink::links::calib::Calibration;
+use flexlink::links::StripeId;
+use flexlink::sim::{run_with_events, Engine, RateEvent, SimTime};
+use flexlink::topology::cluster::{Cluster, ClusterSpec};
+use flexlink::util::rng::Rng;
+
+const OPS: [CollectiveKind; 4] = [
+    CollectiveKind::AllReduce,
+    CollectiveKind::AllGather,
+    CollectiveKind::ReduceScatter,
+    CollectiveKind::Broadcast,
+];
+
+fn cluster(nn: usize) -> Cluster {
+    Cluster::build(&ClusterSpec::new(nn, Preset::H800.spec()))
+}
+
+fn cc(c: &Cluster, op: CollectiveKind) -> ClusterCollective<'_> {
+    ClusterCollective::new(c, Calibration::h800(), op, c.gpus_per_node())
+}
+
+#[test]
+fn zero_fault_event_run_is_bit_identical_to_engine() {
+    let mut rng = Rng::seed_from_u64(0xFA01);
+    for round in 0..12 {
+        let op = OPS[rng.below(OPS.len() as u64) as usize];
+        let nn = [2usize, 4][rng.below(2) as usize];
+        let msg = (rng.below(8) + 1) << 20;
+        let c = cluster(nn);
+        let tiers = TierShares::new(Shares::nvlink_only(), c.gpus_per_node());
+        let compiled = cc(&c, op).compile(msg, &tiers, 4).unwrap();
+
+        let plain = Engine::new(&compiled.pool).run(&compiled.graph).unwrap();
+        let faulted = run_with_events(compiled.pool.clone(), &compiled.graph, &[]).unwrap();
+        assert!(faulted.ok(), "round {round}: no events, no failures");
+        assert_eq!(faulted.schedule.makespan, plain.makespan);
+        assert_eq!(faulted.schedule.events, plain.events);
+        assert_eq!(faulted.schedule.timings, plain.timings, "round {round}");
+
+        // (b) events strictly after completion are inert in-loop.
+        let late = vec![RateEvent {
+            at: plain.makespan + SimTime::from_micros(1),
+            set: vec![(compiled.graph.resource_bytes().keys().next().copied().unwrap(), 0.0)],
+        }];
+        let lated = run_with_events(compiled.pool.clone(), &compiled.graph, &late).unwrap();
+        assert!(lated.ok());
+        assert_eq!(lated.schedule.timings, plain.timings, "round {round}: late event leaked");
+    }
+}
+
+#[test]
+fn zero_fault_hier_run_matches_plain_run() {
+    for op in OPS {
+        let c = cluster(2);
+        let tiers = TierShares::new(Shares::nvlink_only(), c.gpus_per_node());
+        let coll = cc(&c, op);
+        let plain = coll.run(16 << 20, &tiers, 4).unwrap();
+        let faulted = coll.run_under_faults(16 << 20, &tiers, 4, &[]).unwrap();
+        assert!(faulted.ok());
+        assert_eq!(faulted.report.total, plain.total, "{op}");
+        assert_eq!(faulted.report.intra_times, plain.intra_times, "{op}");
+        assert_eq!(faulted.report.inter_times, plain.inter_times, "{op}");
+        assert_eq!(faulted.report.tasks, plain.tasks, "{op}");
+    }
+}
+
+#[test]
+fn zero_fault_chaos_banks_every_step_at_fault_free_time() {
+    let c = cluster(2);
+    let rec = RecoverySpec::from_config(RecoveryPolicy::RerouteStripes, &ChaosConfig::default());
+    let out = run_chaos(
+        &c,
+        Calibration::h800(),
+        CollectiveKind::AllReduce,
+        8 << 20,
+        5,
+        &[],
+        &rec,
+        &BalancerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.steps, 5);
+    assert_eq!(out.failures, 0);
+    assert_eq!(out.attempts, 5);
+    assert_eq!(out.degraded_steps, 0);
+    assert_eq!(out.virtual_time, SimTime(out.fault_free_step.0 * 5));
+}
+
+#[test]
+fn degradation_window_stretches_but_never_fails() {
+    let mut rng = Rng::seed_from_u64(0xFA02);
+    for _ in 0..8 {
+        let op = OPS[rng.below(OPS.len() as u64) as usize];
+        let msg = (rng.below(8) + 1) << 20;
+        let c = cluster(2);
+        let tiers = TierShares::new(Shares::nvlink_only(), c.gpus_per_node());
+        let compiled = cc(&c, op).compile(msg, &tiers, 4).unwrap();
+        let plain = Engine::new(&compiled.pool).run(&compiled.graph).unwrap();
+
+        // Halve every NIC uplink for a window in the middle of the run.
+        let mid = SimTime(plain.makespan.0 / 3);
+        let end = SimTime(plain.makespan.0 * 2 / 3);
+        let nics = compiled.pool.find_matching(".nic.up.");
+        assert!(!nics.is_empty());
+        let cut: Vec<(flexlink::sim::ResourceId, f64)> = nics
+            .iter()
+            .map(|&id| (id, compiled.pool.capacity(id) * 0.5))
+            .collect();
+        let restore: Vec<(flexlink::sim::ResourceId, f64)> = nics
+            .iter()
+            .map(|&id| (id, compiled.pool.capacity(id)))
+            .collect();
+        let events = vec![
+            RateEvent { at: mid, set: cut },
+            RateEvent { at: end, set: restore },
+        ];
+        let run = run_with_events(compiled.pool.clone(), &compiled.graph, &events).unwrap();
+        assert!(run.ok(), "{op}: degradation must not fail tasks");
+        assert!(
+            run.schedule.makespan >= plain.makespan,
+            "{op}: a rate cut cannot speed the graph up"
+        );
+        // Capacities restored after the window.
+        for &id in &nics {
+            assert_eq!(run.pool.capacity(id), compiled.pool.capacity(id));
+        }
+    }
+}
+
+/// Sum of transfer bytes over directional NIC uplinks, by stripe suffix.
+fn nic_up_bytes(
+    compiled: &flexlink::collectives::hierarchical::CompiledHier,
+) -> (u64, std::collections::BTreeMap<String, u64>) {
+    let mut total = 0u64;
+    let mut per_name = std::collections::BTreeMap::new();
+    for (id, bytes) in compiled.graph.resource_bytes() {
+        let name = &compiled.pool.get(id).name;
+        if name.contains(".nic.up.") {
+            total += bytes;
+            *per_name.entry(name.clone()).or_insert(0) += bytes;
+        }
+    }
+    (total, per_name)
+}
+
+#[test]
+fn relower_conserves_nic_bytes_across_survivors() {
+    let mut rng = Rng::seed_from_u64(0xFA03);
+    for _ in 0..8 {
+        let op = [CollectiveKind::AllReduce, CollectiveKind::AllGather]
+            [rng.below(2) as usize];
+        let nn = [2usize, 4][rng.below(2) as usize];
+        let msg = (rng.below(12) + 4) << 20;
+        let c = cluster(nn);
+        let nl = c.gpus_per_node();
+        let tiers = TierShares::new(Shares::nvlink_only(), nl);
+        let dead = StripeId(rng.below(nl as u64) as u32);
+        let relowered = tiers.without_stripe(dead).unwrap();
+        let coll = cc(&c, op);
+        let base = coll.compile(msg, &tiers, 4).unwrap();
+        let shrunk = coll.compile(msg, &relowered, 4).unwrap();
+
+        let (base_total, _) = nic_up_bytes(&base);
+        let (shrunk_total, shrunk_per) = nic_up_bytes(&shrunk);
+        assert!(base_total > 0);
+        // The dead stripe's NICs carry nothing after re-lowering…
+        let dead_suffix = format!(".nic.up.gpu{}", dead.0);
+        for (name, bytes) in &shrunk_per {
+            if name.ends_with(&dead_suffix) {
+                panic!("dead NIC {name} still carries {bytes} bytes");
+            }
+        }
+        // …and the survivors carry the whole load, up to chunk padding
+        // (div_ceil alignment per stripe extent).
+        let slack = base_total / 100 + 4096;
+        assert!(
+            shrunk_total + slack >= base_total && shrunk_total <= base_total + slack,
+            "{op} nn={nn} dead={dead:?}: NIC bytes {base_total} → {shrunk_total}"
+        );
+    }
+}
+
+#[test]
+fn fault_schedules_are_seed_deterministic() {
+    let specs = vec![FaultSpec::any_nic_death(2, 8, 0.05, 0.5)];
+    let h = SimTime::from_secs_f64(5.0);
+    let a = schedule(&specs, h, 1234);
+    let b = schedule(&specs, h, 1234);
+    assert!(!a.is_empty());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!((x.at, x.until, x.factor.to_bits()), (y.at, y.until, y.factor.to_bits()));
+        assert_eq!(x.target, y.target);
+    }
+}
+
+#[test]
+fn nic_death_policy_ordering_reroute_over_relower_over_ckpt() {
+    let c = cluster(2);
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let nl = c.gpus_per_node();
+    let t0 = ClusterCollective::new(&c, Calibration::h800(), op, nl)
+        .run(msg, &TierShares::new(Shares::nvlink_only(), nl), 4)
+        .unwrap()
+        .total;
+    let timeline = smoke_timeline(t0);
+    let cfg = BalancerConfig::default();
+    let ccfg = ChaosConfig::default();
+    let run = |policy| {
+        run_chaos(
+            &c,
+            Calibration::h800(),
+            op,
+            msg,
+            6,
+            &timeline,
+            &RecoverySpec::from_config(policy, &ccfg),
+            &cfg,
+        )
+        .unwrap()
+    };
+    let reroute = run(RecoveryPolicy::RerouteStripes);
+    let relower = run(RecoveryPolicy::ReLower);
+    let ckpt = run(RecoveryPolicy::CheckpointRestart);
+
+    for out in [&reroute, &relower, &ckpt] {
+        assert_eq!(out.steps, 6, "{}: banks all steps", out.policy);
+        assert!(out.failures >= 1, "{}: the NIC death aborts a step", out.policy);
+        assert!(out.faults_injected >= 1);
+    }
+    // The acceptance ordering: comm-layer rerouting strictly beats
+    // abort+re-lower (which pays reinit), which strictly beats waiting
+    // out the repair and recomputing from the checkpoint.
+    assert!(
+        reroute.goodput_gbps() > relower.goodput_gbps(),
+        "reroute {:.3} vs relower {:.3} GB/s",
+        reroute.goodput_gbps(),
+        relower.goodput_gbps()
+    );
+    assert!(
+        relower.goodput_gbps() > ckpt.goodput_gbps(),
+        "relower {:.3} vs ckpt {:.3} GB/s",
+        relower.goodput_gbps(),
+        ckpt.goodput_gbps()
+    );
+    assert!(
+        reroute.mean_ttr().unwrap() < ckpt.mean_ttr().unwrap(),
+        "reroute recovers faster than checkpoint-restart"
+    );
+    // Goodput ratios are genuine fractions of fault-free.
+    assert!(reroute.goodput_ratio() < 1.0 && reroute.goodput_ratio() > 0.0);
+    assert!(ckpt.goodput_ratio() < reroute.goodput_ratio());
+
+    // The trainer's closed-form checkpoint-restart cost matches the
+    // harness's accounting: the ckpt run re-ran the lost steps and paid
+    // the reload once per outage.
+    let rec = RecoverySpec::from_config(RecoveryPolicy::CheckpointRestart, &ccfg);
+    let lost_before_first_ckpt = 2usize.min(rec.ckpt_interval); // 2 clean steps before the abort
+    let closed_form =
+        flexlink::trainer::checkpoint_restart_cost(t0, lost_before_first_ckpt, rec.reload);
+    assert!(
+        ckpt.virtual_time > closed_form,
+        "ckpt total time {:?} includes at least reload + rework {:?}",
+        ckpt.virtual_time,
+        closed_form
+    );
+}
