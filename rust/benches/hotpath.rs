@@ -3,8 +3,11 @@
 //!  - functional staged-channel copy bandwidth (the memcpy floor)
 //!  - functional multi-path AllReduce end to end
 //!  - share quantization (per-call planning cost)
+//!  - cluster pricing split: compile vs simulate, and the node-scaling
+//!    series under Auto pricing (→ EXPERIMENTS.md §Scale)
 
-use flexlink::balancer::Shares;
+use flexlink::balancer::{Shares, TierShares};
+use flexlink::collectives::hierarchical::{ClusterCollective, PricingMode};
 use flexlink::collectives::multipath::MultipathCollective;
 use flexlink::collectives::{exec, CollectiveKind};
 use flexlink::config::presets::Preset;
@@ -12,6 +15,8 @@ use flexlink::dtype::{DeviceBuffer, RedOp};
 use flexlink::links::calib::Calibration;
 use flexlink::links::PathId;
 use flexlink::memory::{MemoryLedger, StagingChannel};
+use flexlink::sim::Engine;
+use flexlink::topology::cluster::{Cluster, ClusterSpec};
 use flexlink::topology::Topology;
 use flexlink::transport::{f32_as_bytes, Fabric};
 use flexlink::util::bench::{bench, sink};
@@ -75,4 +80,39 @@ fn main() {
         sink(shares.to_extents(256 << 20, 4))
     });
     println!("{}", r.line());
+
+    // Cluster pricing, split into its two halves: graph compilation vs
+    // the DES run it feeds. The exact path at 4 nodes is the baseline;
+    // the Auto series shows ~O(node-subgraph) cost once folding engages
+    // (tasks stop growing with the node count — the fold premise).
+    let c4 = Cluster::build(&ClusterSpec::new(4, Preset::H800.spec()));
+    let cc4 = ClusterCollective::new(&c4, Calibration::h800(), CollectiveKind::AllReduce, 8);
+    let tiers = TierShares::new(Shares::nvlink_only(), 8);
+    let msg = 64u64 << 20;
+    let r = bench("cluster_compile4_64mb", 2, 10, || {
+        sink(cc4.compile(msg, &tiers, 4).unwrap())
+    });
+    println!("{}", r.line());
+    let compiled = cc4.compile(msg, &tiers, 4).unwrap();
+    let r = bench("cluster_simulate4_64mb", 2, 10, || {
+        Engine::new(&compiled.pool).run(&compiled.graph).unwrap()
+    });
+    println!("{}", r.line());
+
+    for nn in [1usize, 4, 16, 64] {
+        let c = Cluster::build(&ClusterSpec::new(nn, Preset::H800.spec()));
+        let cc = ClusterCollective::new(&c, Calibration::h800(), CollectiveKind::AllReduce, 8)
+            .with_pricing(PricingMode::Auto);
+        let rep = cc.run(msg, &tiers, 4).unwrap();
+        let r = bench(&format!("cluster_price_auto_n{nn}_64mb"), 1, 5, || {
+            cc.run(msg, &tiers, 4).unwrap()
+        });
+        println!(
+            "{}  (folded={} tasks={} events={})",
+            r.line(),
+            rep.folded,
+            rep.tasks,
+            rep.events
+        );
+    }
 }

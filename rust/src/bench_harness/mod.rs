@@ -571,6 +571,137 @@ pub fn render_cluster_sweep(rows: &[ClusterSweepRow]) -> String {
     t.render()
 }
 
+/// One row of the sublinear-pricing scale sweep (`repro scale`): the
+/// simulated collective at `n_nodes` under [`PricingMode::Auto`]
+/// (symmetry-folded at scale), plus the wall-clock cost of pricing it
+/// cold vs out of the device's compiled-plan cache.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub n_nodes: usize,
+    pub msg_mib: u64,
+    /// Whether Auto pricing folded (≥ [`FOLD_AUTO_MIN_NODES`] nodes).
+    pub folded: bool,
+    /// DES task count of the priced graph — O(node subgraph), not
+    /// O(nodes), once folding engages.
+    pub tasks: usize,
+    pub events: usize,
+    /// Simulated makespan / algorithmic bandwidth (the *answer*, which
+    /// must not change with how cheaply it was computed).
+    pub total_ms: f64,
+    pub algbw_gbps: f64,
+    /// Wall-clock of one cold solo pricing through the device (compile +
+    /// DES; tuner already settled, cache emptied first).
+    pub cold_price_ms: f64,
+    /// Wall-clock of the identical repeated call (plan-cache hit).
+    pub hit_price_ms: f64,
+    pub hit_speedup: f64,
+}
+
+/// Sweep AllReduce across cluster sizes at one message size, measuring
+/// both the simulated answer and the cost of producing it: graph size
+/// under Auto pricing, cold-pricing wall-clock, and the compiled-plan
+/// cache hit that replaces it in steady state. Structural invariants
+/// (fold engages exactly at the Auto threshold on a healthy symmetric
+/// cluster; repeats hit the cache) are enforced on every run — `--smoke`
+/// just shortens the node list.
+pub fn scale_sweep(
+    preset: Preset,
+    op: CollectiveKind,
+    node_counts: &[usize],
+    mib: u64,
+) -> Result<Vec<ScaleRow>> {
+    use crate::collectives::hierarchical::{PricingMode, FOLD_AUTO_MIN_NODES};
+    let msg = mib << 20;
+    let mut rows = Vec::new();
+    for &nn in node_counts {
+        let node_spec = preset.spec();
+        let nl = node_spec.n_gpus;
+        // Structure: price once directly so the row records the graph
+        // the device's solo path would build (folded flag, task count).
+        let cluster = Cluster::build(&ClusterSpec::new(nn, node_spec));
+        let rep = ClusterCollective::new(&cluster, Calibration::h800(), op, nl)
+            .with_pricing(PricingMode::Auto)
+            .run(msg, &TierShares::new(Shares::nvlink_only(), nl), 4)?;
+        anyhow::ensure!(
+            rep.folded == (nn >= FOLD_AUTO_MIN_NODES),
+            "{nn} nodes: Auto pricing folded={} — threshold regression",
+            rep.folded
+        );
+
+        // Cost: the same pricing question through a Communicator's
+        // device, so the compiled-plan cache is on the path. First call
+        // settles the lazy tuners, then the cache is emptied so the next
+        // call is a pure cold compile+DES, and repeats must hit.
+        let mut cfg = crate::comm::CommConfig::cluster(preset, nn, nl);
+        cfg.tune_msg_bytes = msg;
+        let mut comm = crate::comm::Communicator::init(cfg)?;
+        comm.time_collective(op, msg)?;
+        comm.device().invalidate_plans();
+        let mut cold_ms = 0.0;
+        let mut hit_ms = 0.0;
+        let mut hit = false;
+        // A landing balancer adjustment invalidates between calls; the
+        // tuners converge, so a hit arrives within a few rounds.
+        for _ in 0..8 {
+            let before = comm.device().plan_cache_stats();
+            let t = std::time::Instant::now();
+            comm.time_collective(op, msg)?;
+            let dt = t.elapsed().as_secs_f64() * 1e3;
+            let after = comm.device().plan_cache_stats();
+            if after.hits > before.hits {
+                hit_ms = dt;
+                hit = true;
+                break;
+            }
+            cold_ms = dt;
+        }
+        anyhow::ensure!(hit, "{nn} nodes: plan cache never hit in 8 rounds");
+
+        rows.push(ScaleRow {
+            n_nodes: nn,
+            msg_mib: mib,
+            folded: rep.folded,
+            tasks: rep.tasks,
+            events: rep.events,
+            total_ms: rep.total.as_secs_f64() * 1e3,
+            algbw_gbps: rep.algbw_gbps(),
+            cold_price_ms: cold_ms,
+            hit_price_ms: hit_ms,
+            hit_speedup: if hit_ms > 0.0 { cold_ms / hit_ms } else { f64::INFINITY },
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_scale_sweep(rows: &[ScaleRow]) -> String {
+    let mut t = Table::new(
+        "Scale sweep: Auto-priced AllReduce — graph size and pricing cost vs nodes",
+        &[
+            "nodes", "msg", "folded", "tasks", "events", "sim total(ms)", "algbw",
+            "cold price(ms)", "hit price(ms)", "hit speedup",
+        ],
+    );
+    for r in rows {
+        t.row(vec![
+            r.n_nodes.to_string(),
+            format!("{}MB", r.msg_mib),
+            if r.folded { "yes" } else { "no" }.into(),
+            r.tasks.to_string(),
+            r.events.to_string(),
+            format!("{:.3}", r.total_ms),
+            format!("{:.1}", r.algbw_gbps),
+            format!("{:.3}", r.cold_price_ms),
+            format!("{:.4}", r.hit_price_ms),
+            if r.hit_price_ms > 0.0 {
+                format!("{:.0}x", r.hit_speedup)
+            } else {
+                ">1000x".into()
+            },
+        ]);
+    }
+    t.render()
+}
+
 /// One row of the compute/comm overlap sweep (`repro overlap`): a
 /// DDP-style backward window — compute chunks on one stream, per-bucket
 /// AllReduces riding a second stream behind events — against the strictly

@@ -59,7 +59,9 @@ use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
 use crate::links::calib::Calibration;
 use crate::links::{PathId, PathModel, StripeId};
-use crate::sim::{Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind};
+use crate::sim::{
+    flow, Engine, ResourceId, ResourcePool, SimTime, TaskGraph, TaskId, TaskKind,
+};
 use crate::topology::cluster::Cluster;
 use anyhow::Result;
 use std::ops::Range;
@@ -99,7 +101,34 @@ pub struct ClusterCollective<'c> {
     /// config's `algo` key (default auto) through
     /// [`ClusterCollective::with_algo`].
     pub algo: AlgoSpec,
+    /// Pricing strategy for [`ClusterCollective::run`]: exact full-graph
+    /// DES, symmetry-folded (when eligible), or size-adaptive. Defaults
+    /// to [`PricingMode::Exact`] so every directly-constructed pinned
+    /// schedule is untouched; the scale-aware harnesses and the stream
+    /// scheduler's solo path opt into [`PricingMode::Auto`].
+    pub pricing: PricingMode,
 }
+
+/// How [`ClusterCollective::run`] prices a multi-node collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PricingMode {
+    /// Always compile + DES-run the full per-chunk cluster graph.
+    #[default]
+    Exact,
+    /// Fold whenever [`ClusterCollective::fold_eligible`] holds; fall
+    /// back to the exact graph otherwise (broken symmetry, unsupported
+    /// operator).
+    Folded,
+    /// Fold only at [`FOLD_AUTO_MIN_NODES`]-node scale and above (and
+    /// when eligible): small clusters keep the exact graph the golden
+    /// suites pin, big sweeps get the sublinear representative pricing.
+    Auto,
+}
+
+/// Node count at which [`PricingMode::Auto`] starts folding. Below this
+/// the exact graph is cheap and stays the reference; at and above it the
+/// folded graph is ~`n_nodes`× smaller per tier.
+pub const FOLD_AUTO_MIN_NODES: usize = 16;
 
 /// A compiled (not yet executed) hierarchical lowering: the task graph,
 /// the resource pool it routes over, and the task-id watermarks of its
@@ -146,6 +175,13 @@ pub struct HierReport {
     pub intra_phase3: PhaseSpan,
     pub events: u64,
     pub tasks: usize,
+    /// True when this pricing came from the symmetry-folded lowering
+    /// (one representative rank group per tier, timings replicated
+    /// analytically; `events`/`tasks` then count the *reduced* graph).
+    /// Always `false` for exact runs, the single-node degenerate case
+    /// and fault-injected runs ([`ClusterCollective::run_under_faults`]
+    /// never folds — a fault timeline is exactly a broken symmetry).
+    pub folded: bool,
 }
 
 impl HierReport {
@@ -199,6 +235,7 @@ impl<'c> ClusterCollective<'c> {
             n_local,
             pipeline: true,
             algo: AlgoSpec::Fixed(Algo::Ring),
+            pricing: PricingMode::default(),
         }
     }
 
@@ -214,6 +251,40 @@ impl<'c> ClusterCollective<'c> {
     pub fn with_algo(mut self, algo: AlgoSpec) -> Self {
         self.algo = algo;
         self
+    }
+
+    /// Select the pricing strategy (see the `pricing` field).
+    pub fn with_pricing(mut self, pricing: PricingMode) -> Self {
+        self.pricing = pricing;
+        self
+    }
+
+    /// Symmetry folding is sound when every node group prices
+    /// identically: ≥ 2 identical nodes on one spine, capacities still at
+    /// their build-time values (no fault injection / degradation — see
+    /// [`Cluster::is_symmetric`]), and a node-symmetric operator.
+    /// Broadcast is root-asymmetric (the root node runs phase 1, the
+    /// others phase 3) and AllToAll has no hierarchical lowering, so both
+    /// always price exact.
+    pub fn fold_eligible(&self) -> bool {
+        self.cluster.n_nodes() >= 2
+            && matches!(
+                self.kind,
+                CollectiveKind::AllReduce
+                    | CollectiveKind::AllGather
+                    | CollectiveKind::ReduceScatter
+            )
+            && self.cluster.is_symmetric()
+    }
+
+    fn should_fold(&self) -> bool {
+        match self.pricing {
+            PricingMode::Exact => false,
+            PricingMode::Folded => self.fold_eligible(),
+            PricingMode::Auto => {
+                self.cluster.n_nodes() >= FOLD_AUTO_MIN_NODES && self.fold_eligible()
+            }
+        }
     }
 
     /// Algorithm for one intra phase of `phase_kind` moving `msg` bytes
@@ -326,7 +397,11 @@ impl<'c> ClusterCollective<'c> {
                 intra_phase3: PhaseSpan::EMPTY,
                 events: rep.outcome.events,
                 tasks: rep.outcome.tasks,
+                folded: false,
             });
+        }
+        if self.should_fold() {
+            return self.run_folded(msg_bytes, tiers, elem_bytes);
         }
         let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
         let tasks = compiled.graph.len();
@@ -354,6 +429,66 @@ impl<'c> ClusterCollective<'c> {
             intra_phase3: phase_span(&sched, compiled.p3_range.clone()),
             events: sched.events,
             tasks,
+            folded: false,
+        })
+    }
+
+    /// Symmetry-folded pricing: compile one representative rank group per
+    /// tier — node 0's intra phases plus one node's view of each
+    /// NIC-stripe inter ring, routed over [`Cluster::folded_pool`]'s
+    /// spine share — DES-run the reduced graph once, and read every
+    /// node's timings off it (identical copies price identically).
+    /// Barriered, provably uncontended inter phases drop further to the
+    /// closed-form flow evaluator ([`crate::sim::flow`]), embedded as
+    /// per-stripe delays so spans/tags stay uniform. Callers reach this
+    /// only through [`Self::run`] with [`Self::should_fold`] true.
+    fn run_folded(
+        &self,
+        msg_bytes: u64,
+        tiers: &TierShares,
+        elem_bytes: u64,
+    ) -> Result<HierReport> {
+        debug_assert!(self.fold_eligible());
+        let mut hg = HierGraph::folded(self);
+        let (p1_range, p2_range) = match self.kind {
+            CollectiveKind::AllReduce => {
+                self.fold_allreduce(&mut hg, msg_bytes, tiers, elem_bytes)?
+            }
+            CollectiveKind::AllGather => {
+                self.fold_allgather(&mut hg, msg_bytes, tiers, elem_bytes)?
+            }
+            CollectiveKind::ReduceScatter => {
+                self.fold_reduce_scatter(&mut hg, msg_bytes, tiers, elem_bytes)?
+            }
+            _ => unreachable!("fold_eligible gates the operator set"),
+        };
+        let compiled = hg.into_compiled(p1_range, p2_range);
+        let tasks = compiled.graph.len();
+        let sched = Engine::new(&compiled.pool).run(&compiled.graph)?;
+        let intra_times = tiers
+            .intra
+            .active_paths()
+            .into_iter()
+            .filter_map(|p| sched.tag_finish(&compiled.graph, p.tag()).map(|t| (p, t)))
+            .collect();
+        let inter_times = tiers
+            .inter
+            .active_paths()
+            .into_iter()
+            .filter_map(|s| sched.tag_finish(&compiled.graph, s.tag()).map(|t| (s, t)))
+            .collect();
+        Ok(HierReport {
+            kind: self.kind,
+            msg_bytes,
+            total: sched.makespan,
+            intra_times,
+            inter_times,
+            intra_phase1: phase_span(&sched, compiled.p1_range.clone()),
+            inter_phase: phase_span(&sched, compiled.p2_range.clone()),
+            intra_phase3: phase_span(&sched, compiled.p3_range.clone()),
+            events: sched.events,
+            tasks,
+            folded: true,
         })
     }
 
@@ -418,6 +553,7 @@ impl<'c> ClusterCollective<'c> {
                 intra_phase3: phase_span(&sched, p3_range),
                 events: sched.events,
                 tasks,
+                folded: false,
             },
             failed_tasks: run.failed.len(),
             first_failure: run.first_failure,
@@ -498,36 +634,74 @@ impl<'c> ClusterCollective<'c> {
             "inter phase needs ≥2 nodes"
         );
         let nn = self.cluster.n_nodes();
-        let mut hg = HierGraph::new(self);
         let payload = self.inter_payload(msg_bytes);
         let ext = inter.to_extents(payload, crate::dtype::natural_align(payload));
-        let root = hg.barrier(Vec::new());
-        let entry = vec![root; nn];
-        for (sid, _, len) in &ext {
-            let stripe = sid.0 as usize;
-            let tag = sid.tag();
-            match self.kind {
-                CollectiveKind::AllReduce => {
-                    let finals = hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
-                    let sub = len.div_ceil(nn as u64);
-                    let start = chunked_deps(&finals);
-                    hg.inter_ring_allgather(stripe, sub, &start, tag);
+        let mut hg;
+        if self.should_fold() {
+            // Folded stripe probing: the stripe tuner hammers this in a
+            // loop at every scale, so the representative ring matters
+            // most right here (tuning cost was the O(nodes²) term).
+            hg = HierGraph::folded(self);
+            let root = hg.barrier(Vec::new());
+            for (sid, _, len) in &ext {
+                let stripe = sid.0 as usize;
+                let tag = sid.tag();
+                match self.kind {
+                    CollectiveKind::AllReduce => {
+                        let finals = hg
+                            .fold_ring_reduce_scatter(stripe, 0, *len, None, Some(root), tag);
+                        let sub = len.div_ceil(nn as u64);
+                        let mut at: Vec<Vec<TaskId>> =
+                            finals.iter().map(|t| vec![*t]).collect();
+                        for _s in 0..nn - 1 {
+                            let arr = hg.send_inter(0, 0, stripe, sub, &at, false, tag);
+                            at = arr.iter().map(|t| vec![*t]).collect();
+                        }
+                    }
+                    CollectiveKind::AllGather => {
+                        let n_chunks = hg.inter_chunks(*len);
+                        let mut at: Vec<Vec<TaskId>> = vec![vec![root]; n_chunks];
+                        for _s in 0..nn - 1 {
+                            let arr = hg.send_inter(0, 0, stripe, *len, &at, false, tag);
+                            at = arr.iter().map(|t| vec![*t]).collect();
+                        }
+                    }
+                    CollectiveKind::ReduceScatter => {
+                        hg.fold_ring_reduce_scatter(stripe, 0, *len, None, Some(root), tag);
+                    }
+                    _ => unreachable!("fold_eligible gates the operator set"),
                 }
-                CollectiveKind::AllGather => {
-                    let n_chunks = hg.inter_chunks(*len);
-                    let start: Vec<Vec<Vec<TaskId>>> =
-                        vec![vec![vec![root]; n_chunks]; nn];
-                    hg.inter_ring_allgather(stripe, *len, &start, tag);
-                }
-                CollectiveKind::ReduceScatter => {
-                    hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
-                }
-                CollectiveKind::Broadcast => {
-                    let entry = vec![vec![root]; hg.inter_chunks(*len)];
-                    hg.inter_chain(stripe, *len, &entry, tag);
-                }
-                CollectiveKind::AllToAll => {
-                    anyhow::bail!("alltoall has no hierarchical lowering yet")
+            }
+        } else {
+            hg = HierGraph::new(self);
+            let root = hg.barrier(Vec::new());
+            let entry = vec![root; nn];
+            for (sid, _, len) in &ext {
+                let stripe = sid.0 as usize;
+                let tag = sid.tag();
+                match self.kind {
+                    CollectiveKind::AllReduce => {
+                        let finals = hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
+                        let sub = len.div_ceil(nn as u64);
+                        let start = chunked_deps(&finals);
+                        hg.inter_ring_allgather(stripe, sub, &start, tag);
+                    }
+                    CollectiveKind::AllGather => {
+                        let n_chunks = hg.inter_chunks(*len);
+                        let start: Vec<Vec<Vec<TaskId>>> =
+                            vec![vec![vec![root]; n_chunks]; nn];
+                        hg.inter_ring_allgather(stripe, *len, &start, tag);
+                    }
+                    CollectiveKind::ReduceScatter => {
+                        hg.inter_ring_reduce_scatter(stripe, *len, &entry, tag);
+                    }
+                    CollectiveKind::Broadcast => {
+                        let entry = vec![vec![root]; hg.inter_chunks(*len)];
+                        hg.inter_chain(stripe, *len, &entry, tag);
+                    }
+                    CollectiveKind::AllToAll => {
+                        anyhow::bail!("alltoall has no hierarchical lowering yet")
+                    }
                 }
             }
         }
@@ -557,6 +731,9 @@ impl<'c> ClusterCollective<'c> {
     /// lands at offset `extent_off + rs_owned_block(r)·block`; under
     /// recursive halving at `extent_off + r·block` — the maps carry
     /// actual byte offsets, so the inter phase is ownership-agnostic).
+    /// `n_emit` is the number of nodes to emit the phase for: the full
+    /// `n_nodes` for exact graphs, 1 for the symmetry-folded
+    /// representative (whose map/barrier then stands in for every node).
     fn phase1_reduce_scatter(
         &self,
         hg: &mut HierGraph<'_>,
@@ -564,12 +741,12 @@ impl<'c> ClusterCollective<'c> {
         rs_models: &[(PathId, PathModel)],
         rs_algos: &[Algo],
         pipeline: bool,
+        n_emit: usize,
     ) -> (Vec<TaskId>, Vec<ChunkMap>) {
-        let nn = self.cluster.n_nodes();
         let nl = self.n_local as u64;
         let mut bars = Vec::new();
         let mut maps = Vec::new();
-        for k in 0..nn {
+        for k in 0..n_emit {
             let mut map = ChunkMap::new();
             let mut finals_all: Vec<TaskId> = Vec::new();
             hg.with_node_builder(k, rs_models, |b| {
@@ -652,7 +829,7 @@ impl<'c> ClusterCollective<'c> {
 
         // Phase 1: intra reduce-scatter on every node.
         let (p1_bars, p1_maps) =
-            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline);
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline, nn);
         let p1_end = hg.graph.len();
 
         // Phase 2: per-stripe inter-node ring allreduce of the shards.
@@ -853,7 +1030,7 @@ impl<'c> ClusterCollective<'c> {
                     .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
 
         let (p1_bars, p1_maps) =
-            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline);
+            self.phase1_reduce_scatter(&mut hg, &intra_ext, &rs_models, &rs_algos, pipeline, nn);
         let p1_end = hg.graph.len();
 
         for (sid, s_off, len) in &inter_ext {
@@ -977,6 +1154,305 @@ impl<'c> ClusterCollective<'c> {
             });
         }
         Ok(hg.into_compiled(base..p1_end, p1_end..p2_end))
+    }
+
+    // -----------------------------------------------------------------
+    // Symmetry-folded lowerings: one representative rank group per tier.
+    // Node 0 stands in for every node — its intra phases compile as
+    // usual (its resource ids are a prefix of the shared pool, rebuilt
+    // verbatim in the folded pool), and each inter ring compiles as node
+    // 0's send chain with the real step count, routed over node 0's NIC
+    // legs plus the scaled spine share. The key identity: under
+    // symmetry, node k's step-(s−1) arrival from its ring predecessor
+    // finishes exactly when node 0's own step-(s−1) send arrives, so
+    // self-chaining the representative's steps (and standing node 0's
+    // producer map in for its neighbours') reproduces the full graph's
+    // timeline while emitting O(stripes·steps·chunks) tasks instead of
+    // O(nodes·stripes·steps·chunks) — with the intra tier shrinking from
+    // `n_nodes` node subgraphs to one.
+    // -----------------------------------------------------------------
+
+    /// Folded AllReduce: representative intra RS → per-stripe folded
+    /// inter ring (RS + AG halves, or one closed-form flow delay when
+    /// barriered and uncontended) → representative intra AG.
+    fn fold_allreduce(
+        &self,
+        hg: &mut HierGraph<'_>,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<(Range<usize>, Range<usize>)> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let base = hg.graph.len();
+        let intra_ext = tiers.intra.to_extents(msg, elem);
+        let inter_ext = tiers.inter.to_extents(msg, elem);
+        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+        let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        let rs_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::ReduceScatter, *p, *len, &rs_models)
+            })
+            .collect();
+        let ag_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::AllGather, *p, len.div_ceil(nl), &ag_models)
+            })
+            .collect();
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(intra_ext
+                .iter()
+                .all(|(_, _, len)| single_chunk(len.div_ceil(nl), chunk))
+                && inter_ext
+                    .iter()
+                    .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
+
+        let (p1_bars, p1_maps) =
+            self.phase1_reduce_scatter(hg, &intra_ext, &rs_models, &rs_algos, pipeline, 1);
+        let p1_end = hg.graph.len();
+
+        let flow_ok = !pipeline && hg.fold_flow_eligible(&inter_ext);
+        let mut p2_done: Vec<TaskId> = Vec::new();
+        let mut p2_map = ChunkMap::new();
+        for (sid, s_off, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            let sub = len.div_ceil(nn as u64);
+            let sub_sizes = ring::chunk_sizes(sub, hg.inter_model.chunk_bytes);
+            if flow_ok {
+                // Closed-form: chunk-wavefront RS chain feeding the AG
+                // chain, at the stripe's private bottleneck rate.
+                let rs = hg.fold_flow_phase(stripe, sub, nn - 1, true, &[]);
+                let ag = hg.fold_flow_phase(stripe, sub, nn - 1, false, &rs);
+                let dur = ag.into_iter().fold(SimTime::ZERO, SimTime::max);
+                let d = hg.graph.add_tagged(
+                    TaskKind::Delay { duration: dur },
+                    vec![p1_bars[0]],
+                    tag,
+                );
+                p2_done.push(d);
+                continue;
+            }
+            if pipeline {
+                let finals = hg.fold_ring_reduce_scatter(
+                    stripe,
+                    *s_off,
+                    *len,
+                    Some(&p1_maps[0]),
+                    None,
+                    tag,
+                );
+                let own = ring::rs_owned_block(0, nn) as u64;
+                p2_map.insert_chunks(*s_off + own * sub, &sub_sizes, &finals);
+                let mut at: Vec<Vec<TaskId>> =
+                    finals.iter().map(|t| vec![*t]).collect();
+                for s in 0..nn - 1 {
+                    let arr = hg.send_inter(0, 0, stripe, sub, &at, false, tag);
+                    // AG step s delivers sub-block (nn − s) mod nn to the
+                    // representative (the m = 0 case of the exact graph's
+                    // attribution).
+                    let blk = ((nn - s) % nn) as u64;
+                    p2_map.insert_chunks(*s_off + blk * sub, &sub_sizes, &arr);
+                    at = arr.iter().map(|t| vec![*t]).collect();
+                }
+            } else {
+                let finals = hg.fold_ring_reduce_scatter(
+                    stripe,
+                    *s_off,
+                    *len,
+                    None,
+                    Some(p1_bars[0]),
+                    tag,
+                );
+                p2_done.extend(finals.iter().copied());
+                let mut at: Vec<Vec<TaskId>> =
+                    finals.iter().map(|t| vec![*t]).collect();
+                for _s in 0..nn - 1 {
+                    let arr = hg.send_inter(0, 0, stripe, sub, &at, false, tag);
+                    p2_done.extend(arr.iter().copied());
+                    at = arr.iter().map(|t| vec![*t]).collect();
+                }
+            }
+        }
+        let p2_bar = if pipeline {
+            None
+        } else {
+            Some(hg.barrier(p2_done))
+        };
+        let p2_end = hg.graph.len();
+
+        hg.with_node_builder(0, &ag_models, |b| {
+            for ((p, off, len), al) in intra_ext.iter().zip(&ag_algos) {
+                let block = len.div_ceil(nl);
+                let sizes = b.chunks_for(*p, block);
+                let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
+                    (0..nl)
+                        .map(|r| p2_map.deps_for_chunks(*off + r * block, &sizes))
+                        .collect()
+                } else {
+                    vec![vec![vec![p2_bar.unwrap()]; sizes.len()]; nl as usize]
+                };
+                intra_allgather_dispatch(b, *al, *p, block, &entry, p.tag());
+            }
+        });
+        Ok((base..p1_end, p1_end..p2_end))
+    }
+
+    /// Folded AllGather: per-stripe folded inter ring (or flow delay) →
+    /// representative intra AG over the source-extended arrival map.
+    fn fold_allgather(
+        &self,
+        hg: &mut HierGraph<'_>,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<(Range<usize>, Range<usize>)> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let base = hg.graph.len();
+        let ag_models = self.intra_models(CollectiveKind::AllGather, &tiers.intra);
+        let inter_ext = tiers.inter.to_extents(msg * nl, elem);
+        let intra_ext = tiers.intra.to_extents(msg * nn as u64, elem);
+        let ag_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| self.phase_algo(CollectiveKind::AllGather, *p, *len, &ag_models))
+            .collect();
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(inter_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
+                && intra_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk)));
+
+        let root = hg.barrier(Vec::new());
+        let stride = msg * nl;
+        let flow_ok = !pipeline && hg.fold_flow_eligible(&inter_ext);
+        let mut p2_done: Vec<TaskId> = Vec::new();
+        let mut p2_map = ChunkMap::new();
+        for (sid, s_off, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            let sizes = ring::chunk_sizes(*len, hg.inter_model.chunk_bytes);
+            if flow_ok {
+                let arr = hg.fold_flow_phase(stripe, *len, nn - 1, false, &[]);
+                let dur = arr.into_iter().fold(SimTime::ZERO, SimTime::max);
+                let d = hg.graph.add_tagged(
+                    TaskKind::Delay { duration: dur },
+                    vec![root],
+                    tag,
+                );
+                p2_done.push(d);
+                continue;
+            }
+            let mut at: Vec<Vec<TaskId>> = vec![vec![root]; sizes.len()];
+            for s in 0..nn - 1 {
+                let arr = hg.send_inter(0, 0, stripe, *len, &at, false, tag);
+                if pipeline {
+                    // Step s delivers node (nn − 1 − s)'s copy to the
+                    // representative (the m = 0 case).
+                    let src = (nn - 1 - s) % nn;
+                    p2_map.insert_chunks(src as u64 * stride + *s_off, &sizes, &arr);
+                } else {
+                    p2_done.extend(arr.iter().copied());
+                }
+                at = arr.iter().map(|t| vec![*t]).collect();
+            }
+        }
+        let p2_bar = if pipeline {
+            None
+        } else {
+            Some(hg.barrier(p2_done))
+        };
+        let p2_end = hg.graph.len();
+
+        hg.with_node_builder(0, &ag_models, |b| {
+            for ((p, off, len), al) in intra_ext.iter().zip(&ag_algos) {
+                let sizes = b.chunks_for(*p, *len);
+                let entry: Vec<Vec<Vec<TaskId>>> = if pipeline {
+                    (0..self.n_local)
+                        .map(|r| {
+                            group_entry_deps(&p2_map, 0, r, *off, &sizes, msg, nn, stride)
+                        })
+                        .collect()
+                } else {
+                    vec![vec![vec![p2_bar.unwrap()]; sizes.len()]; self.n_local]
+                };
+                intra_allgather_dispatch(b, *al, *p, *len, &entry, p.tag());
+            }
+        });
+        Ok((base..base, base..p2_end))
+    }
+
+    /// Folded ReduceScatter: representative intra RS → per-stripe folded
+    /// inter RS chain (or flow delay); outputs land scattered, no phase 3.
+    fn fold_reduce_scatter(
+        &self,
+        hg: &mut HierGraph<'_>,
+        msg: u64,
+        tiers: &TierShares,
+        elem: u64,
+    ) -> Result<(Range<usize>, Range<usize>)> {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let base = hg.graph.len();
+        let intra_ext = tiers.intra.to_extents(msg, elem);
+        let inter_ext = tiers.inter.to_extents(msg, elem);
+        let rs_models = self.intra_models(CollectiveKind::ReduceScatter, &tiers.intra);
+        let rs_algos: Vec<Algo> = intra_ext
+            .iter()
+            .map(|(p, _, len)| {
+                self.phase_algo(CollectiveKind::ReduceScatter, *p, *len, &rs_models)
+            })
+            .collect();
+        let chunk = self.calib.chunk_bytes;
+        let pipeline = self.pipeline
+            && !(intra_ext
+                .iter()
+                .all(|(_, _, len)| single_chunk(len.div_ceil(nl), chunk))
+                && inter_ext
+                    .iter()
+                    .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
+
+        let (p1_bars, p1_maps) =
+            self.phase1_reduce_scatter(hg, &intra_ext, &rs_models, &rs_algos, pipeline, 1);
+        let p1_end = hg.graph.len();
+
+        let flow_ok = !pipeline && hg.fold_flow_eligible(&inter_ext);
+        for (sid, s_off, len) in &inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            if flow_ok {
+                let sub = len.div_ceil(nn as u64);
+                let arr = hg.fold_flow_phase(stripe, sub, nn - 1, true, &[]);
+                let dur = arr.into_iter().fold(SimTime::ZERO, SimTime::max);
+                hg.graph.add_tagged(
+                    TaskKind::Delay { duration: dur },
+                    vec![p1_bars[0]],
+                    tag,
+                );
+            } else if pipeline {
+                hg.fold_ring_reduce_scatter(
+                    stripe,
+                    *s_off,
+                    *len,
+                    Some(&p1_maps[0]),
+                    None,
+                    tag,
+                );
+            } else {
+                hg.fold_ring_reduce_scatter(
+                    stripe,
+                    *s_off,
+                    *len,
+                    None,
+                    Some(p1_bars[0]),
+                    tag,
+                );
+            }
+        }
+        let p2_end = hg.graph.len();
+        Ok((base..p1_end, p1_end..p2_end))
     }
 }
 
@@ -1180,6 +1656,12 @@ struct HierGraph<'c> {
     /// `[node][stripe]` single-put-stream cap of that NIC's uplink.
     stripe_proto: Vec<Vec<ResourceId>>,
     reduce_bps: f64,
+    /// Folded pricing: per-stripe stand-in uplink routes over node 0's
+    /// NIC legs plus the scaled spine share (replaces
+    /// [`Cluster::uplink_route`] when set).
+    fold_routes: Option<Vec<Vec<ResourceId>>>,
+    /// The scaled spine-share resource of the folded pool.
+    fold_spine: Option<ResourceId>,
 }
 
 impl<'c> HierGraph<'c> {
@@ -1220,6 +1702,60 @@ impl<'c> HierGraph<'c> {
             hop_latency,
             stripe_proto,
             reduce_bps: cc.calib.reduce_bps,
+            fold_routes: None,
+            fold_spine: None,
+        }
+    }
+
+    /// Folded variant: the pool holds node 0's resources plus one
+    /// spine-share stand-in ([`Cluster::folded_pool`]); protocol
+    /// resources exist only for the representative node, and inter sends
+    /// route over the fold routes regardless of the `src`/`dst` indices
+    /// they are called with.
+    fn folded(cc: &ClusterCollective<'c>) -> Self {
+        let (mut pool, fold_spine) = cc
+            .cluster
+            .folded_pool()
+            .expect("folded pricing needs a multi-node cluster");
+        let spec = &cc.cluster.spec.node;
+        let nl = cc.n_local;
+        let inter_model = cc
+            .calib
+            .rdma_model(spec.nic_unidir_bps(), cc.cluster.n_nodes().max(2));
+        let hop_latency =
+            SimTime::from_secs_f64(cc.cluster.spec.fabric.hop_latency_us * 1e-6);
+        let stripe_proto = vec![(0..nl)
+            .map(|g| {
+                pool.add(format!("proto.inter.node0.nic{g}"), inter_model.rate_cap)
+            })
+            .collect()];
+        let node0 = cc.cluster.node(0);
+        let fold_routes = (0..nl)
+            .map(|g| {
+                let mut r = Vec::with_capacity(5);
+                if spec.path_contention {
+                    r.push(node0.pcie_up[g]);
+                }
+                r.push(node0.nic_up[g]);
+                r.push(fold_spine);
+                r.push(node0.nic_down[g]);
+                if spec.path_contention {
+                    r.push(node0.pcie_down[g]);
+                }
+                r
+            })
+            .collect();
+        HierGraph {
+            cluster: cc.cluster,
+            pool,
+            graph: TaskGraph::new(),
+            n_local: nl,
+            inter_model,
+            hop_latency,
+            stripe_proto,
+            reduce_bps: cc.calib.reduce_bps,
+            fold_routes: Some(fold_routes),
+            fold_spine: Some(fold_spine),
         }
     }
 
@@ -1297,10 +1833,13 @@ impl<'c> HierGraph<'c> {
                 deps.push(pe);
             }
             let mut route = vec![self.stripe_proto[src_node][stripe]];
-            route.extend(
-                self.cluster
-                    .uplink_route(src_node, stripe, dst_node, stripe),
-            );
+            match &self.fold_routes {
+                Some(rs) => route.extend(rs[stripe].iter().copied()),
+                None => route.extend(
+                    self.cluster
+                        .uplink_route(src_node, stripe, dst_node, stripe),
+                ),
+            }
             let t = self.graph.add_tagged(
                 TaskKind::Transfer {
                     bytes: chunk_bytes,
@@ -1327,6 +1866,122 @@ impl<'c> HierGraph<'c> {
             arrivals.push(arrival);
         }
         arrivals
+    }
+
+    /// Bottleneck rate of one folded stripe route, *excluding* the shared
+    /// spine (the stripe's private legs plus the protocol cap). Used both
+    /// to price flow segments and to decide whether the spine could ever
+    /// be the bottleneck.
+    fn fold_stripe_rate(&self, stripe: usize) -> f64 {
+        let spine = self.fold_spine.expect("fold helpers need a folded graph");
+        let route = &self.fold_routes.as_ref().expect("folded graph")[stripe];
+        flow::bottleneck_rate(
+            route
+                .iter()
+                .filter(|id| **id != spine)
+                .map(|id| self.pool.capacity(*id)),
+            self.inter_model.rate_cap,
+        )
+    }
+
+    /// Flow fast path is sound iff every active stripe stays uncontended:
+    /// FIFO egress keeps at most one in-flight transfer per stripe, so
+    /// with `a` active stripes the spine carries ≤ `a` concurrent flows —
+    /// if each stripe's private bottleneck is ≤ spine_cap / a, the
+    /// max–min solution is each flow at its private rate and the chain
+    /// has a closed form.
+    fn fold_flow_eligible(&self, inter_ext: &[(StripeId, u64, u64)]) -> bool {
+        let Some(spine) = self.fold_spine else {
+            return false;
+        };
+        let active: Vec<usize> = inter_ext
+            .iter()
+            .filter(|(_, _, len)| *len > 0)
+            .map(|(sid, _, _)| sid.0 as usize)
+            .collect();
+        if active.is_empty() {
+            return false;
+        }
+        let fair = self.pool.capacity(spine) / active.len() as f64;
+        active.iter().all(|&s| self.fold_stripe_rate(s) <= fair)
+    }
+
+    /// Price one folded ring phase on `stripe` as a closed-form chunk
+    /// chain: `steps` hops over the stripe's private bottleneck rate,
+    /// with the same per-hop gate and reduce semantics as [`send_inter`].
+    /// `ready` carries per-chunk readiness from a previous chain (empty
+    /// slice ⇒ all chunks ready at phase start).
+    fn fold_flow_phase(
+        &self,
+        stripe: usize,
+        block: u64,
+        steps: usize,
+        reduce: bool,
+        ready: &[SimTime],
+    ) -> Vec<SimTime> {
+        let sizes = ring::chunk_sizes(block, self.inter_model.chunk_bytes);
+        let gate = self.inter_model.step_latency
+            + self.hop_latency
+            + if reduce {
+                self.inter_model.reduce_step_latency
+            } else {
+                SimTime::ZERO
+            };
+        let spec = flow::ChainSpec {
+            steps,
+            gate,
+            rate_bps: self.fold_stripe_rate(stripe),
+            reduce_bps: reduce.then_some(self.reduce_bps),
+        };
+        let zeros;
+        let ready = if ready.is_empty() {
+            zeros = vec![SimTime::ZERO; sizes.len()];
+            &zeros
+        } else {
+            ready
+        };
+        flow::chain_arrivals(&spec, &sizes, ready)
+    }
+
+    /// Folded ring reduce-scatter on one stripe: nn−1 self-chained
+    /// representative sends. Under symmetry, node 0's step-(s−1) arrival
+    /// coincides with what its ring predecessor would deliver, so each
+    /// step's receive-side dependency is the previous step's own arrival;
+    /// the producer-map/barrier entry stands in for every node's phase-1
+    /// output (node 0's is identical to all of them). Returns the final
+    /// (reduced) per-chunk arrivals of the owned sub-block.
+    fn fold_ring_reduce_scatter(
+        &mut self,
+        stripe: usize,
+        s_off: u64,
+        len: u64,
+        producer: Option<&ChunkMap>,
+        entry: Option<TaskId>,
+        tag: u32,
+    ) -> Vec<TaskId> {
+        let nn = self.cluster.n_nodes();
+        let sub = len.div_ceil(nn as u64);
+        let sizes = ring::chunk_sizes(sub, self.inter_model.chunk_bytes);
+        let mut prev: Vec<TaskId> = Vec::new();
+        for s in 0..nn - 1 {
+            let blk = ring::rs_send_block(0, s, nn) as u64;
+            let mut deps: Vec<Vec<TaskId>> = match producer {
+                Some(map) => map.deps_for_chunks(s_off + blk * sub, &sizes),
+                None => {
+                    let e = entry.expect("barriered fold needs an entry barrier");
+                    vec![vec![e]; sizes.len()]
+                }
+            };
+            if s > 0 {
+                for (c, d) in deps.iter_mut().enumerate() {
+                    d.push(prev[c]);
+                }
+            }
+            // The exact compiler's extra s == nn−2 receiver-shard dep is
+            // node 0's own producer output here — already present.
+            prev = self.send_inter(0, 0, stripe, sub, &deps, true, tag);
+        }
+        prev
     }
 
     /// Consume the accumulated (pool, graph) into a [`CompiledHier`] with
@@ -1904,5 +2559,83 @@ mod tests {
             t_tight,
             t_full
         );
+    }
+
+    /// The fold soundness claim: on a healthy symmetric cluster the
+    /// reduced representative graph (and, barriered, the closed-form flow
+    /// segments) prices within 5% of the full per-node DES — while
+    /// emitting strictly fewer tasks.
+    #[test]
+    fn folded_pricing_matches_exact_at_small_scale() {
+        for nn in [2usize, 4] {
+            let c = cluster(nn);
+            for kind in [
+                CollectiveKind::AllReduce,
+                CollectiveKind::AllGather,
+                CollectiveKind::ReduceScatter,
+            ] {
+                for pipeline in [true, false] {
+                    let tiers = TierShares::new(Shares::nvlink_only(), 8);
+                    let msg = 32u64 << 20;
+                    let exact = cc(&c, kind)
+                        .with_pipeline(pipeline)
+                        .run(msg, &tiers, 4)
+                        .unwrap();
+                    let folded = cc(&c, kind)
+                        .with_pipeline(pipeline)
+                        .with_pricing(PricingMode::Folded)
+                        .run(msg, &tiers, 4)
+                        .unwrap();
+                    assert!(!exact.folded);
+                    assert!(
+                        folded.folded,
+                        "nn={nn} {kind} pipeline={pipeline}: fold did not engage"
+                    );
+                    assert!(
+                        folded.tasks < exact.tasks,
+                        "nn={nn} {kind} pipeline={pipeline}: folded graph not smaller \
+                         ({} vs {})",
+                        folded.tasks,
+                        exact.tasks
+                    );
+                    let (e, f) = (exact.total.as_secs_f64(), folded.total.as_secs_f64());
+                    assert!(
+                        (e - f).abs() <= 0.05 * e,
+                        "nn={nn} {kind} pipeline={pipeline}: folded {f} vs exact {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Broken symmetry (a degraded NIC) must force the exact graph even
+    /// under `Folded`/`Auto` — the fold's one-representative premise no
+    /// longer holds.
+    #[test]
+    fn fold_falls_back_on_broken_symmetry() {
+        let mut c = cluster(2);
+        let bad = c.node(0).nic_up[2];
+        c.pool.scale_capacity(bad, 0.25);
+        let col = cc(&c, CollectiveKind::AllReduce).with_pricing(PricingMode::Folded);
+        assert!(!col.fold_eligible(), "asymmetric cluster priced as symmetric");
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let rep = col.run(8 << 20, &tiers, 4).unwrap();
+        assert!(!rep.folded, "fold engaged on an asymmetric cluster");
+    }
+
+    /// `Auto` pins small clusters to the exact graph and folds at scale.
+    #[test]
+    fn auto_pricing_folds_only_at_scale() {
+        let small = cluster(2);
+        let col = cc(&small, CollectiveKind::AllReduce).with_pricing(PricingMode::Auto);
+        assert!(col.fold_eligible());
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        assert!(!col.run(8 << 20, &tiers, 4).unwrap().folded);
+
+        let big = cluster(FOLD_AUTO_MIN_NODES);
+        let col = cc(&big, CollectiveKind::AllReduce).with_pricing(PricingMode::Auto);
+        let rep = col.run(8 << 20, &tiers, 4).unwrap();
+        assert!(rep.folded, "Auto did not fold at {FOLD_AUTO_MIN_NODES} nodes");
+        assert!(rep.total > SimTime::ZERO);
     }
 }

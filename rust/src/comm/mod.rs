@@ -42,8 +42,10 @@
 
 pub mod api;
 pub mod group;
+pub mod plan_cache;
 pub mod stream;
 
+pub use plan_cache::CacheStats;
 pub use stream::{
     CollectiveOutcome, CollectivePlan, Event, OpOutcome, PendingOp, SimDevice, Stream,
 };
@@ -53,7 +55,7 @@ use crate::balancer::{
 };
 use crate::collectives::algo::{size_class, Algo, AlgoTable};
 use crate::collectives::exec;
-use crate::collectives::hierarchical::{ClusterCollective, PhaseSpan};
+use crate::collectives::hierarchical::{ClusterCollective, PhaseSpan, PricingMode};
 use crate::collectives::multipath::{MultipathCollective, RunReport};
 use crate::collectives::CollectiveKind;
 use crate::config::presets::Preset;
@@ -401,6 +403,9 @@ impl Communicator {
     /// algorithm policy (`algo` — each intra phase selects from its own
     /// phase message size; the inter ring stays ring).
     fn cc(&self, kind: CollectiveKind) -> ClusterCollective<'_> {
+        // Auto pricing: exact per-chunk graphs below the fold threshold
+        // (identical to before), symmetry-folded probing at scale — the
+        // stripe tuner's run_inter_only loop was the O(nodes²) term.
         ClusterCollective::new(
             &self.cluster,
             self.cfg.run.calibration(),
@@ -409,6 +414,7 @@ impl Communicator {
         )
         .with_pipeline(self.cfg.run.pipeline_phases)
         .with_algo(self.cfg.run.algo)
+        .with_pricing(PricingMode::Auto)
     }
 
     /// Ensure the (operator, size class) has been through Algorithm 1
@@ -572,10 +578,12 @@ impl Communicator {
         let mut outcome = self.device.take_result(op)?;
         if let Some(col) = outcome.collective.as_mut() {
             let key = (col.report.kind, size_class(col.report.msg_bytes));
+            let mut retuned = false;
             if let Some(state) = self.ops.get_mut(&key) {
                 state.calls += 1;
                 if !outcome.contended {
                     col.report.adjusted = state.balancer.observe(col.intra_obs.clone());
+                    retuned |= col.report.adjusted.is_some();
                 }
             }
             if !outcome.contended {
@@ -583,7 +591,14 @@ impl Communicator {
                     (col.report.tiers.as_mut(), self.inter_ops.get_mut(&key))
                 {
                     tiers.adjusted = rb.observe(col.inter_obs.clone());
+                    retuned |= tiers.adjusted.is_some();
                 }
+            }
+            // A landed share movement changes what the *next* call of
+            // this operator will price — every cached pricing keyed on
+            // the old tuning state is stale.
+            if retuned {
+                self.device.invalidate_plans();
             }
         }
         Ok(outcome)

@@ -1,0 +1,247 @@
+//! Compiled-plan cache: steady-state repeated collectives skip the
+//! compile + DES entirely.
+//!
+//! Training loops issue the *same* collective thousands of times — same
+//! cluster shape, operator, dtype, message size, shares, algorithm,
+//! pipeline mode. The chunk DES is deterministic (virtual time, no
+//! entropy), so a solo op's priced report is a pure function of its
+//! [`CollectivePlan`] and the tuning state it snapshotted; caching the
+//! full `(report, intra_obs, inter_obs)` triple and cloning it back on a
+//! hit is bit-identical to re-pricing, at hash-map cost.
+//!
+//! Correctness hinges on *invalidation*, not keying: anything that
+//! changes pricing without changing the plan — a share re-tune landing
+//! ([`crate::balancer`] adjustments applied via
+//! `Communicator::wait_op`), an algorithm re-selection, a fault-driven
+//! capacity mutation / re-lowering — must call [`PlanCache::invalidate`].
+//! The cache is epoch-stamped: invalidation bumps the epoch, which is
+//! part of every key, so stale entries simply stop matching (and are
+//! swept out when the map next fills). Contended batch pricing
+//! (`price_batch`) never consults the cache — a fused graph's timing
+//! depends on what else is in flight.
+
+use super::stream::{CollectivePlan, PlanShape};
+use super::CollectiveReport;
+use crate::balancer::shares::{ShareKey, Shares};
+use crate::collectives::algo::{Algo, AlgoSpec};
+use crate::collectives::CollectiveKind;
+use crate::links::{PathId, PathModel, StripeId};
+use crate::sim::SimTime;
+use std::collections::HashMap;
+
+/// Everything `price_plan_solo` returns for one plan.
+pub(crate) type CachedPricing = (
+    CollectiveReport,
+    Vec<(PathId, SimTime)>,
+    Vec<(StripeId, SimTime)>,
+);
+
+/// A structural fingerprint of one solo pricing question. Built by
+/// flattening every timing-relevant field of the plan — shape
+/// discriminant, operator, sizes, per-path models and shares, pipeline /
+/// algorithm flags — plus the cache epoch, into a word vector. Floats
+/// enter via `to_bits` (exact-representation equality: shares either
+/// match bit-for-bit or they are a different tuning state).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub(crate) struct PlanKey(Vec<u64>);
+
+fn kind_code(k: CollectiveKind) -> u64 {
+    match k {
+        CollectiveKind::AllReduce => 0,
+        CollectiveKind::AllGather => 1,
+        CollectiveKind::ReduceScatter => 2,
+        CollectiveKind::Broadcast => 3,
+        CollectiveKind::AllToAll => 4,
+    }
+}
+
+fn algo_code(a: Algo) -> u64 {
+    match a {
+        Algo::Ring => 0,
+        Algo::Tree => 1,
+        Algo::HalvingDoubling => 2,
+    }
+}
+
+fn algo_spec_code(a: AlgoSpec) -> u64 {
+    match a {
+        AlgoSpec::Auto => u64::MAX,
+        AlgoSpec::Fixed(f) => algo_code(f),
+    }
+}
+
+fn push_model(key: &mut Vec<u64>, m: &PathModel) {
+    key.push(m.step_latency.as_nanos());
+    key.push(m.reduce_step_latency.as_nanos());
+    key.push(m.rate_cap.to_bits());
+    key.push(m.chunk_bytes);
+}
+
+fn push_shares<K: ShareKey>(key: &mut Vec<u64>, shares: &Shares<K>, tag: impl Fn(K) -> u32) {
+    // BTreeMap-backed: active_paths() iterates in a deterministic order,
+    // so equal share states always flatten to equal key segments.
+    for p in shares.active_paths() {
+        key.push(tag(p) as u64);
+        key.push(shares.get(p).to_bits());
+    }
+}
+
+impl PlanKey {
+    pub(crate) fn of(plan: &CollectivePlan, epoch: u64) -> Self {
+        let mut key = vec![
+            epoch,
+            kind_code(plan.kind),
+            plan.msg_bytes,
+            plan.elem_bytes,
+        ];
+        match &plan.shape {
+            PlanShape::Flat { spec, shares } => {
+                key.push(0);
+                key.push(spec.n as u64);
+                key.push(algo_code(spec.algo));
+                for pa in &spec.paths {
+                    key.push(pa.path.tag() as u64);
+                    key.push(pa.bytes);
+                    push_model(&mut key, &pa.model);
+                }
+                push_shares(&mut key, shares, PathId::tag);
+            }
+            PlanShape::Hier {
+                tiers,
+                n_local,
+                pipeline,
+                algo,
+            } => {
+                key.push(1);
+                key.push(*n_local as u64);
+                key.push(*pipeline as u64);
+                key.push(algo_spec_code(*algo));
+                push_shares(&mut key, &tiers.intra, PathId::tag);
+                push_shares(&mut key, &tiers.inter, StripeId::tag);
+            }
+        }
+        PlanKey(key)
+    }
+}
+
+/// Hit/miss/invalidation counters, for the scale harness and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+    pub entries: usize,
+}
+
+/// Entries beyond this sweep the map (stale epochs dominate a full map;
+/// steady-state training loops hold a handful of live keys).
+const MAX_ENTRIES: usize = 256;
+
+/// The device-wide compiled-plan cache. Lives in its own `Mutex` beside
+/// — never inside — `DeviceState`: `flush` prices solo ops while holding
+/// the state lock, so nesting the cache there would deadlock.
+#[derive(Debug, Default)]
+pub(crate) struct PlanCache {
+    map: HashMap<PlanKey, CachedPricing>,
+    epoch: u64,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+}
+
+impl PlanCache {
+    /// Cached pricing for `plan` under the current epoch, if any.
+    pub(crate) fn get(&mut self, plan: &CollectivePlan) -> Option<CachedPricing> {
+        let key = PlanKey::of(plan, self.epoch);
+        match self.map.get(&key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Record a cold pricing under the current epoch.
+    pub(crate) fn put(&mut self, plan: &CollectivePlan, pricing: CachedPricing) {
+        if self.map.len() >= MAX_ENTRIES {
+            self.map.clear();
+        }
+        self.map.insert(PlanKey::of(plan, self.epoch), pricing);
+    }
+
+    /// Drop every cached pricing: the world changed out from under the
+    /// keys (share re-tune, algo re-select, fault / repair).
+    pub(crate) fn invalidate(&mut self) {
+        self.epoch += 1;
+        self.invalidations += 1;
+        self.map.clear();
+    }
+
+    pub(crate) fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            invalidations: self.invalidations,
+            entries: self.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::tier::TierShares;
+
+    fn hier_plan(msg: u64) -> CollectivePlan {
+        CollectivePlan {
+            kind: CollectiveKind::AllReduce,
+            msg_bytes: msg,
+            elem_bytes: 4,
+            shape: PlanShape::Hier {
+                tiers: TierShares::new(Shares::nvlink_only(), 8),
+                n_local: 8,
+                pipeline: true,
+                algo: AlgoSpec::Auto,
+            },
+        }
+    }
+
+    #[test]
+    fn keys_separate_plans_and_epochs() {
+        let a = PlanKey::of(&hier_plan(1 << 20), 0);
+        let same = PlanKey::of(&hier_plan(1 << 20), 0);
+        let other_msg = PlanKey::of(&hier_plan(2 << 20), 0);
+        let other_epoch = PlanKey::of(&hier_plan(1 << 20), 1);
+        assert_eq!(a, same);
+        assert_ne!(a, other_msg);
+        assert_ne!(a, other_epoch);
+    }
+
+    #[test]
+    fn shares_changes_change_the_key() {
+        let mut p = hier_plan(1 << 20);
+        let a = PlanKey::of(&p, 0);
+        if let PlanShape::Hier { tiers, .. } = &mut p.shape {
+            *tiers = TierShares::new(
+                Shares::from_pcts(&[(PathId::Nvlink, 90.0), (PathId::Pcie, 10.0)]),
+                8,
+            );
+        }
+        assert_ne!(a, PlanKey::of(&p, 0), "share state must be part of the key");
+    }
+
+    #[test]
+    fn invalidation_bumps_epoch_and_clears() {
+        let mut c = PlanCache::default();
+        assert!(c.get(&hier_plan(1 << 20)).is_none());
+        assert_eq!(c.stats().misses, 1);
+        c.invalidate();
+        let s = c.stats();
+        assert_eq!(s.invalidations, 1);
+        assert_eq!(s.entries, 0);
+    }
+}

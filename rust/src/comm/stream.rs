@@ -49,7 +49,8 @@
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
 use crate::collectives::algo::AlgoSpec;
-use crate::collectives::hierarchical::ClusterCollective;
+use super::plan_cache::{CacheStats, PlanCache};
+use crate::collectives::hierarchical::{ClusterCollective, PricingMode};
 use crate::collectives::multipath::RunReport;
 use crate::collectives::schedule::{
     self, phase_span, GraphBuilder, MultipathSpec, PathTiming, PhaseSpan, SimOutcome,
@@ -283,6 +284,10 @@ pub struct SimDevice {
     cluster: Cluster,
     calib: Calibration,
     state: Mutex<DeviceState>,
+    /// Compiled-plan cache for solo pricings. Its own lock, *never*
+    /// nested inside `state`: `flush` prices while holding the state
+    /// lock, and the cache must stay reachable there.
+    cache: Mutex<PlanCache>,
 }
 
 impl SimDevice {
@@ -302,6 +307,7 @@ impl SimDevice {
                 pending: Vec::new(),
                 results: HashMap::new(),
             }),
+            cache: Mutex::new(PlanCache::default()),
         }
     }
 
@@ -322,6 +328,23 @@ impl SimDevice {
 
     fn lock(&self) -> std::sync::MutexGuard<'_, DeviceState> {
         self.state.lock().expect("SimDevice lock poisoned")
+    }
+
+    fn plan_cache(&self) -> std::sync::MutexGuard<'_, PlanCache> {
+        self.cache.lock().expect("SimDevice plan cache poisoned")
+    }
+
+    /// Drop every cached solo pricing. Call whenever pricing-relevant
+    /// state changed *without* changing the plans themselves: a balancer
+    /// adjustment landed, an algorithm was re-selected, a fault or
+    /// repair mutated link capacities.
+    pub fn invalidate_plans(&self) {
+        self.plan_cache().invalidate();
+    }
+
+    /// Hit/miss/invalidation counters of the compiled-plan cache.
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.plan_cache().stats()
     }
 
     fn check_stream(&self, st: &DeviceState, s: Stream) -> Result<()> {
@@ -541,9 +564,29 @@ impl SimDevice {
     }
 
     /// One plan through the pre-stream blocking pipeline (also used by
-    /// the tuning-free "individual" timings of fused groups).
+    /// the tuning-free "individual" timings of fused groups). Solo
+    /// pricing is deterministic, so repeats come out of the
+    /// compiled-plan cache bit-identically; cold pricings populate it.
     #[allow(clippy::type_complexity)]
     pub(crate) fn price_plan_solo(
+        &self,
+        plan: &CollectivePlan,
+    ) -> Result<(
+        super::CollectiveReport,
+        Vec<(PathId, SimTime)>,
+        Vec<(StripeId, SimTime)>,
+    )> {
+        if let Some(hit) = self.plan_cache().get(plan) {
+            return Ok(hit);
+        }
+        let priced = self.price_plan_cold(plan)?;
+        self.plan_cache().put(plan, priced.clone());
+        Ok(priced)
+    }
+
+    /// The uncached solo pipeline behind [`Self::price_plan_solo`].
+    #[allow(clippy::type_complexity)]
+    fn price_plan_cold(
         &self,
         plan: &CollectivePlan,
     ) -> Result<(
@@ -576,6 +619,9 @@ impl SimDevice {
                 pipeline,
                 algo,
             } => {
+                // Solo cluster pricing sizes its graph adaptively: exact
+                // per-chunk DES at small node counts, symmetry-folded at
+                // scale (falling back to exact whenever symmetry broke).
                 let cc = ClusterCollective::new(
                     &self.cluster,
                     self.calib.clone(),
@@ -583,7 +629,8 @@ impl SimDevice {
                     *n_local,
                 )
                 .with_pipeline(*pipeline)
-                .with_algo(*algo);
+                .with_algo(*algo)
+                .with_pricing(PricingMode::Auto);
                 let hier = cc.run(plan.msg_bytes, tiers, plan.elem_bytes)?;
                 // Repackage behind the stable RunReport surface, exactly
                 // as the blocking cluster path always has.

@@ -293,6 +293,11 @@ pub fn timeline_events(
     t0: SimTime,
 ) -> Vec<RateEvent> {
     let mut evs: Vec<RateEvent> = Vec::new();
+    // Distinct needles are few (one per fault target kind) while the pool
+    // is O(cluster); memoize each needle's substring scan so resolution is
+    // O(distinct needles × resources), not O(faults × resources).
+    let mut resolved: std::collections::HashMap<&str, Vec<crate::sim::ResourceId>> =
+        std::collections::HashMap::new();
     for f in faults {
         if f.until <= t0 {
             continue;
@@ -300,7 +305,10 @@ pub fn timeline_events(
         let mut set_fault = Vec::new();
         let mut set_repair = Vec::new();
         for needle in &f.target.needles {
-            for id in nominal.find_matching(needle) {
+            let ids = resolved
+                .entry(needle.as_str())
+                .or_insert_with(|| nominal.find_matching(needle));
+            for &id in ids.iter() {
                 let cap = nominal.capacity(id);
                 set_fault.push((id, cap * f.factor));
                 set_repair.push((id, cap));

@@ -42,7 +42,7 @@ COMMANDS:
           --overlap buckets the backward pass and hides gradient traffic
           under compute on the stream-ordered DES
   repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|
-           cluster|overlap|concurrent|ablation|chaos>
+           cluster|overlap|concurrent|ablation|chaos|scale>
           [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
@@ -55,7 +55,11 @@ COMMANDS:
           ring/tree/halving-doubling crossover (8-GPU AllReduce,
           64 KiB – 256 MiB) against the auto tuner's picks, and `chaos`
           injects a seeded fault timeline (NIC deaths by default) into a
-          training-step loop and compares recovery policies
+          training-step loop and compares recovery policies, and `scale`
+          sweeps AllReduce to 1024 nodes under Auto pricing
+          (symmetry-folded graphs + compiled-plan cache; --nodes pins one
+          node count, --mib sets the message, --smoke runs the short CI
+          list with the structural asserts)
           [chaos only: --mtbf <s> --mttr <s> --policy reroute|relower|ckpt
            --steps <k> --mib <size> --smoke]
           --smoke replays a fixed deterministic two-fault timeline (the
@@ -330,8 +334,8 @@ fn repro(
     let topo = Topology::build(&Preset::H800.spec());
     let cfg = BalancerConfig::default();
     anyhow::ensure!(
-        nodes.is_none() || matches!(what, "table2" | "cluster" | "chaos"),
-        "--nodes only applies to the table2, cluster and chaos targets \
+        nodes.is_none() || matches!(what, "table2" | "cluster" | "chaos" | "scale"),
+        "--nodes only applies to the table2, cluster, chaos and scale targets \
          ('{what}' is single-node)"
     );
     anyhow::ensure!(
@@ -339,12 +343,19 @@ fn repro(
         "--no-pipeline only applies to the hierarchical targets (table2 --nodes, cluster)"
     );
     anyhow::ensure!(
-        what == "chaos"
+        matches!(what, "chaos" | "scale")
             || (args.flag("mtbf").is_none()
                 && args.flag("mttr").is_none()
                 && args.flag("policy").is_none()
                 && !args.has("smoke")),
-        "--mtbf/--mttr/--policy/--smoke only apply to the chaos target"
+        "--mtbf/--mttr/--policy/--smoke only apply to the chaos and scale targets"
+    );
+    anyhow::ensure!(
+        what == "chaos"
+            || (args.flag("mtbf").is_none()
+                && args.flag("mttr").is_none()
+                && args.flag("policy").is_none()),
+        "--mtbf/--mttr/--policy only apply to the chaos target"
     );
     if let Some(n) = nodes {
         // Same rule RunConfig::validate enforces for TOML configs.
@@ -525,6 +536,51 @@ fn repro(
                         format!("{:.4}", r.barriered_ms),
                         format!("{:.2}", r.overlap_gain_pct),
                         format!("{:.4}", r.flat_ring_ms),
+                    ]);
+                }
+                csv.write_file(p)?;
+            }
+        }
+        "scale" => {
+            // Sublinear cluster pricing: AllReduce across node counts
+            // under PricingMode::Auto — exact per-chunk graphs at small
+            // scale, symmetry-folded representative graphs past the
+            // threshold — plus the compiled-plan cache's cold-vs-hit
+            // wall-clock. Structural invariants (fold threshold, cache
+            // hit) are asserted inside the sweep on every run; --smoke
+            // just runs the short CI node list.
+            let mib = args.u64_or("mib", 64)?;
+            let node_counts: Vec<usize> = match (nodes, args.has("smoke")) {
+                (Some(n), _) => vec![n],
+                (None, true) => vec![1, 4, 16],
+                (None, false) => vec![1, 4, 16, 64, 256, 1024],
+            };
+            let rows =
+                bh::scale_sweep(Preset::H800, CollectiveKind::AllReduce, &node_counts, mib)?;
+            print!("{}", bh::render_scale_sweep(&rows));
+            if let Some(p) = csv_path {
+                let mut csv = Csv::new(&[
+                    "nodes",
+                    "mib",
+                    "folded",
+                    "tasks",
+                    "events",
+                    "total_ms",
+                    "algbw",
+                    "cold_price_ms",
+                    "hit_price_ms",
+                ]);
+                for r in &rows {
+                    csv.row(&[
+                        r.n_nodes.to_string(),
+                        r.msg_mib.to_string(),
+                        r.folded.to_string(),
+                        r.tasks.to_string(),
+                        r.events.to_string(),
+                        format!("{:.4}", r.total_ms),
+                        format!("{:.2}", r.algbw_gbps),
+                        format!("{:.4}", r.cold_price_ms),
+                        format!("{:.4}", r.hit_price_ms),
                     ]);
                 }
                 csv.write_file(p)?;
@@ -738,7 +794,7 @@ fn repro(
         other => anyhow::bail!(
             "unknown repro target '{other}' \
              (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|\
-             concurrent|ablation|chaos)"
+             concurrent|ablation|chaos|scale)"
         ),
     }
     Ok(())

@@ -1,0 +1,196 @@
+//! Closed-form flow-level fast path for *uncontended* phases.
+//!
+//! When a phase's flows never compete for a shared resource — each NIC
+//! stripe's bottleneck is its private protocol/NIC cap, not the spine —
+//! the max–min fair-share solution is trivial: every flow runs at a
+//! constant rate equal to its route's bottleneck capacity. The phase's
+//! timing then has a closed form, and pricing it as a handful of flow
+//! segments replaces thousands of chunk tasks in the DES (the htsim-style
+//! flow model; see ROADMAP open item 1).
+//!
+//! The evaluator mirrors the chunk DES's FIFO-egress send structure
+//! exactly ([`crate::collectives`]' `send_inter`): each ring step opens
+//! with one gate latency (charged when the step's first chunk is ready),
+//! chunks serialize on the egress at the bottleneck rate, and a reducing
+//! step appends a per-chunk combine delay to each *arrival* (the next
+//! step's dependency) without holding the egress. Under those semantics
+//! [`chain_arrivals`] reproduces the DES's per-chunk finish times for an
+//! uncontended chain — pinned against [`super::Engine`] in the tests
+//! below and in `tests/prop_scale.rs`.
+
+use super::clock::SimTime;
+
+/// Constant-rate evaluation of one FIFO-chunked ring chain (the
+/// repeated-`send_inter` shape): `steps` sequential hops, each carrying
+/// the same chunk grid `sizes` at `rate_bps`.
+#[derive(Debug, Clone, Copy)]
+pub struct ChainSpec {
+    /// Number of sequential hops (ring steps), ≥ 1.
+    pub steps: usize,
+    /// Gate latency charged once per hop (step latency + fabric hop
+    /// latency, plus the reduce step latency on reducing hops).
+    pub gate: SimTime,
+    /// Bottleneck rate every chunk serializes at, bytes/s.
+    pub rate_bps: f64,
+    /// Reducing chain: each arrival pays an extra `bytes / reduce_bps`
+    /// combine delay before the next hop may forward it.
+    pub reduce_bps: Option<f64>,
+}
+
+/// Per-chunk arrival times after the last hop of `spec`, starting from
+/// per-chunk readiness `ready` (phase-relative; use zeros after a
+/// whole-phase barrier). `ready.len()` must equal `sizes.len()`.
+///
+/// Recurrence per hop: the gate opens `spec.gate` after chunk 0 is ready
+/// (the DES gates the hop's Delay on the first chunk's deps); chunk `c`
+/// starts at `max(ready[c], gate_open, egress_free)`, occupies the egress
+/// for `sizes[c] / rate`, and its arrival — the next hop's `ready[c]` —
+/// adds the combine delay on reducing chains.
+pub fn chain_arrivals(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> Vec<SimTime> {
+    assert!(spec.steps >= 1, "chain needs at least one hop");
+    assert_eq!(sizes.len(), ready.len(), "one readiness per chunk");
+    assert!(
+        spec.rate_bps > 0.0 && spec.rate_bps.is_finite(),
+        "chain rate must be positive/finite"
+    );
+    let mut ready = ready.to_vec();
+    for _ in 0..spec.steps {
+        let gate_open = ready[0] + spec.gate;
+        let mut egress = SimTime::ZERO;
+        for (c, &bytes) in sizes.iter().enumerate() {
+            let start = ready[c].max(gate_open).max(egress);
+            let fin = start + SimTime::for_transfer(bytes, spec.rate_bps);
+            egress = fin;
+            ready[c] = match spec.reduce_bps {
+                Some(r) if bytes > 0 => fin + SimTime::for_transfer(bytes, r),
+                _ => fin,
+            };
+        }
+    }
+    ready
+}
+
+/// Completion of the whole chain: the last chunk's arrival (FIFO egress
+/// makes arrivals monotone in chunk index).
+pub fn chain_finish(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> SimTime {
+    chain_arrivals(spec, sizes, ready)
+        .into_iter()
+        .fold(SimTime::ZERO, SimTime::max)
+}
+
+/// Bottleneck rate of one uncontended route: the minimum capacity along
+/// it, clamped by a per-flow rate cap. With exactly one flow per
+/// resource this *is* the max–min solution.
+pub fn bottleneck_rate(caps: impl IntoIterator<Item = f64>, rate_cap: f64) -> f64 {
+    caps.into_iter().fold(rate_cap, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Engine, ResourcePool, TaskGraph, TaskKind};
+
+    /// The closed form must match the chunk DES on an uncontended FIFO
+    /// chain — same gate placement, same egress serialization.
+    #[test]
+    fn chain_matches_des_single_hop() {
+        let mut pool = ResourcePool::new();
+        let link = pool.add("link", 100.0);
+        let mut graph = TaskGraph::new();
+        let gate = graph.add(
+            TaskKind::Delay {
+                duration: SimTime::from_micros(5),
+            },
+            vec![],
+        );
+        let sizes = [400u64, 400, 200];
+        let mut prev = None;
+        let mut last = gate;
+        for &b in &sizes {
+            let mut deps = vec![gate];
+            if let Some(p) = prev {
+                deps.push(p);
+            }
+            let t = graph.add(
+                TaskKind::Transfer {
+                    bytes: b,
+                    route: vec![link],
+                    weight: 1.0,
+                    latency: SimTime::ZERO,
+                    rate_cap: f64::INFINITY,
+                },
+                deps,
+            );
+            prev = Some(t);
+            last = t;
+        }
+        let sched = Engine::new(&pool).run(&graph).unwrap();
+        let des = sched.finish_of(last);
+
+        let spec = ChainSpec {
+            steps: 1,
+            gate: SimTime::from_micros(5),
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let flow = chain_finish(&spec, &sizes, &[SimTime::ZERO; 3]);
+        let (a, b) = (des.as_secs_f64(), flow.as_secs_f64());
+        assert!(
+            (a - b).abs() <= 1e-9 * a.max(1.0),
+            "DES {a} vs flow {b}"
+        );
+    }
+
+    #[test]
+    fn multi_hop_chain_pipelines_chunks() {
+        // 3 hops × 2 chunks of 100 B at 100 B/s, no gate: the wavefront
+        // finishes at (hops + chunks − 1) × 1 s, not hops × 2 s.
+        let spec = ChainSpec {
+            steps: 3,
+            gate: SimTime::ZERO,
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let fin = chain_finish(&spec, &[100, 100], &[SimTime::ZERO; 2]);
+        assert!((fin.as_secs_f64() - 4.0).abs() < 1e-9, "got {fin}");
+    }
+
+    #[test]
+    fn reduce_delay_feeds_next_hop_not_egress() {
+        // One chunk, 2 reducing hops: each hop is gate + wire + combine
+        // in sequence (the combine gates the forward, not the egress).
+        let spec = ChainSpec {
+            steps: 2,
+            gate: SimTime::from_micros(10),
+            rate_bps: 1000.0,
+            reduce_bps: Some(2000.0),
+        };
+        let fin = chain_finish(&spec, &[1000], &[SimTime::ZERO]);
+        // Per hop: 10 µs + 1 s + 0.5 s.
+        assert!((fin.as_secs_f64() - 2.0 * (1.0 + 0.5 + 10e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_never_beats_barriered() {
+        let spec = ChainSpec {
+            steps: 4,
+            gate: SimTime::from_micros(2),
+            rate_bps: 1e9,
+            reduce_bps: None,
+        };
+        let sizes = [1 << 20, 1 << 20, 1 << 19];
+        let pipe = chain_finish(&spec, &sizes, &[SimTime::ZERO; 3]);
+        let total: u64 = sizes.iter().sum();
+        let barriered = SimTime::from_micros(2 * 4)
+            + SimTime::for_transfer(total * 4, 1e9);
+        assert!(pipe <= barriered, "{pipe} > {barriered}");
+    }
+
+    #[test]
+    fn bottleneck_is_route_min_with_cap() {
+        let r = bottleneck_rate([200.0, 50.0, 100.0], f64::INFINITY);
+        assert_eq!(r, 50.0);
+        let r = bottleneck_rate([200.0, 150.0], 120.0);
+        assert_eq!(r, 120.0);
+    }
+}

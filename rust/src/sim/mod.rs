@@ -20,9 +20,11 @@
 pub mod clock;
 pub mod engine;
 pub mod fairshare;
+pub mod flow;
 pub mod resource;
 
 pub use clock::SimTime;
+pub use flow::{bottleneck_rate, chain_arrivals, chain_finish, ChainSpec};
 pub use engine::{
     run_with_events, Engine, FaultRun, RateEvent, Schedule, TaskGraph, TaskId, TaskKind,
     TaskTiming,

@@ -8,6 +8,7 @@
 //! GPU→host traffic squeezing through the same PCIe x16 lane) emerge
 //! naturally rather than being hard-coded.
 
+use std::collections::HashMap;
 use std::fmt;
 
 /// Index of a resource inside a [`ResourcePool`].
@@ -33,6 +34,11 @@ pub struct Resource {
 #[derive(Debug, Clone, Default)]
 pub struct ResourcePool {
     resources: Vec<Resource>,
+    /// Exact-name → id index. Names are add-only and immutable (fault
+    /// injection mutates capacities, never names), so the index never
+    /// goes stale. First registration wins on duplicate names, matching
+    /// the old linear-scan semantics.
+    by_name: HashMap<String, ResourceId>,
 }
 
 impl ResourcePool {
@@ -47,10 +53,9 @@ impl ResourcePool {
             "resource capacity must be positive/finite"
         );
         let id = ResourceId(self.resources.len() as u32);
-        self.resources.push(Resource {
-            name: name.into(),
-            capacity_bps,
-        });
+        let name = name.into();
+        self.by_name.entry(name.clone()).or_insert(id);
+        self.resources.push(Resource { name, capacity_bps });
         id
     }
 
@@ -70,12 +75,9 @@ impl ResourcePool {
         self.resources[id.0 as usize].capacity_bps
     }
 
-    /// Look a resource up by name (slow; intended for tests/reporting).
+    /// Look a resource up by exact name. O(1) via the name index.
     pub fn find(&self, name: &str) -> Option<ResourceId> {
-        self.resources
-            .iter()
-            .position(|r| r.name == name)
-            .map(|i| ResourceId(i as u32))
+        self.by_name.get(name).copied()
     }
 
     /// Scale one resource's capacity (used by failure injection and the
@@ -182,6 +184,28 @@ mod tests {
         assert_eq!(pool.capacity(b), 50.0);
         assert_eq!(pool.capacity(c), 100.0);
         assert_eq!(pool.scale_matching("absent", 2.0), 0);
+    }
+
+    #[test]
+    fn find_index_matches_linear_scan() {
+        let mut pool = ResourcePool::new();
+        for k in 0..3 {
+            for g in 0..4 {
+                pool.add(format!("node{k}.nic.up.gpu{g}"), 100.0);
+            }
+        }
+        // Duplicate registration: first id wins, like the old scan.
+        let dup_first = pool.find("node1.nic.up.gpu2");
+        pool.add("node1.nic.up.gpu2", 50.0);
+        assert_eq!(pool.find("node1.nic.up.gpu2"), dup_first);
+        for (id, r) in pool.iter() {
+            let scan = pool
+                .iter()
+                .find(|(_, s)| s.name == r.name)
+                .map(|(i, _)| i)
+                .unwrap();
+            assert_eq!(pool.find(&r.name), Some(scan), "index vs scan for {id}");
+        }
     }
 
     #[test]

@@ -92,6 +92,11 @@ pub struct Cluster {
     nodes: Vec<Topology>,
     /// The spine resource; `None` in the degenerate single-node cluster.
     pub spine: Option<ResourceId>,
+    /// Build-time capacity of every pool resource, in id order. Fault
+    /// injection mutates `pool` capacities in place; comparing live
+    /// against nominal detects a broken node symmetry
+    /// ([`Cluster::is_symmetric`] — the fold-eligibility gate).
+    nominal_caps: Vec<f64>,
 }
 
 impl Cluster {
@@ -102,11 +107,13 @@ impl Cluster {
             // resource ids, same names, no spine.
             let t = Topology::build(&spec.node);
             let pool = t.pool.clone();
+            let nominal_caps = pool.iter().map(|(_, r)| r.capacity_bps).collect();
             return Cluster {
                 spec: spec.clone(),
                 pool,
                 nodes: vec![t],
                 spine: None,
+                nominal_caps,
             };
         }
         let mut pool = ResourcePool::new();
@@ -124,12 +131,53 @@ impl Cluster {
         for t in nodes.iter_mut() {
             t.pool = pool.clone();
         }
+        let nominal_caps = pool.iter().map(|(_, r)| r.capacity_bps).collect();
         Cluster {
             spec: spec.clone(),
             pool,
             nodes,
             spine: Some(spine),
+            nominal_caps,
         }
+    }
+
+    /// True while every live capacity still equals its build-time value —
+    /// no fault injection, degradation or manual mutation has touched the
+    /// pool. Nodes are built as identical copies, so a pristine pool is a
+    /// *symmetric* one: every node group prices identically and
+    /// symmetry-folded lowerings are exact. Conservative on purpose: a
+    /// uniformly degraded cluster would still be symmetric but reports
+    /// `false` here (repairs that restore the exact nominal value flip it
+    /// back to `true` — fault timelines restore capacities read from the
+    /// nominal pool, so that round-trips exactly).
+    pub fn is_symmetric(&self) -> bool {
+        self.pool.len() == self.nominal_caps.len()
+            && self
+                .pool
+                .iter()
+                .zip(&self.nominal_caps)
+                .all(|((_, r), nom)| r.capacity_bps == *nom)
+    }
+
+    /// One-node representative pool for symmetry-folded pricing: node 0's
+    /// resources rebuilt at their original ids (node 0 is the first build
+    /// into the shared pool, so its ids are a prefix) plus a spine
+    /// stand-in carrying one node's max–min share of the spine,
+    /// `capacity / n_nodes` — exact under symmetry, where the spine
+    /// serves `n_nodes` identical flow groups. `None` for the degenerate
+    /// single-node cluster (no spine, nothing to fold).
+    pub fn folded_pool(&self) -> Option<(ResourcePool, ResourceId)> {
+        let spine = self.spine?;
+        let mut pool = ResourcePool::new();
+        let _ = Topology::build_into(&self.spec.node, &mut pool, "node0.");
+        debug_assert_eq!(
+            pool.find("node0.nic.up.gpu0"),
+            Some(self.nodes[0].nic_up[0]),
+            "representative rebuild must reproduce node 0's resource ids"
+        );
+        let share = self.pool.capacity(spine) / self.spec.n_nodes as f64;
+        let id = pool.add("spine.fold-share", share);
+        Some((pool, id))
     }
 
     pub fn n_nodes(&self) -> usize {
@@ -255,6 +303,35 @@ mod tests {
         spec.fabric = InterNodeFabric::oversubscribed(4.0);
         let over = Cluster::build(&spec);
         assert!((over.pool.capacity(over.spine.unwrap()) - 100e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn symmetry_tracks_capacity_mutation_and_repair() {
+        let mut c = h800_cluster(4);
+        assert!(c.is_symmetric());
+        let nic = c.node(2).nic_up[5];
+        let nominal = c.pool.capacity(nic);
+        c.pool.scale_capacity(nic, 0.5);
+        assert!(!c.is_symmetric());
+        c.pool.set_capacity(nic, nominal);
+        assert!(c.is_symmetric());
+    }
+
+    #[test]
+    fn folded_pool_reproduces_node0_ids_and_shares_spine() {
+        let c = h800_cluster(4);
+        let (pool, fold_spine) = c.folded_pool().unwrap();
+        // Node 0's ids are a prefix of the shared pool; the rebuild must
+        // agree on ids, names and nominal capacities.
+        assert_eq!(pool.find("node0.nvlink.up.gpu3"), Some(c.node(0).nvlink_up[3]));
+        assert_eq!(
+            pool.capacity(c.node(0).nic_down[1]),
+            c.pool.capacity(c.node(0).nic_down[1])
+        );
+        // The stand-in spine carries one node's share.
+        let full = c.pool.capacity(c.spine.unwrap());
+        assert!((pool.capacity(fold_spine) - full / 4.0).abs() < 1.0);
+        assert!(h800_cluster(1).folded_pool().is_none());
     }
 
     #[test]
