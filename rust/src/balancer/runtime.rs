@@ -145,6 +145,31 @@ impl<K: ShareKey> RuntimeBalancer<K> {
         self.evaluator.reset();
         pct
     }
+
+    /// Fault-path inverse of [`Self::force_deactivate`] — elastic regrow:
+    /// when a dead stripe's repair instant passes, restore it with the
+    /// fair share of the grown active set (carved proportionally from the
+    /// survivors, see [`Shares::activate`]). Resets the Evaluator window
+    /// — post-repair timings are a new regime, exactly as post-death ones
+    /// were — and records the move as a self-edge with a `-inf` observed
+    /// gap so regrow events are distinguishable from both stage-2 moves
+    /// (finite gap) and deaths (`+inf`) in traces. Returns the share
+    /// granted, 0.0 if `k` was already active (no-op).
+    pub fn reactivate(&mut self, k: K) -> f64 {
+        let pct = self.shares.activate(k);
+        if pct == 0.0 {
+            return 0.0;
+        }
+        self.adjustments.push(Adjustment {
+            at_call: self.calls,
+            from: k,
+            to: k,
+            moved_pct: pct,
+            observed_gap: f64::NEG_INFINITY,
+        });
+        self.evaluator.reset();
+        pct
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +305,45 @@ mod tests {
                 (StripeId(0), SimTime::from_micros(300)),
                 (StripeId(1), SimTime::from_micros(100)),
                 (StripeId(2), SimTime::from_micros(100)),
+            ]
+        };
+        for _ in 0..3 {
+            assert!(rb.observe(skew()).is_none());
+        }
+        assert!(rb.observe(skew()).is_some());
+    }
+
+    #[test]
+    fn reactivate_inverts_force_deactivate_and_resets_window() {
+        let keys: Vec<StripeId> = (0..4).map(StripeId).collect();
+        let mut rb = RuntimeBalancer::with_preferred(cfg(), Shares::even(&keys), None);
+        rb.force_deactivate(StripeId(3), StripeId(0));
+        assert_eq!(rb.shares().n_active(), 3);
+        // Partially refill the window so the reset is observable.
+        rb.observe(vec![(StripeId(0), SimTime::from_micros(100))]);
+        let pct = rb.reactivate(StripeId(3));
+        assert!((pct - 25.0).abs() < 1e-9, "fair share of 4 is 25");
+        assert_eq!(rb.shares().n_active(), 4);
+        assert!((rb.shares().total() - 100.0).abs() < 1e-9);
+        let adj = *rb.adjustments().last().unwrap();
+        assert_eq!(adj.from, StripeId(3));
+        assert_eq!(adj.to, StripeId(3));
+        assert!(
+            adj.observed_gap == f64::NEG_INFINITY,
+            "regrow marker is -inf (death is +inf)"
+        );
+        // Regrowing an active stripe is a no-op and records nothing.
+        let n = rb.adjustments().len();
+        assert_eq!(rb.reactivate(StripeId(3)), 0.0);
+        assert_eq!(rb.adjustments().len(), n);
+        // The evaluator window restarted at the regrow: 4 fresh calls
+        // before stage 2 can act again.
+        let skew = || {
+            vec![
+                (StripeId(0), SimTime::from_micros(300)),
+                (StripeId(1), SimTime::from_micros(100)),
+                (StripeId(2), SimTime::from_micros(100)),
+                (StripeId(3), SimTime::from_micros(100)),
             ]
         };
         for _ in 0..3 {

@@ -130,6 +130,31 @@ impl<K: ShareKey> Shares<K> {
         }
     }
 
+    /// Activate `k` with the fair share of the *resulting* active set
+    /// (`100 / (n+1)`), carved proportionally from the current holders —
+    /// the inverse of [`Self::deactivate`], used when a repaired stripe
+    /// rejoins after a fault (elastic regrow). Proportional carving keeps
+    /// the survivors' relative tuning; the runtime balancer re-evens any
+    /// residual skew over subsequent windows. Returns the share granted,
+    /// 0.0 when `k` is already active.
+    pub fn activate(&mut self, k: K) -> f64 {
+        if self.map.contains_key(&k) {
+            return 0.0;
+        }
+        let n = self.map.len();
+        if n == 0 {
+            self.map.insert(k, 100.0);
+            return 100.0;
+        }
+        let grant = 100.0 / (n as f64 + 1.0);
+        let keep = 1.0 - grant / 100.0;
+        for v in self.map.values_mut() {
+            *v *= keep;
+        }
+        self.map.insert(k, grant);
+        grant
+    }
+
     /// Sum of all shares (≈100; exposed for invariant checks).
     pub fn total(&self) -> f64 {
         self.map.values().sum()
@@ -241,6 +266,25 @@ mod tests {
     fn from_pcts_normalizes() {
         let s = Shares::from_pcts(&[(PathId::Nvlink, 2.0), (PathId::Pcie, 2.0)]);
         assert!((s.get(PathId::Nvlink) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activate_is_deactivate_inverse_on_counts() {
+        let keys: Vec<StripeId> = (0..8).map(StripeId).collect();
+        let mut s = Shares::even(&keys);
+        s.deactivate(StripeId(3), StripeId(0));
+        assert_eq!(s.n_active(), 7);
+        assert!((s.get(StripeId(0)) - 25.0).abs() < 1e-9);
+        let granted = s.activate(StripeId(3));
+        assert!((granted - 12.5).abs() < 1e-9, "fair share of 8 is 12.5");
+        assert_eq!(s.n_active(), 8);
+        assert!((s.total() - 100.0).abs() < 1e-9);
+        // Proportional carve: the fold-target keeps its relative excess.
+        assert!((s.get(StripeId(0)) - 25.0 * 0.875).abs() < 1e-9);
+        assert!((s.get(StripeId(3)) - 12.5).abs() < 1e-9);
+        // Re-activating an active key is a no-op.
+        assert_eq!(s.activate(StripeId(3)), 0.0);
+        assert!((s.total() - 100.0).abs() < 1e-9);
     }
 
     #[test]

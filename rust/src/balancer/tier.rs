@@ -66,6 +66,17 @@ impl TierShares {
         out.inter.deactivate(dead, survivor);
         Some(out)
     }
+
+    /// The inverse of [`Self::without_stripe`] — elastic regrow: when a
+    /// dead NIC's repair instant passes, `repaired` rejoins the inter
+    /// tier with the fair share of the grown set (carved proportionally
+    /// from the survivors, see [`Shares::activate`]). A no-op clone when
+    /// the stripe is already active.
+    pub fn with_stripe(&self, repaired: StripeId) -> TierShares {
+        let mut out = self.clone();
+        out.inter.activate(repaired);
+        out
+    }
 }
 
 /// Stage 1 for the inter-node tier: Algorithm 1 over the NIC stripes of
@@ -131,5 +142,20 @@ mod tests {
         }
         assert_eq!(last.inter.n_active(), 1);
         assert!(last.without_stripe(StripeId(0)).is_none());
+    }
+
+    #[test]
+    fn with_stripe_inverts_without_stripe() {
+        let t = TierShares::new(Shares::nvlink_only(), 4);
+        let shrunk = t.without_stripe(StripeId(2)).unwrap();
+        assert_eq!(shrunk.inter.n_active(), 3);
+        let grown = shrunk.with_stripe(StripeId(2));
+        assert_eq!(grown.inter.n_active(), 4);
+        assert!(grown.inter.is_active(StripeId(2)));
+        assert!((grown.inter.get(StripeId(2)) - 25.0).abs() < 1e-9);
+        assert!((grown.inter.total() - 100.0).abs() < 1e-9);
+        assert_eq!(grown.intra, t.intra);
+        // Regrowing an already-active stripe is a pure clone.
+        assert_eq!(grown.with_stripe(StripeId(2)), grown);
     }
 }

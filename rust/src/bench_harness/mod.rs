@@ -6,7 +6,7 @@
 //! in EXPERIMENTS.md.
 
 use crate::balancer::{initial_tune, initial_tune_stripes, RuntimeBalancer, Shares, TierShares};
-use crate::collectives::algo::{Algo, AlgoSpec, AlgoTable};
+use crate::collectives::algo::{Algo, AlgoSpec, AlgoTable, DegradedMode};
 use crate::collectives::hierarchical::{flat_ring_allreduce, ClusterCollective};
 use crate::collectives::multipath::MultipathCollective;
 use crate::collectives::CollectiveKind;
@@ -919,6 +919,13 @@ pub struct AblationRow {
     pub auto_algo: Algo,
     /// Fastest fixed algorithm at this size.
     pub winner: Algo,
+    /// The MTBF-aware tuner's pick for this bucket (an [`AlgoTable`]
+    /// carrying a [`DegradedMode`] built from `[chaos]` MTBF/MTTR),
+    /// when the sweep ran with a degraded mode; `None` otherwise.
+    pub mtbf_algo: Option<Algo>,
+    /// Healthy-fabric latency of the MTBF-aware pick — what the
+    /// chaos-hedged choice costs while nothing is actually down.
+    pub mtbf_ms: Option<f64>,
 }
 
 impl AblationRow {
@@ -932,16 +939,22 @@ impl AblationRow {
 /// message size, NVLink-only (one path isolates the algorithm dimension
 /// from the share dimension), plus the auto tuner's selection — `repro
 /// ablation`. Sizes are KiB and should be powers of two so each lands in
-/// its own tuner bucket.
+/// its own tuner bucket. With `degraded` set (built from `[chaos]`
+/// MTBF/MTTR via [`DegradedMode::one_stripe_down`]) a second, MTBF-aware
+/// tuner runs beside the peak one and its picks land in the `MTBF pick`
+/// column — the buckets where the two disagree are exactly where
+/// chaos-aware tuning changes the lowering.
 pub fn ablation_sweep(
     preset: Preset,
     op: CollectiveKind,
     gpus: usize,
     sizes_kib: &[u64],
+    degraded: Option<DegradedMode>,
 ) -> Result<Vec<AblationRow>> {
     let topo = Topology::build(&preset.spec());
     let shares = Shares::nvlink_only();
     let mut table = AlgoTable::new(AlgoSpec::Auto);
+    let mut mtbf_table = degraded.map(|dm| AlgoTable::new(AlgoSpec::Auto).with_degraded_mode(dm));
     let mut rows = Vec::with_capacity(sizes_kib.len());
     for &kib in sizes_kib {
         let msg = kib << 10;
@@ -957,10 +970,18 @@ pub fn ablation_sweep(
         let (auto_algo, _probe) = table.select(&mc, msg, &shares)?;
         // The DES is deterministic, so auto's latency is the already
         // measured column of whichever algorithm it picked.
-        let auto_ms = match crate::collectives::algo::resolve(op, auto_algo, gpus) {
+        let col_of = |a: Algo| match crate::collectives::algo::resolve(op, a, gpus) {
             Algo::Ring => ring_ms,
             Algo::Tree => tree_ms,
             Algo::HalvingDoubling => hd_ms,
+        };
+        let auto_ms = col_of(auto_algo);
+        let (mtbf_algo, mtbf_ms) = match mtbf_table.as_mut() {
+            Some(t) => {
+                let (a, _probe) = t.select(&mc, msg, &shares)?;
+                (Some(a), Some(col_of(a)))
+            }
+            None => (None, None),
         };
         let mut winner = Algo::Ring;
         let mut best = ring_ms;
@@ -980,6 +1001,8 @@ pub fn ablation_sweep(
             auto_ms,
             auto_algo,
             winner,
+            mtbf_algo,
+            mtbf_ms,
         });
     }
     Ok(rows)
@@ -997,15 +1020,21 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
             format!("{kib} KiB")
         }
     };
+    let with_mtbf = rows.iter().any(|r| r.mtbf_algo.is_some());
+    let headers: &[&str] = if with_mtbf {
+        &["Size", "Ring ms", "Tree ms", "HD ms", "Auto ms", "Auto pick", "Winner", "MTBF pick"]
+    } else {
+        &["Size", "Ring ms", "Tree ms", "HD ms", "Auto ms", "Auto pick", "Winner"]
+    };
     let mut t = Table::new(
         &format!(
             "Algorithm crossover: {} x{} (NVLink-only)",
             rows[0].op, rows[0].n_gpus
         ),
-        &["Size", "Ring ms", "Tree ms", "HD ms", "Auto ms", "Auto pick", "Winner"],
+        headers,
     );
     for r in rows {
-        t.row(vec![
+        let mut cells = vec![
             fmt_size(r.kib),
             format!("{:.4}", r.ring_ms),
             format!("{:.4}", r.tree_ms),
@@ -1013,9 +1042,26 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
             format!("{:.4}", r.auto_ms),
             r.auto_algo.to_string(),
             r.winner.to_string(),
-        ]);
+        ];
+        if with_mtbf {
+            cells.push(match r.mtbf_algo {
+                Some(a) => a.to_string(),
+                None => "-".into(),
+            });
+        }
+        t.row(cells);
     }
     out.push_str(&t.render());
+    if with_mtbf {
+        let moved = rows
+            .iter()
+            .filter(|r| r.mtbf_algo.is_some() && r.mtbf_algo != Some(r.auto_algo))
+            .count();
+        out.push_str(&format!(
+            "MTBF-aware tuning changed the pick at {moved}/{} sizes\n",
+            rows.len()
+        ));
+    }
     // Crossover summary: the boundary past which ring stays ahead of
     // tree (scanned from the large end, so a non-monotone middle cannot
     // produce a self-contradictory line).
@@ -1079,6 +1125,9 @@ pub fn overhead(comm: &crate::comm::Communicator) -> OverheadReport {
 pub struct ChaosRow {
     pub policy: crate::faults::RecoveryPolicy,
     pub scenario: String,
+    /// What each step of the loop was: `"collective"` (one AllReduce)
+    /// or `"trainer"` (bucketed-overlap fwd/bwd step, `--trainer`).
+    pub mode: &'static str,
     pub n_nodes: usize,
     pub msg_mib: u64,
     pub steps: usize,
@@ -1091,13 +1140,23 @@ pub struct ChaosRow {
     pub goodput_gbps: f64,
     pub goodput_ratio_pct: f64,
     pub degraded_steps: usize,
+    /// Elastic-regrow events (repaired stripes/nodes rejoining).
+    pub regrows: usize,
 }
 
 /// The `repro chaos` sweep: draw ONE fault timeline (seeded schedule, or
 /// the fixed [`crate::faults::chaos::smoke_timeline`] under `--smoke`)
 /// and replay it through the step loop once per recovery policy, so the
 /// per-policy goodput and TTR numbers are an apples-to-apples comparison
-/// on identical fault arrivals.
+/// on identical fault arrivals. With `trainer` set each step is a
+/// bucketed-overlap fwd/bwd trainer step ([`run_chaos_trainer`]) instead
+/// of a bare collective, so TTR and goodput land in loss-curve wall
+/// time; `gpu_tflops` sizes its compute phases. Under `--smoke` the
+/// sweep additionally replays a fixed death-and-repair timeline through
+/// the reroute policy with regrow on and off, and fails if regrow does
+/// not reactivate the stripe and bank strictly more goodput.
+///
+/// [`run_chaos_trainer`]: crate::faults::chaos::run_chaos_trainer
 #[allow(clippy::too_many_arguments)]
 pub fn chaos_sweep(
     preset: Preset,
@@ -1108,9 +1167,11 @@ pub fn chaos_sweep(
     seed: u64,
     policies: &[crate::faults::RecoveryPolicy],
     smoke: bool,
+    trainer: bool,
+    gpu_tflops: f64,
     cfg: &BalancerConfig,
 ) -> Result<Vec<ChaosRow>> {
-    use crate::faults::{chaos, RecoverySpec};
+    use crate::faults::{chaos, RecoveryPolicy, RecoverySpec};
     use crate::sim::SimTime;
     anyhow::ensure!(n_nodes >= 2, "chaos sweeps need a multi-node cluster");
     let op = CollectiveKind::AllReduce;
@@ -1123,31 +1184,91 @@ pub fn chaos_sweep(
     let t0 = ClusterCollective::new(&cluster, Calibration::h800(), op, nl)
         .run(msg, &tiers0, 4)?
         .total;
+    let tspec = trainer.then(|| chaos::TrainerChaosSpec::from_message(msg, gpu_tflops, 512, 4));
+    // A trainer step is comm + compute; widen the stochastic horizon by
+    // the compute phases so the timeline still covers the whole loop.
+    let step_hint = match &tspec {
+        Some(s) => t0 + s.fwd + s.bwd,
+        None => t0,
+    };
     let (scenario_name, timeline) = if smoke {
         ("smoke".to_string(), chaos::smoke_timeline(t0))
     } else {
         let scenario = chaos::ChaosScenario::nic_death(n_nodes, nl, ccfg.mtbf_s, ccfg.mttr_s);
-        let horizon = SimTime::from_secs_f64(t0.as_secs_f64() * steps as f64 * 2.0);
+        let horizon = SimTime::from_secs_f64(step_hint.as_secs_f64() * steps as f64 * 2.0);
         let tl = crate::faults::schedule(&scenario.specs, horizon, seed);
         (scenario.name, tl)
     };
+    if smoke {
+        // Regrow acceptance gate: on the fixed death-and-repair timeline
+        // the reroute policy with regrow must reactivate the stripe and
+        // end strictly ahead of shrink-only goodput. Detection is shrunk
+        // to 1 µs so the regrow charge amortizes inside the short loop.
+        let repair_tl = chaos::smoke_repair_timeline(t0);
+        let spec_with = |regrow: bool| RecoverySpec {
+            policy: RecoveryPolicy::RerouteStripes,
+            detection: SimTime::from_secs_f64(1e-6),
+            reinit: SimTime::ZERO,
+            ckpt_interval: 1,
+            reload: SimTime::ZERO,
+            regrow,
+        };
+        let grown = chaos::run_chaos(
+            &cluster, Calibration::h800(), op, msg, 12, &repair_tl, &spec_with(true), cfg,
+        )?;
+        let shrunk = chaos::run_chaos(
+            &cluster, Calibration::h800(), op, msg, 12, &repair_tl, &spec_with(false), cfg,
+        )?;
+        anyhow::ensure!(
+            grown.regrows >= 1,
+            "smoke: repair instant passed but no regrow event fired"
+        );
+        anyhow::ensure!(
+            grown.final_tiers.inter.n_active() == nl
+                && shrunk.final_tiers.inter.n_active() == nl - 1,
+            "smoke: regrow must restore the full stripe set ({} of {nl} active; \
+             shrink-only kept {})",
+            grown.final_tiers.inter.n_active(),
+            shrunk.final_tiers.inter.n_active()
+        );
+        anyhow::ensure!(
+            grown.goodput_ratio() > shrunk.goodput_ratio(),
+            "smoke: regrow goodput {:.4} not above shrink-only {:.4}",
+            grown.goodput_ratio(),
+            shrunk.goodput_ratio()
+        );
+    }
     policies
         .iter()
         .map(|&policy| {
             let rec = RecoverySpec::from_config(policy, ccfg);
-            let out = chaos::run_chaos(
-                &cluster,
-                Calibration::h800(),
-                op,
-                msg,
-                steps,
-                &timeline,
-                &rec,
-                cfg,
-            )?;
+            let out = match &tspec {
+                Some(ts) => chaos::run_chaos_trainer(
+                    &cluster,
+                    Calibration::h800(),
+                    op,
+                    msg,
+                    steps,
+                    &timeline,
+                    &rec,
+                    cfg,
+                    ts,
+                )?,
+                None => chaos::run_chaos(
+                    &cluster,
+                    Calibration::h800(),
+                    op,
+                    msg,
+                    steps,
+                    &timeline,
+                    &rec,
+                    cfg,
+                )?,
+            };
             Ok(ChaosRow {
                 policy,
                 scenario: scenario_name.clone(),
+                mode: if trainer { "trainer" } else { "collective" },
                 n_nodes,
                 msg_mib,
                 steps: out.steps,
@@ -1161,6 +1282,7 @@ pub fn chaos_sweep(
                 goodput_gbps: out.goodput_gbps(),
                 goodput_ratio_pct: out.goodput_ratio() * 100.0,
                 degraded_steps: out.degraded_steps,
+                regrows: out.regrows,
             })
         })
         .collect()
@@ -1170,14 +1292,15 @@ pub fn render_chaos(rows: &[ChaosRow]) -> String {
     let mut t = Table::new(
         "Chaos sweep: goodput under faults, per recovery policy (one shared timeline)",
         &[
-            "policy", "scenario", "nodes", "msg", "steps", "faults", "aborts",
-            "mean TTR(ms)", "fault-free", "goodput", "ratio", "degraded",
+            "policy", "scenario", "mode", "nodes", "msg", "steps", "faults", "aborts",
+            "mean TTR(ms)", "fault-free", "goodput", "ratio", "degraded", "regrows",
         ],
     );
     for r in rows {
         t.row(vec![
             r.policy.to_string(),
             r.scenario.clone(),
+            r.mode.to_string(),
             r.n_nodes.to_string(),
             format!("{}MB", r.msg_mib),
             r.steps.to_string(),
@@ -1192,6 +1315,7 @@ pub fn render_chaos(rows: &[ChaosRow]) -> String {
             format!("{:.1}", r.goodput_gbps),
             format!("{:.1}%", r.goodput_ratio_pct),
             r.degraded_steps.to_string(),
+            r.regrows.to_string(),
         ]);
     }
     t.render()
@@ -1389,9 +1513,11 @@ mod tests {
     #[test]
     fn ablation_sweep_shows_crossover_and_auto_tracks() {
         let rows =
-            ablation_sweep(Preset::H800, CollectiveKind::AllReduce, 8, &[256, 65536]).unwrap();
+            ablation_sweep(Preset::H800, CollectiveKind::AllReduce, 8, &[256, 65536], None)
+                .unwrap();
         let small = &rows[0];
         let big = &rows[1];
+        assert!(rows.iter().all(|r| r.mtbf_algo.is_none() && r.mtbf_ms.is_none()));
         assert!(
             small.tree_ms < small.ring_ms,
             "tree {:.4}ms should beat ring {:.4}ms at 256KiB",
@@ -1418,6 +1544,28 @@ mod tests {
         let rendered = render_ablation(&rows);
         assert!(rendered.contains("crossover"));
         assert!(rendered.contains("auto tracked"));
+        assert!(!rendered.contains("MTBF"), "no MTBF column without a degraded mode");
+    }
+
+    /// `repro ablation --degraded`: the MTBF-aware tuner column fills,
+    /// agrees with auto in the bandwidth regime (ring is already the
+    /// degradation-tolerant pick there), and the render grows its column.
+    #[test]
+    fn ablation_sweep_with_degraded_mode_fills_mtbf_column() {
+        let dm = DegradedMode { duty: 0.9, factor: 0.5 };
+        let rows = ablation_sweep(
+            Preset::H800,
+            CollectiveKind::AllReduce,
+            8,
+            &[256, 65536],
+            Some(dm),
+        )
+        .unwrap();
+        assert!(rows.iter().all(|r| r.mtbf_algo.is_some() && r.mtbf_ms.is_some()));
+        assert_eq!(rows[1].mtbf_algo, Some(Algo::Ring), "bandwidth regime stays ring");
+        let rendered = render_ablation(&rows);
+        assert!(rendered.contains("MTBF pick"));
+        assert!(rendered.contains("MTBF-aware tuning changed the pick"));
     }
 
     #[test]

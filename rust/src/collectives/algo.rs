@@ -255,6 +255,72 @@ pub fn select_analytic(
 }
 
 // ---------------------------------------------------------------------
+// Degraded-mode (MTBF-aware) expected cost.
+// ---------------------------------------------------------------------
+
+/// Chaos-aware tuning term: the fraction of wall time the fabric spends
+/// degraded under a `[chaos]` MTBF/MTTR fault process, and the bandwidth
+/// factor while degraded. [`AlgoTable::with_degraded_mode`] folds it into
+/// candidate ordering so the tuner prefers lowerings whose *one-lane-down*
+/// algbw is higher even when their peak algbw narrowly loses — at
+/// steady-state fault rates (100k-GPU scale) expected goodput, not peak,
+/// is the objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradedMode {
+    /// Fraction of time spent degraded: MTTR / (MTBF + MTTR), the renewal
+    /// process's unavailability duty cycle.
+    pub duty: f64,
+    /// Bandwidth multiplier while degraded, in (0, 1].
+    pub factor: f64,
+}
+
+impl DegradedMode {
+    /// The canonical chaos case: one of `n_lanes` identical NIC stripes
+    /// down (recovery has folded its share into the survivors), so the
+    /// aggregate bandwidth factor is `(n−1)/n`. Degenerates to no
+    /// degradation for a single lane — one lane down is an outage, not a
+    /// degraded mode, and outage time is priced by the recovery policies.
+    pub fn one_stripe_down(n_lanes: usize, mtbf_s: f64, mttr_s: f64) -> Self {
+        assert!(mtbf_s > 0.0 && mttr_s >= 0.0, "MTBF > 0, MTTR ≥ 0");
+        let n = n_lanes as f64;
+        DegradedMode {
+            duty: mttr_s / (mtbf_s + mttr_s),
+            factor: if n_lanes <= 1 { 1.0 } else { (n - 1.0) / n },
+        }
+    }
+}
+
+/// Expected completion time under a degraded-mode duty cycle: the
+/// duty-weighted mixture of [`predict`] at peak bandwidth and at
+/// `factor ×` bandwidth. Latency (α/ρ) terms are bandwidth-independent,
+/// so the mixture inflates exactly each candidate's *bandwidth* term by
+/// `(1 − duty) + duty / factor` — candidates with smaller bandwidth
+/// coefficients (ring's `2(N−1)/N` vs tree's `log₂N`) lose less, which
+/// is precisely the one-lane-down-algbw preference.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_degraded(
+    kind: CollectiveKind,
+    algo: Algo,
+    n: usize,
+    model: &PathModel,
+    msg: u64,
+    reduce_bps: f64,
+    path: PathId,
+    dm: &DegradedMode,
+) -> SimTime {
+    let peak = predict(kind, algo, n, model, msg, reduce_bps, path);
+    if dm.duty <= 0.0 || dm.factor >= 1.0 {
+        return peak;
+    }
+    let mut weak = *model;
+    weak.rate_cap = model.rate_cap * dm.factor;
+    let degraded = predict(kind, algo, n, &weak, msg, reduce_bps, path);
+    SimTime::from_secs_f64(
+        (1.0 - dm.duty) * peak.as_secs_f64() + dm.duty * degraded.as_secs_f64(),
+    )
+}
+
+// ---------------------------------------------------------------------
 // The AlgoTable tuner.
 // ---------------------------------------------------------------------
 
@@ -280,6 +346,12 @@ pub struct AlgoEntry {
 pub struct AlgoTable {
     spec: AlgoSpec,
     entries: HashMap<(CollectiveKind, u32), AlgoEntry>,
+    /// Chaos-aware objective: when set, Auto ranks candidates by
+    /// duty-weighted expected time ([`predict_degraded`]) instead of peak
+    /// time, and decides purely analytically — a DES probe measures the
+    /// *healthy* fabric, which is exactly what MTBF-aware tuning must not
+    /// trust alone.
+    degraded: Option<DegradedMode>,
 }
 
 impl AlgoTable {
@@ -287,7 +359,22 @@ impl AlgoTable {
         AlgoTable {
             spec,
             entries: HashMap::new(),
+            degraded: None,
         }
+    }
+
+    /// Fold a degraded-mode term into Auto's candidate ordering. Clears
+    /// cached entries — decisions made against the peak objective are
+    /// stale under the expected-goodput one.
+    pub fn with_degraded_mode(mut self, dm: DegradedMode) -> Self {
+        self.degraded = Some(dm);
+        self.entries.clear();
+        self
+    }
+
+    /// The degraded-mode term, when configured.
+    pub fn degraded_mode(&self) -> Option<DegradedMode> {
+        self.degraded
     }
 
     /// The policy this table runs.
@@ -333,7 +420,9 @@ impl AlgoTable {
             }
             AlgoSpec::Auto => {
                 // Analytic seed: per candidate, the slowest active path
-                // bounds the collective (paths run concurrently).
+                // bounds the collective (paths run concurrently). With a
+                // degraded mode configured, each path's estimate is the
+                // duty-weighted expected time instead of the peak time.
                 let extents = shares.to_extents(msg_bytes, crate::dtype::natural_align(msg_bytes));
                 let analytic: Vec<(Algo, SimTime)> = candidates(mc.kind, mc.n)
                     .iter()
@@ -341,8 +430,8 @@ impl AlgoTable {
                         let t = extents
                             .iter()
                             .filter(|(_, _, len)| *len > 0)
-                            .map(|(p, _, len)| {
-                                predict(
+                            .map(|(p, _, len)| match &self.degraded {
+                                Some(dm) => predict_degraded(
                                     mc.kind,
                                     a,
                                     mc.n,
@@ -350,7 +439,17 @@ impl AlgoTable {
                                     *len,
                                     mc.calib.reduce_bps,
                                     *p,
-                                )
+                                    dm,
+                                ),
+                                None => predict(
+                                    mc.kind,
+                                    a,
+                                    mc.n,
+                                    &mc.model(*p),
+                                    *len,
+                                    mc.calib.reduce_bps,
+                                    *p,
+                                ),
                             })
                             .max()
                             .unwrap_or(SimTime::ZERO);
@@ -364,12 +463,15 @@ impl AlgoTable {
                         best_t = t;
                     }
                 }
-                if best == Algo::Ring {
-                    // The incumbent won on the model it was calibrated
+                if best == Algo::Ring || self.degraded.is_some() {
+                    // Ring incumbent: won on the model it was calibrated
                     // against — no probe needed (this also keeps the
-                    // bandwidth-bound buckets probe-free).
+                    // bandwidth-bound buckets probe-free). Degraded mode:
+                    // always decide analytically — a DES probe runs on
+                    // the healthy fabric and would systematically favor
+                    // peak-optimal picks.
                     entry = AlgoEntry {
-                        algo: Algo::Ring,
+                        algo: best,
                         analytic,
                         probes: Vec::new(),
                     };
@@ -755,5 +857,117 @@ mod tests {
         let (a, c) = fixed.select(&mc, 256 << 10, &shares).unwrap();
         assert_eq!(a, Algo::Tree);
         assert_eq!(c, SimTime::ZERO);
+    }
+
+    #[test]
+    fn degraded_mode_duty_and_factor() {
+        let dm = DegradedMode::one_stripe_down(8, 0.05, 0.5);
+        assert!((dm.duty - 0.5 / 0.55).abs() < 1e-12);
+        assert!((dm.factor - 0.875).abs() < 1e-12);
+        // A single lane can't lose "one of its stripes" fractionally —
+        // one lane down is an outage, priced by the recovery policies.
+        assert_eq!(DegradedMode::one_stripe_down(1, 0.05, 0.5).factor, 1.0);
+        // MTTR = 0 means no degraded duty at all.
+        assert_eq!(DegradedMode::one_stripe_down(8, 0.05, 0.0).duty, 0.0);
+    }
+
+    #[test]
+    fn predict_degraded_is_the_duty_weighted_mixture() {
+        let kind = CollectiveKind::AllReduce;
+        let m = nv_model(kind, 8);
+        let dm = DegradedMode::one_stripe_down(8, 0.05, 0.5);
+        for msg in [256u64 << 10, 16 << 20, 256 << 20] {
+            let peak = predict(kind, Algo::Ring, 8, &m, msg, 500e9, PathId::Nvlink);
+            let mut weak = m;
+            weak.rate_cap = m.rate_cap * dm.factor;
+            let slow = predict(kind, Algo::Ring, 8, &weak, msg, 500e9, PathId::Nvlink);
+            let expect = (1.0 - dm.duty) * peak.as_secs_f64() + dm.duty * slow.as_secs_f64();
+            let got =
+                predict_degraded(kind, Algo::Ring, 8, &m, msg, 500e9, PathId::Nvlink, &dm);
+            assert!(
+                (got.as_secs_f64() - expect).abs() < 1e-12,
+                "mixture mismatch at {msg}B: {got:?} vs {expect}"
+            );
+            assert!(got > peak, "degradation must cost time at {msg}B");
+        }
+        // Zero duty collapses to the peak prediction exactly.
+        let none = DegradedMode { duty: 0.0, factor: 0.875 };
+        let msg = 4u64 << 20;
+        assert_eq!(
+            predict_degraded(kind, Algo::Ring, 8, &m, msg, 500e9, PathId::Nvlink, &none),
+            predict(kind, Algo::Ring, 8, &m, msg, 500e9, PathId::Nvlink)
+        );
+    }
+
+    #[test]
+    fn degradation_shifts_the_crossover_toward_ring() {
+        // Degradation inflates every candidate's bandwidth term by the
+        // same (1-duty) + duty/factor multiplier, so low-bandwidth-
+        // coefficient candidates (ring) win buckets they lost at peak:
+        // somewhere in the latency/bandwidth transition there must be a
+        // size where the peak ranking leaves ring but the duty-weighted
+        // ranking keeps it.
+        let kind = CollectiveKind::AllReduce;
+        let m = nv_model(kind, 8);
+        let dm = DegradedMode { duty: 0.9, factor: 0.5 };
+        let best = |msg: u64, dm: Option<&DegradedMode>| {
+            candidates(kind, 8)
+                .iter()
+                .map(|&a| {
+                    let t = match dm {
+                        Some(d) => {
+                            predict_degraded(kind, a, 8, &m, msg, 500e9, PathId::Nvlink, d)
+                        }
+                        None => predict(kind, a, 8, &m, msg, 500e9, PathId::Nvlink),
+                    };
+                    (a, t)
+                })
+                .min_by(|x, y| x.1.cmp(&y.1))
+                .unwrap()
+                .0
+        };
+        let mut shifted = false;
+        let mut msg = 64u64 << 10;
+        while msg <= 256 << 20 {
+            let at_peak = best(msg, None);
+            let at_degraded = best(msg, Some(&dm));
+            // Degradation never moves a bucket *away* from ring.
+            if at_peak == Algo::Ring {
+                assert_eq!(at_degraded, Algo::Ring, "regression at {msg}B");
+            }
+            if at_peak != Algo::Ring && at_degraded == Algo::Ring {
+                shifted = true;
+            }
+            msg <<= 1;
+        }
+        assert!(shifted, "no bucket shifted toward ring under degradation");
+    }
+
+    #[test]
+    fn degraded_table_decides_analytically_and_resets_cache() {
+        let topo = Topology::build(&Preset::H800.spec());
+        let mc = MultipathCollective::new(
+            &topo,
+            Calibration::h800(),
+            CollectiveKind::AllReduce,
+            8,
+        );
+        let shares = Shares::nvlink_only();
+        let mut table = AlgoTable::new(AlgoSpec::Auto);
+        // Seed a cached entry, then switch on degraded mode: the cache
+        // must be dropped (peak-ranked picks are stale under MTBF).
+        table.select(&mc, 256 << 10, &shares).unwrap();
+        assert!(table.entry(CollectiveKind::AllReduce, 256 << 10).is_some());
+        let dm = DegradedMode::one_stripe_down(8, 0.05, 0.5);
+        let mut table = table.with_degraded_mode(dm);
+        assert_eq!(table.degraded_mode(), Some(dm));
+        assert!(table.entry(CollectiveKind::AllReduce, 256 << 10).is_none());
+        // Degraded mode never probes: the DES measures the healthy
+        // fabric, which is exactly what MTBF-aware tuning must not
+        // trust alone.
+        let (_, cost) = table.select(&mc, 256 << 10, &shares).unwrap();
+        assert_eq!(cost, SimTime::ZERO);
+        let e = table.entry(CollectiveKind::AllReduce, 256 << 10).unwrap();
+        assert!(e.probes.is_empty());
     }
 }

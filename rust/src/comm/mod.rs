@@ -617,6 +617,62 @@ impl Communicator {
             .map(|rb| rb.shares())
     }
 
+    /// Fault-path entry: fold a dead NIC stripe's share into `into` for
+    /// an operator's size-class bucket (the communicator-level face of
+    /// [`RecoveryPolicy::RerouteStripes`]). Returns the share moved
+    /// (0.0 when the stripe was already inactive). Any landed movement
+    /// invalidates the device's plan cache — cached pricings snapshot
+    /// the stripe distribution they were compiled under.
+    ///
+    /// [`RecoveryPolicy::RerouteStripes`]: crate::faults::RecoveryPolicy::RerouteStripes
+    pub fn drop_stripe(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        dead: StripeId,
+        into: StripeId,
+    ) -> Result<f64> {
+        anyhow::ensure!(
+            self.cfg.run.n_nodes > 1,
+            "stripe rerouting needs a cluster communicator (n_nodes > 1)"
+        );
+        self.ensure_tuned(kind, msg_bytes)?;
+        self.ensure_inter_tuned(kind, msg_bytes)?;
+        let key = (kind, size_class(msg_bytes));
+        let rb = self.inter_ops.get_mut(&key).expect("inter tuned above");
+        let pct = rb.force_deactivate(dead, into);
+        if pct > 0.0 {
+            self.device.invalidate_plans();
+        }
+        Ok(pct)
+    }
+
+    /// Inverse of [`Self::drop_stripe`] — elastic regrow: reactivate a
+    /// repaired NIC stripe with the fair share of the grown set (see
+    /// [`crate::balancer::Shares::activate`]). Returns the share granted
+    /// (0.0 when already active) and invalidates cached plans on any
+    /// landed grant, exactly like the drop path.
+    pub fn regrow_stripe(
+        &mut self,
+        kind: CollectiveKind,
+        msg_bytes: u64,
+        repaired: StripeId,
+    ) -> Result<f64> {
+        anyhow::ensure!(
+            self.cfg.run.n_nodes > 1,
+            "stripe regrow needs a cluster communicator (n_nodes > 1)"
+        );
+        self.ensure_tuned(kind, msg_bytes)?;
+        self.ensure_inter_tuned(kind, msg_bytes)?;
+        let key = (kind, size_class(msg_bytes));
+        let rb = self.inter_ops.get_mut(&key).expect("inter tuned above");
+        let pct = rb.reactivate(repaired);
+        if pct > 0.0 {
+            self.device.invalidate_plans();
+        }
+        Ok(pct)
+    }
+
     // -----------------------------------------------------------------
     // Typed collective entry points (out-of-place default, in-place as
     // the NCCL special case).

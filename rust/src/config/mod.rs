@@ -79,6 +79,11 @@ pub struct ChaosConfig {
     pub reload_s: f64,
     /// Default recovery policy when the CLI does not pin one.
     pub policy: crate::faults::RecoveryPolicy,
+    /// Elastic regrow (default true): when a fault's repair instant
+    /// passes, reroute reactivates the dead stripe and relower regrows
+    /// the shrunken cluster; `false` restores the PR-6 shrink-only
+    /// behavior (`repro chaos --no-regrow`).
+    pub regrow: bool,
 }
 
 impl Default for ChaosConfig {
@@ -91,6 +96,7 @@ impl Default for ChaosConfig {
             ckpt_interval: 50,
             reload_s: 2.0,
             policy: crate::faults::RecoveryPolicy::RerouteStripes,
+            regrow: true,
         }
     }
 }
@@ -230,7 +236,7 @@ impl RunConfig {
             "balancer.nvlink_initial_share_pct",
             "chaos.mtbf_s", "chaos.mttr_s", "chaos.detection_us",
             "chaos.reinit_ms", "chaos.ckpt_interval", "chaos.reload_s",
-            "chaos.policy",
+            "chaos.policy", "chaos.regrow",
         ];
         for k in doc.keys() {
             anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key '{k}'");
@@ -266,6 +272,7 @@ impl RunConfig {
                 .str_or("chaos.policy", &dc.policy.to_string())
                 .parse()
                 .map_err(|e: String| anyhow::anyhow!(e))?,
+            regrow: doc.bool_or("chaos.regrow", dc.regrow),
         };
         Ok(RunConfig {
             preset,
@@ -324,6 +331,7 @@ impl RunConfig {
         doc.set("chaos.ckpt_interval", Value::Int(c.ckpt_interval as i64));
         doc.set("chaos.reload_s", Value::Float(c.reload_s));
         doc.set("chaos.policy", Value::Str(c.policy.to_string()));
+        doc.set("chaos.regrow", Value::Bool(c.regrow));
         Ok(doc.render())
     }
 
@@ -433,15 +441,18 @@ mod tests {
         cfg.chaos.mtbf_s = 0.25;
         cfg.chaos.ckpt_interval = 7;
         cfg.chaos.policy = RecoveryPolicy::ReLower;
+        cfg.chaos.regrow = false;
         cfg.validate().unwrap();
         let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
         assert!((back.chaos.mtbf_s - 0.25).abs() < 1e-9);
         assert_eq!(back.chaos.ckpt_interval, 7);
         assert_eq!(back.chaos.policy, RecoveryPolicy::ReLower);
+        assert!(!back.chaos.regrow, "chaos.regrow did not roundtrip");
         // Defaults when keys are absent; bad values rejected.
         let d = RunConfig::from_toml_str("preset = \"h800\"").unwrap().chaos;
         assert!((d.mtbf_s - 0.05).abs() < 1e-9);
         assert_eq!(d.policy, RecoveryPolicy::RerouteStripes);
+        assert!(d.regrow, "elastic regrow defaults on");
         assert!(RunConfig::from_toml_str("chaos.policy = \"raid\"").is_err());
         let mut bad = RunConfig::new(Preset::H800, 8);
         bad.chaos.ckpt_interval = 0;

@@ -5,14 +5,30 @@
 //! collective over the *current* share state (and, after a `ReLower`
 //! node shrink, the current surviving cluster), lowers the timeline's
 //! still-relevant faults to engine rate events relative to the step's
-//! start ([`super::timeline_events`]), and executes under
-//! [`crate::sim::run_with_events`]. A clean step advances the clock by
-//! its makespan; an aborted step hands the failure instant to the
-//! recovery policy, which advances the clock by its own cost model
+//! start ([`super::timeline_events_relabeled`] — needles are rewritten
+//! through the physical→dense [`super::NodeRelabel`] so a fault keeps
+//! striking the node it was injected on after a shrink), and executes
+//! under [`crate::sim::run_with_events`]. A clean step advances the
+//! clock by its makespan; an aborted step hands the failure instant to
+//! the recovery policy, which advances the clock by its own cost model
 //! ([`super::RecoverySpec`]) and mutates the share / cluster state.
 //! Because every policy replays the *same* timeline, the resulting
 //! [`ChaosOutcome`]s compare goodput and time-to-recover apples to
 //! apples (`repro chaos`, EXPERIMENTS.md §Chaos).
+//!
+//! Recovery is **bidirectional** (elastic regrow, on by default via
+//! `chaos.regrow`): when a dead NIC's or node's repair instant passes,
+//! `RerouteStripes` reactivates the stripe through
+//! [`RuntimeBalancer::reactivate`] and `ReLower` regrows the shrunken
+//! cluster back to full node count — each paying the same
+//! detection (+reinit) costs its shrink paid — so a repaired resource
+//! stops taxing goodput for the rest of the run.
+//!
+//! [`run_chaos_trainer`] drives the same loop through a *bucketed
+//! overlap trainer step* (fwd compute → chunked bwd compute overlapped
+//! with per-bucket gradient collectives, the PR-4 DDP shape) instead of
+//! a bare collective, so TTR and degradation show up in loss-curve wall
+//! time (`repro chaos --trainer`).
 //!
 //! With an empty timeline the loop reduces to `steps` identical
 //! fault-free runs — `run_with_events` delegates to the plain engine, so
@@ -20,7 +36,7 @@
 //! (`tests/prop_faults.rs` pins this against the golden traces).
 
 use super::recovery::{RecoveryPolicy, RecoverySpec};
-use super::spec::{timeline_events, FaultSpec, InjectedFault};
+use super::spec::{timeline_events_relabeled, FaultSpec, InjectedFault, NodeRelabel};
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
 use crate::balancer::RuntimeBalancer;
@@ -29,7 +45,7 @@ use crate::collectives::CollectiveKind;
 use crate::config::BalancerConfig;
 use crate::links::calib::Calibration;
 use crate::links::StripeId;
-use crate::sim::SimTime;
+use crate::sim::{run_with_events, RateEvent, ResourcePool, SimTime, TaskGraph, TaskId};
 use crate::topology::cluster::{Cluster, ClusterSpec};
 use anyhow::{bail, Context, Result};
 
@@ -89,6 +105,21 @@ pub fn smoke_timeline(t0: SimTime) -> Vec<InjectedFault> {
     ]
 }
 
+/// A single NIC death whose repair lands *inside* the run (2.5·t0 →
+/// 6.5·t0) — the deterministic elastic-regrow smoke. With `regrow` on,
+/// the policies reactivate the stripe once the clock passes 6.5·t0 and
+/// bank strictly higher goodput than a shrink-only replay of the same
+/// timeline; `repro chaos --smoke` asserts exactly that (tier-1 CI).
+pub fn smoke_repair_timeline(t0: SimTime) -> Vec<InjectedFault> {
+    let s = t0.as_secs_f64();
+    vec![InjectedFault::nic_death(
+        0,
+        1,
+        SimTime::from_secs_f64(s * 2.5),
+        SimTime::from_secs_f64(s * 6.5),
+    )]
+}
+
 /// What one policy's replay of a timeline produced.
 #[derive(Debug, Clone)]
 pub struct ChaosOutcome {
@@ -111,6 +142,15 @@ pub struct ChaosOutcome {
     pub fault_free_step: SimTime,
     /// Collective attempts, successful or aborted.
     pub attempts: usize,
+    /// Elastic-regrow events: repaired stripes reactivated / nodes
+    /// rejoined (0 when `regrow` is off or no repair landed in-run).
+    pub regrows: usize,
+    /// Share state at the end of the run — `inter.n_active()` back at
+    /// the full stripe count is the observable regrow signature.
+    pub final_tiers: TierShares,
+    /// Makespan of the last banked step (fault-free again after a full
+    /// regrow, still degraded under shrink-only recovery).
+    pub last_step: SimTime,
 }
 
 impl ChaosOutcome {
@@ -142,18 +182,147 @@ impl ChaosOutcome {
     }
 
     /// Mean time-to-recover across outages; `None` if none occurred.
+    /// Rounds to nearest instead of truncating — at the engine's tick
+    /// granularity flooring systematically under-reported the mean.
     pub fn mean_ttr(&self) -> Option<SimTime> {
         if self.recoveries.is_empty() {
             return None;
         }
+        let n = self.recoveries.len() as u64;
         let sum: u64 = self.recoveries.iter().map(|t| t.0).sum();
-        Some(SimTime(sum / self.recoveries.len() as u64))
+        Some(SimTime((sum + n / 2) / n))
     }
 }
 
+/// The compute shape of one [`run_chaos_trainer`] step: forward pass,
+/// backward pass chunked into `buckets` gradient buckets, each bucket's
+/// collective overlapped with the remaining backward compute on the
+/// shared DES — the PR-4 DDP shape, rebuilt directly on the task graph
+/// so it can run under a fault timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerChaosSpec {
+    /// Forward-pass compute time per step.
+    pub fwd: SimTime,
+    /// Backward-pass compute time per step (split evenly over buckets).
+    pub bwd: SimTime,
+    /// Gradient buckets (overlap granularity, ≥ 1).
+    pub buckets: usize,
+}
+
+impl TrainerChaosSpec {
+    /// Derive compute times from the gradient message the trainer's
+    /// convention way: `params = msg_bytes / 4` (f32 gradients), fwd =
+    /// 2·P·T flops, bwd = 4·P·T flops over the effective GPU rate —
+    /// mirroring [`crate::trainer`]'s `compute_times`.
+    pub fn from_message(msg_bytes: u64, gpu_tflops: f64, tokens: usize, buckets: usize) -> Self {
+        assert!(gpu_tflops > 0.0, "gpu_tflops must be > 0");
+        let params = (msg_bytes / 4).max(1) as f64;
+        let t = tokens as f64;
+        let rate = gpu_tflops * 1e12;
+        TrainerChaosSpec {
+            fwd: SimTime::from_secs_f64(2.0 * params * t / rate),
+            bwd: SimTime::from_secs_f64(4.0 * params * t / rate),
+            buckets: buckets.max(1),
+        }
+    }
+}
+
+/// What one trainer-shaped step produced (the trainer-workload analogue
+/// of [`crate::collectives::hierarchical::FaultedHierRun`]).
+struct TrainerStepRun {
+    ok: bool,
+    total: SimTime,
+    first_failure: Option<SimTime>,
+    inter_times: Vec<(StripeId, SimTime)>,
+}
+
+/// Compile and run ONE bucketed-overlap trainer step under a fault
+/// timeline: fwd delay → per-bucket (bwd-chunk delay ‖ gradient
+/// collective), comm buckets FIFO-ordered behind each other and gated on
+/// their producing compute chunk — all on one task graph so compute and
+/// communication contend (and fail) on the same DES clock.
+fn run_trainer_step(
+    cc: &ClusterCollective<'_>,
+    pool: ResourcePool,
+    msg_bytes: u64,
+    tiers: &TierShares,
+    spec: &TrainerChaosSpec,
+    events: &[RateEvent],
+) -> Result<TrainerStepRun> {
+    anyhow::ensure!(
+        msg_bytes >= 4 && msg_bytes % 4 == 0,
+        "gradient message must be 4-byte (f32) aligned"
+    );
+    let buckets = spec.buckets.clamp(1, (msg_bytes / 4) as usize);
+    let chunk = SimTime::from_secs_f64(spec.bwd.as_secs_f64() / buckets as f64);
+    let mut pool = pool;
+    let mut graph = TaskGraph::new();
+    let mut prev_compute = graph.delay(spec.fwd, vec![]);
+    let mut prev_comm: Option<TaskId> = None;
+    for b in 0..buckets as u64 {
+        prev_compute = graph.delay(chunk, vec![prev_compute]);
+        // Element-aligned bucket extents covering the message exactly.
+        let lo = msg_bytes * b / buckets as u64 / 4 * 4;
+        let hi = if b + 1 == buckets as u64 {
+            msg_bytes
+        } else {
+            msg_bytes * (b + 1) / buckets as u64 / 4 * 4
+        };
+        if hi <= lo {
+            continue;
+        }
+        let base = graph.len();
+        let compiled = cc.compile_onto(hi - lo, tiers, 4, pool, graph)?;
+        pool = compiled.pool;
+        graph = compiled.graph;
+        // The bucket's collective starts once its gradients exist (the
+        // bwd chunk) and its stream predecessor finished (comm FIFO).
+        let mut deps = vec![prev_compute];
+        if let Some(pc) = prev_comm {
+            deps.push(pc);
+        }
+        let end = graph.len();
+        graph.gate_roots_in(base..end, &deps);
+        let sinks = graph.sinks_in(base..end);
+        prev_comm = Some(graph.barrier(sinks));
+    }
+    let run = run_with_events(pool, &graph, events)?;
+    let inter_times = tiers
+        .inter
+        .active_paths()
+        .into_iter()
+        .filter_map(|s| run.schedule.tag_finish(&graph, s.tag()).map(|t| (s, t)))
+        .collect();
+    Ok(TrainerStepRun {
+        ok: run.failed.is_empty(),
+        total: run.schedule.makespan,
+        first_failure: run.first_failure,
+        inter_times,
+    })
+}
+
+/// What the chaos loop prices per step: a bare collective (the original
+/// harness) or a full bucketed-overlap trainer step.
+enum Workload<'a> {
+    Collective,
+    Trainer(&'a TrainerChaosSpec),
+}
+
+/// First active stripe that is not itself a culprit of the current
+/// outage — the fold target for stripe surgery. With two simultaneous
+/// NIC deaths the old "any stripe ≠ the one being dropped" rule could
+/// pick the *other dying* stripe; excluding all culprits guarantees the
+/// share lands on a survivor. `None` when no survivor exists.
+fn fold_target(shares: &Shares<StripeId>, culprits: &[StripeId]) -> Option<StripeId> {
+    shares
+        .active_paths()
+        .into_iter()
+        .find(|s| !culprits.contains(s))
+}
+
 /// Replay `timeline` through a `steps`-step training loop under one
-/// recovery policy. See the module docs for the step/recovery state
-/// machine; the policy-specific abort handling is inline below.
+/// recovery policy. See the module docs for the step/recovery/regrow
+/// state machine; the policy-specific handling is inline below.
 #[allow(clippy::too_many_arguments)]
 pub fn run_chaos(
     cluster: &Cluster,
@@ -165,6 +334,61 @@ pub fn run_chaos(
     rec: &RecoverySpec,
     cfg: &BalancerConfig,
 ) -> Result<ChaosOutcome> {
+    run_chaos_impl(
+        cluster,
+        calib,
+        kind,
+        msg_bytes,
+        steps,
+        timeline,
+        rec,
+        cfg,
+        Workload::Collective,
+    )
+}
+
+/// As [`run_chaos`], but each step is a full bucketed-overlap trainer
+/// step ([`TrainerChaosSpec`]) instead of a bare collective: recovery
+/// spans and degradation land in loss-curve wall time, where compute
+/// overlap partially hides communication slowdowns
+/// (`repro chaos --trainer`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_chaos_trainer(
+    cluster: &Cluster,
+    calib: Calibration,
+    kind: CollectiveKind,
+    msg_bytes: u64,
+    steps: usize,
+    timeline: &[InjectedFault],
+    rec: &RecoverySpec,
+    cfg: &BalancerConfig,
+    tspec: &TrainerChaosSpec,
+) -> Result<ChaosOutcome> {
+    run_chaos_impl(
+        cluster,
+        calib,
+        kind,
+        msg_bytes,
+        steps,
+        timeline,
+        rec,
+        cfg,
+        Workload::Trainer(tspec),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_chaos_impl(
+    cluster: &Cluster,
+    calib: Calibration,
+    kind: CollectiveKind,
+    msg_bytes: u64,
+    steps: usize,
+    timeline: &[InjectedFault],
+    rec: &RecoverySpec,
+    cfg: &BalancerConfig,
+    workload: Workload<'_>,
+) -> Result<ChaosOutcome> {
     anyhow::ensure!(
         cluster.n_nodes() >= 2,
         "chaos runs price multi-node clusters (n_nodes >= 2)"
@@ -174,9 +398,18 @@ pub fn run_chaos(
     let tiers0 = TierShares::new(Shares::nvlink_only(), nl);
     // Fault-free reference step (also the zero-fault bit-identity anchor:
     // with an empty timeline every loop step takes exactly this path).
-    let t0 = ClusterCollective::new(cluster, calib.clone(), kind, nl)
-        .run(msg_bytes, &tiers0, 4)?
-        .total;
+    let t0 = match &workload {
+        Workload::Collective => ClusterCollective::new(cluster, calib.clone(), kind, nl)
+            .run(msg_bytes, &tiers0, 4)?
+            .total,
+        Workload::Trainer(spec) => {
+            let cc = ClusterCollective::new(cluster, calib.clone(), kind, nl);
+            let run =
+                run_trainer_step(&cc, cluster.pool.clone(), msg_bytes, &tiers0, spec, &[])?;
+            anyhow::ensure!(run.ok, "fault-free trainer step failed");
+            run.total
+        }
+    };
     anyhow::ensure!(t0 > SimTime::ZERO, "degenerate fault-free step");
     let degraded_floor = SimTime::from_secs_f64(t0.as_secs_f64() * 1.001);
 
@@ -185,13 +418,28 @@ pub fn run_chaos(
     // `ReLower` node death swaps in a shrunken cluster; all collective
     // borrows stay inside the per-step scope below so the swap is legal.
     let mut shrunk: Option<Cluster> = None;
+    // Physical→dense node map: `ReLower` shrinks relabel survivors, so
+    // timeline needles must be rewritten or a fault addressed to the
+    // dead node would strike whoever inherited its dense name.
+    let mut relabel = NodeRelabel::identity(cluster.n_nodes());
+    // Outstanding shrinkage awaiting repair: (stripe | physical node,
+    // repair instant). Drained by the regrow pass when the clock passes
+    // a repair; only populated by policies that actually shrink.
+    let mut dead_stripes: Vec<(StripeId, SimTime)> = Vec::new();
+    let mut dead_nodes: Vec<(usize, SimTime)> = Vec::new();
     let mut now = SimTime::ZERO;
     let mut completed = 0usize;
     let mut failures = 0usize;
     let mut degraded = 0usize;
+    // Degraded flag per banked step, so a checkpoint rollback can also
+    // roll back the degraded-step count (the recomputed steps would
+    // otherwise be counted as degraded twice).
+    let mut banked: Vec<bool> = Vec::new();
     let mut recoveries: Vec<SimTime> = Vec::new();
     let mut pending_fail: Option<SimTime> = None;
     let mut attempts = 0usize;
+    let mut regrows = 0usize;
+    let mut last_step = SimTime::ZERO;
     // Every abort either removes a fault's route from the lowering or
     // advances the clock past its repair, so the loop terminates; the
     // guard turns a modeling bug into an error instead of a hang.
@@ -205,21 +453,103 @@ pub fn run_chaos(
                  ({completed}/{steps} steps banked)"
             );
         }
-        let (run, cur_nn) = {
+
+        // Elastic regrow: repair events reactivate what death
+        // deactivated, at the same detection (+reinit) costs the shrink
+        // paid. Shrink-only mode (`--no-regrow`) skips this entirely.
+        if rec.regrow {
+            let mut i = 0;
+            while i < dead_stripes.len() {
+                if dead_stripes[i].1 > now {
+                    i += 1;
+                    continue;
+                }
+                let (s, _) = dead_stripes.remove(i);
+                match rec.policy {
+                    RecoveryPolicy::RerouteStripes => {
+                        if inter_rb.reactivate(s) > 0.0 {
+                            current.inter = inter_rb.shares().clone();
+                            now = now + rec.detection;
+                            regrows += 1;
+                        }
+                    }
+                    RecoveryPolicy::ReLower => {
+                        current = current.with_stripe(s);
+                        inter_rb = RuntimeBalancer::with_preferred(
+                            cfg.clone(),
+                            current.inter.clone(),
+                            None,
+                        );
+                        now = now + rec.detection + rec.reinit;
+                        regrows += 1;
+                    }
+                    RecoveryPolicy::CheckpointRestart => {}
+                }
+            }
+            let mut j = 0;
+            while j < dead_nodes.len() {
+                if dead_nodes[j].1 > now {
+                    j += 1;
+                    continue;
+                }
+                let (p, _) = dead_nodes.remove(j);
+                relabel.revive(p);
+                let alive = relabel.n_alive();
+                // Back at full strength → drop the shrunken stand-in
+                // entirely (bit-identical full-cluster pricing again).
+                shrunk = if alive == cluster.n_nodes() {
+                    None
+                } else {
+                    Some(Cluster::build(&ClusterSpec::new(
+                        alive,
+                        cluster.spec.node.clone(),
+                    )))
+                };
+                inter_rb = RuntimeBalancer::with_preferred(
+                    cfg.clone(),
+                    current.inter.clone(),
+                    None,
+                );
+                now = now + rec.detection + rec.reinit;
+                regrows += 1;
+            }
+        }
+
+        let (ok, dt, first_failure, inter_times) = {
             let active: &Cluster = shrunk.as_ref().unwrap_or(cluster);
             let cc = ClusterCollective::new(active, calib.clone(), kind, nl);
-            let events = timeline_events(timeline, &active.pool, now);
-            (
-                cc.run_under_faults(msg_bytes, &current, 4, &events)?,
-                active.n_nodes(),
-            )
+            let events = timeline_events_relabeled(timeline, &active.pool, now, &relabel);
+            match &workload {
+                Workload::Collective => {
+                    let run = cc.run_under_faults(msg_bytes, &current, 4, &events)?;
+                    (
+                        run.ok(),
+                        run.report.total,
+                        run.first_failure,
+                        run.report.inter_times.clone(),
+                    )
+                }
+                Workload::Trainer(spec) => {
+                    let run = run_trainer_step(
+                        &cc,
+                        active.pool.clone(),
+                        msg_bytes,
+                        &current,
+                        spec,
+                        &events,
+                    )?;
+                    (run.ok, run.total, run.first_failure, run.inter_times)
+                }
+            }
         };
 
-        if run.ok() {
-            let dt = run.report.total;
+        if ok {
             now = now + dt;
             completed += 1;
-            if dt > degraded_floor {
+            last_step = dt;
+            let is_degraded = dt > degraded_floor;
+            banked.push(is_degraded);
+            if is_degraded {
                 degraded += 1;
             }
             if let Some(tf) = pending_fail.take() {
@@ -230,7 +560,7 @@ pub fn run_chaos(
             // trusts its recompiled distribution; CheckpointRestart has
             // no communication-layer agency at all.
             if rec.policy == RecoveryPolicy::RerouteStripes
-                && inter_rb.observe(run.report.inter_times.clone()).is_some()
+                && inter_rb.observe(inter_times).is_some()
             {
                 current.inter = inter_rb.shares().clone();
             }
@@ -240,11 +570,17 @@ pub fn run_chaos(
         // Aborted step: no bytes banked, clock moves to the failure
         // instant and then by the policy's recovery cost.
         failures += 1;
-        let tf_abs = now + run.first_failure.context("failed run lacks first_failure")?;
+        let tf_abs = now + first_failure.context("failed run lacks first_failure")?;
         pending_fail.get_or_insert(tf_abs);
         let culprits: Vec<&InjectedFault> = timeline
             .iter()
             .filter(|f| f.is_death() && f.at <= tf_abs && tf_abs < f.until)
+            .collect();
+        // Every culprit stripe of this outage, so the fold-target search
+        // can exclude all of them (not just the one being dropped).
+        let culprit_stripes: Vec<StripeId> = culprits
+            .iter()
+            .filter_map(|f| f.target.stripe.map(StripeId))
             .collect();
 
         match rec.policy {
@@ -253,14 +589,11 @@ pub fn run_chaos(
                 for f in &culprits {
                     if let Some(s) = f.target.stripe {
                         let dead = StripeId(s);
-                        let into = inter_rb
-                            .shares()
-                            .active_paths()
-                            .into_iter()
-                            .find(|x| *x != dead)
+                        let into = fold_target(inter_rb.shares(), &culprit_stripes)
                             .context("no surviving NIC stripe to reroute onto")?;
                         if inter_rb.force_deactivate(dead, into) > 0.0 {
                             current.inter = inter_rb.shares().clone();
+                            dead_stripes.push((dead, f.until));
                         }
                     } else if f.target.node.is_some() {
                         bail!(
@@ -279,24 +612,31 @@ pub fn run_chaos(
                 now = tf_abs + rec.detection + rec.reinit;
                 for f in &culprits {
                     if let Some(s) = f.target.stripe {
-                        current = current
-                            .without_stripe(StripeId(s))
-                            .context("no surviving NIC stripe to re-lower over")?;
-                    } else if f.target.node.is_some() {
+                        let dead = StripeId(s);
+                        if current.inter.is_active(dead) {
+                            let into = fold_target(&current.inter, &culprit_stripes)
+                                .context("no surviving NIC stripe to re-lower over")?;
+                            current.inter.deactivate(dead, into);
+                            dead_stripes.push((dead, f.until));
+                        }
+                    } else if let Some(p) = f.target.node {
+                        relabel.retire(p);
+                        let alive = relabel.n_alive();
                         anyhow::ensure!(
-                            cur_nn > 2,
-                            "cannot re-lower below 2 nodes (node death at {} nodes)",
-                            cur_nn
+                            alive >= 2,
+                            "cannot re-lower below 2 nodes (node death left {alive} alive)"
                         );
                         // Survivors are relabeled densely (node k's
                         // resources renamed) — a modeling artifact that
-                        // keeps the topology builder unchanged. Repaired
-                        // nodes never rejoin: no elastic regrow, which is
-                        // conservative for this policy's goodput.
+                        // keeps the topology builder unchanged; `relabel`
+                        // rewrites later timeline needles accordingly.
+                        // With `regrow` on, the repaired node rejoins
+                        // once the clock passes its repair instant.
                         shrunk = Some(Cluster::build(&ClusterSpec::new(
-                            cur_nn - 1,
+                            alive,
                             cluster.spec.node.clone(),
                         )));
+                        dead_nodes.push((p, f.until));
                     } else {
                         now = now.max(f.until);
                     }
@@ -315,6 +655,14 @@ pub fn run_chaos(
                 let repair = culprits.iter().map(|f| f.until).max().unwrap_or(tf_abs);
                 now = (tf_abs + rec.detection).max(repair) + rec.reload;
                 let lost = completed % rec.ckpt_interval.max(1);
+                // Roll back the degraded count with the banked steps —
+                // the recomputed steps re-run through the loop and must
+                // not be counted as degraded twice.
+                for _ in 0..lost {
+                    if banked.pop().unwrap_or(false) {
+                        degraded -= 1;
+                    }
+                }
                 completed -= lost;
             }
         }
@@ -332,6 +680,9 @@ pub fn run_chaos(
         virtual_time: now,
         fault_free_step: t0,
         attempts,
+        regrows,
+        final_tiers: current,
+        last_step,
     })
 }
 

@@ -33,15 +33,26 @@
 //!   reinit cost; node death shrinks the cluster);
 //!   [`RecoveryPolicy::CheckpointRestart`] is the trainer-level
 //!   baseline — wait out the repair, reload, and recompute the steps
-//!   lost since the last checkpoint. [`chaos::run_chaos`] walks a
-//!   training-step loop against one timeline per policy and reports
-//!   time-to-recover and goodput vs fault-free (`repro chaos` on the
-//!   CLI, EXPERIMENTS.md §Chaos).
+//!   lost since the last checkpoint. Recovery is bidirectional: with
+//!   elastic regrow on (`chaos.regrow`, default true) a repaired NIC
+//!   stripe is reactivated and a repaired node rejoins the cluster once
+//!   its repair instant passes, paying the same detection (+reinit)
+//!   costs the shrink paid. [`chaos::run_chaos`] walks a training-step
+//!   loop against one timeline per policy and reports time-to-recover
+//!   and goodput vs fault-free (`repro chaos` on the CLI, EXPERIMENTS.md
+//!   §Chaos); [`chaos::run_chaos_trainer`] drives the same loop through
+//!   a bucketed-overlap trainer step (`repro chaos --trainer`) so TTR
+//!   lands in loss-curve wall time.
 
 pub mod chaos;
 pub mod recovery;
 pub mod spec;
 
-pub use chaos::{run_chaos, ChaosOutcome, ChaosScenario};
+pub use chaos::{
+    run_chaos, run_chaos_trainer, ChaosOutcome, ChaosScenario, TrainerChaosSpec,
+};
 pub use recovery::{RecoveryPolicy, RecoverySpec};
-pub use spec::{schedule, timeline_events, FaultKind, FaultSpec, FaultTarget, InjectedFault};
+pub use spec::{
+    schedule, timeline_events, timeline_events_relabeled, FaultKind, FaultSpec, FaultTarget,
+    InjectedFault, NodeRelabel,
+};

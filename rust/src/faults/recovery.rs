@@ -84,6 +84,14 @@ pub struct RecoverySpec {
     pub ckpt_interval: usize,
     /// Checkpoint reload cost (`CheckpointRestart` only).
     pub reload: SimTime,
+    /// Elastic regrow: when a dead NIC's or node's repair instant passes,
+    /// reactivate the stripe ([`RecoveryPolicy::RerouteStripes`]) or
+    /// regrow the shrunken cluster to full node count
+    /// ([`RecoveryPolicy::ReLower`]), paying the same detection (+reinit
+    /// for relower) costs the shrink paid. Off → the pre-regrow
+    /// shrink-only behavior ([`RecoveryPolicy::CheckpointRestart`] never
+    /// shrinks, so the knob is inert there).
+    pub regrow: bool,
 }
 
 impl RecoverySpec {
@@ -95,6 +103,7 @@ impl RecoverySpec {
             reinit: SimTime::from_secs_f64(cfg.reinit_ms * 1e-3),
             ckpt_interval: cfg.ckpt_interval.max(1),
             reload: SimTime::from_secs_f64(cfg.reload_s),
+            regrow: cfg.regrow,
         }
     }
 }
@@ -127,5 +136,6 @@ mod tests {
         assert!((spec.detection.as_secs_f64() - cfg.detection_us * 1e-6).abs() < 1e-12);
         assert!((spec.reinit.as_secs_f64() - cfg.reinit_ms * 1e-3).abs() < 1e-9);
         assert!(spec.ckpt_interval >= 1);
+        assert!(spec.regrow, "elastic regrow defaults on");
     }
 }

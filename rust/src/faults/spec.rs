@@ -13,9 +13,15 @@
 //!
 //! Simplifications, stated rather than hidden: repairs restore *nominal*
 //! capacity, so when two faults overlap on one resource the earliest
-//! repair already restores it (last event wins); repaired resources
-//! rejoin the pool but recovery policies do not re-activate dropped
-//! stripes (no elastic regrow — conservative for the policies' goodput).
+//! repair already restores it (last event wins). Since the elastic-regrow
+//! work, repair instants also feed the recovery layer: when `regrow` is
+//! on (the default), [`crate::faults::run_chaos`] re-activates dropped
+//! stripes and re-grows shrunken clusters once the corresponding fault's
+//! `until` passes — see [`crate::faults::chaos`]. After a `ReLower` node
+//! shrink, survivors are densely relabeled, so timeline needles must be
+//! rewritten through the physical→dense [`NodeRelabel`] map
+//! ([`timeline_events_relabeled`]) or a fault addressed to the dead node
+//! would strike the survivor that inherited its name.
 
 use crate::sim::{RateEvent, ResourcePool, SimTime};
 use crate::util::rng::Rng;
@@ -283,8 +289,11 @@ pub fn schedule(specs: &[FaultSpec], horizon: SimTime, seed: u64) -> Vec<Injecte
 /// `factor × nominal` (so a fault already active at `t0` lands at
 /// relative time 0 — the step starts on degraded hardware), and a repair
 /// event at `until − t0` restoring nominal. Faults whose needles match
-/// nothing in `nominal` are skipped (e.g. a fault addressed to a node
-/// that a shrink already removed). The result is time-sorted, ready for
+/// nothing in `nominal` are skipped. Note that after a `ReLower` node
+/// shrink the pool's node names are *dense relabels*, so a raw physical
+/// needle like `node2.` may match the wrong survivor — callers holding a
+/// shrunken pool must go through [`timeline_events_relabeled`] instead.
+/// The result is time-sorted, ready for
 /// [`crate::sim::run_with_events`]; events beyond the step's makespan
 /// are simply never reached.
 pub fn timeline_events(
@@ -331,6 +340,123 @@ pub fn timeline_events(
     // Stable: ties keep injection-before-repair emission order per fault.
     evs.sort_by_key(|e| e.at);
     evs
+}
+
+/// The physical→dense node relabeling a `ReLower` shrink induces.
+///
+/// `Cluster::build` always names nodes densely (`node0..nodeN-1`), so
+/// shrinking an `n`-node cluster after node `k` dies renames every
+/// physical survivor `p > k` to dense index `p − |dead below p|`. Fault
+/// timelines are authored against *physical* indices; this map rewrites
+/// their needles so each fault keeps striking the node it was injected
+/// on, and faults addressed to currently-dead nodes are dropped instead
+/// of aliasing onto an innocent survivor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeRelabel {
+    /// `alive[p]` — is physical node `p` currently in the cluster?
+    alive: Vec<bool>,
+}
+
+impl NodeRelabel {
+    /// The identity map over `n` physical nodes (nothing dead).
+    pub fn identity(n: usize) -> Self {
+        NodeRelabel {
+            alive: vec![true; n],
+        }
+    }
+
+    /// True when no node is retired (needles pass through verbatim).
+    pub fn is_identity(&self) -> bool {
+        self.alive.iter().all(|a| *a)
+    }
+
+    /// Retire physical node `p` (a `ReLower` shrink). No-op when already
+    /// retired or out of range.
+    pub fn retire(&mut self, p: usize) {
+        if let Some(a) = self.alive.get_mut(p) {
+            *a = false;
+        }
+    }
+
+    /// Revive physical node `p` (elastic regrow after its repair).
+    pub fn revive(&mut self, p: usize) {
+        if let Some(a) = self.alive.get_mut(p) {
+            *a = true;
+        }
+    }
+
+    /// Number of alive nodes — the shrunken cluster's node count.
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Dense index of physical node `p` in the shrunken cluster, `None`
+    /// when `p` is retired or out of range.
+    pub fn dense_of(&self, p: usize) -> Option<usize> {
+        if !self.alive.get(p).copied().unwrap_or(false) {
+            return None;
+        }
+        Some(self.alive[..p].iter().filter(|a| **a).count())
+    }
+
+    /// Rewrite a pool-name needle from physical to dense node indices.
+    /// Needles of the form `node<digits>…` are remapped (`None` when the
+    /// addressed node is retired — the fault has no one to strike);
+    /// non-node needles pass through unchanged, as do node indices beyond
+    /// the map (they never matched this cluster anyway).
+    pub fn rewrite_needle(&self, needle: &str) -> Option<String> {
+        let Some(rest) = needle.strip_prefix("node") else {
+            return Some(needle.to_string());
+        };
+        let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+        if digits.is_empty() {
+            return Some(needle.to_string());
+        }
+        let p: usize = match digits.parse() {
+            Ok(p) => p,
+            Err(_) => return Some(needle.to_string()),
+        };
+        if p >= self.alive.len() {
+            return Some(needle.to_string());
+        }
+        let dense = self.dense_of(p)?;
+        Some(format!("node{dense}{}", &rest[digits.len()..]))
+    }
+}
+
+/// [`timeline_events`] through a physical→dense [`NodeRelabel`]: each
+/// fault's needles are rewritten before resolution, and a fault whose
+/// needles all address retired nodes is dropped (it can no longer strike
+/// anything — the aliasing bugfix). With the identity map this is
+/// byte-for-byte `timeline_events`, preserving the zero-fault /
+/// no-shrink bit-identity anchors.
+pub fn timeline_events_relabeled(
+    faults: &[InjectedFault],
+    nominal: &ResourcePool,
+    t0: SimTime,
+    relabel: &NodeRelabel,
+) -> Vec<RateEvent> {
+    if relabel.is_identity() {
+        return timeline_events(faults, nominal, t0);
+    }
+    let rewritten: Vec<InjectedFault> = faults
+        .iter()
+        .filter_map(|f| {
+            let needles: Vec<String> = f
+                .target
+                .needles
+                .iter()
+                .filter_map(|n| relabel.rewrite_needle(n))
+                .collect();
+            if needles.is_empty() {
+                return None;
+            }
+            let mut g = f.clone();
+            g.target.needles = needles;
+            Some(g)
+        })
+        .collect();
+    timeline_events(&rewritten, nominal, t0)
 }
 
 #[cfg(test)]
@@ -453,5 +579,63 @@ mod tests {
             SimTime::from_secs_f64(2.0),
         );
         assert!(timeline_events(&[ghost], &pool, SimTime::ZERO).is_empty());
+    }
+
+    #[test]
+    fn relabel_maps_physical_to_dense() {
+        let mut r = NodeRelabel::identity(4);
+        assert!(r.is_identity());
+        assert_eq!(r.n_alive(), 4);
+        assert_eq!(r.dense_of(2), Some(2));
+        r.retire(1);
+        assert!(!r.is_identity());
+        assert_eq!(r.n_alive(), 3);
+        assert_eq!(r.dense_of(0), Some(0));
+        assert_eq!(r.dense_of(1), None, "retired node has no dense index");
+        assert_eq!(r.dense_of(2), Some(1), "survivors shift down");
+        assert_eq!(r.dense_of(3), Some(2));
+        // Needle rewriting follows the map; non-node needles pass through.
+        assert_eq!(r.rewrite_needle("node2.nvlink"), Some("node1.nvlink".into()));
+        assert_eq!(r.rewrite_needle("node3.nic.up.gpu5"), Some("node2.nic.up.gpu5".into()));
+        assert_eq!(r.rewrite_needle("node1."), None, "dead node's needle retires");
+        assert_eq!(r.rewrite_needle("spine.route0"), Some("spine.route0".into()));
+        assert_eq!(r.rewrite_needle("node9.x"), Some("node9.x".into()));
+        // Revival restores the identity mapping.
+        r.revive(1);
+        assert!(r.is_identity());
+        assert_eq!(r.rewrite_needle("node2.nvlink"), Some("node2.nvlink".into()));
+    }
+
+    #[test]
+    fn relabeled_events_keep_faults_on_physical_nodes() {
+        // Pool named as a 2-node dense cluster (physical nodes 0 and 2
+        // after physical node 1 died and a shrink relabeled).
+        let mut pool = ResourcePool::new();
+        pool.add("node0.nvlink.up.gpu0", 400.0);
+        pool.add("node1.nvlink.up.gpu0", 400.0);
+        let mut relabel = NodeRelabel::identity(3);
+        relabel.retire(1);
+        let t = |s: f64| SimTime::from_secs_f64(s);
+        // A fault addressed to dead physical node 1 must be dropped, not
+        // alias onto the survivor now named "node1".
+        let dead = InjectedFault::node_death(1, t(1.0), t(2.0));
+        let evs = timeline_events_relabeled(&[dead], &pool, SimTime::ZERO, &relabel);
+        assert!(evs.is_empty(), "fault on the dead node aliased a survivor");
+        // A fault on physical node 2 strikes dense "node1".
+        let live = InjectedFault::degrade("node2.nvlink", 0.5, t(1.0), t(2.0));
+        let evs = timeline_events_relabeled(&[live], &pool, SimTime::ZERO, &relabel);
+        assert_eq!(evs.len(), 2);
+        let hit = pool.get(evs[0].set[0].0).name.clone();
+        assert_eq!(hit, "node1.nvlink.up.gpu0");
+        // Identity map delegates bit-identically.
+        let id = NodeRelabel::identity(3);
+        let live2 = InjectedFault::degrade("node1.nvlink", 0.5, t(1.0), t(2.0));
+        let a = timeline_events(&[live2.clone()], &pool, SimTime::ZERO);
+        let b = timeline_events_relabeled(&[live2], &pool, SimTime::ZERO, &id);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.set, y.set);
+        }
     }
 }

@@ -53,18 +53,23 @@ COMMANDS:
           vs sequential), `concurrent` prices two communicators
           contending on one shared device, and `ablation` sweeps the
           ring/tree/halving-doubling crossover (8-GPU AllReduce,
-          64 KiB – 256 MiB) against the auto tuner's picks, and `chaos`
-          injects a seeded fault timeline (NIC deaths by default) into a
-          training-step loop and compares recovery policies, and `scale`
-          sweeps AllReduce to 1024 nodes under Auto pricing
-          (symmetry-folded graphs + compiled-plan cache; --nodes pins one
-          node count, --mib sets the message, --smoke runs the short CI
-          list with the structural asserts)
+          64 KiB – 256 MiB) against the auto tuner's picks (--degraded
+          adds an MTBF-aware tuner column ranking by expected time under
+          the [chaos] one-stripe-down duty cycle; --mtbf/--mttr override
+          it), and `chaos` injects a seeded fault timeline (NIC deaths by
+          default) into a training-step loop and compares recovery
+          policies, and `scale` sweeps AllReduce to 1024 nodes under Auto
+          pricing (symmetry-folded graphs + compiled-plan cache; --nodes
+          pins one node count, --mib sets the message, --smoke runs the
+          short CI list with the structural asserts)
           [chaos only: --mtbf <s> --mttr <s> --policy reroute|relower|ckpt
-           --steps <k> --mib <size> --smoke]
-          --smoke replays a fixed deterministic two-fault timeline (the
-          CI tier-1 check); without --policy all three are compared on
-          one shared timeline
+           --steps <k> --mib <size> --smoke --trainer --no-regrow]
+          --smoke replays a fixed deterministic two-fault timeline plus a
+          death-and-repair regrow check (the CI tier-1 gate); without
+          --policy all three are compared on one shared timeline;
+          --trainer makes each step a bucketed-overlap fwd/bwd trainer
+          step so TTR lands in loss-curve wall time; repaired stripes and
+          nodes rejoin automatically (elastic regrow) unless --no-regrow
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
@@ -78,7 +83,7 @@ Presets: h800 (paper testbed), h100, a800, gb200, gb300
 fn main() -> Result<()> {
     let args = Args::parse(
         std::env::args().skip(1),
-        &["no-rdma", "no-pipeline", "smoke", "help"],
+        &["no-rdma", "no-pipeline", "smoke", "help", "trainer", "no-regrow", "degraded"],
     )?;
     if args.has("help") {
         print!("{USAGE}");
@@ -343,19 +348,25 @@ fn repro(
         "--no-pipeline only applies to the hierarchical targets (table2 --nodes, cluster)"
     );
     anyhow::ensure!(
-        matches!(what, "chaos" | "scale")
-            || (args.flag("mtbf").is_none()
-                && args.flag("mttr").is_none()
-                && args.flag("policy").is_none()
-                && !args.has("smoke")),
-        "--mtbf/--mttr/--policy/--smoke only apply to the chaos and scale targets"
+        matches!(what, "chaos" | "scale") || !args.has("smoke"),
+        "--smoke only applies to the chaos and scale targets"
     );
     anyhow::ensure!(
-        what == "chaos"
-            || (args.flag("mtbf").is_none()
-                && args.flag("mttr").is_none()
-                && args.flag("policy").is_none()),
-        "--mtbf/--mttr/--policy only apply to the chaos target"
+        what == "chaos" || args.flag("policy").is_none(),
+        "--policy only applies to the chaos target"
+    );
+    anyhow::ensure!(
+        matches!(what, "chaos" | "ablation")
+            || (args.flag("mtbf").is_none() && args.flag("mttr").is_none()),
+        "--mtbf/--mttr only apply to the chaos and ablation targets"
+    );
+    anyhow::ensure!(
+        what == "chaos" || (!args.has("trainer") && !args.has("no-regrow")),
+        "--trainer/--no-regrow only apply to the chaos target"
+    );
+    anyhow::ensure!(
+        what == "ablation" || !args.has("degraded"),
+        "--degraded only applies to the ablation target"
     );
     if let Some(n) = nodes {
         // Same rule RunConfig::validate enforces for TOML configs.
@@ -653,10 +664,27 @@ fn repro(
         "ablation" => {
             // The ring/tree/halving-doubling crossover sweep (§5.3 ring
             // latency amplification vs §6 tree remedy): fixed-algorithm
-            // latencies per size, plus the auto tuner's pick.
+            // latencies per size, plus the auto tuner's pick. With
+            // --degraded a second, MTBF-aware tuner (expected time under
+            // the `[chaos]` one-stripe-down duty cycle) runs beside it.
             let sizes_kib: Vec<u64> = (6..=18).map(|p| 1u64 << p).collect(); // 64 KiB..256 MiB
-            let rows =
-                bh::ablation_sweep(Preset::H800, CollectiveKind::AllReduce, 8, &sizes_kib)?;
+            let degraded = if args.has("degraded") {
+                let dc = flexlink::config::ChaosConfig::default();
+                Some(flexlink::collectives::algo::DegradedMode::one_stripe_down(
+                    8,
+                    args.parse_or("mtbf", dc.mtbf_s)?,
+                    args.parse_or("mttr", dc.mttr_s)?,
+                ))
+            } else {
+                None
+            };
+            let rows = bh::ablation_sweep(
+                Preset::H800,
+                CollectiveKind::AllReduce,
+                8,
+                &sizes_kib,
+                degraded,
+            )?;
             print!("{}", bh::render_ablation(&rows));
             if let Some(p) = csv_path {
                 let mut csv = Csv::new(&[
@@ -669,6 +697,7 @@ fn repro(
                     "auto_ms",
                     "auto_algo",
                     "winner",
+                    "mtbf_algo",
                 ]);
                 for r in &rows {
                     csv.row(&[
@@ -681,6 +710,7 @@ fn repro(
                         format!("{:.5}", r.auto_ms),
                         r.auto_algo.to_string(),
                         r.winner.to_string(),
+                        r.mtbf_algo.map(|a| a.to_string()).unwrap_or_else(|| "-".into()),
                     ]);
                 }
                 csv.write_file(p)?;
@@ -695,9 +725,11 @@ fn repro(
             let ccfg = flexlink::config::ChaosConfig {
                 mtbf_s: args.parse_or("mtbf", dc.mtbf_s)?,
                 mttr_s: args.parse_or("mttr", dc.mttr_s)?,
+                regrow: !args.has("no-regrow"),
                 ..dc
             };
             let smoke = args.has("smoke");
+            let trainer = args.has("trainer");
             let steps = args.usize_or("steps", if smoke { 8 } else { 24 })?;
             let mib = args.u64_or("mib", 64)?;
             let nn = nodes.unwrap_or(2);
@@ -715,6 +747,8 @@ fn repro(
                 seed,
                 &policies,
                 smoke,
+                trainer,
+                flexlink::config::RunConfig::new(Preset::H800, 8).gpu_tflops,
                 &cfg,
             )?;
             print!("{}", bh::render_chaos(&rows));
@@ -722,6 +756,7 @@ fn repro(
                 let mut csv = Csv::new(&[
                     "policy",
                     "scenario",
+                    "mode",
                     "nodes",
                     "mib",
                     "steps",
@@ -732,11 +767,13 @@ fn repro(
                     "goodput_gbps",
                     "goodput_ratio_pct",
                     "degraded_steps",
+                    "regrows",
                 ]);
                 for r in &rows {
                     csv.row(&[
                         r.policy.to_string(),
                         r.scenario.clone(),
+                        r.mode.to_string(),
                         r.n_nodes.to_string(),
                         r.msg_mib.to_string(),
                         r.steps.to_string(),
@@ -747,6 +784,7 @@ fn repro(
                         format!("{:.2}", r.goodput_gbps),
                         format!("{:.2}", r.goodput_ratio_pct),
                         r.degraded_steps.to_string(),
+                        r.regrows.to_string(),
                     ]);
                 }
                 csv.write_file(p)?;

@@ -20,14 +20,26 @@
 //!     beats `CheckpointRestart` on goodput, and recovers faster — the
 //!     acceptance ordering, plus the trainer's closed-form
 //!     checkpoint-restart cost agreeing with the harness's rework.
+//! (f) **recovery-accounting regressions** — post-shrink timeline faults
+//!     stay on their *physical* node (the relabel-aliasing bug), a
+//!     checkpoint rollback rolls the degraded-step count back with the
+//!     recomputed steps (the double-count bug), two simultaneous NIC
+//!     deaths never fold a dying stripe onto the other culprit, and
+//!     `mean_ttr` rounds to nearest instead of flooring.
+//! (g) **elastic regrow** — on the death-and-repair smoke timeline the
+//!     regrown run restores the full stripe set and banks strictly more
+//!     goodput than a shrink-only replay, and the communicator's
+//!     drop/regrow stripe surgery invalidates the compiled-plan cache.
 
 use flexlink::balancer::{Shares, TierShares};
 use flexlink::collectives::hierarchical::ClusterCollective;
 use flexlink::collectives::CollectiveKind;
 use flexlink::config::presets::Preset;
 use flexlink::config::{BalancerConfig, ChaosConfig};
-use flexlink::faults::chaos::{run_chaos, smoke_timeline};
-use flexlink::faults::{schedule, FaultSpec, RecoveryPolicy, RecoverySpec};
+use flexlink::faults::chaos::{run_chaos, smoke_repair_timeline, smoke_timeline};
+use flexlink::faults::{
+    schedule, ChaosOutcome, FaultSpec, InjectedFault, RecoveryPolicy, RecoverySpec,
+};
 use flexlink::links::calib::Calibration;
 use flexlink::links::StripeId;
 use flexlink::sim::{run_with_events, Engine, RateEvent, SimTime};
@@ -295,4 +307,285 @@ fn nic_death_policy_ordering_reroute_over_relower_over_ckpt() {
         ckpt.virtual_time,
         closed_form
     );
+}
+
+/// Cheap cost knobs keep the loop's clock in t0 scale, so repair
+/// instants measured in t0 multiples are actually reached in-run.
+fn cheap_rec(policy: RecoveryPolicy) -> RecoverySpec {
+    RecoverySpec {
+        policy,
+        detection: SimTime::from_micros(1),
+        reinit: SimTime::ZERO,
+        ckpt_interval: 4,
+        reload: SimTime::ZERO,
+        regrow: true,
+    }
+}
+
+fn fault_free_step(c: &Cluster, op: CollectiveKind, msg: u64) -> SimTime {
+    let nl = c.gpus_per_node();
+    ClusterCollective::new(c, Calibration::h800(), op, nl)
+        .run(msg, &TierShares::new(Shares::nvlink_only(), nl), 4)
+        .unwrap()
+        .total
+}
+
+/// Regression (relabel aliasing): after a `ReLower` node shrink, a
+/// timeline fault addressed to the dead physical node must be dropped —
+/// not land on whichever survivor inherited its dense name — while a
+/// fault addressed to a surviving physical node keeps striking it.
+#[test]
+fn post_shrink_timeline_faults_stay_on_physical_nodes() {
+    let c = cluster(3);
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let t0 = fault_free_step(&c, op, msg);
+    let s = t0.as_secs_f64();
+    let at = |x: f64| SimTime::from_secs_f64(s * x);
+    let far = at(1e6);
+    let timeline = vec![
+        // Node 1 dies early and never repairs in-run: survivors 0 and 2
+        // are relabeled densely to 0 and 1.
+        InjectedFault::node_death(1, at(1.5), far),
+        // Addressed to the *dead* physical node — must be dropped. Under
+        // the aliasing bug it struck dense node1 (= physical node 2) and
+        // aborted every later step.
+        InjectedFault::nic_death(1, 0, at(4.0), far),
+        // Addressed to surviving physical node 2 — must keep striking
+        // its NVLink through the rewritten dense name (node1.nvlink).
+        InjectedFault::degrade("node2.nvlink", 0.3, at(4.0), at(9.0)),
+    ];
+    let out = run_chaos(
+        &c,
+        Calibration::h800(),
+        op,
+        msg,
+        8,
+        &timeline,
+        &cheap_rec(RecoveryPolicy::ReLower),
+        &BalancerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.steps, 8);
+    assert_eq!(
+        out.failures, 1,
+        "only the node death aborts; the dead node's NIC fault must be dropped"
+    );
+    assert!(
+        out.degraded_steps >= 1,
+        "the surviving node's NVLink degradation must still stretch steps"
+    );
+}
+
+/// Regression (degraded double-count): a checkpoint rollback recomputes
+/// the lost steps, so the degraded-step count must roll back with them —
+/// here every recomputed step runs after both fault windows close, so
+/// the final bank is entirely clean.
+#[test]
+fn ckpt_rollback_rolls_back_degraded_steps() {
+    let c = cluster(2);
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let t0 = fault_free_step(&c, op, msg);
+    let s = t0.as_secs_f64();
+    let at = |x: f64| SimTime::from_secs_f64(s * x);
+    let timeline = vec![
+        // Stretches (at least) step 1 → banked as degraded pre-abort.
+        InjectedFault::degrade("node0.nvlink", 0.5, at(0.2), at(1.2)),
+        // Aborts mid-run, repairs at 3.5·t0; ckpt_interval 4 > completed
+        // steps, so the rollback discards every banked step.
+        InjectedFault::nic_death(0, 1, at(2.5), at(3.5)),
+    ];
+    let out = run_chaos(
+        &c,
+        Calibration::h800(),
+        op,
+        msg,
+        4,
+        &timeline,
+        &cheap_rec(RecoveryPolicy::CheckpointRestart),
+        &BalancerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.steps, 4);
+    assert!(out.failures >= 1, "the NIC death aborts at least one attempt");
+    assert_eq!(out.recoveries.len(), 1);
+    // The recomputed steps all run after 3.5·t0 with both faults over:
+    // every step in the final bank is clean, so a correct rollback
+    // leaves zero degraded steps (the bug left the pre-abort ones in).
+    assert_eq!(
+        out.degraded_steps, 0,
+        "rolled-back degraded steps must not be double-counted"
+    );
+    assert!(out.goodput_ratio() < 1.0, "the outage still cost wall time");
+}
+
+/// Regression (fold target): with two NIC stripes dying at the same
+/// instant, neither may be folded onto the other culprit — both end
+/// inactive, the survivors absorb the whole share, and nothing is lost.
+#[test]
+fn simultaneous_nic_deaths_fold_onto_true_survivors() {
+    let c = cluster(2);
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let nl = c.gpus_per_node();
+    let t0 = fault_free_step(&c, op, msg);
+    let s = t0.as_secs_f64();
+    let at = |x: f64| SimTime::from_secs_f64(s * x);
+    let far = at(1e6);
+    let timeline = vec![
+        InjectedFault::nic_death(0, 0, at(2.5), far),
+        InjectedFault::nic_death(0, 1, at(2.5), far),
+    ];
+    let out = run_chaos(
+        &c,
+        Calibration::h800(),
+        op,
+        msg,
+        6,
+        &timeline,
+        &cheap_rec(RecoveryPolicy::RerouteStripes),
+        &BalancerConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(out.steps, 6);
+    assert!(out.failures >= 1);
+    let inter = &out.final_tiers.inter;
+    assert!(
+        !inter.is_active(StripeId(0)) && !inter.is_active(StripeId(1)),
+        "both culprit stripes must end deactivated"
+    );
+    assert_eq!(inter.n_active(), nl - 2);
+    assert!(
+        (inter.total() - 100.0).abs() < 1e-6,
+        "share conservation: total {:.6} != 100",
+        inter.total()
+    );
+}
+
+/// Regression (TTR truncation): the mean rounds to nearest at the tick
+/// granularity instead of flooring.
+#[test]
+fn mean_ttr_rounds_to_nearest_tick() {
+    let mk = |recoveries: Vec<SimTime>| ChaosOutcome {
+        policy: RecoveryPolicy::RerouteStripes,
+        msg_bytes: 1,
+        steps: 1,
+        failures: recoveries.len(),
+        faults_injected: recoveries.len(),
+        recoveries,
+        degraded_steps: 0,
+        virtual_time: SimTime(1),
+        fault_free_step: SimTime(1),
+        attempts: 1,
+        regrows: 0,
+        final_tiers: TierShares::new(Shares::nvlink_only(), 8),
+        last_step: SimTime(1),
+    };
+    assert_eq!(mk(vec![]).mean_ttr(), None);
+    assert_eq!(mk(vec![SimTime(7)]).mean_ttr(), Some(SimTime(7)));
+    // (1 + 2) / 2 = 1.5 ticks: flooring under-reported this as 1.
+    assert_eq!(
+        mk(vec![SimTime(1), SimTime(2)]).mean_ttr(),
+        Some(SimTime(2))
+    );
+}
+
+/// Elastic regrow on the deterministic death-and-repair timeline: the
+/// repaired stripe rejoins (full stripe count restored) and the regrown
+/// run banks strictly more goodput than a shrink-only replay of the
+/// same timeline.
+#[test]
+fn regrow_restores_stripes_and_beats_shrink_only() {
+    let c = cluster(2);
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let nl = c.gpus_per_node();
+    let t0 = fault_free_step(&c, op, msg);
+    let timeline = smoke_repair_timeline(t0);
+    let run = |regrow: bool| {
+        let mut rec = cheap_rec(RecoveryPolicy::RerouteStripes);
+        rec.regrow = regrow;
+        run_chaos(
+            &c,
+            Calibration::h800(),
+            op,
+            msg,
+            12,
+            &timeline,
+            &rec,
+            &BalancerConfig::default(),
+        )
+        .unwrap()
+    };
+    let grown = run(true);
+    let shrunk = run(false);
+    for out in [&grown, &shrunk] {
+        assert_eq!(out.steps, 12);
+        assert!(out.failures >= 1, "the death aborts at least one attempt");
+    }
+    assert_eq!(grown.regrows, 1, "exactly one stripe repair lands in-run");
+    assert_eq!(shrunk.regrows, 0, "--no-regrow never regrows");
+    assert_eq!(
+        grown.final_tiers.inter.n_active(),
+        nl,
+        "regrow restores the full stripe set"
+    );
+    assert_eq!(
+        shrunk.final_tiers.inter.n_active(),
+        nl - 1,
+        "shrink-only stays one stripe short"
+    );
+    assert!(
+        grown.goodput_ratio() > shrunk.goodput_ratio(),
+        "regrow {:.4} must bank strictly more goodput than shrink-only {:.4}",
+        grown.goodput_ratio(),
+        shrunk.goodput_ratio()
+    );
+    assert!(
+        grown.virtual_time < shrunk.virtual_time,
+        "same steps, strictly less wall time with the stripe back"
+    );
+}
+
+/// The communicator-level stripe surgery invalidates the compiled-plan
+/// cache on every landed movement (plans snapshot the stripe
+/// distribution they were priced under), and is a cache-silent no-op
+/// when nothing moves.
+#[test]
+fn stripe_surgery_invalidates_plan_cache() {
+    use flexlink::comm::{CommConfig, Communicator};
+    use flexlink::dtype::{DeviceBuffer, RedOp};
+    let op = CollectiveKind::AllReduce;
+    let msg = 4u64 << 20;
+    let mut comm = Communicator::init(CommConfig::cluster(Preset::H800, 2, 8)).unwrap();
+    let ones = vec![1.0f32; (msg / 4) as usize];
+    let mut bufs: Vec<DeviceBuffer> = (0..comm.n_ranks())
+        .map(|_| DeviceBuffer::from_f32(&ones))
+        .collect();
+    comm.all_reduce_in_place(&mut bufs, RedOp::Sum).unwrap();
+
+    let base = comm.device().plan_cache_stats().invalidations;
+    let moved = comm.drop_stripe(op, msg, StripeId(1), StripeId(0)).unwrap();
+    assert!(moved > 0.0, "an active stripe's share must move");
+    let after_drop = comm.device().plan_cache_stats().invalidations;
+    assert!(after_drop > base, "drop must invalidate cached plans");
+
+    // Dropping a dead stripe is a no-op — and must not thrash the cache.
+    assert_eq!(comm.drop_stripe(op, msg, StripeId(1), StripeId(0)).unwrap(), 0.0);
+    assert_eq!(comm.device().plan_cache_stats().invalidations, after_drop);
+
+    let granted = comm.regrow_stripe(op, msg, StripeId(1)).unwrap();
+    assert!(granted > 0.0, "the repaired stripe gets a real share back");
+    let after_regrow = comm.device().plan_cache_stats().invalidations;
+    assert!(after_regrow > after_drop, "regrow must invalidate cached plans");
+
+    // Regrowing an already-active stripe: no movement, no invalidation.
+    assert_eq!(comm.regrow_stripe(op, msg, StripeId(1)).unwrap(), 0.0);
+    assert_eq!(comm.device().plan_cache_stats().invalidations, after_regrow);
+
+    // The distribution is whole again after the round trip.
+    let shares = comm.inter_shares_of(op, msg).unwrap();
+    assert_eq!(shares.n_active(), 8);
+    assert!((shares.total() - 100.0).abs() < 1e-6);
 }
