@@ -1321,6 +1321,115 @@ pub fn render_chaos(rows: &[ChaosRow]) -> String {
     t.render()
 }
 
+/// Build the `repro serve` tenant set from the `[serve]` config block:
+/// `tenants` tenants, tenant `k` on priority tier `k % 3`, scenario per
+/// the config (`mix` cycles decode_tp / continuous_batch /
+/// prefill_decode so the default deployment exercises every regime).
+pub fn serve_tenants(sc: &crate::config::ServeConfig) -> Result<Vec<crate::serve::TenantSpec>> {
+    use crate::serve::{ArrivalProcess, QosPolicy, Scenario, TenantSpec, WorkloadSpec};
+    let cycle = [Scenario::DecodeTp, Scenario::ContinuousBatch, Scenario::PrefillDecode];
+    (0..sc.tenants)
+        .map(|k| {
+            let scenario = if sc.scenario == "mix" {
+                cycle[k % cycle.len()]
+            } else {
+                Scenario::parse(&sc.scenario)?
+            };
+            Ok(TenantSpec {
+                name: format!("tenant{k}"),
+                policy: QosPolicy::Priority((k % 3) as u8),
+                arrivals: ArrivalProcess::Poisson { rate_per_s: sc.rate_per_s },
+                workload: WorkloadSpec {
+                    scenario,
+                    decode_bytes: sc.decode_kib << 10,
+                    prefill_bytes: sc.prefill_mib << 20,
+                },
+                slo_ms: sc.slo_ms,
+            })
+        })
+        .collect()
+}
+
+/// Collapse per-link fabric rows to link *classes* for the table:
+/// strip `nodeK.` prefixes and `.gpuG` / `.numaI` suffixes, summing
+/// bytes and capacities (utilization re-derives from the sums).
+fn serve_fabric_classes(rep: &crate::serve::ServeReport) -> Vec<(String, u64, f64)> {
+    use std::collections::BTreeMap;
+    let mut classes: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+    for l in &rep.fabric {
+        let mut class = l.link.as_str();
+        if let Some(rest) = class.strip_prefix("node") {
+            if let Some(dot) = rest.find('.') {
+                if rest[..dot].chars().all(|c| c.is_ascii_digit()) {
+                    class = &rest[dot + 1..];
+                }
+            }
+        }
+        let base = match class.rfind('.') {
+            Some(i) if class[i + 1..].starts_with("gpu") || class[i + 1..].starts_with("numa") => {
+                &class[..i]
+            }
+            _ => class,
+        };
+        let e = classes.entry(base.to_string()).or_insert((0, 0.0));
+        e.0 += l.bytes;
+        e.1 += l.capacity_bps;
+    }
+    classes.into_iter().map(|(k, (b, c))| (k, b, c)).collect()
+}
+
+/// Render the serving report: per-tenant latency/SLO table plus the
+/// per-link-class fabric utilization table.
+pub fn render_serve(rep: &crate::serve::ServeReport) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Multi-tenant serving: {} requests, {} fused launches, makespan {:.3}s",
+            rep.requests,
+            rep.batches,
+            rep.makespan.as_secs_f64()
+        ),
+        &[
+            "tenant", "weight", "reqs", "p50(ms)", "p99(ms)", "p999(ms)",
+            "svc p99(ms)", "SLO(ms)", "attained", "warmup(s)",
+        ],
+    );
+    for ten in &rep.tenants {
+        t.row(vec![
+            ten.name.clone(),
+            format!("{:.0}", ten.weight),
+            ten.requests.to_string(),
+            format!("{:.4}", ten.p50_ms),
+            format!("{:.4}", ten.p99_ms),
+            format!("{:.4}", ten.p999_ms),
+            format!("{:.4}", ten.service_p99_ms),
+            format!("{:.2}", ten.slo_ms),
+            format!("{:.1}%", ten.slo_attained_pct),
+            format!("{:.4}", ten.warmup.as_secs_f64()),
+        ]);
+    }
+    let mut out = t.render();
+    let mut f = Table::new(
+        "Fabric utilization (bytes over capacity x makespan, per link class)",
+        &["link class", "bytes", "capacity", "utilization"],
+    );
+    let elapsed = rep.makespan.as_secs_f64();
+    for (class, bytes, cap) in serve_fabric_classes(rep) {
+        let util = if cap > 0.0 && elapsed > 0.0 {
+            bytes as f64 / (cap * elapsed)
+        } else {
+            0.0
+        };
+        f.row(vec![
+            class,
+            format!("{:.1}MB", bytes as f64 / (1 << 20) as f64),
+            format!("{:.0}GB/s", cap / 1e9),
+            format!("{:.2}%", util * 100.0),
+        ]);
+    }
+    out.push_str(&f.render());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -715,6 +715,7 @@ mod tests {
                 bytes: msg,
                 model: nv_model(kind, n),
             }],
+            weight: 1.0,
         };
         simulate(&topo, &spec, 500e9).unwrap().total.as_secs_f64()
     }

@@ -95,6 +95,7 @@ mod tests {
                 bytes: s,
                 model,
             }],
+            weight: 1.0,
         };
         let out = simulate(&topo, &spec, 60e9).unwrap();
         kind.algbw_gbps(s, out.total.as_secs_f64())

@@ -47,6 +47,7 @@ mod tests {
                     bytes: s,
                     model,
                 }],
+                weight: 1.0,
             };
             times.push(simulate(&topo, &spec, 60e9).unwrap().total.as_secs_f64());
         }

@@ -107,6 +107,12 @@ pub struct ClusterCollective<'c> {
     /// schedule is untouched; the scale-aware harnesses and the stream
     /// scheduler's solo path opt into [`PricingMode::Auto`].
     pub pricing: PricingMode,
+    /// Fair-share weight stamped on every physical-link flow of this
+    /// collective (per-tenant QoS; defaults to `1.0` = legacy schedules
+    /// bit-identical). Threaded into the per-node [`GraphBuilder`]s and
+    /// the inter-phase stripe transfers; protocol/stripe resources are
+    /// per-op private, so only *shared* lanes split by it.
+    pub weight: f64,
 }
 
 /// How [`ClusterCollective::run`] prices a multi-node collective.
@@ -182,6 +188,14 @@ pub struct HierReport {
     /// and fault-injected runs ([`ClusterCollective::run_under_faults`]
     /// never folds — a fault timeline is exactly a broken symmetry).
     pub folded: bool,
+    /// Bytes routed over each *physical* resource, by name
+    /// ([`crate::collectives::schedule::link_bytes`]) — the serve
+    /// harness's fabric-utilization observable. Empty for folded
+    /// pricings (the reduced graph's counters don't describe the full
+    /// cluster) and fault-injected runs (failed tasks don't move their
+    /// bytes); the serve path never folds (clusters below
+    /// [`FOLD_AUTO_MIN_NODES`] price exact under `Auto`).
+    pub link_bytes: Vec<(String, u64)>,
 }
 
 impl HierReport {
@@ -236,6 +250,7 @@ impl<'c> ClusterCollective<'c> {
             pipeline: true,
             algo: AlgoSpec::Fixed(Algo::Ring),
             pricing: PricingMode::default(),
+            weight: 1.0,
         }
     }
 
@@ -256,6 +271,13 @@ impl<'c> ClusterCollective<'c> {
     /// Select the pricing strategy (see the `pricing` field).
     pub fn with_pricing(mut self, pricing: PricingMode) -> Self {
         self.pricing = pricing;
+        self
+    }
+
+    /// Set the fair-share weight for every flow of this collective (see
+    /// the `weight` field).
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
         self
     }
 
@@ -385,19 +407,30 @@ impl<'c> ClusterCollective<'c> {
                 self.kind,
                 self.n_local,
             );
-            let rep = mc.run_elem(msg_bytes, &tiers.intra, elem_bytes)?;
+            let spec = mc
+                .spec_algo(msg_bytes, &tiers.intra, elem_bytes, Algo::Ring)
+                .with_weight(self.weight);
+            let (outcome, link_bytes) =
+                super::schedule::simulate_traced(&topo, &spec, self.calib.reduce_bps)?;
+            let intra_times = outcome
+                .per_path
+                .iter()
+                .filter(|p| p.bytes > 0)
+                .map(|p| (p.path, p.time))
+                .collect();
             return Ok(HierReport {
                 kind: self.kind,
                 msg_bytes,
-                total: rep.outcome.total,
-                intra_times: rep.path_times(),
+                total: outcome.total,
+                intra_times,
                 inter_times: Vec::new(),
                 intra_phase1: PhaseSpan::EMPTY,
                 inter_phase: PhaseSpan::EMPTY,
                 intra_phase3: PhaseSpan::EMPTY,
-                events: rep.outcome.events,
-                tasks: rep.outcome.tasks,
+                events: outcome.events,
+                tasks: outcome.tasks,
                 folded: false,
+                link_bytes,
             });
         }
         if self.should_fold() {
@@ -405,6 +438,7 @@ impl<'c> ClusterCollective<'c> {
         }
         let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
         let tasks = compiled.graph.len();
+        let link_bytes = super::schedule::link_bytes(&compiled.pool, &compiled.graph);
         let sched = Engine::new(&compiled.pool).run(&compiled.graph)?;
         let intra_times = tiers
             .intra
@@ -430,6 +464,7 @@ impl<'c> ClusterCollective<'c> {
             events: sched.events,
             tasks,
             folded: false,
+            link_bytes,
         })
     }
 
@@ -489,6 +524,7 @@ impl<'c> ClusterCollective<'c> {
             events: sched.events,
             tasks,
             folded: true,
+            link_bytes: Vec::new(),
         })
     }
 
@@ -554,6 +590,7 @@ impl<'c> ClusterCollective<'c> {
                 events: sched.events,
                 tasks,
                 folded: false,
+                link_bytes: Vec::new(),
             },
             failed_tasks: run.failed.len(),
             first_failure: run.first_failure,
@@ -1662,6 +1699,9 @@ struct HierGraph<'c> {
     fold_routes: Option<Vec<Vec<ResourceId>>>,
     /// The scaled spine-share resource of the folded pool.
     fold_spine: Option<ResourceId>,
+    /// Fair-share weight for every Transfer this lowering emits
+    /// (copied from [`ClusterCollective::weight`]).
+    weight: f64,
 }
 
 impl<'c> HierGraph<'c> {
@@ -1704,6 +1744,7 @@ impl<'c> HierGraph<'c> {
             reduce_bps: cc.calib.reduce_bps,
             fold_routes: None,
             fold_spine: None,
+            weight: cc.weight,
         }
     }
 
@@ -1756,6 +1797,7 @@ impl<'c> HierGraph<'c> {
             reduce_bps: cc.calib.reduce_bps,
             fold_routes: Some(fold_routes),
             fold_spine: Some(fold_spine),
+            weight: cc.weight,
         }
     }
 
@@ -1783,6 +1825,7 @@ impl<'c> HierGraph<'c> {
             pool,
             graph,
         );
+        b.set_weight(self.weight);
         f(&mut b);
         let (pool, graph) = b.into_parts();
         self.pool = pool;
@@ -1844,7 +1887,7 @@ impl<'c> HierGraph<'c> {
                 TaskKind::Transfer {
                     bytes: chunk_bytes,
                     route,
-                    weight: 1.0,
+                    weight: self.weight,
                     latency: SimTime::ZERO,
                     rate_cap: f64::INFINITY,
                 },

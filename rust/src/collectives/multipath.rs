@@ -110,6 +110,7 @@ impl<'t> MultipathCollective<'t> {
             msg_bytes,
             algo: algo::resolve(self.kind, algo, self.n),
             paths,
+            weight: 1.0,
         }
     }
 

@@ -61,6 +61,7 @@ mod tests {
                     bytes: s,
                     model,
                 }],
+                weight: 1.0,
             };
             t.push(simulate(&topo, &spec, 60e9).unwrap().total.as_secs_f64());
         }

@@ -187,6 +187,14 @@ pub struct MultipathSpec {
     pub algo: Algo,
     /// Active paths; `bytes` must sum to `msg_bytes`.
     pub paths: Vec<PathAssignment>,
+    /// Fair-share weight stamped on every *physical-link* flow this call
+    /// emits (`1.0` = legacy behavior, bit-identical). The serve QoS
+    /// layer sets this per tenant so shared lanes split by tenant weight
+    /// under max–min fair share, while the per-op protocol resources —
+    /// private to the call — are unaffected by construction (a private
+    /// resource has one flow, and any positive weight gets it the full
+    /// capacity).
+    pub weight: f64,
 }
 
 impl MultipathSpec {
@@ -200,7 +208,18 @@ impl MultipathSpec {
             sum,
             self.msg_bytes
         );
+        anyhow::ensure!(
+            self.weight.is_finite() && self.weight > 0.0,
+            "flow weight must be finite and > 0 (got {})",
+            self.weight
+        );
         Ok(())
+    }
+
+    /// Builder: same spec with a different fair-share weight.
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        self.weight = weight;
+        self
     }
 }
 
@@ -243,6 +262,11 @@ pub struct GraphBuilder<'t> {
     models: HashMap<PathId, PathModel>,
     proto: HashMap<(PathId, usize, Dir), ResourceId>,
     reduce_bps: f64,
+    /// Fair-share weight for every Transfer this builder emits
+    /// (per-tenant QoS; 1.0 = legacy). Set by [`append_call`] from the
+    /// spec, or directly via [`Self::set_weight`] by callers that lower
+    /// without a [`MultipathSpec`] (the hierarchical node builder).
+    weight: f64,
 }
 
 impl<'t> GraphBuilder<'t> {
@@ -294,12 +318,21 @@ impl<'t> GraphBuilder<'t> {
             models: models.iter().copied().collect(),
             proto,
             reduce_bps,
+            weight: 1.0,
         }
     }
 
     /// Hand the accumulated (pool, graph) back for further fused calls.
     pub fn into_parts(self) -> (ResourcePool, TaskGraph) {
         (self.pool, self.graph)
+    }
+
+    /// Set the fair-share weight stamped on subsequently emitted
+    /// transfers (must be finite and > 0; debug-asserted here, enforced
+    /// upstream by `MultipathSpec::validate` / `FlowSim::add_capped`).
+    pub fn set_weight(&mut self, weight: f64) {
+        debug_assert!(weight.is_finite() && weight > 0.0);
+        self.weight = weight;
     }
 
     pub fn model(&self, path: PathId) -> PathModel {
@@ -367,6 +400,7 @@ impl<'t> GraphBuilder<'t> {
         rate_cap: f64,
     ) -> Vec<TaskId> {
         let model = self.models[&path];
+        let weight = self.weight;
         let sizes = self.chunks_for(path, block);
         debug_assert!(deps_per_chunk.is_empty() || deps_per_chunk.len() == sizes.len());
         let mut arrivals = Vec::with_capacity(sizes.len());
@@ -421,7 +455,7 @@ impl<'t> GraphBuilder<'t> {
                         TaskKind::Transfer {
                             bytes,
                             route,
-                            weight: 1.0,
+                            weight,
                             latency,
                             rate_cap,
                         },
@@ -444,7 +478,7 @@ impl<'t> GraphBuilder<'t> {
                         TaskKind::Transfer {
                             bytes,
                             route: d2h_route,
-                            weight: 1.0,
+                            weight,
                             latency,
                             rate_cap,
                         },
@@ -458,7 +492,7 @@ impl<'t> GraphBuilder<'t> {
                         TaskKind::Transfer {
                             bytes,
                             route: h2d_route,
-                            weight: 1.0,
+                            weight,
                             latency: SimTime::ZERO,
                             rate_cap,
                         },
@@ -487,7 +521,7 @@ impl<'t> GraphBuilder<'t> {
                         TaskKind::Transfer {
                             bytes,
                             route,
-                            weight: 1.0,
+                            weight,
                             latency,
                             rate_cap,
                         },
@@ -513,6 +547,7 @@ impl<'t> GraphBuilder<'t> {
 /// is dispatched through the [`super::algo`] registry under the spec's
 /// algorithm.
 pub fn append_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32) {
+    b.set_weight(spec.weight);
     for pa in &spec.paths {
         if pa.bytes == 0 {
             continue;
@@ -522,14 +557,46 @@ pub fn append_call(b: &mut GraphBuilder<'_>, spec: &MultipathSpec, tag_base: u32
     }
 }
 
+/// Total bytes routed over each *physical* resource of `graph`, keyed by
+/// resource name — per-op protocol resources (`proto.*`) are filtered
+/// out, leaving the fabric links the serve harness reports utilization
+/// for. A transfer crossing k physical links contributes its bytes to
+/// each (link-level accounting, like NIC counters).
+pub fn link_bytes(pool: &ResourcePool, graph: &TaskGraph) -> Vec<(String, u64)> {
+    graph
+        .resource_bytes()
+        .into_iter()
+        .filter_map(|(id, bytes)| {
+            let name = &pool.get(id).name;
+            if bytes > 0 && !name.starts_with("proto.") {
+                Some((name.clone(), bytes))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
 /// Execute one multi-path collective on the DES; returns per-path times.
 pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Result<SimOutcome> {
+    simulate_traced(topo, spec, reduce_bps).map(|(out, _)| out)
+}
+
+/// As [`simulate`], additionally reporting per-physical-link byte
+/// totals ([`link_bytes`]) — the fabric-accounting variant the stream
+/// scheduler uses when a `SimDevice` has byte accounting enabled.
+pub fn simulate_traced(
+    topo: &Topology,
+    spec: &MultipathSpec,
+    reduce_bps: f64,
+) -> Result<(SimOutcome, Vec<(String, u64)>)> {
     spec.validate()?;
     let models: Vec<(PathId, PathModel)> =
         spec.paths.iter().map(|p| (p.path, p.model)).collect();
     let mut b = GraphBuilder::new(topo, spec.n, &models, reduce_bps);
     append_call(&mut b, spec, 0);
     let tasks = b.graph.len();
+    let bytes = link_bytes(&b.pool, &b.graph);
     let sched = Engine::new(&b.pool).run(&b.graph)?;
     let per_path = spec
         .paths
@@ -542,12 +609,15 @@ pub fn simulate(topo: &Topology, spec: &MultipathSpec, reduce_bps: f64) -> Resul
                 .unwrap_or(SimTime::ZERO),
         })
         .collect::<Vec<_>>();
-    Ok(SimOutcome {
-        total: sched.makespan,
-        per_path,
-        events: sched.events,
-        tasks,
-    })
+    Ok((
+        SimOutcome {
+            total: sched.makespan,
+            per_path,
+            events: sched.events,
+            tasks,
+        },
+        bytes,
+    ))
 }
 
 // NOTE: the old `simulate_group` fused-launch compiler (tag-stride
@@ -590,6 +660,7 @@ mod tests {
                 bytes: s,
                 model,
             }],
+            weight: 1.0,
         };
         let out = simulate(&topo, &spec, 60e9).unwrap();
         let expect = 7.0 * 12e-6 + 7.0 * s as f64 / 148e9;
@@ -620,6 +691,7 @@ mod tests {
                 bytes: s,
                 model,
             }],
+            weight: 1.0,
         };
         let out = simulate(&topo, &spec, 60e9).unwrap();
         let algbw = kind.algbw_gbps(s, out.total.as_secs_f64());
@@ -651,6 +723,7 @@ mod tests {
                     model: pcie,
                 },
             ],
+            weight: 1.0,
         };
         let out = simulate(&topo, &spec, 60e9).unwrap();
         let t_nv = out.time_of(PathId::Nvlink).unwrap();
@@ -712,6 +785,7 @@ mod tests {
                 bytes: 60,
                 model: nv_model(CollectiveKind::AllGather, 4, &topo),
             }],
+            weight: 1.0,
         };
         assert!(simulate(&topo, &spec, 60e9).is_err());
     }

@@ -259,6 +259,11 @@ pub struct Communicator {
     /// beside (not inside) `profiling_time`, whose meaning stays "the
     /// Algorithm-1 share-tuning phase".
     pub algo_probe_time: SimTime,
+    /// Fair-share weight every collective this communicator prices
+    /// carries on the physical links ([`crate::serve::qos`] sets it per
+    /// tenant). Exactly `1.0` — the default — is the legacy pricing,
+    /// bit-identical to a weightless run.
+    qos_weight: f64,
 }
 
 impl Communicator {
@@ -321,6 +326,7 @@ impl Communicator {
             group: None,
             profiling_time: SimTime::ZERO,
             algo_probe_time: SimTime::ZERO,
+            qos_weight: 1.0,
         })
     }
 
@@ -390,6 +396,36 @@ impl Communicator {
         msg_bytes: u64,
     ) -> Option<&crate::collectives::algo::AlgoEntry> {
         self.algos.entry(kind, msg_bytes)
+    }
+
+    /// Set the fair-share weight this communicator's collectives carry
+    /// on shared physical links (see [`crate::serve::qos`]). `1.0` is
+    /// the legacy pricing, bit-for-bit; other weights only matter when
+    /// ops from differently-weighted communicators contend in one fused
+    /// batch on a shared [`SimDevice`].
+    pub fn set_qos_weight(&mut self, weight: f64) -> Result<()> {
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "qos weight must be finite and > 0, got {weight}"
+        );
+        self.qos_weight = weight;
+        Ok(())
+    }
+
+    /// The fair-share weight set by [`Self::set_qos_weight`] (1.0 until
+    /// then).
+    pub fn qos_weight(&self) -> f64 {
+        self.qos_weight
+    }
+
+    /// Total simulated tuner warmup this communicator has accrued: the
+    /// one-time Algorithm-1 share profiling plus the algorithm tuner's
+    /// DES probes. Serving harnesses sample the *delta* of this across a
+    /// request and book it to a neutral warmup bucket, so the tenant
+    /// that happened to trigger a cold size-class doesn't eat the probe
+    /// time in its latency percentiles.
+    pub fn tuning_warmup(&self) -> SimTime {
+        self.profiling_time + self.algo_probe_time
     }
 
     /// Intra-node multipath context: rings span the node's local ranks
@@ -520,6 +556,7 @@ impl Communicator {
                 self.n_local(),
                 self.cfg.run.pipeline_phases,
                 self.cfg.run.algo,
+                self.qos_weight,
             ))
         } else {
             self.ensure_tuned(kind, msg_bytes)?;
@@ -527,7 +564,10 @@ impl Communicator {
             let state = &self.ops[&key];
             let shares = state.balancer.shares().clone();
             let algo = state.algo;
-            let spec = self.mc(kind).spec_algo(msg_bytes, &shares, elem_bytes, algo);
+            let spec = self
+                .mc(kind)
+                .spec_algo(msg_bytes, &shares, elem_bytes, algo)
+                .with_weight(self.qos_weight);
             Ok(CollectivePlan::flat(kind, msg_bytes, elem_bytes, spec, shares))
         }
     }

@@ -30,11 +30,19 @@ use crate::sim::SimTime;
 use std::collections::HashMap;
 
 /// Everything `price_plan_solo` returns for one plan.
-pub(crate) type CachedPricing = (
-    CollectiveReport,
-    Vec<(PathId, SimTime)>,
-    Vec<(StripeId, SimTime)>,
-);
+#[derive(Debug, Clone)]
+pub(crate) struct PricedSolo {
+    pub(crate) report: CollectiveReport,
+    pub(crate) intra_obs: Vec<(PathId, SimTime)>,
+    pub(crate) inter_obs: Vec<(StripeId, SimTime)>,
+    /// Per-physical-link byte totals of the priced graph
+    /// ([`crate::collectives::schedule::link_bytes`]). Always computed
+    /// (a cheap graph pass), so cache hits replay the same bytes
+    /// whether or not the device's fabric accounting is on; empty only
+    /// for folded pricings, whose reduced graph doesn't carry full-
+    /// cluster counters.
+    pub(crate) link_bytes: Vec<(String, u64)>,
+}
 
 /// A structural fingerprint of one solo pricing question. Built by
 /// flattening every timing-relevant field of the plan — shape
@@ -99,6 +107,7 @@ impl PlanKey {
                 key.push(0);
                 key.push(spec.n as u64);
                 key.push(algo_code(spec.algo));
+                key.push(spec.weight.to_bits());
                 for pa in &spec.paths {
                     key.push(pa.path.tag() as u64);
                     key.push(pa.bytes);
@@ -111,11 +120,13 @@ impl PlanKey {
                 n_local,
                 pipeline,
                 algo,
+                weight,
             } => {
                 key.push(1);
                 key.push(*n_local as u64);
                 key.push(*pipeline as u64);
                 key.push(algo_spec_code(*algo));
+                key.push(weight.to_bits());
                 push_shares(&mut key, &tiers.intra, PathId::tag);
                 push_shares(&mut key, &tiers.inter, StripeId::tag);
             }
@@ -142,7 +153,7 @@ const MAX_ENTRIES: usize = 256;
 /// the state lock, so nesting the cache there would deadlock.
 #[derive(Debug, Default)]
 pub(crate) struct PlanCache {
-    map: HashMap<PlanKey, CachedPricing>,
+    map: HashMap<PlanKey, PricedSolo>,
     epoch: u64,
     hits: u64,
     misses: u64,
@@ -151,7 +162,7 @@ pub(crate) struct PlanCache {
 
 impl PlanCache {
     /// Cached pricing for `plan` under the current epoch, if any.
-    pub(crate) fn get(&mut self, plan: &CollectivePlan) -> Option<CachedPricing> {
+    pub(crate) fn get(&mut self, plan: &CollectivePlan) -> Option<PricedSolo> {
         let key = PlanKey::of(plan, self.epoch);
         match self.map.get(&key) {
             Some(v) => {
@@ -166,7 +177,7 @@ impl PlanCache {
     }
 
     /// Record a cold pricing under the current epoch.
-    pub(crate) fn put(&mut self, plan: &CollectivePlan, pricing: CachedPricing) {
+    pub(crate) fn put(&mut self, plan: &CollectivePlan, pricing: PricedSolo) {
         if self.map.len() >= MAX_ENTRIES {
             self.map.clear();
         }
@@ -206,6 +217,7 @@ mod tests {
                 n_local: 8,
                 pipeline: true,
                 algo: AlgoSpec::Auto,
+                weight: 1.0,
             },
         }
     }

@@ -49,7 +49,7 @@
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
 use crate::collectives::algo::AlgoSpec;
-use super::plan_cache::{CacheStats, PlanCache};
+use super::plan_cache::{CacheStats, PlanCache, PricedSolo};
 use crate::collectives::hierarchical::{ClusterCollective, PricingMode};
 use crate::collectives::multipath::RunReport;
 use crate::collectives::schedule::{
@@ -62,7 +62,7 @@ use crate::sim::{Engine, Schedule, SimTime, TaskGraph, TaskId};
 use crate::topology::cluster::Cluster;
 use crate::topology::Topology;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -122,6 +122,9 @@ pub(crate) enum PlanShape {
         n_local: usize,
         pipeline: bool,
         algo: AlgoSpec,
+        /// Per-tenant fair-share weight for every physical-link flow
+        /// (the flat shape carries it inside its spec).
+        weight: f64,
     },
 }
 
@@ -152,6 +155,7 @@ impl CollectivePlan {
         n_local: usize,
         pipeline: bool,
         algo: AlgoSpec,
+        weight: f64,
     ) -> Self {
         CollectivePlan {
             kind,
@@ -162,6 +166,7 @@ impl CollectivePlan {
                 n_local,
                 pipeline,
                 algo,
+                weight,
             },
         }
     }
@@ -273,6 +278,11 @@ struct DeviceState {
     pending: Vec<PendingState>,
     /// Priced, unclaimed outcomes.
     results: HashMap<u64, OpOutcome>,
+    /// Fabric byte accounting: cumulative bytes routed over each
+    /// physical link by every op priced since accounting was enabled
+    /// (`None` = off, the default — non-serve harnesses skip the
+    /// bookkeeping). BTreeMap for deterministic iteration order.
+    fabric: Option<BTreeMap<String, u64>>,
 }
 
 /// The single shared fair-share DES all streams — and all communicators
@@ -306,6 +316,7 @@ impl SimDevice {
                 event_base: 0,
                 pending: Vec::new(),
                 results: HashMap::new(),
+                fabric: None,
             }),
             cache: Mutex::new(PlanCache::default()),
         }
@@ -345,6 +356,38 @@ impl SimDevice {
     /// Hit/miss/invalidation counters of the compiled-plan cache.
     pub fn plan_cache_stats(&self) -> CacheStats {
         self.plan_cache().stats()
+    }
+
+    /// Turn on per-physical-link byte accounting: every op priced from
+    /// now on adds the bytes it routes over each fabric link (by
+    /// resource name; per-op `proto.*` resources excluded) to a running
+    /// total. Off by default — only the serve harness pays for the
+    /// bookkeeping. Folded cluster pricings report no per-link bytes
+    /// (see [`crate::collectives::hierarchical::HierReport::link_bytes`]);
+    /// the serve path never folds.
+    pub fn enable_fabric_accounting(&self) {
+        let mut st = self.lock();
+        if st.fabric.is_none() {
+            st.fabric = Some(BTreeMap::new());
+        }
+    }
+
+    /// Snapshot of the cumulative per-link byte totals (`None` when
+    /// accounting is off). Sorted by link name.
+    pub fn fabric_bytes(&self) -> Option<Vec<(String, u64)>> {
+        self.lock()
+            .fabric
+            .as_ref()
+            .map(|m| m.iter().map(|(k, v)| (k.clone(), *v)).collect())
+    }
+
+    /// Take and reset the cumulative per-link byte totals (`None` when
+    /// accounting is off).
+    pub fn take_fabric_bytes(&self) -> Option<Vec<(String, u64)>> {
+        self.lock()
+            .fabric
+            .as_mut()
+            .map(|m| std::mem::take(m).into_iter().collect())
     }
 
     fn check_stream(&self, st: &DeviceState, s: Stream) -> Result<()> {
@@ -496,15 +539,22 @@ impl SimDevice {
         }
         let batch = std::mem::take(&mut st.pending);
         let epoch = st.now;
-        let outcomes = if batch.len() == 1 {
+        let track = st.fabric.is_some();
+        let (outcomes, moved) = if batch.len() == 1 {
             // Uncontended fast path: the exact solo compilation of the
             // blocking API — bit-identical reports, by construction.
             let op = &batch[0];
             debug_assert!(op.deps.is_empty(), "solo op cannot have batch deps");
-            vec![(op.id, self.price_solo(op, epoch)?)]
+            let (outcome, moved) = self.price_solo(op, epoch)?;
+            (vec![(op.id, outcome)], moved)
         } else {
-            self.price_batch(&batch, epoch)?
+            self.price_batch(&batch, epoch, track)?
         };
+        if let Some(fab) = st.fabric.as_mut() {
+            for (name, bytes) in moved {
+                *fab.entry(name).or_insert(0) += bytes;
+            }
+        }
         // Stream tails priced in this batch pin their finish times (the
         // `stream_synchronize` observable) before the outcomes move
         // into the claim map.
@@ -528,37 +578,49 @@ impl SimDevice {
     }
 
     /// Solo pricing — one op, no contention, the blocking code path.
-    fn price_solo(&self, op: &PendingState, epoch: SimTime) -> Result<OpOutcome> {
+    /// Returns the outcome plus the per-link bytes the op moved (empty
+    /// for compute ops).
+    fn price_solo(
+        &self,
+        op: &PendingState,
+        epoch: SimTime,
+    ) -> Result<(OpOutcome, Vec<(String, u64)>)> {
         match &op.payload {
-            OpPayload::Compute { duration } => Ok(OpOutcome {
-                epoch,
-                ready: epoch,
-                finished: epoch + *duration,
-                span: PhaseSpan {
-                    start: epoch,
-                    end: epoch + *duration,
-                },
-                contended: false,
-                collective: None,
-            }),
-            OpPayload::Collective(plan) => {
-                let (report, intra_obs, inter_obs) = self.price_plan_solo(plan)?;
-                let total = report.sim.total();
-                Ok(OpOutcome {
+            OpPayload::Compute { duration } => Ok((
+                OpOutcome {
                     epoch,
                     ready: epoch,
-                    finished: epoch + total,
+                    finished: epoch + *duration,
                     span: PhaseSpan {
                         start: epoch,
-                        end: epoch + total,
+                        end: epoch + *duration,
                     },
                     contended: false,
-                    collective: Some(CollectiveOutcome {
-                        report,
-                        intra_obs,
-                        inter_obs,
-                    }),
-                })
+                    collective: None,
+                },
+                Vec::new(),
+            )),
+            OpPayload::Collective(plan) => {
+                let priced = self.price_plan_solo(plan)?;
+                let total = priced.report.sim.total();
+                Ok((
+                    OpOutcome {
+                        epoch,
+                        ready: epoch,
+                        finished: epoch + total,
+                        span: PhaseSpan {
+                            start: epoch,
+                            end: epoch + total,
+                        },
+                        contended: false,
+                        collective: Some(CollectiveOutcome {
+                            report: priced.report,
+                            intra_obs: priced.intra_obs,
+                            inter_obs: priced.inter_obs,
+                        }),
+                    },
+                    priced.link_bytes,
+                ))
             }
         }
     }
@@ -567,15 +629,7 @@ impl SimDevice {
     /// the tuning-free "individual" timings of fused groups). Solo
     /// pricing is deterministic, so repeats come out of the
     /// compiled-plan cache bit-identically; cold pricings populate it.
-    #[allow(clippy::type_complexity)]
-    pub(crate) fn price_plan_solo(
-        &self,
-        plan: &CollectivePlan,
-    ) -> Result<(
-        super::CollectiveReport,
-        Vec<(PathId, SimTime)>,
-        Vec<(StripeId, SimTime)>,
-    )> {
+    pub(crate) fn price_plan_solo(&self, plan: &CollectivePlan) -> Result<PricedSolo> {
         if let Some(hit) = self.plan_cache().get(plan) {
             return Ok(hit);
         }
@@ -585,18 +639,11 @@ impl SimDevice {
     }
 
     /// The uncached solo pipeline behind [`Self::price_plan_solo`].
-    #[allow(clippy::type_complexity)]
-    fn price_plan_cold(
-        &self,
-        plan: &CollectivePlan,
-    ) -> Result<(
-        super::CollectiveReport,
-        Vec<(PathId, SimTime)>,
-        Vec<(StripeId, SimTime)>,
-    )> {
+    fn price_plan_cold(&self, plan: &CollectivePlan) -> Result<PricedSolo> {
         match &plan.shape {
             PlanShape::Flat { spec, shares } => {
-                let outcome = schedule::simulate(&self.topo, spec, self.calib.reduce_bps)?;
+                let (outcome, link_bytes) =
+                    schedule::simulate_traced(&self.topo, spec, self.calib.reduce_bps)?;
                 let sim = RunReport {
                     outcome,
                     msg_bytes: plan.msg_bytes,
@@ -611,13 +658,19 @@ impl SimDevice {
                     adjusted: None,
                     tiers: None,
                 };
-                Ok((report, intra_obs, Vec::new()))
+                Ok(PricedSolo {
+                    report,
+                    intra_obs,
+                    inter_obs: Vec::new(),
+                    link_bytes,
+                })
             }
             PlanShape::Hier {
                 tiers,
                 n_local,
                 pipeline,
                 algo,
+                weight,
             } => {
                 // Solo cluster pricing sizes its graph adaptively: exact
                 // per-chunk DES at small node counts, symmetry-folded at
@@ -630,7 +683,8 @@ impl SimDevice {
                 )
                 .with_pipeline(*pipeline)
                 .with_algo(*algo)
-                .with_pricing(PricingMode::Auto);
+                .with_pricing(PricingMode::Auto)
+                .with_weight(*weight);
                 let hier = cc.run(plan.msg_bytes, tiers, plan.elem_bytes)?;
                 // Repackage behind the stable RunReport surface, exactly
                 // as the blocking cluster path always has.
@@ -674,19 +728,26 @@ impl SimDevice {
                         adjusted: None,
                     }),
                 };
-                Ok((report, hier.intra_times, hier.inter_times))
+                Ok(PricedSolo {
+                    report,
+                    intra_obs: hier.intra_times,
+                    inter_obs: hier.inter_times,
+                    link_bytes: hier.link_bytes,
+                })
             }
         }
     }
 
     /// Fused pricing: compile the whole batch into ONE graph over ONE
     /// pool — private protocol resources per op, shared physical links —
-    /// and run a single DES launch.
+    /// and run a single DES launch. `track` additionally returns the
+    /// fused graph's per-link byte totals (fabric accounting).
     fn price_batch(
         &self,
         batch: &[PendingState],
         epoch: SimTime,
-    ) -> Result<Vec<(u64, OpOutcome)>> {
+        track: bool,
+    ) -> Result<(Vec<(u64, OpOutcome)>, Vec<(String, u64)>)> {
         struct Frag {
             range: Range<usize>,
             barrier: TaskId,
@@ -731,6 +792,7 @@ impl SimDevice {
                         n_local,
                         pipeline,
                         algo,
+                        weight,
                     } => {
                         let cc = ClusterCollective::new(
                             &self.cluster,
@@ -739,7 +801,8 @@ impl SimDevice {
                             *n_local,
                         )
                         .with_pipeline(*pipeline)
-                        .with_algo(*algo);
+                        .with_algo(*algo)
+                        .with_weight(*weight);
                         let compiled = cc.compile_onto(
                             plan.msg_bytes,
                             tiers,
@@ -772,6 +835,11 @@ impl SimDevice {
             });
         }
 
+        let moved = if track {
+            schedule::link_bytes(&pool, &graph)
+        } else {
+            Vec::new()
+        };
         let sched = Engine::new(&pool).run(&graph)?;
         let events = sched.events;
 
@@ -813,7 +881,7 @@ impl SimDevice {
                 },
             ));
         }
-        Ok(out)
+        Ok((out, moved))
     }
 
     /// Build one op's collective outcome from its fragment of the fused

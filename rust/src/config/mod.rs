@@ -101,6 +101,47 @@ impl Default for ChaosConfig {
     }
 }
 
+/// Tunables of the multi-tenant serving simulator ([`crate::serve`]):
+/// the `[serve]` TOML keys / `repro serve` CLI flags.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Workload scenario every tenant runs: `decode_tp`,
+    /// `prefill_decode`, `continuous_batch`, or `mix` (cycle the three
+    /// across tenants).
+    pub scenario: String,
+    /// Tenant count; tenant `k` gets priority tier `k % 3` so the
+    /// default deployment always mixes QoS classes.
+    pub tenants: usize,
+    /// Arrival-generation horizon, simulated seconds.
+    pub horizon_s: f64,
+    /// Per-tenant Poisson arrival rate, requests per simulated second.
+    pub rate_per_s: f64,
+    /// Decode-step AllReduce size, KiB (small-message latency regime).
+    pub decode_kib: u64,
+    /// KV-cache hand-off AllGather size, MiB (bulk, spine-crossing).
+    pub prefill_mib: u64,
+    /// Request-latency SLO, milliseconds.
+    pub slo_ms: f64,
+    /// Geometric weight spacing between priority tiers (power of two
+    /// keeps tier weights float-exact — see [`crate::serve::qos`]).
+    pub tier_weight: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            scenario: "mix".to_string(),
+            tenants: 3,
+            horizon_s: 1.0,
+            rate_per_s: 40.0,
+            decode_kib: 1024,
+            prefill_mib: 64,
+            slo_ms: 5.0,
+            tier_weight: crate::serve::qos::DEFAULT_TIER_WEIGHT,
+        }
+    }
+}
+
 /// Full run configuration (TOML-loadable).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -145,6 +186,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Fault-injection tunables (`chaos.*` TOML keys).
     pub chaos: ChaosConfig,
+    /// Multi-tenant serving tunables (`serve.*` TOML keys).
+    pub serve: ServeConfig,
 }
 
 /// The crate-wide default RNG seed — the value `--seed` and the `seed`
@@ -176,6 +219,7 @@ impl RunConfig {
             disable_pcie: false,
             seed: default_seed(),
             chaos: ChaosConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 
@@ -237,6 +281,9 @@ impl RunConfig {
             "chaos.mtbf_s", "chaos.mttr_s", "chaos.detection_us",
             "chaos.reinit_ms", "chaos.ckpt_interval", "chaos.reload_s",
             "chaos.policy", "chaos.regrow",
+            "serve.scenario", "serve.tenants", "serve.horizon_s",
+            "serve.rate_per_s", "serve.decode_kib", "serve.prefill_mib",
+            "serve.slo_ms", "serve.tier_weight",
         ];
         for k in doc.keys() {
             anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key '{k}'");
@@ -274,6 +321,17 @@ impl RunConfig {
                 .map_err(|e: String| anyhow::anyhow!(e))?,
             regrow: doc.bool_or("chaos.regrow", dc.regrow),
         };
+        let ds = ServeConfig::default();
+        let serve = ServeConfig {
+            scenario: doc.str_or("serve.scenario", &ds.scenario).to_string(),
+            tenants: doc.usize_or("serve.tenants", ds.tenants),
+            horizon_s: doc.f64_or("serve.horizon_s", ds.horizon_s),
+            rate_per_s: doc.f64_or("serve.rate_per_s", ds.rate_per_s),
+            decode_kib: doc.u64_or("serve.decode_kib", ds.decode_kib),
+            prefill_mib: doc.u64_or("serve.prefill_mib", ds.prefill_mib),
+            slo_ms: doc.f64_or("serve.slo_ms", ds.slo_ms),
+            tier_weight: doc.f64_or("serve.tier_weight", ds.tier_weight),
+        };
         Ok(RunConfig {
             preset,
             n_gpus: doc.usize_or("n_gpus", preset.spec().n_gpus),
@@ -288,6 +346,7 @@ impl RunConfig {
             disable_pcie: doc.bool_or("disable_pcie", false),
             seed: doc.u64_or("seed", default_seed()),
             chaos,
+            serve,
         })
     }
 
@@ -332,6 +391,15 @@ impl RunConfig {
         doc.set("chaos.reload_s", Value::Float(c.reload_s));
         doc.set("chaos.policy", Value::Str(c.policy.to_string()));
         doc.set("chaos.regrow", Value::Bool(c.regrow));
+        let s = &self.serve;
+        doc.set("serve.scenario", Value::Str(s.scenario.clone()));
+        doc.set("serve.tenants", Value::Int(s.tenants as i64));
+        doc.set("serve.horizon_s", Value::Float(s.horizon_s));
+        doc.set("serve.rate_per_s", Value::Float(s.rate_per_s));
+        doc.set("serve.decode_kib", Value::Int(s.decode_kib as i64));
+        doc.set("serve.prefill_mib", Value::Int(s.prefill_mib as i64));
+        doc.set("serve.slo_ms", Value::Float(s.slo_ms));
+        doc.set("serve.tier_weight", Value::Float(s.tier_weight));
         Ok(doc.render())
     }
 
@@ -389,6 +457,32 @@ impl RunConfig {
         anyhow::ensure!(
             c.reload_s >= 0.0 && c.reload_s.is_finite(),
             "chaos.reload_s must be ≥ 0"
+        );
+        let s = &self.serve;
+        anyhow::ensure!(
+            s.scenario == "mix" || crate::serve::Scenario::parse(&s.scenario).is_ok(),
+            "serve.scenario must be mix | decode_tp | prefill_decode | continuous_batch, \
+             got '{}'",
+            s.scenario
+        );
+        anyhow::ensure!(s.tenants >= 1, "serve.tenants must be ≥ 1");
+        anyhow::ensure!(
+            s.horizon_s > 0.0 && s.horizon_s.is_finite(),
+            "serve.horizon_s must be > 0"
+        );
+        anyhow::ensure!(
+            s.rate_per_s > 0.0 && s.rate_per_s.is_finite(),
+            "serve.rate_per_s must be > 0"
+        );
+        anyhow::ensure!(s.decode_kib >= 1, "serve.decode_kib must be ≥ 1");
+        anyhow::ensure!(s.prefill_mib >= 1, "serve.prefill_mib must be ≥ 1");
+        anyhow::ensure!(
+            s.slo_ms > 0.0 && s.slo_ms.is_finite(),
+            "serve.slo_ms must be > 0"
+        );
+        anyhow::ensure!(
+            s.tier_weight.is_finite() && s.tier_weight >= 1.0,
+            "serve.tier_weight must be ≥ 1"
         );
         Ok(())
     }
@@ -459,6 +553,36 @@ mod tests {
         assert!(bad.validate().is_err());
         bad = RunConfig::new(Preset::H800, 8);
         bad.chaos.mttr_s = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serve_fields_roundtrip_and_validate() {
+        let mut cfg = RunConfig::new(Preset::H800, 8);
+        cfg.serve.scenario = "continuous_batch".to_string();
+        cfg.serve.tenants = 5;
+        cfg.serve.rate_per_s = 80.0;
+        cfg.serve.tier_weight = 4.0;
+        cfg.validate().unwrap();
+        let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.serve.scenario, "continuous_batch");
+        assert_eq!(back.serve.tenants, 5);
+        assert!((back.serve.rate_per_s - 80.0).abs() < 1e-9);
+        assert!((back.serve.tier_weight - 4.0).abs() < 1e-9);
+        // Defaults when keys are absent.
+        let d = RunConfig::from_toml_str("preset = \"h800\"").unwrap().serve;
+        assert_eq!(d.scenario, "mix");
+        assert_eq!(d.tenants, 3);
+        assert_eq!(d.decode_kib, 1024);
+        // Bad values rejected.
+        let mut bad = RunConfig::new(Preset::H800, 8);
+        bad.serve.scenario = "batch_of_one".to_string();
+        assert!(bad.validate().is_err());
+        bad = RunConfig::new(Preset::H800, 8);
+        bad.serve.tenants = 0;
+        assert!(bad.validate().is_err());
+        bad = RunConfig::new(Preset::H800, 8);
+        bad.serve.tier_weight = 0.5;
         assert!(bad.validate().is_err());
     }
 

@@ -103,6 +103,7 @@ pub mod memory;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sync;
 pub mod topology;

@@ -42,7 +42,7 @@ COMMANDS:
           --overlap buckets the backward pass and hides gradient traffic
           under compute on the stream-ordered DES
   repro   <table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|
-           cluster|overlap|concurrent|ablation|chaos|scale>
+           cluster|overlap|concurrent|ablation|chaos|scale|serve>
           [--nodes <n>] [--no-pipeline] [--csv <path>]
           regenerate a paper table/figure; --nodes routes table2 through
           the hierarchical cluster compiler (1 = bit-identical degenerate
@@ -70,6 +70,19 @@ COMMANDS:
           --trainer makes each step a bucketed-overlap fwd/bwd trainer
           step so TTR lands in loss-curve wall time; repaired stripes and
           nodes rejoin automatically (elastic regrow) unless --no-regrow
+          `serve` drives a multi-tenant LLM-serving deployment — many
+          communicators on one shared device, arrival-driven requests,
+          per-tenant QoS weights on shared links — and reports
+          p50/p99/p999 request latency, SLO attainment and fabric
+          utilization per tenant
+          [serve only: --tenants <n> --scenario mix|decode_tp|
+           prefill_decode|continuous_batch --rate <req/s> --horizon <s>
+           --slo <ms> --smoke]
+          --smoke replays the fixed two-tenant co-arrival trace and
+          asserts the QoS acceptance properties (priority p99 beats
+          best-effort, per-link bytes conserved vs the serialized
+          baseline, single-tenant runs price bit-identically to a plain
+          async stream loop)
   topo    --preset <p> [--nodes <n>]
           print topology details and Table 1 numbers
 
@@ -339,8 +352,8 @@ fn repro(
     let topo = Topology::build(&Preset::H800.spec());
     let cfg = BalancerConfig::default();
     anyhow::ensure!(
-        nodes.is_none() || matches!(what, "table2" | "cluster" | "chaos" | "scale"),
-        "--nodes only applies to the table2, cluster, chaos and scale targets \
+        nodes.is_none() || matches!(what, "table2" | "cluster" | "chaos" | "scale" | "serve"),
+        "--nodes only applies to the table2, cluster, chaos, scale and serve targets \
          ('{what}' is single-node)"
     );
     anyhow::ensure!(
@@ -348,8 +361,17 @@ fn repro(
         "--no-pipeline only applies to the hierarchical targets (table2 --nodes, cluster)"
     );
     anyhow::ensure!(
-        matches!(what, "chaos" | "scale") || !args.has("smoke"),
-        "--smoke only applies to the chaos and scale targets"
+        matches!(what, "chaos" | "scale" | "serve") || !args.has("smoke"),
+        "--smoke only applies to the chaos, scale and serve targets"
+    );
+    anyhow::ensure!(
+        what == "serve"
+            || (args.flag("tenants").is_none()
+                && args.flag("scenario").is_none()
+                && args.flag("rate").is_none()
+                && args.flag("horizon").is_none()
+                && args.flag("slo").is_none()),
+        "--tenants/--scenario/--rate/--horizon/--slo only apply to the serve target"
     );
     anyhow::ensure!(
         what == "chaos" || args.flag("policy").is_none(),
@@ -790,6 +812,85 @@ fn repro(
                 csv.write_file(p)?;
             }
         }
+        "serve" => {
+            // Multi-tenant serving: every tenant is its own communicator
+            // on ONE shared device, arrivals drive fused DES batches, and
+            // the QoS layer maps tenant policy onto fair-share weights.
+            use flexlink::serve::{self, ServeParams};
+            use flexlink::sim::SimTime;
+            if args.has("smoke") {
+                // Fixed two-tenant co-arrival trace; asserts the
+                // acceptance properties (priority p99 < best-effort p99,
+                // per-link bytes conserved vs serialized, single-tenant
+                // pricing bit-identical to a plain async stream loop).
+                let mut scfg = CommConfig::new(Preset::H800, 8);
+                scfg.run.disable_pcie = true;
+                scfg.run.disable_rdma = true;
+                let rep = flexlink::serve::smoke(&scfg)?;
+                print!("{}", bh::render_serve(&rep));
+                println!(
+                    "serve smoke passed: priority beats best-effort on p99 service \
+                     latency, per-link bytes conserved, single-tenant pricing \
+                     bit-identical to the async stream loop"
+                );
+            } else {
+                let nn = nodes.unwrap_or(1);
+                let mut ccfg = if nn > 1 {
+                    CommConfig::cluster(Preset::H800, nn, 8)
+                } else {
+                    CommConfig::new(Preset::H800, 8)
+                };
+                ccfg.run.seed = seed;
+                let ds = ccfg.run.serve.clone();
+                ccfg.run.serve.tenants = args.usize_or("tenants", ds.tenants)?;
+                ccfg.run.serve.scenario = args.str_or("scenario", &ds.scenario);
+                ccfg.run.serve.rate_per_s = args.parse_or("rate", ds.rate_per_s)?;
+                ccfg.run.serve.horizon_s = args.parse_or("horizon", ds.horizon_s)?;
+                ccfg.run.serve.slo_ms = args.parse_or("slo", ds.slo_ms)?;
+                ccfg.run.validate()?;
+                let params = ServeParams {
+                    seed,
+                    horizon: SimTime::from_secs_f64(ccfg.run.serve.horizon_s),
+                    tier_weight: ccfg.run.serve.tier_weight,
+                };
+                let tenants = bh::serve_tenants(&ccfg.run.serve)?;
+                let rep = serve::run_serve(&ccfg, &tenants, &params)?;
+                print!("{}", bh::render_serve(&rep));
+                if let Some(p) = csv_path {
+                    let mut csv = Csv::new(&[
+                        "tenant",
+                        "weight",
+                        "requests",
+                        "p50_ms",
+                        "p99_ms",
+                        "p999_ms",
+                        "svc_p50_ms",
+                        "svc_p99_ms",
+                        "svc_p999_ms",
+                        "slo_ms",
+                        "slo_attained_pct",
+                        "warmup_s",
+                    ]);
+                    for t in &rep.tenants {
+                        csv.row(&[
+                            t.name.clone(),
+                            format!("{:.3}", t.weight),
+                            t.requests.to_string(),
+                            format!("{:.4}", t.p50_ms),
+                            format!("{:.4}", t.p99_ms),
+                            format!("{:.4}", t.p999_ms),
+                            format!("{:.4}", t.service_p50_ms),
+                            format!("{:.4}", t.service_p99_ms),
+                            format!("{:.4}", t.service_p999_ms),
+                            format!("{:.2}", t.slo_ms),
+                            format!("{:.2}", t.slo_attained_pct),
+                            format!("{:.4}", t.warmup.as_secs_f64()),
+                        ]);
+                    }
+                    csv.write_file(p)?;
+                }
+            }
+        }
         "group" => {
             let r = bh::group_fusion(
                 Preset::H800,
@@ -832,7 +933,7 @@ fn repro(
         other => anyhow::bail!(
             "unknown repro target '{other}' \
              (table1|table2|fig2|fig3|fig4|fig5|motivation|overhead|group|cluster|overlap|\
-             concurrent|ablation|chaos|scale)"
+             concurrent|ablation|chaos|scale|serve)"
         ),
     }
     Ok(())

@@ -1,0 +1,541 @@
+//! The multi-tenant serving event loop.
+//!
+//! Many tenants, each its own [`Communicator`] over ONE shared
+//! [`SimDevice`] ([`Communicator::init_shared`]): their collectives
+//! contend on the same physical links instead of being priced in
+//! separate vacuums. The loop walks the merged arrival schedule on the
+//! virtual clock; every request whose arrival instant has passed
+//! enqueues its op list on its tenant's stream, then one device-wide
+//! `synchronize()` prices the whole pending set as a fused DES batch —
+//! co-arriving tenants split shared links by their QoS weights
+//! ([`crate::serve::qos`]), while requests that arrive mid-batch queue
+//! until the fabric frees (continuous batching).
+//!
+//! Timeline bookkeeping: the request clock and the device clock advance
+//! in lock-step per batch (`clock += batch makespan`), so
+//!
+//! * `queue`   = launch instant − arrival instant,
+//! * `service` = op finish − batch epoch ([`OpOutcome::finish_in_batch`]),
+//! * `latency` = queue + service,
+//!
+//! all on the virtual timeline. Tuner warmup (Algorithm-1 profiling +
+//! algorithm-table DES probes) is *not* part of any of these: the loop
+//! samples each communicator's [`Communicator::tuning_warmup`] delta
+//! per batch into a neutral per-tenant bucket, reported separately, so
+//! the tenant that happens to trigger a cold size-class doesn't eat the
+//! probe time in its latency percentiles.
+//!
+//! Determinism: tenants are canonicalized by *name* before anything
+//! draws randomness or enqueues, so registration (insertion) order is
+//! irrelevant; arrivals and per-request workload draws come from
+//! SplitMix64 substreams of the run seed. Same seed + specs ⇒
+//! bit-identical report.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::arrivals::{self, ArrivalProcess};
+use super::qos::QosPolicy;
+use super::workload::{Scenario, WorkloadSpec};
+use crate::comm::stream::{OpOutcome, SimDevice, Stream};
+use crate::comm::{CommConfig, Communicator};
+use crate::sim::SimTime;
+
+/// One tenant of the serving deployment.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Unique name; also the canonical ordering key (the harness sorts
+    /// tenants by name, so registration order never matters).
+    pub name: String,
+    pub policy: QosPolicy,
+    pub arrivals: ArrivalProcess,
+    pub workload: WorkloadSpec,
+    /// Request-latency SLO, milliseconds (queue + service).
+    pub slo_ms: f64,
+}
+
+/// Run-wide knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeParams {
+    pub seed: u64,
+    /// Arrivals are generated over `[0, horizon]`.
+    pub horizon: SimTime,
+    /// Geometric spacing between priority tiers (see
+    /// [`super::qos::DEFAULT_TIER_WEIGHT`]).
+    pub tier_weight: f64,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams {
+            seed: crate::config::default_seed(),
+            horizon: SimTime::from_secs_f64(2.0),
+            tier_weight: super::qos::DEFAULT_TIER_WEIGHT,
+        }
+    }
+}
+
+/// Per-tenant outcome. Latency vectors are in per-tenant seqno order,
+/// nanoseconds — exact (`u64`) so reports compare bit-for-bit in the
+/// determinism properties.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantReport {
+    pub name: String,
+    /// Resolved fair-share weight the tenant's flows carried.
+    pub weight: f64,
+    pub requests: usize,
+    /// Queue + service per request, ns, seqno order.
+    pub latency_ns: Vec<u64>,
+    /// Service (in-batch) time per request, ns, seqno order.
+    pub service_ns: Vec<u64>,
+    /// Percentiles over total latency, milliseconds.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Percentiles over service time alone, milliseconds.
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
+    pub service_p999_ms: f64,
+    pub slo_ms: f64,
+    /// Percentage of requests with latency ≤ SLO.
+    pub slo_attained_pct: f64,
+    /// Neutral tuner-warmup bucket (profiling + algo probes) this
+    /// tenant's communicator accrued — kept out of the latency columns.
+    pub warmup: SimTime,
+}
+
+/// Bytes and utilization of one physical link over the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkUtil {
+    pub link: String,
+    pub bytes: u64,
+    pub capacity_bps: f64,
+    /// bytes / (capacity × makespan) ∈ [0, 1].
+    pub utilization: f64,
+}
+
+/// The full serving report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeReport {
+    /// Sorted by tenant name.
+    pub tenants: Vec<TenantReport>,
+    /// Sorted by link name.
+    pub fabric: Vec<LinkUtil>,
+    /// Final virtual request-clock value.
+    pub makespan: SimTime,
+    pub requests: usize,
+    /// Fused DES launches the run needed.
+    pub batches: usize,
+}
+
+impl ServeReport {
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
+/// Nearest-rank percentile of an ascending slice; ZERO when empty.
+fn percentile(sorted: &[SimTime], q: f64) -> SimTime {
+    if sorted.is_empty() {
+        return SimTime::ZERO;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn to_ms(t: SimTime) -> f64 {
+    t.as_secs_f64() * 1e3
+}
+
+struct TenantRt<'a> {
+    spec: &'a TenantSpec,
+    comm: Communicator,
+    stream: Stream,
+    weight: f64,
+    /// (latency, service) per request, pushed in seqno order.
+    records: Vec<(SimTime, SimTime)>,
+    warmup: SimTime,
+    warmup_seen: SimTime,
+}
+
+/// Drive the deployment and report per-tenant latency / SLO / fabric
+/// utilization. `cfg` describes the (shared) cluster every tenant's
+/// communicator runs over.
+pub fn run_serve(
+    cfg: &CommConfig,
+    tenants: &[TenantSpec],
+    params: &ServeParams,
+) -> Result<ServeReport> {
+    ensure!(!tenants.is_empty(), "serve needs at least one tenant");
+
+    // Canonical slot order: by name. Everything downstream — RNG lanes,
+    // stream creation, enqueue order inside a batch — keys off the slot,
+    // so permuting the caller's registration order changes nothing.
+    let mut order: Vec<usize> = (0..tenants.len()).collect();
+    order.sort_by(|&a, &b| tenants[a].name.cmp(&tenants[b].name));
+    for w in order.windows(2) {
+        ensure!(
+            tenants[w[0]].name != tenants[w[1]].name,
+            "duplicate tenant name '{}'",
+            tenants[w[0]].name
+        );
+    }
+
+    let mut device: Option<Arc<SimDevice>> = None;
+    let mut rts: Vec<TenantRt<'_>> = Vec::with_capacity(order.len());
+    for &idx in &order {
+        let spec = &tenants[idx];
+        spec.policy
+            .validate(params.tier_weight)
+            .with_context(|| format!("tenant '{}'", spec.name))?;
+        spec.workload
+            .validate()
+            .with_context(|| format!("tenant '{}'", spec.name))?;
+        spec.arrivals
+            .validate()
+            .with_context(|| format!("tenant '{}'", spec.name))?;
+        ensure!(
+            spec.slo_ms.is_finite() && spec.slo_ms > 0.0,
+            "tenant '{}': slo_ms must be finite and > 0",
+            spec.name
+        );
+        let mut comm = match &device {
+            None => {
+                let c = Communicator::init(cfg.clone())?;
+                device = Some(Arc::clone(c.device()));
+                c
+            }
+            Some(d) => Communicator::init_shared(cfg.clone(), d)?,
+        };
+        let weight = spec.policy.weight(params.tier_weight);
+        comm.set_qos_weight(weight)?;
+        let stream = comm.create_stream();
+        rts.push(TenantRt {
+            spec,
+            comm,
+            stream,
+            weight,
+            records: Vec::new(),
+            warmup: SimTime::ZERO,
+            warmup_seen: SimTime::ZERO,
+        });
+    }
+    let device = device.expect("≥1 tenant built above");
+    device.enable_fabric_accounting();
+
+    let procs: Vec<ArrivalProcess> = order.iter().map(|&i| tenants[i].arrivals.clone()).collect();
+    let arrivals = arrivals::schedule(&procs, params.horizon, params.seed)?;
+
+    let mut clock = SimTime::ZERO;
+    let mut batches = 0usize;
+    let mut i = 0usize;
+    while i < arrivals.len() {
+        // Fabric is free: jump to the next arrival, then admit every
+        // request that has arrived by then (co-arrivals + any backlog
+        // that queued while the previous batch occupied the fabric).
+        clock = clock.max(arrivals[i].at);
+        let start = i;
+        while i < arrivals.len() && arrivals[i].at <= clock {
+            i += 1;
+        }
+        let mut handles = Vec::with_capacity(i - start);
+        for a in &arrivals[start..i] {
+            let rt = &mut rts[a.tenant];
+            let mut rng =
+                arrivals::substream(params.seed, arrivals::request_lane(a.tenant, a.seqno));
+            let ops = rt.spec.workload.request_ops(&mut rng);
+            let mut last = None;
+            for op in &ops {
+                last = Some(rt.comm.time_collective_async(op.kind, op.bytes, rt.stream)?);
+            }
+            handles.push((a.tenant, a.at, last.expect("request has ≥1 op")));
+        }
+        // One fused launch for everything pending on the device.
+        let epoch = device.now();
+        let done = device.synchronize()?;
+        let busy = done - epoch;
+        batches += 1;
+        for (tenant, at, handle) in handles {
+            let outcome: OpOutcome = rts[tenant].comm.wait_op(handle)?;
+            let service = outcome.finish_in_batch();
+            let latency = (clock - at) + service;
+            rts[tenant].records.push((latency, service));
+        }
+        // Book tuner warmup (cold size-class profiling / probes that
+        // happened during this batch's enqueues) to the neutral bucket.
+        for rt in rts.iter_mut() {
+            let seen = rt.comm.tuning_warmup();
+            rt.warmup += seen - rt.warmup_seen;
+            rt.warmup_seen = seen;
+        }
+        clock += busy;
+    }
+    let makespan = clock;
+
+    let mut reports = Vec::with_capacity(rts.len());
+    let mut total_requests = 0usize;
+    for rt in &rts {
+        let latency_ns: Vec<u64> = rt.records.iter().map(|r| r.0.as_nanos()).collect();
+        let service_ns: Vec<u64> = rt.records.iter().map(|r| r.1.as_nanos()).collect();
+        let mut lat: Vec<SimTime> = rt.records.iter().map(|r| r.0).collect();
+        let mut svc: Vec<SimTime> = rt.records.iter().map(|r| r.1).collect();
+        lat.sort();
+        svc.sort();
+        let slo = SimTime::from_secs_f64(rt.spec.slo_ms / 1e3);
+        let attained = lat.iter().filter(|&&l| l <= slo).count();
+        let requests = lat.len();
+        total_requests += requests;
+        reports.push(TenantReport {
+            name: rt.spec.name.clone(),
+            weight: rt.weight,
+            requests,
+            latency_ns,
+            service_ns,
+            p50_ms: to_ms(percentile(&lat, 0.50)),
+            p99_ms: to_ms(percentile(&lat, 0.99)),
+            p999_ms: to_ms(percentile(&lat, 0.999)),
+            service_p50_ms: to_ms(percentile(&svc, 0.50)),
+            service_p99_ms: to_ms(percentile(&svc, 0.99)),
+            service_p999_ms: to_ms(percentile(&svc, 0.999)),
+            slo_ms: rt.spec.slo_ms,
+            slo_attained_pct: if requests == 0 {
+                100.0
+            } else {
+                100.0 * attained as f64 / requests as f64
+            },
+            warmup: rt.warmup,
+        });
+    }
+
+    // Fabric utilization: accumulated bytes over capacity × makespan.
+    // Capacities come from the shared cluster pool (single-node names
+    // are the degenerate cluster's — identical to the node pool).
+    let pool = &rts[0].comm.cluster().pool;
+    let elapsed = makespan.as_secs_f64();
+    let fabric = device
+        .take_fabric_bytes()
+        .unwrap_or_default()
+        .into_iter()
+        .map(|(link, bytes)| {
+            let capacity_bps = pool.find(&link).map(|id| pool.capacity(id)).unwrap_or(0.0);
+            let utilization = if capacity_bps > 0.0 && elapsed > 0.0 {
+                bytes as f64 / (capacity_bps * elapsed)
+            } else {
+                0.0
+            };
+            LinkUtil { link, bytes, capacity_bps, utilization }
+        })
+        .collect();
+
+    Ok(ServeReport {
+        tenants: reports,
+        fabric,
+        makespan,
+        requests: total_requests,
+        batches,
+    })
+}
+
+/// Total bytes per link of the *serialized* baseline: same tenants,
+/// same arrivals, same per-request draws, but every op synchronizes
+/// alone on a fresh device (solo pricing path, plan cache exercised).
+/// Conservation oracle for the fused run — QoS weights redistribute
+/// *rate*, never traffic.
+pub fn serialized_link_bytes(
+    cfg: &CommConfig,
+    tenants: &[TenantSpec],
+    params: &ServeParams,
+) -> Result<BTreeMap<String, u64>> {
+    let mut order: Vec<usize> = (0..tenants.len()).collect();
+    order.sort_by(|&a, &b| tenants[a].name.cmp(&tenants[b].name));
+    let mut device: Option<Arc<SimDevice>> = None;
+    let mut comms = Vec::with_capacity(order.len());
+    for &idx in &order {
+        let mut comm = match &device {
+            None => {
+                let c = Communicator::init(cfg.clone())?;
+                device = Some(Arc::clone(c.device()));
+                c
+            }
+            Some(d) => Communicator::init_shared(cfg.clone(), d)?,
+        };
+        comm.set_qos_weight(tenants[idx].policy.weight(params.tier_weight))?;
+        let stream = comm.create_stream();
+        comms.push((comm, stream));
+    }
+    let device = device.expect("≥1 tenant");
+    device.enable_fabric_accounting();
+    let procs: Vec<ArrivalProcess> = order.iter().map(|&i| tenants[i].arrivals.clone()).collect();
+    for a in arrivals::schedule(&procs, params.horizon, params.seed)? {
+        let (comm, stream) = &mut comms[a.tenant];
+        let mut rng = arrivals::substream(params.seed, arrivals::request_lane(a.tenant, a.seqno));
+        for op in tenants[order[a.tenant]].workload.request_ops(&mut rng) {
+            let h = comm.time_collective_async(op.kind, op.bytes, *stream)?;
+            device.synchronize()?;
+            comm.wait_op(h)?;
+        }
+    }
+    Ok(device
+        .take_fabric_bytes()
+        .unwrap_or_default()
+        .into_iter()
+        .collect())
+}
+
+/// The CI smoke: two tenants on one fixed co-arrival decode trace.
+/// Asserts the acceptance properties and returns the fused report:
+///
+/// 1. The priority tenant's p99 *service* latency strictly beats the
+///    best-effort tenant's (QoS weights actually bite on shared links).
+/// 2. Total bytes moved per physical link equal the serialized
+///    baseline's (fusion and weighting conserve traffic).
+/// 3. A single best-effort tenant (weight exactly 1.0) prices
+///    bit-identically to a hand-rolled `time_collective_async` +
+///    `synchronize` loop — the QoS layer is inert when alone.
+pub fn smoke(cfg: &CommConfig) -> Result<ServeReport> {
+    let trace: Vec<f64> = (0..16).map(|k| k as f64 * 0.05).collect();
+    let mk = |name: &str, tier: u8| TenantSpec {
+        name: name.to_string(),
+        policy: QosPolicy::Priority(tier),
+        arrivals: ArrivalProcess::Trace { at_s: trace.clone() },
+        workload: WorkloadSpec {
+            scenario: Scenario::DecodeTp,
+            decode_bytes: 1 << 20,
+            prefill_bytes: 0,
+        },
+        slo_ms: 5.0,
+    };
+    let tenants = vec![mk("batch", 0), mk("prio", 2)];
+    let params = ServeParams {
+        horizon: SimTime::from_secs_f64(1.0),
+        ..ServeParams::default()
+    };
+    let report = run_serve(cfg, &tenants, &params)?;
+
+    let prio = report.tenant("prio").expect("prio tenant reported");
+    let batch = report.tenant("batch").expect("batch tenant reported");
+    ensure!(prio.requests == 16 && batch.requests == 16, "trace replay lost requests");
+    ensure!(
+        prio.service_p99_ms < batch.service_p99_ms,
+        "priority tenant must strictly beat best-effort on p99 service latency \
+         (prio {:.4} ms vs batch {:.4} ms)",
+        prio.service_p99_ms,
+        batch.service_p99_ms
+    );
+
+    let fused: BTreeMap<String, u64> =
+        report.fabric.iter().map(|l| (l.link.clone(), l.bytes)).collect();
+    let serial = serialized_link_bytes(cfg, &tenants, &params)?;
+    ensure!(
+        fused == serial,
+        "per-link byte conservation violated: fused {fused:?} vs serialized {serial:?}"
+    );
+
+    // QoS inertness: solo best-effort serve == manual async replay.
+    let solo = vec![mk("solo", 0)];
+    let solo_report = run_serve(cfg, &solo, &params)?;
+    let mut comm = Communicator::init(cfg.clone())?;
+    let stream = comm.create_stream();
+    let device = Arc::clone(comm.device());
+    let mut manual_service = Vec::new();
+    // Each trace instant is its own batch (decode service ≪ the 50 ms
+    // gap), matching the serve loop's admission boundaries.
+    for _ in 0..trace.len() {
+        let h = comm.time_collective_async(crate::collectives::CollectiveKind::AllReduce, 1 << 20, stream)?;
+        device.synchronize()?;
+        let outcome = comm.wait_op(h)?;
+        manual_service.push(outcome.finish_in_batch().as_nanos());
+    }
+    ensure!(
+        solo_report.tenants[0].service_ns == manual_service,
+        "single-tenant serve diverged from the equivalent async stream run: \
+         {:?} vs {:?}",
+        solo_report.tenants[0].service_ns,
+        manual_service
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Preset;
+
+    fn cfg() -> CommConfig {
+        let mut c = CommConfig::new(Preset::H800, 8);
+        c.run.disable_pcie = true;
+        c.run.disable_rdma = true;
+        c
+    }
+
+    fn decode_tenant(name: &str, policy: QosPolicy, rate: f64) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            policy,
+            arrivals: ArrivalProcess::Poisson { rate_per_s: rate },
+            workload: WorkloadSpec {
+                scenario: Scenario::DecodeTp,
+                decode_bytes: 1 << 20,
+                prefill_bytes: 0,
+            },
+            slo_ms: 10.0,
+        }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<SimTime> = (1..=100).map(|n| SimTime::from_micros(n)).collect();
+        assert_eq!(percentile(&v, 0.50), SimTime::from_micros(50));
+        assert_eq!(percentile(&v, 0.99), SimTime::from_micros(99));
+        assert_eq!(percentile(&v, 0.999), SimTime::from_micros(100));
+        assert_eq!(percentile(&[], 0.5), SimTime::ZERO);
+    }
+
+    #[test]
+    fn rejects_duplicate_tenant_names() {
+        let t = vec![
+            decode_tenant("a", QosPolicy::Priority(0), 10.0),
+            decode_tenant("a", QosPolicy::Priority(1), 10.0),
+        ];
+        assert!(run_serve(&cfg(), &t, &ServeParams::default()).is_err());
+    }
+
+    #[test]
+    fn short_run_reports_every_tenant_and_some_fabric() {
+        let t = vec![
+            decode_tenant("int", QosPolicy::Priority(1), 30.0),
+            decode_tenant("bg", QosPolicy::Priority(0), 30.0),
+        ];
+        let params = ServeParams {
+            horizon: SimTime::from_secs_f64(0.3),
+            ..ServeParams::default()
+        };
+        let rep = run_serve(&cfg(), &t, &params).unwrap();
+        assert_eq!(rep.tenants.len(), 2);
+        // Sorted by name: "bg" < "int".
+        assert_eq!(rep.tenants[0].name, "bg");
+        assert_eq!(rep.tenants[1].weight, 8.0);
+        assert_eq!(rep.requests, rep.tenants.iter().map(|t| t.requests).sum::<usize>());
+        assert!(rep.requests > 0, "0.3 s at 2×30 req/s should see arrivals");
+        assert!(!rep.fabric.is_empty(), "fabric accounting must see bytes");
+        assert!(rep.fabric.iter().all(|l| l.bytes > 0));
+        assert!(rep.fabric.iter().any(|l| l.link.contains("nvlink")));
+        assert!(
+            rep.fabric.iter().all(|l| (0.0..=1.0 + 1e-9).contains(&l.utilization)),
+            "utilization out of range: {:?}",
+            rep.fabric
+        );
+        for t in &rep.tenants {
+            assert_eq!(t.latency_ns.len(), t.requests);
+            assert!(t.p50_ms <= t.p99_ms && t.p99_ms <= t.p999_ms);
+            assert!((0.0..=100.0).contains(&t.slo_attained_pct));
+        }
+    }
+
+    #[test]
+    fn smoke_passes_on_the_default_node() {
+        smoke(&cfg()).unwrap();
+    }
+}

@@ -1,0 +1,39 @@
+//! Multi-tenant serving simulator (`repro serve`).
+//!
+//! Layers an arrival-driven LLM-inference workload on top of the
+//! stream-ordered DES: each tenant is one [`crate::comm::Communicator`]
+//! sharing a single [`crate::comm::stream::SimDevice`]
+//! ([`Communicator::init_shared`]), so concurrently-pending requests
+//! from different tenants price as ONE fused DES batch and contend for
+//! the same physical links. Tenant policy (priority tiers, weighted
+//! fair share — [`qos`]) resolves to the per-flow `weight` the max–min
+//! solver honours, so shared links split by tenant weight while each
+//! op's private protocol resources stay per-op.
+//!
+//! Pieces:
+//!
+//! * [`workload`] — the scenario pack: tensor-parallel decode
+//!   AllReduce, disaggregated prefill/decode KV-cache bulk, a
+//!   continuous-batching mix.
+//! * [`arrivals`] — seeded Poisson / trace-replay arrivals per tenant
+//!   on the virtual clock (SplitMix64 substreams, no wall clock).
+//! * [`qos`] — policy → fair-share weight, with the float-exactness
+//!   rules that keep weight 1.0 bit-identical to legacy pricing.
+//! * [`harness`] — the event loop: admit arrivals, fuse pending ops,
+//!   report per-tenant p50/p99/p999 latency, SLO attainment, and
+//!   per-link fabric utilization.
+//!
+//! [`Communicator::init_shared`]: crate::comm::Communicator::init_shared
+
+pub mod arrivals;
+pub mod harness;
+pub mod qos;
+pub mod workload;
+
+pub use arrivals::{Arrival, ArrivalProcess};
+pub use harness::{
+    run_serve, serialized_link_bytes, smoke, LinkUtil, ServeParams, ServeReport, TenantReport,
+    TenantSpec,
+};
+pub use qos::QosPolicy;
+pub use workload::{RequestOp, Scenario, WorkloadSpec};

@@ -1,0 +1,128 @@
+//! Per-tenant QoS policy → fair-share weight mapping.
+//!
+//! The stream scheduler already threads a per-flow `weight` from
+//! [`crate::collectives::schedule::MultipathSpec`] down into the
+//! max–min solver ([`crate::sim::fairshare`]): when ops from several
+//! tenants fuse into one contended DES batch, each tenant's transfers
+//! claim link capacity in proportion to its weight. This module maps
+//! operator-facing policy (priority tiers, weighted fair share) onto
+//! that single knob.
+//!
+//! Two float-exactness rules keep the QoS layer *inert* when it should
+//! be:
+//!
+//! * Weight exactly `1.0` is the legacy pricing bit-for-bit — tier 0
+//!   maps to `tier_weight⁰ == 1.0` exactly (`powi(0)` is exact), so a
+//!   best-effort tenant alone on a device reproduces a weightless run.
+//! * The default `tier_weight` is a power of two ([`DEFAULT_TIER_WEIGHT`]
+//!   = 8.0), so tier weights (1, 8, 64, …) and their ratios are exactly
+//!   representable — share splits don't pick up representation noise.
+
+use anyhow::{ensure, Result};
+
+/// Default geometric spacing between priority tiers. A power of two so
+/// tier weights stay exactly representable; 8× per tier is steep enough
+/// that a higher tier dominates a saturated link without fully starving
+/// the tier below (strict starvation is what `WEIGHT_EPS`-scale weights
+/// are for — see [`crate::sim::fairshare`]).
+pub const DEFAULT_TIER_WEIGHT: f64 = 8.0;
+
+/// Highest priority tier accepted. `8^8 ≈ 1.7e7` already rounds to
+/// "everything the link has"; larger exponents only court overflow in
+/// weight *ratios*.
+pub const MAX_TIER: u8 = 8;
+
+/// What a tenant is promised on shared fabric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QosPolicy {
+    /// Strict-ish priority tier: tier `t` gets `tier_weight^t` of the
+    /// fair-share weight. Tier 0 is best-effort (weight exactly 1.0).
+    /// Geometric weights approximate strict priority in a weighted
+    /// max–min solver while keeping every tenant live.
+    Priority(u8),
+    /// Explicit weighted fair share: the weight is used as-is. `1.0`
+    /// prices bit-identically to a tenant with no QoS at all.
+    WeightedShare(f64),
+}
+
+impl QosPolicy {
+    /// The fair-share weight this policy resolves to under a given
+    /// inter-tier spacing.
+    pub fn weight(&self, tier_weight: f64) -> f64 {
+        match *self {
+            QosPolicy::Priority(tier) => tier_weight.powi(tier as i32),
+            QosPolicy::WeightedShare(w) => w,
+        }
+    }
+
+    /// Reject policies the fair-share solver can't honour: non-finite /
+    /// non-positive weights, tiers past [`MAX_TIER`], spacings < 1.
+    pub fn validate(&self, tier_weight: f64) -> Result<()> {
+        ensure!(
+            tier_weight.is_finite() && tier_weight >= 1.0,
+            "tier_weight must be finite and ≥ 1, got {tier_weight}"
+        );
+        match *self {
+            QosPolicy::Priority(tier) => {
+                ensure!(tier <= MAX_TIER, "priority tier {tier} exceeds max {MAX_TIER}");
+            }
+            QosPolicy::WeightedShare(w) => {
+                ensure!(
+                    w.is_finite() && w > 0.0,
+                    "fair-share weight must be finite and > 0, got {w}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Short display form for tables: `tier2` / `w=4`.
+    pub fn label(&self) -> String {
+        match *self {
+            QosPolicy::Priority(tier) => format!("tier{tier}"),
+            QosPolicy::WeightedShare(w) => format!("w={w}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_zero_is_exactly_legacy_weight() {
+        // The inertness contract: best-effort == weightless, bit-for-bit.
+        assert_eq!(QosPolicy::Priority(0).weight(DEFAULT_TIER_WEIGHT), 1.0);
+        assert_eq!(QosPolicy::Priority(0).weight(3.7), 1.0);
+    }
+
+    #[test]
+    fn tiers_are_geometric_and_exact_for_pow2_spacing() {
+        let w = DEFAULT_TIER_WEIGHT;
+        assert_eq!(QosPolicy::Priority(1).weight(w), 8.0);
+        assert_eq!(QosPolicy::Priority(2).weight(w), 64.0);
+        assert_eq!(QosPolicy::Priority(3).weight(w), 512.0);
+        for t in 0..MAX_TIER {
+            assert!(
+                QosPolicy::Priority(t).weight(w) < QosPolicy::Priority(t + 1).weight(w),
+                "tier weights must be strictly increasing"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_share_passes_through() {
+        assert_eq!(QosPolicy::WeightedShare(2.5).weight(DEFAULT_TIER_WEIGHT), 2.5);
+    }
+
+    #[test]
+    fn validate_rejects_bad_policies() {
+        assert!(QosPolicy::Priority(MAX_TIER + 1).validate(8.0).is_err());
+        assert!(QosPolicy::WeightedShare(0.0).validate(8.0).is_err());
+        assert!(QosPolicy::WeightedShare(f64::NAN).validate(8.0).is_err());
+        assert!(QosPolicy::WeightedShare(f64::INFINITY).validate(8.0).is_err());
+        assert!(QosPolicy::Priority(1).validate(0.5).is_err());
+        assert!(QosPolicy::Priority(MAX_TIER).validate(8.0).is_ok());
+        assert!(QosPolicy::WeightedShare(1e-6).validate(1.0).is_ok());
+    }
+}

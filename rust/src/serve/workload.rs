@@ -1,0 +1,191 @@
+//! LLM-inference serving scenarios → per-request collective op lists.
+//!
+//! Each scenario maps one request arrival to the sequence of fabric
+//! operations it triggers, sized to land in the traffic regime the
+//! paper cares about:
+//!
+//! * **DecodeTp** — tensor-parallel decode: one small AllReduce (the
+//!   per-token partial-sum exchange) in the latency-bound regime where
+//!   FlexLink's multipath overhead matters most.
+//! * **PrefillDecode** — disaggregated prefill/decode: a bulk AllGather
+//!   (the KV-cache hand-off from the prefill pool to the decode pool,
+//!   crossing the spine in cluster mode) followed by the first decode
+//!   step's AllReduce.
+//! * **ContinuousBatch** — a continuous-batching mix: mostly short
+//!   decode bursts (1–4 chained AllReduce steps), occasionally a fresh
+//!   prefill admission. Draws come from the request's own RNG substream
+//!   ([`crate::serve::arrivals::request_lane`]), so a request's op list
+//!   is a pure function of (seed, tenant slot, seqno).
+//!
+//! AllToAll is deliberately absent: it has no hierarchical lowering yet
+//! (see `Communicator::plan`), and serving scenarios must run unchanged
+//! on cluster configs.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::collectives::CollectiveKind;
+use crate::util::rng::Rng;
+
+/// Fraction of continuous-batching requests that are fresh prefill
+/// admissions (the rest are decode bursts).
+const CB_PREFILL_P: f64 = 0.25;
+
+/// Max chained decode steps in one continuous-batching burst.
+const CB_MAX_DECODE_STEPS: u64 = 4;
+
+/// Which inference traffic pattern a tenant emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    DecodeTp,
+    PrefillDecode,
+    ContinuousBatch,
+}
+
+impl Scenario {
+    /// Parse the config-file / CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "decode_tp" => Scenario::DecodeTp,
+            "prefill_decode" => Scenario::PrefillDecode,
+            "continuous_batch" => Scenario::ContinuousBatch,
+            other => bail!(
+                "unknown serve scenario '{other}' \
+                 (expected decode_tp | prefill_decode | continuous_batch)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::DecodeTp => "decode_tp",
+            Scenario::PrefillDecode => "prefill_decode",
+            Scenario::ContinuousBatch => "continuous_batch",
+        }
+    }
+
+    /// Whether requests of this scenario ever move prefill-sized bulk.
+    fn uses_prefill(self) -> bool {
+        !matches!(self, Scenario::DecodeTp)
+    }
+}
+
+/// One fabric operation of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestOp {
+    pub kind: CollectiveKind,
+    pub bytes: u64,
+}
+
+/// A tenant's workload: scenario plus its two size knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub scenario: Scenario,
+    /// Bytes of one decode-step AllReduce (hidden-dim activations —
+    /// keep this in the sub-few-MiB latency regime).
+    pub decode_bytes: u64,
+    /// Bytes of one KV-cache hand-off AllGather (bulk, spine-crossing).
+    pub prefill_bytes: u64,
+}
+
+impl WorkloadSpec {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.decode_bytes > 0, "decode_bytes must be > 0");
+        if self.scenario.uses_prefill() {
+            ensure!(
+                self.prefill_bytes > 0,
+                "{} moves KV-cache bulk: prefill_bytes must be > 0",
+                self.scenario.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// The op list one request triggers. `rng` is the request's own
+    /// substream; only `ContinuousBatch` draws from it.
+    pub fn request_ops(&self, rng: &mut Rng) -> Vec<RequestOp> {
+        let decode = RequestOp {
+            kind: CollectiveKind::AllReduce,
+            bytes: self.decode_bytes,
+        };
+        let prefill = RequestOp {
+            kind: CollectiveKind::AllGather,
+            bytes: self.prefill_bytes,
+        };
+        match self.scenario {
+            Scenario::DecodeTp => vec![decode],
+            Scenario::PrefillDecode => vec![prefill, decode],
+            Scenario::ContinuousBatch => {
+                if rng.chance(CB_PREFILL_P) {
+                    vec![prefill, decode]
+                } else {
+                    let steps = 1 + rng.below(CB_MAX_DECODE_STEPS) as usize;
+                    vec![decode; steps]
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::arrivals::{request_lane, substream};
+
+    fn spec(scenario: Scenario) -> WorkloadSpec {
+        WorkloadSpec {
+            scenario,
+            decode_bytes: 1 << 20,
+            prefill_bytes: 64 << 20,
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in [Scenario::DecodeTp, Scenario::PrefillDecode, Scenario::ContinuousBatch] {
+            assert_eq!(Scenario::parse(s.name()).unwrap(), s);
+        }
+        assert!(Scenario::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn fixed_scenarios_ignore_the_rng() {
+        let mut a = substream(1, request_lane(0, 0));
+        let mut b = substream(99, request_lane(5, 7));
+        assert_eq!(spec(Scenario::DecodeTp).request_ops(&mut a), spec(Scenario::DecodeTp).request_ops(&mut b));
+        let ops = spec(Scenario::PrefillDecode).request_ops(&mut a);
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[0].kind, CollectiveKind::AllGather);
+        assert_eq!(ops[1].kind, CollectiveKind::AllReduce);
+    }
+
+    #[test]
+    fn continuous_batch_is_a_pure_function_of_the_substream() {
+        let w = spec(Scenario::ContinuousBatch);
+        let ops_a = w.request_ops(&mut substream(42, request_lane(1, 3)));
+        let ops_b = w.request_ops(&mut substream(42, request_lane(1, 3)));
+        assert_eq!(ops_a, ops_b);
+        assert!(!ops_a.is_empty() && ops_a.len() <= 1 + CB_MAX_DECODE_STEPS as usize);
+        // Both branches are reachable over a modest seqno range.
+        let (mut saw_prefill, mut saw_burst) = (false, false);
+        for seq in 0..64 {
+            let ops = w.request_ops(&mut substream(42, request_lane(1, seq)));
+            match ops[0].kind {
+                CollectiveKind::AllGather => saw_prefill = true,
+                CollectiveKind::AllReduce => saw_burst = true,
+                _ => unreachable!(),
+            }
+        }
+        assert!(saw_prefill && saw_burst);
+    }
+
+    #[test]
+    fn validate_enforces_sizes() {
+        let mut w = spec(Scenario::PrefillDecode);
+        w.prefill_bytes = 0;
+        assert!(w.validate().is_err());
+        w.scenario = Scenario::DecodeTp;
+        assert!(w.validate().is_ok(), "decode_tp never moves prefill bulk");
+        w.decode_bytes = 0;
+        assert!(w.validate().is_err());
+    }
+}

@@ -10,6 +10,23 @@
 //! PCIe flow and an RDMA flow from the same GPU both route through that
 //! GPU's `pcie.up` resource and split its 64 GB/s between them, while the
 //! NVLink flow is untouched.
+//!
+//! ## Numerical guards
+//!
+//! Every tolerance in the solver is a named constant, not a magic
+//! literal: [`WEIGHT_EPS`] treats a resource's *aggregate* demand at or
+//! below it as zero when sizing the filling level λ (a resource nobody
+//! effectively wants must not produce a 0/0 level); [`FREEZE_REL_EPS`]
+//! is the relative freeze tolerance that lets the filling loop terminate
+//! despite f64 rounding at large capacities; [`RATE_CAP_EPS_CLAMP`]
+//! keeps the cap-freeze test finite for uncapped flows (`∞ − ∞` is NaN,
+//! and `x >= NaN` is false forever). Note `WEIGHT_EPS` bounds the
+//! aggregate, not any single weight: one flow's weight may sit far
+//! below it next to a normal competitor — the serving QoS layer
+//! ([`crate::serve::qos`]) can produce extreme priority ratios — and
+//! that flow is then *starved* (rate ≈ 0, completion at
+//! [`SimTime::NEVER`] in the all-sub-epsilon corner), never NaN; see
+//! the `sub_epsilon_weight_starves_without_nan` test.
 
 use super::clock::SimTime;
 use super::resource::{ResourceId, ResourcePool};
@@ -529,6 +546,42 @@ mod tests {
         assert!(t < SimTime::NEVER);
         assert_eq!(sim.active_ids(), vec![fd, fl]);
         assert_eq!(sim.route_of(fd).unwrap(), &[dead]);
+    }
+
+    /// One tenant's weight driven vanishingly small relative to the
+    /// others (extreme serving-QoS priority ratios) must starve the
+    /// flow — near-zero finite rate, later completion — never produce
+    /// a NaN rate. `WEIGHT_EPS` only zeroes a resource's *aggregate*
+    /// demand, so a sub-epsilon weight beside a normal one still
+    /// prices finitely.
+    #[test]
+    fn sub_epsilon_weight_starves_without_nan() {
+        // 1e-30 ≪ WEIGHT_EPS beside a unit weight: aggregate ≈ 1.0, λ
+        // finite, tiny flow's rate is weight·λ ≈ 1e-28 — starved but
+        // strictly finite; the big flow absorbs the whole link.
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let tiny = sim.add(vec![r], 1000, 1e-30);
+        let big = sim.add(vec![r], 1000, 1.0);
+        sim.recompute(&pool);
+        let rt = sim.rate(tiny).unwrap();
+        assert!(rt.is_finite() && rt >= 0.0 && rt < 1e-9, "tiny flow rate {rt}");
+        assert!((sim.rate(big).unwrap() - 100.0).abs() < 1e-6);
+        let (first, _) = sim.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(first, big);
+
+        // All-sub-epsilon aggregate: the resource has no effective
+        // demand, λ never goes finite, and the loop exits with every
+        // flow frozen at 0 — not 0/0 = NaN — so nothing ever completes.
+        let (pool, r) = pool1(100.0);
+        let mut sim = FlowSim::new();
+        let a = sim.add(vec![r], 1000, 1e-300);
+        let b = sim.add(vec![r], 1000, 1e-300);
+        sim.recompute(&pool);
+        assert_eq!(sim.rate(a).unwrap(), 0.0);
+        assert_eq!(sim.rate(b).unwrap(), 0.0);
+        let (_, t) = sim.next_completion(SimTime::ZERO).unwrap();
+        assert_eq!(t, SimTime::NEVER);
     }
 
     #[test]

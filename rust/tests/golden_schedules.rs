@@ -294,6 +294,7 @@ fn golden_tree_allreduce_traces() {
                 bytes: msg,
                 model,
             }],
+            weight: 1.0,
         };
         simulate(&topo, &spec, Calibration::h800().reduce_bps).unwrap()
     };

@@ -48,6 +48,7 @@ fn fixed_time(topo: &Topology, kind: CollectiveKind, n: usize, msg: u64, algo: A
             bytes: msg,
             model: nv_model(topo, kind, n),
         }],
+        weight: 1.0,
     };
     simulate(topo, &spec, Calibration::h800().reduce_bps)
         .unwrap()
