@@ -601,16 +601,20 @@ pub struct ScaleRow {
 /// both the simulated answer and the cost of producing it: graph size
 /// under Auto pricing, cold-pricing wall-clock, and the compiled-plan
 /// cache hit that replaces it in steady state. Structural invariants
-/// (fold engages exactly at the Auto threshold on a healthy symmetric
-/// cluster; repeats hit the cache) are enforced on every run — `--smoke`
-/// just shortens the node list.
+/// (fold engages exactly at the `fold_min_nodes` Auto threshold on a
+/// healthy symmetric cluster — in the default *pipelined* lowering;
+/// repeats hit the cache) are enforced on every run. `smoke` shortens
+/// the node list and additionally gates that a one-NIC-degraded 64-node
+/// cluster still folds its healthy class with a sublinear task count.
 pub fn scale_sweep(
     preset: Preset,
     op: CollectiveKind,
     node_counts: &[usize],
     mib: u64,
+    fold_min_nodes: usize,
+    smoke: bool,
 ) -> Result<Vec<ScaleRow>> {
-    use crate::collectives::hierarchical::{PricingMode, FOLD_AUTO_MIN_NODES};
+    use crate::collectives::hierarchical::PricingMode;
     let msg = mib << 20;
     let mut rows = Vec::new();
     for &nn in node_counts {
@@ -618,13 +622,17 @@ pub fn scale_sweep(
         let nl = node_spec.n_gpus;
         // Structure: price once directly so the row records the graph
         // the device's solo path would build (folded flag, task count).
+        // Pipelining is explicit: the sweep's headline claim is that the
+        // *default* chunk-pipelined lowering folds at scale.
         let cluster = Cluster::build(&ClusterSpec::new(nn, node_spec));
         let rep = ClusterCollective::new(&cluster, Calibration::h800(), op, nl)
+            .with_pipeline(true)
             .with_pricing(PricingMode::Auto)
+            .with_fold_min_nodes(fold_min_nodes)
             .run(msg, &TierShares::new(Shares::nvlink_only(), nl), 4)?;
         anyhow::ensure!(
-            rep.folded == (nn >= FOLD_AUTO_MIN_NODES),
-            "{nn} nodes: Auto pricing folded={} — threshold regression",
+            rep.folded == (nn >= fold_min_nodes),
+            "{nn} nodes: Auto pricing folded={} — pipelined fold threshold regression",
             rep.folded
         );
 
@@ -633,6 +641,7 @@ pub fn scale_sweep(
         // settles the lazy tuners, then the cache is emptied so the next
         // call is a pure cold compile+DES, and repeats must hit.
         let mut cfg = crate::comm::CommConfig::cluster(preset, nn, nl);
+        cfg.run.fold_min_nodes = fold_min_nodes;
         cfg.tune_msg_bytes = msg;
         let mut comm = crate::comm::Communicator::init(cfg)?;
         comm.time_collective(op, msg)?;
@@ -669,6 +678,44 @@ pub fn scale_sweep(
             hit_price_ms: hit_ms,
             hit_speedup: if hit_ms > 0.0 { cold_ms / hit_ms } else { f64::INFINITY },
         });
+    }
+    if smoke {
+        anyhow::ensure!(
+            rows.iter().any(|r| r.folded),
+            "smoke node list never crossed the fold threshold"
+        );
+        // Partial-symmetry gate: one degraded NIC must not collapse a
+        // 64-node sweep back to the exact O(nodes·chunks) graph — the
+        // healthy class folds, the straggler stripe is priced via its
+        // rate cap, and the task count stays sublinear vs the largest
+        // healthy folded row.
+        let node_spec = preset.spec();
+        let nl = node_spec.n_gpus;
+        let mut degraded = Cluster::build(&ClusterSpec::new(64, node_spec));
+        let bad = degraded.node(3).nic_up[1];
+        degraded.pool.scale_capacity(bad, 0.5);
+        let rep = ClusterCollective::new(&degraded, Calibration::h800(), op, nl)
+            .with_pipeline(true)
+            .with_pricing(PricingMode::Auto)
+            .with_fold_min_nodes(fold_min_nodes)
+            .run(msg, &TierShares::new(Shares::nvlink_only(), nl), 4)?;
+        anyhow::ensure!(
+            rep.folded,
+            "one-NIC-degraded 64-node cluster fell back to exact pricing"
+        );
+        let tasks_ref = rows
+            .iter()
+            .filter(|r| r.folded)
+            .map(|r| r.tasks)
+            .max()
+            .expect("a folded row exists");
+        anyhow::ensure!(
+            rep.tasks < 6 * tasks_ref,
+            "degraded 64-node fold not sublinear: {} tasks vs {} at the \
+             largest healthy folded row",
+            rep.tasks,
+            tasks_ref
+        );
     }
     Ok(rows)
 }
@@ -1236,6 +1283,33 @@ pub fn chaos_sweep(
             "smoke: regrow goodput {:.4} not above shrink-only {:.4}",
             grown.goodput_ratio(),
             shrunk.goodput_ratio()
+        );
+        // Sublinear-pricing timing gate: a chaos-degraded cluster (one
+        // NIC at half rate) must be *cheaper* to price folded than
+        // exact — partial-symmetry folding is what keeps the chaos
+        // loop's between-fault steps sublinear at scale.
+        use crate::collectives::hierarchical::PricingMode;
+        let mut degraded = Cluster::build(&ClusterSpec::new(16, preset.spec()));
+        let bad = degraded.node(1).nic_up[2];
+        degraded.pool.scale_capacity(bad, 0.5);
+        let price = |mode: PricingMode| -> Result<(bool, f64)> {
+            let t = std::time::Instant::now();
+            let rep = ClusterCollective::new(&degraded, Calibration::h800(), op, nl)
+                .with_pricing(mode)
+                .run(msg, &tiers0, 4)?;
+            Ok((rep.folded, t.elapsed().as_secs_f64() * 1e3))
+        };
+        let (folded_engaged, folded_ms) = price(PricingMode::Folded)?;
+        let (exact_folded, exact_ms) = price(PricingMode::Exact)?;
+        anyhow::ensure!(
+            folded_engaged && !exact_folded,
+            "smoke: degraded 16-node cluster did not fold its healthy class \
+             (folded={folded_engaged}, exact={exact_folded})"
+        );
+        anyhow::ensure!(
+            folded_ms < exact_ms,
+            "smoke: degraded folded pricing ({folded_ms:.2} ms) not cheaper \
+             than exact ({exact_ms:.2} ms)"
         );
     }
     policies

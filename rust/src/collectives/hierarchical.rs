@@ -113,6 +113,10 @@ pub struct ClusterCollective<'c> {
     /// the inter-phase stripe transfers; protocol/stripe resources are
     /// per-op private, so only *shared* lanes split by it.
     pub weight: f64,
+    /// Node count at which [`PricingMode::Auto`] starts folding
+    /// (default [`FOLD_AUTO_MIN_NODES`]; the `fold_min_nodes` run-config
+    /// key / `--fold-min-nodes` CLI flag land here).
+    pub fold_min_nodes: usize,
 }
 
 /// How [`ClusterCollective::run`] prices a multi-node collective.
@@ -184,9 +188,12 @@ pub struct HierReport {
     /// True when this pricing came from the symmetry-folded lowering
     /// (one representative rank group per tier, timings replicated
     /// analytically; `events`/`tasks` then count the *reduced* graph).
-    /// Always `false` for exact runs, the single-node degenerate case
-    /// and fault-injected runs ([`ClusterCollective::run_under_faults`]
-    /// never folds — a fault timeline is exactly a broken symmetry).
+    /// Always `false` for exact runs and the single-node degenerate
+    /// case. Fault-injected runs ([`ClusterCollective::run_under_faults`])
+    /// fold only on an *empty* fault timeline — a mid-flight rate event
+    /// is exactly a broken symmetry — while persistent NIC-leg
+    /// degradation folds through the partial-symmetry classes
+    /// ([`Cluster::fold_symmetry`]).
     pub folded: bool,
     /// Bytes routed over each *physical* resource, by name
     /// ([`crate::collectives::schedule::link_bytes`]) — the serve
@@ -251,6 +258,7 @@ impl<'c> ClusterCollective<'c> {
             algo: AlgoSpec::Fixed(Algo::Ring),
             pricing: PricingMode::default(),
             weight: 1.0,
+            fold_min_nodes: FOLD_AUTO_MIN_NODES,
         }
     }
 
@@ -281,13 +289,24 @@ impl<'c> ClusterCollective<'c> {
         self
     }
 
+    /// Set the [`PricingMode::Auto`] fold threshold (see the
+    /// `fold_min_nodes` field); clamped to ≥ 2 — folding needs at least
+    /// two nodes to have anything to fold.
+    pub fn with_fold_min_nodes(mut self, n: usize) -> Self {
+        self.fold_min_nodes = n.max(2);
+        self
+    }
+
     /// Symmetry folding is sound when every node group prices
-    /// identically: ≥ 2 identical nodes on one spine, capacities still at
-    /// their build-time values (no fault injection / degradation — see
-    /// [`Cluster::is_symmetric`]), and a node-symmetric operator.
-    /// Broadcast is root-asymmetric (the root node runs phase 1, the
-    /// others phase 3) and AllToAll has no hierarchical lowering, so both
-    /// always price exact.
+    /// identically *up to per-stripe NIC-leg degradation*: ≥ 2 nodes on
+    /// one spine whose only capacity deviations are NIC up/down legs at
+    /// or below nominal (see [`Cluster::fold_symmetry`] — the partial
+    /// symmetry the fold prices by capping the affected stripe's rate),
+    /// and a node-symmetric operator. Any other deviation (NVLink/PCIe
+    /// lanes, above-nominal capacities) still prices exact. Broadcast is
+    /// root-asymmetric (the root node runs phase 1, the others phase 3)
+    /// and AllToAll has no hierarchical lowering, so both always price
+    /// exact.
     pub fn fold_eligible(&self) -> bool {
         self.cluster.n_nodes() >= 2
             && matches!(
@@ -296,7 +315,7 @@ impl<'c> ClusterCollective<'c> {
                     | CollectiveKind::AllGather
                     | CollectiveKind::ReduceScatter
             )
-            && self.cluster.is_symmetric()
+            && self.cluster.fold_symmetry().is_some()
     }
 
     fn should_fold(&self) -> bool {
@@ -304,7 +323,7 @@ impl<'c> ClusterCollective<'c> {
             PricingMode::Exact => false,
             PricingMode::Folded => self.fold_eligible(),
             PricingMode::Auto => {
-                self.cluster.n_nodes() >= FOLD_AUTO_MIN_NODES && self.fold_eligible()
+                self.cluster.n_nodes() >= self.fold_min_nodes && self.fold_eligible()
             }
         }
     }
@@ -434,7 +453,11 @@ impl<'c> ClusterCollective<'c> {
             });
         }
         if self.should_fold() {
-            return self.run_folded(msg_bytes, tiers, elem_bytes);
+            // `None` = a live share routes over a dead NIC leg; price
+            // that stripe (and therefore the op) exact.
+            if let Some(rep) = self.run_folded(msg_bytes, tiers, elem_bytes)? {
+                return Ok(rep);
+            }
         }
         let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
         let tasks = compiled.graph.len();
@@ -477,13 +500,30 @@ impl<'c> ClusterCollective<'c> {
     /// closed-form flow evaluator ([`crate::sim::flow`]), embedded as
     /// per-stripe delays so spans/tags stay uniform. Callers reach this
     /// only through [`Self::run`] with [`Self::should_fold`] true.
+    /// Returns `Ok(None)` when a stripe with a live share routes over a
+    /// dead (zero-capacity) NIC leg — such a transfer never completes, so
+    /// the caller must price exact (where the fault machinery fails the
+    /// task instead of hanging).
     fn run_folded(
         &self,
         msg_bytes: u64,
         tiers: &TierShares,
         elem_bytes: u64,
-    ) -> Result<HierReport> {
+    ) -> Result<Option<HierReport>> {
         debug_assert!(self.fold_eligible());
+        let sym = self
+            .cluster
+            .fold_symmetry()
+            .expect("fold_eligible gates on fold_symmetry");
+        let payload = self.inter_payload(msg_bytes);
+        let live_dead = tiers
+            .inter
+            .to_extents(payload, elem_bytes)
+            .iter()
+            .any(|(sid, _, len)| *len > 0 && sym.stripe_rates[sid.0 as usize] <= 0.0);
+        if live_dead {
+            return Ok(None);
+        }
         let mut hg = HierGraph::folded(self);
         let (p1_range, p2_range) = match self.kind {
             CollectiveKind::AllReduce => {
@@ -512,7 +552,7 @@ impl<'c> ClusterCollective<'c> {
             .into_iter()
             .filter_map(|s| sched.tag_finish(&compiled.graph, s.tag()).map(|t| (s, t)))
             .collect();
-        Ok(HierReport {
+        Ok(Some(HierReport {
             kind: self.kind,
             msg_bytes,
             total: sched.makespan,
@@ -525,7 +565,7 @@ impl<'c> ClusterCollective<'c> {
             tasks,
             folded: true,
             link_bytes: Vec::new(),
-        })
+        }))
     }
 
     /// As [`Self::run`], executed under a fault timeline
@@ -534,9 +574,15 @@ impl<'c> ClusterCollective<'c> {
     /// outcome carries failure bookkeeping beside the usual report.
     ///
     /// With an **empty timeline this is exactly [`Self::run`]'s code
-    /// path** — `run_with_events` delegates to `Engine::run` — so a
-    /// zero-fault chaos schedule stays bit-identical to the fault-free
-    /// engine (pinned in `tests/prop_faults.rs` against the goldens).
+    /// path** — including symmetry folding when [`Self::should_fold`]
+    /// holds (the chaos loop's between-fault steps regain sublinear
+    /// pricing this way; persistent NIC degradation folds through the
+    /// partial-symmetry classes). Below the fold threshold
+    /// `run_with_events` delegates to `Engine::run`, so a zero-fault
+    /// chaos schedule stays bit-identical to the fault-free engine
+    /// (pinned in `tests/prop_faults.rs` against the goldens). A
+    /// *non-empty* timeline always prices exact: mid-flight rate events
+    /// break the symmetry the fold depends on.
     ///
     /// On a failed run the report's timings are still well-defined (a
     /// failed task "finishes" at its failure instant) but do **not**
@@ -554,6 +600,16 @@ impl<'c> ClusterCollective<'c> {
             self.cluster.n_nodes() >= 2,
             "fault-injected runs price multi-node clusters (n_nodes >= 2)"
         );
+        if events.is_empty() && self.should_fold() {
+            if let Some(report) = self.run_folded(msg_bytes, tiers, elem_bytes)? {
+                return Ok(FaultedHierRun {
+                    report,
+                    failed_tasks: 0,
+                    first_failure: None,
+                    pool: self.cluster.pool.clone(),
+                });
+            }
+        }
         let compiled = self.compile(msg_bytes, tiers, elem_bytes)?;
         let tasks = compiled.graph.len();
         let CompiledHier {
@@ -673,8 +729,15 @@ impl<'c> ClusterCollective<'c> {
         let nn = self.cluster.n_nodes();
         let payload = self.inter_payload(msg_bytes);
         let ext = inter.to_extents(payload, crate::dtype::natural_align(payload));
+        // A live share over a dead NIC leg can't fold (the stand-in
+        // transfer would never finish) — probe it exact.
+        let fold_ok = self.should_fold()
+            && self.cluster.fold_symmetry().is_some_and(|sym| {
+                !ext.iter()
+                    .any(|(sid, _, len)| *len > 0 && sym.stripe_rates[sid.0 as usize] <= 0.0)
+            });
         let mut hg;
-        if self.should_fold() {
+        if fold_ok {
             // Folded stripe probing: the stripe tuner hammers this in a
             // loop at every scale, so the representative ring matters
             // most right here (tuning cost was the O(nodes²) term).
@@ -1247,6 +1310,18 @@ impl<'c> ClusterCollective<'c> {
                     .iter()
                     .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
 
+        if pipeline
+            && hg.fold_flow_eligible(&inter_ext)
+            && flow_intra_ok(&intra_ext, rs_algos.iter().chain(&ag_algos))
+        {
+            // Pipelined-fold fast path: the whole three-phase chunk
+            // pipeline has a closed form (intra-RS chain → staged inter
+            // RS+AG chains → intra-AG ring), so no task graph at all.
+            return Ok(self.fold_flow_allreduce(
+                hg, &intra_ext, &inter_ext, &rs_models, &ag_models, base,
+            ));
+        }
+
         let (p1_bars, p1_maps) =
             self.phase1_reduce_scatter(hg, &intra_ext, &rs_models, &rs_algos, pipeline, 1);
         let p1_end = hg.graph.len();
@@ -1261,9 +1336,11 @@ impl<'c> ClusterCollective<'c> {
             let sub_sizes = ring::chunk_sizes(sub, hg.inter_model.chunk_bytes);
             if flow_ok {
                 // Closed-form: chunk-wavefront RS chain feeding the AG
-                // chain, at the stripe's private bottleneck rate.
-                let rs = hg.fold_flow_phase(stripe, sub, nn - 1, true, &[]);
-                let ag = hg.fold_flow_phase(stripe, sub, nn - 1, false, &rs);
+                // chain, at the stripe's private bottleneck rate — the
+                // AG half starts on the egress the RS half vacated.
+                let (rs, eg) =
+                    hg.fold_flow_phase(stripe, sub, nn - 1, true, &[], SimTime::ZERO);
+                let (ag, _) = hg.fold_flow_phase(stripe, sub, nn - 1, false, &rs, eg);
                 let dur = ag.into_iter().fold(SimTime::ZERO, SimTime::max);
                 let d = hg.graph.add_tagged(
                     TaskKind::Delay { duration: dur },
@@ -1362,8 +1439,17 @@ impl<'c> ClusterCollective<'c> {
             && !(inter_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk))
                 && intra_ext.iter().all(|(_, _, len)| single_chunk(*len, chunk)));
 
-        let root = hg.barrier(Vec::new());
         let stride = msg * nl;
+        if pipeline
+            && hg.fold_flow_eligible(&inter_ext)
+            && flow_intra_ok(&intra_ext, ag_algos.iter())
+        {
+            return Ok(self.fold_flow_allgather(
+                hg, &intra_ext, &inter_ext, &ag_models, msg, stride, base,
+            ));
+        }
+
+        let root = hg.barrier(Vec::new());
         let flow_ok = !pipeline && hg.fold_flow_eligible(&inter_ext);
         let mut p2_done: Vec<TaskId> = Vec::new();
         let mut p2_map = ChunkMap::new();
@@ -1372,7 +1458,8 @@ impl<'c> ClusterCollective<'c> {
             let tag = sid.tag();
             let sizes = ring::chunk_sizes(*len, hg.inter_model.chunk_bytes);
             if flow_ok {
-                let arr = hg.fold_flow_phase(stripe, *len, nn - 1, false, &[]);
+                let (arr, _) =
+                    hg.fold_flow_phase(stripe, *len, nn - 1, false, &[], SimTime::ZERO);
                 let dur = arr.into_iter().fold(SimTime::ZERO, SimTime::max);
                 let d = hg.graph.add_tagged(
                     TaskKind::Delay { duration: dur },
@@ -1451,6 +1538,15 @@ impl<'c> ClusterCollective<'c> {
                     .iter()
                     .all(|(_, _, len)| single_chunk(len.div_ceil(nn as u64), chunk)));
 
+        if pipeline
+            && hg.fold_flow_eligible(&inter_ext)
+            && flow_intra_ok(&intra_ext, rs_algos.iter())
+        {
+            return Ok(self.fold_flow_reduce_scatter(
+                hg, &intra_ext, &inter_ext, &rs_models, base,
+            ));
+        }
+
         let (p1_bars, p1_maps) =
             self.phase1_reduce_scatter(hg, &intra_ext, &rs_models, &rs_algos, pipeline, 1);
         let p1_end = hg.graph.len();
@@ -1461,7 +1557,8 @@ impl<'c> ClusterCollective<'c> {
             let tag = sid.tag();
             if flow_ok {
                 let sub = len.div_ceil(nn as u64);
-                let arr = hg.fold_flow_phase(stripe, sub, nn - 1, true, &[]);
+                let (arr, _) =
+                    hg.fold_flow_phase(stripe, sub, nn - 1, true, &[], SimTime::ZERO);
                 let dur = arr.into_iter().fold(SimTime::ZERO, SimTime::max);
                 hg.graph.add_tagged(
                     TaskKind::Delay { duration: dur },
@@ -1490,6 +1587,254 @@ impl<'c> ClusterCollective<'c> {
         }
         let p2_end = hg.graph.len();
         Ok((base..p1_end, p1_end..p2_end))
+    }
+
+    // -----------------------------------------------------------------
+    // Pipelined-fold flow path: when every intra phase is an NVLink ring
+    // and every stripe is uncontended, the whole chunk-pipelined
+    // three-phase graph has a closed form — per-phase FIFO chunk chains
+    // coupled through TimeMaps (the flow evaluator's ChunkMap). The
+    // graph shrinks to one tagged Delay per path extent / stripe, priced
+    // by absolute duration; O(paths + stripes) tasks independent of both
+    // node count AND chunk count.
+    // -----------------------------------------------------------------
+
+    /// Bottleneck rate of one representative NVLink ring hop: the
+    /// per-stream protocol cap ([`GraphBuilder`] proto resources carry
+    /// `model.rate_cap`) against node 0's lane capacities — uncontended,
+    /// since each ring rank sends on its own up-lane into its
+    /// successor's private down-lane.
+    fn fold_intra_chain_rate(&self, hg: &HierGraph<'_>, model: &PathModel) -> f64 {
+        let node0 = self.cluster.node(0);
+        flow::bottleneck_rate(
+            [
+                hg.pool.capacity(node0.nvlink_up[0]),
+                hg.pool.capacity(node0.nvlink_down[0]),
+            ],
+            model.rate_cap,
+        )
+    }
+
+    /// Closed-form phase 1 (representative intra ring reduce-scatter):
+    /// one FIFO chunk chain of `n_local − 1` hops per path extent,
+    /// emitted as a single tagged Delay. Returns the byte-range arrival
+    /// map of the *reduced* blocks — by symmetry every rank's chain is
+    /// identical, so rank r's owned block (at
+    /// `off + rs_owned_block(r)·block`) carries the same per-chunk
+    /// times. NVLink pays its combine inside the fitted B_eff: the
+    /// reduce cost rides the per-step gate, never a per-arrival delay
+    /// ([`GraphBuilder::send_block`]'s Nvlink arm).
+    fn fold_flow_phase1(
+        &self,
+        hg: &mut HierGraph<'_>,
+        intra_ext: &[(PathId, u64, u64)],
+        rs_models: &[(PathId, PathModel)],
+    ) -> flow::TimeMap {
+        let nl = self.n_local as u64;
+        let mut t1 = flow::TimeMap::new();
+        for (p, off, len) in intra_ext {
+            let model = model_for(rs_models, *p);
+            let block = len.div_ceil(nl);
+            let sizes = ring::chunk_sizes(block, model.chunk_bytes);
+            let spec = flow::ChainSpec {
+                steps: self.n_local - 1,
+                gate: model.step_latency + model.reduce_step_latency,
+                rate_bps: self.fold_intra_chain_rate(hg, &model),
+                reduce_bps: None,
+            };
+            let arrivals =
+                flow::chain_arrivals(&spec, &sizes, &vec![SimTime::ZERO; sizes.len()]);
+            for r in 0..self.n_local {
+                let blk = ring::rs_owned_block(r, self.n_local) as u64;
+                t1.insert_chunks(*off + blk * block, &sizes, &arrivals);
+            }
+            let fin = arrivals.into_iter().fold(SimTime::ZERO, SimTime::max);
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], p.tag());
+        }
+        t1
+    }
+
+    /// Pipelined-fold AllReduce: phase-1 chain → per stripe a staged
+    /// inter RS chain (ring step s's block becomes ready as phase 1
+    /// produces it) feeding the AG chain on the same egress → intra AG
+    /// ring with per-rank entry times.
+    fn fold_flow_allreduce(
+        &self,
+        hg: &mut HierGraph<'_>,
+        intra_ext: &[(PathId, u64, u64)],
+        inter_ext: &[(StripeId, u64, u64)],
+        rs_models: &[(PathId, PathModel)],
+        ag_models: &[(PathId, PathModel)],
+        base: usize,
+    ) -> (Range<usize>, Range<usize>) {
+        let nn = self.cluster.n_nodes();
+        let nl = self.n_local as u64;
+        let t1 = self.fold_flow_phase1(hg, intra_ext, rs_models);
+        let p1_end = hg.graph.len();
+
+        let mut t2 = flow::TimeMap::new();
+        for (sid, s_off, len) in inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            if *len == 0 {
+                hg.graph
+                    .add_tagged(TaskKind::Delay { duration: SimTime::ZERO }, vec![], tag);
+                continue;
+            }
+            let sub = len.div_ceil(nn as u64);
+            let sizes = ring::chunk_sizes(sub, hg.inter_model.chunk_bytes);
+            let ext: Vec<Vec<SimTime>> = (0..nn - 1)
+                .map(|s| {
+                    let blk = ring::rs_send_block(0, s, nn) as u64;
+                    t1.ready_for_chunks(*s_off + blk * sub, &sizes)
+                })
+                .collect();
+            let rs_spec = hg.fold_chain_spec(stripe, nn - 1, true);
+            let (rs_steps, eg) =
+                flow::staged_chain_steps_from(&rs_spec, &sizes, &ext, SimTime::ZERO);
+            let finals = rs_steps.into_iter().next_back().expect("nn >= 2");
+            let own = ring::rs_owned_block(0, nn) as u64;
+            t2.insert_chunks(*s_off + own * sub, &sizes, &finals);
+            let mut fin = finals.iter().copied().fold(SimTime::ZERO, SimTime::max);
+            // The AG half reuses the wire the RS half just vacated.
+            let ag_spec = hg.fold_chain_spec(stripe, nn - 1, false);
+            let (ag_steps, _) = flow::chain_steps_from(&ag_spec, &sizes, &finals, eg);
+            for (s, arr) in ag_steps.iter().enumerate() {
+                // AG step s delivers sub-block (nn − s) mod nn to the
+                // representative (the m = 0 case of the exact graph's
+                // attribution).
+                let blk = ((nn - s) % nn) as u64;
+                t2.insert_chunks(*s_off + blk * sub, &sizes, arr);
+                fin = arr.iter().copied().fold(fin, SimTime::max);
+            }
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], tag);
+        }
+        let p2_end = hg.graph.len();
+
+        for (p, off, len) in intra_ext {
+            let model = model_for(ag_models, *p);
+            let block = len.div_ceil(nl);
+            let sizes = ring::chunk_sizes(block, model.chunk_bytes);
+            let entry: Vec<Vec<SimTime>> = (0..nl)
+                .map(|r| t2.ready_for_chunks(*off + r * block, &sizes))
+                .collect();
+            let spec = flow::ChainSpec {
+                steps: 1, // ignored: the ring evaluator runs n_local − 1
+                gate: model.step_latency,
+                rate_bps: self.fold_intra_chain_rate(hg, &model),
+                reduce_bps: None,
+            };
+            let done = flow::ring_allgather_times(&spec, &sizes, &entry);
+            let fin = done.into_iter().fold(SimTime::ZERO, SimTime::max);
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], p.tag());
+        }
+        (base..p1_end, p1_end..p2_end)
+    }
+
+    /// Pipelined-fold AllGather: per stripe a plain inter chain whose
+    /// step-s arrivals land at source node (nn − 1 − s)'s group slot →
+    /// intra AG ring over per-rank gathered-group entry times.
+    #[allow(clippy::too_many_arguments)]
+    fn fold_flow_allgather(
+        &self,
+        hg: &mut HierGraph<'_>,
+        intra_ext: &[(PathId, u64, u64)],
+        inter_ext: &[(StripeId, u64, u64)],
+        ag_models: &[(PathId, PathModel)],
+        msg: u64,
+        stride: u64,
+        base: usize,
+    ) -> (Range<usize>, Range<usize>) {
+        let nn = self.cluster.n_nodes();
+        let mut t2 = flow::TimeMap::new();
+        for (sid, s_off, len) in inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            if *len == 0 {
+                hg.graph
+                    .add_tagged(TaskKind::Delay { duration: SimTime::ZERO }, vec![], tag);
+                continue;
+            }
+            let sizes = ring::chunk_sizes(*len, hg.inter_model.chunk_bytes);
+            let spec = hg.fold_chain_spec(stripe, nn - 1, false);
+            let steps =
+                flow::chain_steps(&spec, &sizes, &vec![SimTime::ZERO; sizes.len()]);
+            let mut fin = SimTime::ZERO;
+            for (s, arr) in steps.iter().enumerate() {
+                // Step s delivers node (nn − 1 − s)'s copy to the
+                // representative (the m = 0 case).
+                let src = ((nn - 1 - s) % nn) as u64;
+                t2.insert_chunks(src * stride + *s_off, &sizes, arr);
+                fin = arr.iter().copied().fold(fin, SimTime::max);
+            }
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], tag);
+        }
+        let p2_end = hg.graph.len();
+
+        for (p, off, len) in intra_ext {
+            let model = model_for(ag_models, *p);
+            let sizes = ring::chunk_sizes(*len, model.chunk_bytes);
+            let entry: Vec<Vec<SimTime>> = (0..self.n_local)
+                .map(|r| group_entry_times(&t2, r, *off, &sizes, msg, nn, stride))
+                .collect();
+            let spec = flow::ChainSpec {
+                steps: 1, // ignored: the ring evaluator runs n_local − 1
+                gate: model.step_latency,
+                rate_bps: self.fold_intra_chain_rate(hg, &model),
+                reduce_bps: None,
+            };
+            let done = flow::ring_allgather_times(&spec, &sizes, &entry);
+            let fin = done.into_iter().fold(SimTime::ZERO, SimTime::max);
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], p.tag());
+        }
+        (base..base, base..p2_end)
+    }
+
+    /// Pipelined-fold ReduceScatter: phase-1 chain → per stripe a staged
+    /// inter RS chain; outputs land scattered, no phase 3.
+    fn fold_flow_reduce_scatter(
+        &self,
+        hg: &mut HierGraph<'_>,
+        intra_ext: &[(PathId, u64, u64)],
+        inter_ext: &[(StripeId, u64, u64)],
+        rs_models: &[(PathId, PathModel)],
+        base: usize,
+    ) -> (Range<usize>, Range<usize>) {
+        let nn = self.cluster.n_nodes();
+        let t1 = self.fold_flow_phase1(hg, intra_ext, rs_models);
+        let p1_end = hg.graph.len();
+        for (sid, s_off, len) in inter_ext {
+            let stripe = sid.0 as usize;
+            let tag = sid.tag();
+            if *len == 0 {
+                hg.graph
+                    .add_tagged(TaskKind::Delay { duration: SimTime::ZERO }, vec![], tag);
+                continue;
+            }
+            let sub = len.div_ceil(nn as u64);
+            let sizes = ring::chunk_sizes(sub, hg.inter_model.chunk_bytes);
+            let ext: Vec<Vec<SimTime>> = (0..nn - 1)
+                .map(|s| {
+                    let blk = ring::rs_send_block(0, s, nn) as u64;
+                    t1.ready_for_chunks(*s_off + blk * sub, &sizes)
+                })
+                .collect();
+            let spec = hg.fold_chain_spec(stripe, nn - 1, true);
+            let finals = flow::staged_chain_steps(&spec, &sizes, &ext)
+                .into_iter()
+                .next_back()
+                .expect("nn >= 2");
+            let fin = finals.into_iter().fold(SimTime::ZERO, SimTime::max);
+            hg.graph
+                .add_tagged(TaskKind::Delay { duration: fin }, vec![], tag);
+        }
+        let p2_end = hg.graph.len();
+        (base..p1_end, p1_end..p2_end)
     }
 }
 
@@ -1539,6 +1884,66 @@ fn group_entry_deps(
         deps.sort_unstable();
         deps.dedup();
         out.push(deps);
+    }
+    out
+}
+
+/// The pipelined-fold flow path covers NVLink-ring intra phases only:
+/// the staged PCIe path double-buffers across slots and the
+/// halving-doubling family strides — neither is a FIFO chunk chain.
+fn flow_intra_ok<'a>(
+    intra_ext: &[(PathId, u64, u64)],
+    algos: impl Iterator<Item = &'a Algo>,
+) -> bool {
+    intra_ext.iter().all(|(p, _, _)| *p == PathId::Nvlink)
+        && algos.into_iter().all(|a| *a == Algo::Ring)
+}
+
+/// Model for one active path (parallel lookup into an `intra_models`
+/// result).
+fn model_for(models: &[(PathId, PathModel)], p: PathId) -> PathModel {
+    models
+        .iter()
+        .find(|(q, _)| *q == p)
+        .map(|(_, m)| *m)
+        .expect("model for every active path")
+}
+
+/// [`group_entry_deps`]' time-domain mirror for the pipelined-fold flow
+/// path: per-chunk readiness of rank `r`'s gathered group on the
+/// representative node (node 0 — its own copy is locally resident, so
+/// segment j = 0 contributes no wait).
+#[allow(clippy::too_many_arguments)]
+fn group_entry_times(
+    map: &flow::TimeMap,
+    r: usize,
+    off: u64,
+    sizes: &[u64],
+    msg: u64,
+    nn: usize,
+    stride: u64,
+) -> Vec<SimTime> {
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut pos = off;
+    for &sz in sizes {
+        let (lo, hi) = (pos, pos + sz);
+        pos = hi;
+        let mut t = SimTime::ZERO;
+        let mut x = lo;
+        while x < hi {
+            let j = (x / msg) as usize;
+            let seg_end = hi.min((j as u64 + 1) * msg);
+            if j != 0 && j < nn {
+                let base = j as u64 * stride + r as u64 * msg;
+                let y0 = x - j as u64 * msg;
+                let y1 = seg_end - j as u64 * msg;
+                for rt in map.ready_for_chunks(base + y0, &[y1 - y0]) {
+                    t = t.max(rt);
+                }
+            }
+            x = seg_end;
+        }
+        out.push(t);
     }
     out
 }
@@ -1699,6 +2104,14 @@ struct HierGraph<'c> {
     fold_routes: Option<Vec<Vec<ResourceId>>>,
     /// The scaled spine-share resource of the folded pool.
     fold_spine: Option<ResourceId>,
+    /// Partial-symmetry folding: per-stripe live rate cap from
+    /// [`Cluster::fold_symmetry`] (`f64::INFINITY` for pristine
+    /// stripes). The folded pool rebuilds node 0 at *nominal* caps, so a
+    /// degraded NIC leg anywhere in the cluster is priced by capping the
+    /// stand-in stripe's flows instead — the folded ring runs at the
+    /// slowest class member's pace, exactly like the exact graph's
+    /// slowest-node-paced ring.
+    fold_rate_caps: Option<Vec<f64>>,
     /// Fair-share weight for every Transfer this lowering emits
     /// (copied from [`ClusterCollective::weight`]).
     weight: f64,
@@ -1744,6 +2157,7 @@ impl<'c> HierGraph<'c> {
             reduce_bps: cc.calib.reduce_bps,
             fold_routes: None,
             fold_spine: None,
+            fold_rate_caps: None,
             weight: cc.weight,
         }
     }
@@ -1797,8 +2211,22 @@ impl<'c> HierGraph<'c> {
             reduce_bps: cc.calib.reduce_bps,
             fold_routes: Some(fold_routes),
             fold_spine: Some(fold_spine),
+            fold_rate_caps: Some(
+                cc.cluster
+                    .fold_symmetry()
+                    .expect("folded pricing requires fold symmetry")
+                    .stripe_rates,
+            ),
             weight: cc.weight,
         }
+    }
+
+    /// Per-stripe live rate cap of the folded stand-in ring
+    /// (`f64::INFINITY` on exact graphs and pristine stripes).
+    fn fold_rate_cap(&self, stripe: usize) -> f64 {
+        self.fold_rate_caps
+            .as_ref()
+            .map_or(f64::INFINITY, |c| c[stripe])
     }
 
     fn barrier(&mut self, deps: Vec<TaskId>) -> TaskId {
@@ -1889,7 +2317,10 @@ impl<'c> HierGraph<'c> {
                     route,
                     weight: self.weight,
                     latency: SimTime::ZERO,
-                    rate_cap: f64::INFINITY,
+                    // Partial-symmetry folding: the stand-in route is
+                    // nominal, so the degraded class member's pace lands
+                    // as a per-flow cap.
+                    rate_cap: self.fold_rate_cap(stripe),
                 },
                 deps,
                 tag,
@@ -1923,7 +2354,7 @@ impl<'c> HierGraph<'c> {
                 .iter()
                 .filter(|id| **id != spine)
                 .map(|id| self.pool.capacity(*id)),
-            self.inter_model.rate_cap,
+            self.inter_model.rate_cap.min(self.fold_rate_cap(stripe)),
         )
     }
 
@@ -1946,23 +2377,17 @@ impl<'c> HierGraph<'c> {
             return false;
         }
         let fair = self.pool.capacity(spine) / active.len() as f64;
-        active.iter().all(|&s| self.fold_stripe_rate(s) <= fair)
+        active.iter().all(|&s| {
+            let r = self.fold_stripe_rate(s);
+            // A dead stripe (rate 0) has no closed form — and no DES
+            // price either; run_folded falls back to exact before here.
+            r > 0.0 && r <= fair
+        })
     }
 
-    /// Price one folded ring phase on `stripe` as a closed-form chunk
-    /// chain: `steps` hops over the stripe's private bottleneck rate,
-    /// with the same per-hop gate and reduce semantics as [`send_inter`].
-    /// `ready` carries per-chunk readiness from a previous chain (empty
-    /// slice ⇒ all chunks ready at phase start).
-    fn fold_flow_phase(
-        &self,
-        stripe: usize,
-        block: u64,
-        steps: usize,
-        reduce: bool,
-        ready: &[SimTime],
-    ) -> Vec<SimTime> {
-        let sizes = ring::chunk_sizes(block, self.inter_model.chunk_bytes);
+    /// [`flow::ChainSpec`] for `steps` ring hops on `stripe` with the
+    /// same per-hop gate and reduce semantics as [`send_inter`].
+    fn fold_chain_spec(&self, stripe: usize, steps: usize, reduce: bool) -> flow::ChainSpec {
         let gate = self.inter_model.step_latency
             + self.hop_latency
             + if reduce {
@@ -1970,12 +2395,32 @@ impl<'c> HierGraph<'c> {
             } else {
                 SimTime::ZERO
             };
-        let spec = flow::ChainSpec {
+        flow::ChainSpec {
             steps,
             gate,
             rate_bps: self.fold_stripe_rate(stripe),
             reduce_bps: reduce.then_some(self.reduce_bps),
-        };
+        }
+    }
+
+    /// Price one folded ring phase on `stripe` as a closed-form chunk
+    /// chain: `steps` hops over the stripe's private bottleneck rate.
+    /// `ready` carries per-chunk readiness from a previous chain (empty
+    /// slice ⇒ all chunks ready at phase start) and `egress0` the time
+    /// the stripe's shared egress goes idle (back-to-back phases on one
+    /// stripe reuse the same wire). Returns the final arrivals plus the
+    /// new egress-idle time.
+    fn fold_flow_phase(
+        &self,
+        stripe: usize,
+        block: u64,
+        steps: usize,
+        reduce: bool,
+        ready: &[SimTime],
+        egress0: SimTime,
+    ) -> (Vec<SimTime>, SimTime) {
+        let sizes = ring::chunk_sizes(block, self.inter_model.chunk_bytes);
+        let spec = self.fold_chain_spec(stripe, steps, reduce);
         let zeros;
         let ready = if ready.is_empty() {
             zeros = vec![SimTime::ZERO; sizes.len()];
@@ -1983,7 +2428,8 @@ impl<'c> HierGraph<'c> {
         } else {
             ready
         };
-        flow::chain_arrivals(&spec, &sizes, ready)
+        let (steps, egress) = flow::chain_steps_from(&spec, &sizes, ready, egress0);
+        (steps.into_iter().next_back().expect("steps >= 1"), egress)
     }
 
     /// Folded ring reduce-scatter on one stripe: nn−1 self-chained
@@ -2651,19 +3097,128 @@ mod tests {
         }
     }
 
-    /// Broken symmetry (a degraded NIC) must force the exact graph even
-    /// under `Folded`/`Auto` — the fold's one-representative premise no
-    /// longer holds.
+    /// Broken *non-NIC* symmetry (a degraded NVLink lane) must force the
+    /// exact graph even under `Folded`/`Auto` — per-stripe rate caps only
+    /// absorb NIC-leg deviations, so anything else voids the fold's
+    /// one-representative premise.
     #[test]
     fn fold_falls_back_on_broken_symmetry() {
         let mut c = cluster(2);
-        let bad = c.node(0).nic_up[2];
+        let bad = c.node(0).nvlink_up[2];
         c.pool.scale_capacity(bad, 0.25);
         let col = cc(&c, CollectiveKind::AllReduce).with_pricing(PricingMode::Folded);
-        assert!(!col.fold_eligible(), "asymmetric cluster priced as symmetric");
+        assert!(
+            !col.fold_eligible(),
+            "NVLink-degraded cluster priced as symmetric"
+        );
         let tiers = TierShares::new(Shares::nvlink_only(), 8);
         let rep = col.run(8 << 20, &tiers, 4).unwrap();
-        assert!(!rep.folded, "fold engaged on an asymmetric cluster");
+        assert!(!rep.folded, "fold engaged on an NVLink-degraded cluster");
+    }
+
+    /// Partial symmetry: a degraded NIC leg no longer breaks the fold —
+    /// the affected stripe is priced through its per-stripe rate cap,
+    /// within the usual 5% of the exact graph, in both lowerings, and
+    /// visibly slower than the healthy cluster.
+    #[test]
+    fn fold_prices_degraded_nic_within_tolerance() {
+        let mut c = cluster(4);
+        let bad = c.node(2).nic_up[3];
+        c.pool.scale_capacity(bad, 0.5);
+        let healthy = cluster(4);
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let msg = 32u64 << 20;
+        for pipeline in [true, false] {
+            let col = cc(&c, CollectiveKind::AllReduce)
+                .with_pipeline(pipeline)
+                .with_pricing(PricingMode::Folded);
+            assert!(col.fold_eligible(), "degraded NIC left the fold classes");
+            let folded = col.run(msg, &tiers, 4).unwrap();
+            assert!(
+                folded.folded,
+                "pipeline={pipeline}: degraded NIC broke the fold"
+            );
+            let exact = cc(&c, CollectiveKind::AllReduce)
+                .with_pipeline(pipeline)
+                .run(msg, &tiers, 4)
+                .unwrap();
+            let (e, f) = (exact.total.as_secs_f64(), folded.total.as_secs_f64());
+            assert!(
+                (e - f).abs() <= 0.05 * e,
+                "pipeline={pipeline}: folded {f} vs exact {e}"
+            );
+            let h = cc(&healthy, CollectiveKind::AllReduce)
+                .with_pipeline(pipeline)
+                .with_pricing(PricingMode::Folded)
+                .run(msg, &tiers, 4)
+                .unwrap();
+            assert!(
+                folded.total > h.total,
+                "pipeline={pipeline}: degraded fold {} not slower than healthy {}",
+                folded.total,
+                h.total
+            );
+        }
+    }
+
+    /// A *dead* NIC leg stays inside the fold classes, but a live share
+    /// routed over it can never finish — `run` silently prices that
+    /// combination exact, and folds again once the stripe is deactivated.
+    #[test]
+    fn fold_skips_dead_stripe_with_live_share() {
+        let mut c = cluster(2);
+        let bad = c.node(1).nic_up[5];
+        c.pool.scale_capacity(bad, 0.0);
+        let col = cc(&c, CollectiveKind::AllGather).with_pricing(PricingMode::Folded);
+        assert!(
+            col.fold_eligible(),
+            "dead NIC leg should stay inside the fold classes"
+        );
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        assert!(
+            col.run_folded(8 << 20, &tiers, 4).unwrap().is_none(),
+            "fold produced a price for traffic on a dead stripe"
+        );
+        let rerouted = tiers.without_stripe(StripeId(5)).unwrap();
+        let rep = col.run(8 << 20, &rerouted, 4).unwrap();
+        assert!(rep.folded, "healthy-class fold lost after stripe deactivation");
+    }
+
+    /// The Auto fold threshold is configurable — the `fold_min_nodes`
+    /// run-config key lands here through the builder (clamped ≥2).
+    #[test]
+    fn fold_threshold_is_configurable() {
+        let c = cluster(4);
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let rep = cc(&c, CollectiveKind::AllReduce)
+            .with_pricing(PricingMode::Auto)
+            .with_fold_min_nodes(4)
+            .run(8 << 20, &tiers, 4)
+            .unwrap();
+        assert!(rep.folded, "lowered threshold did not fold at 4 nodes");
+        let rep = cc(&c, CollectiveKind::AllReduce)
+            .with_pricing(PricingMode::Auto)
+            .with_fold_min_nodes(5)
+            .run(8 << 20, &tiers, 4)
+            .unwrap();
+        assert!(!rep.folded, "4-node cluster folded below a 5-node threshold");
+    }
+
+    /// An empty fault timeline takes `run_under_faults` through the fold:
+    /// the chaos loop's between-fault steps price sublinearly, and the
+    /// answer is bit-identical to the plain folded run.
+    #[test]
+    fn empty_timeline_faulted_run_folds() {
+        let c = cluster(4);
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let col = cc(&c, CollectiveKind::AllReduce)
+            .with_pricing(PricingMode::Auto)
+            .with_fold_min_nodes(4);
+        let run = col.run_under_faults(8 << 20, &tiers, 4, &[]).unwrap();
+        assert_eq!(run.failed_tasks, 0);
+        assert!(run.report.folded, "empty-timeline faulted run did not fold");
+        let rep = col.run(8 << 20, &tiers, 4).unwrap();
+        assert_eq!(run.report.total, rep.total);
     }
 
     /// `Auto` pins small clusters to the exact graph and folds at scale.

@@ -280,6 +280,7 @@ impl Communicator {
             topo.clone(),
             cluster.clone(),
             cfg.run.calibration(),
+            cfg.run.fold_min_nodes,
         ));
         Self::init_parts(cfg, topo, cluster, device)
     }
@@ -451,6 +452,7 @@ impl Communicator {
         .with_pipeline(self.cfg.run.pipeline_phases)
         .with_algo(self.cfg.run.algo)
         .with_pricing(PricingMode::Auto)
+        .with_fold_min_nodes(self.cfg.run.fold_min_nodes)
     }
 
     /// Ensure the (operator, size class) has been through Algorithm 1

@@ -15,10 +15,15 @@
 //! `Communicator::wait_op`), an algorithm re-selection, a fault-driven
 //! capacity mutation / re-lowering — must call [`PlanCache::invalidate`].
 //! The cache is epoch-stamped: invalidation bumps the epoch, which is
-//! part of every key, so stale entries simply stop matching (and are
-//! swept out when the map next fills). Contended batch pricing
-//! (`price_batch`) never consults the cache — a fused graph's timing
-//! depends on what else is in flight.
+//! part of every key, so stale entries simply stop matching (and age out
+//! under LRU pressure). As a second, capacity-shaped line of defense the
+//! key also carries the cluster's symmetry signature
+//! ([`crate::topology::cluster::Cluster::symmetry_signature`]): a fault
+//! or repair that mutates link capacities re-keys every plan even if an
+//! invalidation call is missed, and a death→repair round trip that
+//! restores the exact capacities is allowed to re-hit the pre-fault
+//! entries. Contended batch pricing (`price_batch`) never consults the
+//! cache — a fused graph's timing depends on what else is in flight.
 
 use super::stream::{CollectivePlan, PlanShape};
 use super::CollectiveReport;
@@ -95,9 +100,14 @@ fn push_shares<K: ShareKey>(key: &mut Vec<u64>, shares: &Shares<K>, tag: impl Fn
 }
 
 impl PlanKey {
-    pub(crate) fn of(plan: &CollectivePlan, epoch: u64) -> Self {
+    /// `sig` is the cluster's capacity fingerprint
+    /// (`Cluster::symmetry_signature()`, or 0 for flat single-node
+    /// devices with no cluster) — it re-keys every plan across
+    /// fault/repair capacity mutations.
+    pub(crate) fn of(plan: &CollectivePlan, epoch: u64, sig: u64) -> Self {
         let mut key = vec![
             epoch,
+            sig,
             kind_code(plan.kind),
             plan.msg_bytes,
             plan.elem_bytes,
@@ -135,37 +145,52 @@ impl PlanKey {
     }
 }
 
-/// Hit/miss/invalidation counters, for the scale harness and tests.
+/// Hit/miss/invalidation/eviction counters, for the scale harness and
+/// tests.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub invalidations: u64,
+    /// Single entries dropped by LRU pressure (never whole-map sweeps).
+    pub evictions: u64,
     pub entries: usize,
 }
 
-/// Entries beyond this sweep the map (stale epochs dominate a full map;
-/// steady-state training loops hold a handful of live keys).
+/// Capacity bound: past this the least-recently-used entry is evicted.
+/// Steady-state training loops hold a handful of live keys; a serve
+/// workload cycling through >256 distinct plans keeps its hot set
+/// instead of losing everything on each overflow.
 const MAX_ENTRIES: usize = 256;
 
 /// The device-wide compiled-plan cache. Lives in its own `Mutex` beside
 /// — never inside — `DeviceState`: `flush` prices solo ops while holding
 /// the state lock, so nesting the cache there would deadlock.
+///
+/// Eviction is LRU via a monotone use-tick per entry: `get` hits and
+/// `put` inserts stamp the current tick; insertion past [`MAX_ENTRIES`]
+/// drops the minimum-tick entry. The linear min-scan is O(256) against a
+/// full compile+DES saved per hit — noise.
 #[derive(Debug, Default)]
 pub(crate) struct PlanCache {
-    map: HashMap<PlanKey, PricedSolo>,
+    map: HashMap<PlanKey, (u64, PricedSolo)>,
     epoch: u64,
+    tick: u64,
     hits: u64,
     misses: u64,
     invalidations: u64,
+    evictions: u64,
 }
 
 impl PlanCache {
-    /// Cached pricing for `plan` under the current epoch, if any.
-    pub(crate) fn get(&mut self, plan: &CollectivePlan) -> Option<PricedSolo> {
-        let key = PlanKey::of(plan, self.epoch);
-        match self.map.get(&key) {
-            Some(v) => {
+    /// Cached pricing for `plan` under the current epoch and cluster
+    /// capacity signature, if any. A hit refreshes the entry's LRU tick.
+    pub(crate) fn get(&mut self, plan: &CollectivePlan, sig: u64) -> Option<PricedSolo> {
+        let key = PlanKey::of(plan, self.epoch, sig);
+        self.tick += 1;
+        match self.map.get_mut(&key) {
+            Some((used, v)) => {
+                *used = self.tick;
                 self.hits += 1;
                 Some(v.clone())
             }
@@ -176,12 +201,23 @@ impl PlanCache {
         }
     }
 
-    /// Record a cold pricing under the current epoch.
-    pub(crate) fn put(&mut self, plan: &CollectivePlan, pricing: PricedSolo) {
-        if self.map.len() >= MAX_ENTRIES {
-            self.map.clear();
+    /// Record a cold pricing under the current epoch and signature,
+    /// evicting the least-recently-used entry if the cache is full.
+    pub(crate) fn put(&mut self, plan: &CollectivePlan, sig: u64, pricing: PricedSolo) {
+        let key = PlanKey::of(plan, self.epoch, sig);
+        if self.map.len() >= MAX_ENTRIES && !self.map.contains_key(&key) {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (used, _))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+                self.evictions += 1;
+            }
         }
-        self.map.insert(PlanKey::of(plan, self.epoch), pricing);
+        self.tick += 1;
+        self.map.insert(key, (self.tick, pricing));
     }
 
     /// Drop every cached pricing: the world changed out from under the
@@ -197,6 +233,7 @@ impl PlanCache {
             hits: self.hits,
             misses: self.misses,
             invalidations: self.invalidations,
+            evictions: self.evictions,
             entries: self.map.len(),
         }
     }
@@ -222,38 +259,104 @@ mod tests {
         }
     }
 
+    fn dummy_pricing() -> PricedSolo {
+        PricedSolo {
+            report: CollectiveReport {
+                kind: CollectiveKind::AllReduce,
+                msg_bytes: 0,
+                sim: crate::collectives::multipath::RunReport {
+                    outcome: crate::collectives::schedule::SimOutcome {
+                        total: SimTime::ZERO,
+                        per_path: Vec::new(),
+                        events: 0,
+                        tasks: 0,
+                    },
+                    msg_bytes: 0,
+                    kind: CollectiveKind::AllReduce,
+                },
+                shares: Shares::nvlink_only(),
+                adjusted: None,
+                tiers: None,
+            },
+            intra_obs: Vec::new(),
+            inter_obs: Vec::new(),
+            link_bytes: Vec::new(),
+        }
+    }
+
     #[test]
-    fn keys_separate_plans_and_epochs() {
-        let a = PlanKey::of(&hier_plan(1 << 20), 0);
-        let same = PlanKey::of(&hier_plan(1 << 20), 0);
-        let other_msg = PlanKey::of(&hier_plan(2 << 20), 0);
-        let other_epoch = PlanKey::of(&hier_plan(1 << 20), 1);
+    fn keys_separate_plans_epochs_and_signatures() {
+        let a = PlanKey::of(&hier_plan(1 << 20), 0, 7);
+        let same = PlanKey::of(&hier_plan(1 << 20), 0, 7);
+        let other_msg = PlanKey::of(&hier_plan(2 << 20), 0, 7);
+        let other_epoch = PlanKey::of(&hier_plan(1 << 20), 1, 7);
+        let other_sig = PlanKey::of(&hier_plan(1 << 20), 0, 8);
         assert_eq!(a, same);
         assert_ne!(a, other_msg);
         assert_ne!(a, other_epoch);
+        assert_ne!(a, other_sig, "capacity signature must be part of the key");
     }
 
     #[test]
     fn shares_changes_change_the_key() {
         let mut p = hier_plan(1 << 20);
-        let a = PlanKey::of(&p, 0);
+        let a = PlanKey::of(&p, 0, 0);
         if let PlanShape::Hier { tiers, .. } = &mut p.shape {
             *tiers = TierShares::new(
                 Shares::from_pcts(&[(PathId::Nvlink, 90.0), (PathId::Pcie, 10.0)]),
                 8,
             );
         }
-        assert_ne!(a, PlanKey::of(&p, 0), "share state must be part of the key");
+        assert_ne!(
+            a,
+            PlanKey::of(&p, 0, 0),
+            "share state must be part of the key"
+        );
     }
 
     #[test]
     fn invalidation_bumps_epoch_and_clears() {
         let mut c = PlanCache::default();
-        assert!(c.get(&hier_plan(1 << 20)).is_none());
+        assert!(c.get(&hier_plan(1 << 20), 0).is_none());
         assert_eq!(c.stats().misses, 1);
         c.invalidate();
         let s = c.stats();
         assert_eq!(s.invalidations, 1);
         assert_eq!(s.entries, 0);
+    }
+
+    #[test]
+    fn signature_change_misses_then_rehits_on_restore() {
+        let mut c = PlanCache::default();
+        let p = hier_plan(1 << 20);
+        c.put(&p, 11, dummy_pricing());
+        assert!(c.get(&p, 11).is_some());
+        // Fault mutates capacities → new signature → miss, no sweep.
+        assert!(c.get(&p, 12).is_none());
+        // Repair restores the exact capacities → original entry re-hits.
+        assert!(c.get(&p, 11).is_some());
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    #[test]
+    fn overflow_evicts_lru_not_everything() {
+        let mut c = PlanCache::default();
+        for i in 0..MAX_ENTRIES as u64 {
+            c.put(&hier_plan((i + 1) << 10), 0, dummy_pricing());
+        }
+        assert_eq!(c.stats().entries, MAX_ENTRIES);
+        // Touch the oldest entry so it becomes most-recently-used.
+        assert!(c.get(&hier_plan(1 << 10), 0).is_some());
+        // Overflow: the LRU victim is now plan 2, not plan 1 or the map.
+        c.put(&hier_plan((MAX_ENTRIES as u64 + 1) << 10), 0, dummy_pricing());
+        let s = c.stats();
+        assert_eq!(s.entries, MAX_ENTRIES, "overflow must not sweep the map");
+        assert_eq!(s.evictions, 1);
+        assert!(c.get(&hier_plan(1 << 10), 0).is_some(), "hot entry evicted");
+        assert!(c.get(&hier_plan(2 << 10), 0).is_none(), "LRU entry kept");
+        // Re-inserting an existing key at capacity evicts nothing.
+        c.put(&hier_plan(1 << 10), 0, dummy_pricing());
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().entries, MAX_ENTRIES);
     }
 }

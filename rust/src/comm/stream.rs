@@ -293,6 +293,9 @@ pub struct SimDevice {
     topo: Topology,
     cluster: Cluster,
     calib: Calibration,
+    /// Node count at which `Auto` pricing starts symmetry-folding solo
+    /// hierarchical plans (`RunConfig::fold_min_nodes`).
+    fold_min_nodes: usize,
     state: Mutex<DeviceState>,
     /// Compiled-plan cache for solo pricings. Its own lock, *never*
     /// nested inside `state`: `flush` prices while holding the state
@@ -301,12 +304,18 @@ pub struct SimDevice {
 }
 
 impl SimDevice {
-    pub(crate) fn new(topo: Topology, cluster: Cluster, calib: Calibration) -> Self {
+    pub(crate) fn new(
+        topo: Topology,
+        cluster: Cluster,
+        calib: Calibration,
+        fold_min_nodes: usize,
+    ) -> Self {
         SimDevice {
             tag: NEXT_DEVICE_TAG.fetch_add(1, Ordering::Relaxed),
             topo,
             cluster,
             calib,
+            fold_min_nodes,
             state: Mutex::new(DeviceState {
                 now: SimTime::ZERO,
                 next_op: 0,
@@ -630,11 +639,15 @@ impl SimDevice {
     /// pricing is deterministic, so repeats come out of the
     /// compiled-plan cache bit-identically; cold pricings populate it.
     pub(crate) fn price_plan_solo(&self, plan: &CollectivePlan) -> Result<PricedSolo> {
-        if let Some(hit) = self.plan_cache().get(plan) {
+        // The cluster's capacity fingerprint re-keys every plan across
+        // fault/repair mutations — even one that slipped past an
+        // `invalidate_plans` call.
+        let sig = self.cluster.symmetry_signature();
+        if let Some(hit) = self.plan_cache().get(plan, sig) {
             return Ok(hit);
         }
         let priced = self.price_plan_cold(plan)?;
-        self.plan_cache().put(plan, priced.clone());
+        self.plan_cache().put(plan, sig, priced.clone());
         Ok(priced)
     }
 
@@ -684,6 +697,7 @@ impl SimDevice {
                 .with_pipeline(*pipeline)
                 .with_algo(*algo)
                 .with_pricing(PricingMode::Auto)
+                .with_fold_min_nodes(self.fold_min_nodes)
                 .with_weight(*weight);
                 let hier = cc.run(plan.msg_bytes, tiers, plan.elem_bytes)?;
                 // Repackage behind the stable RunReport surface, exactly

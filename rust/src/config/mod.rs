@@ -168,6 +168,14 @@ pub struct RunConfig {
     ///
     /// [`AlgoTable`]: crate::collectives::algo::AlgoTable
     pub algo: AlgoSpec,
+    /// Node count at which `Auto` pricing starts symmetry-folding
+    /// hierarchical lowerings (`fold_min_nodes` TOML key /
+    /// `--fold-min-nodes`; default
+    /// [`FOLD_AUTO_MIN_NODES`](crate::collectives::hierarchical::FOLD_AUTO_MIN_NODES),
+    /// must be ≥ 2). Below it every run prices the exact per-chunk
+    /// graph; lower it to fold small clusters, raise it to force exact
+    /// pricing further out.
+    pub fold_min_nodes: usize,
     /// Effective (MFU-discounted) per-GPU compute throughput in TFLOPS,
     /// used to price simulated [`ComputeOp`]s — the backward-pass chunks
     /// the trainer overlaps with gradient collectives on the stream API.
@@ -212,6 +220,7 @@ impl RunConfig {
             spine_oversub: 1.0,
             pipeline_phases: true,
             algo: AlgoSpec::Auto,
+            fold_min_nodes: crate::collectives::hierarchical::FOLD_AUTO_MIN_NODES,
             gpu_tflops: default_gpu_tflops(),
             balancer: BalancerConfig::default(),
             node: None,
@@ -272,7 +281,8 @@ impl RunConfig {
         let doc = KvDoc::parse(text)?;
         const KNOWN: &[&str] = &[
             "preset", "n_gpus", "n_nodes", "spine_oversub", "pipeline_phases",
-            "algo", "gpu_tflops", "disable_rdma", "disable_pcie", "seed",
+            "algo", "fold_min_nodes", "gpu_tflops", "disable_rdma",
+            "disable_pcie", "seed",
             "balancer.initial_step_pct", "balancer.convergence_threshold",
             "balancer.stability_required", "balancer.max_iterations",
             "balancer.window", "balancer.runtime_threshold",
@@ -339,6 +349,10 @@ impl RunConfig {
             spine_oversub: doc.f64_or("spine_oversub", 1.0),
             pipeline_phases: doc.bool_or("pipeline_phases", true),
             algo: doc.str_or("algo", "auto").parse()?,
+            fold_min_nodes: doc.usize_or(
+                "fold_min_nodes",
+                crate::collectives::hierarchical::FOLD_AUTO_MIN_NODES,
+            ),
             gpu_tflops: doc.f64_or("gpu_tflops", default_gpu_tflops()),
             balancer,
             node: None,
@@ -359,6 +373,7 @@ impl RunConfig {
         doc.set("spine_oversub", Value::Float(self.spine_oversub));
         doc.set("pipeline_phases", Value::Bool(self.pipeline_phases));
         doc.set("algo", Value::Str(self.algo.to_string()));
+        doc.set("fold_min_nodes", Value::Int(self.fold_min_nodes as i64));
         doc.set("gpu_tflops", Value::Float(self.gpu_tflops));
         doc.set("disable_rdma", Value::Bool(self.disable_rdma));
         doc.set("disable_pcie", Value::Bool(self.disable_pcie));
@@ -424,6 +439,11 @@ impl RunConfig {
         anyhow::ensure!(
             self.spine_oversub >= 1.0 && self.spine_oversub.is_finite(),
             "spine_oversub must be ≥ 1"
+        );
+        anyhow::ensure!(
+            self.fold_min_nodes >= 2,
+            "fold_min_nodes must be ≥ 2 (folding a single node is meaningless), got {}",
+            self.fold_min_nodes
         );
         anyhow::ensure!(
             self.gpu_tflops > 0.0 && self.gpu_tflops.is_finite(),
@@ -589,6 +609,25 @@ mod tests {
     #[test]
     fn unknown_key_rejected() {
         assert!(RunConfig::from_toml_str("prest = \"h800\"").is_err());
+    }
+
+    #[test]
+    fn fold_min_nodes_roundtrips_and_validates() {
+        use crate::collectives::hierarchical::FOLD_AUTO_MIN_NODES;
+        let mut cfg = RunConfig::cluster(Preset::H800, 4, 8);
+        cfg.fold_min_nodes = 4;
+        cfg.validate().unwrap();
+        let back = RunConfig::from_toml_str(&cfg.to_toml().unwrap()).unwrap();
+        assert_eq!(back.fold_min_nodes, 4, "fold_min_nodes did not roundtrip");
+        // Defaults to the Auto threshold when the key is absent.
+        assert_eq!(
+            RunConfig::from_toml_str("preset = \"h800\"").unwrap().fold_min_nodes,
+            FOLD_AUTO_MIN_NODES
+        );
+        // Folding one node is meaningless.
+        let mut bad = RunConfig::new(Preset::H800, 8);
+        bad.fold_min_nodes = 1;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

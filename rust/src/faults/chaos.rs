@@ -40,7 +40,7 @@ use super::spec::{timeline_events_relabeled, FaultSpec, InjectedFault, NodeRelab
 use crate::balancer::shares::Shares;
 use crate::balancer::tier::TierShares;
 use crate::balancer::RuntimeBalancer;
-use crate::collectives::hierarchical::ClusterCollective;
+use crate::collectives::hierarchical::{ClusterCollective, PricingMode};
 use crate::collectives::CollectiveKind;
 use crate::config::BalancerConfig;
 use crate::links::calib::Calibration;
@@ -398,8 +398,13 @@ fn run_chaos_impl(
     let tiers0 = TierShares::new(Shares::nvlink_only(), nl);
     // Fault-free reference step (also the zero-fault bit-identity anchor:
     // with an empty timeline every loop step takes exactly this path).
+    // Auto pricing: exact per-chunk graphs below the fold threshold
+    // (bit-identical to the pre-fold chaos loop at smoke scale),
+    // partial-symmetry-folded at scale so between-fault steps — and the
+    // fault-free reference — stay sublinear on big clusters.
     let t0 = match &workload {
         Workload::Collective => ClusterCollective::new(cluster, calib.clone(), kind, nl)
+            .with_pricing(PricingMode::Auto)
             .run(msg_bytes, &tiers0, 4)?
             .total,
         Workload::Trainer(spec) => {
@@ -517,7 +522,8 @@ fn run_chaos_impl(
 
         let (ok, dt, first_failure, inter_times) = {
             let active: &Cluster = shrunk.as_ref().unwrap_or(cluster);
-            let cc = ClusterCollective::new(active, calib.clone(), kind, nl);
+            let cc = ClusterCollective::new(active, calib.clone(), kind, nl)
+                .with_pricing(PricingMode::Auto);
             let events = timeline_events_relabeled(timeline, &active.pool, now, &relabel);
             match &workload {
                 Workload::Collective => {

@@ -59,9 +59,12 @@ COMMANDS:
           it), and `chaos` injects a seeded fault timeline (NIC deaths by
           default) into a training-step loop and compares recovery
           policies, and `scale` sweeps AllReduce to 1024 nodes under Auto
-          pricing (symmetry-folded graphs + compiled-plan cache; --nodes
-          pins one node count, --mib sets the message, --smoke runs the
-          short CI list with the structural asserts)
+          pricing (symmetry-folded graphs — pipelined included — plus
+          the compiled-plan cache; --nodes pins one node count, --mib
+          sets the message, --fold-min-nodes moves the Auto fold
+          threshold (default 16, ≥ 2), --smoke runs the short CI list
+          with the structural asserts plus the one-NIC-degraded
+          partial-symmetry fold gate)
           [chaos only: --mtbf <s> --mttr <s> --policy reroute|relower|ckpt
            --steps <k> --mib <size> --smoke --trainer --no-regrow]
           --smoke replays a fixed deterministic two-fault timeline plus a
@@ -378,6 +381,10 @@ fn repro(
         "--policy only applies to the chaos target"
     );
     anyhow::ensure!(
+        what == "scale" || args.flag("fold-min-nodes").is_none(),
+        "--fold-min-nodes only applies to the scale target"
+    );
+    anyhow::ensure!(
         matches!(what, "chaos" | "ablation")
             || (args.flag("mtbf").is_none() && args.flag("mttr").is_none()),
         "--mtbf/--mttr only apply to the chaos and ablation targets"
@@ -583,13 +590,24 @@ fn repro(
             // hit) are asserted inside the sweep on every run; --smoke
             // just runs the short CI node list.
             let mib = args.u64_or("mib", 64)?;
+            let fold_min = args.usize_or(
+                "fold-min-nodes",
+                flexlink::collectives::hierarchical::FOLD_AUTO_MIN_NODES,
+            )?;
+            anyhow::ensure!(fold_min >= 2, "--fold-min-nodes must be ≥ 2, got {fold_min}");
             let node_counts: Vec<usize> = match (nodes, args.has("smoke")) {
                 (Some(n), _) => vec![n],
                 (None, true) => vec![1, 4, 16],
                 (None, false) => vec![1, 4, 16, 64, 256, 1024],
             };
-            let rows =
-                bh::scale_sweep(Preset::H800, CollectiveKind::AllReduce, &node_counts, mib)?;
+            let rows = bh::scale_sweep(
+                Preset::H800,
+                CollectiveKind::AllReduce,
+                &node_counts,
+                mib,
+                fold_min,
+                args.has("smoke"),
+            )?;
             print!("{}", bh::render_scale_sweep(&rows));
             if let Some(p) = csv_path {
                 let mut csv = Csv::new(&[

@@ -13,16 +13,30 @@
 //! with one gate latency (charged when the step's first chunk is ready),
 //! chunks serialize on the egress at the bottleneck rate, and a reducing
 //! step appends a per-chunk combine delay to each *arrival* (the next
-//! step's dependency) without holding the egress. Under those semantics
+//! step's dependency) without holding the egress. Because a folded chain
+//! routes every hop through ONE shared egress resource (the
+//! representative's protocol stand-in), the egress persists across hop
+//! boundaries: hop `s+1`'s first chunk cannot start before hop `s`'s last
+//! chunk has left the wire. Gate delays and combine delays gate
+//! *readiness* only — they never occupy the egress. Under those semantics
 //! [`chain_arrivals`] reproduces the DES's per-chunk finish times for an
 //! uncontended chain — pinned against [`super::Engine`] in the tests
 //! below and in `tests/prop_scale.rs`.
+//!
+//! Cross-phase pipelines (intra-RS → inter-ring → intra-AG at chunk
+//! granularity) compose from three pieces: [`staged_chain_steps`] threads
+//! per-hop external readiness (each inter step's send block becomes ready
+//! as phase 1 produces it), [`TimeMap`] carries per-byte-range readiness
+//! across phase boundaries the way `schedule::ChunkMap` carries task ids,
+//! and [`ring_allgather_times`] closes the final intra all-gather ring
+//! where per-rank entry times differ.
 
 use super::clock::SimTime;
 
 /// Constant-rate evaluation of one FIFO-chunked ring chain (the
 /// repeated-`send_inter` shape): `steps` sequential hops, each carrying
-/// the same chunk grid `sizes` at `rate_bps`.
+/// the same chunk grid `sizes` at `rate_bps`, all through one shared
+/// egress.
 #[derive(Debug, Clone, Copy)]
 pub struct ChainSpec {
     /// Number of sequential hops (ring steps), ≥ 1.
@@ -37,37 +51,111 @@ pub struct ChainSpec {
     pub reduce_bps: Option<f64>,
 }
 
-/// Per-chunk arrival times after the last hop of `spec`, starting from
-/// per-chunk readiness `ready` (phase-relative; use zeros after a
-/// whole-phase barrier). `ready.len()` must equal `sizes.len()`.
-///
-/// Recurrence per hop: the gate opens `spec.gate` after chunk 0 is ready
-/// (the DES gates the hop's Delay on the first chunk's deps); chunk `c`
-/// starts at `max(ready[c], gate_open, egress_free)`, occupies the egress
-/// for `sizes[c] / rate`, and its arrival — the next hop's `ready[c]` —
-/// adds the combine delay on reducing chains.
-pub fn chain_arrivals(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> Vec<SimTime> {
+/// Core recurrence shared by every chain entry point: per hop, the gate
+/// opens `spec.gate` after the hop's first chunk is ready (the DES gates
+/// the hop's Delay on the first chunk's deps); chunk `c` starts at
+/// `max(ready, gate_open, egress)`, occupies the shared egress for
+/// `sizes[c] / rate`, and its arrival — the next hop's carried readiness
+/// — adds the combine delay on reducing chains. `ext`, when present,
+/// supplies per-hop per-chunk external readiness (the staged shape:
+/// hop `s`'s send block only exists once the producing phase emitted it).
+fn chain_staged(
+    spec: &ChainSpec,
+    sizes: &[u64],
+    ready0: &[SimTime],
+    ext: Option<&[Vec<SimTime>]>,
+    egress0: SimTime,
+) -> (Vec<Vec<SimTime>>, SimTime) {
     assert!(spec.steps >= 1, "chain needs at least one hop");
-    assert_eq!(sizes.len(), ready.len(), "one readiness per chunk");
+    assert_eq!(sizes.len(), ready0.len(), "one readiness per chunk");
     assert!(
         spec.rate_bps > 0.0 && spec.rate_bps.is_finite(),
         "chain rate must be positive/finite"
     );
-    let mut ready = ready.to_vec();
-    for _ in 0..spec.steps {
-        let gate_open = ready[0] + spec.gate;
-        let mut egress = SimTime::ZERO;
+    if let Some(e) = ext {
+        assert_eq!(e.len(), spec.steps, "one external-readiness row per hop");
+    }
+    let mut carried = ready0.to_vec();
+    let mut egress = egress0;
+    let mut out = Vec::with_capacity(spec.steps);
+    for s in 0..spec.steps {
+        let ext_s = ext.map(|e| e[s].as_slice());
+        if let Some(e) = ext_s {
+            assert_eq!(e.len(), sizes.len(), "one external readiness per chunk");
+        }
+        let chunk_ready = |c: usize| match ext_s {
+            Some(e) => carried[c].max(e[c]),
+            None => carried[c],
+        };
+        let gate_open = chunk_ready(0) + spec.gate;
+        let mut arrivals = vec![SimTime::ZERO; sizes.len()];
         for (c, &bytes) in sizes.iter().enumerate() {
-            let start = ready[c].max(gate_open).max(egress);
+            let start = chunk_ready(c).max(gate_open).max(egress);
             let fin = start + SimTime::for_transfer(bytes, spec.rate_bps);
             egress = fin;
-            ready[c] = match spec.reduce_bps {
+            arrivals[c] = match spec.reduce_bps {
                 Some(r) if bytes > 0 => fin + SimTime::for_transfer(bytes, r),
                 _ => fin,
             };
         }
+        carried.copy_from_slice(&arrivals);
+        out.push(arrivals);
     }
-    ready
+    (out, egress)
+}
+
+/// Per-chunk arrival times after *every* hop of `spec` (row `s` is hop
+/// `s`'s arrivals), starting from per-chunk readiness `ready`. Useful
+/// when intermediate hops feed other phases (the folded all-gather
+/// inserts each hop's arrivals at a different source block).
+pub fn chain_steps(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> Vec<Vec<SimTime>> {
+    chain_staged(spec, sizes, ready, None, SimTime::ZERO).0
+}
+
+/// [`chain_steps`] on an egress that is already busy until `egress0` —
+/// the back-to-back chain shape (folded AllReduce: the inter all-gather
+/// half reuses the reduce-scatter half's stripe egress, so its first
+/// chunk cannot start before the wire is free). Also returns when the
+/// egress goes idle after the last hop, for further chaining.
+pub fn chain_steps_from(
+    spec: &ChainSpec,
+    sizes: &[u64],
+    ready: &[SimTime],
+    egress0: SimTime,
+) -> (Vec<Vec<SimTime>>, SimTime) {
+    chain_staged(spec, sizes, ready, None, egress0)
+}
+
+/// [`chain_steps`] with per-hop external readiness: hop `s`'s chunk `c`
+/// additionally waits for `ext[s][c]` (the staged reduce-scatter shape,
+/// where each ring step sends a *different* block that a producing phase
+/// emits on its own schedule). `ext.len()` must equal `spec.steps`.
+pub fn staged_chain_steps(
+    spec: &ChainSpec,
+    sizes: &[u64],
+    ext: &[Vec<SimTime>],
+) -> Vec<Vec<SimTime>> {
+    chain_staged(spec, sizes, &vec![SimTime::ZERO; sizes.len()], Some(ext), SimTime::ZERO).0
+}
+
+/// [`staged_chain_steps`] that also returns the egress-idle time after
+/// the last hop (see [`chain_steps_from`]).
+pub fn staged_chain_steps_from(
+    spec: &ChainSpec,
+    sizes: &[u64],
+    ext: &[Vec<SimTime>],
+    egress0: SimTime,
+) -> (Vec<Vec<SimTime>>, SimTime) {
+    chain_staged(spec, sizes, &vec![SimTime::ZERO; sizes.len()], Some(ext), egress0)
+}
+
+/// Per-chunk arrival times after the last hop of `spec`, starting from
+/// per-chunk readiness `ready` (phase-relative; use zeros after a
+/// whole-phase barrier). `ready.len()` must equal `sizes.len()`.
+pub fn chain_arrivals(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> Vec<SimTime> {
+    chain_steps(spec, sizes, ready)
+        .pop()
+        .expect("steps >= 1")
 }
 
 /// Completion of the whole chain: the last chunk's arrival (FIFO egress
@@ -78,11 +166,116 @@ pub fn chain_finish(spec: &ChainSpec, sizes: &[u64], ready: &[SimTime]) -> SimTi
         .fold(SimTime::ZERO, SimTime::max)
 }
 
+/// Closed-form ring all-gather over `entry.len()` ranks with *per-rank*
+/// entry times (`entry[r]` = per-chunk readiness of rank `r`'s own
+/// block): `n − 1` steps, each rank forwarding the block it received on
+/// the previous step through its own persistent egress (the DES's
+/// per-rank protocol resource, FIFO across steps). Returns per-rank
+/// completion: the time rank `r` holds every block. `spec.steps` is
+/// ignored — the ring always runs `entry.len() − 1` steps.
+pub fn ring_allgather_times(
+    spec: &ChainSpec,
+    sizes: &[u64],
+    entry: &[Vec<SimTime>],
+) -> Vec<SimTime> {
+    let n = entry.len();
+    assert!(n >= 1, "ring needs at least one rank");
+    assert!(
+        spec.rate_bps > 0.0 && spec.rate_bps.is_finite(),
+        "ring rate must be positive/finite"
+    );
+    for e in entry {
+        assert_eq!(e.len(), sizes.len(), "one entry time per chunk");
+    }
+    // `at[r]` = readiness of the block rank r forwards on the next step.
+    let mut at: Vec<Vec<SimTime>> = entry.to_vec();
+    let mut egress = vec![SimTime::ZERO; n];
+    let mut done: Vec<SimTime> = entry
+        .iter()
+        .map(|e| e.iter().copied().fold(SimTime::ZERO, SimTime::max))
+        .collect();
+    for _step in 0..n.saturating_sub(1) {
+        let mut next_at = vec![vec![SimTime::ZERO; sizes.len()]; n];
+        for r in 0..n {
+            let nxt = (r + 1) % n;
+            let gate_open = at[r][0] + spec.gate;
+            for (c, &bytes) in sizes.iter().enumerate() {
+                let start = at[r][c].max(gate_open).max(egress[r]);
+                let fin = start + SimTime::for_transfer(bytes, spec.rate_bps);
+                egress[r] = fin;
+                next_at[nxt][c] = fin;
+                done[nxt] = done[nxt].max(fin);
+            }
+        }
+        at = next_at;
+    }
+    done
+}
+
 /// Bottleneck rate of one uncontended route: the minimum capacity along
 /// it, clamped by a per-flow rate cap. With exactly one flow per
 /// resource this *is* the max–min solution.
 pub fn bottleneck_rate(caps: impl IntoIterator<Item = f64>, rate_cap: f64) -> f64 {
     caps.into_iter().fold(rate_cap, f64::min)
+}
+
+/// Per-byte-range readiness map: the flow evaluator's analog of
+/// `schedule::ChunkMap`, carrying *times* instead of task ids across
+/// phase boundaries. Producers insert `[off, off+len)` → ready-at;
+/// consumers ask when a chunk grid over some range is fully covered
+/// (max over overlapping producer entries, [`SimTime::ZERO`] where no
+/// producer wrote — matching `ChunkMap`'s empty-dep default).
+#[derive(Debug, Clone, Default)]
+pub struct TimeMap {
+    entries: Vec<(u64, u64, SimTime)>,
+}
+
+impl TimeMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that bytes `[off, off+len)` become ready at `t`. Zero-length
+    /// ranges are skipped (empty extents never gate anyone).
+    pub fn insert(&mut self, off: u64, len: u64, t: SimTime) {
+        if len > 0 {
+            self.entries.push((off, len, t));
+        }
+    }
+
+    /// Insert one entry per chunk of a grid laid out contiguously from
+    /// `offset` (the producer-side convenience mirror of
+    /// [`Self::ready_for_chunks`]).
+    pub fn insert_chunks(&mut self, offset: u64, sizes: &[u64], times: &[SimTime]) {
+        assert_eq!(sizes.len(), times.len(), "one time per chunk");
+        let mut off = offset;
+        for (&len, &t) in sizes.iter().zip(times) {
+            self.insert(off, len, t);
+            off += len;
+        }
+    }
+
+    /// Per-chunk readiness of a consumer grid laid out contiguously from
+    /// `offset`: for each chunk, the max ready-time over every producer
+    /// entry overlapping its byte range ([`SimTime::ZERO`] if none).
+    pub fn ready_for_chunks(&self, offset: u64, sizes: &[u64]) -> Vec<SimTime> {
+        let mut out = Vec::with_capacity(sizes.len());
+        let mut lo = offset;
+        for &len in sizes {
+            let hi = lo + len;
+            let mut t = SimTime::ZERO;
+            if len > 0 {
+                for &(off, elen, et) in &self.entries {
+                    if off < hi && off + elen > lo {
+                        t = t.max(et);
+                    }
+                }
+            }
+            out.push(t);
+            lo = hi;
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -142,9 +335,11 @@ mod tests {
     }
 
     #[test]
-    fn multi_hop_chain_pipelines_chunks() {
-        // 3 hops × 2 chunks of 100 B at 100 B/s, no gate: the wavefront
-        // finishes at (hops + chunks − 1) × 1 s, not hops × 2 s.
+    fn multi_hop_chain_serializes_on_shared_egress() {
+        // 3 hops × 2 chunks of 100 B at 100 B/s, no gate, one shared
+        // egress (the folded self-chain): every hop's chunks serialize on
+        // the same wire, so the chain finishes at hops × chunks × 1 s —
+        // bandwidth conservation, not wavefront pipelining.
         let spec = ChainSpec {
             steps: 3,
             gate: SimTime::ZERO,
@@ -152,7 +347,66 @@ mod tests {
             reduce_bps: None,
         };
         let fin = chain_finish(&spec, &[100, 100], &[SimTime::ZERO; 2]);
-        assert!((fin.as_secs_f64() - 4.0).abs() < 1e-9, "got {fin}");
+        assert!((fin.as_secs_f64() - 6.0).abs() < 1e-9, "got {fin}");
+    }
+
+    /// Multi-hop multi-chunk chain against the DES with FIFO edges
+    /// threaded across the hop boundary on ONE egress resource — the
+    /// exact folded self-chain task shape `send_inter` emits.
+    #[test]
+    fn multi_hop_shared_egress_matches_des() {
+        let mut pool = ResourcePool::new();
+        let link = pool.add("egress", 100.0);
+        let mut graph = TaskGraph::new();
+        let sizes = [300u64, 200];
+        let gate_t = SimTime::from_micros(3);
+        let mut ready = vec![None; sizes.len()];
+        let mut prev = None;
+        let mut last = None;
+        for _hop in 0..2 {
+            let mut gate_deps = vec![];
+            if let Some(r) = ready[0] {
+                gate_deps.push(r);
+            }
+            let gate = graph.add(TaskKind::Delay { duration: gate_t }, gate_deps);
+            for (c, &b) in sizes.iter().enumerate() {
+                let mut deps = vec![gate];
+                if let Some(r) = ready[c] {
+                    deps.push(r);
+                }
+                if let Some(p) = prev {
+                    deps.push(p);
+                }
+                let t = graph.add(
+                    TaskKind::Transfer {
+                        bytes: b,
+                        route: vec![link],
+                        weight: 1.0,
+                        latency: SimTime::ZERO,
+                        rate_cap: f64::INFINITY,
+                    },
+                    deps,
+                );
+                prev = Some(t);
+                ready[c] = Some(t);
+                last = Some(t);
+            }
+        }
+        let sched = Engine::new(&pool).run(&graph).unwrap();
+        let des = sched.finish_of(last.unwrap());
+
+        let spec = ChainSpec {
+            steps: 2,
+            gate: gate_t,
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let flow = chain_finish(&spec, &sizes, &[SimTime::ZERO; 2]);
+        let (a, b) = (des.as_secs_f64(), flow.as_secs_f64());
+        assert!(
+            (a - b).abs() <= 1e-9 * a.max(1.0),
+            "DES {a} vs flow {b}"
+        );
     }
 
     #[test]
@@ -168,6 +422,70 @@ mod tests {
         let fin = chain_finish(&spec, &[1000], &[SimTime::ZERO]);
         // Per hop: 10 µs + 1 s + 0.5 s.
         assert!((fin.as_secs_f64() - 2.0 * (1.0 + 0.5 + 10e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staged_chain_waits_for_per_hop_readiness() {
+        // 2 hops, 1 chunk of 100 B at 100 B/s, no gate. Hop 0's block is
+        // ready at t=0, hop 1's block only at t=5 s: the second hop's
+        // send starts at max(carried arrival 1 s, ext 5 s) = 5 s.
+        let spec = ChainSpec {
+            steps: 2,
+            gate: SimTime::ZERO,
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let ext = vec![
+            vec![SimTime::ZERO],
+            vec![SimTime::from_secs_f64(5.0)],
+        ];
+        let steps = staged_chain_steps(&spec, &[100], &ext);
+        assert_eq!(steps.len(), 2);
+        assert!((steps[0][0].as_secs_f64() - 1.0).abs() < 1e-9);
+        assert!((steps[1][0].as_secs_f64() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn carried_egress_serializes_back_to_back_chains() {
+        // Two 1-hop chains of 2 × 100 B at 100 B/s on the same egress.
+        // The first chain holds the wire until 2 s, so the second chain's
+        // chunks run at [2,3) and [3,4) even though their data is ready
+        // at 0 — without the carried egress they would double-book it.
+        let spec = ChainSpec {
+            steps: 1,
+            gate: SimTime::ZERO,
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let sizes = [100u64, 100];
+        let ready = [SimTime::ZERO; 2];
+        let (first, egress) = chain_steps_from(&spec, &sizes, &ready, SimTime::ZERO);
+        assert!((egress.as_secs_f64() - 2.0).abs() < 1e-9);
+        assert!((first[0][1].as_secs_f64() - 2.0).abs() < 1e-9);
+        let (second, egress) = chain_steps_from(&spec, &sizes, &ready, egress);
+        assert!((second[0][0].as_secs_f64() - 3.0).abs() < 1e-9);
+        assert!((second[0][1].as_secs_f64() - 4.0).abs() < 1e-9);
+        assert!((egress.as_secs_f64() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_allgather_tracks_per_rank_entries() {
+        // 2 ranks, one 100 B block each at 100 B/s, no gate. Rank 0's
+        // block is ready at 0, rank 1's at 1 s. Rank 1 receives rank 0's
+        // block at 1 s; rank 0 receives rank 1's at 2 s.
+        let spec = ChainSpec {
+            steps: 1, // ignored: ring runs n−1 steps
+            gate: SimTime::ZERO,
+            rate_bps: 100.0,
+            reduce_bps: None,
+        };
+        let entry = vec![
+            vec![SimTime::ZERO],
+            vec![SimTime::from_secs_f64(1.0)],
+        ];
+        let done = ring_allgather_times(&spec, &[100], &entry);
+        assert!((done[0].as_secs_f64() - 2.0).abs() < 1e-9, "{:?}", done);
+        assert!((done[1].as_secs_f64() - 1.0).abs() < 1e-9, "{:?}", done);
     }
 
     #[test]
@@ -192,5 +510,31 @@ mod tests {
         assert_eq!(r, 50.0);
         let r = bottleneck_rate([200.0, 150.0], 120.0);
         assert_eq!(r, 120.0);
+    }
+
+    #[test]
+    fn time_map_covers_overlapping_ranges() {
+        let mut m = TimeMap::new();
+        m.insert(0, 100, SimTime::from_secs_f64(1.0));
+        m.insert(100, 100, SimTime::from_secs_f64(3.0));
+        m.insert(0, 0, SimTime::from_secs_f64(99.0)); // skipped
+        // Consumer grid [0,150) + [150,200): the first chunk overlaps
+        // both producers (max = 3 s), the second only the later one.
+        let r = m.ready_for_chunks(0, &[150, 50]);
+        assert!((r[0].as_secs_f64() - 3.0).abs() < 1e-12);
+        assert!((r[1].as_secs_f64() - 3.0).abs() < 1e-12);
+        // Outside every producer: ZERO default.
+        let r = m.ready_for_chunks(500, &[100]);
+        assert_eq!(r[0], SimTime::ZERO);
+        // insert_chunks lays the grid out contiguously.
+        let mut m2 = TimeMap::new();
+        m2.insert_chunks(
+            10,
+            &[50, 50],
+            &[SimTime::from_secs_f64(2.0), SimTime::from_secs_f64(4.0)],
+        );
+        let r = m2.ready_for_chunks(10, &[50, 50]);
+        assert!((r[0].as_secs_f64() - 2.0).abs() < 1e-12);
+        assert!((r[1].as_secs_f64() - 4.0).abs() < 1e-12);
     }
 }

@@ -82,6 +82,42 @@ impl ClusterSpec {
     }
 }
 
+/// Partial-symmetry fold descriptor: what a symmetry-folded lowering
+/// must rate-cap to stay exact on a not-quite-pristine cluster.
+///
+/// Folding prices one representative node built at *nominal* capacities
+/// ([`Cluster::folded_pool`]). When only NIC uplink legs have deviated
+/// (degraded or dead NICs — the common chaos injury), the exact max–min
+/// solution is still one identical timeline per node *per stripe*, paced
+/// by the slowest live leg of that stripe's ring. Capping the
+/// representative's per-stripe sends at that bottleneck reproduces the
+/// exact price without giving up the fold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FoldSymmetry {
+    /// Per-NIC-stripe live ring bottleneck, bytes/s: for stripe `g`, the
+    /// min over all nodes of any *deviated* up/down NIC leg capacity.
+    /// [`f64::INFINITY`] where every leg is at nominal (no cap needed);
+    /// `0.0` where the stripe is dead somewhere.
+    pub stripe_rates: Vec<f64>,
+}
+
+impl FoldSymmetry {
+    /// True when nothing deviates — the classic fully-symmetric fold.
+    pub fn is_pristine(&self) -> bool {
+        self.stripe_rates.iter().all(|r| r.is_infinite())
+    }
+}
+
+/// FNV-1a over one 64-bit word (hand-rolled: the signature must be
+/// stable and dependency-free).
+fn fnv1a_mix(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 /// The built cluster resource graph: per-node [`Topology`] views whose
 /// [`ResourceId`]s all index the shared `pool`.
 #[derive(Debug, Clone)]
@@ -157,6 +193,74 @@ impl Cluster {
                 .iter()
                 .zip(&self.nominal_caps)
                 .all(|((_, r), nom)| r.capacity_bps == *nom)
+    }
+
+    /// Order-sensitive hash of the live capacity state: pool length plus
+    /// every capacity's bit pattern, FNV-1a mixed. Two clusters with the
+    /// same spec and the same fault state agree; any capacity mutation
+    /// (death, degradation, repair) moves it. Cached plan prices key on
+    /// this so a price computed before a fault can never serve after it
+    /// ([`crate::comm::plan_cache::PlanKey`]).
+    pub fn symmetry_signature(&self) -> u64 {
+        let mut h = fnv1a_mix(0xcbf29ce484222325, self.pool.len() as u64);
+        for (_, r) in self.pool.iter() {
+            h = fnv1a_mix(h, r.capacity_bps.to_bits());
+        }
+        h
+    }
+
+    /// Partial-symmetry fold gate, replacing the boolean
+    /// [`Cluster::is_symmetric`] as the folding eligibility test: `Some`
+    /// when the only deviations from nominal are *NIC uplink legs*
+    /// (degraded at or below nominal, including dead) or the spine
+    /// (whose fold stand-in reads the live capacity anyway), with the
+    /// per-stripe live ring bottlenecks a folded lowering must rate-cap.
+    /// Any other deviation — NVLink lanes, PCIe root ports, host memory,
+    /// or a capacity *above* nominal — breaks the per-node symmetry the
+    /// fold depends on and returns `None` (exact pricing). `None` too
+    /// for the degenerate single-node cluster.
+    pub fn fold_symmetry(&self) -> Option<FoldSymmetry> {
+        let spine = self.spine?;
+        if self.pool.len() != self.nominal_caps.len() {
+            return None;
+        }
+        let nl = self.gpus_per_node();
+        // Classify every resource: NIC uplink legs and the spine may
+        // deviate (downward); everything else must sit at nominal.
+        const STRICT: u8 = 0;
+        const NIC: u8 = 1;
+        const SPINE: u8 = 2;
+        let mut kind = vec![STRICT; self.pool.len()];
+        for t in &self.nodes {
+            for g in 0..nl {
+                kind[t.nic_up[g].0 as usize] = NIC;
+                kind[t.nic_down[g].0 as usize] = NIC;
+            }
+        }
+        kind[spine.0 as usize] = SPINE;
+        for (id, r) in self.pool.iter() {
+            let nom = self.nominal_caps[id.0 as usize];
+            let live = r.capacity_bps;
+            if live == nom {
+                continue;
+            }
+            if kind[id.0 as usize] == STRICT || !(0.0..=nom).contains(&live) {
+                return None;
+            }
+        }
+        let mut stripe_rates = vec![f64::INFINITY; nl];
+        for t in &self.nodes {
+            for g in 0..nl {
+                for id in [t.nic_up[g], t.nic_down[g]] {
+                    let nom = self.nominal_caps[id.0 as usize];
+                    let live = self.pool.capacity(id);
+                    if live < nom {
+                        stripe_rates[g] = stripe_rates[g].min(live.max(0.0));
+                    }
+                }
+            }
+        }
+        Some(FoldSymmetry { stripe_rates })
     }
 
     /// One-node representative pool for symmetry-folded pricing: node 0's
@@ -315,6 +419,69 @@ mod tests {
         assert!(!c.is_symmetric());
         c.pool.set_capacity(nic, nominal);
         assert!(c.is_symmetric());
+    }
+
+    #[test]
+    fn fold_symmetry_prices_nic_legs_and_rejects_everything_else() {
+        let mut c = h800_cluster(4);
+        let nl = c.gpus_per_node();
+        let sym = c.fold_symmetry().expect("pristine cluster folds");
+        assert!(sym.is_pristine());
+        assert_eq!(sym.stripe_rates.len(), nl);
+
+        // A degraded NIC leg caps its stripe at the live bottleneck.
+        let nic = c.node(2).nic_up[5];
+        let nominal = c.pool.capacity(nic);
+        c.pool.scale_capacity(nic, 0.5);
+        let sym = c.fold_symmetry().expect("NIC degradation keeps the fold");
+        assert!(!sym.is_pristine());
+        assert!((sym.stripe_rates[5] - nominal * 0.5).abs() < 1.0);
+        assert!(sym.stripe_rates[4].is_infinite());
+
+        // A dead NIC leg reports a zero-rate stripe (caller falls back).
+        c.pool.set_capacity(nic, 0.0);
+        let sym = c.fold_symmetry().unwrap();
+        assert_eq!(sym.stripe_rates[5], 0.0);
+
+        // Repair restores the pristine fold.
+        c.pool.set_capacity(nic, nominal);
+        assert!(c.fold_symmetry().unwrap().is_pristine());
+
+        // An NVLink lane deviation breaks per-node symmetry entirely.
+        let lane = c.node(1).nvlink_up[0];
+        let lane_nom = c.pool.capacity(lane);
+        c.pool.scale_capacity(lane, 0.5);
+        assert!(c.fold_symmetry().is_none());
+        c.pool.set_capacity(lane, lane_nom);
+
+        // Above-nominal NIC capacity is not a fold we can price.
+        c.pool.set_capacity(nic, nominal * 2.0);
+        assert!(c.fold_symmetry().is_none());
+        c.pool.set_capacity(nic, nominal);
+
+        // Spine degradation stays foldable: the stand-in reads live caps.
+        let spine = c.spine.unwrap();
+        c.pool.scale_capacity(spine, 0.5);
+        let sym = c.fold_symmetry().expect("spine degradation keeps the fold");
+        assert!(sym.is_pristine(), "spine is priced via the live share, not a stripe cap");
+
+        assert!(h800_cluster(1).fold_symmetry().is_none());
+    }
+
+    #[test]
+    fn symmetry_signature_tracks_fault_and_repair() {
+        let mut c = h800_cluster(2);
+        let pristine = c.symmetry_signature();
+        assert_eq!(pristine, h800_cluster(2).symmetry_signature());
+        let nic = c.node(1).nic_up[0];
+        let nominal = c.pool.capacity(nic);
+        c.pool.scale_capacity(nic, 0.5);
+        let degraded = c.symmetry_signature();
+        assert_ne!(pristine, degraded);
+        c.pool.set_capacity(nic, 0.0);
+        assert_ne!(degraded, c.symmetry_signature());
+        c.pool.set_capacity(nic, nominal);
+        assert_eq!(pristine, c.symmetry_signature());
     }
 
     #[test]

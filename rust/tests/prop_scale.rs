@@ -1,14 +1,17 @@
-//! Property tests for the sublinear-pricing machinery (→ ISSUE 7):
+//! Property tests for the sublinear-pricing machinery (→ ISSUEs 7, 10):
 //!
 //! (a) symmetry-folded pricing agrees with the exact per-node DES at
 //!     small node counts (where running both is cheap) across operators,
 //!     pipeline modes and randomized message sizes — and always emits a
-//!     strictly smaller graph,
-//! (b) broken symmetry and fault-injected runs never price folded (the
-//!     one-representative premise requires identical copies),
+//!     strictly smaller graph; the default chunk-*pipelined* lowering
+//!     gets its own dedicated sweep,
+//! (b) partial symmetry: degraded-NIC and shrunken (post-node-death)
+//!     clusters still fold within tolerance, while non-NIC asymmetry
+//!     (an NVLink lane) and mid-run fault events force the exact graph,
 //! (c) the compiled-plan cache returns *bit-identical* reports on a hit,
-//!     and explicit invalidation forces a cold re-price without changing
-//!     the answer.
+//!     explicit invalidation forces a cold re-price without changing
+//!     the answer, and capacity signatures re-key plans across a
+//!     death→repair cycle.
 
 use flexlink::balancer::{Shares, TierShares};
 use flexlink::collectives::hierarchical::{ClusterCollective, PricingMode, FOLD_AUTO_MIN_NODES};
@@ -16,7 +19,8 @@ use flexlink::collectives::CollectiveKind;
 use flexlink::comm::{CommConfig, Communicator};
 use flexlink::config::presets::Preset;
 use flexlink::links::calib::Calibration;
-use flexlink::sim::SimTime;
+use flexlink::links::StripeId;
+use flexlink::sim::{RateEvent, SimTime};
 use flexlink::topology::cluster::{Cluster, ClusterSpec};
 use flexlink::util::rng::Rng;
 
@@ -93,7 +97,10 @@ fn folded_graph_grows_sublinearly_in_nodes() {
     let msg = 32u64 << 20;
     let run = |nn: usize| {
         let c = cluster(nn);
+        // Explicitly the default pipelined lowering — the mode users
+        // actually run at scale.
         cc(&c, CollectiveKind::AllReduce)
+            .with_pipeline(true)
             .with_pricing(PricingMode::Folded)
             .run(msg, &tiers, 4)
             .unwrap()
@@ -111,14 +118,50 @@ fn folded_graph_grows_sublinearly_in_nodes() {
     assert!(t64.total > t16.total);
 }
 
-/// Symmetry breaks force the exact path under every pricing mode, and
-/// restoring the nominal capacity repairs eligibility. Fault-injected
-/// runs always price the full graph, even on a healthy-eligible cluster.
+/// The dedicated default-path sweep: chunk-*pipelined* folded pricing
+/// (the closed-form cross-phase chain evaluator) agrees with the exact
+/// pipelined DES within 5% across operators and randomized sizes.
+#[test]
+fn pipelined_folded_agrees_with_exact_across_random_sizes() {
+    let mut rng = Rng::seed_from_u64(0x91_5eed);
+    for _ in 0..8 {
+        let nn = if rng.chance(0.5) { 2 } else { 4 };
+        let c = cluster(nn);
+        let msg = (1u64 << (16 + rng.below(10))) + rng.below(4096);
+        let kind = FOLD_OPS[rng.range_usize(0, 3)];
+        let tiers = TierShares::new(Shares::nvlink_only(), 8);
+        let exact = cc(&c, kind).with_pipeline(true).run(msg, &tiers, 4).unwrap();
+        let folded = cc(&c, kind)
+            .with_pipeline(true)
+            .with_pricing(PricingMode::Folded)
+            .run(msg, &tiers, 4)
+            .unwrap();
+        assert!(
+            folded.folded,
+            "{kind} nn={nn} msg={msg}: pipelined fold did not engage"
+        );
+        assert!(
+            folded.tasks < exact.tasks,
+            "{kind} nn={nn} msg={msg}: pipelined folded graph not smaller"
+        );
+        let (e, f) = (exact.total.as_secs_f64(), folded.total.as_secs_f64());
+        assert!(
+            (e - f).abs() <= 0.05 * e,
+            "{kind} nn={nn} msg={msg}: pipelined folded {f} vs exact {e}"
+        );
+    }
+}
+
+/// Non-NIC symmetry breaks (an NVLink lane) force the exact path under
+/// every pricing mode — per-stripe rate caps only absorb NIC legs — and
+/// restoring the nominal capacity repairs eligibility. Mid-run fault
+/// *events* always price the full graph; an empty timeline takes the
+/// fold like a plain run.
 #[test]
 fn broken_symmetry_and_faulted_runs_never_fold() {
     let tiers = TierShares::new(Shares::nvlink_only(), 8);
     let mut c = cluster(2);
-    let bad = c.node(1).nic_up[0];
+    let bad = c.node(1).nvlink_up[0];
     let nominal = c.pool.capacity(bad);
     c.pool.scale_capacity(bad, 0.5);
     for mode in [PricingMode::Folded, PricingMode::Auto] {
@@ -130,10 +173,106 @@ fn broken_symmetry_and_faulted_runs_never_fold() {
     c.pool.set_capacity(bad, nominal);
     assert!(cc(&c, CollectiveKind::AllReduce).fold_eligible());
 
+    // A real mid-run capacity event needs the event-level DES: exact.
     let c = cluster(2);
     let col = cc(&c, CollectiveKind::AllReduce).with_pricing(PricingMode::Folded);
+    let nic = c.node(0).nic_up[0];
+    let jitter = vec![RateEvent {
+        at: SimTime::from_micros(50),
+        set: vec![(nic, 0.5 * c.pool.capacity(nic))],
+    }];
+    let run = col.run_under_faults(4 << 20, &tiers, 4, &jitter).unwrap();
+    assert!(!run.report.folded, "event-perturbed run priced folded");
+
+    // An empty timeline is the plain-run path — it folds, bit-identically.
     let run = col.run_under_faults(4 << 20, &tiers, 4, &[]).unwrap();
-    assert!(!run.report.folded, "fault-injected run priced folded");
+    assert!(run.report.folded, "empty-timeline run did not fold");
+    let plain = col.run(4 << 20, &tiers, 4).unwrap();
+    assert_eq!(run.report.total, plain.total);
+}
+
+/// Partial-symmetry folding: a one-degraded-NIC cluster and a shrunken
+/// post-node-death cluster (the survivors a `ReLower` recovery re-prices,
+/// odd node count included) both fold within 5% of their exact graphs.
+#[test]
+fn partial_symmetry_folds_degraded_and_shrunken_clusters() {
+    let tiers = TierShares::new(Shares::nvlink_only(), 8);
+    let msg = 16u64 << 20;
+
+    let mut degraded = cluster(4);
+    let bad = degraded.node(1).nic_up[3];
+    degraded.pool.scale_capacity(bad, 0.5);
+    // One dead node in a 4-node cluster leaves 3 survivors.
+    let shrunken = cluster(3);
+
+    for c in [&degraded, &shrunken] {
+        let col = cc(c, CollectiveKind::AllReduce)
+            .with_pipeline(true)
+            .with_pricing(PricingMode::Folded);
+        assert!(col.fold_eligible(), "{}-node cluster not eligible", c.n_nodes());
+        let folded = col.run(msg, &tiers, 4).unwrap();
+        assert!(folded.folded, "{}-node cluster did not fold", c.n_nodes());
+        let exact = cc(c, CollectiveKind::AllReduce)
+            .with_pipeline(true)
+            .run(msg, &tiers, 4)
+            .unwrap();
+        let (e, f) = (exact.total.as_secs_f64(), folded.total.as_secs_f64());
+        assert!(
+            (e - f).abs() <= 0.05 * e,
+            "{} nodes: folded {f} vs exact {e}",
+            c.n_nodes()
+        );
+    }
+}
+
+/// Cache-relevant capacity signatures across a death→repair cycle: the
+/// signature moves on every capacity mutation and returns exactly on
+/// repair — so plan-cache keys carrying it re-key across the fault and
+/// re-hit pre-fault entries after the repair. The fold tracks the same
+/// transitions: the healthy class folds around a dead stripe once its
+/// share is rerouted, and the repaired cluster prices bit-identically
+/// to the pristine one.
+#[test]
+fn class_signatures_rekey_plans_across_death_and_repair() {
+    let tiers = TierShares::new(Shares::nvlink_only(), 8);
+    let msg = 16u64 << 20;
+    let mut c = cluster(4);
+    let pristine_sig = c.symmetry_signature();
+    let pristine = cc(&c, CollectiveKind::AllReduce)
+        .with_pricing(PricingMode::Folded)
+        .run(msg, &tiers, 4)
+        .unwrap();
+    assert!(pristine.folded);
+
+    // Death: a NIC leg drops to zero — new signature, and the healthy
+    // class still folds once the dead stripe carries no share.
+    let bad = c.node(2).nic_up[4];
+    let nominal = c.pool.capacity(bad);
+    c.pool.scale_capacity(bad, 0.0);
+    let dead_sig = c.symmetry_signature();
+    assert_ne!(dead_sig, pristine_sig);
+    let rerouted = tiers.without_stripe(StripeId(4)).unwrap();
+    let dead_rep = cc(&c, CollectiveKind::AllReduce)
+        .with_pricing(PricingMode::Folded)
+        .run(msg, &rerouted, 4)
+        .unwrap();
+    assert!(dead_rep.folded, "healthy class did not fold around the dead stripe");
+
+    // Degraded-but-alive is a third distinct state.
+    c.pool.set_capacity(bad, 0.5 * nominal);
+    assert_ne!(c.symmetry_signature(), dead_sig);
+    assert_ne!(c.symmetry_signature(), pristine_sig);
+
+    // Repair: exact capacities back → exact signature back (pre-fault
+    // cache entries keyed on it become valid again), and the pricing is
+    // bit-identical to pristine.
+    c.pool.set_capacity(bad, nominal);
+    assert_eq!(c.symmetry_signature(), pristine_sig);
+    let repaired = cc(&c, CollectiveKind::AllReduce)
+        .with_pricing(PricingMode::Folded)
+        .run(msg, &tiers, 4)
+        .unwrap();
+    assert_eq!(repaired.total, pristine.total);
 }
 
 /// Cache-hit pricing is bit-identical to the cold pricing it replays,
